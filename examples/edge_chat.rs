@@ -1,0 +1,74 @@
+//! Edge serving demo: start the coordinator + TCP server in-process, fire
+//! a wave of concurrent client requests, and report latency/throughput —
+//! the serving-side end-to-end of the paper's deployment story (Figure 1's
+//! wearable demo, as a reproducible benchmark).
+//!
+//! ```bash
+//! cargo run --release --example edge_chat -- rwkv-ours-small 8
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+use rwkv_lite::config::EngineConfig;
+use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator};
+use rwkv_lite::engine::RwkvEngine;
+use rwkv_lite::server::{Client, Server};
+use rwkv_lite::text::Vocab;
+use rwkv_lite::util::{percentile, Stopwatch};
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "rwkv-ours-small".into());
+    let n_clients: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let artifacts = PathBuf::from("artifacts");
+    let vocab = Vocab::load(&artifacts.join("data/vocab.json"))?;
+
+    let cfg = EngineConfig::all_techniques(&model, artifacts.clone());
+    let coordinator = Coordinator::spawn(
+        move || RwkvEngine::load(cfg),
+        BatchPolicy { max_batch: n_clients.max(4), window_ms: 3 },
+    );
+    let server = Arc::new(Server::new(coordinator, vocab));
+    let addr = "127.0.0.1:17474";
+    {
+        let s = Arc::clone(&server);
+        std::thread::spawn(move || s.serve(addr, Some(n_clients)));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    println!("firing {n_clients} concurrent chat requests at {addr} (model {model})\n");
+    let prompts = ["the", "in the end the", "at the", "finally"];
+    let wall = Stopwatch::start();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let prompt = prompts[i % prompts.len()].to_string();
+            std::thread::spawn(move || -> Result<(f64, usize, String)> {
+                let mut client = Client::connect(addr)?;
+                let t = Stopwatch::start();
+                let c = client.complete(&prompt, 24, 0.8)?;
+                Ok((t.elapsed_secs(), c.tokens, c.text))
+            })
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    let mut total_tokens = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        let (secs, tokens, text) = h.join().unwrap()?;
+        println!("client {i}: {tokens} tokens in {secs:.2}s   \"{}\"", truncate(&text, 60));
+        latencies.push(secs);
+        total_tokens += tokens;
+    }
+    let wall_secs = wall.elapsed_secs();
+    println!("\n== serving summary ==");
+    println!("wall time            {:.2}s", wall_secs);
+    println!("aggregate throughput {:.1} tok/s", total_tokens as f64 / wall_secs);
+    println!("latency p50 / p95    {:.2}s / {:.2}s",
+        percentile(&latencies, 50.0), percentile(&latencies, 95.0));
+    println!("\ncoordinator metrics:\n{}", server.coordinator.metrics.report());
+    Ok(())
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n { s.to_string() } else { format!("{}…", &s[..n]) }
+}

@@ -1,0 +1,94 @@
+//! Memory-budget explorer: sweep technique combinations and loading
+//! strategies for one model, printing the peak-residency ledger — the
+//! tool you would use to fit a model onto a 512 MiB-class device.
+//!
+//! ```bash
+//! cargo run --release --example memory_budget -- rwkv-ours-small
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use rwkv_lite::config::{EngineConfig, LoadStrategy};
+use rwkv_lite::engine::sampler::Sampler;
+use rwkv_lite::engine::RwkvEngine;
+use rwkv_lite::metrics::Group;
+use rwkv_lite::util::fmt_bytes;
+
+fn measure(mut cfg: EngineConfig, strategy: LoadStrategy) -> Result<(u64, String)> {
+    cfg.strategy = strategy;
+    let mut engine = RwkvEngine::load(cfg)?;
+    let mut sampler = Sampler::new(0.8, 0.95, 5);
+    let mut state = engine.new_state();
+    engine.generate(&[2, 100, 200], 32, &mut sampler, &mut state)?;
+    let (_, peak) = engine.memory_report();
+    let groups = engine.tracker().peak_by_group();
+    let detail = [Group::Emb, Group::TimeMix, Group::ChanMix, Group::Head]
+        .iter()
+        .map(|g| format!("{}={}", g.name(), fmt_bytes(*groups.get(g).unwrap_or(&0))))
+        .collect::<Vec<_>>()
+        .join(" ");
+    Ok((peak, detail))
+}
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "rwkv-ours-small".into());
+    let artifacts = PathBuf::from("artifacts");
+    println!("memory budget sweep for {model}\n");
+    println!(
+        "{:<34} {:<10} {:>12}   breakdown",
+        "techniques", "strategy", "peak"
+    );
+
+    let combos: [(&str, Box<dyn Fn() -> EngineConfig>); 5] = [
+        ("none (vanilla runtime)", Box::new({
+            let (m, a) = (model.clone(), artifacts.clone());
+            move || EngineConfig::vanilla(&m, a.clone())
+        })),
+        ("sparse FFN only", Box::new({
+            let (m, a) = (model.clone(), artifacts.clone());
+            move || {
+                let mut c = EngineConfig::vanilla(&m, a.clone());
+                c.sparse_ffn = true;
+                c
+            }
+        })),
+        ("hier head only", Box::new({
+            let (m, a) = (model.clone(), artifacts.clone());
+            move || {
+                let mut c = EngineConfig::vanilla(&m, a.clone());
+                c.hier_head = true;
+                c
+            }
+        })),
+        ("emb cache only", Box::new({
+            let (m, a) = (model.clone(), artifacts.clone());
+            move || {
+                let mut c = EngineConfig::vanilla(&m, a.clone());
+                c.emb_cache = true;
+                c
+            }
+        })),
+        ("all (paper stack)", Box::new({
+            let (m, a) = (model.clone(), artifacts.clone());
+            move || EngineConfig::all_techniques(&m, a.clone())
+        })),
+    ];
+
+    for (label, mk) in &combos {
+        for strategy in [LoadStrategy::Full, LoadStrategy::Layerwise] {
+            match measure(mk(), strategy) {
+                Ok((peak, detail)) => println!(
+                    "{:<34} {:<10} {:>12}   {}",
+                    label,
+                    strategy.name(),
+                    fmt_bytes(peak),
+                    detail
+                ),
+                Err(e) => println!("{:<34} {:<10}   unavailable: {e}", label, strategy.name()),
+            }
+        }
+    }
+    println!("\n(peak = high-water mark of tracked weight residency, incl. transient rows)");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: load a compressed RWKV-Lite checkpoint and generate text.
+//!
+//! ```bash
+//! make artifacts               # once: trains + compresses + exports
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the public API surface a downstream user touches:
+//! [`EngineConfig`] -> [`RwkvEngine`] -> [`Sampler`] -> generate, plus the
+//! auditable memory report that is the paper's headline.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use rwkv_lite::config::EngineConfig;
+use rwkv_lite::engine::sampler::Sampler;
+use rwkv_lite::engine::RwkvEngine;
+use rwkv_lite::text::Vocab;
+use rwkv_lite::util::fmt_bytes;
+
+fn main() -> Result<()> {
+    let artifacts = PathBuf::from("artifacts");
+    let vocab = Vocab::load(&artifacts.join("data/vocab.json"))?;
+
+    // The paper's full technique stack: SVD weights come from the
+    // checkpoint; sparse FFN + hierarchical head + embedding cache are
+    // runtime features toggled here.
+    let cfg = EngineConfig::all_techniques("rwkv-ours-small", artifacts.clone());
+    let mut engine = RwkvEngine::load(cfg)?;
+    println!(
+        "loaded {} (dim={} layers={} vocab={})",
+        engine.cfg.model, engine.info.dim, engine.info.layers, engine.info.vocab
+    );
+
+    let prompt = "the";
+    let mut sampler = Sampler::new(0.8, 0.95, 42);
+    let mut state = engine.new_state();
+    let tokens = engine.generate(&vocab.encode(prompt), 48, &mut sampler, &mut state)?;
+    println!("\n{} {}\n", prompt, vocab.decode(&tokens));
+
+    let (resident, peak) = engine.memory_report();
+    println!("weights resident: {}   peak: {}", fmt_bytes(resident), fmt_bytes(peak));
+    if let Some(cache) = &engine.emb_cache {
+        println!(
+            "embedding cache: {} rows resident ({} hit rate {:.0}%)",
+            cache.len(),
+            fmt_bytes(cache.resident_bytes()),
+            100.0 * cache.hit_rate()
+        );
+    }
+    if let Some(h) = &engine.hier {
+        println!(
+            "hierarchical head: {} clusters, mean {:.1} token rows loaded/step",
+            h.n_clusters(),
+            h.mean_tokens_loaded()
+        );
+    }
+    let spars = engine.sparsity_by_layer();
+    println!(
+        "FFN rows skipped per layer: {:?}",
+        spars.iter().map(|s| format!("{:.0}%", 100.0 * s)).collect::<Vec<_>>()
+    );
+
+    // Compare against the vanilla model, full loading:
+    let cfg = EngineConfig::vanilla("rwkv-vanilla-small", PathBuf::from("artifacts"));
+    let mut vanilla = RwkvEngine::load(cfg)?;
+    let mut st = vanilla.new_state();
+    vanilla.generate(&vocab.encode(prompt), 8, &mut Sampler::greedy(), &mut st)?;
+    let (_, vanilla_peak) = vanilla.memory_report();
+    println!(
+        "\nvanilla peak: {}  ->  ours peak: {}  ({:.1}x reduction)",
+        fmt_bytes(vanilla_peak),
+        fmt_bytes(peak),
+        vanilla_peak as f64 / peak as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,228 @@
+"""AOT lowering: L2 jax functions (calling L1 Pallas kernels) -> HLO text.
+
+HLO *text* is the interchange format (NOT `lowered.serialize()` /
+serialized HloModuleProto): jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published `xla` 0.1.6 crate
+links) rejects (`proto.id() <= INT_MAX`).  The text parser reassigns ids,
+so text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Per exported model we lower three components, each with *weights as runtime
+parameters* so the rust L3 keeps ownership of weight residency (loading
+strategies / sparse loading would be impossible with weights baked into the
+executable):
+
+  timemix_step   (x, att_x, wkv, <ordered weights>) -> (x', att_x', wkv')
+  chanmix_step   (x, ffn_x, <ordered weights>)      -> (x', ffn_x')
+  head_matvec    (hidden, head)                     -> (logits,)
+
+One executable per (variant-shape, component); the same executable is
+reused for every layer (weights differ per call, shapes do not).  The
+parameter *order* for each component is recorded in the model manifest so
+rust maps `.rkv` tensor names -> argument positions.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .common import ModelConfig
+from .models import rwkv
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Parameter ordering
+# ---------------------------------------------------------------------------
+
+
+def proj_keys(p: Dict[str, Any]) -> List[str]:
+    return [k for k in ("w", "l", "r", "d") if k in p]
+
+
+def timemix_weight_names(block: Dict[str, Any]) -> List[str]:
+    names = ["ln1.scale", "ln1.bias", "att.mu_r", "att.mu_k", "att.mu_v", "att.mu_g", "att.decay", "att.first"]
+    for w in ("wr", "wk", "wv", "wg"):
+        names += [f"att.{w}.{k}" for k in proj_keys(block["att"][w])]
+    names += ["att.wo.w", "att.lnx.scale", "att.lnx.bias"]
+    return names
+
+
+def chanmix_weight_names(block: Dict[str, Any]) -> List[str]:
+    names = ["ln2.scale", "ln2.bias", "ffn.mu_k", "ffn.mu_r"]
+    names += [f"ffn.wr.{k}" for k in proj_keys(block["ffn"]["wr"])]
+    # wk is consumed transposed (F, D) to match the .rkv layout (export.py).
+    names += ["ffn.wk_t", "ffn.wv"]
+    return names
+
+
+def _get_block_tensor(block: Dict[str, Any], name: str) -> np.ndarray:
+    """Resolve a component weight name against a block pytree."""
+    parts = name.split(".")
+    if parts[0] in ("ln1", "ln2"):
+        return np.asarray(block[parts[0]][parts[1]])
+    scope, rest = parts[0], parts[1:]
+    node = block[scope]
+    if rest[0] == "decay":
+        return np.exp(-np.exp(np.asarray(node["decay_log"], np.float32)))
+    if rest[0] == "lnx":
+        return np.asarray(node["ln_x"][rest[1]])
+    if rest[0].startswith("mu_") or rest[0] == "first":
+        return np.asarray(node[rest[0]])
+    if rest[0] == "wk_t":
+        return np.ascontiguousarray(np.asarray(node["wk"]).T)
+    if len(rest) == 2:  # projection leaf e.g. wr.l
+        return np.asarray(node[rest[0]][rest[1]])
+    return np.asarray(node[rest[0]])  # dense matrix e.g. wv
+
+
+# ---------------------------------------------------------------------------
+# Component functions (impl = pallas so the L1 kernels ship in the HLO)
+# ---------------------------------------------------------------------------
+
+
+def _rebuild_proj(names: List[str], args: List[Any], prefix: str) -> Dict[str, Any]:
+    return {
+        n.split(".")[-1]: args[i]
+        for i, n in enumerate(names)
+        if n.startswith(prefix + ".")
+    }
+
+
+def make_timemix_fn(cfg: ModelConfig, names: List[str], impl: str = "pallas") -> Callable:
+    h, s = cfg.heads, cfg.head_size
+
+    def fn(x, att_x, wkv, *weights):
+        get = lambda n: weights[names.index(n)]  # noqa: E731
+        kns = kernels.get(impl)
+        ln1 = {"scale": get("ln1.scale"), "bias": get("ln1.bias")}
+        xa = rwkv._ln(x, ln1)
+        projs = {w: _rebuild_proj(names, list(weights), f"att.{w}") for w in ("wr", "wk", "wv", "wg")}
+        r = rwkv._proj(rwkv._lerp(xa, att_x, get("att.mu_r")), projs["wr"], kns)
+        k = rwkv._proj(rwkv._lerp(xa, att_x, get("att.mu_k")), projs["wk"], kns)
+        v = rwkv._proj(rwkv._lerp(xa, att_x, get("att.mu_v")), projs["wv"], kns)
+        g = rwkv._proj(rwkv._lerp(xa, att_x, get("att.mu_g")), projs["wg"], kns)
+        g = g * jax.nn.sigmoid(g)
+        out, new_wkv = kns.wkv5_step(
+            r.reshape(h, s), k.reshape(h, s), v.reshape(h, s),
+            get("att.decay"), get("att.first"), wkv,
+        )
+        out = out.reshape(cfg.dim)
+        lnx = {"scale": get("att.lnx.scale"), "bias": get("att.lnx.bias")}
+        out = rwkv._group_norm_heads(out, lnx, h) * g
+        x_out = x + out @ get("att.wo.w")
+        return x_out, xa, new_wkv
+
+    return fn
+
+
+def make_chanmix_fn(cfg: ModelConfig, names: List[str], impl: str = "pallas") -> Callable:
+    def fn(x, ffn_x, *weights):
+        get = lambda n: weights[names.index(n)]  # noqa: E731
+        kns = kernels.get(impl)
+        ln2 = {"scale": get("ln2.scale"), "bias": get("ln2.bias")}
+        xf = rwkv._ln(x, ln2)
+        xk = rwkv._lerp(xf, ffn_x, get("ffn.mu_k"))
+        xr = rwkv._lerp(xf, ffn_x, get("ffn.mu_r"))
+        wr = _rebuild_proj(names, list(weights), "ffn.wr")
+        r = jax.nn.sigmoid(rwkv._proj(xr, wr, kns))
+        # wk arrives transposed (F, D); XLA folds the transpose into the dot.
+        x_out = x + r * kns.sqrelu_ffn(xk, get("ffn.wk_t").T, get("ffn.wv"))
+        return x_out, xf
+
+    return fn
+
+
+def head_matvec_fn(hidden, head_t):
+    # head arrives transposed (V, D) to match the .rkv layout (export.py).
+    return (head_t @ hidden,)
+
+
+# ---------------------------------------------------------------------------
+# Lowering driver
+# ---------------------------------------------------------------------------
+
+
+def _spec(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_model_components(
+    params: Dict[str, Any], cfg: ModelConfig, name: str, out_dir: str, impl: str = "pallas"
+) -> Dict[str, Any]:
+    """Lower the three components; write `<name>_<component>.hlo.txt`.
+
+    Returns the AOT manifest fragment {component: {params: [...], path}}.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    d, h, s, f, v = cfg.dim, cfg.heads, cfg.head_size, cfg.ffn_dim, cfg.vocab
+    block0 = params["blocks"][0]
+    manifest: Dict[str, Any] = {}
+
+    tm_names = timemix_weight_names(block0)
+    tm_fn = make_timemix_fn(cfg, tm_names, impl)
+    tm_specs = [_spec((d,)), _spec((d,)), _spec((h, s, s))] + [
+        _spec(_get_block_tensor(block0, n).shape) for n in tm_names
+    ]
+    lowered = jax.jit(tm_fn).lower(*tm_specs)
+    path = os.path.join(out_dir, f"{name}_timemix.hlo.txt")
+    with open(path, "w") as fp:
+        fp.write(to_hlo_text(lowered))
+    manifest["timemix"] = {"params": tm_names, "path": os.path.basename(path)}
+
+    cm_names = chanmix_weight_names(block0)
+    cm_fn = make_chanmix_fn(cfg, cm_names, impl)
+    cm_specs = [_spec((d,)), _spec((d,))] + [
+        _spec(_get_block_tensor(block0, n).shape) for n in cm_names
+    ]
+    lowered = jax.jit(cm_fn).lower(*cm_specs)
+    path = os.path.join(out_dir, f"{name}_chanmix.hlo.txt")
+    with open(path, "w") as fp:
+        fp.write(to_hlo_text(lowered))
+    manifest["chanmix"] = {"params": cm_names, "path": os.path.basename(path)}
+
+    lowered = jax.jit(head_matvec_fn).lower(_spec((d,)), _spec((v, d)))
+    path = os.path.join(out_dir, f"{name}_head.hlo.txt")
+    with open(path, "w") as fp:
+        fp.write(to_hlo_text(lowered))
+    manifest["head"] = {"params": ["head"], "path": os.path.basename(path)}
+
+    return manifest
+
+
+# Smoke-check helper used by tests: run the lowered fns in-process.
+def run_component_reference(params, cfg: ModelConfig, x, state) -> Tuple[np.ndarray, Dict[str, Any]]:
+    """Execute one full step via the component fns (jnp impl) for parity tests."""
+    block_outs = []
+    xcur = rwkv._ln(jnp.asarray(x), params["ln0"])
+    att_xs, wkvs, ffn_xs = [], [], []
+    for i, block in enumerate(params["blocks"]):
+        tm_names = timemix_weight_names(block)
+        tm_fn = make_timemix_fn(cfg, tm_names, impl="jnp")
+        weights = [jnp.asarray(_get_block_tensor(block, n)) for n in tm_names]
+        xcur, ax, wk = tm_fn(xcur, state["att_x"][i], state["wkv"][i], *weights)
+        cm_names = chanmix_weight_names(block)
+        cm_fn = make_chanmix_fn(cfg, cm_names, impl="jnp")
+        weights = [jnp.asarray(_get_block_tensor(block, n)) for n in cm_names]
+        xcur, fx = cm_fn(xcur, state["ffn_x"][i], *weights)
+        att_xs.append(ax)
+        wkvs.append(wk)
+        ffn_xs.append(fx)
+        block_outs.append(xcur)
+    hidden = rwkv._ln(xcur, params["ln_out"])
+    new_state = {"att_x": jnp.stack(att_xs), "wkv": jnp.stack(wkvs), "ffn_x": jnp.stack(ffn_xs)}
+    return np.asarray(hidden), new_state

@@ -1,0 +1,146 @@
+"""Shared helpers for the RWKV-Lite compile path (build-time only).
+
+Everything in python/ runs at `make artifacts` time; nothing here is on the
+inference request path (that is the rust coordinator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Model configurations
+# ---------------------------------------------------------------------------
+
+# Scaled-down counterparts of the paper's Table 2 variants.  The paper uses
+# D in {768..2560}, L in {12..32}, V=65536; we scale dims so that the
+# *parameter-distribution regime* of Table 1 is preserved (emb+head dominate
+# the tiny model, RWKV blocks dominate medium/regular) while everything
+# trains in minutes on CPU.  head_size is fixed (paper: 64; ours: 16).
+HEAD_SIZE = 16
+FFN_MULT = 3.5  # channel-mix hidden dim = 3.5 * D, as in the paper
+
+VARIANTS: Dict[str, Dict[str, int]] = {
+    "tiny": dict(dim=64, layers=2),
+    "small": dict(dim=128, layers=4),
+    "medium": dict(dim=192, layers=6),
+    "regular": dict(dim=256, layers=8),
+}
+
+VOCAB_SIZE = 1024  # scaled from the paper's 65536
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of one model variant (RWKV or transformer)."""
+
+    arch: str  # "rwkv" | "rwkv_lite" | "transformer"
+    variant: str  # tiny | small | medium | regular
+    dim: int
+    layers: int
+    vocab: int = VOCAB_SIZE
+    head_size: int = HEAD_SIZE
+    # RWKV-Lite knobs (ignored by vanilla / transformer):
+    svd_rank_div: int = 0  # k in the paper; 0 = no SVD decomposition
+    enhanced_svd: bool = False  # Eq. 2 construct (pretrain-from-scratch)
+
+    @property
+    def heads(self) -> int:
+        assert self.dim % self.head_size == 0
+        return self.dim // self.head_size
+
+    @property
+    def ffn_dim(self) -> int:
+        f = int(self.dim * FFN_MULT)
+        assert f == self.dim * FFN_MULT, "FFN dim must be integral"
+        return f
+
+    @property
+    def svd_rank(self) -> int:
+        assert self.svd_rank_div > 0
+        return max(1, self.dim // self.svd_rank_div)
+
+    @property
+    def name(self) -> str:
+        tag = self.arch
+        if self.svd_rank_div:
+            tag += f"-svd{self.svd_rank_div}"
+        if self.enhanced_svd:
+            tag += "e"
+        return f"{tag}-{self.variant}"
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def rwkv_config(variant: str, **kw: Any) -> ModelConfig:
+    v = VARIANTS[variant]
+    return ModelConfig(arch="rwkv", variant=variant, dim=v["dim"], layers=v["layers"], **kw)
+
+
+def transformer_config(variant: str) -> ModelConfig:
+    v = VARIANTS[variant]
+    return ModelConfig(arch="transformer", variant=variant, dim=v["dim"], layers=v["layers"])
+
+
+# ---------------------------------------------------------------------------
+# Deterministic RNG + small utilities
+# ---------------------------------------------------------------------------
+
+
+def rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.PCG64(seed))
+
+
+def orthogonal_init(g: np.random.Generator, shape, gain: float = 1.0) -> np.ndarray:
+    """Orthogonal init as used by the official RWKV trainer for projections."""
+    rows, cols = shape
+    a = g.standard_normal((max(rows, cols), min(rows, cols)))
+    q, r = np.linalg.qr(a)
+    q = q * np.sign(np.diag(r))
+    q = q[:rows, :cols] if rows >= cols else q.T[:rows, :cols]
+    return (gain * q).astype(np.float32)
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of scalar parameters in a pytree of arrays."""
+    total = 0
+    for leaf in tree_leaves(tree):
+        total += int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 1
+    return total
+
+
+def tree_leaves(tree: Any):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from tree_leaves(tree[k])
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from tree_leaves(v)
+    else:
+        yield tree
+
+
+def repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(here))
+
+
+def artifacts_dir(*parts: str) -> str:
+    d = os.path.join(repo_root(), "artifacts", *parts)
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def save_json(path: str, obj: Any) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, sort_keys=True)
+
+
+def env_flag(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))

@@ -1,0 +1,1 @@
+from . import heads, quant, sparsity, svd  # noqa: F401

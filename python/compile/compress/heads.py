@@ -1,0 +1,168 @@
+"""§3.3 — Embedding clustering + hierarchical-head training.
+
+1. K-means (implemented here, substrate S9 — no sklearn in this image) on
+   the trained token embeddings -> N clusters.
+2. Cluster head H1 (D, N) trained with KL(H̄ ‖ H1) where H̄ sums the
+   original head's token probabilities per cluster (paper Eq. 6).
+   Training data = hidden states sampled by running the frozen model over
+   the corpus (~1B tokens in the paper; scaled here).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import ModelConfig, rng
+from ..models import rwkv
+
+N_CLUSTERS = 32  # scaled from the paper's 200-of-65536 (we have 1024 tokens)
+
+
+# ---------------------------------------------------------------------------
+# K-means
+# ---------------------------------------------------------------------------
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 30, seed: int = 3) -> Tuple[np.ndarray, np.ndarray]:
+    """Lloyd's algorithm with k-means++ seeding. Returns (centroids, assign)."""
+    g = rng(seed)
+    n = x.shape[0]
+    # k-means++ init
+    centers = [x[int(g.integers(n))]]
+    d2 = np.full(n, np.inf)
+    for _ in range(1, k):
+        d2 = np.minimum(d2, ((x - centers[-1]) ** 2).sum(1))
+        probs = d2 / d2.sum()
+        centers.append(x[int(g.choice(n, p=probs))])
+    c = np.stack(centers)
+    assign = np.zeros(n, np.int32)
+    for _ in range(iters):
+        d = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+        new_assign = d.argmin(1).astype(np.int32)
+        if (new_assign == assign).all():
+            break
+        assign = new_assign
+        for j in range(k):
+            m = assign == j
+            if m.any():
+                c[j] = x[m].mean(0)
+            else:  # re-seed an empty cluster at the farthest point
+                c[j] = x[d.min(1).argmax()]
+    return c, assign
+
+
+def cluster_embeddings(params: Dict[str, Any], k: int = N_CLUSTERS, seed: int = 3):
+    emb = np.asarray(params["emb"])
+    return kmeans(emb, k, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Hidden-state sampling + H1 training
+# ---------------------------------------------------------------------------
+
+
+def sample_hiddens(
+    params: Dict[str, Any], cfg: ModelConfig, tokens: np.ndarray, n_samples: int = 4000, seqlen: int = 64
+) -> np.ndarray:
+    """Final-LN hidden states from the frozen model over corpus slices."""
+    n_seq = max(1, n_samples // seqlen)
+    g = rng(77)
+    starts = g.integers(0, len(tokens) - seqlen - 1, size=n_seq)
+    batch = np.stack([tokens[s : s + seqlen] for s in starts]).astype(np.int32)
+
+    @jax.jit
+    def run(params, toks):
+        x = params["emb"][toks]
+        x = rwkv._ln(x, params["ln0"])
+        for block in params["blocks"]:
+            x = x + rwkv._time_mix_seq(rwkv._ln(x, block["ln1"]), block["att"], cfg)
+            x = x + rwkv._chan_mix_seq(rwkv._ln(x, block["ln2"]), block["ffn"], cfg)
+        return rwkv._ln(x, params["ln_out"])
+
+    h = np.asarray(run(params, batch)).reshape(-1, cfg.dim)
+    return h[:n_samples]
+
+
+def train_cluster_head(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    assign: np.ndarray,
+    hiddens: np.ndarray,
+    epochs: int = 30,
+    bsz: int = 256,
+    lr: float = 2e-3,
+    seed: int = 21,
+    verbose: bool = True,
+) -> np.ndarray:
+    """Train H1 (D, N) with KL(H̄ ‖ softmax(x @ H1)) (paper Eq. 6)."""
+    from ..train import adamw_init, adamw_update
+
+    n_clusters = int(assign.max()) + 1
+    g = rng(seed)
+    h1 = (g.standard_normal((cfg.dim, n_clusters)) / np.sqrt(cfg.dim)).astype(np.float32)
+    head = jnp.asarray(params["head"])
+    assign_j = jnp.asarray(assign)
+    hid = jnp.asarray(hiddens)
+
+    # Aggregation matrix A (V, N): A[v, c] = 1 if token v is in cluster c.
+    agg = jnp.zeros((head.shape[1], n_clusters), jnp.float32).at[
+        jnp.arange(len(assign)), assign_j
+    ].set(1.0)
+
+    opt = adamw_init(h1)
+
+    @jax.jit
+    def update(h1, opt, idx):
+        def loss_fn(h1):
+            x = hid[idx]
+            p_tok = jax.nn.softmax(x @ head, axis=-1)
+            p_bar = p_tok @ agg  # H̄: summed token probs per cluster
+            logq = jax.nn.log_softmax(x @ h1, axis=-1)
+            kl = jnp.sum(p_bar * (jnp.log(p_bar + 1e-9) - logq), axis=-1)
+            return kl.mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(h1)
+        h1, opt = adamw_update(h1, grads, opt, lr, wd=0.0)
+        return h1, opt, loss
+
+    n = hiddens.shape[0]
+    h1 = jnp.asarray(h1)
+    for ep in range(epochs):
+        perm = g.permutation(n)
+        for s in range(max(1, n // bsz)):
+            idx = jnp.asarray(perm[s * bsz : (s + 1) * bsz])
+            h1, opt, loss = update(h1, opt, idx)
+        if verbose and (ep % 10 == 0 or ep == epochs - 1):
+            print(f"  [hh] epoch {ep:3d} KL {float(loss):.4f}", flush=True)
+    return np.asarray(h1)
+
+
+def head_coverage(
+    params: Dict[str, Any], cfg: ModelConfig, h1: np.ndarray, assign: np.ndarray, hiddens: np.ndarray,
+    p_min: float = 0.95, k_min: int = 3, k_max: int = 16,
+) -> Dict[str, float]:
+    """Telemetry: how often the selected clusters contain the argmax token."""
+    head = np.asarray(params["head"])
+    hit, loads = 0, []
+    for x in hiddens[:512]:
+        c = _softmax(x @ h1)
+        order = np.argsort(-c)
+        csum, sel = 0.0, []
+        for ci in order:
+            sel.append(ci)
+            csum += c[ci]
+            if (csum >= p_min and len(sel) >= k_min) or len(sel) >= k_max:
+                break
+        gold_cluster = assign[int(np.argmax(x @ head))]
+        hit += int(gold_cluster in sel)
+        loads.append(sum((assign == ci).sum() for ci in sel))
+    return {"argmax_coverage": hit / 512, "mean_tokens_loaded": float(np.mean(loads))}
+
+
+def _softmax(x: np.ndarray) -> np.ndarray:
+    e = np.exp(x - x.max())
+    return e / e.sum()

@@ -1,0 +1,76 @@
+"""Quantizers (§B.6 INT8 path + §3.2 deeply-quantized predictors).
+
+All quantization here is per-output-column symmetric (matvec is x @ W with
+W (in, out); each output column gets one scale), matching the rust fused
+dequant kernels (rust/src/tensor/int8.rs) bit-for-bit:
+
+    w_q[i, j] = clip(round(w[i, j] / scale[j]), -qmax, qmax)
+    scale[j]  = max_i |w[i, j]| / qmax
+
+`sign_quant` is the 1-bit case used by the sparsity shadow predictor
+(Eq. 4): weights become {-1, +1} packed 8-per-byte, one f32 scale per
+column (the mean |w| of that column).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def int_quant(w: np.ndarray, bits: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-column quantization to `bits` (stored in int8)."""
+    assert 2 <= bits <= 8
+    qmax = (1 << (bits - 1)) - 1
+    scale = np.abs(w).max(axis=0) / qmax
+    scale = np.where(scale == 0, 1.0, scale).astype(np.float32)
+    q = np.clip(np.round(w / scale), -qmax, qmax).astype(np.int8)
+    return q, scale
+
+
+def int_dequant(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * scale
+
+
+def sign_quant(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """1-bit: sign matrix packed row-major LSB-first + per-column mean-|w| scale."""
+    scale = np.abs(w).mean(axis=0).astype(np.float32)
+    signs = (w >= 0).astype(np.uint8)  # 1 -> +1, 0 -> -1
+    packed = np.packbits(signs, axis=0, bitorder="little")
+    return packed, scale
+
+
+def sign_dequant(packed: np.ndarray, scale: np.ndarray, rows: int) -> np.ndarray:
+    bits = np.unpackbits(packed, axis=0, count=rows, bitorder="little")
+    return (bits.astype(np.float32) * 2.0 - 1.0) * scale
+
+
+def nibble_quant(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """4-bit: symmetric per-column quant packed two-rows-per-byte.
+
+    Row 2i sits in the LOW nibble and row 2i+1 in the HIGH nibble of byte
+    (i, j); each nibble stores q+8 with q in [-7, 7] (offset binary).
+    Matches rust `tensor::nib4_matvec`.
+    """
+    q, scale = int_quant(w, 4)  # q in [-7, 7]
+    qu = (q.astype(np.int16) + 8).astype(np.uint8)
+    if qu.shape[0] % 2 == 1:
+        qu = np.vstack([qu, np.full((1, qu.shape[1]), 8, np.uint8)])  # pad = 0
+    packed = qu[0::2] | (qu[1::2] << 4)
+    return packed.astype(np.uint8), scale
+
+
+def nibble_dequant(packed: np.ndarray, scale: np.ndarray, rows: int) -> np.ndarray:
+    lo = (packed & 0xF).astype(np.int16) - 8
+    hi = (packed >> 4).astype(np.int16) - 8
+    out = np.empty((packed.shape[0] * 2, packed.shape[1]), np.float32)
+    out[0::2] = lo
+    out[1::2] = hi
+    return out[:rows] * scale
+
+
+def quant_error(w: np.ndarray, bits: int) -> float:
+    """Relative Frobenius error introduced by `bits`-bit quantization."""
+    q, s = int_quant(w, bits)
+    return float(np.linalg.norm(w - int_dequant(q, s)) / (np.linalg.norm(w) + 1e-12))

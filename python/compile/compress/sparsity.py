@@ -1,0 +1,228 @@
+"""§3.2 — FFN sparsity: activation collection + predictor training.
+
+Pipeline (mirrors the paper's §4 "How are sparsity predictors trained"):
+  1. Run the frozen model over ~5000 corpus tokens, recording for every
+     layer the channel-mix FFN pre-activation input x and the ground-truth
+     activation mask  relu(x @ W_k) > 0.
+  2. Train one MLP predictor per layer (L1: D->N, L2: N->F, sigmoid), BCE
+     against the ground-truth mask.  All layers train jointly as one jit
+     (independent losses summed).
+  3. Build the 1-bit shadow predictor: sign-quantized W_k + per-column
+     scale; score = x @ W^{INT1}, active = score above the t-th percentile.
+  4. The runtime ensemble is max(P_MLP, P_quant) — union of the masks
+     (rust/src/engine/sparse_ffn.rs).  Here we also compute recall /
+     precision / sparsity stats for Figure 9.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import ModelConfig, rng
+from ..models import rwkv
+from . import quant
+
+# N = D/4: the paper stresses (§2.2) that predictor overhead must stay
+# negligible for small models — at our scaled dims a D/2 hidden layer was
+# ~30% of the compressed model, swamping the §3.2 savings.
+PRED_HIDDEN_DIV = 4
+
+
+# ---------------------------------------------------------------------------
+# 1. Activation collection
+# ---------------------------------------------------------------------------
+
+
+def collect_activations(
+    params: Dict[str, Any], cfg: ModelConfig, tokens: np.ndarray, n_samples: int = 5000, seqlen: int = 64
+) -> List[Dict[str, np.ndarray]]:
+    """Returns per-layer {"x": (N, D) ffn inputs, "mask": (N, F) bool}."""
+    n_seq = max(1, n_samples // seqlen)
+    g = rng(123)
+    starts = g.integers(0, len(tokens) - seqlen - 1, size=n_seq)
+    batch = np.stack([tokens[s : s + seqlen] for s in starts]).astype(np.int32)
+
+    captured: List[Dict[str, np.ndarray]] = [dict() for _ in range(cfg.layers)]
+
+    @jax.jit
+    def run(params, toks):
+        x = params["emb"][toks]
+        x = rwkv._ln(x, params["ln0"])
+        per_layer = []
+        for block in params["blocks"]:
+            x = x + rwkv._time_mix_seq(rwkv._ln(x, block["ln1"]), block["att"], cfg)
+            xf = rwkv._ln(x, block["ln2"])
+            sx = rwkv._shift(xf)
+            xk = rwkv._lerp(xf, sx, block["ffn"]["mu_k"])
+            h = jnp.maximum(xk @ block["ffn"]["wk"], 0.0)
+            per_layer.append((xk, h > 0))
+            xr = rwkv._lerp(xf, sx, block["ffn"]["mu_r"])
+            from .. import kernels
+
+            kns = kernels.get("jnp")
+            r = jax.nn.sigmoid(rwkv._proj(xr, block["ffn"]["wr"], kns))
+            x = x + r * ((h * h) @ block["ffn"]["wv"])
+        return per_layer
+
+    outs = run(params, batch)
+    for i, (xk, mask) in enumerate(outs):
+        captured[i]["x"] = np.asarray(xk).reshape(-1, cfg.dim)[:n_samples]
+        captured[i]["mask"] = np.asarray(mask).reshape(-1, cfg.ffn_dim)[:n_samples]
+    return captured
+
+
+def sparsity_profile(activations: List[Dict[str, np.ndarray]]) -> List[float]:
+    """Figure 3: fraction of zero activations per layer."""
+    return [float(1.0 - a["mask"].mean()) for a in activations]
+
+
+# ---------------------------------------------------------------------------
+# 2. MLP predictors (all layers jointly)
+# ---------------------------------------------------------------------------
+
+
+def init_predictors(cfg: ModelConfig, seed: int = 5) -> List[Dict[str, np.ndarray]]:
+    g = rng(seed)
+    n = cfg.dim // PRED_HIDDEN_DIV
+    preds = []
+    for _ in range(cfg.layers):
+        preds.append(
+            {
+                "l1": (g.standard_normal((cfg.dim, n)) / np.sqrt(cfg.dim)).astype(np.float32),
+                "l2": (g.standard_normal((n, cfg.ffn_dim)) / np.sqrt(n)).astype(np.float32),
+            }
+        )
+    return preds
+
+
+def predictor_logits(pred: Dict[str, Any], x) -> jnp.ndarray:
+    """sigma-input logits of the MLP predictor (Eq. 3 before thresholding)."""
+    return jnp.maximum(x @ pred["l1"], 0.0) @ pred["l2"]
+
+
+def train_predictors(
+    preds: List[Dict[str, np.ndarray]],
+    activations: List[Dict[str, np.ndarray]],
+    epochs: int = 50,
+    bsz: int = 512,
+    lr: float = 1e-3,
+    seed: int = 9,
+    verbose: bool = True,
+) -> List[Dict[str, np.ndarray]]:
+    """Joint BCE training of all per-layer MLP predictors."""
+    from ..train import adamw_init, adamw_update
+
+    xs = jnp.stack([jnp.asarray(a["x"]) for a in activations])  # (L, N, D)
+    ys = jnp.stack([jnp.asarray(a["mask"], jnp.float32) for a in activations])
+
+    params = preds
+    opt = adamw_init(params)
+
+    @jax.jit
+    def update(params, opt, idx):
+        def loss_fn(ps):
+            total = 0.0
+            for li, p in enumerate(ps):
+                xb = xs[li, idx]
+                yb = ys[li, idx]
+                lg = predictor_logits(p, xb)
+                # numerically-stable BCE-with-logits; positive class (active
+                # neuron) upweighted: a false negative kills accuracy, a
+                # false positive only costs memory (paper §2.2 challenge 1).
+                pos_w = 2.0
+                loss = jnp.mean(
+                    pos_w * yb * jax.nn.softplus(-lg) + (1 - yb) * jax.nn.softplus(lg)
+                )
+                total = total + loss
+            return total / len(ps)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw_update(params, grads, opt, lr, wd=0.0)
+        return params, opt, loss
+
+    n = xs.shape[1]
+    g = rng(seed)
+    steps_per_epoch = max(1, n // bsz)
+    for ep in range(epochs):
+        perm = g.permutation(n)
+        for s in range(steps_per_epoch):
+            idx = jnp.asarray(perm[s * bsz : (s + 1) * bsz])
+            params, opt, loss = update(params, opt, idx)
+        if verbose and (ep % 10 == 0 or ep == epochs - 1):
+            print(f"  [pred] epoch {ep:3d} loss {float(loss):.4f}", flush=True)
+    return [
+        {"l1": np.asarray(p["l1"]), "l2": np.asarray(p["l2"])} for p in params
+    ]
+
+
+# ---------------------------------------------------------------------------
+# 3. Quantized shadow predictors + 4. ensemble statistics
+# ---------------------------------------------------------------------------
+
+
+def build_shadow(params: Dict[str, Any], bits: int = 1) -> List[Dict[str, np.ndarray]]:
+    """Per-layer quantized W_k shadow (1-bit packed, 4-bit nibble-packed,
+    or n-bit int8 for analysis)."""
+    out = []
+    for block in params["blocks"]:
+        wk = np.asarray(block["ffn"]["wk"])
+        if bits == 1:
+            packed, scale = quant.sign_quant(wk)
+            out.append({"wq_packed": packed, "wq_scale": scale})
+        elif bits == 4:
+            packed, scale = quant.nibble_quant(wk)
+            out.append({"wq4_packed": packed, "wq4_scale": scale})
+        else:
+            q, scale = quant.int_quant(wk, bits)
+            out.append({"wq": q, "wq_scale": scale})
+    return out
+
+
+def shadow_scores(shadow: Dict[str, np.ndarray], x: np.ndarray, rows: int) -> np.ndarray:
+    if "wq_packed" in shadow:
+        w = quant.sign_dequant(shadow["wq_packed"], shadow["wq_scale"], rows)
+    elif "wq4_packed" in shadow:
+        w = quant.nibble_dequant(shadow["wq4_packed"], shadow["wq4_scale"], rows)
+    else:
+        w = quant.int_dequant(shadow["wq"], shadow["wq_scale"])
+    return x @ w
+
+
+def ensemble_stats(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    preds: List[Dict[str, np.ndarray]],
+    shadows: List[Dict[str, np.ndarray]],
+    activations: List[Dict[str, np.ndarray]],
+    t_mlp: float = 0.7,
+    t_quant: float = 0.8,
+) -> Dict[str, Any]:
+    """Recall / precision / kept-fraction per layer for MLP, quant, ensemble.
+
+    `t_mlp` thresholds the sigmoid; `t_quant` is the keep-percentile of the
+    shadow scores (paper §5.1 uses 0.7 / 0.8).
+    """
+    per_layer = []
+    for li in range(cfg.layers):
+        x = activations[li]["x"]
+        gt = activations[li]["mask"]
+        mlp_p = jax.nn.sigmoid(predictor_logits(preds[li], jnp.asarray(x)))
+        m_mlp = np.asarray(mlp_p) >= t_mlp
+        sc = shadow_scores(shadows[li], x, cfg.dim)
+        thr = np.quantile(sc, t_quant, axis=1, keepdims=True)
+        m_q = sc >= thr
+        m_ens = m_mlp | m_q
+
+        def stats(m):
+            tp = float((m & gt).sum())
+            recall = tp / max(1.0, float(gt.sum()))
+            precision = tp / max(1.0, float(m.sum()))
+            kept = float(m.mean())
+            return {"recall": recall, "precision": precision, "kept": kept}
+
+        per_layer.append({"mlp": stats(m_mlp), "quant": stats(m_q), "ensemble": stats(m_ens), "gt_kept": float(gt.mean())})
+    return {"per_layer": per_layer}

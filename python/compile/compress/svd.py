@@ -1,0 +1,67 @@
+"""§3.1 — SVD decomposition of RWKV projection matrices.
+
+`decompose(w, rank)` solves the truncated SVD and returns (L, R) with
+L = U·Σ (tall) and R = Vᵀ (flat), exactly the paper's Eq. 1 mapping.
+`decompose_model` rewrites a vanilla parameter pytree into the RWKV-Lite
+structure (W_{r,k,v,g} in time-mix + W_r in channel-mix; W_o untouched —
+the paper found decomposing W_o detrimental).  The result is then
+continually pretrained (train.train_lm) to recover capacity.
+"""
+
+from __future__ import annotations
+
+import copy
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from ..common import ModelConfig
+
+DECOMPOSED_ATT = ("wr", "wk", "wv", "wg")  # not wo
+DECOMPOSED_FFN = ("wr",)
+
+
+def decompose(w: np.ndarray, rank: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Truncated SVD: W (M, N) ≈ L (M, rank) @ R (rank, N)."""
+    u, s, vt = np.linalg.svd(np.asarray(w, np.float64), full_matrices=False)
+    l = (u[:, :rank] * s[:rank]).astype(np.float32)
+    r = vt[:rank, :].astype(np.float32)
+    return l, r
+
+
+def reconstruction_error(w: np.ndarray, l: np.ndarray, r: np.ndarray) -> float:
+    """Relative Frobenius error of the rank-r approximation."""
+    diff = np.linalg.norm(w - l @ r)
+    return float(diff / (np.linalg.norm(w) + 1e-12))
+
+
+def decompose_model(params: Dict[str, Any], cfg: ModelConfig) -> Dict[str, Any]:
+    """Vanilla params -> simple-SVD params (paper's RWKV-ours init)."""
+    assert cfg.svd_rank_div > 0 and not cfg.enhanced_svd
+    rank = cfg.svd_rank
+    out = copy.deepcopy(params)
+    for block in out["blocks"]:
+        for key in DECOMPOSED_ATT:
+            w = block["att"][key]["w"]
+            l, r = decompose(w, rank)
+            block["att"][key] = {"l": l, "r": r}
+        for key in DECOMPOSED_FFN:
+            w = block["ffn"][key]["w"]
+            l, r = decompose(w, rank)
+            block["ffn"][key] = {"l": l, "r": r}
+    return out
+
+
+def decomposition_report(params: Dict[str, Any], cfg: ModelConfig) -> Dict[str, float]:
+    """Per-matrix relative error at the configured rank (sanity/telemetry)."""
+    rank = cfg.svd_rank if cfg.svd_rank_div else cfg.dim // 8
+    report = {}
+    for i, block in enumerate(params["blocks"]):
+        for scope, keys in (("att", DECOMPOSED_ATT), ("ffn", DECOMPOSED_FFN)):
+            for key in keys:
+                p = block[scope][key]
+                if "w" not in p:
+                    continue
+                l, r = decompose(p["w"], rank)
+                report[f"blocks.{i}.{scope}.{key}"] = reconstruction_error(p["w"], l, r)
+    return report

@@ -1,0 +1,312 @@
+"""`.rkv` checkpoint writer — the python -> rust interchange (S11).
+
+Binary layout (little-endian; mirrored by rust/src/io/rkv.rs):
+
+    magic   b"RKV1"
+    u32     version = 1
+    u32     n_tensors
+    u64     data_offset           # absolute file offset of the data section
+    n_tensors x index entry:
+        u16  name_len, name (utf-8)
+        u8   dtype                # 0=f32 1=f16 2=i8 3=u8 4=i32
+        u8   ndim
+        u32  dims[ndim]
+        u64  offset               # relative to data_offset
+        u64  nbytes
+    data section (64-byte aligned; each tensor 64-byte aligned)
+
+Tensor naming convention (consumed by rust/src/engine/weights.rs):
+    emb (V,D)  ln0.scale/bias  ln_out.scale/bias
+    head (V,D)            # stored TRANSPOSED (row per vocab token) so the
+                          # hierarchical head (§3.3) loads contiguous rows
+    b{i}.ln1.scale/bias   b{i}.ln2.scale/bias
+    b{i}.att.mu_r|mu_k|mu_v|mu_g          (D,)
+    b{i}.att.decay (H,S)   # precomputed exp(-exp(decay_log))
+    b{i}.att.first (H,S)
+    b{i}.att.wr.w | b{i}.att.wr.l/.r[/.d] (projection representations)
+    ... same for wk, wv, wg;  b{i}.att.wo.w always dense
+    b{i}.att.lnx.scale/bias
+    b{i}.ffn.mu_k|mu_r   b{i}.ffn.wr.*
+    b{i}.ffn.wk_t (F,D)   # wk stored TRANSPOSED: one row per FFN neuron so
+                          # the sparse loader (§3.2) reads contiguous rows
+    b{i}.ffn.wv (F,D)     # already row-per-neuron
+    b{i}.pred.l1 (D,N)  b{i}.pred.l2 (N,F)           # MLP predictor
+    b{i}.pred.sign (ceil(D/8),F) u8  b{i}.pred.scale (F,)   # 1-bit shadow
+    hh.h1 (D,C)   hh.assign (V,) i32                  # hierarchical head
+
+INT8 export: matrix tensors become dtype i8 with a sibling  <name>.scale
+(out_features,) f32 per-column scale — exactly what the rust fused
+dequant kernels consume.
+
+A JSON manifest `<name>.json` sits next to each `.rkv` (config, runtime
+thresholds, component->HLO-parameter-order mapping).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .common import ModelConfig
+from .compress import quant
+
+DTYPES = {"f32": 0, "f16": 1, "i8": 2, "u8": 3, "i32": 4}
+_NP_OF = {0: np.float32, 1: np.float16, 2: np.int8, 3: np.uint8, 4: np.int32}
+
+ALIGN = 64
+
+
+def _dtype_code(a: np.ndarray) -> int:
+    for code, npdt in _NP_OF.items():
+        if a.dtype == npdt:
+            return code
+    raise TypeError(f"unsupported dtype {a.dtype}")
+
+
+def write_rkv(path: str, tensors: Dict[str, np.ndarray]) -> int:
+    """Write tensors; returns total bytes written."""
+    names = list(tensors.keys())
+    index: List[Tuple[str, np.ndarray, int]] = []
+    off = 0
+    for n in names:
+        a = np.ascontiguousarray(tensors[n])
+        off = (off + ALIGN - 1) // ALIGN * ALIGN
+        index.append((n, a, off))
+        off += a.nbytes
+
+    header = bytearray()
+    header += b"RKV1"
+    header += struct.pack("<II", 1, len(names))
+    header_fixed_end = len(header) + 8  # u64 data_offset comes next
+    body = bytearray()
+    for n, a, toff in index:
+        nb = n.encode()
+        body += struct.pack("<H", len(nb)) + nb
+        body += struct.pack("<BB", _dtype_code(a), a.ndim)
+        body += struct.pack(f"<{a.ndim}I", *a.shape)
+        body += struct.pack("<QQ", toff, a.nbytes)
+    data_offset = (header_fixed_end + len(body) + ALIGN - 1) // ALIGN * ALIGN
+    header += struct.pack("<Q", data_offset)
+
+    with open(path, "wb") as f:
+        f.write(header)
+        f.write(body)
+        f.write(b"\0" * (data_offset - header_fixed_end - len(body)))
+        pos = 0
+        for n, a, toff in index:
+            if toff > pos:
+                f.write(b"\0" * (toff - pos))
+                pos = toff
+            f.write(a.tobytes())
+            pos += a.nbytes
+        total = data_offset + pos
+    return total
+
+
+def read_rkv(path: str) -> Dict[str, np.ndarray]:
+    """Reader (used by round-trip tests; rust has its own)."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    assert raw[:4] == b"RKV1"
+    version, n = struct.unpack_from("<II", raw, 4)
+    assert version == 1
+    (data_offset,) = struct.unpack_from("<Q", raw, 12)
+    pos = 20
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(n):
+        (nl,) = struct.unpack_from("<H", raw, pos)
+        pos += 2
+        name = raw[pos : pos + nl].decode()
+        pos += nl
+        dt, nd = struct.unpack_from("<BB", raw, pos)
+        pos += 2
+        dims = struct.unpack_from(f"<{nd}I", raw, pos)
+        pos += 4 * nd
+        off, nbytes = struct.unpack_from("<QQ", raw, pos)
+        pos += 16
+        a = np.frombuffer(raw, dtype=_NP_OF[dt], count=nbytes // np.dtype(_NP_OF[dt]).itemsize, offset=data_offset + off)
+        out[name] = a.reshape(dims)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model export
+# ---------------------------------------------------------------------------
+
+# Matrices >= this many elements are stored f16 (fp16 export) / int8
+# (quantized export); small vectors stay f32.
+_MATRIX_MIN = 1 << 12
+
+
+def _emit(tensors: Dict[str, np.ndarray], name: str, a: np.ndarray, precision: str,
+          transpose: bool = False):
+    """Store a tensor; if `transpose`, quantize per-output-column first (the
+    semantics of the original x@W orientation) then store W^T row-major."""
+    a = np.asarray(a)
+    if a.ndim == 2 and a.size >= _MATRIX_MIN and precision in ("f16", "int8"):
+        if precision == "f16":
+            tensors[name] = (a.T if transpose else a).astype(np.float16)
+        else:
+            q, scale = quant.int_quant(a.astype(np.float32), 8)
+            tensors[name] = np.ascontiguousarray(q.T) if transpose else q
+            tensors[name + ".scale"] = scale
+    else:
+        tensors[name] = (a.T if transpose else a).astype(np.float32)
+
+
+def _emit_proj(tensors, prefix: str, p: Dict[str, np.ndarray], precision: str):
+    for key in ("w", "l", "r", "d"):
+        if key in p:
+            _emit(tensors, f"{prefix}.{key}", p[key], precision)
+
+
+def model_tensors(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    precision: str = "f16",
+    predictors: Optional[List[Dict[str, np.ndarray]]] = None,
+    shadows: Optional[List[Dict[str, np.ndarray]]] = None,
+    hier_head: Optional[Dict[str, np.ndarray]] = None,
+    shadows4: Optional[List[Dict[str, np.ndarray]]] = None,
+) -> Dict[str, np.ndarray]:
+    t: Dict[str, np.ndarray] = {}
+    _emit(t, "emb", params["emb"], precision)
+    # head stored transposed (V, D): row per vocab token (see module doc).
+    _emit(t, "head", params["head"], precision, transpose=True)
+    for ln in ("ln0", "ln_out"):
+        t[f"{ln}.scale"] = np.asarray(params[ln]["scale"], np.float32)
+        t[f"{ln}.bias"] = np.asarray(params[ln]["bias"], np.float32)
+    for i, b in enumerate(params["blocks"]):
+        p = f"b{i}"
+        for ln in ("ln1", "ln2"):
+            t[f"{p}.{ln}.scale"] = np.asarray(b[ln]["scale"], np.float32)
+            t[f"{p}.{ln}.bias"] = np.asarray(b[ln]["bias"], np.float32)
+        att = b["att"]
+        for mu in ("mu_r", "mu_k", "mu_v", "mu_g"):
+            t[f"{p}.att.{mu}"] = np.asarray(att[mu], np.float32)
+        t[f"{p}.att.decay"] = np.exp(-np.exp(np.asarray(att["decay_log"], np.float32)))
+        t[f"{p}.att.first"] = np.asarray(att["first"], np.float32)
+        for w in ("wr", "wk", "wv", "wg", "wo"):
+            _emit_proj(t, f"{p}.att.{w}", att[w], precision)
+        t[f"{p}.att.lnx.scale"] = np.asarray(att["ln_x"]["scale"], np.float32)
+        t[f"{p}.att.lnx.bias"] = np.asarray(att["ln_x"]["bias"], np.float32)
+        ffn = b["ffn"]
+        for mu in ("mu_k", "mu_r"):
+            t[f"{p}.ffn.{mu}"] = np.asarray(ffn[mu], np.float32)
+        _emit_proj(t, f"{p}.ffn.wr", ffn["wr"], precision)
+        # wk stored transposed (F, D): row per FFN neuron (see module doc).
+        _emit(t, f"{p}.ffn.wk_t", ffn["wk"], precision, transpose=True)
+        _emit(t, f"{p}.ffn.wv", ffn["wv"], precision)
+        if predictors is not None:
+            # predictors are auxiliary nets: always INT8 regardless of the
+            # model precision (their job is a binary decision; quantization
+            # noise is absorbed by the ensemble's union with the 1-bit
+            # shadow)
+            for leaf in ("l1", "l2"):
+                q, scale = quant.int_quant(np.asarray(predictors[i][leaf], np.float32), 8)
+                t[f"{p}.pred.{leaf}"] = q
+                t[f"{p}.pred.{leaf}.scale"] = scale
+        if shadows is not None:
+            t[f"{p}.pred.sign"] = np.asarray(shadows[i]["wq_packed"], np.uint8)
+            t[f"{p}.pred.scale"] = np.asarray(shadows[i]["wq_scale"], np.float32)
+        if shadows4 is not None:
+            # 4-bit shadow (fig9's n-bit predictor study)
+            t[f"{p}.pred.q4"] = np.asarray(shadows4[i]["wq4_packed"], np.uint8)
+            t[f"{p}.pred.q4.scale"] = np.asarray(shadows4[i]["wq4_scale"], np.float32)
+    if hier_head is not None:
+        # h1 stored transposed (C, D): row per cluster (rust matvec_rows)
+        _emit(t, "hh.h1", hier_head["h1"], precision, transpose=True)
+        t["hh.assign"] = np.asarray(hier_head["assign"], np.int32)
+    return t
+
+
+def transformer_tensors(params: Dict[str, Any], cfg: ModelConfig, precision: str = "f16") -> Dict[str, np.ndarray]:
+    """Baseline GPT tensors: emb/pos/head/ln_out + per-block attn & MLP."""
+    t: Dict[str, np.ndarray] = {}
+    _emit(t, "emb", params["emb"], precision)
+    _emit(t, "pos", params["pos"], precision)
+    # head transposed (V, D), matching the RWKV layout (row per token)
+    _emit(t, "head", params["head"], precision, transpose=True)
+    t["ln_out.scale"] = np.asarray(params["ln_out"]["scale"], np.float32)
+    t["ln_out.bias"] = np.asarray(params["ln_out"]["bias"], np.float32)
+    for i, b in enumerate(params["blocks"]):
+        p = f"b{i}"
+        for ln in ("ln1", "ln2"):
+            t[f"{p}.{ln}.scale"] = np.asarray(b[ln]["scale"], np.float32)
+            t[f"{p}.{ln}.bias"] = np.asarray(b[ln]["bias"], np.float32)
+        for w in ("wq", "wk", "wv", "wo"):
+            _emit(t, f"{p}.att.{w}", b[w], precision)
+        _emit(t, f"{p}.mlp.up", b["mlp_up"], precision)
+        _emit(t, f"{p}.mlp.down", b["mlp_down"], precision)
+    return t
+
+
+def export_transformer(
+    out_dir: str, name: str, params: Dict[str, Any], cfg: ModelConfig, precision: str = "f16",
+    extra_manifest: Optional[Dict[str, Any]] = None,
+) -> str:
+    tensors = transformer_tensors(params, cfg, precision)
+    path = os.path.join(out_dir, f"{name}.rkv")
+    nbytes = write_rkv(path, tensors)
+    manifest = {
+        "name": name,
+        "precision": precision,
+        "config": cfg.to_json(),
+        "heads": cfg.heads,
+        "mlp_mult": 4,
+        "max_seq": 512,
+        "n_bytes": nbytes,
+        "has_predictors": False,
+        "has_hier_head": False,
+        "runtime": {},
+    }
+    if extra_manifest:
+        manifest.update(extra_manifest)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return path
+
+
+def export_model(
+    out_dir: str,
+    name: str,
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    precision: str = "f16",
+    predictors=None,
+    shadows=None,
+    hier_head=None,
+    shadows4=None,
+    extra_manifest: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Write `<out_dir>/<name>.rkv` + `<name>.json`; returns the rkv path."""
+    tensors = model_tensors(params, cfg, precision, predictors, shadows, hier_head, shadows4)
+    path = os.path.join(out_dir, f"{name}.rkv")
+    nbytes = write_rkv(path, tensors)
+    manifest = {
+        "name": name,
+        "precision": precision,
+        "config": cfg.to_json(),
+        "ffn_dim": cfg.ffn_dim,
+        "heads": cfg.heads,
+        "n_bytes": nbytes,
+        "has_predictors": predictors is not None,
+        "has_hier_head": hier_head is not None,
+        "runtime": {
+            "t_mlp": 0.7,
+            "t_quant": 0.8,
+            "hh_p_min": 0.95,
+            "hh_k_min": 3,
+            "hh_k_max": 16,
+            "emb_cache_capacity": 64,
+        },
+    }
+    if extra_manifest:
+        manifest.update(extra_manifest)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return path

@@ -1,0 +1,32 @@
+"""L1 Pallas kernels + pure-jnp oracles.
+
+`impl="jnp"` (ref oracles, used for training speed) or `impl="pallas"`
+(interpret-mode Pallas, used by the AOT lowering so the shipped HLO
+exercises the L1 kernels).
+"""
+
+from . import ref
+from .ffn import sqrelu_ffn as sqrelu_ffn_pallas
+from .int8 import int8_matvec as int8_matvec_pallas
+from .lowrank import enhanced_lowrank_proj as enhanced_lowrank_proj_pallas
+from .lowrank import lowrank_proj as lowrank_proj_pallas
+from .wkv import wkv5_seq as wkv5_seq_pallas
+from .wkv import wkv5_step as wkv5_step_pallas
+
+
+def get(impl: str):
+    """Return the kernel namespace for `impl` in {"jnp", "pallas"}."""
+    if impl == "jnp":
+        return ref
+    if impl == "pallas":
+        return _PallasNS
+    raise ValueError(f"unknown kernel impl: {impl}")
+
+
+class _PallasNS:
+    wkv5_step = staticmethod(wkv5_step_pallas)
+    wkv5_seq = staticmethod(wkv5_seq_pallas)
+    sqrelu_ffn = staticmethod(sqrelu_ffn_pallas)
+    lowrank_proj = staticmethod(lowrank_proj_pallas)
+    enhanced_lowrank_proj = staticmethod(enhanced_lowrank_proj_pallas)
+    int8_matvec = staticmethod(int8_matvec_pallas)

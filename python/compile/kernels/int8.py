@@ -1,0 +1,61 @@
+"""Pallas fused INT8-dequant matvec — the TPU analog of the paper's NEON
+fused dequant+matvec kernels (§4 "Custom ARM NEON kernels").
+
+The paper's insight: dequantizing W to a separate buffer before the matvec
+doubles memory traffic and trashes the cache; fusing dequant into the
+multiply keeps traffic at 1 byte/weight.  The TPU mapping: INT8 weight
+tiles stream HBM->VMEM at 1 byte/weight, are widened in-register, and the
+per-column scale is folded into the accumulator after the contraction —
+no f32 copy of W ever exists anywhere.
+
+Grid over output columns (N) so the scale vector slice rides with its tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128
+
+
+def _int8_kernel(x_ref, wq_ref, s_ref, o_ref):
+    x = x_ref[...]  # (1, M) f32
+    w = wq_ref[...].astype(jnp.float32)  # (M, TILE_N) widened in-register
+    o_ref[...] = (x @ w) * s_ref[...]
+
+
+def _tile(n: int) -> int:
+    t = TILE_N
+    while n % t != 0:
+        t //= 2
+        if t < 8:
+            return n
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_matvec(x, wq, scale, interpret: bool = True):
+    """x: (1, M) or (M,) f32; wq: (M, N) int8; scale: (N,) f32 per-column."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    m, n = wq.shape
+    tn = _tile(n)
+    s2 = scale[None, :] if scale.ndim == 1 else scale
+    out = pl.pallas_call(
+        _int8_kernel,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, tn), lambda i: (0, i)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), wq, s2.astype(jnp.float32))
+    return out[0] if squeeze else out

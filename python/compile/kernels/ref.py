@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for pytest/hypothesis correctness sweeps
+(python/tests/test_kernels.py) and are also the implementation used during
+*training* (interpret-mode Pallas is much slower than fused jnp on CPU; the
+AOT path routes through the Pallas kernels so the shipped HLO exercises L1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wkv5_step(r, k, v, w, u, state):
+    """One decode step of the RWKV-v5 multi-head WKV recurrence.
+
+    Args:
+      r, k, v: (H, S) receptance / key / value for this timestep.
+      w:       (H, S) per-channel decay in (0, 1)  (i.e. exp(-exp(log_w))).
+      u:       (H, S) per-channel "bonus" applied to the current token.
+      state:   (H, S, S) running state; state[h, i, j] accumulates k_i * v_j.
+
+    Returns:
+      out:       (H, S) attention output per head.
+      new_state: (H, S, S).
+    """
+    a = jnp.einsum("hi,hj->hij", k, v)  # outer product per head
+    out = jnp.einsum("hi,hij->hj", r, u[..., None] * a + state)
+    new_state = w[..., None] * state + a
+    return out, new_state
+
+
+def wkv5_seq(r, k, v, w, u, state):
+    """Sequence form: r/k/v are (T, H, S); returns (T, H, S) and final state."""
+    import jax
+
+    def step(st, rkv):
+        rt, kt, vt = rkv
+        out, st = wkv5_step(rt, kt, vt, w, u, st)
+        return st, out
+
+    state, outs = jax.lax.scan(step, state, (r, k, v))
+    return outs, state
+
+
+def sqrelu_ffn(x, wk, wv, mask=None):
+    """Channel-mix FFN: relu(x @ wk)^2 @ wv, optionally column-masked.
+
+    x: (..., D); wk: (D, F); wv: (F, D); mask: (F,) in {0,1} — the sparsity
+    predictor output (paper Eq. 3/5): masked columns of wk (and rows of wv)
+    are never loaded, which the oracle models by zeroing the activation.
+    """
+    h = jnp.maximum(x @ wk, 0.0)
+    if mask is not None:
+        h = h * mask
+    return (h * h) @ wv
+
+
+def lowrank_proj(x, l, r):
+    """Simple-SVD projection (paper Eq. 1): x @ W  ≈  (x @ L) @ R."""
+    return (x @ l) @ r
+
+
+def enhanced_lowrank_proj(x, l, r, d):
+    """Enhanced-SVD projection (paper Eq. 2): relu(x@L)^2 @ R + x * d.
+
+    d is the diagonal of the full-rank compensation matrix D.
+    """
+    h = jnp.maximum(x @ l, 0.0)
+    return (h * h) @ r + x * d
+
+
+def int8_matvec(x, wq, scale):
+    """Fused dequant x (..., M) @ dequant(wq (M, N)) with per-column scale.
+
+    The oracle dequantizes explicitly; the Pallas kernel keeps INT8 tiles in
+    VMEM and folds `scale` into the accumulator (never materializing an f32
+    copy of W in HBM) — the TPU analog of the paper's NEON fused kernels.
+    """
+    return (x @ wq.astype(jnp.float32)) * scale
+
+
+def bitlinear_matvec(x, wsign, scale):
+    """1-bit shadow-FFN score (the quantized sparsity predictor, Eq. 4).
+
+    wsign: (M, N) in {-1, +1} (stored packed on the rust side); scale: (N,)
+    per-column magnitude.  Output approximates x @ W.
+    """
+    return (x @ wsign.astype(jnp.float32)) * scale

@@ -1,0 +1,114 @@
+"""Pallas kernel for the RWKV-v5 WKV recurrence (the model's hot spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the official RWKV CUDA
+kernel assigns one threadblock per (batch, head) and keeps the (S, S) state
+in shared memory.  On TPU we express the same locality with a BlockSpec grid
+over heads: each grid step owns one head's (S, S) state tile in VMEM, the
+outer-product update and the r-contraction both map onto the MXU/VPU, and
+the HBM<->VMEM schedule is carried by the BlockSpec instead of explicit
+smem loads.
+
+Kernels here are lowered with `interpret=True` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; numerics are validated through the interpret
+path against `ref.py` (python/tests/test_kernels.py), and real-TPU
+efficiency is estimated analytically (DESIGN.md §8, EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv5_step_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s_ref, o_ref, s_out_ref):
+    """One head per grid step: in-VMEM state update + output contraction.
+
+    Block shapes: r/k/v/w/u are (1, S); state is (1, S, S).
+    """
+    r = r_ref[0, :]
+    k = k_ref[0, :]
+    v = v_ref[0, :]
+    w = w_ref[0, :]
+    u = u_ref[0, :]
+    s = s_ref[0, :, :]
+    # a[i, j] = k[i] * v[j]  — rank-1 update, VPU-friendly broadcast.
+    a = k[:, None] * v[None, :]
+    # out[j] = sum_i r[i] * (u[i] * a[i, j] + s[i, j])  — (1,S)x(S,S) matvec.
+    o_ref[0, :] = (r[:, None] * (u[:, None] * a + s)).sum(axis=0)
+    s_out_ref[0, :, :] = w[:, None] * s + a
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv5_step(r, k, v, w, u, state, interpret: bool = True):
+    """Pallas WKV decode step. Shapes as in ref.wkv5_step: (H,S) / (H,S,S)."""
+    h, s = r.shape
+    vec = pl.BlockSpec((1, s), lambda i: (i, 0))
+    mat = pl.BlockSpec((1, s, s), lambda i: (i, 0, 0))
+    out, new_state = pl.pallas_call(
+        _wkv5_step_kernel,
+        grid=(h,),
+        in_specs=[vec, vec, vec, vec, vec, mat],
+        out_specs=[vec, mat],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s), r.dtype),
+            jax.ShapeDtypeStruct((h, s, s), state.dtype),
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return out, new_state
+
+
+def _wkv5_seq_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref):
+    """Prefill kernel: one head per grid step, fori_loop over time.
+
+    The (S, S) state tile stays resident in VMEM for the whole sequence —
+    the TPU analog of the CUDA kernel keeping state in shared memory across
+    the token loop.  Block shapes: r/k/v are (T, 1, S); w/u (1, S); state
+    (1, S, S); out (T, 1, S).
+    """
+    w = w_ref[0, :]
+    u = u_ref[0, :]
+    t_len = r_ref.shape[0]
+
+    def body(t, s):
+        r = r_ref[t, 0, :]
+        k = k_ref[t, 0, :]
+        v = v_ref[t, 0, :]
+        a = k[:, None] * v[None, :]
+        o_ref[t, 0, :] = (r[:, None] * (u[:, None] * a + s)).sum(axis=0)
+        return w[:, None] * s + a
+
+    s_final = jax.lax.fori_loop(0, t_len, body, s0_ref[0, :, :])
+    sT_ref[0, :, :] = s_final
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv5_seq(r, k, v, w, u, state, interpret: bool = True):
+    """Pallas WKV over a sequence. r/k/v: (T, H, S); returns ((T,H,S), (H,S,S))."""
+    t, h, s = r.shape
+    seq = pl.BlockSpec((t, 1, s), lambda i: (0, i, 0))
+    vec = pl.BlockSpec((1, s), lambda i: (i, 0))
+    mat = pl.BlockSpec((1, s, s), lambda i: (i, 0, 0))
+    out, s_t = pl.pallas_call(
+        _wkv5_seq_kernel,
+        grid=(h,),
+        in_specs=[seq, seq, seq, vec, vec, mat],
+        out_specs=[seq, mat],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, h, s), r.dtype),
+            jax.ShapeDtypeStruct((h, s, s), state.dtype),
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return out, s_t
+
+
+def vmem_bytes(heads: int, head_size: int, t: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM footprint estimate for the seq kernel (DESIGN.md §8)."""
+    state = head_size * head_size * dtype_bytes
+    streams = 4 * t * head_size * dtype_bytes  # r, k, v, o
+    consts = 2 * head_size * dtype_bytes  # w, u
+    return state + streams + consts

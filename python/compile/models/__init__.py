@@ -1,0 +1,1 @@
+from . import rwkv, transformer  # noqa: F401

@@ -1,0 +1,322 @@
+"""RWKV v5 ("Eagle") in JAX — vanilla and RWKV-Lite variants.
+
+Implemented from scratch (substrate S1/S2 in DESIGN.md): token-shift lerps,
+multi-head WKV recurrence with per-channel decay/bonus, per-head GroupNorm,
+squared-ReLU channel-mix.  The RWKV-Lite variants replace the square
+projections W_{r,k,v,g} (time-mix) and W_r (channel-mix) — but, per the
+paper, *not* W_o — with low-rank factors (simple SVD, Eq. 1) or the
+enhanced construct (Eq. 2).
+
+Two forward entry points:
+  * `forward(params, cfg, tokens)`   — (B, T) -> (B, T, V) logits, used for
+    training/eval; pure-jnp math (fast on CPU).
+  * `step(params, cfg, x, state)`    — single-token decode step used by the
+    AOT lowering; routes the WKV recurrence / FFN / low-rank projections
+    through the L1 kernels (impl="pallas") so they ship in the HLO.
+
+Parameter pytree layout (all float32 numpy/jnp arrays):
+  emb        (V, D)
+  ln0 / ln_out: {scale, bias} (D,)
+  head       (D, V)
+  blocks: list of L dicts:
+    ln1, ln2: {scale, bias}
+    att: mu_r/k/v/g (D,), decay_log (H,S), first (H,S),
+         wr/wk/wv/wg: projection (see `_proj`), wo (D, D) always dense,
+         ln_x: {scale, bias} (D,)  per-head group norm
+    ffn: mu_k, mu_r (D,), wr: projection, wk (D, F), wv (F, D)
+Projections are dicts: {"w"} dense | {"l","r"} simple SVD | {"l","r","d"}
+enhanced SVD.  The pytree *structure* encodes the variant, so jit caches
+one executable per variant.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import ModelConfig, orthogonal_init, rng
+from .. import kernels
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _ln_init(d: int) -> Params:
+    return {"scale": np.ones(d, np.float32), "bias": np.zeros(d, np.float32)}
+
+
+def _proj_init(g: np.random.Generator, cfg: ModelConfig, gain: float, zero: bool = False) -> Params:
+    d = cfg.dim
+    if zero:
+        return {"w": np.zeros((d, d), np.float32)}
+    if cfg.svd_rank_div == 0:
+        return {"w": orthogonal_init(g, (d, d), gain)}
+    r = cfg.svd_rank
+    if cfg.enhanced_svd:
+        return {
+            "l": orthogonal_init(g, (d, r), gain),
+            "r": orthogonal_init(g, (r, d), gain),
+            "d": (0.1 * g.standard_normal(d)).astype(np.float32),
+        }
+    return {
+        "l": orthogonal_init(g, (d, r), gain),
+        "r": orthogonal_init(g, (r, d), gain),
+    }
+
+
+def init(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Random init following the official RWKV trainer's recipes (scaled)."""
+    g = rng(seed)
+    d, v, h, s, f, n_layers = cfg.dim, cfg.vocab, cfg.heads, cfg.head_size, cfg.ffn_dim, cfg.layers
+    params: Params = {
+        "emb": (1e-4 * g.standard_normal((v, d))).astype(np.float32),
+        "ln0": _ln_init(d),
+        "ln_out": _ln_init(d),
+        "head": orthogonal_init(g, (d, v), 0.5),
+        "blocks": [],
+    }
+    ddd = (np.arange(d, dtype=np.float32) / d)
+    for layer in range(n_layers):
+        r01 = layer / max(1, n_layers - 1)
+        r1a0 = 1.0 - layer / n_layers
+        mu = lambda p: np.power(ddd, p).astype(np.float32)  # noqa: E731
+        decay = -6.0 + 5.0 * np.power(
+            np.arange(h * s, dtype=np.float32) / max(1, h * s - 1), 0.7 + 1.3 * r01
+        )
+        first = 0.5 * (np.arange(h * s) % 3 - 1).astype(np.float32) + np.log(0.3)
+        block = {
+            "ln1": _ln_init(d),
+            "ln2": _ln_init(d),
+            "att": {
+                "mu_r": 0.5 * mu(0.5 * r1a0),
+                "mu_k": mu(r1a0),
+                "mu_v": mu(r1a0) + 0.3 * r01,
+                "mu_g": 0.5 * mu(0.5 * r1a0),
+                "decay_log": decay.reshape(h, s).astype(np.float32),
+                "first": first.reshape(h, s).astype(np.float32),
+                "wr": _proj_init(g, cfg, 1.0),
+                "wk": _proj_init(g, cfg, 0.8),
+                "wv": _proj_init(g, cfg, 1.0),
+                "wg": _proj_init(g, cfg, 0.8),
+                "wo": {"w": np.zeros((d, d), np.float32)},
+                "ln_x": _ln_init(d),
+            },
+            "ffn": {
+                "mu_k": mu(r1a0),
+                "mu_r": mu(r1a0),
+                "wr": _proj_init(g, cfg, 1.0),
+                "wk": orthogonal_init(g, (d, f), 1.0),
+                "wv": np.zeros((f, d), np.float32),
+            },
+        }
+        params["blocks"].append(block)
+    return params
+
+
+def init_state(cfg: ModelConfig, batch: int | None = None) -> Params:
+    """Zero recurrent state. Arrays are (L, ...) stacked for easy interchange."""
+    h, s, d, n_layers = cfg.heads, cfg.head_size, cfg.dim, cfg.layers
+    shp = (lambda *dims: (batch, *dims) if batch else dims)
+    return {
+        "att_x": jnp.zeros(shp(n_layers, d), jnp.float32),
+        "wkv": jnp.zeros(shp(n_layers, h, s, s), jnp.float32),
+        "ffn_x": jnp.zeros(shp(n_layers, d), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared math
+# ---------------------------------------------------------------------------
+
+
+def _ln(x, p):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * p["scale"] + p["bias"]
+
+
+def _group_norm_heads(x, p, heads: int):
+    """Per-head GroupNorm (the official ln_x): x (..., D) grouped into H."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], heads, shp[-1] // heads)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) / jnp.sqrt(var + 64e-5)  # official uses eps*head_size scale
+    return xh.reshape(shp) * p["scale"] + p["bias"]
+
+
+def _proj(x, p: Params, kns) -> jnp.ndarray:
+    """Apply a projection in whichever representation it is stored."""
+    if "w" in p:
+        return x @ p["w"]
+    if "d" in p:
+        return kns.enhanced_lowrank_proj(x, p["l"], p["r"], p["d"])
+    return kns.lowrank_proj(x, p["l"], p["r"])
+
+
+def _lerp(x, x_prev, mu):
+    """RWKV token-shift lerp: mu*x + (1-mu)*x_prev."""
+    return x * mu + x_prev * (1.0 - mu)
+
+
+# ---------------------------------------------------------------------------
+# Training/eval forward over full sequences (pure jnp; batched)
+# ---------------------------------------------------------------------------
+
+
+def _shift(x):
+    """(B, T, D) -> previous-token tensor with zeros at t=0."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def _time_mix_seq(x, att: Params, cfg: ModelConfig):
+    b, t, d = x.shape
+    h, s = cfg.heads, cfg.head_size
+    kns = kernels.get("jnp")
+    sx = _shift(x)
+    r = _proj(_lerp(x, sx, att["mu_r"]), att["wr"], kns)
+    k = _proj(_lerp(x, sx, att["mu_k"]), att["wk"], kns)
+    v = _proj(_lerp(x, sx, att["mu_v"]), att["wv"], kns)
+    g = _proj(_lerp(x, sx, att["mu_g"]), att["wg"], kns)
+    g = g * jax.nn.sigmoid(g)  # SiLU gate
+    w = jnp.exp(-jnp.exp(att["decay_log"]))
+    u = att["first"]
+    rh = r.reshape(b, t, h, s)
+    kh = k.reshape(b, t, h, s)
+    vh = v.reshape(b, t, h, s)
+    state0 = jnp.zeros((b, h, s, s), jnp.float32)
+    out, _ = jax.vmap(lambda rr, kk, vv, st: kns.wkv5_seq(rr, kk, vv, w, u, st))(
+        rh, kh, vh, state0
+    )
+    out = out.reshape(b, t, d)
+    out = _group_norm_heads(out, att["ln_x"], h) * g
+    return _proj(out, att["wo"], kns)
+
+
+def _chan_mix_seq(x, ffn: Params, cfg: ModelConfig):
+    kns = kernels.get("jnp")
+    sx = _shift(x)
+    xk = _lerp(x, sx, ffn["mu_k"])
+    xr = _lerp(x, sx, ffn["mu_r"])
+    r = jax.nn.sigmoid(_proj(xr, ffn["wr"], kns))
+    return r * kns.sqrelu_ffn(xk, ffn["wk"], ffn["wv"])
+
+
+def forward(params: Params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    """(B, T) int32 -> (B, T, V) logits."""
+    x = params["emb"][tokens]
+    x = _ln(x, params["ln0"])
+    for block in params["blocks"]:
+        x = x + _time_mix_seq(_ln(x, block["ln1"]), block["att"], cfg)
+        x = x + _chan_mix_seq(_ln(x, block["ln2"]), block["ffn"], cfg)
+    x = _ln(x, params["ln_out"])
+    return x @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode step (the AOT surface; L1 kernels)
+# ---------------------------------------------------------------------------
+
+
+def _time_mix_step(x, att_x_prev, wkv_state, att: Params, cfg: ModelConfig, impl: str):
+    h, s = cfg.heads, cfg.head_size
+    kns = kernels.get(impl)
+    r = _proj(_lerp(x, att_x_prev, att["mu_r"]), att["wr"], kns)
+    k = _proj(_lerp(x, att_x_prev, att["mu_k"]), att["wk"], kns)
+    v = _proj(_lerp(x, att_x_prev, att["mu_v"]), att["wv"], kns)
+    g = _proj(_lerp(x, att_x_prev, att["mu_g"]), att["wg"], kns)
+    g = g * jax.nn.sigmoid(g)
+    w = jnp.exp(-jnp.exp(att["decay_log"]))
+    u = att["first"]
+    out, new_state = kns.wkv5_step(r.reshape(h, s), k.reshape(h, s), v.reshape(h, s), w, u, wkv_state)
+    out = out.reshape(cfg.dim)
+    out = _group_norm_heads(out, att["ln_x"], h) * g
+    return _proj(out, att["wo"], kns), new_state
+
+
+def _chan_mix_step(x, ffn_x_prev, ffn: Params, cfg: ModelConfig, impl: str):
+    kns = kernels.get(impl)
+    xk = _lerp(x, ffn_x_prev, ffn["mu_k"])
+    xr = _lerp(x, ffn_x_prev, ffn["mu_r"])
+    r = jax.nn.sigmoid(_proj(xr, ffn["wr"], kns))
+    return r * kns.sqrelu_ffn(xk, ffn["wk"], ffn["wv"])
+
+
+def block_step(params_block: Params, cfg: ModelConfig, x, att_x, wkv, ffn_x, impl: str = "jnp"):
+    """One RWKV block on one token. Returns (x_out, att_x', wkv', ffn_x')."""
+    xa = _ln(x, params_block["ln1"])
+    dx, wkv = _time_mix_step(xa, att_x, wkv, params_block["att"], cfg, impl)
+    x = x + dx
+    xf = _ln(x, params_block["ln2"])
+    x = x + _chan_mix_step(xf, ffn_x, params_block["ffn"], cfg, impl)
+    return x, xa, wkv, xf
+
+
+def step(params: Params, cfg: ModelConfig, x_emb, state: Params, impl: str = "jnp"):
+    """Full-model decode step from an embedding vector.
+
+    x_emb: (D,) the (possibly cache-served) embedding of the current token.
+    Returns (logits (V,), new_state).  The embedding lookup and the head
+    are OUTSIDE this function on purpose: at inference time the rust L3
+    owns them (embedding cache §3.3, hierarchical head §3.3).
+    """
+    x = _ln(x_emb, params["ln0"])
+    att_xs, wkvs, ffn_xs = [], [], []
+    for i, block in enumerate(params["blocks"]):
+        x, ax, wk, fx = block_step(
+            block, cfg, x, state["att_x"][i], state["wkv"][i], state["ffn_x"][i], impl
+        )
+        att_xs.append(ax)
+        wkvs.append(wk)
+        ffn_xs.append(fx)
+    x = _ln(x, params["ln_out"])
+    new_state = {
+        "att_x": jnp.stack(att_xs),
+        "wkv": jnp.stack(wkvs),
+        "ffn_x": jnp.stack(ffn_xs),
+    }
+    return x, new_state
+
+
+def logits_from_hidden(params: Params, hidden) -> jnp.ndarray:
+    """Dense head (used when the hierarchical head is disabled)."""
+    return hidden @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# Introspection used by Table 1 / export
+# ---------------------------------------------------------------------------
+
+
+def param_groups(params: Params, cfg: ModelConfig) -> Dict[str, int]:
+    """Parameter counts by the paper's Table 1 grouping."""
+
+    def size(x):
+        return int(np.prod(np.asarray(x).shape))
+
+    def proj_size(p):
+        return sum(size(v) for v in p.values())
+
+    sq = nonsq = other = 0
+    for b in params["blocks"]:
+        att, ffn = b["att"], b["ffn"]
+        sq += sum(proj_size(att[k]) for k in ("wr", "wk", "wv", "wg", "wo"))
+        sq += proj_size(ffn["wr"])
+        nonsq += size(ffn["wk"]) + size(ffn["wv"])
+        other += sum(
+            size(att[k]) for k in ("mu_r", "mu_k", "mu_v", "mu_g", "decay_log", "first")
+        )
+        other += size(ffn["mu_k"]) + size(ffn["mu_r"])
+        for ln in (b["ln1"], b["ln2"], att["ln_x"]):
+            other += size(ln["scale"]) + size(ln["bias"])
+    head = size(params["head"])
+    emb = size(params["emb"])
+    other += sum(size(params[k][f]) for k in ("ln0", "ln_out") for f in ("scale", "bias"))
+    return {"square": sq, "non_square": nonsq, "head": head, "emb": emb, "other": other}

@@ -1,0 +1,106 @@
+"""Decoder-only transformer baseline (OPT / GPT-Neo / TinyLlama stand-in).
+
+Substrate S3: Figures 5 and 10 compare RWKV(-Lite) against transformer LLMs
+of matched dims.  We implement a standard pre-LN GPT: learned positional
+embeddings, multi-head causal attention (same head_size=16 as the RWKV
+variants), GELU MLP with 4D hidden.  Trained on the same synthetic corpus
+by `python/compile/train.py`.
+
+Unlike RWKV, inference requires a KV cache that grows O(T) — the memory
+comparison in Fig. 5 deliberately *excludes* it (favoring transformers),
+and so do we; the rust engine still implements the cache because the
+baseline has to actually run (rust/src/engine/transformer.rs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import ModelConfig, orthogonal_init, rng
+
+Params = Dict[str, Any]
+
+MAX_SEQ = 512  # learned positional table size
+MLP_MULT = 4
+
+
+def init(cfg: ModelConfig, seed: int = 0) -> Params:
+    g = rng(seed)
+    d, v = cfg.dim, cfg.vocab
+    params: Params = {
+        "emb": (0.02 * g.standard_normal((v, d))).astype(np.float32),
+        "pos": (0.02 * g.standard_normal((MAX_SEQ, d))).astype(np.float32),
+        "ln_out": {"scale": np.ones(d, np.float32), "bias": np.zeros(d, np.float32)},
+        "head": orthogonal_init(g, (d, v), 0.5),
+        "blocks": [],
+    }
+    for _ in range(cfg.layers):
+        params["blocks"].append(
+            {
+                "ln1": {"scale": np.ones(d, np.float32), "bias": np.zeros(d, np.float32)},
+                "ln2": {"scale": np.ones(d, np.float32), "bias": np.zeros(d, np.float32)},
+                "wq": orthogonal_init(g, (d, d), 1.0),
+                "wk": orthogonal_init(g, (d, d), 1.0),
+                "wv": orthogonal_init(g, (d, d), 1.0),
+                "wo": np.zeros((d, d), np.float32),
+                "mlp_up": orthogonal_init(g, (d, MLP_MULT * d), 1.0),
+                "mlp_down": np.zeros((MLP_MULT * d, d), np.float32),
+            }
+        )
+    return params
+
+
+def _ln(x, p):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * p["scale"] + p["bias"]
+
+
+def _attn(x, blk, cfg: ModelConfig):
+    b, t, d = x.shape
+    h, s = cfg.heads, cfg.head_size
+    q = (x @ blk["wq"]).reshape(b, t, h, s)
+    k = (x @ blk["wk"]).reshape(b, t, h, s)
+    v = (x @ blk["wv"]).reshape(b, t, h, s)
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(s)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", att, v).reshape(b, t, d)
+    return out @ blk["wo"]
+
+
+def forward(params: Params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    """(B, T) -> (B, T, V) logits."""
+    b, t = tokens.shape
+    x = params["emb"][tokens] + params["pos"][:t]
+    for blk in params["blocks"]:
+        x = x + _attn(_ln(x, blk["ln1"]), blk, cfg)
+        hdn = jax.nn.gelu(_ln(x, blk["ln2"]) @ blk["mlp_up"])
+        x = x + hdn @ blk["mlp_down"]
+    x = _ln(x, params["ln_out"])
+    return x @ params["head"]
+
+
+def param_groups(params: Params, cfg: ModelConfig) -> Dict[str, int]:
+    def size(x):
+        return int(np.prod(np.asarray(x).shape))
+
+    sq = nonsq = other = 0
+    for b in params["blocks"]:
+        sq += sum(size(b[k]) for k in ("wq", "wk", "wv", "wo"))
+        nonsq += size(b["mlp_up"]) + size(b["mlp_down"])
+        other += sum(size(b[ln][f]) for ln in ("ln1", "ln2") for f in ("scale", "bias"))
+    other += size(params["pos"])
+    other += sum(size(params["ln_out"][f]) for f in ("scale", "bias"))
+    return {
+        "square": sq,
+        "non_square": nonsq,
+        "head": size(params["head"]),
+        "emb": size(params["emb"]),
+        "other": other,
+    }

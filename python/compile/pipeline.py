@@ -1,0 +1,301 @@
+"""The `make artifacts` entry point: train -> compress -> export everything.
+
+Runs ONCE at build time; the rust binary is self-contained afterwards.
+
+    python -m compile.pipeline [--smoke] [--only <model-substr>] [--force]
+
+Outputs (all under artifacts/):
+    data/vocab.json        word list (token id = index)
+    data/corpus.bin        i32 LE token stream (fig3 / bench prompts)
+    data/tasks.json        benchmark suites (Table 5 analogs)
+    ckpt/<name>.npz        trained parameter cache (skip re-training)
+    models/<name>.rkv[.json]        fp16 checkpoints + manifests
+    models/<name>-int8.rkv[.json]   int8 checkpoints
+    hlo/<name>_{timemix,chanmix,head}.hlo.txt   AOT components
+    training_report.json   loss curves, sparsity profiles, predictor stats
+
+Environment: RWKV_LITE_STEPS_SCALE (float, default 1.0) scales every
+training length; --smoke = scale 0.02 + tiny model only (used by pytest).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from . import aot, export, train
+from .common import ModelConfig, artifacts_dir, rwkv_config, transformer_config, save_json
+from .compress import heads, quant, sparsity, svd
+from .data import corpus
+from .models import rwkv, transformer
+
+SIZES = ("tiny", "small", "medium")
+
+PRETRAIN_STEPS = {"tiny": 300, "small": 350, "medium": 300, "regular": 200}
+CONTINUAL_STEPS = {"tiny": 150, "small": 180, "medium": 150, "regular": 100}
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint cache
+# ---------------------------------------------------------------------------
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, list):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if isinstance(node, dict):
+            keys = list(node.keys())
+            if keys and all(k.isdigit() for k in keys):
+                return [fix(node[str(i)]) for i in range(len(keys))]
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+def save_ckpt(path: str, params: Any) -> None:
+    np.savez_compressed(path, **_flatten(params))
+
+
+def load_ckpt(path: str) -> Any:
+    with np.load(path) as z:
+        return _unflatten({k: z[k] for k in z.files})
+
+
+# ---------------------------------------------------------------------------
+# Pipeline stages
+# ---------------------------------------------------------------------------
+
+
+class Pipeline:
+    def __init__(self, scale: float = 1.0, only: Optional[str] = None, force: bool = False,
+                 sizes=SIZES, with_regular: bool = False):
+        self.scale = scale
+        self.only = only
+        self.force = force
+        self.sizes = list(sizes)
+        if with_regular:
+            self.sizes.append("regular")
+        self.report: Dict[str, Any] = {"models": {}}
+        self.ckpt_dir = artifacts_dir("ckpt")
+        self.model_dir = artifacts_dir("models")
+        self.hlo_dir = artifacts_dir("hlo")
+        self.data_dir = artifacts_dir("data")
+
+    def steps(self, table: Dict[str, int], size: str) -> int:
+        return max(5, int(table[size] * self.scale))
+
+    def want(self, name: str) -> bool:
+        return self.only is None or self.only in name
+
+    # -- data ---------------------------------------------------------------
+
+    def build_data(self):
+        self.vocab, self.classes = corpus.build_vocab()
+        save_json(os.path.join(self.data_dir, "vocab.json"), {"words": self.vocab.words})
+        tok_path = os.path.join(self.data_dir, "corpus.bin")
+        n_tok = int(200_000 * max(0.05, min(1.0, self.scale)))
+        self.tokens = corpus.training_tokens(self.vocab, self.classes, n_tok)
+        self.tokens.astype("<i4").tofile(tok_path)
+        n_task = max(20, int(200 * min(1.0, self.scale)))
+        self.tasks = corpus.make_tasks(self.vocab, self.classes, n_per_task=n_task)
+        save_json(os.path.join(self.data_dir, "tasks.json"), self.tasks)
+        print(f"[data] corpus={len(self.tokens)} tokens, tasks x{n_task}", flush=True)
+
+    # -- training -----------------------------------------------------------
+
+    def train_or_load(self, name: str, cfg: ModelConfig, init_params, forward_fn, steps: int,
+                      base_lr: float = 3e-3) -> Any:
+        path = os.path.join(self.ckpt_dir, f"{name}.npz")
+        if os.path.exists(path) and not self.force:
+            print(f"[train] {name}: cached", flush=True)
+            return load_ckpt(path)
+        t0 = time.time()
+        params, losses = train.train_lm(
+            forward_fn, init_params, cfg, self.tokens, steps=steps, tag=name, base_lr=base_lr
+        )
+        save_ckpt(path, params)
+        self.report["models"].setdefault(name, {})["loss_curve"] = losses[:: max(1, len(losses) // 100)]
+        self.report["models"][name]["train_seconds"] = time.time() - t0
+        return params
+
+    # -- compression attachments ---------------------------------------------
+
+    def attach(self, name: str, params, cfg: ModelConfig):
+        """Predictors + shadows + hierarchical head for an RWKV model."""
+        acts = sparsity.collect_activations(params, cfg, self.tokens,
+                                            n_samples=max(512, int(5000 * min(1.0, self.scale))))
+        profile = sparsity.sparsity_profile(acts)
+        preds = sparsity.init_predictors(cfg)
+        epochs = max(3, int(50 * min(1.0, self.scale)))
+        preds = sparsity.train_predictors(preds, acts, epochs=epochs, verbose=False)
+        shadows = sparsity.build_shadow(params, bits=1)
+        shadows4 = sparsity.build_shadow(params, bits=4)
+        stats = sparsity.ensemble_stats(params, cfg, preds, shadows, acts)
+        centroids, assign = heads.cluster_embeddings(params)
+        hiddens = heads.sample_hiddens(params, cfg, self.tokens,
+                                       n_samples=max(512, int(4000 * min(1.0, self.scale))))
+        h1 = heads.train_cluster_head(params, cfg, assign, hiddens,
+                                      epochs=max(3, int(30 * min(1.0, self.scale))), verbose=False)
+        coverage = heads.head_coverage(params, cfg, h1, assign, hiddens)
+        self.report["models"].setdefault(name, {}).update(
+            sparsity_profile=profile,
+            predictor_stats=stats,
+            hh_coverage=coverage,
+        )
+        print(f"[attach] {name}: sparsity={['%.2f' % s for s in profile]}, "
+              f"hh_cov={coverage['argmax_coverage']:.2f}", flush=True)
+        return preds, (shadows, shadows4), {"h1": h1, "assign": assign}
+
+    def export_rwkv(self, name: str, params, cfg: ModelConfig, preds, shadows, hh):
+        shadows1, shadows4 = shadows
+        for precision in ("f16", "int8"):
+            suffix = "" if precision == "f16" else "-int8"
+            export.export_model(
+                self.model_dir, name + suffix, params, cfg, precision,
+                predictors=preds, shadows=shadows1, hier_head=hh, shadows4=shadows4,
+                extra_manifest={"hlo": self.hlo_manifests.get(name, {}),
+                                "arch_family": "rwkv"},
+            )
+        print(f"[export] {name} (+int8)", flush=True)
+
+    # -- main ----------------------------------------------------------------
+
+    def run(self):
+        t_start = time.time()
+        self.build_data()
+        self.hlo_manifests: Dict[str, Any] = {}
+
+        for size in self.sizes:
+            # 1. vanilla RWKV (= the paper's inhouse-vanilla; we have no
+            #    official 1.1T-token checkpoints — DESIGN.md §2).
+            vname = f"rwkv-vanilla-{size}"
+            if self.want(vname):
+                cfg = rwkv_config(size)
+                params = self.train_or_load(vname, cfg, rwkv.init(cfg, seed=1),
+                                            rwkv.forward, self.steps(PRETRAIN_STEPS, size))
+                self.hlo_manifests[vname] = aot.lower_model_components(
+                    params, cfg, vname, self.hlo_dir)
+                preds, shadows, hh = self.attach(vname, params, cfg)
+                self.export_rwkv(vname, params, cfg, preds, shadows, hh)
+                self._eval(vname, params, cfg, rwkv.forward)
+                vanilla_params, vanilla_cfg = params, cfg
+
+            # 2. RWKV-ours: SVD(k=8) decomposition + continual training.
+            oname = f"rwkv-ours-{size}"
+            if self.want(oname):
+                cfg8 = rwkv_config(size, svd_rank_div=8)
+                ckpt = os.path.join(self.ckpt_dir, f"{oname}.npz")
+                if os.path.exists(ckpt) and not self.force:
+                    params = load_ckpt(ckpt)
+                    print(f"[train] {oname}: cached", flush=True)
+                else:
+                    init_p = svd.decompose_model(vanilla_params, cfg8)
+                    params = self.train_or_load(oname, cfg8, init_p, rwkv.forward,
+                                                self.steps(CONTINUAL_STEPS, size), base_lr=1e-3)
+                self.hlo_manifests[oname] = aot.lower_model_components(
+                    params, cfg8, oname, self.hlo_dir)
+                preds, shadows, hh = self.attach(oname, params, cfg8)
+                self.export_rwkv(oname, params, cfg8, preds, shadows, hh)
+                self._eval(oname, params, cfg8, rwkv.forward)
+
+            # 3. inhouse-ours: enhanced SVD (Eq. 2), pretrained from scratch.
+            pname = f"rwkv-pre-{size}"
+            if self.want(pname):
+                cfge = rwkv_config(size, svd_rank_div=8, enhanced_svd=True)
+                params = self.train_or_load(pname, cfge, rwkv.init(cfge, seed=2),
+                                            rwkv.forward, self.steps(PRETRAIN_STEPS, size))
+                self.hlo_manifests[pname] = aot.lower_model_components(
+                    params, cfge, pname, self.hlo_dir)
+                preds, shadows, hh = self.attach(pname, params, cfge)
+                self.export_rwkv(pname, params, cfge, preds, shadows, hh)
+                self._eval(pname, params, cfge, rwkv.forward)
+
+            # 4. transformer baseline (OPT/GPT-Neo/TinyLlama stand-in).
+            tname = f"gpt-{size}"
+            if self.want(tname):
+                tcfg = transformer_config(size)
+                params = self.train_or_load(tname, tcfg, transformer.init(tcfg, seed=3),
+                                            transformer.forward, self.steps(PRETRAIN_STEPS, size))
+                for precision in ("f16", "int8"):
+                    suffix = "" if precision == "f16" else "-int8"
+                    export.export_transformer(self.model_dir, tname + suffix, params, tcfg,
+                                              precision, extra_manifest={"arch_family": "transformer"})
+                self._eval(tname, params, tcfg, transformer.forward)
+                print(f"[export] {tname} (+int8)", flush=True)
+
+        # 5. SVD factor sweep (§B.4): k in {4, 16} on the small model.
+        for k in (4, 16):
+            sname = f"rwkv-ours-k{k}-small"
+            if self.want(sname) and "small" in self.sizes:
+                cfgk = rwkv_config("small", svd_rank_div=k)
+                ckpt = os.path.join(self.ckpt_dir, f"{sname}.npz")
+                if os.path.exists(ckpt) and not self.force:
+                    params = load_ckpt(ckpt)
+                else:
+                    base = load_ckpt(os.path.join(self.ckpt_dir, "rwkv-vanilla-small.npz"))
+                    init_p = svd.decompose_model(base, cfgk)
+                    params = self.train_or_load(sname, cfgk, init_p, rwkv.forward,
+                                                self.steps(CONTINUAL_STEPS, "small"), base_lr=1e-3)
+                self.hlo_manifests[sname] = aot.lower_model_components(params, cfgk, sname, self.hlo_dir)
+                preds, shadows, hh = self.attach(sname, params, cfgk)
+                self.export_rwkv(sname, params, cfgk, preds, shadows, hh)
+                self._eval(sname, params, cfgk, rwkv.forward)
+
+        save_json(os.path.join(artifacts_dir(), "training_report.json"), self.report)
+        # Build stamp consumed by the Makefile's incremental check.
+        with open(os.path.join(artifacts_dir(), ".stamp"), "w") as f:
+            f.write(f"{time.time()}\n")
+        print(f"[pipeline] done in {time.time() - t_start:.0f}s", flush=True)
+
+    def _eval(self, name: str, params, cfg: ModelConfig, forward_fn):
+        sub = {"lambada_syn": self.tasks["lambada_syn"][:100]}
+        res = train.eval_tasks(forward_fn, params, cfg, sub)
+        self.report["models"].setdefault(name, {})["eval"] = res
+        print(f"[eval] {name}: {res}", flush=True)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny-only, 2%% steps (tests)")
+    ap.add_argument("--only", default=None, help="substring filter on model names")
+    ap.add_argument("--force", action="store_true", help="retrain even if cached")
+    ap.add_argument("--regular", action="store_true", help="also build the 3B-analog size")
+    args = ap.parse_args(argv)
+    scale = float(os.environ.get("RWKV_LITE_STEPS_SCALE", "1.0"))
+    sizes = SIZES
+    if args.smoke:
+        scale, sizes = 0.02, ("tiny",)
+    Pipeline(scale=scale, only=args.only, force=args.force, sizes=sizes,
+             with_regular=args.regular).run()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

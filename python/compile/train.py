@@ -1,0 +1,192 @@
+"""Build-time trainer (substrate S6): AdamW + cosine schedule, pure JAX.
+
+No optax/flax in this environment, so the optimizer is implemented here.
+Training is CPU-scale by design (DESIGN.md §2): the paper's techniques are
+architecture-level mechanisms; they demonstrate at scaled dims in minutes.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, rng
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params: Params, grads: Params, opt: Dict[str, Any], lr, b1=0.9, b2=0.99, eps=1e-8, wd=1e-4):
+    t = opt["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total_steps, base=3e-3, warmup=20, floor=0.1):
+    w = jnp.minimum(1.0, (step + 1) / warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1, total_steps - warmup), 0.0, 1.0)
+    return base * w * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+
+
+# ---------------------------------------------------------------------------
+# LM training loop
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(forward_fn: Callable, params: Params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    """Next-token cross entropy over a (B, T+1) token batch."""
+    inp, tgt = batch[:, :-1], batch[:, 1:]
+    logits = forward_fn(params, cfg, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def batches(tokens: np.ndarray, bsz: int, seqlen: int, steps: int, seed: int):
+    g = rng(seed)
+    n = len(tokens) - (seqlen + 1)
+    for _ in range(steps):
+        idx = g.integers(0, n, size=bsz)
+        yield np.stack([tokens[i : i + seqlen + 1] for i in idx]).astype(np.int32)
+
+
+def train_lm(
+    forward_fn: Callable,
+    params: Params,
+    cfg: ModelConfig,
+    tokens: np.ndarray,
+    steps: int,
+    bsz: int = 16,
+    seqlen: int = 64,
+    base_lr: float = 3e-3,
+    seed: int = 42,
+    log_every: int = 50,
+    tag: str = "",
+) -> Tuple[Params, List[float]]:
+    """Train (or continually train) an LM; returns params + loss curve."""
+    opt = adamw_init(params)
+
+    @jax.jit
+    def update(params, opt, batch, step):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(forward_fn, p, cfg, batch))(params)
+        # global-norm clip at 1.0
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads))
+        )
+        scale = jnp.minimum(1.0, 1.0 / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        lr = cosine_lr(step, steps, base=base_lr)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    losses: List[float] = []
+    t0 = time.time()
+    for i, batch in enumerate(batches(tokens, bsz, seqlen, steps, seed)):
+        params, opt, loss = update(params, opt, batch, jnp.asarray(i))
+        losses.append(float(loss))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(
+                f"  [{tag}] step {i:4d}/{steps} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Evaluation (python-side sanity; the reported numbers come from rust)
+# ---------------------------------------------------------------------------
+
+
+def _pad_batch(seqs: List[List[int]], pad: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    t = max(len(s) for s in seqs)
+    out = np.full((len(seqs), t), pad, np.int32)
+    lens = np.zeros(len(seqs), np.int32)
+    for i, s in enumerate(seqs):
+        out[i, : len(s)] = s
+        lens[i] = len(s)
+    return out, lens
+
+
+def eval_cloze(forward_fn, params, cfg: ModelConfig, examples: List[dict], bsz: int = 64):
+    """Final-word prediction: returns (accuracy, perplexity-of-gold)."""
+    fwd = jax.jit(lambda p, t: forward_fn(p, cfg, t))
+    correct, nll, n = 0, 0.0, 0
+    for i in range(0, len(examples), bsz):
+        chunk = examples[i : i + bsz]
+        toks, lens = _pad_batch([e["ctx"] for e in chunk])
+        logits = np.asarray(fwd(params, toks))
+        for j, e in enumerate(chunk):
+            lg = logits[j, lens[j] - 1]
+            lp = lg - _logsumexp(lg)
+            correct += int(np.argmax(lg) == e["gold"])
+            nll += -float(lp[e["gold"]])
+            n += 1
+    return correct / n, math.exp(nll / n)
+
+
+def eval_choice(forward_fn, params, cfg: ModelConfig, examples: List[dict], bsz: int = 64):
+    """Multiple-choice by total log-prob of the continuation."""
+    fwd = jax.jit(lambda p, t: forward_fn(p, cfg, t))
+    flat: List[List[int]] = []
+    spans: List[Tuple[int, int]] = []  # (ctx_len, total_len)
+    for e in examples:
+        for c in e["choices"]:
+            flat.append(e["ctx"] + c)
+            spans.append((len(e["ctx"]), len(e["ctx"]) + len(c)))
+    scores = np.zeros(len(flat))
+    for i in range(0, len(flat), bsz):
+        toks, lens = _pad_batch(flat[i : i + bsz])
+        logits = np.asarray(fwd(params, toks))
+        for j in range(len(toks)):
+            cl, tl = spans[i + j]
+            for pos in range(cl - 1, tl - 1):
+                lg = logits[j, pos]
+                lp = lg - _logsumexp(lg)
+                scores[i + j] += lp[toks[j, pos + 1]]
+    correct, k = 0, 0
+    for e in examples:
+        nc = len(e["choices"])
+        pred = int(np.argmax(scores[k : k + nc]))
+        correct += int(pred == e["label"])
+        k += nc
+    return correct / len(examples)
+
+
+def eval_tasks(forward_fn, params, cfg: ModelConfig, tasks: Dict[str, List[dict]]):
+    out = {}
+    for name, examples in tasks.items():
+        if "choices" in examples[0]:
+            out[name] = {"acc": eval_choice(forward_fn, params, cfg, examples)}
+        else:
+            acc, ppl = eval_cloze(forward_fn, params, cfg, examples)
+            out[name] = {"acc": acc, "ppl": ppl}
+    return out
+
+
+def _logsumexp(x: np.ndarray) -> float:
+    m = x.max()
+    return m + math.log(np.exp(x - m).sum())

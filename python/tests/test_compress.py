@@ -1,0 +1,192 @@
+"""Compression pipeline correctness: SVD, quantizers, k-means, predictors,
+cluster heads."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.common import ModelConfig
+from compile.compress import heads, quant, sparsity, svd
+from compile.models import rwkv
+
+TINY = ModelConfig(arch="rwkv", variant="tiny", dim=32, layers=2, vocab=64, head_size=8)
+
+
+# ---------------------------------------------------------------------------
+# SVD
+# ---------------------------------------------------------------------------
+
+
+def test_svd_exact_for_lowrank_matrix(rng):
+    a = rng.standard_normal((24, 4)).astype(np.float32)
+    b = rng.standard_normal((4, 24)).astype(np.float32)
+    w = a @ b  # rank 4
+    l, r = svd.decompose(w, 4)
+    assert svd.reconstruction_error(w, l, r) < 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_svd_error_decreases_with_rank(seed):
+    g = np.random.default_rng(seed)
+    w = g.standard_normal((32, 32)).astype(np.float32)
+    errs = [svd.reconstruction_error(w, *svd.decompose(w, r)) for r in (2, 8, 16, 32)]
+    assert all(errs[i] >= errs[i + 1] - 1e-6 for i in range(len(errs) - 1))
+    assert errs[-1] < 1e-4  # full rank reconstructs
+
+
+def test_decompose_model_structure():
+    p = rwkv.init(TINY, 0)
+    cfg8 = ModelConfig(arch="rwkv", variant="tiny", dim=32, layers=2, vocab=64,
+                       head_size=8, svd_rank_div=4)
+    dp = svd.decompose_model(p, cfg8)
+    blk = dp["blocks"][0]
+    for k in ("wr", "wk", "wv", "wg"):
+        assert set(blk["att"][k].keys()) == {"l", "r"}
+        assert blk["att"][k]["l"].shape == (32, 8)
+    assert "w" in blk["att"]["wo"]  # wo NOT decomposed (paper §3.1)
+    assert set(blk["ffn"]["wr"].keys()) == {"l", "r"}
+
+
+def test_decomposed_model_approximates_dense():
+    """With generous rank, the decomposed model's logits are close."""
+    p = rwkv.init(TINY, 1)
+    cfg2 = ModelConfig(arch="rwkv", variant="tiny", dim=32, layers=2, vocab=64,
+                       head_size=8, svd_rank_div=2)
+    dp = svd.decompose_model(p, cfg2)
+    toks = np.array([[3, 9, 12]], np.int32)
+    dense = np.asarray(rwkv.forward(p, TINY, toks))
+    low = np.asarray(rwkv.forward(dp, cfg2, toks))
+    # rank D/2 keeps most of the spectrum of near-orthogonal inits
+    assert np.abs(dense - low).mean() < 0.5 * np.abs(dense).mean() + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_int_quant_bounds_and_error(bits, seed):
+    g = np.random.default_rng(seed)
+    w = g.standard_normal((16, 8)).astype(np.float32)
+    q, scale = quant.int_quant(w, bits)
+    qmax = (1 << (bits - 1)) - 1
+    assert np.abs(q).max() <= qmax
+    err = quant.quant_error(w, bits)
+    assert err < (0.7 if bits == 2 else 0.3 if bits == 4 else 0.02)
+
+
+def test_int_quant_error_monotone_in_bits(rng):
+    w = rng.standard_normal((32, 16)).astype(np.float32)
+    errs = [quant.quant_error(w, b) for b in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_sign_quant_round_trip(rng):
+    w = rng.standard_normal((24, 8)).astype(np.float32)
+    packed, scale = quant.sign_quant(w)
+    back = quant.sign_dequant(packed, scale, 24)
+    assert back.shape == w.shape
+    # signs preserved wherever w != 0
+    assert np.all(np.sign(back)[w != 0] == np.sign(w)[w != 0])
+    # scale is the mean |w| per column
+    np.testing.assert_allclose(np.abs(back), np.tile(scale, (24, 1)), rtol=1e-6)
+
+
+def test_nibble_quant_round_trip(rng):
+    for rows in (10, 11):  # even + odd (pad path)
+        w = rng.standard_normal((rows, 6)).astype(np.float32)
+        packed, scale = quant.nibble_quant(w)
+        assert packed.dtype == np.uint8
+        assert packed.shape == ((rows + 1) // 2, 6)
+        back = quant.nibble_dequant(packed, scale, rows)
+        assert back.shape == w.shape
+        # 4-bit symmetric: error bounded by scale/2 per element
+        assert np.all(np.abs(back - w) <= scale / 2 + 1e-6)
+
+
+def test_nibble_more_accurate_than_sign(rng):
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    p4, s4 = quant.nibble_quant(w)
+    b4 = quant.nibble_dequant(p4, s4, 64)
+    p1, s1 = quant.sign_quant(w)
+    b1 = quant.sign_dequant(p1, s1, 64)
+    e4 = np.linalg.norm(w - b4)
+    e1 = np.linalg.norm(w - b1)
+    assert e4 < e1
+
+
+def test_sign_quant_preserves_score_correlation(rng):
+    """The 1-bit predictor works because x@W and x@sign(W) correlate."""
+    w = rng.standard_normal((64, 128)).astype(np.float32)
+    packed, scale = quant.sign_quant(w)
+    wsign = quant.sign_dequant(packed, scale, 64)
+    x = rng.standard_normal(64).astype(np.float32)
+    a, b = x @ w, x @ wsign
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.5, corr
+
+
+# ---------------------------------------------------------------------------
+# K-means + hierarchical head
+# ---------------------------------------------------------------------------
+
+
+def test_kmeans_separates_blobs(rng):
+    blobs = np.concatenate([
+        rng.normal(0, 0.1, (30, 4)),
+        rng.normal(5, 0.1, (30, 4)),
+        rng.normal(-5, 0.1, (30, 4)),
+    ]).astype(np.float32)
+    c, assign = heads.kmeans(blobs, 3, seed=0)
+    # each blob maps to exactly one cluster
+    for start in (0, 30, 60):
+        assert len(set(assign[start : start + 30].tolist())) == 1
+    assert len(set(assign.tolist())) == 3
+
+
+def test_kmeans_assignment_covers_all_points(rng):
+    x = rng.standard_normal((100, 8)).astype(np.float32)
+    c, assign = heads.kmeans(x, 10, seed=1)
+    assert assign.shape == (100,)
+    assert assign.min() >= 0 and assign.max() < 10
+
+
+# ---------------------------------------------------------------------------
+# Sparsity predictors
+# ---------------------------------------------------------------------------
+
+
+def test_collect_activations_shapes():
+    p = rwkv.init(TINY, 2)
+    toks = np.arange(400, dtype=np.int32) % 64
+    acts = sparsity.collect_activations(p, TINY, toks, n_samples=128, seqlen=32)
+    assert len(acts) == TINY.layers
+    assert acts[0]["x"].shape == (128, 32)
+    assert acts[0]["mask"].shape == (128, int(32 * 3.5))
+
+
+def test_predictor_training_beats_random():
+    p = rwkv.init(TINY, 3)
+    toks = np.arange(800, dtype=np.int32) % 64
+    acts = sparsity.collect_activations(p, TINY, toks, n_samples=256, seqlen=32)
+    preds = sparsity.init_predictors(TINY)
+    trained = sparsity.train_predictors(preds, acts, epochs=20, bsz=128, verbose=False)
+    shadows = sparsity.build_shadow(p, bits=1)
+    stats = sparsity.ensemble_stats(p, TINY, trained, shadows, acts, t_mlp=0.5, t_quant=0.8)
+    for layer_stats in stats["per_layer"]:
+        ens = layer_stats["ensemble"]
+        # union recall must be >= each member's recall
+        assert ens["recall"] >= layer_stats["mlp"]["recall"] - 1e-9
+        assert ens["recall"] >= layer_stats["quant"]["recall"] - 1e-9
+        # and materially better than chance coverage at this kept rate
+        assert ens["recall"] > ens["kept"] * 0.9
+
+
+def test_ensemble_union_property(rng):
+    """max(P_mlp, P_quant) == OR of masks (paper Eq. 5)."""
+    a = rng.random((10, 20)) > 0.7
+    b = rng.random((10, 20)) > 0.7
+    assert np.array_equal(np.maximum(a, b), a | b)

@@ -1,0 +1,99 @@
+"""Synthetic corpus (the Pile/lambada substitution): determinism, Zipfian
+long tail, task well-formedness."""
+
+import numpy as np
+import pytest
+
+from compile.common import VOCAB_SIZE
+from compile.data import corpus
+
+
+@pytest.fixture(scope="module")
+def vc():
+    return corpus.build_vocab()
+
+
+def test_vocab_size_and_specials(vc):
+    vocab, classes = vc
+    assert len(vocab) == VOCAB_SIZE
+    assert vocab.words[corpus.PAD] == "<pad>"
+    assert vocab.words[corpus.UNK] == "<unk>"
+    assert vocab.words[corpus.BOS] == "<bos>"
+    assert vocab.words[corpus.EOS] == "<eos>"
+    # no duplicate words
+    assert len(set(vocab.words)) == len(vocab.words)
+
+
+def test_vocab_deterministic():
+    v1, _ = corpus.build_vocab()
+    v2, _ = corpus.build_vocab()
+    assert v1.words == v2.words
+
+
+def test_training_stream_deterministic(vc):
+    vocab, classes = vc
+    a = corpus.training_tokens(vocab, classes, 5000, seed=11)
+    b = corpus.training_tokens(vocab, classes, 5000, seed=11)
+    np.testing.assert_array_equal(a, b)
+    c = corpus.training_tokens(vocab, classes, 5000, seed=12)
+    assert not np.array_equal(a, c)
+
+
+def test_stream_in_vocab_and_no_unk(vc):
+    vocab, classes = vc
+    toks = corpus.training_tokens(vocab, classes, 20000)
+    assert toks.min() >= 0 and toks.max() < VOCAB_SIZE
+    # the generator should never emit OOV
+    assert (toks == corpus.UNK).sum() == 0
+
+
+def test_long_tail_distribution(vc):
+    """Zipfian usage: a small head of tokens covers most of the stream —
+    the property the embedding cache (§3.3) exploits."""
+    vocab, classes = vc
+    toks = corpus.training_tokens(vocab, classes, 50000)
+    counts = np.bincount(toks, minlength=VOCAB_SIZE)
+    order = np.argsort(-counts)
+    top64 = counts[order[:64]].sum() / counts.sum()
+    assert top64 > 0.6, f"top-64 coverage {top64:.2f}"
+    # and hundreds of tokens are never used (reserved tail)
+    assert (counts == 0).sum() > 100
+
+
+def test_lambada_answer_in_context(vc):
+    """The gold word must appear in the distant context (lambada shape)."""
+    vocab, classes = vc
+    tasks = corpus.make_tasks(vocab, classes, n_per_task=30, seed=5)
+    for e in tasks["lambada_syn"]:
+        assert e["gold"] in e["ctx"], "answer must be recoverable from context"
+        # the answer is not trivially the previous token
+        assert e["ctx"][-1] != e["gold"]
+
+
+def test_choice_tasks_well_formed(vc):
+    vocab, classes = vc
+    tasks = corpus.make_tasks(vocab, classes, n_per_task=25, seed=6)
+    for name in ("cloze_syn", "assoc_syn", "social_syn", "agree_syn"):
+        for e in tasks[name]:
+            assert 0 <= e["label"] < len(e["choices"])
+            assert len(set(tuple(c) for c in e["choices"])) == len(e["choices"]), name
+
+
+def test_tasks_use_held_out_seed(vc):
+    vocab, classes = vc
+    t1 = corpus.make_tasks(vocab, classes, n_per_task=10, seed=1234)
+    t2 = corpus.make_tasks(vocab, classes, n_per_task=10, seed=1234)
+    assert t1["lambada_syn"][0] == t2["lambada_syn"][0]
+
+
+def test_assoc_affinity_is_learnable(vc):
+    """obj->place affinity is consistent across documents (world
+    knowledge); the assoc task gold always matches the grammar's map."""
+    vocab, classes = vc
+    g = corpus.Grammar(vocab, classes, seed=9)
+    obj = classes["object"][0]
+    assert g.obj_place[obj] == g.obj_place[obj]
+    ctx, choices, label = g.task_assoc()
+    gold = choices[label][0]
+    obj_word = ctx[1]
+    assert g.obj_place[obj_word] == gold

@@ -1,0 +1,114 @@
+"""`.rkv` checkpoint format: round trip, alignment, naming contract."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import export
+from compile.common import ModelConfig
+from compile.models import rwkv
+
+TINY = ModelConfig(arch="rwkv", variant="tiny", dim=32, layers=2, vocab=64, head_size=8)
+
+
+def test_round_trip_basic(tmp_path, rng):
+    tensors = {
+        "a": rng.standard_normal((4, 8)).astype(np.float32),
+        "b": rng.standard_normal(16).astype(np.float16),
+        "c": rng.integers(-100, 100, (3, 5)).astype(np.int8),
+        "d": rng.integers(0, 255, 7).astype(np.uint8),
+        "e": rng.integers(0, 10, 9).astype(np.int32),
+    }
+    path = str(tmp_path / "t.rkv")
+    export.write_rkv(path, tensors)
+    back = export.read_rkv(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_tensors=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_round_trip_random_shapes(n_tensors, seed):
+    g = np.random.default_rng(seed)
+    tensors = {}
+    for i in range(n_tensors):
+        ndim = int(g.integers(1, 4))
+        shape = tuple(int(g.integers(1, 9)) for _ in range(ndim))
+        tensors[f"t{i}"] = g.standard_normal(shape).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.rkv")
+        export.write_rkv(path, tensors)
+        back = export.read_rkv(path)
+        for k, v in tensors.items():
+            np.testing.assert_array_equal(back[k], v)
+
+
+def test_alignment_is_64(tmp_path, rng):
+    tensors = {"a": rng.standard_normal(3).astype(np.float32),
+               "b": rng.standard_normal(5).astype(np.float32)}
+    path = str(tmp_path / "t.rkv")
+    export.write_rkv(path, tensors)
+    import struct
+
+    raw = open(path, "rb").read()
+    (data_offset,) = struct.unpack_from("<Q", raw, 12)
+    assert data_offset % 64 == 0
+
+
+def test_model_tensor_naming_contract(tmp_path):
+    """The rust engine depends on these exact names (weights.rs)."""
+    p = rwkv.init(TINY, 0)
+    t = export.model_tensors(p, TINY, precision="f16")
+    for required in [
+        "emb", "head", "ln0.scale", "ln_out.bias",
+        "b0.ln1.scale", "b0.att.mu_r", "b0.att.decay", "b0.att.first",
+        "b0.att.wr.w", "b0.att.wo.w", "b0.att.lnx.scale",
+        "b0.ffn.mu_k", "b0.ffn.wr.w", "b0.ffn.wk_t", "b0.ffn.wv",
+        "b1.ln2.bias",
+    ]:
+        assert required in t, required
+    # transposed layouts
+    assert t["head"].shape == (64, 32)
+    assert t["b0.ffn.wk_t"].shape == (int(32 * 3.5), 32)
+    # decay precomputed in (0, 1)
+    assert (t["b0.att.decay"] > 0).all() and (t["b0.att.decay"] < 1).all()
+
+
+def test_int8_export_has_scales(tmp_path, monkeypatch):
+    monkeypatch.setattr(export, "_MATRIX_MIN", 1)  # tiny test dims
+    p = rwkv.init(TINY, 1)
+    t = export.model_tensors(p, TINY, precision="int8")
+    assert t["head"].dtype == np.int8
+    assert "head.scale" in t and t["head.scale"].shape == (64,)
+    assert t["b0.ffn.wk_t"].dtype == np.int8
+    assert t["b0.ffn.wk_t.scale"].shape == (int(32 * 3.5),)
+
+
+def test_int8_transposed_quant_consistency(rng, monkeypatch):
+    """Quantize-then-transpose must equal per-row scales of the transpose."""
+    monkeypatch.setattr(export, "_MATRIX_MIN", 1)
+    w = rng.standard_normal((32, 16)).astype(np.float32)
+    t = {}
+    export._emit(t, "x", w, "int8", transpose=True)
+    q, scale = t["x"], t["x.scale"]
+    assert q.shape == (16, 32)
+    back = q.astype(np.float32) * scale[:, None]
+    np.testing.assert_allclose(back, w.T, atol=float(np.abs(w).max() / 100))
+
+
+def test_export_model_writes_manifest(tmp_path):
+    p = rwkv.init(TINY, 2)
+    path = export.export_model(str(tmp_path), "m", p, TINY, "f16")
+    assert os.path.exists(path)
+    import json
+
+    man = json.load(open(tmp_path / "m.json"))
+    assert man["config"]["dim"] == 32
+    assert man["runtime"]["hh_p_min"] == 0.95

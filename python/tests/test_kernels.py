@@ -1,0 +1,155 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes (the session guide's core signal): every
+kernel must match its ref within fp32 tolerance across random shapes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+P = kernels.get("pallas")
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def fa(g, *shape):
+    return g.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4, 8]),
+    s=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wkv5_step_matches_ref(h, s, seed):
+    g = np.random.default_rng(seed)
+    r, k, v = fa(g, h, s), fa(g, h, s), fa(g, h, s)
+    w = np.exp(-np.exp(fa(g, h, s)))
+    u = fa(g, h, s)
+    state = fa(g, h, s, s)
+    o1, s1 = ref.wkv5_step(r, k, v, w, u, state)
+    o2, s2 = P.wkv5_step(r, k, v, w, u, state)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), **TOL)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t=st.sampled_from([1, 3, 7, 16]),
+    h=st.sampled_from([1, 4]),
+    s=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wkv5_seq_matches_ref(t, h, s, seed):
+    g = np.random.default_rng(seed)
+    r, k, v = fa(g, t, h, s), fa(g, t, h, s), fa(g, t, h, s)
+    w = np.exp(-np.exp(fa(g, h, s)))
+    u = fa(g, h, s)
+    state = fa(g, h, s, s)
+    o1, s1 = ref.wkv5_seq(r, k, v, w, u, state)
+    o2, s2 = P.wkv5_seq(r, k, v, w, u, state)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), **TOL)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), **TOL)
+
+
+def test_wkv5_seq_equals_iterated_steps():
+    g = np.random.default_rng(3)
+    t, h, s = 5, 2, 8
+    r, k, v = fa(g, t, h, s), fa(g, t, h, s), fa(g, t, h, s)
+    w = np.exp(-np.exp(fa(g, h, s)))
+    u = fa(g, h, s)
+    state = fa(g, h, s, s)
+    outs_seq, final_seq = ref.wkv5_seq(r, k, v, w, u, state)
+    st_ = state
+    for i in range(t):
+        o, st_ = ref.wkv5_step(r[i], k[i], v[i], w, u, st_)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs_seq[i]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(final_seq), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.sampled_from([8, 32, 64]),
+    fmul=st.sampled_from([2, 4, 7]),
+    masked=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sqrelu_ffn_matches_ref(d, fmul, masked, seed):
+    g = np.random.default_rng(seed)
+    f = d * fmul // 2 * 2
+    x = fa(g, d)
+    wk, wv = fa(g, d, f), fa(g, f, d)
+    mask = (g.random(f) < 0.4).astype(np.float32) if masked else None
+    a = ref.sqrelu_ffn(x, wk, wv, mask)
+    b = P.sqrelu_ffn(x, wk, wv, mask)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-2)
+
+
+def test_ffn_mask_zeroes_neurons():
+    g = np.random.default_rng(1)
+    d, f = 16, 32
+    x, wk, wv = fa(g, d), fa(g, d, f), fa(g, f, d)
+    zero_mask = np.zeros(f, np.float32)
+    out = np.asarray(ref.sqrelu_ffn(x, wk, wv, zero_mask))
+    np.testing.assert_allclose(out, np.zeros(d), atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 128]),
+    kdiv=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lowrank_matches_ref(m, kdiv, seed):
+    g = np.random.default_rng(seed)
+    r = max(1, m // kdiv)
+    x, l, rr = fa(g, m), fa(g, m, r), fa(g, r, m)
+    np.testing.assert_allclose(
+        np.asarray(ref.lowrank_proj(x, l, rr)), np.asarray(P.lowrank_proj(x, l, rr)), **TOL
+    )
+    d = fa(g, m)
+    np.testing.assert_allclose(
+        np.asarray(ref.enhanced_lowrank_proj(x, l, rr, d)),
+        np.asarray(P.enhanced_lowrank_proj(x, l, rr, d)),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 64]),
+    n=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int8_matvec_matches_ref(m, n, seed):
+    g = np.random.default_rng(seed)
+    x = fa(g, m)
+    wq = g.integers(-127, 128, (m, n)).astype(np.int8)
+    scale = (g.random(n) + 0.05).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(ref.int8_matvec(x, wq, scale)),
+        np.asarray(P.int8_matvec(x, wq, scale)),
+        rtol=1e-3,
+        atol=1e-2,
+    )
+
+
+def test_wkv_decay_shrinks_state():
+    """Property: with k=v=0, state decays monotonically toward zero."""
+    g = np.random.default_rng(5)
+    h, s = 2, 8
+    z = np.zeros((h, s), np.float32)
+    w = np.full((h, s), 0.5, np.float32)
+    u = z
+    state = fa(g, h, s, s)
+    norm0 = float(np.abs(state).sum())
+    _, st1 = ref.wkv5_step(z, z, z, w, u, state)
+    _, st2 = ref.wkv5_step(z, z, z, w, u, np.asarray(st1))
+    assert float(np.abs(np.asarray(st1)).sum()) < norm0
+    assert float(np.abs(np.asarray(st2)).sum()) < float(np.abs(np.asarray(st1)).sum())

@@ -1,0 +1,66 @@
+//! End-to-end generation TPS per model/runtime configuration — the bench
+//! behind Figures 8/10/12's host measurements.
+//!
+//! Run: `cargo bench --bench generation` (artifacts required).
+
+use std::path::PathBuf;
+
+use rwkv_lite::config::{EngineConfig, LoadStrategy};
+use rwkv_lite::engine::sampler::Sampler;
+use rwkv_lite::engine::RwkvEngine;
+use rwkv_lite::util::Stopwatch;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+fn tps(cfg: EngineConfig, n: usize) -> anyhow::Result<(f64, u64)> {
+    let mut engine = RwkvEngine::load(cfg)?;
+    let mut sampler = Sampler::new(0.8, 0.95, 3);
+    let mut state = engine.new_state();
+    engine.generate(&[2, 100, 200], 8, &mut sampler, &mut state)?; // warmup
+    let mut state = engine.new_state();
+    let t = Stopwatch::start();
+    engine.generate(&[2, 100, 200], n, &mut sampler, &mut state)?;
+    Ok((n as f64 / t.elapsed_secs(), engine.memory_report().1))
+}
+
+fn main() {
+    let n = 160;
+    println!("generation TPS (n={n} tokens, host CPU)\n");
+    println!("{:<30} {:<12} {:>10} {:>12}", "model", "runtime", "tok/s", "peak MiB");
+    for size in ["tiny", "small", "medium"] {
+        for (name, ours, strategy) in [
+            (format!("rwkv-vanilla-{size}"), false, LoadStrategy::Full),
+            (format!("rwkv-vanilla-{size}"), false, LoadStrategy::Layerwise),
+            (format!("rwkv-ours-{size}"), true, LoadStrategy::Full),
+            (format!("rwkv-ours-{size}-int8"), true, LoadStrategy::Full),
+            (format!("rwkv-vanilla-{size}-int8"), false, LoadStrategy::Full),
+        ] {
+            if !artifacts().join("models").join(format!("{name}.json")).exists() {
+                continue;
+            }
+            let mut cfg = if ours {
+                EngineConfig::all_techniques(&name, artifacts())
+            } else {
+                EngineConfig::vanilla(&name, artifacts())
+            };
+            cfg.strategy = strategy;
+            let label = format!(
+                "{}{}",
+                if ours { "ours" } else { "vanilla" },
+                if strategy == LoadStrategy::Layerwise { "+layerwise" } else { "" }
+            );
+            match tps(cfg, n) {
+                Ok((tps, peak)) => println!(
+                    "{:<30} {:<12} {:>10.1} {:>12.2}",
+                    name,
+                    label,
+                    tps,
+                    peak as f64 / (1 << 20) as f64
+                ),
+                Err(e) => println!("{name:<30} {label:<12}   error: {e}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Microbenchmarks for the tensor kernels (the NEON-kernel analogs).
+//!
+//! Run: `cargo bench --bench matvec`.  Uses the in-crate bench harness
+//! (S28); reports mean/p50/p95 per op plus effective GB/s, the number to
+//! compare against the host's streaming bandwidth (§Perf roofline).
+
+use rwkv_lite::tensor::{bit_matvec, matvec_in_out, matvec_rows, matvec_rows_indexed, Mat};
+use rwkv_lite::util::timer::bench;
+use rwkv_lite::util::XorShift;
+
+fn randv(r: &mut XorShift, n: usize) -> Vec<f32> {
+    (0..n).map(|_| r.normal()).collect()
+}
+
+fn main() {
+    let mut r = XorShift::new(7);
+    println!("tensor kernel microbench (dims match the medium model)\n");
+    for &(rows, cols) in &[(192usize, 192usize), (192, 672), (1024, 192)] {
+        let wf = randv(&mut r, rows * cols);
+        let x = randv(&mut r, rows);
+        let xc = randv(&mut r, cols);
+        let w32 = Mat::from_f32(rows, cols, wf.clone());
+        let w16 = Mat::f32_to_f16_mat(rows, cols, &wf);
+        let q: Vec<i8> = wf.iter().map(|v| (v * 40.0).clamp(-127.0, 127.0) as i8).collect();
+        let w8 = Mat::I8 { rows, cols, data: q, scale: vec![0.025; cols] };
+        let mut out = vec![0.0f32; cols];
+        let mut out_r = vec![0.0f32; rows];
+        let bytes32 = (rows * cols * 4) as f64;
+
+        let s = bench(&format!("matvec_in_out f32 {rows}x{cols}"), 50, 0.4, || {
+            out.fill(0.0);
+            matvec_in_out(&x, &w32, &mut out);
+        });
+        println!("    -> {:.2} GB/s", bytes32 / s.p50_s / 1e9);
+        let s = bench(&format!("matvec_in_out f16 {rows}x{cols}"), 50, 0.4, || {
+            out.fill(0.0);
+            matvec_in_out(&x, &w16, &mut out);
+        });
+        println!("    -> {:.2} GB/s", bytes32 / 2.0 / s.p50_s / 1e9);
+        let s = bench(&format!("matvec_in_out i8  {rows}x{cols} (fused dequant)"), 50, 0.4, || {
+            out.fill(0.0);
+            matvec_in_out(&x, &w8, &mut out);
+        });
+        println!("    -> {:.2} GB/s", bytes32 / 4.0 / s.p50_s / 1e9);
+        bench(&format!("matvec_rows   f16 {rows}x{cols}"), 50, 0.4, || {
+            matvec_rows(&w16, &xc, &mut out_r);
+        });
+        // sparse row selection at 80% sparsity (the paper's regime)
+        let idx: Vec<u32> = (0..rows as u32).filter(|i| i % 5 == 0).collect();
+        let mut out_s = vec![0.0f32; idx.len()];
+        bench(&format!("matvec_rows_indexed f16 {}/{} rows", idx.len(), rows), 50, 0.4, || {
+            matvec_rows_indexed(&w16, &idx, &xc, &mut out_s);
+        });
+        println!();
+    }
+
+    // 1-bit predictor shadow (D=192, F=672 like the medium model)
+    let (d, f) = (192usize, 672usize);
+    let packed: Vec<u8> = (0..d.div_ceil(8) * f).map(|_| (r.next_u64() & 0xff) as u8).collect();
+    let scale = randv(&mut r, f).iter().map(|v| v.abs() + 0.01).collect::<Vec<_>>();
+    let x = randv(&mut r, d);
+    let mut out = vec![0.0f32; f];
+    bench(&format!("bit_matvec 1-bit {d}x{f} (shadow predictor)"), 50, 0.4, || {
+        bit_matvec(&packed, &scale, d, &x, &mut out);
+    });
+}

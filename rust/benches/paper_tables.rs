@@ -1,0 +1,31 @@
+//! Regenerate every paper table/figure in one run (the `cargo bench`
+//! umbrella for deliverable (d)): delegates to the `exp` drivers so the
+//! same code path serves `rwkv-lite exp <id>` and `cargo bench`.
+
+use rwkv_lite::cli;
+
+fn main() {
+    let specs = [
+        cli::opt_def("artifacts", "artifacts dir", "artifacts"),
+        cli::opt_def("limit", "examples per task", "40"),
+        cli::opt_def("n", "tokens per measurement", "80"),
+        cli::opt_def("model", "model override", "rwkv-ours-small"),
+    ];
+    // cargo bench passes --bench; swallow unknown flags by filtering
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench")
+        .collect();
+    let args = match cli::parse(&argv, &specs) {
+        Ok(a) => a,
+        Err(_) => cli::parse(&[], &specs).unwrap(),
+    };
+    if !std::path::Path::new("artifacts/models").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    if let Err(e) = rwkv_lite::exp::run("all", &args) {
+        eprintln!("paper_tables failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,65 @@
+//! Dynamic-batching throughput: aggregate tok/s vs batch size — shows the
+//! coordinator's batching actually amortizes per-round work (sparse row
+//! unions, scheduler overhead) across concurrent requests.
+//!
+//! Run: `cargo bench --bench serving_throughput` (artifacts required).
+
+use std::path::PathBuf;
+
+use rwkv_lite::config::EngineConfig;
+use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator, Event, Request};
+use rwkv_lite::util::Stopwatch;
+
+fn main() {
+    let model = "rwkv-ours-small";
+    let artifacts = PathBuf::from("artifacts");
+    if !artifacts.join("models").join(format!("{model}.json")).exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    println!("serving throughput vs batch size ({model}, 24 tok/request)\n");
+    println!("{:>6} {:>10} {:>14} {:>12}", "batch", "requests", "agg tok/s", "p50 lat (s)");
+    for &batch in &[1usize, 2, 4, 8, 16] {
+        let cfg = EngineConfig::all_techniques(model, artifacts.clone());
+        let coordinator = Coordinator::spawn(
+            move || rwkv_lite::engine::RwkvEngine::load(cfg),
+            BatchPolicy { max_batch: batch, window_ms: 2 },
+        );
+        let n_req = batch * 3;
+        let wall = Stopwatch::start();
+        let rxs: Vec<_> = (0..n_req as u64)
+            .map(|i| {
+                coordinator.submit(Request {
+                    id: i,
+                    prompt: vec![2, 100 + i as u32 % 64],
+                    max_tokens: 24,
+                    temperature: 0.8,
+                    top_p: 0.95,
+                })
+            })
+            .collect();
+        let mut total = 0usize;
+        let mut lats = Vec::new();
+        for rx in rxs {
+            for ev in rx {
+                match ev {
+                    Event::Done { tokens, seconds } => {
+                        total += tokens;
+                        lats.push(seconds);
+                        break;
+                    }
+                    Event::Error { message } => panic!("{message}"),
+                    _ => {}
+                }
+            }
+        }
+        let secs = wall.elapsed_secs();
+        println!(
+            "{:>6} {:>10} {:>14.1} {:>12.3}",
+            batch,
+            n_req,
+            total as f64 / secs,
+            rwkv_lite::util::percentile(&lats, 50.0)
+        );
+    }
+}

@@ -1,0 +1,166 @@
+//! Hand-rolled CLI argument parser (substrate S24 — no clap here).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Default, Debug)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+}
+
+/// Parse argv against option specs. Unknown `--options` are rejected.
+pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args> {
+    let mut out = Args::default();
+    for s in specs {
+        if let (true, Some(d)) = (s.takes_value, s.default) {
+            out.values.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            let spec = specs.iter().find(|s| s.name == key);
+            match spec {
+                None => bail!("unknown option --{key}\n{}", usage(specs)),
+                Some(s) if s.takes_value => {
+                    let val = if let Some(v) = inline_val {
+                        v
+                    } else {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                    };
+                    out.values.insert(key, val);
+                }
+                Some(_) => {
+                    if inline_val.is_some() {
+                        bail!("--{key} does not take a value");
+                    }
+                    out.flags.push(key);
+                }
+            }
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+pub fn usage(specs: &[OptSpec]) -> String {
+    let mut s = String::from("options:\n");
+    for o in specs {
+        let v = if o.takes_value { " <v>" } else { "" };
+        let d = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{v:<8} {}{d}\n", o.name, o.help));
+    }
+    s
+}
+
+/// Convenience macro-free spec builder.
+pub const fn opt(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, takes_value: true, default: None }
+}
+
+pub const fn opt_def(name: &'static str, help: &'static str, default: &'static str) -> OptSpec {
+    OptSpec { name, help, takes_value: true, default: Some(default) }
+}
+
+pub const fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, takes_value: false, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positional() {
+        let specs = [opt("model", "m"), flag("verbose", "v"), opt_def("n", "count", "10")];
+        let a = parse(&sv(&["gen", "--model", "x", "--verbose", "--n=5", "p2"]), &specs).unwrap();
+        assert_eq!(a.positional, vec!["gen", "p2"]);
+        assert_eq!(a.get("model"), Some("x"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn default_applies() {
+        let specs = [opt_def("n", "count", "10")];
+        let a = parse(&sv(&[]), &specs).unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&sv(&["--bogus"]), &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let specs = [opt("model", "m")];
+        assert!(parse(&sv(&["--model"]), &specs).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Runtime configuration: which techniques are enabled, loading strategy,
+//! backend.  Built from CLI flags + manifest defaults; serializable for
+//! the launcher (`rwkv-lite serve --config <file.json>`).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::json::{self, Value};
+
+/// How weights enter memory (paper §5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadStrategy {
+    /// Everything resident before the first token (minus technique-managed
+    /// groups: embeddings, sparse FFN rows, hierarchical-head rows).
+    Full,
+    /// Layer N+1 streams in while layer N executes; per-layer weights are
+    /// dropped afterwards.  Smallest footprint, disk-IO latency per token.
+    Layerwise,
+}
+
+impl LoadStrategy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "full" => LoadStrategy::Full,
+            "layerwise" => LoadStrategy::Layerwise,
+            _ => bail!("unknown load strategy '{s}' (full|layerwise)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadStrategy::Full => "full",
+            LoadStrategy::Layerwise => "layerwise",
+        }
+    }
+}
+
+/// Compute backend for the dense per-layer math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust kernels (tensor::matvec) — the edge-device path.
+    Native,
+    /// AOT-compiled HLO components executed through PJRT (runtime::).
+    Xla,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native" => Backend::Native,
+            "xla" => Backend::Xla,
+            _ => bail!("unknown backend '{s}' (native|xla)"),
+        })
+    }
+}
+
+/// Full engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub model: String,
+    pub artifacts: PathBuf,
+    pub strategy: LoadStrategy,
+    pub backend: Backend,
+    /// §3.2 sparse FFN via the predictor ensemble.
+    pub sparse_ffn: bool,
+    /// §3.3 hierarchical head.
+    pub hier_head: bool,
+    /// §3.3 embedding LRU cache (off => full embedding table resident).
+    pub emb_cache: bool,
+    /// Override the manifest's cache capacity (0 = manifest default).
+    pub emb_cache_capacity: usize,
+    /// Override hierarchical-head p_min (0 = manifest default).
+    pub hh_p_min: f32,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            model: String::new(),
+            artifacts: PathBuf::from("artifacts"),
+            strategy: LoadStrategy::Full,
+            backend: Backend::Native,
+            sparse_ffn: false,
+            hier_head: false,
+            emb_cache: false,
+            emb_cache_capacity: 0,
+            hh_p_min: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The paper's "RWKV-ours" runtime: all techniques on.
+    pub fn all_techniques(model: &str, artifacts: PathBuf) -> Self {
+        Self {
+            model: model.to_string(),
+            artifacts,
+            sparse_ffn: true,
+            hier_head: true,
+            emb_cache: true,
+            ..Self::default()
+        }
+    }
+
+    /// Vanilla runtime: nothing managed, everything dense.
+    pub fn vanilla(model: &str, artifacts: PathBuf) -> Self {
+        Self {
+            model: model.to_string(),
+            artifacts,
+            ..Self::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("artifacts", json::s(&self.artifacts.display().to_string())),
+            ("strategy", json::s(self.strategy.name())),
+            (
+                "backend",
+                json::s(match self.backend {
+                    Backend::Native => "native",
+                    Backend::Xla => "xla",
+                }),
+            ),
+            ("sparse_ffn", Value::Bool(self.sparse_ffn)),
+            ("hier_head", Value::Bool(self.hier_head)),
+            ("emb_cache", Value::Bool(self.emb_cache)),
+            ("emb_cache_capacity", json::num(self.emb_cache_capacity as f64)),
+            ("hh_p_min", json::num(self.hh_p_min as f64)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut c = Self::default();
+        if let Some(s) = v.str_at(&["model"]) {
+            c.model = s.to_string();
+        }
+        if let Some(s) = v.str_at(&["artifacts"]) {
+            c.artifacts = PathBuf::from(s);
+        }
+        if let Some(s) = v.str_at(&["strategy"]) {
+            c.strategy = LoadStrategy::parse(s)?;
+        }
+        if let Some(s) = v.str_at(&["backend"]) {
+            c.backend = Backend::parse(s)?;
+        }
+        let b = |k: &str, d: bool| v.get(k).and_then(|x| x.as_bool()).unwrap_or(d);
+        c.sparse_ffn = b("sparse_ffn", false);
+        c.hier_head = b("hier_head", false);
+        c.emb_cache = b("emb_cache", false);
+        c.emb_cache_capacity = v.f64_at(&["emb_cache_capacity"]).unwrap_or(0.0) as usize;
+        c.hh_p_min = v.f64_at(&["hh_p_min"]).unwrap_or(0.0) as f32;
+        c.seed = v.f64_at(&["seed"]).unwrap_or(0.0) as u64;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = EngineConfig::all_techniques("rwkv-ours-small", PathBuf::from("artifacts"));
+        c.strategy = LoadStrategy::Layerwise;
+        let v = c.to_json();
+        let c2 = EngineConfig::from_json(&v).unwrap();
+        assert_eq!(c2.model, c.model);
+        assert_eq!(c2.strategy, c.strategy);
+        assert!(c2.sparse_ffn && c2.hier_head && c2.emb_cache);
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert!(LoadStrategy::parse("bogus").is_err());
+        assert!(Backend::parse("gpu").is_err());
+    }
+}

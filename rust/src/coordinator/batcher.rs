@@ -1,0 +1,77 @@
+//! Dynamic batching policy: collect requests up to `max_batch` within
+//! `window_ms` before a decode round; when the engine is busy, admit
+//! without waiting (continuous batching — new requests join mid-flight,
+//! vLLM-style, scaled to a single-device edge serving loop).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use super::Submission;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub window_ms: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, window_ms: 2 }
+    }
+}
+
+pub(crate) enum Admit {
+    Requests(Vec<Submission>),
+    None,
+    Closed,
+}
+
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Pull work from the queue.  With `in_flight == 0` this blocks until
+    /// a request (or disconnect); otherwise it drains whatever is pending
+    /// without stalling the decode loop.
+    pub(crate) fn admit(&mut self, rx: &Receiver<Submission>, in_flight: usize) -> Admit {
+        let mut out = Vec::new();
+        let capacity = self.policy.max_batch.saturating_sub(in_flight);
+        if capacity == 0 {
+            return Admit::None;
+        }
+        if in_flight == 0 {
+            // idle: block for the first request
+            match rx.recv() {
+                Ok(s) => out.push(s),
+                Err(_) => return Admit::Closed,
+            }
+            // then batch within the window
+            let deadline = Duration::from_millis(self.policy.window_ms);
+            while out.len() < capacity {
+                match rx.recv_timeout(deadline) {
+                    Ok(s) => out.push(s),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        } else {
+            // busy: opportunistic drain
+            while out.len() < capacity {
+                match rx.try_recv() {
+                    Ok(s) => out.push(s),
+                    Err(_) => break,
+                }
+            }
+        }
+        if out.is_empty() {
+            Admit::None
+        } else {
+            Admit::Requests(out)
+        }
+    }
+}

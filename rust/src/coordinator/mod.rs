@@ -1,0 +1,251 @@
+//! Request coordinator (S21): router + dynamic batcher + decode scheduler.
+//!
+//! Edge-serving shape: one engine (one device) decodes a *batch* of
+//! concurrent requests round-robin, one token each per scheduling round
+//! (continuous batching: new requests join mid-flight).  Batching keeps
+//! the device busy across request think-time and amortizes scheduler
+//! overhead; fusing the §3.2 sparse-row unions across a round (the
+//! PowerInfer-style argument) is future work tracked in DESIGN.md §8.
+//!
+//! Topology: N client threads -> mpsc -> coordinator thread (owns the
+//! engine) -> per-request streaming channels.
+
+pub mod batcher;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::engine::sampler::Sampler;
+use crate::engine::{state::RwkvState, RwkvEngine};
+use crate::metrics::Registry;
+use batcher::{BatchPolicy, DynamicBatcher};
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+/// Streamed events for one request.
+#[derive(Clone, Debug)]
+pub enum Event {
+    Token { token: u32 },
+    Done { tokens: usize, seconds: f64 },
+    Error { message: String },
+}
+
+pub(crate) struct Submission {
+    pub(crate) req: Request,
+    pub(crate) tx: Sender<Event>,
+}
+
+/// In-flight decode slot.
+struct Slot {
+    req: Request,
+    tx: Sender<Event>,
+    state: RwkvState,
+    sampler: Sampler,
+    last_token: u32,
+    produced: usize,
+    prompt_pos: usize,
+    started: crate::util::Stopwatch,
+}
+
+pub struct Coordinator {
+    tx: Sender<Submission>,
+    handle: Option<JoinHandle<()>>,
+    pub metrics: Arc<Registry>,
+}
+
+impl Coordinator {
+    /// Spawn the coordinator thread; the engine is CONSTRUCTED on that
+    /// thread (PJRT handles are not `Send`, so an engine cannot cross
+    /// threads — the factory pattern keeps both backends usable).
+    pub fn spawn<F>(factory: F, policy: BatchPolicy) -> Self
+    where
+        F: FnOnce() -> Result<RwkvEngine> + Send + 'static,
+    {
+        let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
+        let metrics = Arc::new(Registry::new());
+        let m2 = Arc::clone(&metrics);
+        let handle = std::thread::Builder::new()
+            .name("rwkv-coordinator".into())
+            .spawn(move || match factory() {
+                Ok(mut engine) => run_loop(&mut engine, rx, policy, &m2),
+                Err(e) => {
+                    // refuse all submissions with the load error
+                    let msg = format!("engine load failed: {e:#}");
+                    while let Ok(sub) = rx.recv() {
+                        let _ = sub.tx.send(Event::Error { message: msg.clone() });
+                    }
+                }
+            })
+            .expect("spawn coordinator");
+        Self { tx, handle: Some(handle), metrics }
+    }
+
+    /// Submit a request; returns the event stream receiver.
+    pub fn submit(&self, req: Request) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        // A send failure means the coordinator thread exited; surface it
+        // on the stream instead of panicking.
+        if self.tx.send(Submission { req, tx: tx.clone() }).is_err() {
+            let _ = tx.send(Event::Error { message: "coordinator stopped".into() });
+        }
+        rx
+    }
+
+    /// Convenience: run one request to completion.
+    pub fn generate_blocking(&self, req: Request) -> Result<Vec<u32>> {
+        let rx = self.submit(req);
+        let mut out = Vec::new();
+        for ev in rx {
+            match ev {
+                Event::Token { token } => out.push(token),
+                Event::Done { .. } => break,
+                Event::Error { message } => anyhow::bail!("generation failed: {message}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // closing the channel ends the loop once queues drain
+        let (dummy_tx, _) = channel();
+        let _ = std::mem::replace(&mut self.tx, dummy_tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_loop(
+    engine: &mut RwkvEngine,
+    rx: Receiver<Submission>,
+    policy: BatchPolicy,
+    metrics: &Registry,
+) {
+    let mut batcher = DynamicBatcher::new(policy);
+    let mut slots: Vec<Slot> = Vec::new();
+    loop {
+        // admit new work (blocking when idle, draining when busy)
+        let admitted = batcher.admit(&rx, slots.len());
+        match admitted {
+            batcher::Admit::Closed if slots.is_empty() => break,
+            batcher::Admit::Requests(subs) => {
+                for s in subs {
+                    metrics.inc("requests_admitted", 1);
+                    slots.push(Slot {
+                        state: engine.new_state(),
+                        sampler: Sampler::new(s.req.temperature, s.req.top_p, s.req.id),
+                        last_token: crate::text::BOS,
+                        produced: 0,
+                        prompt_pos: 0,
+                        started: crate::util::Stopwatch::start(),
+                        req: s.req,
+                        tx: s.tx,
+                    });
+                }
+            }
+            _ => {}
+        }
+        if slots.is_empty() {
+            continue;
+        }
+        // one scheduling round: each slot advances one token.  Slots still
+        // in prefill step individually; decode-phase slots advance as ONE
+        // batched engine call (sparse-row unions amortize, see engine::
+        // forward_tokens_batch).
+        let round = crate::util::Stopwatch::start();
+        let mut finished: Vec<usize> = Vec::new();
+        let mut decode_idx: Vec<usize> = Vec::new();
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if slot.prompt_pos < slot.req.prompt.len() {
+                if let Err(e) = engine.forward_hidden(slot.last_token, &mut slot.state) {
+                    let _ = slot.tx.send(Event::Error { message: e.to_string() });
+                    finished.push(i);
+                    continue;
+                }
+                slot.last_token = slot.req.prompt[slot.prompt_pos];
+                slot.prompt_pos += 1;
+            } else {
+                decode_idx.push(i);
+            }
+        }
+        if !decode_idx.is_empty() && engine.cfg.backend == crate::config::Backend::Xla {
+            // XLA backend has no batched path: step slots individually
+            for &i in &decode_idx {
+                let slot = &mut slots[i];
+                match engine.forward_token(slot.last_token, &mut slot.state) {
+                    Ok(mut logits) => {
+                        let tok = slot.sampler.sample(&mut logits);
+                        slot.last_token = tok;
+                        slot.produced += 1;
+                        let _ = slot.tx.send(Event::Token { token: tok });
+                        if slot.produced >= slot.req.max_tokens || tok == crate::text::EOS {
+                            finished.push(i);
+                        }
+                    }
+                    Err(e) => {
+                        let _ = slot.tx.send(Event::Error { message: e.to_string() });
+                        finished.push(i);
+                    }
+                }
+            }
+        } else if !decode_idx.is_empty() {
+            // move states out so the batch call can borrow them together
+            let tokens: Vec<u32> = decode_idx.iter().map(|&i| slots[i].last_token).collect();
+            let mut states: Vec<RwkvState> = decode_idx
+                .iter()
+                .map(|&i| std::mem::replace(&mut slots[i].state, RwkvState::zero(0, 0, 1, 1)))
+                .collect();
+            match engine.forward_tokens_batch(&tokens, &mut states) {
+                Ok(all_logits) => {
+                    for ((&i, state), mut logits) in
+                        decode_idx.iter().zip(states).zip(all_logits)
+                    {
+                        let slot = &mut slots[i];
+                        slot.state = state;
+                        let tok = slot.sampler.sample(&mut logits);
+                        slot.last_token = tok;
+                        slot.produced += 1;
+                        let _ = slot.tx.send(Event::Token { token: tok });
+                        if slot.produced >= slot.req.max_tokens || tok == crate::text::EOS {
+                            finished.push(i);
+                        }
+                    }
+                }
+                Err(e) => {
+                    for (&i, state) in decode_idx.iter().zip(states) {
+                        let slot = &mut slots[i];
+                        slot.state = state;
+                        let _ = slot.tx.send(Event::Error { message: e.to_string() });
+                        finished.push(i);
+                    }
+                }
+            }
+        }
+        finished.sort_unstable();
+        finished.dedup();
+        metrics.observe("round_seconds", round.elapsed_secs());
+        metrics.inc("rounds", 1);
+        for &i in finished.iter().rev() {
+            let slot = slots.remove(i);
+            metrics.inc("requests_completed", 1);
+            metrics.inc("tokens_out", slot.produced as u64);
+            let _ = slot.tx.send(Event::Done {
+                tokens: slot.produced,
+                seconds: slot.started.elapsed_secs(),
+            });
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Edge-device roofline models (substrate S26, DESIGN.md §2 substitution).
+//!
+//! The paper measures TPS on a Raspberry Pi 5 (4x Cortex-A76 @2.4GHz) and
+//! an Orange Pi Zero 2W (4x Cortex-A53 @1.5GHz).  We do not have those
+//! boards; token-at-a-time LLM inference is overwhelmingly *memory-
+//! bandwidth bound* (every resident weight byte is touched once per
+//! token), so a bandwidth+compute roofline projects host measurements
+//! onto each device:
+//!
+//! ```text
+//! t_token(device) = max(bytes_per_token / BW, flops_per_token / F)
+//! ```
+//!
+//! The *ratios* between models/variants — what Figures 8, 10, 12 compare —
+//! are preserved by construction; EXPERIMENTS.md reports both host-measured
+//! and projected numbers.
+
+/// Sustained streaming characteristics of a CPU platform.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Sustained memory bandwidth, bytes/sec.
+    pub mem_bw: f64,
+    /// Sustained f32 multiply-add throughput, FLOP/s (all cores).
+    pub flops: f64,
+    /// Active inference power draw, watts (paper §B.2: ~6.5 W on rpi5).
+    pub watts: f64,
+}
+
+/// Raspberry Pi 5: LPDDR4X-4267 (~17 GB/s theoretical, ~10 GB/s sustained
+/// from a single NEON stream mix), 4x A76 @ 2.4 GHz, 2x128-bit NEON FMA
+/// => ~76 GFLOP/s peak, ~38 sustained.
+pub const RPI5: DeviceProfile = DeviceProfile {
+    name: "rpi5",
+    description: "Raspberry Pi 5B, 2.4GHz 4x Cortex-A76; 8GB",
+    mem_bw: 10.0e9,
+    flops: 38.0e9,
+    watts: 6.5,
+};
+
+/// Orange Pi Zero 2W: LPDDR4 (~4 GB/s sustained), 4x A53 @ 1.5 GHz,
+/// 64-bit NEON => ~12 GFLOP/s peak, ~6 sustained.
+pub const OPI2W: DeviceProfile = DeviceProfile {
+    name: "opi2w",
+    description: "Orange Pi Zero 2W, 1.5GHz 4x Cortex-A53; 4GB",
+    mem_bw: 4.0e9,
+    flops: 6.0e9,
+    watts: 3.2,
+};
+
+pub fn by_name(name: &str) -> Option<DeviceProfile> {
+    match name {
+        "rpi5" => Some(RPI5),
+        "opi2w" => Some(OPI2W),
+        _ => None,
+    }
+}
+
+impl DeviceProfile {
+    /// Projected seconds per generated token.
+    pub fn token_seconds(&self, bytes_per_token: f64, flops_per_token: f64) -> f64 {
+        (bytes_per_token / self.mem_bw).max(flops_per_token / self.flops)
+    }
+
+    /// Projected tokens/second.
+    pub fn tps(&self, bytes_per_token: f64, flops_per_token: f64) -> f64 {
+        1.0 / self.token_seconds(bytes_per_token, flops_per_token)
+    }
+
+    /// Energy (joules) to generate `n` tokens (paper §B.2 methodology:
+    /// constant device power x wall time).
+    pub fn energy_joules(&self, n_tokens: usize, bytes_per_token: f64, flops_per_token: f64) -> f64 {
+        self.watts * self.token_seconds(bytes_per_token, flops_per_token) * n_tokens as f64
+    }
+}
+
+/// Analytic FLOPs per generated token for an RWKV variant.
+/// Dominated by the matvecs: 2 flops per weight element touched.
+pub fn rwkv_flops_per_token(dim: usize, layers: usize, ffn: usize, vocab: usize, svd_rank: usize, sparsity_kept: f64) -> f64 {
+    let d = dim as f64;
+    let f = ffn as f64;
+    let l = layers as f64;
+    let proj = if svd_rank > 0 {
+        // 5 decomposed projections (4 att + 1 ffn-r): 2 * (D*r + r*D)
+        5.0 * 2.0 * 2.0 * d * svd_rank as f64
+    } else {
+        5.0 * 2.0 * d * d
+    };
+    let wo = 2.0 * d * d;
+    let wkv_state = 2.0 * 3.0 * d * (dim / layers.max(1)) as f64; // small; state ops
+    let ffn_flops = 2.0 * 2.0 * d * f * sparsity_kept;
+    let head = 2.0 * d * vocab as f64;
+    l * (proj + wo + wkv_state + ffn_flops) + head
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_bound_regime() {
+        // 100 MB/token at 10 GB/s => 10 ms/token => 100 TPS
+        let t = RPI5.tps(100e6, 1e6);
+        assert!((t - 100.0).abs() < 1.0, "tps={t}");
+    }
+
+    #[test]
+    fn compute_bound_when_flops_dominate() {
+        let secs = RPI5.token_seconds(1.0, 38.0e9); // exactly 1 s of flops
+        assert!((secs - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opi_slower_than_rpi() {
+        let b = 10e6;
+        let f = 50e6;
+        assert!(OPI2W.tps(b, f) < RPI5.tps(b, f));
+    }
+
+    #[test]
+    fn svd_reduces_flops() {
+        let dense = rwkv_flops_per_token(1024, 24, 3584, 65536, 0, 1.0);
+        let svd = rwkv_flops_per_token(1024, 24, 3584, 65536, 128, 1.0);
+        assert!(svd < dense);
+    }
+}

@@ -1,0 +1,121 @@
+//! Embedding LRU cache (§3.3): only embeddings of recently-seen tokens are
+//! resident.  Token usage is long-tailed (Zipf), so a cache of ~1.5% of
+//! the table serves almost all lookups; misses stream one row from the
+//! checkpoint mmap.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::engine::weights::WeightStore;
+use crate::metrics::{Group, MemTracker};
+
+pub struct EmbCache {
+    capacity: usize,
+    dim: usize,
+    row_bytes: u64,
+    entries: HashMap<u32, (Vec<f32>, u64)>, // token -> (row, last-use tick)
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl EmbCache {
+    pub fn new(capacity: usize, dim: usize, row_bytes: u64) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            dim,
+            row_bytes,
+            entries: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Fetch the embedding of `token` into `out`, loading through the
+    /// store on miss and evicting LRU beyond capacity.
+    pub fn fetch(
+        &mut self,
+        store: &WeightStore,
+        tracker: &MemTracker,
+        token: u32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.tick += 1;
+        if let Some((row, t)) = self.entries.get_mut(&token) {
+            *t = self.tick;
+            out.copy_from_slice(row);
+            self.hits += 1;
+            return Ok(());
+        }
+        self.misses += 1;
+        let mut row = vec![0.0f32; self.dim];
+        store.emb_row(token, &mut row)?;
+        out.copy_from_slice(&row);
+        tracker.load(Group::Emb, self.row_bytes);
+        if self.entries.len() >= self.capacity {
+            // evict least-recently-used
+            if let Some((&lru, _)) = self.entries.iter().min_by_key(|(_, (_, t))| *t) {
+                self.entries.remove(&lru);
+                tracker.unload(Group::Emb, self.row_bytes);
+                self.evictions += 1;
+            }
+        }
+        self.entries.insert(token, (row, self.tick));
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Resident bytes (capacity-bounded).
+    pub fn resident_bytes(&self) -> u64 {
+        self.entries.len() as u64 * self.row_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A store-free LRU logic test via the internal maps (fetch() needs a
+    // real store; integration tests cover that path).
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = EmbCache::new(2, 4, 8);
+        // simulate inserts directly
+        c.tick += 1;
+        c.entries.insert(1, (vec![0.0; 4], c.tick));
+        c.tick += 1;
+        c.entries.insert(2, (vec![0.0; 4], c.tick));
+        // touch 1 so 2 becomes LRU
+        c.tick += 1;
+        c.entries.get_mut(&1).unwrap().1 = c.tick;
+        let lru = *c.entries.iter().min_by_key(|(_, (_, t))| *t).unwrap().0;
+        assert_eq!(lru, 2);
+    }
+
+    #[test]
+    fn hit_rate_zero_when_untouched() {
+        let c = EmbCache::new(4, 4, 8);
+        assert_eq!(c.hit_rate(), 0.0);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,618 @@
+//! The RWKV-Lite inference engine (L3's core).
+//!
+//! Composes the paper's techniques around the RWKV v5 recurrence:
+//! * SVD / enhanced-SVD projections (§3.1) — transparent via [`weights::ProjW`].
+//! * Sparse FFN with the MLP+1-bit predictor ensemble (§3.2).
+//! * Embedding LRU cache + hierarchical head (§3.3).
+//! * Loading strategies full / layerwise (§5.1) with auditable residency.
+//! * Backends: pure-rust kernels (native) or AOT HLO via PJRT (xla).
+
+pub mod emb_cache;
+pub mod hier_head;
+pub mod sampler;
+pub mod sparse_ffn;
+pub mod state;
+pub mod transformer;
+pub mod weights;
+pub mod xla_backend;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Backend, EngineConfig, LoadStrategy};
+use crate::metrics::{MemTracker, Registry};
+use crate::tensor::{
+    group_norm_heads, layer_norm, lerp_shift, matvec_in_out, matvec_rows, sigmoid, silu,
+    sqrelu_inplace, Mat,
+};
+use emb_cache::EmbCache;
+use hier_head::HierHead;
+use sampler::Sampler;
+use sparse_ffn::SparsePredictor;
+use state::RwkvState;
+use weights::{BlockW, LnW, WeightStore};
+use xla_backend::XlaRwkv;
+
+/// Static shape info (from the manifest).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelInfo {
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_size: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+}
+
+/// Per-token telemetry (drives fig3 / fig7 / fig9).
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    pub emb_secs: f64,
+    pub timemix_secs: f64,
+    pub chanmix_secs: f64,
+    pub head_secs: f64,
+    pub ffn_active: usize,
+    pub ffn_total: usize,
+    pub head_rows: usize,
+}
+
+pub struct RwkvEngine {
+    pub info: ModelInfo,
+    pub cfg: EngineConfig,
+    pub store: Arc<WeightStore>,
+    pub metrics: Registry,
+    ln0: LnW,
+    ln_out: LnW,
+    blocks: Vec<Option<BlockW>>,
+    emb_mat: Option<Arc<Mat>>, // resident table when cache disabled
+    pub emb_cache: Option<EmbCache>,
+    head_mat: Option<Arc<Mat>>, // resident dense head when HH disabled
+    pub hier: Option<HierHead>,
+    pub preds: Vec<Option<SparsePredictor>>,
+    xla: Option<XlaRwkv>,
+    buf: Scratch, // allocation-free hot loop
+    pub last_stats: StepStats,
+    /// Cumulative per-layer FFN activation telemetry (drives Figure 3):
+    /// (active, total) pairs counted on the dense path (true relu mask)
+    /// and on the sparse path (predicted rows).
+    pub ffn_active_by_layer: Vec<u64>,
+    pub ffn_count_by_layer: Vec<u64>,
+}
+
+struct Scratch {
+    x: Vec<f32>,
+    xa: Vec<f32>,
+    xf: Vec<f32>,
+    t1: Vec<f32>,
+    t2: Vec<f32>,
+    r: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    g: Vec<f32>,
+    att_out: Vec<f32>,
+    rank: Vec<f32>,
+    pred_n: Vec<f32>,
+    pred_f: Vec<f32>,
+    pred_f2: Vec<f32>,
+    idx: Vec<u32>,
+    h_act: Vec<f32>,
+    ffn_out: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(d: usize, f: usize) -> Self {
+        Self {
+            x: vec![0.0; d],
+            xa: vec![0.0; d],
+            xf: vec![0.0; d],
+            t1: vec![0.0; d],
+            t2: vec![0.0; d],
+            r: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            g: vec![0.0; d],
+            att_out: vec![0.0; d],
+            rank: Vec::new(),
+            pred_n: Vec::new(),
+            pred_f: Vec::with_capacity(f),
+            pred_f2: Vec::with_capacity(f),
+            idx: Vec::with_capacity(f),
+            h_act: Vec::with_capacity(f),
+            ffn_out: vec![0.0; d],
+        }
+    }
+}
+
+impl RwkvEngine {
+    /// Open a model by name (e.g. "rwkv-ours-small") under `cfg.artifacts`.
+    pub fn load(cfg: EngineConfig) -> Result<Self> {
+        let manifest_path: PathBuf = cfg
+            .artifacts
+            .join("models")
+            .join(format!("{}.json", cfg.model));
+        let store = Arc::new(WeightStore::open(&manifest_path)?);
+        let m = store.manifest.clone();
+        if !m.is_rwkv() {
+            bail!("{} is not an RWKV checkpoint (arch={})", cfg.model, m.arch);
+        }
+        let info = ModelInfo {
+            dim: m.dim,
+            layers: m.layers,
+            heads: m.heads,
+            head_size: m.head_size,
+            ffn: m.ffn_dim,
+            vocab: m.vocab,
+        };
+        if cfg.sparse_ffn && !m.has_predictors {
+            bail!("{}: sparse_ffn requested but checkpoint has no predictors", cfg.model);
+        }
+        if cfg.hier_head && !m.has_hier_head {
+            bail!("{}: hier_head requested but checkpoint has no hh tensors", cfg.model);
+        }
+
+        let ln0 = LnW::load(&store, "ln0")?;
+        let ln_out = LnW::load(&store, "ln_out")?;
+
+        // embedding path (§3.3 cache vs resident table)
+        let (emb_mat, emb_cache) = if cfg.emb_cache {
+            let cap = if cfg.emb_cache_capacity > 0 {
+                cfg.emb_cache_capacity
+            } else {
+                m.emb_cache_capacity
+            };
+            let row_bytes = store.rkv.entry("emb")?.nbytes / m.vocab as u64;
+            (None, Some(EmbCache::new(cap, m.dim, row_bytes)))
+        } else {
+            (Some(store.mat("emb")?), None)
+        };
+
+        // head path (§3.3 hierarchical vs dense)
+        let (head_mat, hier) = if cfg.hier_head {
+            let p_min = if cfg.hh_p_min > 0.0 { cfg.hh_p_min } else { m.hh_p_min };
+            (None, Some(HierHead::load(&store, p_min, m.hh_k_min, m.hh_k_max)?))
+        } else {
+            (Some(store.mat("head")?), None)
+        };
+
+        // sparse predictors (§3.2)
+        let mut preds: Vec<Option<SparsePredictor>> = Vec::new();
+        for i in 0..m.layers {
+            preds.push(if cfg.sparse_ffn {
+                Some(SparsePredictor::load(&store, i, m.t_mlp, m.t_quant)?)
+            } else {
+                None
+            });
+        }
+
+        // blocks (full strategy preloads; layerwise streams per token)
+        let mut blocks: Vec<Option<BlockW>> = (0..m.layers).map(|_| None).collect();
+        if cfg.strategy == LoadStrategy::Full && cfg.backend == Backend::Native {
+            for (i, b) in blocks.iter_mut().enumerate() {
+                *b = Some(BlockW::load(&store, i, !cfg.sparse_ffn)?);
+            }
+        }
+
+        let xla = if cfg.backend == Backend::Xla {
+            Some(XlaRwkv::load(&store, &cfg.artifacts, info)?)
+        } else {
+            None
+        };
+
+        let buf = Scratch::new(info.dim, info.ffn);
+        Ok(Self {
+            info,
+            cfg,
+            store,
+            metrics: Registry::new(),
+            ln0,
+            ln_out,
+            blocks,
+            emb_mat,
+            emb_cache,
+            head_mat,
+            hier,
+            preds,
+            xla,
+            buf,
+            last_stats: StepStats::default(),
+            ffn_active_by_layer: vec![0; info.layers],
+            ffn_count_by_layer: vec![0; info.layers],
+        })
+    }
+
+    /// Switch the sparsity-predictor mode for every layer (Figure 9).
+    pub fn set_pred_mode(&mut self, mode: sparse_ffn::PredMode) -> Result<()> {
+        for p in self.preds.iter_mut().flatten() {
+            if mode == sparse_ffn::PredMode::Quant4Only {
+                p.load_q4(&self.store)?;
+            }
+            p.mode = mode;
+        }
+        Ok(())
+    }
+
+    pub fn new_state(&self) -> RwkvState {
+        RwkvState::zero(self.info.layers, self.info.dim, self.info.heads, self.info.head_size)
+    }
+
+    pub fn tracker(&self) -> &MemTracker {
+        &self.store.tracker
+    }
+
+    // ------------------------------------------------------------------
+    // Embedding
+    // ------------------------------------------------------------------
+
+    fn embed(&mut self, token: u32, out: &mut [f32]) -> Result<()> {
+        if let Some(cache) = &mut self.emb_cache {
+            cache.fetch(&self.store, &self.store.tracker, token, out)?;
+        } else if let Some(emb) = &self.emb_mat {
+            emb.decode_row(token as usize, out);
+        } else {
+            bail!("no embedding source");
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Per-layer math (native backend)
+    // ------------------------------------------------------------------
+
+    fn time_mix(&mut self, b: &BlockW, layer: usize, state: &mut RwkvState) {
+        let (h, s) = (self.info.heads, self.info.head_size);
+        let d = self.info.dim;
+        let buf = &mut self.buf;
+        layer_norm(&buf.x, &b.ln1.scale, &b.ln1.bias, 1e-5, &mut buf.xa);
+        let prev = &state.att_x[layer];
+        lerp_shift(&buf.xa, prev, &b.att.mu_r, &mut buf.t1);
+        b.att.wr.apply(&buf.t1, &mut buf.r, &mut buf.rank);
+        lerp_shift(&buf.xa, prev, &b.att.mu_k, &mut buf.t1);
+        b.att.wk.apply(&buf.t1, &mut buf.k, &mut buf.rank);
+        lerp_shift(&buf.xa, prev, &b.att.mu_v, &mut buf.t1);
+        b.att.wv.apply(&buf.t1, &mut buf.v, &mut buf.rank);
+        lerp_shift(&buf.xa, prev, &b.att.mu_g, &mut buf.t1);
+        b.att.wg.apply(&buf.t1, &mut buf.g, &mut buf.rank);
+        for v in buf.g.iter_mut() {
+            *v = silu(*v);
+        }
+        // WKV recurrence (decode step of the L1 kernel)
+        let wkv = &mut state.wkv[layer];
+        buf.att_out.fill(0.0);
+        for hh in 0..h {
+            let base = hh * s * s;
+            for i in 0..s {
+                let ki = buf.k[hh * s + i];
+                let ri = buf.r[hh * s + i];
+                let wi = b.att.decay[hh * s + i];
+                let ui = b.att.first[hh * s + i];
+                let srow = &mut wkv[base + i * s..base + (i + 1) * s];
+                let vrow = &buf.v[hh * s..(hh + 1) * s];
+                let orow = &mut buf.att_out[hh * s..(hh + 1) * s];
+                for j in 0..s {
+                    let a = ki * vrow[j];
+                    orow[j] += ri * (ui * a + srow[j]);
+                    srow[j] = wi * srow[j] + a;
+                }
+            }
+        }
+        group_norm_heads(&mut buf.att_out, h, &b.att.lnx.scale, &b.att.lnx.bias);
+        for i in 0..d {
+            buf.att_out[i] *= buf.g[i];
+        }
+        matvec_in_out(&buf.att_out, &b.att.wo, &mut buf.x); // += residual
+        state.att_x[layer].copy_from_slice(&buf.xa);
+    }
+
+    fn chan_mix(&mut self, b: &BlockW, layer: usize, state: &mut RwkvState) -> Result<()> {
+        let d = self.info.dim;
+        let buf = &mut self.buf;
+        layer_norm(&buf.x, &b.ln2.scale, &b.ln2.bias, 1e-5, &mut buf.xf);
+        let prev = &state.ffn_x[layer];
+        lerp_shift(&buf.xf, prev, &b.ffn.mu_k, &mut buf.t1); // xk
+        lerp_shift(&buf.xf, prev, &b.ffn.mu_r, &mut buf.t2); // xr
+        b.ffn.wr.apply(&buf.t2, &mut buf.r, &mut buf.rank);
+        for v in buf.r.iter_mut() {
+            *v = sigmoid(*v);
+        }
+        if let Some(pred) = &mut self.preds[layer] {
+            // §3.2 sparse path: predict -> stream selected rows
+            if pred.mode == sparse_ffn::PredMode::GroundTruth {
+                buf.idx = SparsePredictor::ground_truth(&self.store, layer, &buf.t1)?;
+                let total = self.info.ffn;
+                pred.note_external(buf.idx.len(), total);
+            } else {
+                pred.predict(
+                    &buf.t1,
+                    &mut buf.pred_n,
+                    &mut buf.pred_f,
+                    &mut buf.pred_f2,
+                    &mut buf.idx,
+                );
+            }
+            let stats = sparse_ffn::sparse_ffn_apply(
+                &self.store,
+                &self.store.tracker,
+                layer,
+                &buf.idx,
+                &buf.t1,
+                &mut buf.ffn_out,
+                &mut buf.h_act,
+                true,
+            )?;
+            self.last_stats.ffn_active += stats.active;
+            self.last_stats.ffn_total += stats.total;
+            self.ffn_active_by_layer[layer] += stats.active as u64;
+            self.ffn_count_by_layer[layer] += stats.total as u64;
+        } else {
+            let wk_t = b.ffn.wk_t.as_ref().context("dense FFN weights not loaded")?;
+            let f = wk_t.rows();
+            buf.pred_f.clear();
+            buf.pred_f.resize(f, 0.0);
+            matvec_rows(wk_t, &buf.t1, &mut buf.pred_f);
+            sqrelu_inplace(&mut buf.pred_f);
+            // true activation sparsity (Figure 3 measures the dense model)
+            let nz = buf.pred_f.iter().filter(|&&v| v > 0.0).count();
+            self.ffn_active_by_layer[layer] += nz as u64;
+            self.ffn_count_by_layer[layer] += f as u64;
+            self.last_stats.ffn_active += nz;
+            self.last_stats.ffn_total += f;
+            buf.ffn_out.fill(0.0);
+            let wv = b.ffn.wv.as_ref().context("dense FFN wv not loaded")?;
+            matvec_in_out(&buf.pred_f, wv, &mut buf.ffn_out);
+        }
+        for i in 0..d {
+            buf.x[i] += buf.r[i] * buf.ffn_out[i];
+        }
+        state.ffn_x[layer].copy_from_slice(&buf.xf);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Full-model step
+    // ------------------------------------------------------------------
+
+    /// Advance one token; returns the final hidden state (post ln_out).
+    pub fn forward_hidden(&mut self, token: u32, state: &mut RwkvState) -> Result<Vec<f32>> {
+        self.last_stats = StepStats::default();
+        let t_emb = crate::util::Stopwatch::start();
+        let mut x_emb = vec![0.0f32; self.info.dim];
+        self.embed(token, &mut x_emb)?;
+        self.last_stats.emb_secs = t_emb.elapsed_secs();
+
+        if self.xla.is_some() {
+            let xla = self.xla.as_mut().unwrap();
+            return xla.step(&x_emb, &self.ln0, &self.ln_out, state);
+        }
+
+        layer_norm(&x_emb, &self.ln0.scale, &self.ln0.bias, 1e-5, &mut self.buf.x);
+        let layerwise = self.cfg.strategy == LoadStrategy::Layerwise;
+        for layer in 0..self.info.layers {
+            let block = if layerwise {
+                BlockW::load(&self.store, layer, !self.cfg.sparse_ffn)?
+            } else {
+                self.blocks[layer].clone().context("block not preloaded")?
+            };
+            let t_tm = crate::util::Stopwatch::start();
+            self.time_mix(&block, layer, state);
+            self.last_stats.timemix_secs += t_tm.elapsed_secs();
+            let t_cm = crate::util::Stopwatch::start();
+            self.chan_mix(&block, layer, state)?;
+            self.last_stats.chanmix_secs += t_cm.elapsed_secs();
+            if layerwise {
+                drop(block);
+                self.store.unload_prefix(&format!("b{layer}."));
+            }
+        }
+        let mut hidden = vec![0.0f32; self.info.dim];
+        layer_norm(&self.buf.x, &self.ln_out.scale, &self.ln_out.bias, 1e-5, &mut hidden);
+        Ok(hidden)
+    }
+
+    /// Logits from a hidden state, via the configured head path.
+    pub fn head_logits(&mut self, hidden: &[f32]) -> Result<Vec<f32>> {
+        let t = crate::util::Stopwatch::start();
+        let mut logits = vec![0.0f32; self.info.vocab];
+        if let Some(h) = &mut self.hier {
+            let stats = h.logits(&self.store, &self.store.tracker, hidden, &mut logits)?;
+            self.last_stats.head_rows = stats.tokens_loaded;
+        } else if let Some(hm) = &self.head_mat {
+            matvec_rows(hm, hidden, &mut logits);
+            self.last_stats.head_rows = self.info.vocab;
+        } else if let Some(xla) = &mut self.xla {
+            logits = xla.head(hidden)?;
+            self.last_stats.head_rows = self.info.vocab;
+        } else {
+            bail!("no head path configured");
+        }
+        self.last_stats.head_secs = t.elapsed_secs();
+        Ok(logits)
+    }
+
+    /// One full decode step: token in, logits out.
+    pub fn forward_token(&mut self, token: u32, state: &mut RwkvState) -> Result<Vec<f32>> {
+        let hidden = self.forward_hidden(token, state)?;
+        self.head_logits(&hidden)
+    }
+
+    /// Batched decode round: advance each slot one token, layer by layer.
+    ///
+    /// Numerically IDENTICAL to calling [`Self::forward_token`] per slot —
+    /// each slot computes with its own predicted row set — but the §3.2
+    /// sparse-row *loading* is accounted as the cross-slot UNION once per
+    /// layer per round: on a real device the rows stream from flash once
+    /// and serve every request in the round (the PowerInfer-style batching
+    /// amortization, here for the coordinator's dynamic batches).
+    pub fn forward_tokens_batch(
+        &mut self,
+        tokens: &[u32],
+        states: &mut [RwkvState],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(tokens.len() == states.len(), "tokens/states mismatch");
+        anyhow::ensure!(self.xla.is_none(), "batched decode is native-backend only");
+        let n = tokens.len();
+        let d = self.info.dim;
+        // per-slot working x
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for &t in tokens {
+            let mut x_emb = vec![0.0f32; d];
+            self.embed(t, &mut x_emb)?;
+            let mut x = vec![0.0f32; d];
+            layer_norm(&x_emb, &self.ln0.scale, &self.ln0.bias, 1e-5, &mut x);
+            xs.push(x);
+        }
+        let layerwise = self.cfg.strategy == LoadStrategy::Layerwise;
+        let mut union_scratch: Vec<u32> = Vec::new();
+        for layer in 0..self.info.layers {
+            let block = if layerwise {
+                BlockW::load(&self.store, layer, !self.cfg.sparse_ffn)?
+            } else {
+                self.blocks[layer].clone().context("block not preloaded")?
+            };
+            // time-mix per slot (weights shared, state per slot)
+            for s in 0..n {
+                self.buf.x.copy_from_slice(&xs[s]);
+                self.time_mix(&block, layer, &mut states[s]);
+                xs[s].copy_from_slice(&self.buf.x);
+            }
+            // channel-mix: predict per slot first, then account the union
+            if self.cfg.sparse_ffn {
+                union_scratch.clear();
+                let mut per_slot_idx: Vec<Vec<u32>> = Vec::with_capacity(n);
+                for s in 0..n {
+                    self.buf.x.copy_from_slice(&xs[s]);
+                    // replicate chan_mix's xk computation for prediction
+                    let buf = &mut self.buf;
+                    layer_norm(&buf.x, &block.ln2.scale, &block.ln2.bias, 1e-5, &mut buf.xf);
+                    lerp_shift(&buf.xf, &states[s].ffn_x[layer], &block.ffn.mu_k, &mut buf.t1);
+                    let pred = self.preds[layer].as_mut().unwrap();
+                    if pred.mode == sparse_ffn::PredMode::GroundTruth {
+                        buf.idx = SparsePredictor::ground_truth(&self.store, layer, &buf.t1)?;
+                        pred.note_external(buf.idx.len(), self.info.ffn);
+                    } else {
+                        pred.predict(
+                            &buf.t1,
+                            &mut buf.pred_n,
+                            &mut buf.pred_f,
+                            &mut buf.pred_f2,
+                            &mut buf.idx,
+                        );
+                    }
+                    union_scratch.extend_from_slice(&buf.idx);
+                    per_slot_idx.push(buf.idx.clone());
+                }
+                union_scratch.sort_unstable();
+                union_scratch.dedup();
+                let row_bytes = sparse_ffn::ffn_row_pair_bytes(&self.store, layer)?;
+                let union_bytes = union_scratch.len() as u64 * row_bytes;
+                self.store.tracker.load(crate::metrics::Group::ChanMix, union_bytes);
+                self.store.tracker.unload(crate::metrics::Group::ChanMix, union_bytes);
+                self.metrics.inc("batch_union_rows", union_scratch.len() as u64);
+                self.metrics.inc(
+                    "batch_individual_rows",
+                    per_slot_idx.iter().map(|v| v.len() as u64).sum(),
+                );
+                // now the actual math, per slot, unaccounted (union covered it)
+                for s in 0..n {
+                    self.buf.x.copy_from_slice(&xs[s]);
+                    self.chan_mix_with_idx(&block, layer, &mut states[s], &per_slot_idx[s])?;
+                    xs[s].copy_from_slice(&self.buf.x);
+                }
+            } else {
+                for s in 0..n {
+                    self.buf.x.copy_from_slice(&xs[s]);
+                    self.chan_mix(&block, layer, &mut states[s])?;
+                    xs[s].copy_from_slice(&self.buf.x);
+                }
+            }
+            if layerwise {
+                drop(block);
+                self.store.unload_prefix(&format!("b{layer}."));
+            }
+        }
+        let mut out = Vec::with_capacity(n);
+        for x in &xs {
+            let mut hidden = vec![0.0f32; d];
+            layer_norm(x, &self.ln_out.scale, &self.ln_out.bias, 1e-5, &mut hidden);
+            out.push(self.head_logits(&hidden)?);
+        }
+        Ok(out)
+    }
+
+    /// Channel-mix with a pre-computed active index set (batched path).
+    fn chan_mix_with_idx(
+        &mut self,
+        b: &BlockW,
+        layer: usize,
+        state: &mut RwkvState,
+        idx: &[u32],
+    ) -> Result<()> {
+        let d = self.info.dim;
+        let buf = &mut self.buf;
+        layer_norm(&buf.x, &b.ln2.scale, &b.ln2.bias, 1e-5, &mut buf.xf);
+        let prev = &state.ffn_x[layer];
+        lerp_shift(&buf.xf, prev, &b.ffn.mu_k, &mut buf.t1);
+        lerp_shift(&buf.xf, prev, &b.ffn.mu_r, &mut buf.t2);
+        b.ffn.wr.apply(&buf.t2, &mut buf.r, &mut buf.rank);
+        for v in buf.r.iter_mut() {
+            *v = sigmoid(*v);
+        }
+        let stats = sparse_ffn::sparse_ffn_apply(
+            &self.store,
+            &self.store.tracker,
+            layer,
+            idx,
+            &buf.t1,
+            &mut buf.ffn_out,
+            &mut buf.h_act,
+            false,
+        )?;
+        self.last_stats.ffn_active += stats.active;
+        self.last_stats.ffn_total += stats.total;
+        self.ffn_active_by_layer[layer] += stats.active as u64;
+        self.ffn_count_by_layer[layer] += stats.total as u64;
+        for i in 0..d {
+            buf.x[i] += buf.r[i] * buf.ffn_out[i];
+        }
+        state.ffn_x[layer].copy_from_slice(&buf.xf);
+        Ok(())
+    }
+
+    /// Consume a prompt (teacher-forced), then sample `n` tokens.
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        n: usize,
+        sampler: &mut Sampler,
+        state: &mut RwkvState,
+    ) -> Result<Vec<u32>> {
+        let mut last = crate::text::BOS;
+        for &t in prompt {
+            self.forward_hidden(last, state)?;
+            last = t;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut logits = self.forward_token(last, state)?;
+            let tok = sampler.sample(&mut logits);
+            out.push(tok);
+            last = tok;
+            self.metrics.inc("tokens_generated", 1);
+        }
+        Ok(out)
+    }
+
+    /// (current, peak) weight-residency bytes.
+    pub fn memory_report(&self) -> (u64, u64) {
+        (self.store.tracker.current(), self.store.tracker.peak())
+    }
+
+    /// Mean FFN sparsity per layer (fraction of *inactive* neurons).
+    pub fn sparsity_by_layer(&self) -> Vec<f64> {
+        self.preds
+            .iter()
+            .map(|p| p.as_ref().map(|p| 1.0 - p.mean_kept()).unwrap_or(0.0))
+            .collect()
+    }
+}

@@ -1,0 +1,291 @@
+//! §3.2 — sparse channel-mix FFN via the predictor ensemble.
+//!
+//! Per layer we hold the MLP predictor (L1: D->N, L2: N->F) and the 1-bit
+//! shadow of W_k (sign bits + per-column scale).  Per token:
+//!
+//!   P_mlp   = sigmoid(relu(x L1) L2)        >= t_mlp           (Eq. 3)
+//!   P_quant = x W^{INT1}                    >= percentile(t_quant) (Eq. 4)
+//!   P_ens   = P_mlp OR P_quant                                  (Eq. 5)
+//!
+//! Only the P_ens-selected rows of wk_t / wv are streamed from the mmap
+//! (never materialized as full matrices); the bytes touched are accounted
+//! as transient ChanMix residency — that is the §3.2 memory saving.
+
+use anyhow::Result;
+
+use crate::engine::weights::{ProjW, WeightStore};
+use crate::metrics::{Group, MemTracker};
+use crate::tensor::{bit_matvec, matvec_in_out, sigmoid};
+
+/// Which predictor drives row selection (Figure 9's study).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredMode {
+    /// max(P_MLP, P_quant) — the paper's default (Eq. 5).
+    Ensemble,
+    /// MLP only (Eq. 3).
+    MlpOnly,
+    /// 1-bit shadow only (Eq. 4).
+    QuantOnly,
+    /// 4-bit shadow only (§B.4's "n-bit" study; 4x the 1-bit memory).
+    Quant4Only,
+    /// Oracle: the true relu mask (accuracy ceiling; no memory saving
+    /// in practice since computing it touches every row).
+    GroundTruth,
+}
+
+impl PredMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "ensemble" => PredMode::Ensemble,
+            "mlp" => PredMode::MlpOnly,
+            "quant" => PredMode::QuantOnly,
+            "quant4" => PredMode::Quant4Only,
+            "gt" => PredMode::GroundTruth,
+            _ => anyhow::bail!("unknown predictor mode '{s}' (ensemble|mlp|quant|quant4|gt)"),
+        })
+    }
+}
+
+pub struct SparsePredictor {
+    pub layer: usize,
+    l1: std::sync::Arc<crate::tensor::Mat>, // (D, N)
+    l2: std::sync::Arc<crate::tensor::Mat>, // (N, F)
+    sign: Vec<u8>,                          // (ceil(D/8), F) packed
+    sign_scale: Vec<f32>,                   // (F,)
+    q4: Option<Vec<u8>>,                    // (ceil(D/2), F) nibble-packed
+    q4_scale: Vec<f32>,                     // (F,)
+    pub t_mlp: f32,
+    pub t_quant: f32,
+    pub mode: PredMode,
+    // telemetry for fig3/fig9
+    pub tokens: u64,
+    pub kept_sum: f64,
+    pub bytes_streamed: u64,
+}
+
+pub struct SparseStats {
+    pub active: usize,
+    pub total: usize,
+    pub bytes: u64,
+}
+
+impl SparsePredictor {
+    pub fn load(store: &WeightStore, layer: usize, t_mlp: f32, t_quant: f32) -> Result<Self> {
+        let p = format!("b{layer}.pred");
+        let l1 = store.mat(&format!("{p}.l1"))?;
+        let l2 = store.mat(&format!("{p}.l2"))?;
+        let sign = store.rkv.raw(&format!("{p}.sign"))?.to_vec();
+        let sign_scale = store.rkv.vec_f32(&format!("{p}.scale"))?;
+        store
+            .tracker
+            .load(Group::Predictor, sign.len() as u64 + 4 * sign_scale.len() as u64);
+        // optional 4-bit shadow: loaded lazily only when the mode asks
+        // for it (it is 4x the 1-bit size — fig9's memory/accuracy axis)
+        let (q4, q4_scale) = if store.rkv.has(&format!("{p}.q4")) {
+            (None, store.rkv.vec_f32(&format!("{p}.q4.scale"))?)
+        } else {
+            (None, Vec::new())
+        };
+        Ok(Self {
+            layer,
+            l1,
+            l2,
+            sign,
+            sign_scale,
+            q4,
+            q4_scale,
+            t_mlp,
+            t_quant,
+            mode: PredMode::Ensemble,
+            tokens: 0,
+            kept_sum: 0.0,
+            bytes_streamed: 0,
+        })
+    }
+
+    /// Materialize the 4-bit shadow (Quant4Only mode). Tracked bytes.
+    pub fn load_q4(&mut self, store: &WeightStore) -> Result<()> {
+        if self.q4.is_some() {
+            return Ok(());
+        }
+        let p = format!("b{}.pred", self.layer);
+        anyhow::ensure!(
+            store.rkv.has(&format!("{p}.q4")),
+            "checkpoint has no 4-bit shadow (re-run make artifacts)"
+        );
+        let q4 = store.rkv.raw(&format!("{p}.q4"))?.to_vec();
+        store.tracker.load(Group::Predictor, q4.len() as u64);
+        self.q4 = Some(q4);
+        Ok(())
+    }
+
+    /// Predict the active-neuron index set for input `xk` (the channel-mix
+    /// key input).  `scratch` buffers are caller-owned to keep this
+    /// allocation-free on the hot path.
+    pub fn predict(
+        &mut self,
+        xk: &[f32],
+        scratch_n: &mut Vec<f32>,
+        scratch_f: &mut Vec<f32>,
+        scratch_f2: &mut Vec<f32>,
+        out_idx: &mut Vec<u32>,
+    ) {
+        let n = self.l1.cols();
+        let f = self.l2.cols();
+        // MLP logits
+        scratch_n.clear();
+        scratch_n.resize(n, 0.0);
+        matvec_in_out(xk, &self.l1, scratch_n);
+        for v in scratch_n.iter_mut() {
+            *v = v.max(0.0);
+        }
+        scratch_f.clear();
+        scratch_f.resize(f, 0.0);
+        matvec_in_out(scratch_n, &self.l2, scratch_f);
+        // shadow scores: 1-bit by default, 4-bit nibbles in Quant4Only
+        scratch_f2.clear();
+        scratch_f2.resize(f, 0.0);
+        if self.mode == PredMode::Quant4Only {
+            let q4 = self.q4.as_ref().expect("load_q4 before Quant4Only");
+            crate::tensor::nib4_matvec(q4, &self.q4_scale, xk.len(), xk, scratch_f2);
+        } else {
+            bit_matvec(&self.sign, &self.sign_scale, xk.len(), xk, scratch_f2);
+        }
+        // percentile threshold over shadow scores (keep top (1-t_quant))
+        let keep = ((1.0 - self.t_quant) * f as f32).ceil() as usize;
+        let thr = kth_largest(scratch_f2, keep.max(1));
+        // union / single-source selection per mode
+        out_idx.clear();
+        let mlp_logit_thr = logit(self.t_mlp);
+        for j in 0..f {
+            let keep = match self.mode {
+                PredMode::Ensemble => scratch_f[j] >= mlp_logit_thr || scratch_f2[j] >= thr,
+                PredMode::MlpOnly => scratch_f[j] >= mlp_logit_thr,
+                PredMode::QuantOnly | PredMode::Quant4Only => scratch_f2[j] >= thr,
+                // GT is materialized by the engine via `ground_truth`;
+                // falling through here behaves like the ensemble.
+                PredMode::GroundTruth => scratch_f[j] >= mlp_logit_thr || scratch_f2[j] >= thr,
+            };
+            if keep {
+                out_idx.push(j as u32);
+            }
+        }
+        self.tokens += 1;
+        self.kept_sum += out_idx.len() as f64 / f as f64;
+    }
+
+    /// Record telemetry for an externally-chosen index set (GT mode).
+    pub fn note_external(&mut self, kept: usize, total: usize) {
+        self.tokens += 1;
+        self.kept_sum += kept as f64 / total.max(1) as f64;
+    }
+
+    /// Ground-truth mask (used by fig9's GT row and tests): indices where
+    /// relu(x @ wk)^2 > 0, computed from the dense matrices.
+    pub fn ground_truth(store: &WeightStore, layer: usize, xk: &[f32]) -> Result<Vec<u32>> {
+        let wk_t = store.row_view(&format!("b{layer}.ffn.wk_t"))?;
+        let mut idx = Vec::new();
+        for j in 0..wk_t.rows {
+            if wk_t.dot_row(j, xk) > 0.0 {
+                idx.push(j as u32);
+            }
+        }
+        Ok(idx)
+    }
+
+    /// Mean kept-fraction across all predictions so far (1 - sparsity).
+    pub fn mean_kept(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.kept_sum / self.tokens as f64
+        }
+    }
+}
+
+/// Streamed sparse FFN evaluation: `out = [sqrelu(wk_t[idx] @ xk)] @ wv[idx]`.
+/// Returns stats with the bytes touched.  `account = false` skips the
+/// residency tracking (the batched scheduler accounts the cross-request
+/// UNION once per round instead — see `RwkvEngine::forward_tokens_batch`).
+pub fn sparse_ffn_apply(
+    store: &WeightStore,
+    tracker: &MemTracker,
+    layer: usize,
+    idx: &[u32],
+    xk: &[f32],
+    out: &mut [f32],
+    h_scratch: &mut Vec<f32>,
+    account: bool,
+) -> Result<SparseStats> {
+    let wk_t = store.row_view(&format!("b{layer}.ffn.wk_t"))?;
+    let wv = store.row_view(&format!("b{layer}.ffn.wv"))?;
+    h_scratch.clear();
+    h_scratch.resize(idx.len(), 0.0);
+    for (k, &j) in idx.iter().enumerate() {
+        let a = wk_t.dot_row(j as usize, xk).max(0.0);
+        h_scratch[k] = a * a;
+    }
+    out.fill(0.0);
+    for (k, &j) in idx.iter().enumerate() {
+        if h_scratch[k] != 0.0 {
+            wv.accum_row(j as usize, h_scratch[k], out);
+        }
+    }
+    wv.apply_col_scale(out);
+    let bytes = idx.len() as u64 * (wk_t.row_bytes() + wv.row_bytes());
+    if account {
+        // transient residency: rows live only for this token
+        tracker.load(Group::ChanMix, bytes);
+        tracker.unload(Group::ChanMix, bytes);
+    }
+    Ok(SparseStats { active: idx.len(), total: wk_t.rows, bytes })
+}
+
+/// Byte cost of one FFN row pair (wk_t + wv) — union accounting helper.
+pub fn ffn_row_pair_bytes(store: &WeightStore, layer: usize) -> Result<u64> {
+    let wk_t = store.row_view(&format!("b{layer}.ffn.wk_t"))?;
+    let wv = store.row_view(&format!("b{layer}.ffn.wv"))?;
+    Ok(wk_t.row_bytes() + wv.row_bytes())
+}
+
+/// Dense-equivalent FFN used by the gate path: `r = sigmoid(proj(xr))`.
+pub fn gate(wr: &ProjW, xr: &[f32], out: &mut [f32], scratch: &mut Vec<f32>) {
+    wr.apply(xr, out, scratch);
+    for v in out.iter_mut() {
+        *v = sigmoid(*v);
+    }
+}
+
+/// k-th largest value of `xs` (k >= 1), O(n) selection on a scratch copy.
+pub fn kth_largest(xs: &[f32], k: usize) -> f32 {
+    let mut v = xs.to_vec();
+    let k = k.min(v.len()).max(1);
+    let idx = v.len() - k;
+    v.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    v[idx]
+}
+
+fn logit(p: f32) -> f32 {
+    let p = p.clamp(1e-6, 1.0 - 1e-6);
+    (p / (1.0 - p)).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kth_largest_selects() {
+        let xs = [1.0f32, 5.0, 3.0, 2.0, 4.0];
+        assert_eq!(kth_largest(&xs, 1), 5.0);
+        assert_eq!(kth_largest(&xs, 2), 4.0);
+        assert_eq!(kth_largest(&xs, 5), 1.0);
+    }
+
+    #[test]
+    fn logit_inverts_sigmoid() {
+        for p in [0.3f32, 0.5, 0.7, 0.9] {
+            assert!((sigmoid(logit(p)) - p).abs() < 1e-5);
+        }
+    }
+}

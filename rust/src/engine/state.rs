@@ -1,0 +1,71 @@
+//! RWKV recurrent state: O(1) memory across timesteps (no KV cache —
+//! the architectural advantage Figure 5's comparison leans on).
+
+#[derive(Clone, Debug)]
+pub struct RwkvState {
+    pub dim: usize,
+    pub heads: usize,
+    pub head_size: usize,
+    /// Per layer: previous ln1-ed x (token shift input), (D,).
+    pub att_x: Vec<Vec<f32>>,
+    /// Per layer: WKV state, (H*S*S,) laid out [h][i][j].
+    pub wkv: Vec<Vec<f32>>,
+    /// Per layer: previous ln2-ed x, (D,).
+    pub ffn_x: Vec<Vec<f32>>,
+}
+
+impl RwkvState {
+    pub fn zero(layers: usize, dim: usize, heads: usize, head_size: usize) -> Self {
+        Self {
+            dim,
+            heads,
+            head_size,
+            att_x: vec![vec![0.0; dim]; layers],
+            wkv: vec![vec![0.0; heads * head_size * head_size]; layers],
+            ffn_x: vec![vec![0.0; dim]; layers],
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.att_x.len()
+    }
+
+    /// Bytes of state memory (for the O(1)-state accounting in fig5/fig6).
+    pub fn nbytes(&self) -> u64 {
+        let per_layer = self.dim * 2 + self.heads * self.head_size * self.head_size;
+        (4 * per_layer * self.layers()) as u64
+    }
+
+    pub fn reset(&mut self) {
+        for v in self
+            .att_x
+            .iter_mut()
+            .chain(self.wkv.iter_mut())
+            .chain(self.ffn_x.iter_mut())
+        {
+            v.fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_state_shapes() {
+        let s = RwkvState::zero(4, 128, 8, 16);
+        assert_eq!(s.layers(), 4);
+        assert_eq!(s.att_x[0].len(), 128);
+        assert_eq!(s.wkv[0].len(), 8 * 16 * 16);
+        assert_eq!(s.nbytes(), 4 * 4 * (256 + 2048));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut s = RwkvState::zero(2, 8, 2, 4);
+        s.wkv[1][5] = 3.0;
+        s.reset();
+        assert_eq!(s.wkv[1][5], 0.0);
+    }
+}

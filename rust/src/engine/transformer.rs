@@ -1,0 +1,199 @@
+//! Baseline transformer engine (OPT/GPT-Neo/TinyLlama stand-in, S3).
+//!
+//! Pre-LN GPT with learned positions, causal multi-head attention and a
+//! GELU MLP — the comparison models of Figures 5 and 10.  The KV cache
+//! grows O(T) per layer; Figure 5's memory comparison excludes it (as the
+//! paper does, favoring transformers), but we track it under
+//! `Group::State` so `exp fig5 --with-kv` can show the honest number.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::EngineConfig;
+use crate::metrics::Group;
+use crate::tensor::{gelu, layer_norm, matvec_in_out, matvec_rows, Mat};
+use crate::util::softmax_inplace;
+use super::sampler::Sampler;
+use super::weights::{LnW, WeightStore};
+
+pub struct TfBlockW {
+    pub ln1: LnW,
+    pub ln2: LnW,
+    pub wq: Arc<Mat>,
+    pub wk: Arc<Mat>,
+    pub wv: Arc<Mat>,
+    pub wo: Arc<Mat>,
+    pub up: Arc<Mat>,
+    pub down: Arc<Mat>,
+}
+
+/// Per-layer KV cache: k/v rows appended per timestep.
+pub struct KvCache {
+    pub k: Vec<f32>, // t * dim
+    pub v: Vec<f32>,
+    pub t: usize,
+}
+
+pub struct TransformerEngine {
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_size: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub store: Arc<WeightStore>,
+    emb: Arc<Mat>,
+    pos: Arc<Mat>,
+    ln_out: LnW,
+    head: Arc<Mat>,
+    blocks: Vec<TfBlockW>,
+    pub kv: Vec<KvCache>,
+}
+
+impl TransformerEngine {
+    pub fn load(cfg: &EngineConfig) -> Result<Self> {
+        let manifest_path: PathBuf = cfg
+            .artifacts
+            .join("models")
+            .join(format!("{}.json", cfg.model));
+        let store = Arc::new(WeightStore::open(&manifest_path)?);
+        let m = store.manifest.clone();
+        if m.is_rwkv() {
+            bail!("{} is an RWKV checkpoint; use RwkvEngine", cfg.model);
+        }
+        let mut blocks = Vec::new();
+        for i in 0..m.layers {
+            let p = format!("b{i}");
+            blocks.push(TfBlockW {
+                ln1: LnW::load(&store, &format!("{p}.ln1"))?,
+                ln2: LnW::load(&store, &format!("{p}.ln2"))?,
+                wq: store.mat(&format!("{p}.att.wq"))?,
+                wk: store.mat(&format!("{p}.att.wk"))?,
+                wv: store.mat(&format!("{p}.att.wv"))?,
+                wo: store.mat(&format!("{p}.att.wo"))?,
+                up: store.mat(&format!("{p}.mlp.up"))?,
+                down: store.mat(&format!("{p}.mlp.down"))?,
+            });
+        }
+        let max_seq = store.manifest.raw.f64_at(&["max_seq"]).unwrap_or(512.0) as usize;
+        Ok(Self {
+            dim: m.dim,
+            layers: m.layers,
+            heads: m.heads,
+            head_size: m.head_size,
+            vocab: m.vocab,
+            max_seq,
+            emb: store.mat("emb")?,
+            pos: store.mat("pos")?,
+            ln_out: LnW::load(&store, "ln_out")?,
+            head: store.mat("head")?,
+            kv: (0..m.layers).map(|_| KvCache { k: vec![], v: vec![], t: 0 }).collect(),
+            blocks,
+            store,
+        })
+    }
+
+    pub fn reset(&mut self) {
+        for kv in &mut self.kv {
+            let bytes = 4 * (kv.k.len() + kv.v.len()) as u64;
+            self.store.tracker.unload(Group::State, bytes);
+            kv.k.clear();
+            kv.v.clear();
+            kv.t = 0;
+        }
+    }
+
+    /// One decode step; returns logits.
+    pub fn forward_token(&mut self, token: u32) -> Result<Vec<f32>> {
+        let d = self.dim;
+        let (h, s) = (self.heads, self.head_size);
+        let t_now = self.kv[0].t;
+        if t_now >= self.max_seq {
+            bail!("sequence exceeds max_seq={}", self.max_seq);
+        }
+        let mut x = vec![0.0f32; d];
+        self.emb.decode_row(token as usize, &mut x);
+        let mut pos_row = vec![0.0f32; d];
+        self.pos.decode_row(t_now, &mut pos_row);
+        for i in 0..d {
+            x[i] += pos_row[i];
+        }
+        let mut xn = vec![0.0f32; d];
+        let (mut q, mut k, mut v) = (vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d]);
+        let mut att_out = vec![0.0f32; d];
+        for li in 0..self.layers {
+            let b = &self.blocks[li];
+            layer_norm(&x, &b.ln1.scale, &b.ln1.bias, 1e-5, &mut xn);
+            q.fill(0.0);
+            k.fill(0.0);
+            v.fill(0.0);
+            matvec_in_out(&xn, &b.wq, &mut q);
+            matvec_in_out(&xn, &b.wk, &mut k);
+            matvec_in_out(&xn, &b.wv, &mut v);
+            let kv = &mut self.kv[li];
+            kv.k.extend_from_slice(&k);
+            kv.v.extend_from_slice(&v);
+            kv.t += 1;
+            self.store.tracker.load(Group::State, 8 * d as u64);
+            let t_len = kv.t;
+            att_out.fill(0.0);
+            let inv_sqrt = 1.0 / (s as f32).sqrt();
+            let mut scores = vec![0.0f32; t_len];
+            for hh in 0..h {
+                let qh = &q[hh * s..(hh + 1) * s];
+                for (tt, sc) in scores.iter_mut().enumerate() {
+                    let kh = &kv.k[tt * d + hh * s..tt * d + (hh + 1) * s];
+                    *sc = crate::tensor::dot_f32(qh, kh) * inv_sqrt;
+                }
+                softmax_inplace(&mut scores);
+                let oh = &mut att_out[hh * s..(hh + 1) * s];
+                for (tt, &p) in scores.iter().enumerate() {
+                    let vh = &kv.v[tt * d + hh * s..tt * d + (hh + 1) * s];
+                    for j in 0..s {
+                        oh[j] += p * vh[j];
+                    }
+                }
+            }
+            matvec_in_out(&att_out, &b.wo, &mut x); // += residual
+            // MLP
+            layer_norm(&x, &b.ln2.scale, &b.ln2.bias, 1e-5, &mut xn);
+            let mut hidden = vec![0.0f32; b.up.cols()];
+            matvec_in_out(&xn, &b.up, &mut hidden);
+            for hv in hidden.iter_mut() {
+                *hv = gelu(*hv);
+            }
+            matvec_in_out(&hidden, &b.down, &mut x); // += residual
+        }
+        layer_norm(&x, &self.ln_out.scale, &self.ln_out.bias, 1e-5, &mut xn);
+        let mut logits = vec![0.0f32; self.vocab];
+        matvec_rows(&self.head, &xn, &mut logits);
+        Ok(logits)
+    }
+
+    pub fn generate(&mut self, prompt: &[u32], n: usize, sampler: &mut Sampler) -> Result<Vec<u32>> {
+        let mut last = crate::text::BOS;
+        for &t in prompt {
+            self.forward_token(last)?;
+            last = t;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut logits = self.forward_token(last)?;
+            let tok = sampler.sample(&mut logits);
+            out.push(tok);
+            last = tok;
+        }
+        Ok(out)
+    }
+
+    pub fn memory_report(&self) -> (u64, u64) {
+        (self.store.tracker.current(), self.store.tracker.peak())
+    }
+
+    /// Weight bytes excluding the KV cache (Figure 5's convention).
+    pub fn weight_bytes(&self) -> u64 {
+        self.store.rkv.total_bytes()
+    }
+}

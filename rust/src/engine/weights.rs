@@ -1,0 +1,413 @@
+//! Weight store: tracked, strategy-aware access to `.rkv` tensors.
+//!
+//! Every copy of weight bytes from the mmap into RAM goes through here and
+//! is registered with the [`MemTracker`] under its component group — this
+//! is what makes the Figure 5/6 memory numbers auditable.  Technique-
+//! managed tensors (embedding rows, sparse FFN rows, hierarchical-head
+//! rows) are *not* loaded as whole matrices; they are streamed per token
+//! via [`RowView`] and accounted as transient bytes.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::io::{Manifest, RkvFile};
+use crate::metrics::{Group, MemTracker};
+use crate::tensor::{matvec_in_out, DType, Mat};
+use crate::util::f16::f16_to_f32_fast as f16_to_f32;
+
+/// Component group of a tensor, by naming convention (export.py).
+pub fn group_of(name: &str) -> Group {
+    if name.starts_with("emb") {
+        Group::Emb
+    } else if name.starts_with("head") {
+        Group::Head
+    } else if name.starts_with("hh.") {
+        Group::HierHead
+    } else if name.contains(".pred.") {
+        Group::Predictor
+    } else if name.contains(".att.") || name.contains(".ln1.") {
+        Group::TimeMix
+    } else if name.contains(".ffn.") || name.contains(".ln2.") {
+        Group::ChanMix
+    } else {
+        Group::Other
+    }
+}
+
+pub struct WeightStore {
+    pub rkv: RkvFile,
+    pub manifest: Manifest,
+    pub tracker: Arc<MemTracker>,
+    mats: Mutex<HashMap<String, Arc<Mat>>>,
+    vecs: Mutex<HashMap<String, Arc<Vec<f32>>>>,
+}
+
+impl WeightStore {
+    pub fn open(manifest_path: &Path) -> Result<Self> {
+        let manifest = Manifest::load(manifest_path)?;
+        let rkv = RkvFile::open(&manifest.rkv_path())?;
+        Ok(Self {
+            rkv,
+            manifest,
+            tracker: Arc::new(MemTracker::new()),
+            mats: Mutex::new(HashMap::new()),
+            vecs: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load (or fetch cached) a matrix; bytes tracked on first load.
+    pub fn mat(&self, name: &str) -> Result<Arc<Mat>> {
+        if let Some(m) = self.mats.lock().unwrap().get(name) {
+            return Ok(Arc::clone(m));
+        }
+        let m = Arc::new(self.rkv.mat(name)?);
+        self.tracker.load(group_of(name), m.nbytes());
+        self.mats.lock().unwrap().insert(name.to_string(), Arc::clone(&m));
+        Ok(m)
+    }
+
+    pub fn vec(&self, name: &str) -> Result<Arc<Vec<f32>>> {
+        if let Some(v) = self.vecs.lock().unwrap().get(name) {
+            return Ok(Arc::clone(v));
+        }
+        let v = Arc::new(self.rkv.vec_f32(name)?);
+        self.tracker.load(group_of(name), 4 * v.len() as u64);
+        self.vecs.lock().unwrap().insert(name.to_string(), Arc::clone(&v));
+        Ok(v)
+    }
+
+    /// Drop all cached tensors whose name starts with `prefix`, returning
+    /// the bytes released (layerwise strategy).
+    pub fn unload_prefix(&self, prefix: &str) -> u64 {
+        let mut released = 0u64;
+        {
+            let mut mats = self.mats.lock().unwrap();
+            let keys: Vec<String> = mats.keys().filter(|k| k.starts_with(prefix)).cloned().collect();
+            for k in keys {
+                if let Some(m) = mats.remove(&k) {
+                    self.tracker.unload(group_of(&k), m.nbytes());
+                    released += m.nbytes();
+                }
+            }
+        }
+        let mut vecs = self.vecs.lock().unwrap();
+        let keys: Vec<String> = vecs.keys().filter(|k| k.starts_with(prefix)).cloned().collect();
+        for k in keys {
+            if let Some(v) = vecs.remove(&k) {
+                let b = 4 * v.len() as u64;
+                self.tracker.unload(group_of(&k), b);
+                released += b;
+            }
+        }
+        released
+    }
+
+    /// Decode embedding row `token` into `out`; returns bytes touched.
+    pub fn emb_row(&self, token: u32, out: &mut [f32]) -> Result<u64> {
+        let e = self.rkv.entry("emb")?;
+        let cols = e.shape[1];
+        if out.len() != cols {
+            bail!("emb row buffer size mismatch");
+        }
+        match e.dtype {
+            DType::F16 => {
+                let row = self.rkv.row_f16("emb", token as usize)?;
+                for (o, &h) in out.iter_mut().zip(row) {
+                    *o = f16_to_f32(h);
+                }
+                Ok(2 * cols as u64)
+            }
+            DType::F32 => {
+                let raw = self.rkv.raw("emb")?;
+                let all = unsafe {
+                    std::slice::from_raw_parts(raw.as_ptr() as *const f32, raw.len() / 4)
+                };
+                let r = &all[token as usize * cols..(token as usize + 1) * cols];
+                out.copy_from_slice(r);
+                Ok(4 * cols as u64)
+            }
+            DType::I8 => {
+                let raw = self.rkv.raw("emb")?;
+                let scale = self.vec("emb.scale")?;
+                let q = unsafe {
+                    std::slice::from_raw_parts(raw.as_ptr() as *const i8, raw.len())
+                };
+                let r = &q[token as usize * cols..(token as usize + 1) * cols];
+                for ((o, &qv), &s) in out.iter_mut().zip(r).zip(scale.iter()) {
+                    *o = qv as f32 * s;
+                }
+                Ok(cols as u64)
+            }
+            other => bail!("emb dtype {:?} unsupported", other),
+        }
+    }
+
+    /// A row-per-output view over a matrix that stays in the mmap
+    /// (sparse FFN §3.2 and hierarchical head §3.3 consume these).
+    pub fn row_view(&self, name: &str) -> Result<RowView<'_>> {
+        let e = self.rkv.entry(name)?;
+        if e.shape.len() != 2 {
+            bail!("row_view on non-2D tensor {name}");
+        }
+        let scale = if e.dtype == DType::I8 {
+            Some(self.rkv.vec_f32(&format!("{name}.scale"))?)
+        } else {
+            None
+        };
+        Ok(RowView {
+            dtype: e.dtype,
+            rows: e.shape[0],
+            cols: e.shape[1],
+            raw: self.rkv.raw(name)?,
+            scale,
+        })
+    }
+}
+
+/// Borrowed row-major matrix view in storage precision.
+pub struct RowView<'a> {
+    pub dtype: DType,
+    pub rows: usize,
+    pub cols: usize,
+    raw: &'a [u8],
+    /// Per-row scale (i8, row-per-output tensors like wk_t/head) OR
+    /// per-column scale (i8, (in,out) tensors like wv) — consumer knows.
+    pub scale: Option<Vec<f32>>,
+}
+
+impl<'a> RowView<'a> {
+    pub fn row_bytes(&self) -> u64 {
+        (self.cols * self.dtype.size()) as u64
+    }
+
+    /// `dot(row_j, x)` with per-ROW scale applied for i8.
+    pub fn dot_row(&self, j: usize, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.cols);
+        match self.dtype {
+            DType::F16 => {
+                let all = unsafe {
+                    std::slice::from_raw_parts(self.raw.as_ptr() as *const u16, self.rows * self.cols)
+                };
+                crate::tensor::dot_f16(&all[j * self.cols..(j + 1) * self.cols], x)
+            }
+            DType::F32 => {
+                let all = unsafe {
+                    std::slice::from_raw_parts(self.raw.as_ptr() as *const f32, self.rows * self.cols)
+                };
+                crate::tensor::dot_f32(&all[j * self.cols..(j + 1) * self.cols], x)
+            }
+            DType::I8 => {
+                let all = unsafe {
+                    std::slice::from_raw_parts(self.raw.as_ptr() as *const i8, self.rows * self.cols)
+                };
+                let s = self.scale.as_ref().map(|s| s[j]).unwrap_or(1.0);
+                s * crate::tensor::dot_i8(&all[j * self.cols..(j + 1) * self.cols], x)
+            }
+            _ => f32::NAN,
+        }
+    }
+
+    /// `out[:] += h * row_j` (per-COLUMN scale for i8 applied by caller
+    /// via [`RowView::apply_col_scale`] after accumulation).
+    pub fn accum_row(&self, j: usize, h: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        match self.dtype {
+            DType::F16 => {
+                let all = unsafe {
+                    std::slice::from_raw_parts(self.raw.as_ptr() as *const u16, self.rows * self.cols)
+                };
+                for (o, &v) in out.iter_mut().zip(&all[j * self.cols..(j + 1) * self.cols]) {
+                    *o += h * f16_to_f32(v);
+                }
+            }
+            DType::F32 => {
+                let all = unsafe {
+                    std::slice::from_raw_parts(self.raw.as_ptr() as *const f32, self.rows * self.cols)
+                };
+                for (o, &v) in out.iter_mut().zip(&all[j * self.cols..(j + 1) * self.cols]) {
+                    *o += h * v;
+                }
+            }
+            DType::I8 => {
+                let all = unsafe {
+                    std::slice::from_raw_parts(self.raw.as_ptr() as *const i8, self.rows * self.cols)
+                };
+                for (o, &v) in out.iter_mut().zip(&all[j * self.cols..(j + 1) * self.cols]) {
+                    *o += h * v as f32;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Apply the per-column scale (i8 `(in,out)` tensors) after accumulation.
+    pub fn apply_col_scale(&self, out: &mut [f32]) {
+        if let Some(scale) = &self.scale {
+            for (o, &s) in out.iter_mut().zip(scale.iter()) {
+                *o *= s;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed per-layer weight bundles
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+pub struct LnW {
+    pub scale: Arc<Vec<f32>>,
+    pub bias: Arc<Vec<f32>>,
+}
+
+impl LnW {
+    pub fn load(store: &WeightStore, prefix: &str) -> Result<Self> {
+        Ok(Self {
+            scale: store.vec(&format!("{prefix}.scale"))?,
+            bias: store.vec(&format!("{prefix}.bias"))?,
+        })
+    }
+}
+
+/// A projection in whichever representation the checkpoint stores (§3.1).
+#[derive(Clone)]
+pub enum ProjW {
+    Dense(Arc<Mat>),
+    LowRank { l: Arc<Mat>, r: Arc<Mat> },
+    Enhanced { l: Arc<Mat>, r: Arc<Mat>, d: Arc<Vec<f32>> },
+}
+
+impl ProjW {
+    pub fn load(store: &WeightStore, prefix: &str) -> Result<Self> {
+        if store.rkv.has(&format!("{prefix}.w")) {
+            Ok(ProjW::Dense(store.mat(&format!("{prefix}.w"))?))
+        } else if store.rkv.has(&format!("{prefix}.d")) {
+            Ok(ProjW::Enhanced {
+                l: store.mat(&format!("{prefix}.l"))?,
+                r: store.mat(&format!("{prefix}.r"))?,
+                d: store.vec(&format!("{prefix}.d"))?,
+            })
+        } else if store.rkv.has(&format!("{prefix}.l")) {
+            Ok(ProjW::LowRank {
+                l: store.mat(&format!("{prefix}.l"))?,
+                r: store.mat(&format!("{prefix}.r"))?,
+            })
+        } else {
+            bail!("no projection tensors under '{prefix}'")
+        }
+    }
+
+    /// `out = proj(x)` (out zeroed here). `scratch` holds the rank-sized
+    /// intermediate for the low-rank forms.
+    pub fn apply(&self, x: &[f32], out: &mut [f32], scratch: &mut Vec<f32>) {
+        out.fill(0.0);
+        match self {
+            ProjW::Dense(w) => matvec_in_out(x, w, out),
+            ProjW::LowRank { l, r } => {
+                scratch.clear();
+                scratch.resize(l.cols(), 0.0);
+                matvec_in_out(x, l, scratch);
+                matvec_in_out(scratch, r, out);
+            }
+            ProjW::Enhanced { l, r, d } => {
+                // relu(xL)^2 R + x*d   (paper Eq. 2)
+                scratch.clear();
+                scratch.resize(l.cols(), 0.0);
+                matvec_in_out(x, l, scratch);
+                crate::tensor::sqrelu_inplace(scratch);
+                matvec_in_out(scratch, r, out);
+                for i in 0..out.len() {
+                    out[i] += x[i] * d[i];
+                }
+            }
+        }
+    }
+
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            ProjW::Dense(w) => w.nbytes(),
+            ProjW::LowRank { l, r } => l.nbytes() + r.nbytes(),
+            ProjW::Enhanced { l, r, d } => l.nbytes() + r.nbytes() + 4 * d.len() as u64,
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct AttW {
+    pub mu_r: Arc<Vec<f32>>,
+    pub mu_k: Arc<Vec<f32>>,
+    pub mu_v: Arc<Vec<f32>>,
+    pub mu_g: Arc<Vec<f32>>,
+    pub decay: Arc<Vec<f32>>, // (H*S,) precomputed exp(-exp(.))
+    pub first: Arc<Vec<f32>>, // (H*S,)
+    pub wr: ProjW,
+    pub wk: ProjW,
+    pub wv: ProjW,
+    pub wg: ProjW,
+    pub wo: Arc<Mat>,
+    pub lnx: LnW,
+}
+
+#[derive(Clone)]
+pub struct FfnW {
+    pub mu_k: Arc<Vec<f32>>,
+    pub mu_r: Arc<Vec<f32>>,
+    pub wr: ProjW,
+    /// Dense FFN matrices; `None` when the sparse path manages them (§3.2).
+    pub wk_t: Option<Arc<Mat>>,
+    pub wv: Option<Arc<Mat>>,
+}
+
+#[derive(Clone)]
+pub struct BlockW {
+    pub ln1: LnW,
+    pub ln2: LnW,
+    pub att: AttW,
+    pub ffn: FfnW,
+}
+
+impl BlockW {
+    /// Load block `i`; `dense_ffn = false` leaves wk_t/wv unloaded
+    /// (sparse-managed).
+    pub fn load(store: &WeightStore, i: usize, dense_ffn: bool) -> Result<Self> {
+        let p = format!("b{i}");
+        let att = AttW {
+            mu_r: store.vec(&format!("{p}.att.mu_r"))?,
+            mu_k: store.vec(&format!("{p}.att.mu_k"))?,
+            mu_v: store.vec(&format!("{p}.att.mu_v"))?,
+            mu_g: store.vec(&format!("{p}.att.mu_g"))?,
+            decay: store.vec(&format!("{p}.att.decay"))?,
+            first: store.vec(&format!("{p}.att.first"))?,
+            wr: ProjW::load(store, &format!("{p}.att.wr"))?,
+            wk: ProjW::load(store, &format!("{p}.att.wk"))?,
+            wv: ProjW::load(store, &format!("{p}.att.wv"))?,
+            wg: ProjW::load(store, &format!("{p}.att.wg"))?,
+            wo: store.mat(&format!("{p}.att.wo.w"))?,
+            lnx: LnW::load(store, &format!("{p}.att.lnx"))?,
+        };
+        let ffn = FfnW {
+            mu_k: store.vec(&format!("{p}.ffn.mu_k"))?,
+            mu_r: store.vec(&format!("{p}.ffn.mu_r"))?,
+            wr: ProjW::load(store, &format!("{p}.ffn.wr"))?,
+            wk_t: if dense_ffn {
+                Some(store.mat(&format!("{p}.ffn.wk_t"))?)
+            } else {
+                None
+            },
+            wv: if dense_ffn {
+                Some(store.mat(&format!("{p}.ffn.wv"))?)
+            } else {
+                None
+            },
+        };
+        Ok(Self {
+            ln1: LnW::load(store, &format!("{p}.ln1"))?,
+            ln2: LnW::load(store, &format!("{p}.ln2"))?,
+            att,
+            ffn,
+        })
+    }
+}

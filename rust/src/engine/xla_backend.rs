@@ -1,0 +1,134 @@
+//! XLA/PJRT backend: dense per-layer compute runs the AOT-lowered HLO
+//! components (jax L2 + Pallas L1) instead of the native kernels.
+//!
+//! One compiled executable per component shape, *reused across layers*:
+//! layer weights live in per-layer device buffers uploaded once at load.
+//! Per token only x / state tensors move host<->device.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::engine::weights::{LnW, WeightStore};
+use crate::engine::{state::RwkvState, ModelInfo};
+use crate::runtime::{literal_f32, Component, Runtime};
+use crate::tensor::layer_norm;
+
+pub struct XlaRwkv {
+    rt: Runtime,
+    timemix: Component,
+    chanmix: Component,
+    head: Component,
+    /// Per layer: ordered weight buffers for timemix / chanmix.
+    tm_weights: Vec<Vec<xla::PjRtBuffer>>,
+    cm_weights: Vec<Vec<xla::PjRtBuffer>>,
+    head_buf: xla::PjRtBuffer,
+    info: ModelInfo,
+}
+
+impl XlaRwkv {
+    pub fn load(store: &Arc<WeightStore>, artifacts: &Path, info: ModelInfo) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let m = &store.manifest;
+        let tm_names = m.hlo_params("timemix").context("manifest missing hlo.timemix")?;
+        let cm_names = m.hlo_params("chanmix").context("manifest missing hlo.chanmix")?;
+        let timemix = rt.load_component(
+            &m.hlo_path(artifacts, "timemix").context("hlo path")?,
+            tm_names.clone(),
+        )?;
+        let chanmix = rt.load_component(
+            &m.hlo_path(artifacts, "chanmix").context("hlo path")?,
+            cm_names.clone(),
+        )?;
+        let head = rt.load_component(
+            &m.hlo_path(artifacts, "head").context("hlo path")?,
+            vec!["head".into()],
+        )?;
+
+        // Upload per-layer weights once, in manifest order.  XLA CPU runs
+        // f32; stored f16/i8 decode on upload.  Residency is tracked as
+        // the decoded f32 bytes (the honest number for this backend).
+        let mut tm_weights = Vec::with_capacity(info.layers);
+        let mut cm_weights = Vec::with_capacity(info.layers);
+        for layer in 0..info.layers {
+            tm_weights.push(upload_layer(&rt, store, layer, &tm_names)?);
+            cm_weights.push(upload_layer(&rt, store, layer, &cm_names)?);
+        }
+        let head_mat = store.mat("head")?; // (V, D) transposed layout
+        let head_buf = rt.upload(&head_mat.to_f32_vec(), &[info.vocab, info.dim])?;
+
+        Ok(Self { rt, timemix, chanmix, head, tm_weights, cm_weights, head_buf, info })
+    }
+
+    /// One dense decode step through the HLO components.
+    pub fn step(
+        &mut self,
+        x_emb: &[f32],
+        ln0: &LnW,
+        ln_out: &LnW,
+        state: &mut RwkvState,
+    ) -> Result<Vec<f32>> {
+        let d = self.info.dim;
+        let (h, s) = (self.info.heads, self.info.head_size);
+        let mut x = vec![0.0f32; d];
+        layer_norm(x_emb, &ln0.scale, &ln0.bias, 1e-5, &mut x);
+        let mut x_buf = self.rt.upload(&x, &[d])?;
+        for layer in 0..self.info.layers {
+            // timemix(x, att_x, wkv, *w) -> (x', xa, wkv')
+            let att_x = self.rt.upload(&state.att_x[layer], &[d])?;
+            let wkv = self.rt.upload(&state.wkv[layer], &[h, s, s])?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&x_buf, &att_x, &wkv];
+            args.extend(self.tm_weights[layer].iter());
+            let outs = self.timemix.run(&args)?;
+            state.att_x[layer] = literal_f32(&outs[1])?;
+            state.wkv[layer] = literal_f32(&outs[2])?;
+            let x_after_tm = literal_f32(&outs[0])?;
+            x_buf = self.rt.upload(&x_after_tm, &[d])?;
+            // chanmix(x, ffn_x, *w) -> (x', xf)
+            let ffn_x = self.rt.upload(&state.ffn_x[layer], &[d])?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&x_buf, &ffn_x];
+            args.extend(self.cm_weights[layer].iter());
+            let outs = self.chanmix.run(&args)?;
+            state.ffn_x[layer] = literal_f32(&outs[1])?;
+            let x_after_cm = literal_f32(&outs[0])?;
+            x_buf = self.rt.upload(&x_after_cm, &[d])?;
+            x = x_after_cm;
+        }
+        let mut hidden = vec![0.0f32; d];
+        layer_norm(&x, &ln_out.scale, &ln_out.bias, 1e-5, &mut hidden);
+        Ok(hidden)
+    }
+
+    /// Dense head through HLO: logits = head_t @ hidden.
+    pub fn head(&mut self, hidden: &[f32]) -> Result<Vec<f32>> {
+        let hb = self.rt.upload(hidden, &[self.info.dim])?;
+        let outs = self.head.run(&[&hb, &self.head_buf])?;
+        literal_f32(&outs[0])
+    }
+}
+
+/// Upload the ordered weight list of one layer for one component.
+fn upload_layer(
+    rt: &Runtime,
+    store: &WeightStore,
+    layer: usize,
+    names: &[String],
+) -> Result<Vec<xla::PjRtBuffer>> {
+    let mut bufs = Vec::with_capacity(names.len());
+    for n in names {
+        let full = format!("b{layer}.{n}");
+        let e = store.rkv.entry(&full)?;
+        let dims = e.shape.clone();
+        let data: Vec<f32> = if dims.len() == 2 {
+            store.rkv.mat(&full)?.to_f32_vec()
+        } else {
+            store.rkv.vec_f32(&full)?
+        };
+        store
+            .tracker
+            .load(crate::engine::weights::group_of(&full), 4 * data.len() as u64);
+        bufs.push(rt.upload(&data, &dims)?);
+    }
+    Ok(bufs)
+}

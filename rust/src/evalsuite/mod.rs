@@ -1,0 +1,234 @@
+//! Benchmark-task evaluation through the engine (Table 5 / Figure 5
+//! accuracy numbers are produced HERE, by the rust inference stack with
+//! the techniques active — not by the python trainer).
+//!
+//! Tasks come from `artifacts/data/tasks.json` (corpus.py): cloze tasks
+//! score the final-word prediction (accuracy + gold perplexity); choice
+//! tasks score candidate continuations by total log-probability.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::engine::transformer::TransformerEngine;
+use crate::engine::RwkvEngine;
+use crate::json::{self, Value};
+use crate::util::logsumexp;
+
+#[derive(Clone, Debug)]
+pub struct ClozeExample {
+    pub ctx: Vec<u32>,
+    pub gold: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ChoiceExample {
+    pub ctx: Vec<u32>,
+    pub choices: Vec<Vec<u32>>,
+    pub label: usize,
+}
+
+#[derive(Clone, Debug)]
+pub enum Task {
+    Cloze(Vec<ClozeExample>),
+    Choice(Vec<ChoiceExample>),
+}
+
+pub fn load_tasks(path: &Path) -> Result<BTreeMap<String, Task>> {
+    let v = json::parse_file(path)?;
+    let obj = match &v {
+        Value::Obj(m) => m,
+        _ => anyhow::bail!("tasks.json: expected object"),
+    };
+    let mut out = BTreeMap::new();
+    for (name, arr) in obj {
+        let arr = arr.as_arr().context("task examples")?;
+        if arr.is_empty() {
+            continue;
+        }
+        if arr[0].get("choices").is_some() {
+            let mut ex = Vec::new();
+            for e in arr {
+                ex.push(ChoiceExample {
+                    ctx: ids(e.get("ctx").context("ctx")?)?,
+                    choices: e
+                        .get("choices")
+                        .and_then(|c| c.as_arr())
+                        .context("choices")?
+                        .iter()
+                        .map(ids)
+                        .collect::<Result<_>>()?,
+                    label: e.f64_at(&["label"]).context("label")? as usize,
+                });
+            }
+            out.insert(name.clone(), Task::Choice(ex));
+        } else {
+            let mut ex = Vec::new();
+            for e in arr {
+                ex.push(ClozeExample {
+                    ctx: ids(e.get("ctx").context("ctx")?)?,
+                    gold: e.f64_at(&["gold"]).context("gold")? as u32,
+                });
+            }
+            out.insert(name.clone(), Task::Cloze(ex));
+        }
+    }
+    Ok(out)
+}
+
+fn ids(v: &Value) -> Result<Vec<u32>> {
+    Ok(v.as_arr()
+        .context("token array")?
+        .iter()
+        .filter_map(|x| x.as_f64().map(|n| n as u32))
+        .collect())
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskResult {
+    pub acc: f64,
+    pub ppl: f64, // 0 for choice tasks
+    pub n: usize,
+}
+
+/// A model that can score sequences token-by-token.
+pub trait Scorer {
+    /// Log-probabilities of each `targets[i]` given `ctx + targets[..i]`.
+    fn score(&mut self, ctx: &[u32], targets: &[u32]) -> Result<Vec<f64>>;
+    /// Full next-token logits after consuming `ctx`.
+    fn next_logits(&mut self, ctx: &[u32]) -> Result<Vec<f32>>;
+
+    /// Total log-prob of each choice continuation after `ctx`.  Default
+    /// replays the context per choice; RWKV overrides with state cloning
+    /// (O(1) state makes shared prefill trivial — a transformer would
+    /// need KV-cache forking).
+    fn score_choices(&mut self, ctx: &[u32], choices: &[Vec<u32>]) -> Result<Vec<f64>> {
+        choices
+            .iter()
+            .map(|c| Ok(self.score(ctx, c)?.iter().sum()))
+            .collect()
+    }
+}
+
+impl Scorer for RwkvEngine {
+    fn score(&mut self, ctx: &[u32], targets: &[u32]) -> Result<Vec<f64>> {
+        let mut state = self.new_state();
+        let mut last = crate::text::BOS;
+        for &t in ctx {
+            self.forward_hidden(last, &mut state)?;
+            last = t;
+        }
+        let mut lps = Vec::with_capacity(targets.len());
+        for &t in targets {
+            let logits = self.forward_token(last, &mut state)?;
+            let lse = logsumexp(&logits);
+            lps.push((logits[t as usize] - lse) as f64);
+            last = t;
+        }
+        Ok(lps)
+    }
+
+    fn next_logits(&mut self, ctx: &[u32]) -> Result<Vec<f32>> {
+        let mut state = self.new_state();
+        let mut last = crate::text::BOS;
+        for &t in ctx {
+            self.forward_hidden(last, &mut state)?;
+            last = t;
+        }
+        self.forward_token(last, &mut state)
+    }
+
+    fn score_choices(&mut self, ctx: &[u32], choices: &[Vec<u32>]) -> Result<Vec<f64>> {
+        // shared prefill, cloned O(1) state per choice
+        let mut state = self.new_state();
+        let mut last = crate::text::BOS;
+        for &t in ctx {
+            self.forward_hidden(last, &mut state)?;
+            last = t;
+        }
+        let mut out = Vec::with_capacity(choices.len());
+        for choice in choices {
+            let mut st = state.clone();
+            let mut lp = 0.0f64;
+            let mut prev = last;
+            for &t in choice {
+                let logits = self.forward_token(prev, &mut st)?;
+                lp += (logits[t as usize] - logsumexp(&logits)) as f64;
+                prev = t;
+            }
+            out.push(lp);
+        }
+        Ok(out)
+    }
+}
+
+impl Scorer for TransformerEngine {
+    fn score(&mut self, ctx: &[u32], targets: &[u32]) -> Result<Vec<f64>> {
+        self.reset();
+        let mut last = crate::text::BOS;
+        for &t in ctx {
+            self.forward_token(last)?;
+            last = t;
+        }
+        let mut lps = Vec::with_capacity(targets.len());
+        for &t in targets {
+            let logits = self.forward_token(last)?;
+            let lse = logsumexp(&logits);
+            lps.push((logits[t as usize] - lse) as f64);
+            last = t;
+        }
+        Ok(lps)
+    }
+
+    fn next_logits(&mut self, ctx: &[u32]) -> Result<Vec<f32>> {
+        self.reset();
+        let mut last = crate::text::BOS;
+        for &t in ctx {
+            self.forward_token(last)?;
+            last = t;
+        }
+        self.forward_token(last)
+    }
+}
+
+/// Evaluate one task; `limit` caps examples (0 = all).
+pub fn eval_task<S: Scorer>(scorer: &mut S, task: &Task, limit: usize) -> Result<TaskResult> {
+    match task {
+        Task::Cloze(examples) => {
+            let take = if limit == 0 { examples.len() } else { limit.min(examples.len()) };
+            let mut correct = 0usize;
+            let mut nll = 0.0f64;
+            for e in &examples[..take] {
+                let logits = scorer.next_logits(&e.ctx)?;
+                let lse = logsumexp(&logits);
+                if crate::util::argmax(&logits) == e.gold as usize {
+                    correct += 1;
+                }
+                nll += (lse - logits[e.gold as usize]) as f64;
+            }
+            Ok(TaskResult {
+                acc: correct as f64 / take as f64,
+                ppl: (nll / take as f64).exp(),
+                n: take,
+            })
+        }
+        Task::Choice(examples) => {
+            let take = if limit == 0 { examples.len() } else { limit.min(examples.len()) };
+            let mut correct = 0usize;
+            for e in &examples[..take] {
+                let lps = scorer.score_choices(&e.ctx, &e.choices)?;
+                let mut best = (f64::NEG_INFINITY, 0usize);
+                for (ci, &lp) in lps.iter().enumerate() {
+                    if lp > best.0 {
+                        best = (lp, ci);
+                    }
+                }
+                if best.1 == e.label {
+                    correct += 1;
+                }
+            }
+            Ok(TaskResult { acc: correct as f64 / take as f64, ppl: 0.0, n: take })
+        }
+    }
+}

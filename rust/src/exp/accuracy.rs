@@ -1,0 +1,293 @@
+//! Accuracy experiments: Table 5 (full benchmark suite), Table 6
+//! (ablations), Figure 9 (predictor study), Figure 11 (FP16 vs INT8),
+//! §B.4 SVD-factor and cluster-threshold sweeps.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::engine::sparse_ffn::PredMode;
+use crate::engine::transformer::TransformerEngine;
+use crate::engine::RwkvEngine;
+use crate::evalsuite::{self, Task};
+use crate::json::{self, Value};
+
+use super::*;
+
+/// Table 5: every benchmark task for every model.
+pub fn table5(args: &Args) -> Result<()> {
+    let limit = args.usize_or("limit", 40)?;
+    let tasks = evalsuite::load_tasks(&tasks_path(args))?;
+    let task_names: Vec<&String> = tasks.keys().collect();
+    title("Table 5: benchmark results (acc; ppl for cloze tasks)");
+    print!("{:<24}", "model");
+    for t in &task_names {
+        print!(" {:>13}", truncate(t, 13));
+    }
+    println!();
+    let mut rows = Vec::new();
+    let mut eval_model = |name: &str, ours: bool| -> Result<()> {
+        if !model_exists(args, name) {
+            return Ok(());
+        }
+        let mut results = Vec::new();
+        if name.starts_with("gpt") {
+            let cfg = cfg_vanilla(args, name);
+            let mut tf = TransformerEngine::load(&cfg)?;
+            for t in &task_names {
+                results.push(evalsuite::eval_task(&mut tf, &tasks[*t], limit)?);
+            }
+        } else {
+            let cfg = if ours { cfg_ours(args, name) } else { cfg_vanilla(args, name) };
+            let mut engine = RwkvEngine::load(cfg)?;
+            for t in &task_names {
+                results.push(evalsuite::eval_task(&mut engine, &tasks[*t], limit)?);
+            }
+        }
+        print!("{:<24}", name);
+        let mut obj = vec![("model", json::s(name))];
+        let mut cells = Vec::new();
+        for (tn, r) in task_names.iter().zip(&results) {
+            if matches!(tasks[*tn], Task::Cloze(_)) {
+                print!(" {:>6.2}/{:>6.1}", r.acc, r.ppl);
+            } else {
+                print!(" {:>13.2}", r.acc);
+            }
+            cells.push(json::obj(vec![
+                ("task", json::s(tn)),
+                ("acc", json::num(r.acc)),
+                ("ppl", json::num(r.ppl)),
+            ]));
+        }
+        println!();
+        obj.push(("results", Value::Arr(cells)));
+        rows.push(json::obj(obj));
+        Ok(())
+    };
+    for size in SIZES {
+        eval_model(&format!("rwkv-vanilla-{size}"), false)?;
+        eval_model(&format!("rwkv-ours-{size}"), true)?;
+        eval_model(&format!("rwkv-pre-{size}"), true)?;
+        eval_model(&format!("gpt-{size}"), false)?;
+    }
+    save_result(args, "table5", &Value::Arr(rows))
+}
+
+/// Table 6: ablations — each technique removed from the full stack.
+pub fn table6(args: &Args) -> Result<()> {
+    let limit = args.usize_or("limit", 60)?;
+    title("Table 6: ablation accuracy (lambada_syn)");
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "size", "vanilla", "-SVD", "-HH", "-Sparse", "All"
+    );
+    let mut rows = Vec::new();
+    for size in SIZES {
+        let vname = format!("rwkv-vanilla-{size}");
+        let oname = format!("rwkv-ours-{size}");
+        if !model_exists(args, &vname) || !model_exists(args, &oname) {
+            continue;
+        }
+        // vanilla: no techniques at all
+        let mut e = RwkvEngine::load(cfg_vanilla(args, &vname))?;
+        let (acc_vanilla, _) = lambada_acc(&mut e, args, limit)?;
+        // -SVD: vanilla weights + HH + sparse + cache
+        let mut e = RwkvEngine::load(cfg_ours(args, &vname))?;
+        let (acc_no_svd, _) = lambada_acc(&mut e, args, limit)?;
+        // -HH: ours weights, hier head off
+        let mut cfg = cfg_ours(args, &oname);
+        cfg.hier_head = false;
+        let mut e = RwkvEngine::load(cfg)?;
+        let (acc_no_hh, _) = lambada_acc(&mut e, args, limit)?;
+        // -Sparse: ours weights, sparse off
+        let mut cfg = cfg_ours(args, &oname);
+        cfg.sparse_ffn = false;
+        let mut e = RwkvEngine::load(cfg)?;
+        let (acc_no_sp, _) = lambada_acc(&mut e, args, limit)?;
+        // All
+        let mut e = RwkvEngine::load(cfg_ours(args, &oname))?;
+        let (acc_all, _) = lambada_acc(&mut e, args, limit)?;
+        println!(
+            "{:<12} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+            size, acc_vanilla, acc_no_svd, acc_no_hh, acc_no_sp, acc_all
+        );
+        rows.push(json::obj(vec![
+            ("size", json::s(size)),
+            ("vanilla", json::num(acc_vanilla)),
+            ("no_svd", json::num(acc_no_svd)),
+            ("no_hh", json::num(acc_no_hh)),
+            ("no_sparse", json::num(acc_no_sp)),
+            ("all", json::num(acc_all)),
+        ]));
+    }
+    println!("\npaper: ablated models within ~1-2pp of vanilla; SVD costs most, sparse least");
+    save_result(args, "table6", &Value::Arr(rows))
+}
+
+/// Figure 9: sparsity-predictor study on the small model.
+pub fn fig9(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "rwkv-ours-small").to_string();
+    let limit = args.usize_or("limit", 60)?;
+    if !model_exists(args, &model) {
+        anyhow::bail!("{model} not built (run make artifacts)");
+    }
+    title(&format!("Figure 9: predictor study ({model})"));
+    println!(
+        "{:<12} {:>9} {:>12} {:>14}",
+        "predictor", "acc", "sparsity", "bytes/tok FFN"
+    );
+    let mut rows = Vec::new();
+    for (label, mode) in [
+        ("GT", PredMode::GroundTruth),
+        ("MLP", PredMode::MlpOnly),
+        ("1-bit", PredMode::QuantOnly),
+        ("4-bit", PredMode::Quant4Only),
+        ("ensemble", PredMode::Ensemble),
+    ] {
+        let mut cfg = cfg_ours(args, &model);
+        cfg.hier_head = false; // isolate the FFN predictor effect
+        let mut engine = RwkvEngine::load(cfg)?;
+        if engine.set_pred_mode(mode).is_err() {
+            println!("{:<12} (unavailable in this checkpoint)", label);
+            continue;
+        }
+        let (acc, _) = lambada_acc(&mut engine, args, limit)?;
+        let spars: f64 = engine.sparsity_by_layer().iter().sum::<f64>()
+            / engine.info.layers as f64;
+        // bytes/token for the FFN rows at this sparsity
+        let row_bytes = 2.0 * 2.0 * engine.info.dim as f64; // wk_t + wv rows, f16
+        let bytes = (1.0 - spars) * engine.info.ffn as f64 * row_bytes
+            * engine.info.layers as f64;
+        println!(
+            "{:<12} {:>9.3} {:>11.1}% {:>14.0}",
+            label,
+            acc,
+            100.0 * spars,
+            bytes
+        );
+        rows.push(json::obj(vec![
+            ("predictor", json::s(label)),
+            ("acc", json::num(acc)),
+            ("sparsity", json::num(spars)),
+            ("ffn_bytes_per_token", json::num(bytes)),
+        ]));
+    }
+    println!("\npaper: GT 85% sparsity; 1-bit alone poor; MLP+1-bit ensemble ~GT accuracy");
+    save_result(args, "fig9", &Value::Arr(rows))
+}
+
+/// Figure 11: FP16 vs INT8 accuracy & memory.
+pub fn fig11(args: &Args) -> Result<()> {
+    let limit = args.usize_or("limit", 60)?;
+    let gen_n = args.usize_or("n", 32)?;
+    title("Figure 11: FP16 vs INT8 — accuracy & peak memory");
+    println!(
+        "{:<26} {:>9} {:>9} {:>12}",
+        "model", "prec", "acc", "peak (MiB)"
+    );
+    let mut rows = Vec::new();
+    for size in SIZES {
+        for (kind, ours) in [("rwkv-vanilla", false), ("rwkv-ours", true)] {
+            for prec in ["f16", "int8"] {
+                let name = if prec == "f16" {
+                    format!("{kind}-{size}")
+                } else {
+                    format!("{kind}-{size}-int8")
+                };
+                if !model_exists(args, &name) {
+                    continue;
+                }
+                let cfg = if ours { cfg_ours(args, &name) } else { cfg_vanilla(args, &name) };
+                let (peak, mut engine) =
+                    peak_after_generation(args, cfg, crate::config::LoadStrategy::Full, gen_n)?;
+                let (acc, _) = lambada_acc(&mut engine, args, limit)?;
+                println!(
+                    "{:<26} {:>9} {:>9.3} {:>12.2}",
+                    name,
+                    prec,
+                    acc,
+                    mb(peak)
+                );
+                rows.push(json::obj(vec![
+                    ("model", json::s(&name)),
+                    ("precision", json::s(prec)),
+                    ("acc", json::num(acc)),
+                    ("peak_bytes", json::num(peak as f64)),
+                ]));
+            }
+        }
+    }
+    println!("\npaper: INT8 ~2x memory cut, <1pp acc loss on ours; 10x total vs vanilla FP16");
+    save_result(args, "fig11", &Value::Arr(rows))
+}
+
+/// §B.4: SVD decomposition factor sweep (k in 4/8/16) on the small model.
+pub fn svd_k(args: &Args) -> Result<()> {
+    let limit = args.usize_or("limit", 60)?;
+    title("SVD factor sweep (small model, lambada_syn)");
+    println!("{:<26} {:>6} {:>9} {:>12}", "model", "k", "acc", "ckpt (MiB)");
+    let mut rows = Vec::new();
+    for (name, k) in [
+        ("rwkv-ours-k4-small", 4usize),
+        ("rwkv-ours-small", 8),
+        ("rwkv-ours-k16-small", 16),
+    ] {
+        if !model_exists(args, name) {
+            continue;
+        }
+        let mut engine = RwkvEngine::load(cfg_ours(args, name))?;
+        let (acc, _) = lambada_acc(&mut engine, args, limit)?;
+        let bytes = engine.store.rkv.total_bytes();
+        println!("{:<26} {:>6} {:>9.3} {:>12.2}", name, k, acc, mb(bytes));
+        rows.push(json::obj(vec![
+            ("model", json::s(name)),
+            ("k", json::num(k as f64)),
+            ("acc", json::num(acc)),
+            ("ckpt_bytes", json::num(bytes as f64)),
+        ]));
+    }
+    println!("\npaper: k=16 detrimental (up to -29pp); k=4 ~= k=8 (<1pp)");
+    save_result(args, "svd-k", &Value::Arr(rows))
+}
+
+/// §B.4: hierarchical-head cluster threshold sweep.
+pub fn hh_sweep(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "rwkv-ours-small").to_string();
+    let limit = args.usize_or("limit", 60)?;
+    if !model_exists(args, &model) {
+        anyhow::bail!("{model} not built");
+    }
+    title(&format!("Hierarchical-head p_min sweep ({model})"));
+    println!(
+        "{:<8} {:>9} {:>16} {:>14}",
+        "p_min", "acc", "tokens loaded/tok", "head bytes/tok"
+    );
+    let mut rows = Vec::new();
+    for p_min in [0.85f32, 0.95, 0.99] {
+        let mut cfg = cfg_ours(args, &model);
+        cfg.hh_p_min = p_min;
+        let mut engine = RwkvEngine::load(cfg)?;
+        let (acc, _) = lambada_acc(&mut engine, args, limit)?;
+        let loaded = engine.hier.as_ref().map(|h| h.mean_tokens_loaded()).unwrap_or(0.0);
+        let bytes = loaded * 2.0 * engine.info.dim as f64;
+        println!(
+            "{:<8.2} {:>9.3} {:>16.1} {:>14.0}",
+            p_min, acc, loaded, bytes
+        );
+        rows.push(json::obj(vec![
+            ("p_min", json::num(p_min as f64)),
+            ("acc", json::num(acc)),
+            ("tokens_loaded", json::num(loaded)),
+            ("head_bytes_per_token", json::num(bytes)),
+        ]));
+    }
+    println!("\npaper: 0.85 halves memory but -10pp acc; 0.99 doubles memory, +1.5pp");
+    save_result(args, "hh-sweep", &Value::Arr(rows))
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        s[..n].to_string()
+    }
+}

@@ -1,0 +1,168 @@
+//! Experiment drivers: one per paper table/figure (`rwkv-lite exp <id>`).
+//!
+//! Each driver prints the paper-shaped rows AND appends machine-readable
+//! JSON under `artifacts/results/<id>.json` (consumed by EXPERIMENTS.md).
+//! See DESIGN.md §5 for the experiment index.
+
+pub mod accuracy;
+pub mod memory;
+pub mod speed;
+pub mod table1;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::config::{EngineConfig, LoadStrategy};
+use crate::engine::sampler::Sampler;
+use crate::engine::RwkvEngine;
+use crate::json::Value;
+
+pub const SIZES: [&str; 3] = ["tiny", "small", "medium"];
+
+pub fn run(exp_id: &str, args: &Args) -> Result<()> {
+    match exp_id {
+        "table1" => table1::run(args),
+        "fig3" => memory::fig3(args),
+        "fig5" => memory::fig5(args),
+        "fig6" => memory::fig6(args),
+        "table7" => memory::table7(args),
+        "fig7" => speed::fig7(args),
+        "fig8" => speed::fig8(args),
+        "fig10" => speed::fig10(args),
+        "fig12" => speed::fig12(args),
+        "energy" => speed::energy(args),
+        "table5" => accuracy::table5(args),
+        "table6" => accuracy::table6(args),
+        "fig9" => accuracy::fig9(args),
+        "fig11" => accuracy::fig11(args),
+        "svd-k" => accuracy::svd_k(args),
+        "hh-sweep" => accuracy::hh_sweep(args),
+        "all" => {
+            for id in [
+                "table1", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+                "fig11", "fig12", "table5", "table6", "table7", "svd-k", "hh-sweep",
+                "energy",
+            ] {
+                println!("\n================ exp {id} ================");
+                if let Err(e) = run(id, args) {
+                    println!("[exp {id}] FAILED: {e:#}");
+                }
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (see DESIGN.md §5)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+pub fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+pub fn results_dir(args: &Args) -> Result<PathBuf> {
+    let d = artifacts_dir(args).join("results");
+    std::fs::create_dir_all(&d)?;
+    Ok(d)
+}
+
+pub fn save_result(args: &Args, id: &str, v: &Value) -> Result<()> {
+    let path = results_dir(args)?.join(format!("{id}.json"));
+    std::fs::write(&path, v.to_string())?;
+    println!("[saved] {}", path.display());
+    Ok(())
+}
+
+/// Does a model exist in artifacts?
+pub fn model_exists(args: &Args, name: &str) -> bool {
+    artifacts_dir(args)
+        .join("models")
+        .join(format!("{name}.json"))
+        .exists()
+}
+
+/// Engine config for "vanilla runtime" (dense everything).
+pub fn cfg_vanilla(args: &Args, model: &str) -> EngineConfig {
+    EngineConfig::vanilla(model, artifacts_dir(args))
+}
+
+/// Engine config with the paper's full technique stack.
+pub fn cfg_ours(args: &Args, model: &str) -> EngineConfig {
+    EngineConfig::all_techniques(model, artifacts_dir(args))
+}
+
+/// Prompt tokens from the corpus stream.
+pub fn corpus_prompt(args: &Args, len: usize) -> Result<Vec<u32>> {
+    let path = artifacts_dir(args).join("data").join("corpus.bin");
+    let bytes = std::fs::read(&path)?;
+    let n = (bytes.len() / 4).min(len);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(u32::from_le_bytes([
+            bytes[4 * i],
+            bytes[4 * i + 1],
+            bytes[4 * i + 2],
+            bytes[4 * i + 3],
+        ]));
+    }
+    Ok(out)
+}
+
+pub fn tasks_path(args: &Args) -> PathBuf {
+    artifacts_dir(args).join("data").join("tasks.json")
+}
+
+/// Generate `n` tokens after a short prompt; returns (tps, engine).
+pub fn measure_tps(mut engine: RwkvEngine, args: &Args, n: usize) -> Result<(f64, RwkvEngine)> {
+    let prompt = corpus_prompt(args, 16)?;
+    let mut sampler = Sampler::new(0.8, 0.95, 42);
+    let mut state = engine.new_state();
+    // warmup + prefill
+    engine.generate(&prompt, 4, &mut sampler, &mut state)?;
+    let t = crate::util::Stopwatch::start();
+    let mut state = engine.new_state();
+    engine.generate(&prompt, n, &mut sampler, &mut state)?;
+    let secs = t.elapsed_secs();
+    Ok(((n as f64) / secs, engine))
+}
+
+/// Measured accuracy on lambada_syn through the engine (limit examples).
+pub fn lambada_acc(engine: &mut RwkvEngine, args: &Args, limit: usize) -> Result<(f64, f64)> {
+    let tasks = crate::evalsuite::load_tasks(&tasks_path(args))?;
+    let t = tasks
+        .get("lambada_syn")
+        .ok_or_else(|| anyhow::anyhow!("lambada_syn missing from tasks.json"))?;
+    let r = crate::evalsuite::eval_task(engine, t, limit)?;
+    Ok((r.acc, r.ppl))
+}
+
+/// Peak weight-residency after generating `n` tokens (fresh engine).
+pub fn peak_after_generation(
+    args: &Args,
+    mut cfg: EngineConfig,
+    strategy: LoadStrategy,
+    n: usize,
+) -> Result<(u64, RwkvEngine)> {
+    cfg.strategy = strategy;
+    let mut engine = RwkvEngine::load(cfg)?;
+    let prompt = corpus_prompt(args, 16)?;
+    let mut sampler = Sampler::new(0.8, 0.95, 7);
+    let mut state = engine.new_state();
+    engine.generate(&prompt, n, &mut sampler, &mut state)?;
+    let (_, peak) = engine.memory_report();
+    Ok((peak, engine))
+}
+
+pub fn mb(bytes: u64) -> f64 {
+    bytes as f64 / (1 << 20) as f64
+}
+
+/// Print a separator-framed table title.
+pub fn title(s: &str) {
+    println!("\n{s}");
+    println!("{}", "-".repeat(s.len().min(100)));
+}

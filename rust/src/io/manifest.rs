@@ -1,0 +1,94 @@
+//! Model manifest (`artifacts/models/<name>.json`) — config + runtime
+//! thresholds + the HLO component parameter-order mapping.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Value};
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub precision: String,
+    pub arch: String,      // "rwkv" | "transformer"
+    pub variant: String,   // tiny | small | medium | regular
+    pub dim: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub head_size: usize,
+    pub heads: usize,
+    pub ffn_dim: usize,
+    pub svd_rank_div: usize,
+    pub enhanced_svd: bool,
+    pub has_predictors: bool,
+    pub has_hier_head: bool,
+    // runtime thresholds (paper defaults; §5.1 / §3.3)
+    pub t_mlp: f32,
+    pub t_quant: f32,
+    pub hh_p_min: f32,
+    pub hh_k_min: usize,
+    pub hh_k_max: usize,
+    pub emb_cache_capacity: usize,
+    /// HLO component -> ordered weight names (empty for transformer).
+    pub hlo: Value,
+    pub raw: Value,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(json_path: &Path) -> Result<Self> {
+        let v = json::parse_file(json_path)?;
+        let cfg = v.get("config").context("manifest missing 'config'")?;
+        let dim = cfg.f64_at(&["dim"]).context("config.dim")? as usize;
+        let head_size = cfg.f64_at(&["head_size"]).unwrap_or(16.0) as usize;
+        let heads = v.f64_at(&["heads"]).unwrap_or((dim / head_size) as f64) as usize;
+        let rt = |k: &str, d: f64| v.f64_at(&["runtime", k]).unwrap_or(d);
+        Ok(Self {
+            name: v.str_at(&["name"]).context("name")?.to_string(),
+            precision: v.str_at(&["precision"]).unwrap_or("f16").to_string(),
+            arch: cfg.str_at(&["arch"]).unwrap_or("rwkv").to_string(),
+            variant: cfg.str_at(&["variant"]).unwrap_or("?").to_string(),
+            dim,
+            layers: cfg.f64_at(&["layers"]).context("config.layers")? as usize,
+            vocab: cfg.f64_at(&["vocab"]).unwrap_or(1024.0) as usize,
+            head_size,
+            heads,
+            ffn_dim: v.f64_at(&["ffn_dim"]).unwrap_or((dim as f64) * 3.5) as usize,
+            svd_rank_div: cfg.f64_at(&["svd_rank_div"]).unwrap_or(0.0) as usize,
+            enhanced_svd: cfg.at(&["enhanced_svd"]).and_then(|b| b.as_bool()).unwrap_or(false),
+            has_predictors: v.get("has_predictors").and_then(|b| b.as_bool()).unwrap_or(false),
+            has_hier_head: v.get("has_hier_head").and_then(|b| b.as_bool()).unwrap_or(false),
+            t_mlp: rt("t_mlp", 0.7) as f32,
+            t_quant: rt("t_quant", 0.8) as f32,
+            hh_p_min: rt("hh_p_min", 0.95) as f32,
+            hh_k_min: rt("hh_k_min", 3.0) as usize,
+            hh_k_max: rt("hh_k_max", 16.0) as usize,
+            emb_cache_capacity: rt("emb_cache_capacity", 64.0) as usize,
+            hlo: v.get("hlo").cloned().unwrap_or(Value::Null),
+            raw: v.clone(),
+            dir: json_path.parent().unwrap_or(Path::new(".")).to_path_buf(),
+        })
+    }
+
+    /// Path of the sibling `.rkv` checkpoint.
+    pub fn rkv_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.rkv", self.name))
+    }
+
+    /// Ordered HLO parameter names for a component ("timemix"/"chanmix"/"head").
+    pub fn hlo_params(&self, component: &str) -> Option<Vec<String>> {
+        let arr = self.hlo.at(&[component, "params"])?.as_arr()?;
+        Some(arr.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+    }
+
+    /// HLO text file path for a component (relative to artifacts/hlo).
+    pub fn hlo_path(&self, artifacts_root: &Path, component: &str) -> Option<PathBuf> {
+        let rel = self.hlo.at(&[component, "path"])?.as_str()?;
+        Some(artifacts_root.join("hlo").join(rel))
+    }
+
+    pub fn is_rwkv(&self) -> bool {
+        self.arch.starts_with("rwkv")
+    }
+}

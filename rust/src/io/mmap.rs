@@ -1,0 +1,100 @@
+//! Read-only memory map (libc; no memmap2 crate in this environment).
+//!
+//! The `.rkv` weight file is mapped, not read: layerwise / sparse loading
+//! strategies copy *only the touched rows* into RAM, which is exactly the
+//! paper's "load only a small subset of the model parameters" model — the
+//! file-backed pages behind untouched weights never count against the
+//! inference footprint.
+
+use std::fs::File;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub struct Mmap {
+    ptr: *mut libc::c_void,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only (PROT_READ, MAP_PRIVATE) for its
+// whole lifetime, so shared references across threads are sound.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            bail!("cannot mmap empty file {}", path.display());
+        }
+        // SAFETY: valid fd, length checked; mapping is read-only/private.
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap({}) failed: {}", path.display(), std::io::Error::last_os_error());
+        }
+        Ok(Self { ptr, len })
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len come from a successful mmap; mapping lives as
+        // long as self.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len from mmap; unmapped exactly once.
+        unsafe {
+            libc::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_file_contents() {
+        let dir = std::env::temp_dir().join(format!("rkvlite-mmap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let mut f = File::create(&path).unwrap();
+        f.write_all(b"hello mmap").unwrap();
+        drop(f);
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.bytes(), b"hello mmap");
+        assert_eq!(m.len(), 10);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_errors() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("rkvlite-empty-{}", std::process::id()));
+        File::create(&path).unwrap();
+        assert!(Mmap::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Checkpoint + manifest I/O (substrate S14).
+
+pub mod manifest;
+pub mod mmap;
+pub mod rkv;
+
+pub use manifest::Manifest;
+pub use mmap::Mmap;
+pub use rkv::{RkvFile, TensorEntry};

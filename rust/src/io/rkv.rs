@@ -1,0 +1,196 @@
+//! `.rkv` checkpoint reader — mirrors python/compile/export.py exactly.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  b"RKV1"
+//! u32    version (=1)
+//! u32    n_tensors
+//! u64    data_offset (absolute)
+//! index  n_tensors x { u16 name_len, name, u8 dtype, u8 ndim,
+//!                      u32 dims[ndim], u64 offset(rel), u64 nbytes }
+//! data   64-byte-aligned tensor payloads
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::Mmap;
+use crate::tensor::{DType, Mat};
+use crate::util::f16::f16_to_f32;
+
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub offset: u64, // relative to data section
+    pub nbytes: u64,
+}
+
+impl TensorEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+pub struct RkvFile {
+    map: Arc<Mmap>,
+    data_offset: usize,
+    index: BTreeMap<String, TensorEntry>,
+}
+
+fn rd_u16(b: &[u8], o: usize) -> u16 {
+    u16::from_le_bytes([b[o], b[o + 1]])
+}
+fn rd_u32(b: &[u8], o: usize) -> u32 {
+    u32::from_le_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]])
+}
+fn rd_u64(b: &[u8], o: usize) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[o..o + 8]);
+    u64::from_le_bytes(a)
+}
+
+impl RkvFile {
+    pub fn open(path: &Path) -> Result<Self> {
+        let map = Arc::new(Mmap::open(path)?);
+        let b = map.bytes();
+        if b.len() < 20 || &b[0..4] != b"RKV1" {
+            bail!("{}: not an RKV1 file", path.display());
+        }
+        let version = rd_u32(b, 4);
+        if version != 1 {
+            bail!("unsupported rkv version {version}");
+        }
+        let n = rd_u32(b, 8) as usize;
+        let data_offset = rd_u64(b, 12) as usize;
+        let mut pos = 20usize;
+        let mut index = BTreeMap::new();
+        for _ in 0..n {
+            let nl = rd_u16(b, pos) as usize;
+            pos += 2;
+            let name = std::str::from_utf8(&b[pos..pos + nl])?.to_string();
+            pos += nl;
+            let dtype = DType::from_code(b[pos])?;
+            let ndim = b[pos + 1] as usize;
+            pos += 2;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(rd_u32(b, pos) as usize);
+                pos += 4;
+            }
+            let offset = rd_u64(b, pos);
+            let nbytes = rd_u64(b, pos + 8);
+            pos += 16;
+            if data_offset as u64 + offset + nbytes > b.len() as u64 {
+                bail!("tensor '{name}' exceeds file bounds");
+            }
+            index.insert(
+                name.clone(),
+                TensorEntry { name, dtype, shape, offset, nbytes },
+            );
+        }
+        Ok(Self { map, data_offset, index })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.index.keys().map(|s| s.as_str())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        self.index
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not in checkpoint"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    /// Raw bytes of a tensor (zero-copy view into the map).
+    pub fn raw(&self, name: &str) -> Result<&[u8]> {
+        let e = self.entry(name)?;
+        let start = self.data_offset + e.offset as usize;
+        Ok(&self.map.bytes()[start..start + e.nbytes as usize])
+    }
+
+    fn typed<T: Copy>(&self, name: &str) -> Result<&[T]> {
+        let raw = self.raw(name)?;
+        let size = std::mem::size_of::<T>();
+        if raw.len() % size != 0 {
+            bail!("tensor '{name}' size not a multiple of element size");
+        }
+        if raw.as_ptr() as usize % std::mem::align_of::<T>() != 0 {
+            bail!("tensor '{name}' misaligned"); // export aligns to 64
+        }
+        // SAFETY: alignment and length checked; T is Copy/POD here (f32,
+        // u16, i8, i32) and the mapping outlives self.
+        Ok(unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const T, raw.len() / size) })
+    }
+
+    /// Load a 1-D f32 vector (copies; counted by the caller's tracker).
+    pub fn vec_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let e = self.entry(name)?;
+        match e.dtype {
+            DType::F32 => Ok(self.typed::<f32>(name)?.to_vec()),
+            DType::F16 => Ok(self
+                .typed::<u16>(name)?
+                .iter()
+                .map(|&h| f16_to_f32(h))
+                .collect()),
+            _ => bail!("tensor '{name}' is not float"),
+        }
+    }
+
+    pub fn vec_i32(&self, name: &str) -> Result<Vec<i32>> {
+        let e = self.entry(name)?;
+        match e.dtype {
+            DType::I32 => Ok(self.typed::<i32>(name)?.to_vec()),
+            _ => bail!("tensor '{name}' is not i32"),
+        }
+    }
+
+    /// Load a 2-D matrix in its storage precision.  For `I8` tensors the
+    /// sibling `<name>.scale` vector is loaded alongside.
+    pub fn mat(&self, name: &str) -> Result<Mat> {
+        let e = self.entry(name)?;
+        if e.shape.len() != 2 {
+            bail!("tensor '{name}' is {}-D, want 2-D", e.shape.len());
+        }
+        let (rows, cols) = (e.shape[0], e.shape[1]);
+        Ok(match e.dtype {
+            DType::F32 => Mat::F32 { rows, cols, data: self.typed::<f32>(name)?.to_vec() },
+            DType::F16 => Mat::F16 { rows, cols, data: self.typed::<u16>(name)?.to_vec() },
+            DType::I8 => {
+                let scale = self.vec_f32(&format!("{name}.scale"))?;
+                Mat::I8 { rows, cols, data: self.typed::<i8>(name)?.to_vec(), scale }
+            }
+            other => bail!("tensor '{name}': dtype {:?} is not a matrix type", other),
+        })
+    }
+
+    /// Zero-copy row view of an f16 matrix (embedding cache fast path).
+    pub fn row_f16(&self, name: &str, row: usize) -> Result<&[u16]> {
+        let e = self.entry(name)?;
+        let cols = *e.shape.last().unwrap();
+        let all = self.typed::<u16>(name)?;
+        Ok(&all[row * cols..(row + 1) * cols])
+    }
+
+    /// Total stored bytes across all tensors (checkpoint "Params" size).
+    pub fn total_bytes(&self) -> u64 {
+        self.index.values().map(|e| e.nbytes).sum()
+    }
+
+    /// Sum of stored bytes for tensors whose name passes `pred`.
+    pub fn bytes_where<F: Fn(&str) -> bool>(&self, pred: F) -> u64 {
+        self.index
+            .values()
+            .filter(|e| pred(&e.name))
+            .map(|e| e.nbytes)
+            .sum()
+    }
+}

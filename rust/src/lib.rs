@@ -1,0 +1,39 @@
+//! RWKV-Lite: deeply compressed RWKV inference for resource-constrained
+//! devices — rust coordinator + runtime (L3 of the three-layer stack).
+//!
+//! Reproduction of: Choe, Ji, Lin, *"RWKV-Lite: Deeply Compressed RWKV for
+//! Resource-Constrained Devices"* (2024).  See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for the paper-vs-measured results.
+//!
+//! Layer map:
+//! * [`tensor`] — f32/f16/int8/1-bit matvec kernels (the ARM-NEON-kernel
+//!   analog; §4 of the paper) and small math ops.
+//! * [`io`] — the `.rkv` checkpoint format (mmap reader) + JSON manifests.
+//! * [`engine`] — the inference engine: weight store with loading
+//!   strategies, sparse FFN (§3.2), hierarchical head (§3.3), embedding
+//!   cache (§3.3), native and XLA/PJRT backends.
+//! * [`runtime`] — PJRT wrapper executing the AOT-lowered HLO components
+//!   (L2 jax + L1 Pallas, compiled at `make artifacts` time).
+//! * [`coordinator`] — request router + dynamic batcher + scheduler.
+//! * [`server`] — a small TCP serving front-end (edge deployment demo).
+//! * [`exp`] — drivers that regenerate every table/figure of the paper.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod engine;
+pub mod evalsuite;
+pub mod exp;
+pub mod io;
+pub mod json;
+pub mod metrics;
+pub mod pool;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod testutil;
+pub mod text;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,213 @@
+//! rwkv-lite — CLI entrypoint (leader process).
+//!
+//! Subcommands:
+//!   generate   run one prompt through a model and print tokens
+//!   serve      start the TCP serving front-end (coordinator + batcher)
+//!   eval       run benchmark tasks through the engine
+//!   exp <id>   regenerate a paper table/figure (DESIGN.md §5)
+//!   info       model + artifact inventory
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use rwkv_lite::cli::{self, flag, opt, opt_def, Args};
+use rwkv_lite::config::{Backend, EngineConfig, LoadStrategy};
+use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator};
+use rwkv_lite::engine::sampler::Sampler;
+use rwkv_lite::engine::RwkvEngine;
+use rwkv_lite::server::Server;
+use rwkv_lite::text::Vocab;
+use rwkv_lite::{evalsuite, exp};
+
+const SPECS: &[cli::OptSpec] = &[
+    opt_def("model", "model name under artifacts/models", "rwkv-ours-small"),
+    opt_def("artifacts", "artifacts directory", "artifacts"),
+    opt_def("strategy", "weight loading: full|layerwise", "full"),
+    opt_def("backend", "compute backend: native|xla", "native"),
+    flag("vanilla-runtime", "disable all techniques (dense runtime)"),
+    flag("no-sparse", "disable sparse FFN"),
+    flag("no-hh", "disable hierarchical head"),
+    flag("no-emb-cache", "disable embedding cache"),
+    opt("prompt", "prompt text (generate)"),
+    opt_def("n", "tokens to generate / measure", "64"),
+    opt_def("temperature", "sampling temperature (0 = greedy)", "0.8"),
+    opt_def("top-p", "nucleus mass", "0.95"),
+    opt_def("limit", "max examples per eval task", "0"),
+    opt_def("addr", "listen address (serve)", "127.0.0.1:7070"),
+    opt_def("batch", "max dynamic batch size (serve)", "8"),
+    opt("task", "single task name (eval)"),
+    opt("seed", "sampler seed"),
+];
+
+fn engine_config(a: &Args) -> Result<EngineConfig> {
+    let model = a.get("model").context("--model required")?.to_string();
+    let artifacts = PathBuf::from(a.get_or("artifacts", "artifacts"));
+    let mut cfg = if a.flag("vanilla-runtime") {
+        EngineConfig::vanilla(&model, artifacts)
+    } else {
+        EngineConfig::all_techniques(&model, artifacts)
+    };
+    // techniques only exist on checkpoints that carry their tensors; fall
+    // back gracefully for vanilla checkpoints
+    let manifest = rwkv_lite::io::Manifest::load(
+        &cfg.artifacts.join("models").join(format!("{model}.json")),
+    )?;
+    if !manifest.has_predictors {
+        cfg.sparse_ffn = false;
+    }
+    if !manifest.has_hier_head {
+        cfg.hier_head = false;
+    }
+    if a.flag("no-sparse") {
+        cfg.sparse_ffn = false;
+    }
+    if a.flag("no-hh") {
+        cfg.hier_head = false;
+    }
+    if a.flag("no-emb-cache") {
+        cfg.emb_cache = false;
+    }
+    cfg.strategy = LoadStrategy::parse(a.get_or("strategy", "full"))?;
+    cfg.backend = Backend::parse(a.get_or("backend", "native"))?;
+    cfg.seed = a.u64_or("seed", 0)?;
+    Ok(cfg)
+}
+
+fn vocab(a: &Args) -> Result<Vocab> {
+    Vocab::load(
+        &PathBuf::from(a.get_or("artifacts", "artifacts"))
+            .join("data")
+            .join("vocab.json"),
+    )
+}
+
+fn cmd_generate(a: &Args) -> Result<()> {
+    let cfg = engine_config(a)?;
+    let v = vocab(a)?;
+    let mut engine = RwkvEngine::load(cfg)?;
+    let prompt_text = a.get("prompt").unwrap_or("the");
+    let prompt = v.encode(prompt_text);
+    let n = a.usize_or("n", 64)?;
+    let mut sampler = Sampler::new(
+        a.f32_or("temperature", 0.8)?,
+        a.f32_or("top-p", 0.95)?,
+        a.u64_or("seed", 42)?,
+    );
+    let mut state = engine.new_state();
+    let t = rwkv_lite::util::Stopwatch::start();
+    let out = engine.generate(&prompt, n, &mut sampler, &mut state)?;
+    let secs = t.elapsed_secs();
+    println!("{} {}", prompt_text, v.decode(&out));
+    let (cur, peak) = engine.memory_report();
+    eprintln!(
+        "\n[{} tokens in {:.2}s = {:.1} tok/s | resident {} peak {}]",
+        out.len(),
+        secs,
+        out.len() as f64 / secs,
+        rwkv_lite::util::fmt_bytes(cur),
+        rwkv_lite::util::fmt_bytes(peak),
+    );
+    if let Some(c) = &engine.emb_cache {
+        eprintln!(
+            "[emb cache: {} entries, {:.0}% hit rate]",
+            c.len(),
+            100.0 * c.hit_rate()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let cfg = engine_config(a)?;
+    let v = vocab(a)?;
+    let policy = BatchPolicy { max_batch: a.usize_or("batch", 8)?, window_ms: 2 };
+    let coordinator = Coordinator::spawn(move || RwkvEngine::load(cfg), policy);
+    let server = Arc::new(Server::new(coordinator, v));
+    server.serve(a.get_or("addr", "127.0.0.1:7070"), None)
+}
+
+fn cmd_eval(a: &Args) -> Result<()> {
+    let cfg = engine_config(a)?;
+    let mut engine = RwkvEngine::load(cfg)?;
+    let tasks = evalsuite::load_tasks(
+        &PathBuf::from(a.get_or("artifacts", "artifacts"))
+            .join("data")
+            .join("tasks.json"),
+    )?;
+    let limit = a.usize_or("limit", 0)?;
+    println!("{:<16} {:>8} {:>8} {:>6}", "task", "acc", "ppl", "n");
+    for (name, task) in &tasks {
+        if let Some(only) = a.get("task") {
+            if only != name {
+                continue;
+            }
+        }
+        let r = evalsuite::eval_task(&mut engine, task, limit)?;
+        println!("{:<16} {:>8.3} {:>8.2} {:>6}", name, r.acc, r.ppl, r.n);
+    }
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    let dir = PathBuf::from(a.get_or("artifacts", "artifacts")).join("models");
+    println!(
+        "{:<28} {:>9} {:>6} {:>7} {:>6} {:>6} {:>5}",
+        "model", "MiB", "dim", "layers", "pred", "hh", "prec"
+    );
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .with_context(|| format!("{} (run `make artifacts`)", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|e| e == "json").unwrap_or(false))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if let Ok(m) = rwkv_lite::io::Manifest::load(&p) {
+            let rkv = m.rkv_path();
+            let bytes = std::fs::metadata(&rkv).map(|md| md.len()).unwrap_or(0);
+            println!(
+                "{:<28} {:>9.2} {:>6} {:>7} {:>6} {:>6} {:>5}",
+                m.name,
+                bytes as f64 / (1 << 20) as f64,
+                m.dim,
+                m.layers,
+                m.has_predictors,
+                m.has_hier_head,
+                m.precision
+            );
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = cli::parse(&argv, SPECS)?;
+    let cmd = a.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "generate" => cmd_generate(&a),
+        "serve" => cmd_serve(&a),
+        "eval" => cmd_eval(&a),
+        "info" => cmd_info(&a),
+        "exp" => {
+            let id = a
+                .positional
+                .get(1)
+                .context("usage: rwkv-lite exp <table1|fig3|...|all>")?;
+            exp::run(id, &a)
+        }
+        other => {
+            println!(
+                "rwkv-lite — deeply compressed RWKV inference (paper reproduction)\n\n\
+                 usage: rwkv-lite <generate|serve|eval|exp|info> [options]\n\n{}",
+                cli::usage(SPECS)
+            );
+            if other != "help" {
+                bail!("unknown command '{other}'");
+            }
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Metrics registry + weight-residency accounting (substrate S25).
+//!
+//! The paper reports a model's memory footprint as its peak weight
+//! residency under a loading strategy (§5.1).  `MemTracker` is the single
+//! source of truth: every byte of weights copied into RAM is registered
+//! under a component group (emb / timemix / chanmix / head / predictor /
+//! hh / other), transient sparse loads included, and the peak of the
+//! running total is what `exp fig5/fig6/table7` report.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Component groups used by the Figure 6 breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Group {
+    Emb,
+    TimeMix,
+    ChanMix,
+    Head,
+    Predictor,
+    HierHead,
+    State,
+    Other,
+}
+
+impl Group {
+    pub fn name(self) -> &'static str {
+        match self {
+            Group::Emb => "embedding",
+            Group::TimeMix => "time-mix",
+            Group::ChanMix => "channel-mix",
+            Group::Head => "head",
+            Group::Predictor => "predictor",
+            Group::HierHead => "hier-head",
+            Group::State => "state",
+            Group::Other => "other",
+        }
+    }
+}
+
+#[derive(Default, Debug)]
+struct MemInner {
+    current: u64,
+    peak: u64,
+    by_group: BTreeMap<Group, u64>,
+    peak_by_group: BTreeMap<Group, u64>,
+    load_events: u64,
+    bytes_loaded_total: u64,
+}
+
+/// Thread-safe residency tracker.
+#[derive(Default, Debug)]
+pub struct MemTracker {
+    inner: Mutex<MemInner>,
+}
+
+impl MemTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn load(&self, group: Group, bytes: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.current += bytes;
+        *m.by_group.entry(group).or_default() += bytes;
+        let cur = m.current;
+        m.peak = m.peak.max(cur);
+        let g = *m.by_group.get(&group).unwrap();
+        let e = m.peak_by_group.entry(group).or_default();
+        *e = (*e).max(g);
+        m.load_events += 1;
+        m.bytes_loaded_total += bytes;
+    }
+
+    pub fn unload(&self, group: Group, bytes: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.current = m.current.saturating_sub(bytes);
+        let e = m.by_group.entry(group).or_default();
+        *e = e.saturating_sub(bytes);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.inner.lock().unwrap().current
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.inner.lock().unwrap().peak
+    }
+
+    pub fn peak_by_group(&self) -> BTreeMap<Group, u64> {
+        self.inner.lock().unwrap().peak_by_group.clone()
+    }
+
+    pub fn current_by_group(&self) -> BTreeMap<Group, u64> {
+        self.inner.lock().unwrap().by_group.clone()
+    }
+
+    pub fn bytes_loaded_total(&self) -> u64 {
+        self.inner.lock().unwrap().bytes_loaded_total
+    }
+
+    /// Reset peak to the current level (start of a measured phase).
+    pub fn reset_peak(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.peak = m.current;
+        m.peak_by_group = m.by_group.clone();
+    }
+}
+
+/// Simple named counters/timers for the serving stack.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timings: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn observe(&self, name: &str, seconds: f64) {
+        self.timings
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(seconds);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn timing_mean(&self, name: &str) -> Option<f64> {
+        let t = self.timings.lock().unwrap();
+        let v = t.get(name)?;
+        if v.is_empty() {
+            return None;
+        }
+        Some(v.iter().sum::<f64>() / v.len() as f64)
+    }
+
+    pub fn timings(&self, name: &str) -> Vec<f64> {
+        self.timings
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, v) in self.timings.lock().unwrap().iter() {
+            if !v.is_empty() {
+                let mean = v.iter().sum::<f64>() / v.len() as f64;
+                out.push_str(&format!("{k}: n={} mean={:.3}ms\n", v.len(), mean * 1e3));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let t = MemTracker::new();
+        t.load(Group::Emb, 100);
+        t.load(Group::Head, 200);
+        t.unload(Group::Head, 200);
+        t.load(Group::Emb, 50);
+        assert_eq!(t.current(), 150);
+        assert_eq!(t.peak(), 300);
+        assert_eq!(t.peak_by_group()[&Group::Head], 200);
+    }
+
+    #[test]
+    fn reset_peak_starts_phase() {
+        let t = MemTracker::new();
+        t.load(Group::Emb, 100);
+        t.unload(Group::Emb, 100);
+        t.reset_peak();
+        assert_eq!(t.peak(), 0);
+        t.load(Group::State, 10);
+        assert_eq!(t.peak(), 10);
+    }
+
+    #[test]
+    fn registry_counts() {
+        let r = Registry::new();
+        r.inc("tokens", 3);
+        r.inc("tokens", 2);
+        r.observe("step", 0.5);
+        assert_eq!(r.counter("tokens"), 5);
+        assert_eq!(r.timing_mean("step"), Some(0.5));
+    }
+}

@@ -1,0 +1,118 @@
+//! Fixed-size thread pool (substrate S23 — no tokio in this environment).
+//!
+//! Used by the coordinator for request handling and by the layerwise
+//! loader to prefetch layer N+1 while layer N executes.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("rwkv-pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx, workers }
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Run `f` asynchronously, returning a handle to await its result.
+    pub fn submit<T: Send + 'static, F: FnOnce() -> T + Send + 'static>(&self, f: F) -> Task<T> {
+        let (tx, rx) = channel();
+        self.spawn(move || {
+            let _ = tx.send(f());
+        });
+        Task { rx }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A pending result from [`ThreadPool::submit`].
+pub struct Task<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> Task<T> {
+    pub fn wait(self) -> T {
+        self.rx.recv().expect("task completed")
+    }
+
+    pub fn try_wait(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<_> = (0..64)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit(move || c.fetch_add(1, Ordering::SeqCst))
+            })
+            .collect();
+        for t in tasks {
+            t.wait();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn submit_returns_value() {
+        let pool = ThreadPool::new(2);
+        let t = pool.submit(|| 6 * 7);
+        assert_eq!(t.wait(), 42);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+}

@@ -1,0 +1,75 @@
+//! PJRT runtime (S20): load AOT-lowered HLO text, compile once, execute on
+//! the request path with pre-uploaded weight buffers.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO *text* -> `HloModuleProto::
+//! from_text_file` -> `XlaComputation::from_proto` -> `client.compile`.
+//! Text is the interchange format because jax >= 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects.
+//!
+//! Weights upload to device buffers ONCE (`execute_b` takes buffers); per
+//! token only the activations/state cross the host-device boundary.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    /// Load + compile one HLO component.
+    pub fn load_component(&self, hlo_path: &Path, param_names: Vec<String>) -> Result<Component> {
+        if !hlo_path.exists() {
+            bail!("HLO artifact missing: {} (run `make artifacts`)", hlo_path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", hlo_path.display()))?;
+        Ok(Component { exe, param_names })
+    }
+
+    /// Upload an f32 buffer to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+    }
+}
+
+/// A compiled HLO component with its ordered parameter names
+/// (manifest `hlo.<component>.params`).
+pub struct Component {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub param_names: Vec<String>,
+}
+
+impl Component {
+    /// Execute on pre-built buffers; returns the flattened output tuple.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))
+    }
+}
+
+/// Read an f32 literal into a Vec.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal_f32: {e:?}"))
+}

@@ -1,0 +1,171 @@
+//! TCP serving front-end (S22): newline-delimited JSON protocol.
+//!
+//! Request:  {"prompt": "<text>", "max_tokens": 32, "temperature": 0.8}
+//! Response: {"token": "<word>"} per generated token, then
+//!           {"done": true, "tokens": n, "seconds": s, "tps": r}
+//!
+//! Thread-per-connection feeding the single coordinator (which owns the
+//! engine and batches across connections).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, Event, Request};
+use crate::json::{self, Value};
+use crate::text::Vocab;
+
+pub struct Server {
+    pub coordinator: Arc<Coordinator>,
+    pub vocab: Arc<Vocab>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    pub fn new(coordinator: Coordinator, vocab: Vocab) -> Self {
+        Self {
+            coordinator: Arc::new(coordinator),
+            vocab: Arc::new(vocab),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Serve forever (or until `max_conns` connections when Some — used by
+    /// tests/examples for clean shutdown).
+    pub fn serve(self: Arc<Self>, addr: &str, max_conns: Option<usize>) -> Result<()> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        eprintln!("[server] listening on {addr}");
+        let mut handles = Vec::new();
+        let mut served = 0usize;
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let me = Arc::clone(&self);
+            handles.push(std::thread::spawn(move || {
+                if let Err(e) = me.handle_conn(stream) {
+                    eprintln!("[server] connection error: {e:#}");
+                }
+            }));
+            served += 1;
+            if let Some(m) = max_conns {
+                if served >= m {
+                    break;
+                }
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    fn handle_conn(&self, stream: TcpStream) -> Result<()> {
+        let _peer = stream.peer_addr()?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok(()); // client closed
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let v = match json::parse(trimmed) {
+                Ok(v) => v,
+                Err(e) => {
+                    writeln!(writer, r#"{{"error":"bad request: {e}"}}"#)?;
+                    continue;
+                }
+            };
+            let prompt_text = v.str_at(&["prompt"]).unwrap_or("").to_string();
+            let req = Request {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                prompt: self.vocab.encode(&prompt_text),
+                max_tokens: v.f64_at(&["max_tokens"]).unwrap_or(32.0) as usize,
+                temperature: v.f64_at(&["temperature"]).unwrap_or(0.0) as f32,
+                top_p: v.f64_at(&["top_p"]).unwrap_or(1.0) as f32,
+            };
+            let rx = self.coordinator.submit(req);
+            for ev in rx {
+                match ev {
+                    Event::Token { token } => {
+                        let msg = json::obj(vec![("token", json::s(self.vocab.word(token)))]);
+                        writeln!(writer, "{}", msg.to_string())?;
+                    }
+                    Event::Done { tokens, seconds } => {
+                        let msg = json::obj(vec![
+                            ("done", Value::Bool(true)),
+                            ("tokens", json::num(tokens as f64)),
+                            ("seconds", json::num(seconds)),
+                            ("tps", json::num(tokens as f64 / seconds.max(1e-9))),
+                        ]);
+                        writeln!(writer, "{}", msg.to_string())?;
+                        break;
+                    }
+                    Event::Error { message } => {
+                        let msg = json::obj(vec![("error", json::s(&message))]);
+                        writeln!(writer, "{}", msg.to_string())?;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    stream: TcpStream,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Completion {
+    pub text: String,
+    pub tokens: usize,
+    pub seconds: f64,
+    pub tps: f64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(Self { stream: TcpStream::connect(addr)? })
+    }
+
+    pub fn complete(&mut self, prompt: &str, max_tokens: usize, temperature: f32) -> Result<Completion> {
+        let req = json::obj(vec![
+            ("prompt", json::s(prompt)),
+            ("max_tokens", json::num(max_tokens as f64)),
+            ("temperature", json::num(temperature as f64)),
+        ]);
+        writeln!(self.stream, "{}", req.to_string())?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut out = Completion::default();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            let v = json::parse(line.trim())?;
+            if let Some(tok) = v.str_at(&["token"]) {
+                if !out.text.is_empty() {
+                    out.text.push(' ');
+                }
+                out.text.push_str(tok);
+            } else if v.get("done").is_some() {
+                out.tokens = v.f64_at(&["tokens"]).unwrap_or(0.0) as usize;
+                out.seconds = v.f64_at(&["seconds"]).unwrap_or(0.0);
+                out.tps = v.f64_at(&["tps"]).unwrap_or(0.0);
+                break;
+            } else if let Some(e) = v.str_at(&["error"]) {
+                anyhow::bail!("server error: {e}");
+            }
+        }
+        Ok(out)
+    }
+}

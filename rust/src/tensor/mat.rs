@@ -1,0 +1,214 @@
+//! Owned weight matrices in their storage precision.
+
+use anyhow::{bail, Result};
+
+use crate::util::f16::{f16_to_f32, f32_to_f16};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F16,
+    I8,
+    U8,
+    I32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::F16,
+            2 => DType::I8,
+            3 => DType::U8,
+            4 => DType::I32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+}
+
+/// A 2-D weight matrix (rows x cols), row-major, owned.
+///
+/// `I8` carries the per-output scale vector (length = the *logical output
+/// dimension*: `cols` for in-out layout, `rows` for row-per-output layout —
+/// the consumer knows which).
+#[derive(Clone, Debug)]
+pub enum Mat {
+    F32 { rows: usize, cols: usize, data: Vec<f32> },
+    F16 { rows: usize, cols: usize, data: Vec<u16> },
+    I8 { rows: usize, cols: usize, data: Vec<i8>, scale: Vec<f32> },
+}
+
+impl Mat {
+    pub fn rows(&self) -> usize {
+        match self {
+            Mat::F32 { rows, .. } | Mat::F16 { rows, .. } | Mat::I8 { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Mat::F32 { cols, .. } | Mat::F16 { cols, .. } | Mat::I8 { cols, .. } => *cols,
+        }
+    }
+
+    /// Stored bytes (the memory-footprint accounting unit).
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            Mat::F32 { data, .. } => 4 * data.len() as u64,
+            Mat::F16 { data, .. } => 2 * data.len() as u64,
+            Mat::I8 { data, scale, .. } => data.len() as u64 + 4 * scale.len() as u64,
+        }
+    }
+
+    /// Bytes of a single row in storage precision (sparse-load accounting).
+    pub fn row_bytes(&self) -> u64 {
+        let c = self.cols() as u64;
+        match self {
+            Mat::F32 { .. } => 4 * c,
+            Mat::F16 { .. } => 2 * c,
+            Mat::I8 { .. } => c + 4, // + its scale entry
+        }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat::F32 { rows, cols, data }
+    }
+
+    pub fn f32_to_f16_mat(rows: usize, cols: usize, data: &[f32]) -> Self {
+        Mat::F16 {
+            rows,
+            cols,
+            data: data.iter().map(|&x| f32_to_f16(x)).collect(),
+        }
+    }
+
+    /// Decode one row to f32 into `out` (row-per-output layout consumers).
+    /// For `I8`, `scale_idx` selects the per-output scale (usually == row).
+    pub fn decode_row(&self, row: usize, out: &mut [f32]) {
+        let c = self.cols();
+        debug_assert!(out.len() == c);
+        match self {
+            Mat::F32 { data, .. } => out.copy_from_slice(&data[row * c..(row + 1) * c]),
+            Mat::F16 { data, .. } => {
+                for (o, &h) in out.iter_mut().zip(&data[row * c..(row + 1) * c]) {
+                    *o = f16_to_f32(h);
+                }
+            }
+            Mat::I8 { data, scale, .. } => {
+                if scale.len() == c {
+                    // per-column scale ((in,out)-layout tensors, e.g. emb)
+                    for ((o, &q), &s) in out
+                        .iter_mut()
+                        .zip(&data[row * c..(row + 1) * c])
+                        .zip(scale.iter())
+                    {
+                        *o = q as f32 * s;
+                    }
+                } else {
+                    // per-row scale (row-per-output tensors, e.g. head)
+                    let s = scale[row];
+                    for (o, &q) in out.iter_mut().zip(&data[row * c..(row + 1) * c]) {
+                        *o = q as f32 * s;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Full decode to f32 (used when uploading to the XLA backend).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match self {
+            Mat::F32 { data, .. } => data.clone(),
+            Mat::F16 { data, .. } => data.iter().map(|&h| f16_to_f32(h)).collect(),
+            Mat::I8 { rows, cols, data, scale } => {
+                // scale is per-output; output dim may be rows or cols.  For
+                // in-out layout scale.len() == cols; for row layout == rows.
+                let mut out = vec![0f32; rows * cols];
+                if scale.len() == *cols {
+                    for r in 0..*rows {
+                        for c in 0..*cols {
+                            out[r * cols + c] = data[r * cols + c] as f32 * scale[c];
+                        }
+                    }
+                } else {
+                    debug_assert_eq!(scale.len(), *rows);
+                    for r in 0..*rows {
+                        let s = scale[r];
+                        for c in 0..*cols {
+                            out[r * cols + c] = data[r * cols + c] as f32 * s;
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_decode_f16() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let m = Mat::f32_to_f16_mat(2, 3, &data);
+        let mut row = vec![0f32; 3];
+        m.decode_row(1, &mut row);
+        assert_eq!(row, vec![4.0, 5.0, 6.0]);
+        assert_eq!(m.nbytes(), 12);
+        assert_eq!(m.row_bytes(), 6);
+    }
+
+    #[test]
+    fn i8_decode_row_per_row_scale() {
+        // non-square, scale.len() == rows -> per-row semantics (head/wk_t)
+        let m = Mat::I8 {
+            rows: 2,
+            cols: 3,
+            data: vec![10, -20, 30, 40, 50, 60],
+            scale: vec![0.1, 0.5],
+        };
+        let mut row = vec![0f32; 3];
+        m.decode_row(0, &mut row);
+        assert_eq!(row, vec![1.0, -2.0, 3.0]);
+        m.decode_row(1, &mut row);
+        assert_eq!(row, vec![20.0, 25.0, 30.0]);
+    }
+
+    #[test]
+    fn i8_decode_row_per_column_scale() {
+        // scale.len() == cols -> per-column semantics (emb, square mats)
+        let m = Mat::I8 {
+            rows: 2,
+            cols: 2,
+            data: vec![10, -20, 30, 40],
+            scale: vec![0.1, 0.5],
+        };
+        let mut row = vec![0f32; 2];
+        m.decode_row(0, &mut row);
+        assert_eq!(row, vec![1.0, -10.0]);
+        m.decode_row(1, &mut row);
+        assert_eq!(row, vec![3.0, 20.0]);
+    }
+
+    #[test]
+    fn to_f32_per_column_scale() {
+        let m = Mat::I8 {
+            rows: 1,
+            cols: 2,
+            data: vec![100, 50],
+            scale: vec![0.01, 0.02],
+        };
+        assert_eq!(m.to_f32_vec(), vec![1.0, 1.0]);
+    }
+}

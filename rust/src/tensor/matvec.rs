@@ -1,0 +1,457 @@
+//! Fused matvec kernels — the hot path of token generation.
+//!
+//! Inner loops are shaped for LLVM auto-vectorization: contiguous slices,
+//! no bounds checks in the loop body (iterator zips), f32 accumulation.
+//! The int8 kernels fold dequantization into the loop (paper §4: fused
+//! dequant+matvec; no materialized f32/f16 weight copy).
+
+use crate::tensor::Mat;
+use crate::util::f16::f16_to_f32_fast as f16_to_f32;
+
+/// `out[j] += sum_i x[i] * w[i][j]` for `(in, out)`-layout `w`.
+/// `out` must be zeroed (or carry an accumulator) by the caller.
+pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32]) {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert_eq!(x.len(), rows);
+    assert_eq!(out.len(), cols);
+    match w {
+        Mat::F32 { data, .. } => {
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &data[i * cols..(i + 1) * cols];
+                for (o, &wij) in out.iter_mut().zip(row) {
+                    *o += xi * wij;
+                }
+            }
+        }
+        Mat::F16 { data, .. } => {
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &data[i * cols..(i + 1) * cols];
+                for (o, &h) in out.iter_mut().zip(row) {
+                    *o += xi * f16_to_f32(h);
+                }
+            }
+        }
+        Mat::I8 { data, scale, .. } => {
+            // `out` may carry a residual accumulator, so the per-column
+            // scale must apply only to THIS product: accumulate unscaled
+            // in a scratch, then fold scale while adding.
+            let mut acc = vec![0f32; cols];
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &data[i * cols..(i + 1) * cols];
+                for (a, &q) in acc.iter_mut().zip(row) {
+                    *a += xi * q as f32;
+                }
+            }
+            for ((o, a), &s) in out.iter_mut().zip(acc).zip(scale) {
+                *o += a * s;
+            }
+        }
+    }
+}
+
+/// `out[j] = dot(w[j], x)` for `(out, in)`-layout `w` (row per output).
+pub fn matvec_rows(w: &Mat, x: &[f32], out: &mut [f32]) {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert_eq!(x.len(), cols);
+    assert_eq!(out.len(), rows);
+    match w {
+        Mat::F32 { data, .. } => {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = dot_f32(&data[j * cols..(j + 1) * cols], x);
+            }
+        }
+        Mat::F16 { data, .. } => {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = dot_f16(&data[j * cols..(j + 1) * cols], x);
+            }
+        }
+        Mat::I8 { data, scale, .. } => {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = scale[j] * dot_i8(&data[j * cols..(j + 1) * cols], x);
+            }
+        }
+    }
+}
+
+/// Sparse row-layout matvec: compute only `idx`-selected outputs.
+/// `out[k] = dot(w[idx[k]], x)` — the §3.2 "load only predicted neurons"
+/// compute path (the *memory accounting* for those rows is done by the
+/// caller, which knows whether rows were already resident).
+pub fn matvec_rows_indexed(w: &Mat, idx: &[u32], x: &[f32], out: &mut [f32]) {
+    let cols = w.cols();
+    assert_eq!(x.len(), cols);
+    assert_eq!(out.len(), idx.len());
+    match w {
+        Mat::F32 { data, .. } => {
+            for (o, &j) in out.iter_mut().zip(idx) {
+                let j = j as usize;
+                *o = dot_f32(&data[j * cols..(j + 1) * cols], x);
+            }
+        }
+        Mat::F16 { data, .. } => {
+            for (o, &j) in out.iter_mut().zip(idx) {
+                let j = j as usize;
+                *o = dot_f16(&data[j * cols..(j + 1) * cols], x);
+            }
+        }
+        Mat::I8 { data, scale, .. } => {
+            for (o, &j) in out.iter_mut().zip(idx) {
+                let j = j as usize;
+                *o = scale[j] * dot_i8(&data[j * cols..(j + 1) * cols], x);
+            }
+        }
+    }
+}
+
+/// Sparse accumulate of selected `(in,out)`-layout rows:
+/// `out[:] += sum_k h[k] * w[idx[k]][:]` — the W_v half of the sparse FFN
+/// (rows of `wv` are per-neuron, layout (F, D)).
+pub fn accum_rows_indexed(w: &Mat, idx: &[u32], h: &[f32], out: &mut [f32]) {
+    let cols = w.cols();
+    assert_eq!(out.len(), cols);
+    assert_eq!(h.len(), idx.len());
+    match w {
+        Mat::F32 { data, .. } => {
+            for (&hk, &j) in h.iter().zip(idx) {
+                if hk == 0.0 {
+                    continue;
+                }
+                let row = &data[j as usize * cols..(j as usize + 1) * cols];
+                for (o, &wv) in out.iter_mut().zip(row) {
+                    *o += hk * wv;
+                }
+            }
+        }
+        Mat::F16 { data, .. } => {
+            for (&hk, &j) in h.iter().zip(idx) {
+                if hk == 0.0 {
+                    continue;
+                }
+                let row = &data[j as usize * cols..(j as usize + 1) * cols];
+                for (o, &hh) in out.iter_mut().zip(row) {
+                    *o += hk * f16_to_f32(hh);
+                }
+            }
+        }
+        Mat::I8 { data, scale, .. } => {
+            // (in,out) layout: scale is per-column of the ORIGINAL w, i.e.
+            // per element of `out`; accumulate unscaled then scale once is
+            // wrong here because different rows share columns — scale is
+            // per-out-column so it factors out of the row sum:
+            for (&hk, &j) in h.iter().zip(idx) {
+                if hk == 0.0 {
+                    continue;
+                }
+                let row = &data[j as usize * cols..(j as usize + 1) * cols];
+                for (o, &q) in out.iter_mut().zip(row) {
+                    *o += hk * q as f32;
+                }
+            }
+            for (o, &s) in out.iter_mut().zip(scale) {
+                *o *= s;
+            }
+        }
+    }
+}
+
+/// 1-bit sign matvec for the quantized sparsity predictor (§3.2, Eq. 4).
+/// `packed`: (ceil(in/8), out) bytes, bit b of `packed[i/8][j]` = sign of
+/// `w[i][j]` (1 -> +1).  `out[j] = scale[j] * sum_i (+-x[i])`.
+pub fn bit_matvec(packed: &[u8], scale: &[f32], in_dim: usize, x: &[f32], out: &mut [f32]) {
+    let out_dim = scale.len();
+    assert_eq!(out.len(), out_dim);
+    assert_eq!(x.len(), in_dim);
+    assert_eq!(packed.len(), in_dim.div_ceil(8) * out_dim);
+    // sum_i (+-x_i) = 2 * sum_{i: bit set} x_i - sum_i x_i
+    let total: f32 = x.iter().sum();
+    out.fill(0.0);
+    for i in 0..in_dim {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let byte_row = &packed[(i / 8) * out_dim..(i / 8 + 1) * out_dim];
+        let bit = 1u8 << (i % 8);
+        for (o, &b) in out.iter_mut().zip(byte_row) {
+            // branchless select: add xi where the sign bit is set
+            *o += if b & bit != 0 { xi } else { 0.0 };
+        }
+    }
+    for (o, &s) in out.iter_mut().zip(scale) {
+        *o = s * (2.0 * *o - total);
+    }
+}
+
+/// 4-bit nibble matvec for the n-bit shadow predictor (§B.4 / Figure 9).
+/// `packed`: (ceil(in/2), out) bytes; row 2i in the LOW nibble, row 2i+1
+/// in the HIGH nibble, each storing q+8 with q in [-7, 7] (export.py
+/// `nibble_quant`).  `out[j] = scale[j] * sum_i x[i] * q[i][j]`.
+pub fn nib4_matvec(packed: &[u8], scale: &[f32], in_dim: usize, x: &[f32], out: &mut [f32]) {
+    let out_dim = scale.len();
+    assert_eq!(out.len(), out_dim);
+    assert_eq!(x.len(), in_dim);
+    assert_eq!(packed.len(), in_dim.div_ceil(2) * out_dim);
+    out.fill(0.0);
+    // offset-binary: q = nib - 8, so sum x_i*(nib_i - 8)
+    //              = sum x_i*nib_i - 8*sum x_i  (fold the -8 out of the loop)
+    let total: f32 = x.iter().sum();
+    for i2 in 0..in_dim.div_ceil(2) {
+        let x_lo = x[2 * i2];
+        let x_hi = if 2 * i2 + 1 < in_dim { x[2 * i2 + 1] } else { 0.0 };
+        let row = &packed[i2 * out_dim..(i2 + 1) * out_dim];
+        if x_lo == 0.0 && x_hi == 0.0 {
+            continue;
+        }
+        for (o, &b) in out.iter_mut().zip(row) {
+            *o += x_lo * (b & 0xF) as f32 + x_hi * (b >> 4) as f32;
+        }
+    }
+    for (o, &s) in out.iter_mut().zip(scale) {
+        *o = s * (*o - 8.0 * total);
+    }
+}
+
+// Dot-product reductions: rustc cannot reassociate float adds, so a scalar
+// accumulator serializes the loop and blocks SIMD.  The accumulator-ARRAY
+// form below maps the 8 partial sums onto one vector register, which LLVM
+// reliably turns into packed FMAs (§Perf L3 iteration 2: 4-9x on dots).
+const LANES: usize = 8;
+
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0f32; LANES];
+    for (ca, cb) in a[..n].chunks_exact(LANES).zip(b[..n].chunks_exact(LANES)) {
+        for k in 0..LANES {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let rem = n - n % LANES;
+    let mut s: f32 = acc.iter().sum();
+    for i in rem..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0f32; LANES];
+    for (ca, cb) in a[..n].chunks_exact(LANES).zip(b[..n].chunks_exact(LANES)) {
+        for k in 0..LANES {
+            acc[k] += f16_to_f32(ca[k]) * cb[k];
+        }
+    }
+    let rem = n - n % LANES;
+    let mut s: f32 = acc.iter().sum();
+    for i in rem..n {
+        s += f16_to_f32(a[i]) * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0f32; LANES];
+    for (ca, cb) in a[..n].chunks_exact(LANES).zip(b[..n].chunks_exact(LANES)) {
+        for k in 0..LANES {
+            acc[k] += ca[k] as f32 * cb[k];
+        }
+    }
+    let rem = n - n % LANES;
+    let mut s: f32 = acc.iter().sum();
+    for i in rem..n {
+        s += a[i] as f32 * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn naive(x: &[f32], w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0f32; cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                out[j] += x[i] * w[i * cols + j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn in_out_f32_matches_naive() {
+        let mut r = XorShift::new(1);
+        let (rows, cols) = (13, 7);
+        let w: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+        let x: Vec<f32> = (0..rows).map(|_| r.normal()).collect();
+        let mut out = vec![0f32; cols];
+        matvec_in_out(&x, &Mat::from_f32(rows, cols, w.clone()), &mut out);
+        let want = naive(&x, &w, rows, cols);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rows_layout_matches_transpose() {
+        let mut r = XorShift::new(2);
+        let (rows, cols) = (9, 17);
+        let w: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+        let x: Vec<f32> = (0..cols).map(|_| r.normal()).collect();
+        let mut out = vec![0f32; rows];
+        matvec_rows(&Mat::from_f32(rows, cols, w.clone()), &x, &mut out);
+        for j in 0..rows {
+            let want = dot_f32(&w[j * cols..(j + 1) * cols], &x);
+            assert!((out[j] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn i8_in_out_respects_residual_accumulator() {
+        // regression: the per-column scale must not touch pre-existing
+        // accumulator content (residual connections pass `out` with x).
+        let w = Mat::I8 {
+            rows: 2,
+            cols: 2,
+            data: vec![100, 0, 0, 100],
+            scale: vec![0.01, 0.01],
+        };
+        let x = vec![1.0f32, 2.0];
+        let mut out = vec![10.0f32, 20.0]; // residual
+        matvec_in_out(&x, &w, &mut out);
+        assert_eq!(out, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn f16_close_to_f32() {
+        let mut r = XorShift::new(3);
+        let (rows, cols) = (32, 24);
+        let w: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+        let x: Vec<f32> = (0..rows).map(|_| r.normal()).collect();
+        let mut out32 = vec![0f32; cols];
+        let mut out16 = vec![0f32; cols];
+        matvec_in_out(&x, &Mat::from_f32(rows, cols, w.clone()), &mut out32);
+        matvec_in_out(&x, &Mat::f32_to_f16_mat(rows, cols, &w), &mut out16);
+        for (a, b) in out32.iter().zip(&out16) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn indexed_matches_dense_rows() {
+        let mut r = XorShift::new(4);
+        let (rows, cols) = (20, 11);
+        let w: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+        let x: Vec<f32> = (0..cols).map(|_| r.normal()).collect();
+        let m = Mat::from_f32(rows, cols, w);
+        let mut full = vec![0f32; rows];
+        matvec_rows(&m, &x, &mut full);
+        let idx = vec![3u32, 0, 19, 7];
+        let mut sparse = vec![0f32; idx.len()];
+        matvec_rows_indexed(&m, &idx, &x, &mut sparse);
+        for (k, &j) in idx.iter().enumerate() {
+            assert_eq!(sparse[k], full[j as usize]);
+        }
+    }
+
+    #[test]
+    fn accum_rows_matches_masked_dense() {
+        let mut r = XorShift::new(5);
+        let (rows, cols) = (16, 9); // (F, D)
+        let w: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+        let m = Mat::from_f32(rows, cols, w.clone());
+        let idx = vec![2u32, 5, 11];
+        let h = vec![0.5f32, -1.0, 2.0];
+        let mut out = vec![0f32; cols];
+        accum_rows_indexed(&m, &idx, &h, &mut out);
+        let mut want = vec![0f32; cols];
+        for (k, &j) in idx.iter().enumerate() {
+            for c in 0..cols {
+                want[c] += h[k] * w[j as usize * cols + c];
+            }
+        }
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn nib4_matvec_matches_dequant_dense() {
+        let mut r = XorShift::new(9);
+        for &(in_dim, out_dim) in &[(10usize, 6usize), (7, 4), (16, 13)] {
+            // random q in [-7, 7], per-column scale
+            let q: Vec<i8> = (0..in_dim * out_dim)
+                .map(|_| ((r.next_u64() % 15) as i8) - 7)
+                .collect();
+            let scale: Vec<f32> = (0..out_dim).map(|_| r.next_f32() + 0.05).collect();
+            let x: Vec<f32> = (0..in_dim).map(|_| r.normal()).collect();
+            // pack: row 2i low nibble, row 2i+1 high nibble (pad q=0 -> 8)
+            let half = in_dim.div_ceil(2);
+            let mut packed = vec![0u8; half * out_dim];
+            for i2 in 0..half {
+                for j in 0..out_dim {
+                    let lo = (q[(2 * i2) * out_dim + j] + 8) as u8;
+                    let hi = if 2 * i2 + 1 < in_dim {
+                        (q[(2 * i2 + 1) * out_dim + j] + 8) as u8
+                    } else {
+                        8
+                    };
+                    packed[i2 * out_dim + j] = lo | (hi << 4);
+                }
+            }
+            let mut out = vec![0f32; out_dim];
+            nib4_matvec(&packed, &scale, in_dim, &x, &mut out);
+            for j in 0..out_dim {
+                let mut want = 0f32;
+                for i in 0..in_dim {
+                    want += x[i] * q[i * out_dim + j] as f32;
+                }
+                want *= scale[j];
+                assert!((out[j] - want).abs() < 1e-3, "{} vs {}", out[j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn bit_matvec_matches_sign_dense() {
+        let mut r = XorShift::new(6);
+        let (in_dim, out_dim): (usize, usize) = (19, 13);
+        // random sign matrix
+        let signs: Vec<bool> = (0..in_dim * out_dim).map(|_| r.next_f32() < 0.5).collect();
+        let scale: Vec<f32> = (0..out_dim).map(|_| r.next_f32() + 0.1).collect();
+        let x: Vec<f32> = (0..in_dim).map(|_| r.normal()).collect();
+        // pack: bit i%8 of packed[i/8][j]
+        let mut packed = vec![0u8; in_dim.div_ceil(8) * out_dim];
+        for i in 0..in_dim {
+            for j in 0..out_dim {
+                if signs[i * out_dim + j] {
+                    packed[(i / 8) * out_dim + j] |= 1 << (i % 8);
+                }
+            }
+        }
+        let mut out = vec![0f32; out_dim];
+        bit_matvec(&packed, &scale, in_dim, &x, &mut out);
+        for j in 0..out_dim {
+            let mut want = 0f32;
+            for i in 0..in_dim {
+                want += if signs[i * out_dim + j] { x[i] } else { -x[i] };
+            }
+            want *= scale[j];
+            assert!((out[j] - want).abs() < 1e-3, "{} vs {}", out[j], want);
+        }
+    }
+}

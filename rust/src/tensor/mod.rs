@@ -1,0 +1,22 @@
+//! Tensor substrate (S13): weight matrices in f32 / f16 / int8 / 1-bit
+//! representations and the fused matvec kernels over them.
+//!
+//! This module is the rust analog of the paper's custom ARM NEON kernels
+//! (§4): dequantization is fused into the matvec inner loop so a separate
+//! dequantized weight copy never exists.  Loops are written to
+//! auto-vectorize (contiguous accumulate-over-rows / dot-per-row forms).
+//!
+//! Two orientations, matching the `.rkv` layouts (python/compile/export.py):
+//! * `(in, out)` "in-out": `out[j] += x[i] * w[i][j]` — used by square
+//!   projections and `wv`.
+//! * `(out, in)` "row-per-output": `out[j] = dot(w[j], x)` — used by
+//!   `wk_t`, `head`, `emb`, where the sparse/hierarchical loaders need
+//!   contiguous per-neuron / per-token rows.
+
+pub mod mat;
+pub mod matvec;
+pub mod ops;
+
+pub use mat::{DType, Mat};
+pub use matvec::*;
+pub use ops::*;

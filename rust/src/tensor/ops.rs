@@ -1,0 +1,108 @@
+//! Element-wise / normalization ops used by the native engine.
+
+/// LayerNorm: `out = (x - mean) / sqrt(var + eps) * scale + bias`.
+pub fn layer_norm(x: &[f32], scale: &[f32], bias: &[f32], eps: f32, out: &mut [f32]) {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = (x[i] - mean) * inv * scale[i] + bias[i];
+    }
+}
+
+/// Per-head GroupNorm (the RWKV `ln_x`): normalize each of `heads` groups
+/// independently, then apply the full-width affine.  Matches the jax
+/// `_group_norm_heads` (eps = 64e-5, the official head_size-scaled eps).
+pub fn group_norm_heads(x: &mut [f32], heads: usize, scale: &[f32], bias: &[f32]) {
+    let hs = x.len() / heads;
+    for h in 0..heads {
+        let seg = &mut x[h * hs..(h + 1) * hs];
+        let n = hs as f32;
+        let mean = seg.iter().sum::<f32>() / n;
+        let var = seg.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let inv = 1.0 / (var + 64e-5).sqrt();
+        for v in seg.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+    for i in 0..x.len() {
+        x[i] = x[i] * scale[i] + bias[i];
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// RWKV token-shift lerp: `out = x * mu + prev * (1 - mu)`.
+pub fn lerp_shift(x: &[f32], prev: &[f32], mu: &[f32], out: &mut [f32]) {
+    for i in 0..x.len() {
+        out[i] = x[i] * mu[i] + prev[i] * (1.0 - mu[i]);
+    }
+}
+
+/// GELU (tanh approximation, matches jax.nn.gelu default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
+}
+
+/// `relu(x)^2` in place — the RWKV channel-mix nonlinearity.
+pub fn sqrelu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        let r = v.max(0.0);
+        *v = r * r;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let scale = [1.0f32; 4];
+        let bias = [0.0f32; 4];
+        let mut out = [0f32; 4];
+        layer_norm(&x, &scale, &bias, 1e-5, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn group_norm_normalizes_each_head() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let scale = vec![1.0f32; 8];
+        let bias = vec![0.0f32; 8];
+        group_norm_heads(&mut x, 2, &scale, &bias);
+        for h in 0..2 {
+            let seg = &x[h * 4..(h + 1) * 4];
+            let mean: f32 = seg.iter().sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "head {h} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn sqrelu_suppresses_negative() {
+        let mut x = vec![-1.0f32, 0.0, 2.0];
+        sqrelu_inplace(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn sigmoid_and_silu_sane() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+        assert!(silu(0.0).abs() < 1e-6);
+        assert!(silu(5.0) > 4.9);
+    }
+}

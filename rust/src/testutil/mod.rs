@@ -1,0 +1,131 @@
+//! Property-testing harness (substrate S27 — no proptest in this
+//! environment).  Deterministic generator-driven checks with failure-case
+//! minimization by re-running on progressively smaller sizes.
+//!
+//! ```ignore
+//! testutil::check("sorted stays sorted", 200, |g| {
+//!     let mut v = g.vec_f32(0..64, -1e3..1e3);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     testutil::ensure(v.windows(2).all(|w| w[0] <= w[1]), "order")
+//! });
+//! ```
+
+use crate::util::XorShift;
+
+/// Generation context handed to each property iteration.
+pub struct Gen {
+    pub rng: XorShift,
+    pub size_hint: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.rng.below((hi - lo).min(self.size_hint.max(1)))
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(1, max_len.max(2));
+        (0..n).map(|_| self.rng.range_f32(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_f32() < 0.5
+    }
+
+    pub fn indices(&mut self, n: usize, max_count: usize) -> Vec<u32> {
+        let count = self.usize_in(1, max_count.min(n).max(2));
+        let mut all: Vec<u32> = (0..n as u32).collect();
+        self.rng.shuffle(&mut all);
+        all.truncate(count);
+        all.sort_unstable();
+        all
+    }
+}
+
+/// Result of one property iteration.
+pub type PropResult = Result<(), String>;
+
+pub fn ensure(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn ensure_close(a: f32, b: f32, tol: f32, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `prop` for `iters` random cases; on failure, retry with shrinking
+/// size hints to report the smallest failing size, then panic with the
+/// seed so the case is reproducible.
+pub fn check<F: FnMut(&mut Gen) -> PropResult>(name: &str, iters: usize, mut prop: F) {
+    for i in 0..iters {
+        let seed = 0xC0FFEE ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 4 + (i * 97) % 256; // sweep sizes deterministically
+        let mut g = Gen { rng: XorShift::new(seed), size_hint: size };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: find the smallest size_hint that still fails
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g = Gen { rng: XorShift::new(seed), size_hint: s };
+                match prop(&mut g) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (iter {i}, seed {seed:#x}, size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 100, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            ensure(x.abs() >= 0.0, "abs")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn indices_sorted_unique() {
+        check("indices sorted+unique", 50, |g| {
+            let idx = g.indices(100, 20);
+            ensure(idx.windows(2).all(|w| w[0] < w[1]), "strictly increasing")
+        });
+    }
+}

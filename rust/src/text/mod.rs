@@ -1,0 +1,105 @@
+//! Word-level tokenizer over the corpus vocabulary (substrate S15).
+//!
+//! The vocabulary is fixed by the corpus generator (python writes
+//! `artifacts/data/vocab.json`; token id == index).  Tokenization is
+//! whitespace splitting + exact lookup, with `<unk>` fallback — matching
+//! the python side exactly, which is what keeps rust-vs-python eval
+//! numbers comparable.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json;
+
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const BOS: u32 = 2;
+pub const EOS: u32 = 3;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub words: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Vocab {
+    pub fn from_words(words: Vec<String>) -> Self {
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Self { words, index }
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let v = json::parse_file(path)?;
+        let arr = v.get("words").and_then(|w| w.as_arr()).context("vocab.json: words[]")?;
+        let words: Vec<String> = arr
+            .iter()
+            .filter_map(|w| w.as_str().map(String::from))
+            .collect();
+        Ok(Self::from_words(words))
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn id(&self, word: &str) -> u32 {
+        self.index.get(word).copied().unwrap_or(UNK)
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        self.words
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Vocab {
+        Vocab::from_words(
+            ["<pad>", "<unk>", "<bos>", "<eos>", "the", "cat", "sat"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let v = toy();
+        let ids = v.encode("the cat sat");
+        assert_eq!(ids, vec![4, 5, 6]);
+        assert_eq!(v.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = toy();
+        assert_eq!(v.encode("the dog"), vec![4, UNK]);
+        assert_eq!(v.word(999), "<unk>");
+    }
+}

@@ -1,0 +1,197 @@
+//! IEEE-754 binary16 <-> binary32 conversion (no `half` crate in this
+//! environment — substrate S13).  Decoding uses a lazily-built 64K lookup
+//! table: the f16 matvec hot loop (engine weights are stored f16, §5.1)
+//! becomes one table load per weight.
+
+use std::sync::OnceLock;
+
+/// Bit-exact f16 (as u16) -> f32, branch full decode.
+pub fn f16_to_f32_slow(h: u16) -> f32 {
+    let sign = (h >> 15) as u32;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31 // signed zero
+        } else {
+            // subnormal: renormalize
+            let mut e: i32 = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            f &= 0x3ff;
+            (sign << 31) | ((e as u32) << 23) | (f << 13)
+        }
+    } else if exp == 31 {
+        (sign << 31) | (0xff << 23) | (frac << 13) // inf / nan
+    } else {
+        (sign << 31) | ((exp + 112) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+static TABLE: OnceLock<Vec<f32>> = OnceLock::new();
+
+fn table() -> &'static [f32] {
+    TABLE.get_or_init(|| (0..=u16::MAX).map(f16_to_f32_slow).collect())
+}
+
+/// Table-based decode (reference path; exact for all 65536 encodings).
+#[inline(always)]
+pub fn f16_to_f32_table(h: u16) -> f32 {
+    // SAFETY: table has exactly 65536 entries; u16 cannot index out of range.
+    unsafe { *table().get_unchecked(h as usize) }
+}
+
+/// Branch-free decode via the power-of-two-multiply trick — the hot-path
+/// conversion (§Perf L3 iteration 1).  Exact for zeros, subnormals, and
+/// normals: `from_bits((h & 0x7fff) << 13) * 2^112` scales the rebased
+/// exponent exactly (multiplying by a power of two is exact in IEEE-754),
+/// and f16 subnormals land in the f32 normal range.  Inf/NaN take a
+/// (predictable, never-taken-for-weights) fallback branch.  Unlike the
+/// table, this compiles to integer ops + one fp multiply, so LLVM can
+/// vectorize matvec inner loops through it.
+#[inline(always)]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let mag = (h & 0x7fff) as u32;
+    let sign = ((h & 0x8000) as u32) << 16;
+    let val = f32::from_bits(mag << 13) * f32::from_bits(0x7780_0000); // * 2^112
+    // inf/nan: force exponent 0xff, keep the (shifted) mantissa — selected
+    // branchlessly so the conversion stays vectorizable.
+    let special = 0x7f80_0000 | ((mag & 0x3ff) << 13);
+    let bits = if mag >= 0x7c00 { special } else { val.to_bits() };
+    f32::from_bits(bits | sign)
+}
+
+/// Weight-path decode: exact for zero/subnormal/normal, UNDEFINED for
+/// inf/nan (which trained weights never contain — export clamps to f16
+/// range).  Pure integer ops + one fp multiply, no select: this is the
+/// form LLVM auto-vectorizes into full-width SIMD in the matvec loops.
+#[inline(always)]
+pub fn f16_to_f32_fast(h: u16) -> f32 {
+    let mag = (h & 0x7fff) as u32;
+    let sign = ((h & 0x8000) as u32) << 16;
+    let val = f32::from_bits(mag << 13) * f32::from_bits(0x7780_0000); // * 2^112
+    f32::from_bits(val.to_bits() | sign)
+}
+
+/// Decode a whole slice (e.g. one weight row) into `out`.
+#[inline]
+pub fn f16_slice_to_f32(src: &[u16], out: &mut [f32]) {
+    for (o, &h) in out.iter_mut().zip(src.iter()) {
+        *o = f16_to_f32(h);
+    }
+}
+
+/// f32 -> f16 with round-to-nearest-even (used by tests and the embedding
+/// cache write-back path).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    exp -= 127;
+    if exp > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp >= -14 {
+        // normal: round mantissa to 10 bits
+        let mant = frac | 0x80_0000;
+        let shift = 13;
+        let halfway = 1u32 << (shift - 1);
+        let mut m = mant >> shift;
+        let rem = mant & ((1 << shift) - 1);
+        if rem > halfway || (rem == halfway && (m & 1) == 1) {
+            m += 1;
+        }
+        // m includes the implicit bit at position 10
+        let e = (exp + 15) as u32;
+        let out = (e << 10) + (m - (1 << 10));
+        return sign | out as u16;
+    }
+    if exp >= -24 {
+        // subnormal
+        let mant = frac | 0x80_0000;
+        let shift = (13 - (exp + 14)) as u32 + 1;
+        let halfway = 1u32 << (shift - 1);
+        let mut m = mant >> shift;
+        let rem = mant & ((1 << shift) - 1);
+        if rem > halfway || (rem == halfway && (m & 1) == 1) {
+            m += 1;
+        }
+        return sign | m as u16;
+    }
+    sign // underflow -> zero
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn special_values() {
+        assert_eq!(f16_to_f32(0x0000), 0.0);
+        assert_eq!(f16_to_f32(0x8000), -0.0);
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0xc000), -2.0);
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert!(f16_to_f32(0x7e00).is_nan());
+        // largest subnormal
+        assert!((f16_to_f32(0x03ff) - 6.097555e-5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_matches_slow() {
+        for h in (0..=u16::MAX).step_by(7) {
+            let a = f16_to_f32_slow(h);
+            let b = f16_to_f32_table(h);
+            assert!(a == b || (a.is_nan() && b.is_nan()), "mismatch at {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn fast_decode_exact_for_all_encodings() {
+        // exhaustive: the multiply-trick decode must be bit-exact vs the
+        // full branch decode for every one of the 65536 encodings
+        for h in 0..=u16::MAX {
+            let slow = f16_to_f32_slow(h);
+            let fast = f16_to_f32(h);
+            assert!(
+                slow.to_bits() == fast.to_bits() || (slow.is_nan() && fast.is_nan()),
+                "mismatch at {h:#06x}: {slow} vs {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn round_trip_exactly_representable() {
+        for x in [0.0f32, 1.0, -1.5, 0.25, 1024.0, -0.099975586] {
+            let h = f32_to_f16(x);
+            assert_eq!(f16_to_f32(h), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn round_trip_error_bounded() {
+        // relative error for normal range must be <= 2^-11
+        let mut x = 1e-3f32;
+        while x < 1e3 {
+            let back = f16_to_f32(f32_to_f16(x));
+            assert!(((back - x) / x).abs() < 1.0 / 2048.0, "x={x} back={back}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf_underflow_to_zero() {
+        assert_eq!(f16_to_f32(f32_to_f16(1e9)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e9)), f32::NEG_INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(1e-9)), 0.0);
+    }
+}

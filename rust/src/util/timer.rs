@@ -1,0 +1,99 @@
+//! Wall-clock stopwatch + simple stat aggregation for the bench harness.
+
+use std::time::Instant;
+
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_secs() * 1e6
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Run `f` repeatedly for at least `min_secs` (after `warmup` calls) and
+/// report per-iteration stats — the criterion-less bench substrate (S28).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_secs: f64, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let total = Stopwatch::start();
+    while total.elapsed_secs() < min_secs || samples.len() < 5 {
+        let t = Stopwatch::start();
+        f();
+        samples.push(t.elapsed_secs());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    let stats = BenchStats::from_samples(name, &samples);
+    println!("{}", stats.row());
+    stats
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(name: &str, samples: &[f64]) -> Self {
+        let mut v = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        Self {
+            name: name.to_string(),
+            iters: v.len(),
+            mean_s: mean,
+            p50_s: v[v.len() / 2],
+            p95_s: v[((v.len() as f64 * 0.95) as usize).min(v.len() - 1)],
+            min_s: v[0],
+        }
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>10}  p50 {:>10}  p95 {:>10}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}

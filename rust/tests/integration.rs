@@ -1,0 +1,382 @@
+//! Integration tests over real artifacts (built by `make artifacts`).
+//!
+//! Tests skip (with a notice) when artifacts are absent so `cargo test`
+//! stays meaningful on a fresh checkout; CI runs `make test` which builds
+//! artifacts first.
+
+use std::path::PathBuf;
+
+use rwkv_lite::config::{Backend, EngineConfig, LoadStrategy};
+use rwkv_lite::engine::sampler::Sampler;
+use rwkv_lite::engine::weights::WeightStore;
+use rwkv_lite::engine::RwkvEngine;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(model: &str) -> bool {
+    artifacts().join("models").join(format!("{model}.json")).exists()
+}
+
+macro_rules! require {
+    ($model:expr) => {
+        if !have($model) {
+            eprintln!("SKIP: {} not built (run `make artifacts`)", $model);
+            return;
+        }
+    };
+}
+
+fn vanilla(model: &str) -> EngineConfig {
+    EngineConfig::vanilla(model, artifacts())
+}
+
+fn ours(model: &str) -> EngineConfig {
+    EngineConfig::all_techniques(model, artifacts())
+}
+
+fn greedy_tokens(mut engine: RwkvEngine, prompt: &[u32], n: usize) -> Vec<u32> {
+    let mut sampler = Sampler::greedy();
+    let mut state = engine.new_state();
+    engine.generate(prompt, n, &mut sampler, &mut state).expect("generate")
+}
+
+const PROMPT: &[u32] = &[2, 200, 300, 5];
+
+// ---------------------------------------------------------------------------
+// Checkpoint / manifest contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn checkpoint_tensors_match_manifest_shapes() {
+    require!("rwkv-vanilla-tiny");
+    let store = WeightStore::open(
+        &artifacts().join("models").join("rwkv-vanilla-tiny.json"),
+    )
+    .unwrap();
+    let m = &store.manifest;
+    let emb = store.rkv.entry("emb").unwrap();
+    assert_eq!(emb.shape, vec![m.vocab, m.dim]);
+    let head = store.rkv.entry("head").unwrap();
+    assert_eq!(head.shape, vec![m.vocab, m.dim], "head stored transposed");
+    let wk_t = store.rkv.entry("b0.ffn.wk_t").unwrap();
+    assert_eq!(wk_t.shape, vec![m.ffn_dim, m.dim]);
+    let wkv_decay = store.rkv.entry("b0.att.decay").unwrap();
+    assert_eq!(wkv_decay.numel(), m.dim);
+    // decay precomputed into (0,1)
+    let decay = store.rkv.vec_f32("b0.att.decay").unwrap();
+    assert!(decay.iter().all(|&w| w > 0.0 && w < 1.0));
+}
+
+#[test]
+fn ours_checkpoint_has_lowrank_and_attachments() {
+    require!("rwkv-ours-small");
+    let store = WeightStore::open(
+        &artifacts().join("models").join("rwkv-ours-small.json"),
+    )
+    .unwrap();
+    assert!(store.rkv.has("b0.att.wr.l") && store.rkv.has("b0.att.wr.r"));
+    assert!(!store.rkv.has("b0.att.wr.w"));
+    assert!(store.rkv.has("b0.att.wo.w"), "wo must stay dense (paper §3.1)");
+    assert!(store.rkv.has("b0.pred.l1") && store.rkv.has("b0.pred.sign"));
+    assert!(store.rkv.has("hh.h1") && store.rkv.has("hh.assign"));
+    let h1 = store.rkv.entry("hh.h1").unwrap();
+    assert_eq!(h1.shape[1], store.manifest.dim, "h1 stored (C, D)");
+}
+
+// ---------------------------------------------------------------------------
+// Engine correctness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_and_layerwise_agree_exactly() {
+    require!("rwkv-vanilla-tiny");
+    let a = greedy_tokens(RwkvEngine::load(vanilla("rwkv-vanilla-tiny")).unwrap(), PROMPT, 16);
+    let mut cfg = vanilla("rwkv-vanilla-tiny");
+    cfg.strategy = LoadStrategy::Layerwise;
+    let b = greedy_tokens(RwkvEngine::load(cfg).unwrap(), PROMPT, 16);
+    assert_eq!(a, b, "loading strategy must not change the math");
+}
+
+#[test]
+fn native_and_xla_backends_agree() {
+    require!("rwkv-vanilla-tiny");
+    let a = greedy_tokens(RwkvEngine::load(vanilla("rwkv-vanilla-tiny")).unwrap(), PROMPT, 12);
+    let mut cfg = vanilla("rwkv-vanilla-tiny");
+    cfg.backend = Backend::Xla;
+    let b = greedy_tokens(RwkvEngine::load(cfg).unwrap(), PROMPT, 12);
+    assert_eq!(a, b, "AOT HLO components must match native kernels");
+}
+
+#[test]
+fn state_carries_context() {
+    require!("rwkv-vanilla-tiny");
+    let mut engine = RwkvEngine::load(vanilla("rwkv-vanilla-tiny")).unwrap();
+    let mut s1 = engine.new_state();
+    let mut s2 = engine.new_state();
+    // different contexts -> different logits for the same next token
+    for &t in &[2u32, 100, 101] {
+        engine.forward_hidden(t, &mut s1).unwrap();
+    }
+    for &t in &[2u32, 400, 401] {
+        engine.forward_hidden(t, &mut s2).unwrap();
+    }
+    let l1 = engine.forward_token(5, &mut s1).unwrap();
+    let l2 = engine.forward_token(5, &mut s2).unwrap();
+    let diff: f32 = l1.iter().zip(&l2).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1e-3, "state must influence logits (diff={diff})");
+}
+
+#[test]
+fn sparse_ffn_close_to_dense() {
+    require!("rwkv-ours-small");
+    // dense (no sparse) vs sparse runtime on the same checkpoint: greedy
+    // continuations may diverge eventually but the first token's logits
+    // should be highly correlated.
+    let mut dense_cfg = ours("rwkv-ours-small");
+    dense_cfg.sparse_ffn = false;
+    dense_cfg.hier_head = false;
+    dense_cfg.emb_cache = false;
+    let mut dense = RwkvEngine::load(dense_cfg).unwrap();
+    let mut cfg = ours("rwkv-ours-small");
+    cfg.hier_head = false;
+    cfg.emb_cache = false;
+    let mut sparse = RwkvEngine::load(cfg).unwrap();
+    let mut sd = dense.new_state();
+    let mut ss = sparse.new_state();
+    for &t in PROMPT {
+        dense.forward_hidden(t, &mut sd).unwrap();
+        sparse.forward_hidden(t, &mut ss).unwrap();
+    }
+    let ld = dense.forward_token(7, &mut sd).unwrap();
+    let ls = sparse.forward_token(7, &mut ss).unwrap();
+    // top-1 should survive sparsification on a trained model
+    assert_eq!(rwkv_lite::util::argmax(&ld), rwkv_lite::util::argmax(&ls));
+}
+
+#[test]
+fn hier_head_top1_agrees_with_dense_head() {
+    require!("rwkv-ours-small");
+    let mut cfg = ours("rwkv-ours-small");
+    cfg.sparse_ffn = false;
+    cfg.emb_cache = false;
+    cfg.hier_head = false;
+    let mut dense = RwkvEngine::load(cfg).unwrap();
+    let mut cfg = ours("rwkv-ours-small");
+    cfg.sparse_ffn = false;
+    cfg.emb_cache = false;
+    let mut hh = RwkvEngine::load(cfg).unwrap();
+    let mut agree = 0;
+    let mut total = 0;
+    let mut sd = dense.new_state();
+    let mut sh = hh.new_state();
+    let mut last = 2u32;
+    for step in 0..24u32 {
+        let ld = dense.forward_token(last, &mut sd).unwrap();
+        let lh = hh.forward_token(last, &mut sh).unwrap();
+        let top_dense = rwkv_lite::util::argmax(&ld);
+        if top_dense == rwkv_lite::util::argmax(&lh) {
+            agree += 1;
+        }
+        total += 1;
+        last = top_dense as u32 + (step % 3); // wander a little
+        if last as usize >= dense.info.vocab {
+            last = 5;
+        }
+    }
+    assert!(
+        agree * 10 >= total * 7,
+        "hier head top-1 agreement too low: {agree}/{total}"
+    );
+}
+
+#[test]
+fn pseudo_logits_keep_distribution_finite() {
+    require!("rwkv-ours-small");
+    let mut cfg = ours("rwkv-ours-small");
+    cfg.sparse_ffn = false;
+    cfg.emb_cache = false;
+    let mut engine = RwkvEngine::load(cfg).unwrap();
+    let mut state = engine.new_state();
+    let logits = engine.forward_token(5, &mut state).unwrap();
+    assert!(logits.iter().all(|l| l.is_finite()), "no -inf pseudo logits");
+    // softmax must be a proper distribution
+    let mut p = logits.clone();
+    rwkv_lite::util::softmax_inplace(&mut p);
+    let sum: f32 = p.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3);
+}
+
+// ---------------------------------------------------------------------------
+// Memory accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn layerwise_peak_below_full_peak() {
+    require!("rwkv-vanilla-small");
+    let full = RwkvEngine::load(vanilla("rwkv-vanilla-small")).unwrap();
+    let (_, full_peak) = {
+        let mut e = full;
+        let mut s = e.new_state();
+        let mut smp = Sampler::greedy();
+        e.generate(PROMPT, 8, &mut smp, &mut s).unwrap();
+        e.memory_report()
+    };
+    let mut cfg = vanilla("rwkv-vanilla-small");
+    cfg.strategy = LoadStrategy::Layerwise;
+    let mut e = RwkvEngine::load(cfg).unwrap();
+    let mut s = e.new_state();
+    let mut smp = Sampler::greedy();
+    e.generate(PROMPT, 8, &mut smp, &mut s).unwrap();
+    let (_, lw_peak) = e.memory_report();
+    assert!(
+        lw_peak * 2 < full_peak,
+        "layerwise {lw_peak} should be well under full {full_peak}"
+    );
+}
+
+#[test]
+fn techniques_reduce_peak_memory() {
+    require!("rwkv-ours-small");
+    require!("rwkv-vanilla-small");
+    let run = |cfg: EngineConfig| {
+        let mut e = RwkvEngine::load(cfg).unwrap();
+        let mut s = e.new_state();
+        let mut smp = Sampler::new(0.8, 0.95, 1);
+        e.generate(PROMPT, 32, &mut smp, &mut s).unwrap();
+        e.memory_report().1
+    };
+    let vanilla_peak = run(vanilla("rwkv-vanilla-small"));
+    let ours_peak = run(ours("rwkv-ours-small"));
+    assert!(
+        (ours_peak as f64) < 0.5 * vanilla_peak as f64,
+        "ours {ours_peak} vs vanilla {vanilla_peak}: expected >=2x reduction"
+    );
+}
+
+#[test]
+fn emb_cache_bounded_and_hit() {
+    require!("rwkv-ours-small");
+    let mut cfg = ours("rwkv-ours-small");
+    cfg.emb_cache_capacity = 8;
+    let mut e = RwkvEngine::load(cfg).unwrap();
+    let mut s = e.new_state();
+    let mut smp = Sampler::new(1.0, 0.9, 2);
+    e.generate(PROMPT, 64, &mut smp, &mut s).unwrap();
+    let cache = e.emb_cache.as_ref().unwrap();
+    assert!(cache.len() <= 8, "capacity respected");
+    assert!(cache.hits > 0, "Zipfian stream must produce hits");
+}
+
+#[test]
+fn int8_checkpoint_half_the_bytes() {
+    require!("rwkv-vanilla-small");
+    require!("rwkv-vanilla-small-int8");
+    let f16 = WeightStore::open(&artifacts().join("models/rwkv-vanilla-small.json")).unwrap();
+    let i8 = WeightStore::open(&artifacts().join("models/rwkv-vanilla-small-int8.json")).unwrap();
+    let r = f16.rkv.total_bytes() as f64 / i8.rkv.total_bytes() as f64;
+    assert!(r > 1.6 && r < 2.4, "f16/int8 byte ratio {r}");
+}
+
+#[test]
+fn int8_accuracy_close_to_f16() {
+    // Token-level greedy identity is NOT expected (group-norm over the
+    // near-zero initial state amplifies quantization noise — the paper
+    // reports the same INT8 fragility, §B.6); task accuracy is the right
+    // equivalence.
+    require!("rwkv-vanilla-small");
+    require!("rwkv-vanilla-small-int8");
+    let tasks = rwkv_lite::evalsuite::load_tasks(&artifacts().join("data/tasks.json")).unwrap();
+    let task = &tasks["lambada_syn"];
+    let mut f16 = RwkvEngine::load(vanilla("rwkv-vanilla-small")).unwrap();
+    let r16 = rwkv_lite::evalsuite::eval_task(&mut f16, task, 40).unwrap();
+    let mut i8e = RwkvEngine::load(vanilla("rwkv-vanilla-small-int8")).unwrap();
+    let r8 = rwkv_lite::evalsuite::eval_task(&mut i8e, task, 40).unwrap();
+    assert!(
+        (r16.acc - r8.acc).abs() <= 0.15,
+        "acc f16 {} vs int8 {}",
+        r16.acc,
+        r8.acc
+    );
+    assert!(r8.ppl < r16.ppl * 3.0, "ppl f16 {} vs int8 {}", r16.ppl, r8.ppl);
+}
+
+#[test]
+fn batched_decode_matches_sequential_exactly() {
+    require!("rwkv-ours-small");
+    let mut cfg = ours("rwkv-ours-small");
+    cfg.emb_cache = false; // cache order differs between paths; isolate math
+    let mut engine = RwkvEngine::load(cfg.clone()).unwrap();
+    // two slots with different contexts
+    let ctxs: [&[u32]; 3] = [&[2, 10, 11], &[2, 400, 401, 402], &[2, 7]];
+    let mut seq_states: Vec<_> = ctxs.iter().map(|_| engine.new_state()).collect();
+    for (ctx, st) in ctxs.iter().zip(seq_states.iter_mut()) {
+        for &t in *ctx {
+            engine.forward_hidden(t, st).unwrap();
+        }
+    }
+    let mut batch_states = seq_states.clone();
+    // sequential logits
+    let toks = [5u32, 6, 7];
+    let mut seq_logits = Vec::new();
+    for (i, st) in seq_states.iter_mut().enumerate() {
+        seq_logits.push(engine.forward_token(toks[i], st).unwrap());
+    }
+    // batched logits on a FRESH engine (predictor telemetry state differs
+    // but outputs must not)
+    let mut engine2 = RwkvEngine::load(cfg).unwrap();
+    let batch_logits = engine2
+        .forward_tokens_batch(&toks, &mut batch_states)
+        .unwrap();
+    for (a, b) in seq_logits.iter().zip(&batch_logits) {
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-5, "batched decode must equal sequential");
+        }
+    }
+    // union accounting happened
+    assert!(engine2.metrics.counter("batch_union_rows") > 0);
+    assert!(
+        engine2.metrics.counter("batch_union_rows")
+            <= engine2.metrics.counter("batch_individual_rows"),
+        "union cannot exceed the sum of individual row sets"
+    );
+}
+
+#[test]
+fn quant4_predictor_mode_runs() {
+    require!("rwkv-ours-small");
+    let mut cfg = ours("rwkv-ours-small");
+    cfg.hier_head = false;
+    let mut engine = RwkvEngine::load(cfg).unwrap();
+    if engine
+        .set_pred_mode(rwkv_lite::engine::sparse_ffn::PredMode::Quant4Only)
+        .is_err()
+    {
+        eprintln!("SKIP: checkpoint predates 4-bit shadows");
+        return;
+    }
+    let mut state = engine.new_state();
+    let logits = engine.forward_token(5, &mut state).unwrap();
+    assert!(logits.iter().all(|l| l.is_finite()));
+    // 4-bit keeps roughly the (1 - t_quant) fraction
+    let spars = engine.sparsity_by_layer();
+    assert!(spars.iter().all(|&s| s > 0.5), "sparsity {spars:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Eval plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn evalsuite_runs_on_tasks() {
+    require!("rwkv-vanilla-small");
+    let tasks = rwkv_lite::evalsuite::load_tasks(&artifacts().join("data/tasks.json")).unwrap();
+    assert!(tasks.contains_key("lambada_syn"));
+    let mut e = RwkvEngine::load(vanilla("rwkv-vanilla-small")).unwrap();
+    let r = rwkv_lite::evalsuite::eval_task(&mut e, &tasks["lambada_syn"], 10).unwrap();
+    assert_eq!(r.n, 10);
+    assert!(r.ppl.is_finite() && r.ppl > 1.0);
+    // a trained model should beat uniform-chance perplexity by far
+    assert!(r.ppl < 512.0, "ppl {}", r.ppl);
+}

@@ -1,0 +1,209 @@
+//! Property-based tests (testutil harness) on kernel/coordinator
+//! invariants — the no-proptest substrate exercised for real.
+
+use rwkv_lite::tensor::{
+    self, bit_matvec, layer_norm, matvec_in_out, matvec_rows, matvec_rows_indexed, Mat,
+};
+use rwkv_lite::testutil::{check, ensure, ensure_close, Gen};
+use rwkv_lite::util::{f16_to_f32, f32_to_f16, logsumexp, softmax_inplace};
+
+#[test]
+fn prop_matvec_linearity() {
+    // matvec(a*x + b*y) == a*matvec(x) + b*matvec(y)
+    check("matvec linearity", 120, |g: &mut Gen| {
+        let rows = g.usize_in(1, 48);
+        let cols = g.usize_in(1, 48);
+        let w = Mat::from_f32(rows, cols, g.vec_normal(rows * cols));
+        let x = g.vec_normal(rows);
+        let y = g.vec_normal(rows);
+        let (a, b) = (g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0));
+        let mut lhs = vec![0.0; cols];
+        let mix: Vec<f32> = x.iter().zip(&y).map(|(xi, yi)| a * xi + b * yi).collect();
+        matvec_in_out(&mix, &w, &mut lhs);
+        let mut ox = vec![0.0; cols];
+        let mut oy = vec![0.0; cols];
+        matvec_in_out(&x, &w, &mut ox);
+        matvec_in_out(&y, &w, &mut oy);
+        for j in 0..cols {
+            ensure_close(lhs[j], a * ox[j] + b * oy[j], 1e-3, "linearity")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rows_layout_is_transpose_of_in_out() {
+    check("rows == transpose(in_out)", 100, |g: &mut Gen| {
+        let rows = g.usize_in(1, 32);
+        let cols = g.usize_in(1, 32);
+        let data = g.vec_normal(rows * cols);
+        // W (rows, cols) consumed row-per-output == W^T consumed in-out
+        let w_rows = Mat::from_f32(rows, cols, data.clone());
+        let mut t = vec![0.0; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = data[r * cols + c];
+            }
+        }
+        let w_io = Mat::from_f32(cols, rows, t);
+        let x = g.vec_normal(cols);
+        let mut a = vec![0.0; rows];
+        matvec_rows(&w_rows, &x, &mut a);
+        let mut b = vec![0.0; rows];
+        matvec_in_out(&x, &w_io, &mut b);
+        for j in 0..rows {
+            ensure_close(a[j], b[j], 1e-3, "transpose equivalence")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_indexed_matvec_subset_of_dense() {
+    check("indexed == dense subset", 100, |g: &mut Gen| {
+        let rows = g.usize_in(2, 40);
+        let cols = g.usize_in(1, 24);
+        let w = Mat::from_f32(rows, cols, g.vec_normal(rows * cols));
+        let x = g.vec_normal(cols);
+        let idx = g.indices(rows, 10);
+        let mut dense = vec![0.0; rows];
+        matvec_rows(&w, &x, &mut dense);
+        let mut sparse = vec![0.0; idx.len()];
+        matvec_rows_indexed(&w, &idx, &x, &mut sparse);
+        for (k, &j) in idx.iter().enumerate() {
+            ensure(sparse[k] == dense[j as usize], "exact subset")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_round_trip_monotone() {
+    check("f16 conversion order-preserving", 150, |g: &mut Gen| {
+        let a = g.f32_in(-1e4, 1e4);
+        let b = g.f32_in(-1e4, 1e4);
+        let (fa, fb) = (f16_to_f32(f32_to_f16(a)), f16_to_f32(f32_to_f16(b)));
+        if a < b {
+            ensure(fa <= fb, "monotone")?;
+        }
+        ensure_close(fa, a, 2e-3, "round trip")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_softmax_invariant_to_shift() {
+    check("softmax shift invariance", 100, |g: &mut Gen| {
+        let mut x = g.vec_f32(32, -10.0, 10.0);
+        let shift = g.f32_in(-50.0, 50.0);
+        let mut y: Vec<f32> = x.iter().map(|v| v + shift).collect();
+        softmax_inplace(&mut x);
+        softmax_inplace(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            ensure_close(*a, *b, 1e-3, "shift invariance")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_logsumexp_bounds() {
+    check("max <= lse <= max + ln(n)", 100, |g: &mut Gen| {
+        let x = g.vec_f32(64, -30.0, 30.0);
+        let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = logsumexp(&x);
+        ensure(lse >= m - 1e-4, "lower bound")?;
+        ensure(lse <= m + (x.len() as f32).ln() + 1e-4, "upper bound")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layernorm_scale_invariant() {
+    check("layernorm(a*x) == layernorm(x) for a>0", 80, |g: &mut Gen| {
+        let n = g.usize_in(2, 48);
+        let x = g.vec_normal(n);
+        let a = g.f32_in(0.5, 20.0);
+        let ones = vec![1.0f32; n];
+        let zeros = vec![0.0f32; n];
+        let scaled: Vec<f32> = x.iter().map(|v| v * a).collect();
+        let mut o1 = vec![0.0; n];
+        let mut o2 = vec![0.0; n];
+        layer_norm(&x, &ones, &zeros, 1e-6, &mut o1);
+        layer_norm(&scaled, &ones, &zeros, 1e-6, &mut o2);
+        for (p, q) in o1.iter().zip(&o2) {
+            ensure_close(*p, *q, 1e-2, "scale invariance")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bit_matvec_sign_flip_antisymmetric() {
+    // scores(x) == -scores(-x)
+    check("bit matvec antisymmetry", 80, |g: &mut Gen| {
+        let in_dim = g.usize_in(1, 40);
+        let out_dim = g.usize_in(1, 24);
+        let packed: Vec<u8> = (0..in_dim.div_ceil(8) * out_dim)
+            .map(|_| (g.rng.next_u64() & 0xff) as u8)
+            .collect();
+        let scale: Vec<f32> = (0..out_dim).map(|_| g.f32_in(0.01, 2.0)).collect();
+        let x = g.vec_normal(in_dim);
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        let mut a = vec![0.0; out_dim];
+        let mut b = vec![0.0; out_dim];
+        bit_matvec(&packed, &scale, in_dim, &x, &mut a);
+        bit_matvec(&packed, &scale, in_dim, &neg, &mut b);
+        for (p, q) in a.iter().zip(&b) {
+            ensure_close(*p, -*q, 1e-3, "antisymmetry")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kth_largest_is_order_statistic() {
+    check("kth largest", 100, |g: &mut Gen| {
+        let xs = g.vec_f32(64, -100.0, 100.0);
+        let k = g.usize_in(1, xs.len() + 1).min(xs.len()).max(1);
+        let thr = rwkv_lite::engine::sparse_ffn::kth_largest(&xs, k);
+        let ge = xs.iter().filter(|&&v| v >= thr).count();
+        ensure(ge >= k, &format!("at least k={k} elements >= thr, got {ge}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sqrelu_nonnegative_and_monotone() {
+    check("sqrelu", 80, |g: &mut Gen| {
+        let mut x = g.vec_f32(48, -5.0, 5.0);
+        let orig = x.clone();
+        tensor::sqrelu_inplace(&mut x);
+        for (o, v) in orig.iter().zip(&x) {
+            ensure(*v >= 0.0, "non-negative")?;
+            if *o <= 0.0 {
+                ensure(*v == 0.0, "negatives suppressed")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_norm_per_head_zero_mean() {
+    check("group norm per-head mean", 60, |g: &mut Gen| {
+        let heads = g.usize_in(1, 8);
+        let hs = g.usize_in(2, 16);
+        let n = heads * hs;
+        let mut x = g.vec_normal(n);
+        let ones = vec![1.0f32; n];
+        let zeros = vec![0.0f32; n];
+        tensor::group_norm_heads(&mut x, heads, &ones, &zeros);
+        for h in 0..heads {
+            let seg = &x[h * hs..(h + 1) * hs];
+            let mean: f32 = seg.iter().sum::<f32>() / hs as f32;
+            ensure(mean.abs() < 1e-3, "per-head zero mean")?;
+        }
+        Ok(())
+    });
+}
