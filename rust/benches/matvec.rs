@@ -4,7 +4,9 @@
 //! (S28); reports mean/p50/p95 per op plus effective GB/s, the number to
 //! compare against the host's streaming bandwidth (§Perf roofline).
 
-use rwkv_lite::tensor::{bit_matvec, matvec_in_out, matvec_rows, matvec_rows_indexed, Mat};
+use rwkv_lite::tensor::{
+    bit_matvec, matmat_in_out, matmat_rows, matvec_in_out, matvec_rows, matvec_rows_indexed, Mat,
+};
 use rwkv_lite::util::timer::bench;
 use rwkv_lite::util::XorShift;
 
@@ -25,21 +27,22 @@ fn main() {
         let w8 = Mat::I8 { rows, cols, data: q, scale: vec![0.025; cols] };
         let mut out = vec![0.0f32; cols];
         let mut out_r = vec![0.0f32; rows];
+        let mut acc = Vec::new();
         let bytes32 = (rows * cols * 4) as f64;
 
         let s = bench(&format!("matvec_in_out f32 {rows}x{cols}"), 50, 0.4, || {
             out.fill(0.0);
-            matvec_in_out(&x, &w32, &mut out);
+            matvec_in_out(&x, &w32, &mut out, &mut acc);
         });
         println!("    -> {:.2} GB/s", bytes32 / s.p50_s / 1e9);
         let s = bench(&format!("matvec_in_out f16 {rows}x{cols}"), 50, 0.4, || {
             out.fill(0.0);
-            matvec_in_out(&x, &w16, &mut out);
+            matvec_in_out(&x, &w16, &mut out, &mut acc);
         });
         println!("    -> {:.2} GB/s", bytes32 / 2.0 / s.p50_s / 1e9);
         let s = bench(&format!("matvec_in_out i8  {rows}x{cols} (fused dequant)"), 50, 0.4, || {
             out.fill(0.0);
-            matvec_in_out(&x, &w8, &mut out);
+            matvec_in_out(&x, &w8, &mut out, &mut acc);
         });
         println!("    -> {:.2} GB/s", bytes32 / 4.0 / s.p50_s / 1e9);
         bench(&format!("matvec_rows   f16 {rows}x{cols}"), 50, 0.4, || {
@@ -53,6 +56,31 @@ fn main() {
         });
         println!();
     }
+
+    // multi-vector kernels: per-slot-token cost should FALL with B because
+    // each weight row streams once per call and serves every slot
+    println!("batched matmat kernels (192x672 f16, per-slot-token amortization)\n");
+    let (rows, cols) = (192usize, 672usize);
+    let wf = randv(&mut r, rows * cols);
+    let w16 = Mat::f32_to_f16_mat(rows, cols, &wf);
+    let bytes16 = (rows * cols * 2) as f64;
+    for &b in &[1usize, 2, 4, 8] {
+        let xs = randv(&mut r, b * rows);
+        let xsc = randv(&mut r, b * cols);
+        let mut outs = vec![0.0f32; b * cols];
+        let mut outs_r = vec![0.0f32; b * rows];
+        let mut scratch = Vec::new();
+        let s = bench(&format!("matmat_in_out f16 B={b}"), 50, 0.3, || {
+            outs.fill(0.0);
+            matmat_in_out(&xs, &w16, &mut outs, &mut scratch);
+        });
+        println!("    -> {:.2} GB/s per slot-token", bytes16 * b as f64 / s.p50_s / 1e9);
+        let s = bench(&format!("matmat_rows   f16 B={b}"), 50, 0.3, || {
+            matmat_rows(&w16, &xsc, &mut outs_r);
+        });
+        println!("    -> {:.2} GB/s per slot-token", bytes16 * b as f64 / s.p50_s / 1e9);
+    }
+    println!();
 
     // 1-bit predictor shadow (D=192, F=672 like the medium model)
     let (d, f) = (192usize, 672usize);

@@ -2,10 +2,22 @@
 //!
 //! Edge-serving shape: one engine (one device) decodes a *batch* of
 //! concurrent requests round-robin, one token each per scheduling round
-//! (continuous batching: new requests join mid-flight).  Batching keeps
-//! the device busy across request think-time and amortizes scheduler
-//! overhead; fusing the §3.2 sparse-row unions across a round (the
-//! PowerInfer-style argument) is future work tracked in DESIGN.md §8.
+//! (continuous batching: new requests join mid-flight).
+//!
+//! Batched decode design (one weight pass per round): decode-phase slots
+//! advance through `RwkvEngine::forward_tokens_batch`, which keeps all B
+//! activations in a `(B, D)` scratch and drives every projection, FFN
+//! matrix and the head through the tensor::matmat multi-vector kernels —
+//! each weight row streams from storage ONCE per round and serves every
+//! slot while hot, so dense-layer bytes-per-round are constant in B and
+//! aggregate tok/s scales with the batch.  The §3.2 sparse FFN is fused
+//! across the round (the PowerInfer-style amortization): per-slot
+//! predictor index sets are UNIONED, one pass over the union rows computes
+//! every slot's activations (each slot masked to its own predicted set, so
+//! results stay bit-identical to the per-slot path), and the union bytes
+//! are what residency accounting charges.  Per-round telemetry
+//! (`decode_rounds`, `decode_round_weight_bytes`, `decode_slot_tokens`)
+//! lands in the coordinator registry for benches and dashboards.
 //!
 //! Topology: N client threads -> mpsc -> coordinator thread (owns the
 //! engine) -> per-request streaming channels.
@@ -210,6 +222,9 @@ fn run_loop(
                 .collect();
             match engine.forward_tokens_batch(&tokens, &mut states) {
                 Ok(all_logits) => {
+                    metrics.inc("decode_rounds", 1);
+                    metrics.inc("decode_round_weight_bytes", engine.last_round_weight_bytes);
+                    metrics.inc("decode_slot_tokens", tokens.len() as u64);
                     for ((&i, state), mut logits) in
                         decode_idx.iter().zip(states).zip(all_logits)
                     {

@@ -7,6 +7,11 @@
 //! softmax mass implies the total unknown exp-mass, which is spread
 //! uniformly (mean value) over unknown tokens.  Pseudo logits keep the
 //! distribution smooth — assigning -inf wrecks perplexity (paper §3.3).
+//!
+//! [`HierHead::logits_batch`] serves a whole scheduling round: H1 streams
+//! once for all slots (tensor::matmat), and the exact head rows touched by
+//! the round are accounted as the cross-slot UNION (a row streamed for one
+//! slot serves every other slot that selected its cluster).
 
 use std::sync::Arc;
 
@@ -14,7 +19,7 @@ use anyhow::Result;
 
 use crate::engine::weights::WeightStore;
 use crate::metrics::{Group, MemTracker};
-use crate::tensor::{matvec_rows, Mat};
+use crate::tensor::{matmat_rows, matvec_rows, Mat};
 use crate::util::softmax_inplace;
 
 pub struct HierHead {
@@ -59,6 +64,11 @@ impl HierHead {
         })
     }
 
+    /// Stored bytes of the cluster head H1 (round weight accounting).
+    pub fn h1_nbytes(&self) -> u64 {
+        self.h1.nbytes()
+    }
+
     /// Compute the (approximate) full-vocabulary logits for `hidden`.
     pub fn logits(
         &mut self,
@@ -71,7 +81,82 @@ impl HierHead {
         // Step 1: cluster probabilities (Eq. 7)
         let mut cl = vec![0.0f32; c];
         matvec_rows(&self.h1, hidden, &mut cl);
-        softmax_inplace(&mut cl);
+        let (clusters_selected, n_loaded, row_bytes) =
+            self.logits_with_cl(store, hidden, &mut cl, out, None)?;
+        let bytes = n_loaded as u64 * row_bytes;
+        tracker.load(Group::Head, bytes);
+        tracker.unload(Group::Head, bytes);
+        self.tokens += 1;
+        self.rows_loaded_sum += n_loaded as u64;
+        self.bytes_streamed += bytes;
+        Ok(HeadStats { clusters_selected, tokens_loaded: n_loaded, bytes })
+    }
+
+    /// Batched-round logits: one H1 streaming pass scores every slot's
+    /// clusters, then each slot runs the exact per-slot selection (bit-
+    /// identical to [`HierHead::logits`]).  Exact head-row bytes are
+    /// accounted as the cross-slot union — a row streams once per round.
+    /// Returns aggregated stats: `clusters_selected` summed over slots,
+    /// `tokens_loaded` / `bytes` for the union.
+    pub fn logits_batch(
+        &mut self,
+        store: &WeightStore,
+        tracker: &MemTracker,
+        hiddens: &[f32],
+        outs: &mut [Vec<f32>],
+    ) -> Result<HeadStats> {
+        let c = self.h1.rows();
+        let d = self.h1.cols();
+        let b = outs.len();
+        debug_assert_eq!(hiddens.len(), b * d);
+        let mut cls = vec![0.0f32; b * c];
+        matmat_rows(&self.h1, hiddens, &mut cls);
+        let mut head_row_bytes = 0u64;
+        let mut loaded_union: Vec<u32> = Vec::new();
+        let mut clusters_sum = 0usize;
+        for (s, out) in outs.iter_mut().enumerate() {
+            let hidden = &hiddens[s * d..(s + 1) * d];
+            let (sel, n_loaded, row_bytes) = self.logits_with_cl(
+                store,
+                hidden,
+                &mut cls[s * c..(s + 1) * c],
+                out,
+                Some(&mut loaded_union),
+            )?;
+            head_row_bytes = row_bytes;
+            clusters_sum += sel;
+            self.tokens += 1;
+            self.rows_loaded_sum += n_loaded as u64;
+        }
+        loaded_union.sort_unstable();
+        loaded_union.dedup();
+        let bytes = loaded_union.len() as u64 * head_row_bytes;
+        tracker.load(Group::Head, bytes);
+        tracker.unload(Group::Head, bytes);
+        self.bytes_streamed += bytes;
+        Ok(HeadStats {
+            clusters_selected: clusters_sum,
+            tokens_loaded: loaded_union.len(),
+            bytes,
+        })
+    }
+
+    /// Shared per-slot core: softmax the cluster scores, select clusters,
+    /// stream exact logits, spread the pseudo logit.  When `loaded` is
+    /// given, each loaded token row is appended (the batched caller
+    /// accounts bytes as the round union; the per-slot caller passes
+    /// `None` to stay allocation-free).  Returns (clusters selected,
+    /// rows loaded, head row bytes).
+    fn logits_with_cl(
+        &self,
+        store: &WeightStore,
+        hidden: &[f32],
+        cl: &mut [f32],
+        out: &mut [f32],
+        mut loaded: Option<&mut Vec<u32>>,
+    ) -> Result<(usize, usize, u64)> {
+        let c = cl.len();
+        softmax_inplace(cl);
         let mut order: Vec<usize> = (0..c).collect();
         order.sort_by(|&a, &b| cl[b].partial_cmp(&cl[a]).unwrap());
         let mut csum = 0.0f32;
@@ -97,11 +182,11 @@ impl HierHead {
                 out[tok as usize] = lg;
                 max_known = max_known.max(lg);
                 n_loaded += 1;
+                if let Some(l) = loaded.as_mut() {
+                    l.push(tok);
+                }
             }
         }
-        let bytes = n_loaded as u64 * head.row_bytes();
-        tracker.load(Group::Head, bytes);
-        tracker.unload(Group::Head, bytes);
         // Step 3: pseudo logits (Eq. 9).  From softmax algebra:
         //   S_known = sum_{known} exp(l);  P_known = csum (cluster head)
         //   S_unknown = S_known * (1 - P_known) / P_known
@@ -121,21 +206,14 @@ impl HierHead {
                 if self
                     .assign
                     .get(tok)
-                    .map(|&c| !selected_mask[c as usize])
+                    .map(|&cc| !selected_mask[cc as usize])
                     .unwrap_or(true)
                 {
                     *o = pseudo;
                 }
             }
         }
-        self.tokens += 1;
-        self.rows_loaded_sum += n_loaded as u64;
-        self.bytes_streamed += bytes;
-        Ok(HeadStats {
-            clusters_selected: selected.len(),
-            tokens_loaded: n_loaded,
-            bytes,
-        })
+        Ok((selected.len(), n_loaded, head.row_bytes()))
     }
 
     pub fn mean_tokens_loaded(&self) -> f64 {

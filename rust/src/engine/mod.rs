@@ -6,6 +6,12 @@
 //! * Embedding LRU cache + hierarchical head (§3.3).
 //! * Loading strategies full / layerwise (§5.1) with auditable residency.
 //! * Backends: pure-rust kernels (native) or AOT HLO via PJRT (xla).
+//!
+//! Decode runs in two shapes: the per-slot path ([`RwkvEngine::forward_token`])
+//! and the weight-streaming batched path ([`RwkvEngine::forward_tokens_batch`])
+//! that advances every slot of a scheduling round through one pass over the
+//! weights (tensor::matmat kernels + union-fused sparse FFN).  The two paths
+//! are bit-identical per slot.
 
 pub mod emb_cache;
 pub mod hier_head;
@@ -24,8 +30,8 @@ use anyhow::{bail, Context, Result};
 use crate::config::{Backend, EngineConfig, LoadStrategy};
 use crate::metrics::{MemTracker, Registry};
 use crate::tensor::{
-    group_norm_heads, layer_norm, lerp_shift, matvec_in_out, matvec_rows, sigmoid, silu,
-    sqrelu_inplace, Mat,
+    group_norm_heads, layer_norm, lerp_shift, matmat_in_out, matmat_rows, matvec_in_out,
+    matvec_rows, sigmoid, silu, sqrelu_inplace, Mat,
 };
 use emb_cache::EmbCache;
 use hier_head::HierHead;
@@ -72,8 +78,12 @@ pub struct RwkvEngine {
     pub hier: Option<HierHead>,
     pub preds: Vec<Option<SparsePredictor>>,
     xla: Option<XlaRwkv>,
-    buf: Scratch, // allocation-free hot loop
+    buf: Scratch,      // allocation-free per-slot hot loop
+    bbuf: BatchScratch, // allocation-free batched-round hot loop
     pub last_stats: StepStats,
+    /// Weight bytes streamed by the most recent batched decode round
+    /// (each dense matrix counted once per round regardless of B).
+    pub last_round_weight_bytes: u64,
     /// Cumulative per-layer FFN activation telemetry (drives Figure 3):
     /// (active, total) pairs counted on the dense path (true relu mask)
     /// and on the sparse path (predicted rows).
@@ -93,6 +103,7 @@ struct Scratch {
     g: Vec<f32>,
     att_out: Vec<f32>,
     rank: Vec<f32>,
+    acc: Vec<f32>, // i8 matvec dequant accumulator
     pred_n: Vec<f32>,
     pred_f: Vec<f32>,
     pred_f2: Vec<f32>,
@@ -115,12 +126,129 @@ impl Scratch {
             g: vec![0.0; d],
             att_out: vec![0.0; d],
             rank: Vec::new(),
+            acc: Vec::with_capacity(d),
             pred_n: Vec::new(),
             pred_f: Vec::with_capacity(f),
             pred_f2: Vec::with_capacity(f),
             idx: Vec::with_capacity(f),
             h_act: Vec::with_capacity(f),
             ffn_out: vec![0.0; d],
+        }
+    }
+}
+
+/// Round-persistent scratch for the batched decode path: activations live
+/// in `(B, D)` row-major flat buffers so the matmat kernels stream each
+/// weight row once for the whole round.  Everything here is reused across
+/// rounds and layers — after warm-up a decode round performs no heap
+/// allocation beyond the returned logits vectors.
+struct BatchScratch {
+    x: Vec<f32>,       // (B, D) residual stream
+    xa: Vec<f32>,      // (B, D) ln1 output / final hidden
+    xf: Vec<f32>,      // (B, D) ln2 output
+    t1: Vec<f32>,      // (B, D) shifted key input
+    t2: Vec<f32>,      // (B, D) shifted receptance input
+    r: Vec<f32>,       // (B, D)
+    k: Vec<f32>,       // (B, D)
+    v: Vec<f32>,       // (B, D)
+    g: Vec<f32>,       // (B, D)
+    att_out: Vec<f32>, // (B, D)
+    ffn_out: Vec<f32>, // (B, D)
+    rank: Vec<f32>,    // (B, rank) low-rank projection intermediate
+    acc: Vec<f32>,     // matmat kernel scratch (f16 row decode / i8 accum)
+    h: Vec<f32>,       // (B, U) sparse activations or (B, F)/(B, V) dense
+    // per-slot predictor scratch (the predictor itself is per-slot math)
+    pred_n: Vec<f32>,
+    pred_f: Vec<f32>,
+    pred_f2: Vec<f32>,
+    /// Per-slot predicted row sets, reused every layer (no per-layer
+    /// clone/realloc — the vectors keep their capacity across rounds).
+    slot_idx: Vec<Vec<u32>>,
+    union_idx: Vec<u32>,
+    cursors: Vec<usize>,
+}
+
+impl BatchScratch {
+    fn new() -> Self {
+        Self {
+            x: Vec::new(),
+            xa: Vec::new(),
+            xf: Vec::new(),
+            t1: Vec::new(),
+            t2: Vec::new(),
+            r: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            g: Vec::new(),
+            att_out: Vec::new(),
+            ffn_out: Vec::new(),
+            rank: Vec::new(),
+            acc: Vec::new(),
+            h: Vec::new(),
+            pred_n: Vec::new(),
+            pred_f: Vec::new(),
+            pred_f2: Vec::new(),
+            slot_idx: Vec::new(),
+            union_idx: Vec::new(),
+            cursors: Vec::new(),
+        }
+    }
+
+    /// Size every `(B, D)` buffer for an `n`-slot round (exact lengths —
+    /// the matmat kernels infer B from them).
+    fn ensure(&mut self, n: usize, d: usize) {
+        let len = n * d;
+        for buf in [
+            &mut self.x,
+            &mut self.xa,
+            &mut self.xf,
+            &mut self.t1,
+            &mut self.t2,
+            &mut self.r,
+            &mut self.k,
+            &mut self.v,
+            &mut self.g,
+            &mut self.att_out,
+            &mut self.ffn_out,
+        ] {
+            buf.resize(len, 0.0);
+        }
+        while self.slot_idx.len() < n {
+            self.slot_idx.push(Vec::new());
+        }
+    }
+}
+
+/// One decode step of the WKV recurrence (shared by the per-slot and the
+/// batched paths so the two stay bit-identical by construction).
+fn wkv_decode_step(
+    heads: usize,
+    head_size: usize,
+    decay: &[f32],
+    first: &[f32],
+    r: &[f32],
+    k: &[f32],
+    v: &[f32],
+    wkv: &mut [f32],
+    out: &mut [f32],
+) {
+    let s = head_size;
+    out.fill(0.0);
+    for hh in 0..heads {
+        let base = hh * s * s;
+        for i in 0..s {
+            let ki = k[hh * s + i];
+            let ri = r[hh * s + i];
+            let wi = decay[hh * s + i];
+            let ui = first[hh * s + i];
+            let srow = &mut wkv[base + i * s..base + (i + 1) * s];
+            let vrow = &v[hh * s..(hh + 1) * s];
+            let orow = &mut out[hh * s..(hh + 1) * s];
+            for j in 0..s {
+                let a = ki * vrow[j];
+                orow[j] += ri * (ui * a + srow[j]);
+                srow[j] = wi * srow[j] + a;
+            }
         }
     }
 }
@@ -216,7 +344,9 @@ impl RwkvEngine {
             preds,
             xla,
             buf,
+            bbuf: BatchScratch::new(),
             last_stats: StepStats::default(),
+            last_round_weight_bytes: 0,
             ffn_active_by_layer: vec![0; info.layers],
             ffn_count_by_layer: vec![0; info.layers],
         })
@@ -257,7 +387,7 @@ impl RwkvEngine {
     }
 
     // ------------------------------------------------------------------
-    // Per-layer math (native backend)
+    // Per-layer math (native backend, per-slot path)
     // ------------------------------------------------------------------
 
     fn time_mix(&mut self, b: &BlockW, layer: usize, state: &mut RwkvState) {
@@ -267,41 +397,33 @@ impl RwkvEngine {
         layer_norm(&buf.x, &b.ln1.scale, &b.ln1.bias, 1e-5, &mut buf.xa);
         let prev = &state.att_x[layer];
         lerp_shift(&buf.xa, prev, &b.att.mu_r, &mut buf.t1);
-        b.att.wr.apply(&buf.t1, &mut buf.r, &mut buf.rank);
+        b.att.wr.apply(&buf.t1, &mut buf.r, &mut buf.rank, &mut buf.acc);
         lerp_shift(&buf.xa, prev, &b.att.mu_k, &mut buf.t1);
-        b.att.wk.apply(&buf.t1, &mut buf.k, &mut buf.rank);
+        b.att.wk.apply(&buf.t1, &mut buf.k, &mut buf.rank, &mut buf.acc);
         lerp_shift(&buf.xa, prev, &b.att.mu_v, &mut buf.t1);
-        b.att.wv.apply(&buf.t1, &mut buf.v, &mut buf.rank);
+        b.att.wv.apply(&buf.t1, &mut buf.v, &mut buf.rank, &mut buf.acc);
         lerp_shift(&buf.xa, prev, &b.att.mu_g, &mut buf.t1);
-        b.att.wg.apply(&buf.t1, &mut buf.g, &mut buf.rank);
+        b.att.wg.apply(&buf.t1, &mut buf.g, &mut buf.rank, &mut buf.acc);
         for v in buf.g.iter_mut() {
             *v = silu(*v);
         }
         // WKV recurrence (decode step of the L1 kernel)
-        let wkv = &mut state.wkv[layer];
-        buf.att_out.fill(0.0);
-        for hh in 0..h {
-            let base = hh * s * s;
-            for i in 0..s {
-                let ki = buf.k[hh * s + i];
-                let ri = buf.r[hh * s + i];
-                let wi = b.att.decay[hh * s + i];
-                let ui = b.att.first[hh * s + i];
-                let srow = &mut wkv[base + i * s..base + (i + 1) * s];
-                let vrow = &buf.v[hh * s..(hh + 1) * s];
-                let orow = &mut buf.att_out[hh * s..(hh + 1) * s];
-                for j in 0..s {
-                    let a = ki * vrow[j];
-                    orow[j] += ri * (ui * a + srow[j]);
-                    srow[j] = wi * srow[j] + a;
-                }
-            }
-        }
+        wkv_decode_step(
+            h,
+            s,
+            &b.att.decay,
+            &b.att.first,
+            &buf.r,
+            &buf.k,
+            &buf.v,
+            &mut state.wkv[layer],
+            &mut buf.att_out,
+        );
         group_norm_heads(&mut buf.att_out, h, &b.att.lnx.scale, &b.att.lnx.bias);
         for i in 0..d {
             buf.att_out[i] *= buf.g[i];
         }
-        matvec_in_out(&buf.att_out, &b.att.wo, &mut buf.x); // += residual
+        matvec_in_out(&buf.att_out, &b.att.wo, &mut buf.x, &mut buf.acc); // += residual
         state.att_x[layer].copy_from_slice(&buf.xa);
     }
 
@@ -312,7 +434,7 @@ impl RwkvEngine {
         let prev = &state.ffn_x[layer];
         lerp_shift(&buf.xf, prev, &b.ffn.mu_k, &mut buf.t1); // xk
         lerp_shift(&buf.xf, prev, &b.ffn.mu_r, &mut buf.t2); // xr
-        b.ffn.wr.apply(&buf.t2, &mut buf.r, &mut buf.rank);
+        b.ffn.wr.apply(&buf.t2, &mut buf.r, &mut buf.rank, &mut buf.acc);
         for v in buf.r.iter_mut() {
             *v = sigmoid(*v);
         }
@@ -339,7 +461,6 @@ impl RwkvEngine {
                 &buf.t1,
                 &mut buf.ffn_out,
                 &mut buf.h_act,
-                true,
             )?;
             self.last_stats.ffn_active += stats.active;
             self.last_stats.ffn_total += stats.total;
@@ -360,7 +481,7 @@ impl RwkvEngine {
             self.last_stats.ffn_total += f;
             buf.ffn_out.fill(0.0);
             let wv = b.ffn.wv.as_ref().context("dense FFN wv not loaded")?;
-            matvec_in_out(&buf.pred_f, wv, &mut buf.ffn_out);
+            matvec_in_out(&buf.pred_f, wv, &mut buf.ffn_out, &mut buf.acc);
         }
         for i in 0..d {
             buf.x[i] += buf.r[i] * buf.ffn_out[i];
@@ -370,7 +491,7 @@ impl RwkvEngine {
     }
 
     // ------------------------------------------------------------------
-    // Full-model step
+    // Full-model step (per-slot path)
     // ------------------------------------------------------------------
 
     /// Advance one token; returns the final hidden state (post ln_out).
@@ -436,14 +557,28 @@ impl RwkvEngine {
         self.head_logits(&hidden)
     }
 
-    /// Batched decode round: advance each slot one token, layer by layer.
+    // ------------------------------------------------------------------
+    // Batched decode round (weight-streaming path)
+    // ------------------------------------------------------------------
+
+    /// Batched decode round: advance each slot one token with ONE pass over
+    /// the weights.
     ///
-    /// Numerically IDENTICAL to calling [`Self::forward_token`] per slot —
-    /// each slot computes with its own predicted row set — but the §3.2
-    /// sparse-row *loading* is accounted as the cross-slot UNION once per
-    /// layer per round: on a real device the rows stream from flash once
-    /// and serve every request in the round (the PowerInfer-style batching
-    /// amortization, here for the coordinator's dynamic batches).
+    /// Activations live in `(B, D)` flat buffers ([`BatchScratch`]) and
+    /// every projection / FFN matrix / head matrix is applied through the
+    /// tensor::matmat multi-vector kernels, so each weight row streams once
+    /// per round and serves all B slots while hot.  The §3.2 sparse FFN is
+    /// fused across slots: the per-slot predictor index sets are unioned
+    /// and one pass over the union rows computes every slot's activations
+    /// (each slot masked to its own predicted set).  Only the time-mix
+    /// state recurrence and the element-wise norms/shifts stay per-slot.
+    ///
+    /// Numerically BIT-IDENTICAL to calling [`Self::forward_token`] per
+    /// slot — the kernels preserve the per-slot accumulation order exactly.
+    ///
+    /// Telemetry: `batch_rounds`, `batch_round_weight_bytes` (dense-layer
+    /// bytes are constant in B — that is the point), `batch_union_rows` /
+    /// `batch_individual_rows`, and the `batch_round_secs` timing series.
     pub fn forward_tokens_batch(
         &mut self,
         tokens: &[u32],
@@ -452,131 +587,314 @@ impl RwkvEngine {
         anyhow::ensure!(tokens.len() == states.len(), "tokens/states mismatch");
         anyhow::ensure!(self.xla.is_none(), "batched decode is native-backend only");
         let n = tokens.len();
-        let d = self.info.dim;
-        // per-slot working x
-        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n);
-        for &t in tokens {
-            let mut x_emb = vec![0.0f32; d];
-            self.embed(t, &mut x_emb)?;
-            let mut x = vec![0.0f32; d];
-            layer_norm(&x_emb, &self.ln0.scale, &self.ln0.bias, 1e-5, &mut x);
-            xs.push(x);
+        if n == 0 {
+            return Ok(Vec::new());
         }
+        let d = self.info.dim;
+        self.last_stats = StepStats::default();
+        let round = crate::util::Stopwatch::start();
+        self.bbuf.ensure(n, d);
+        let mut round_bytes: u64 = 0;
+
+        // embed + ln0 into the (B, D) residual stream
+        let t_emb = crate::util::Stopwatch::start();
+        let mut xbuf = std::mem::take(&mut self.bbuf.x);
+        let mut row = std::mem::take(&mut self.bbuf.t1);
+        row.clear();
+        row.resize(d, 0.0);
+        for (s, &tok) in tokens.iter().enumerate() {
+            self.embed(tok, &mut row)?;
+            layer_norm(&row, &self.ln0.scale, &self.ln0.bias, 1e-5, &mut xbuf[s * d..(s + 1) * d]);
+        }
+        row.clear();
+        row.resize(n * d, 0.0);
+        self.bbuf.t1 = row;
+        self.bbuf.x = xbuf;
+        self.last_stats.emb_secs = t_emb.elapsed_secs();
+
         let layerwise = self.cfg.strategy == LoadStrategy::Layerwise;
-        let mut union_scratch: Vec<u32> = Vec::new();
         for layer in 0..self.info.layers {
             let block = if layerwise {
                 BlockW::load(&self.store, layer, !self.cfg.sparse_ffn)?
             } else {
                 self.blocks[layer].clone().context("block not preloaded")?
             };
-            // time-mix per slot (weights shared, state per slot)
-            for s in 0..n {
-                self.buf.x.copy_from_slice(&xs[s]);
-                self.time_mix(&block, layer, &mut states[s]);
-                xs[s].copy_from_slice(&self.buf.x);
-            }
-            // channel-mix: predict per slot first, then account the union
-            if self.cfg.sparse_ffn {
-                union_scratch.clear();
-                let mut per_slot_idx: Vec<Vec<u32>> = Vec::with_capacity(n);
-                for s in 0..n {
-                    self.buf.x.copy_from_slice(&xs[s]);
-                    // replicate chan_mix's xk computation for prediction
-                    let buf = &mut self.buf;
-                    layer_norm(&buf.x, &block.ln2.scale, &block.ln2.bias, 1e-5, &mut buf.xf);
-                    lerp_shift(&buf.xf, &states[s].ffn_x[layer], &block.ffn.mu_k, &mut buf.t1);
-                    let pred = self.preds[layer].as_mut().unwrap();
-                    if pred.mode == sparse_ffn::PredMode::GroundTruth {
-                        buf.idx = SparsePredictor::ground_truth(&self.store, layer, &buf.t1)?;
-                        pred.note_external(buf.idx.len(), self.info.ffn);
-                    } else {
-                        pred.predict(
-                            &buf.t1,
-                            &mut buf.pred_n,
-                            &mut buf.pred_f,
-                            &mut buf.pred_f2,
-                            &mut buf.idx,
-                        );
-                    }
-                    union_scratch.extend_from_slice(&buf.idx);
-                    per_slot_idx.push(buf.idx.clone());
-                }
-                union_scratch.sort_unstable();
-                union_scratch.dedup();
-                let row_bytes = sparse_ffn::ffn_row_pair_bytes(&self.store, layer)?;
-                let union_bytes = union_scratch.len() as u64 * row_bytes;
-                self.store.tracker.load(crate::metrics::Group::ChanMix, union_bytes);
-                self.store.tracker.unload(crate::metrics::Group::ChanMix, union_bytes);
-                self.metrics.inc("batch_union_rows", union_scratch.len() as u64);
-                self.metrics.inc(
-                    "batch_individual_rows",
-                    per_slot_idx.iter().map(|v| v.len() as u64).sum(),
-                );
-                // now the actual math, per slot, unaccounted (union covered it)
-                for s in 0..n {
-                    self.buf.x.copy_from_slice(&xs[s]);
-                    self.chan_mix_with_idx(&block, layer, &mut states[s], &per_slot_idx[s])?;
-                    xs[s].copy_from_slice(&self.buf.x);
-                }
-            } else {
-                for s in 0..n {
-                    self.buf.x.copy_from_slice(&xs[s]);
-                    self.chan_mix(&block, layer, &mut states[s])?;
-                    xs[s].copy_from_slice(&self.buf.x);
-                }
-            }
+            let t_tm = crate::util::Stopwatch::start();
+            self.time_mix_batch(&block, layer, n, states);
+            self.last_stats.timemix_secs += t_tm.elapsed_secs();
+            round_bytes += block.att.wr.nbytes()
+                + block.att.wk.nbytes()
+                + block.att.wv.nbytes()
+                + block.att.wg.nbytes()
+                + block.att.wo.nbytes();
+            let t_cm = crate::util::Stopwatch::start();
+            round_bytes += self.chan_mix_batch(&block, layer, n, states)?;
+            self.last_stats.chanmix_secs += t_cm.elapsed_secs();
             if layerwise {
                 drop(block);
                 self.store.unload_prefix(&format!("b{layer}."));
             }
         }
-        let mut out = Vec::with_capacity(n);
-        for x in &xs {
-            let mut hidden = vec![0.0f32; d];
-            layer_norm(x, &self.ln_out.scale, &self.ln_out.bias, 1e-5, &mut hidden);
-            out.push(self.head_logits(&hidden)?);
+
+        // final layer norm into (B, D) hidden, then the batched head
+        {
+            let bb = &mut self.bbuf;
+            for s in 0..n {
+                layer_norm(
+                    &bb.x[s * d..(s + 1) * d],
+                    &self.ln_out.scale,
+                    &self.ln_out.bias,
+                    1e-5,
+                    &mut bb.xa[s * d..(s + 1) * d],
+                );
+            }
         }
-        Ok(out)
+        let t_head = crate::util::Stopwatch::start();
+        let vocab = self.info.vocab;
+        let mut logits_out: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; vocab]).collect();
+        if let Some(hh) = &mut self.hier {
+            let stats = hh.logits_batch(
+                &self.store,
+                &self.store.tracker,
+                &self.bbuf.xa,
+                &mut logits_out,
+            )?;
+            self.last_stats.head_rows = stats.tokens_loaded;
+            round_bytes += hh.h1_nbytes() + stats.bytes;
+        } else if let Some(hm) = &self.head_mat {
+            // dense head: stream the vocab matrix once for the whole round
+            let mut flat = std::mem::take(&mut self.bbuf.h);
+            flat.clear();
+            flat.resize(n * vocab, 0.0);
+            matmat_rows(hm, &self.bbuf.xa, &mut flat);
+            for (s, out) in logits_out.iter_mut().enumerate() {
+                out.copy_from_slice(&flat[s * vocab..(s + 1) * vocab]);
+            }
+            self.bbuf.h = flat;
+            self.last_stats.head_rows = vocab;
+            round_bytes += hm.nbytes();
+        } else {
+            bail!("no head path configured");
+        }
+        self.last_stats.head_secs = t_head.elapsed_secs();
+
+        self.last_round_weight_bytes = round_bytes;
+        self.metrics.inc("batch_rounds", 1);
+        self.metrics.inc("batch_round_weight_bytes", round_bytes);
+        self.metrics.inc("batch_slot_tokens", n as u64);
+        self.metrics.observe("batch_round_secs", round.elapsed_secs());
+        Ok(logits_out)
     }
 
-    /// Channel-mix with a pre-computed active index set (batched path).
-    fn chan_mix_with_idx(
+    /// Batched time-mix: shared projections go through the matmat kernels
+    /// (one weight pass for all slots); the WKV recurrence, norms and
+    /// shifts run per slot on that slot's state.
+    fn time_mix_batch(&mut self, b: &BlockW, layer: usize, n: usize, states: &mut [RwkvState]) {
+        let (h, hs) = (self.info.heads, self.info.head_size);
+        let d = self.info.dim;
+        let bb = &mut self.bbuf;
+        for s in 0..n {
+            layer_norm(
+                &bb.x[s * d..(s + 1) * d],
+                &b.ln1.scale,
+                &b.ln1.bias,
+                1e-5,
+                &mut bb.xa[s * d..(s + 1) * d],
+            );
+        }
+        for s in 0..n {
+            lerp_shift(
+                &bb.xa[s * d..(s + 1) * d],
+                &states[s].att_x[layer],
+                &b.att.mu_r,
+                &mut bb.t1[s * d..(s + 1) * d],
+            );
+        }
+        b.att.wr.apply_batch(&bb.t1, n, &mut bb.r, &mut bb.rank, &mut bb.acc);
+        for s in 0..n {
+            lerp_shift(
+                &bb.xa[s * d..(s + 1) * d],
+                &states[s].att_x[layer],
+                &b.att.mu_k,
+                &mut bb.t1[s * d..(s + 1) * d],
+            );
+        }
+        b.att.wk.apply_batch(&bb.t1, n, &mut bb.k, &mut bb.rank, &mut bb.acc);
+        for s in 0..n {
+            lerp_shift(
+                &bb.xa[s * d..(s + 1) * d],
+                &states[s].att_x[layer],
+                &b.att.mu_v,
+                &mut bb.t1[s * d..(s + 1) * d],
+            );
+        }
+        b.att.wv.apply_batch(&bb.t1, n, &mut bb.v, &mut bb.rank, &mut bb.acc);
+        for s in 0..n {
+            lerp_shift(
+                &bb.xa[s * d..(s + 1) * d],
+                &states[s].att_x[layer],
+                &b.att.mu_g,
+                &mut bb.t1[s * d..(s + 1) * d],
+            );
+        }
+        b.att.wg.apply_batch(&bb.t1, n, &mut bb.g, &mut bb.rank, &mut bb.acc);
+        for s in 0..n {
+            for v in bb.g[s * d..(s + 1) * d].iter_mut() {
+                *v = silu(*v);
+            }
+            wkv_decode_step(
+                h,
+                hs,
+                &b.att.decay,
+                &b.att.first,
+                &bb.r[s * d..(s + 1) * d],
+                &bb.k[s * d..(s + 1) * d],
+                &bb.v[s * d..(s + 1) * d],
+                &mut states[s].wkv[layer],
+                &mut bb.att_out[s * d..(s + 1) * d],
+            );
+            group_norm_heads(
+                &mut bb.att_out[s * d..(s + 1) * d],
+                h,
+                &b.att.lnx.scale,
+                &b.att.lnx.bias,
+            );
+            for i in 0..d {
+                bb.att_out[s * d + i] *= bb.g[s * d + i];
+            }
+            states[s].att_x[layer].copy_from_slice(&bb.xa[s * d..(s + 1) * d]);
+        }
+        // one streaming pass of wo for the whole round (+= residual)
+        matmat_in_out(&bb.att_out, &b.att.wo, &mut bb.x, &mut bb.acc);
+    }
+
+    /// Batched channel-mix.  Sparse configs predict per slot, then compute
+    /// on the cross-slot UNION of predicted rows in one streaming pass;
+    /// dense configs run wk_t/wv through the matmat kernels.  Returns the
+    /// channel-mix weight bytes streamed this round.
+    fn chan_mix_batch(
         &mut self,
         b: &BlockW,
         layer: usize,
-        state: &mut RwkvState,
-        idx: &[u32],
-    ) -> Result<()> {
+        n: usize,
+        states: &mut [RwkvState],
+    ) -> Result<u64> {
         let d = self.info.dim;
-        let buf = &mut self.buf;
-        layer_norm(&buf.x, &b.ln2.scale, &b.ln2.bias, 1e-5, &mut buf.xf);
-        let prev = &state.ffn_x[layer];
-        lerp_shift(&buf.xf, prev, &b.ffn.mu_k, &mut buf.t1);
-        lerp_shift(&buf.xf, prev, &b.ffn.mu_r, &mut buf.t2);
-        b.ffn.wr.apply(&buf.t2, &mut buf.r, &mut buf.rank);
-        for v in buf.r.iter_mut() {
-            *v = sigmoid(*v);
+        {
+            let bb = &mut self.bbuf;
+            for s in 0..n {
+                layer_norm(
+                    &bb.x[s * d..(s + 1) * d],
+                    &b.ln2.scale,
+                    &b.ln2.bias,
+                    1e-5,
+                    &mut bb.xf[s * d..(s + 1) * d],
+                );
+                lerp_shift(
+                    &bb.xf[s * d..(s + 1) * d],
+                    &states[s].ffn_x[layer],
+                    &b.ffn.mu_k,
+                    &mut bb.t1[s * d..(s + 1) * d],
+                );
+                lerp_shift(
+                    &bb.xf[s * d..(s + 1) * d],
+                    &states[s].ffn_x[layer],
+                    &b.ffn.mu_r,
+                    &mut bb.t2[s * d..(s + 1) * d],
+                );
+            }
+            b.ffn.wr.apply_batch(&bb.t2, n, &mut bb.r, &mut bb.rank, &mut bb.acc);
+            for v in bb.r.iter_mut() {
+                *v = sigmoid(*v);
+            }
         }
-        let stats = sparse_ffn::sparse_ffn_apply(
-            &self.store,
-            &self.store.tracker,
-            layer,
-            idx,
-            &buf.t1,
-            &mut buf.ffn_out,
-            &mut buf.h_act,
-            false,
-        )?;
-        self.last_stats.ffn_active += stats.active;
-        self.last_stats.ffn_total += stats.total;
-        self.ffn_active_by_layer[layer] += stats.active as u64;
-        self.ffn_count_by_layer[layer] += stats.total as u64;
-        for i in 0..d {
-            buf.x[i] += buf.r[i] * buf.ffn_out[i];
+        let mut bytes = b.ffn.wr.nbytes();
+        if self.cfg.sparse_ffn {
+            // predict per slot (the predictor is per-slot math) into the
+            // round-persistent index sets
+            for s in 0..n {
+                let bb = &mut self.bbuf;
+                let pred = self.preds[layer].as_mut().context("predictor missing")?;
+                if pred.mode == sparse_ffn::PredMode::GroundTruth {
+                    let xk = &bb.t1[s * d..(s + 1) * d];
+                    bb.slot_idx[s] = SparsePredictor::ground_truth(&self.store, layer, xk)?;
+                    pred.note_external(bb.slot_idx[s].len(), self.info.ffn);
+                } else {
+                    pred.predict(
+                        &bb.t1[s * d..(s + 1) * d],
+                        &mut bb.pred_n,
+                        &mut bb.pred_f,
+                        &mut bb.pred_f2,
+                        &mut bb.slot_idx[s],
+                    );
+                }
+            }
+            let bb = &mut self.bbuf;
+            bb.union_idx.clear();
+            for s in 0..n {
+                let (union, slots) = (&mut bb.union_idx, &bb.slot_idx);
+                union.extend_from_slice(&slots[s]);
+            }
+            bb.union_idx.sort_unstable();
+            bb.union_idx.dedup();
+            // §3.2 round accounting: the union rows stream from storage
+            // once and serve every slot in the round
+            let row_bytes = sparse_ffn::ffn_row_pair_bytes(&self.store, layer)?;
+            let union_bytes = bb.union_idx.len() as u64 * row_bytes;
+            self.store.tracker.load(crate::metrics::Group::ChanMix, union_bytes);
+            self.store.tracker.unload(crate::metrics::Group::ChanMix, union_bytes);
+            self.metrics.inc("batch_union_rows", bb.union_idx.len() as u64);
+            self.metrics.inc(
+                "batch_individual_rows",
+                bb.slot_idx[..n].iter().map(|v| v.len() as u64).sum(),
+            );
+            bytes += union_bytes;
+            // union-fused compute: one pass over union rows for all slots
+            let total = sparse_ffn::sparse_ffn_apply_batch(
+                &self.store,
+                layer,
+                &bb.union_idx,
+                &bb.slot_idx[..n],
+                &bb.t1,
+                &mut bb.ffn_out,
+                &mut bb.h,
+                &mut bb.cursors,
+            )?;
+            for s in 0..n {
+                let active = bb.slot_idx[s].len();
+                self.last_stats.ffn_active += active;
+                self.last_stats.ffn_total += total;
+                self.ffn_active_by_layer[layer] += active as u64;
+                self.ffn_count_by_layer[layer] += total as u64;
+            }
+        } else {
+            let wk_t = b.ffn.wk_t.as_ref().context("dense FFN weights not loaded")?;
+            let wv = b.ffn.wv.as_ref().context("dense FFN wv not loaded")?;
+            let f = wk_t.rows();
+            let bb = &mut self.bbuf;
+            bb.h.clear();
+            bb.h.resize(n * f, 0.0);
+            matmat_rows(wk_t, &bb.t1, &mut bb.h);
+            sqrelu_inplace(&mut bb.h);
+            for s in 0..n {
+                let nz = bb.h[s * f..(s + 1) * f].iter().filter(|&&v| v > 0.0).count();
+                self.ffn_active_by_layer[layer] += nz as u64;
+                self.ffn_count_by_layer[layer] += f as u64;
+                self.last_stats.ffn_active += nz;
+                self.last_stats.ffn_total += f;
+            }
+            bb.ffn_out.fill(0.0);
+            matmat_in_out(&bb.h, wv, &mut bb.ffn_out, &mut bb.acc);
+            bytes += wk_t.nbytes() + wv.nbytes();
         }
-        state.ffn_x[layer].copy_from_slice(&buf.xf);
-        Ok(())
+        let bb = &mut self.bbuf;
+        for s in 0..n {
+            for i in 0..d {
+                bb.x[s * d + i] += bb.r[s * d + i] * bb.ffn_out[s * d + i];
+            }
+            states[s].ffn_x[layer].copy_from_slice(&bb.xf[s * d..(s + 1) * d]);
+        }
+        Ok(bytes)
     }
 
     /// Consume a prompt (teacher-forced), then sample `n` tokens.

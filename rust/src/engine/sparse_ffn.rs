@@ -132,16 +132,18 @@ impl SparsePredictor {
     ) {
         let n = self.l1.cols();
         let f = self.l2.cols();
-        // MLP logits
+        // MLP logits.  The i8-dequant scratch of each matvec reuses the
+        // buffer that is cleared and refilled right afterwards, so the
+        // predictor stays allocation-free without extra parameters.
         scratch_n.clear();
         scratch_n.resize(n, 0.0);
-        matvec_in_out(xk, &self.l1, scratch_n);
+        matvec_in_out(xk, &self.l1, scratch_n, scratch_f);
         for v in scratch_n.iter_mut() {
             *v = v.max(0.0);
         }
         scratch_f.clear();
         scratch_f.resize(f, 0.0);
-        matvec_in_out(scratch_n, &self.l2, scratch_f);
+        matvec_in_out(scratch_n, &self.l2, scratch_f, scratch_f2);
         // shadow scores: 1-bit by default, 4-bit nibbles in Quant4Only
         scratch_f2.clear();
         scratch_f2.resize(f, 0.0);
@@ -204,9 +206,9 @@ impl SparsePredictor {
 }
 
 /// Streamed sparse FFN evaluation: `out = [sqrelu(wk_t[idx] @ xk)] @ wv[idx]`.
-/// Returns stats with the bytes touched.  `account = false` skips the
-/// residency tracking (the batched scheduler accounts the cross-request
-/// UNION once per round instead — see `RwkvEngine::forward_tokens_batch`).
+/// Returns stats with the bytes touched, accounted as transient ChanMix
+/// residency.  Batched rounds use [`sparse_ffn_apply_batch`] instead,
+/// which accounts the cross-request UNION once per round.
 pub fn sparse_ffn_apply(
     store: &WeightStore,
     tracker: &MemTracker,
@@ -215,7 +217,6 @@ pub fn sparse_ffn_apply(
     xk: &[f32],
     out: &mut [f32],
     h_scratch: &mut Vec<f32>,
-    account: bool,
 ) -> Result<SparseStats> {
     let wk_t = store.row_view(&format!("b{layer}.ffn.wk_t"))?;
     let wv = store.row_view(&format!("b{layer}.ffn.wv"))?;
@@ -233,12 +234,78 @@ pub fn sparse_ffn_apply(
     }
     wv.apply_col_scale(out);
     let bytes = idx.len() as u64 * (wk_t.row_bytes() + wv.row_bytes());
-    if account {
-        // transient residency: rows live only for this token
-        tracker.load(Group::ChanMix, bytes);
-        tracker.unload(Group::ChanMix, bytes);
-    }
+    // transient residency: rows live only for this token
+    tracker.load(Group::ChanMix, bytes);
+    tracker.unload(Group::ChanMix, bytes);
     Ok(SparseStats { active: idx.len(), total: wk_t.rows, bytes })
+}
+
+/// Union-fused batched sparse FFN (§3.2 across a scheduling round): one
+/// pass over the UNION of the slots' predicted rows computes every slot's
+/// output.  `wk_t[j]` / `wv[j]` stream from the mmap once per round and
+/// serve all B slots while hot — the bytes-touched win the per-slot
+/// union *accounting* already claimed, now realized in compute.
+///
+/// Bit-identical per slot to [`sparse_ffn_apply`]: each slot's activation
+/// `h` is computed only for rows in its OWN predicted set (`slot_idx[s]`,
+/// strictly ascending, a subset of `union_idx`), and the W_v accumulation
+/// visits rows in the same ascending order with the same zero-skip, so
+/// the result matches the per-slot path to the last bit.
+///
+/// `xks` / `outs` are `(B, D)` flat; `h` is resized to `(B, U)` flat;
+/// `cursors` is per-slot merge-walk scratch.  Residency accounting for
+/// the union bytes is the caller's job (it knows the round context).
+/// Returns the FFN width F (for per-slot stats).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_ffn_apply_batch(
+    store: &WeightStore,
+    layer: usize,
+    union_idx: &[u32],
+    slot_idx: &[Vec<u32>],
+    xks: &[f32],
+    outs: &mut [f32],
+    h: &mut Vec<f32>,
+    cursors: &mut Vec<usize>,
+) -> Result<usize> {
+    let wk_t = store.row_view(&format!("b{layer}.ffn.wk_t"))?;
+    let wv = store.row_view(&format!("b{layer}.ffn.wv"))?;
+    let d = wk_t.cols;
+    let b = slot_idx.len();
+    let u = union_idx.len();
+    debug_assert_eq!(xks.len(), b * d);
+    debug_assert_eq!(outs.len(), b * d);
+    h.clear();
+    h.resize(b * u, 0.0);
+    cursors.clear();
+    cursors.resize(b, 0);
+    // pass 1: wk_t rows — stream each union row once, dot it against every
+    // slot that predicted it (merge-walk over the sorted per-slot sets)
+    for (uk, &j) in union_idx.iter().enumerate() {
+        for s in 0..b {
+            let idx = &slot_idx[s];
+            let c = cursors[s];
+            if c < idx.len() && idx[c] == j {
+                cursors[s] = c + 1;
+                let a = wk_t.dot_row(j as usize, &xks[s * d..(s + 1) * d]).max(0.0);
+                h[s * u + uk] = a * a;
+            }
+        }
+    }
+    // pass 2: wv rows — zero h entries (masked-out slots or sqrelu zeros)
+    // are skipped exactly as the per-slot kernel skips them
+    outs.fill(0.0);
+    for (uk, &j) in union_idx.iter().enumerate() {
+        for s in 0..b {
+            let hv = h[s * u + uk];
+            if hv != 0.0 {
+                wv.accum_row(j as usize, hv, &mut outs[s * d..(s + 1) * d]);
+            }
+        }
+    }
+    for s in 0..b {
+        wv.apply_col_scale(&mut outs[s * d..(s + 1) * d]);
+    }
+    Ok(wk_t.rows)
 }
 
 /// Byte cost of one FFN row pair (wk_t + wv) — union accounting helper.
@@ -249,8 +316,8 @@ pub fn ffn_row_pair_bytes(store: &WeightStore, layer: usize) -> Result<u64> {
 }
 
 /// Dense-equivalent FFN used by the gate path: `r = sigmoid(proj(xr))`.
-pub fn gate(wr: &ProjW, xr: &[f32], out: &mut [f32], scratch: &mut Vec<f32>) {
-    wr.apply(xr, out, scratch);
+pub fn gate(wr: &ProjW, xr: &[f32], out: &mut [f32], scratch: &mut Vec<f32>, acc: &mut Vec<f32>) {
+    wr.apply(xr, out, scratch, acc);
     for v in out.iter_mut() {
         *v = sigmoid(*v);
     }

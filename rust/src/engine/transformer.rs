@@ -123,15 +123,16 @@ impl TransformerEngine {
         let mut xn = vec![0.0f32; d];
         let (mut q, mut k, mut v) = (vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d]);
         let mut att_out = vec![0.0f32; d];
+        let mut acc = Vec::new(); // i8 matvec dequant scratch
         for li in 0..self.layers {
             let b = &self.blocks[li];
             layer_norm(&x, &b.ln1.scale, &b.ln1.bias, 1e-5, &mut xn);
             q.fill(0.0);
             k.fill(0.0);
             v.fill(0.0);
-            matvec_in_out(&xn, &b.wq, &mut q);
-            matvec_in_out(&xn, &b.wk, &mut k);
-            matvec_in_out(&xn, &b.wv, &mut v);
+            matvec_in_out(&xn, &b.wq, &mut q, &mut acc);
+            matvec_in_out(&xn, &b.wk, &mut k, &mut acc);
+            matvec_in_out(&xn, &b.wv, &mut v, &mut acc);
             let kv = &mut self.kv[li];
             kv.k.extend_from_slice(&k);
             kv.v.extend_from_slice(&v);
@@ -156,15 +157,15 @@ impl TransformerEngine {
                     }
                 }
             }
-            matvec_in_out(&att_out, &b.wo, &mut x); // += residual
+            matvec_in_out(&att_out, &b.wo, &mut x, &mut acc); // += residual
             // MLP
             layer_norm(&x, &b.ln2.scale, &b.ln2.bias, 1e-5, &mut xn);
             let mut hidden = vec![0.0f32; b.up.cols()];
-            matvec_in_out(&xn, &b.up, &mut hidden);
+            matvec_in_out(&xn, &b.up, &mut hidden, &mut acc);
             for hv in hidden.iter_mut() {
                 *hv = gelu(*hv);
             }
-            matvec_in_out(&hidden, &b.down, &mut x); // += residual
+            matvec_in_out(&hidden, &b.down, &mut x, &mut acc); // += residual
         }
         layer_norm(&x, &self.ln_out.scale, &self.ln_out.bias, 1e-5, &mut xn);
         let mut logits = vec![0.0f32; self.vocab];

@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 
 use crate::io::{Manifest, RkvFile};
 use crate::metrics::{Group, MemTracker};
-use crate::tensor::{matvec_in_out, DType, Mat};
+use crate::tensor::{matmat_in_out, matvec_in_out, DType, Mat};
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
 /// Component group of a tensor, by naming convention (export.py).
@@ -301,26 +301,66 @@ impl ProjW {
     }
 
     /// `out = proj(x)` (out zeroed here). `scratch` holds the rank-sized
-    /// intermediate for the low-rank forms.
-    pub fn apply(&self, x: &[f32], out: &mut [f32], scratch: &mut Vec<f32>) {
+    /// intermediate for the low-rank forms; `acc` is the i8 matvec
+    /// accumulator scratch (see [`matvec_in_out`]).
+    pub fn apply(&self, x: &[f32], out: &mut [f32], scratch: &mut Vec<f32>, acc: &mut Vec<f32>) {
         out.fill(0.0);
         match self {
-            ProjW::Dense(w) => matvec_in_out(x, w, out),
+            ProjW::Dense(w) => matvec_in_out(x, w, out, acc),
             ProjW::LowRank { l, r } => {
                 scratch.clear();
                 scratch.resize(l.cols(), 0.0);
-                matvec_in_out(x, l, scratch);
-                matvec_in_out(scratch, r, out);
+                matvec_in_out(x, l, scratch, acc);
+                matvec_in_out(scratch, r, out, acc);
             }
             ProjW::Enhanced { l, r, d } => {
                 // relu(xL)^2 R + x*d   (paper Eq. 2)
                 scratch.clear();
                 scratch.resize(l.cols(), 0.0);
-                matvec_in_out(x, l, scratch);
+                matvec_in_out(x, l, scratch, acc);
                 crate::tensor::sqrelu_inplace(scratch);
-                matvec_in_out(scratch, r, out);
+                matvec_in_out(scratch, r, out, acc);
                 for i in 0..out.len() {
                     out[i] += x[i] * d[i];
+                }
+            }
+        }
+    }
+
+    /// Batched `outs[s] = proj(xs[s])` over `(B, dim)` flat activations —
+    /// every weight row streams once for the whole round.  Bit-identical
+    /// per slot to [`ProjW::apply`].  `scratch` holds the `(B, rank)`
+    /// intermediate for the low-rank forms; `acc` is the matmat kernel
+    /// scratch (f16 row decode / i8 accumulators).
+    pub fn apply_batch(
+        &self,
+        xs: &[f32],
+        b: usize,
+        outs: &mut [f32],
+        scratch: &mut Vec<f32>,
+        acc: &mut Vec<f32>,
+    ) {
+        outs.fill(0.0);
+        match self {
+            ProjW::Dense(w) => matmat_in_out(xs, w, outs, acc),
+            ProjW::LowRank { l, r } => {
+                scratch.clear();
+                scratch.resize(b * l.cols(), 0.0);
+                matmat_in_out(xs, l, scratch, acc);
+                matmat_in_out(scratch, r, outs, acc);
+            }
+            ProjW::Enhanced { l, r, d } => {
+                scratch.clear();
+                scratch.resize(b * l.cols(), 0.0);
+                matmat_in_out(xs, l, scratch, acc);
+                crate::tensor::sqrelu_inplace(scratch);
+                matmat_in_out(scratch, r, outs, acc);
+                let dim = d.len();
+                for s in 0..b {
+                    let (x, out) = (&xs[s * dim..(s + 1) * dim], &mut outs[s * dim..(s + 1) * dim]);
+                    for i in 0..dim {
+                        out[i] += x[i] * d[i];
+                    }
                 }
             }
         }

@@ -6,4 +6,4 @@ pub mod rkv;
 
 pub use manifest::Manifest;
 pub use mmap::Mmap;
-pub use rkv::{RkvFile, TensorEntry};
+pub use rkv::{write_rkv, RkvFile, RkvTensor, TensorEntry};

@@ -194,3 +194,141 @@ impl RkvFile {
             .sum()
     }
 }
+
+// ---------------------------------------------------------------------------
+// Writer (test fixtures / tooling — export.py remains the production path)
+// ---------------------------------------------------------------------------
+
+/// An owned tensor staged for [`write_rkv`]: raw little-endian payload.
+pub struct RkvTensor {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl RkvTensor {
+    pub fn f32(name: &str, shape: Vec<usize>, v: &[f32]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), v.len());
+        let mut data = Vec::with_capacity(4 * v.len());
+        for x in v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Self { name: name.to_string(), dtype: DType::F32, shape, data }
+    }
+
+    pub fn f16_from_f32(name: &str, shape: Vec<usize>, v: &[f32]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), v.len());
+        let mut data = Vec::with_capacity(2 * v.len());
+        for x in v {
+            data.extend_from_slice(&crate::util::f32_to_f16(*x).to_le_bytes());
+        }
+        Self { name: name.to_string(), dtype: DType::F16, shape, data }
+    }
+
+    pub fn i32(name: &str, shape: Vec<usize>, v: &[i32]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), v.len());
+        let mut data = Vec::with_capacity(4 * v.len());
+        for x in v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Self { name: name.to_string(), dtype: DType::I32, shape, data }
+    }
+
+    pub fn u8(name: &str, shape: Vec<usize>, v: Vec<u8>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), v.len());
+        Self { name: name.to_string(), dtype: DType::U8, shape, data: v }
+    }
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F16 => 1,
+        DType::I8 => 2,
+        DType::U8 => 3,
+        DType::I32 => 4,
+    }
+}
+
+const ALIGN: u64 = 64;
+
+fn align_up(n: u64) -> u64 {
+    n.div_ceil(ALIGN) * ALIGN
+}
+
+/// Write an `.rkv` checkpoint in the exact layout [`RkvFile::open`] reads
+/// (64-byte-aligned payloads, version 1).  Used by the synthetic-model
+/// test fixtures so the engine paths are exercised without `make
+/// artifacts`.
+pub fn write_rkv(path: &Path, tensors: &[RkvTensor]) -> Result<()> {
+    // index size first: entries are variable-length (name + dims)
+    let mut index_size = 0u64;
+    for t in tensors {
+        index_size += 2 + t.name.len() as u64 + 2 + 4 * t.shape.len() as u64 + 16;
+    }
+    let data_offset = align_up(20 + index_size);
+    // relative, aligned payload offsets
+    let mut offsets = Vec::with_capacity(tensors.len());
+    let mut cursor = 0u64;
+    for t in tensors {
+        cursor = align_up(cursor);
+        offsets.push(cursor);
+        cursor += t.data.len() as u64;
+    }
+    let mut out: Vec<u8> = Vec::with_capacity((data_offset + cursor) as usize);
+    out.extend_from_slice(b"RKV1");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    out.extend_from_slice(&data_offset.to_le_bytes());
+    for (t, &off) in tensors.iter().zip(&offsets) {
+        out.extend_from_slice(&(t.name.len() as u16).to_le_bytes());
+        out.extend_from_slice(t.name.as_bytes());
+        out.push(dtype_code(t.dtype));
+        out.push(t.shape.len() as u8);
+        for &dim in &t.shape {
+            out.extend_from_slice(&(dim as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&off.to_le_bytes());
+        out.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+    }
+    out.resize(data_offset as usize, 0);
+    for (t, &off) in tensors.iter().zip(&offsets) {
+        out.resize((data_offset + off) as usize, 0);
+        out.extend_from_slice(&t.data);
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, &out)
+        .with_context(|| format!("writing rkv to {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_then_read_round_trips() {
+        let dir = std::env::temp_dir().join(format!("rkv-rt-{}", std::process::id()));
+        let path = dir.join("t.rkv");
+        let tensors = vec![
+            RkvTensor::f32("a.mat", vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            RkvTensor::f16_from_f32("b.vec", vec![4], &[0.5, -1.0, 2.0, 8.0]),
+            RkvTensor::i32("c.assign", vec![3], &[0, 2, 1]),
+            RkvTensor::u8("d.sign", vec![1, 2], vec![0xAB, 0x01]),
+        ];
+        write_rkv(&path, &tensors).unwrap();
+        let f = RkvFile::open(&path).unwrap();
+        assert_eq!(f.entry("a.mat").unwrap().shape, vec![2, 3]);
+        let m = f.mat("a.mat").unwrap();
+        assert_eq!(m.to_f32_vec(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let v = f.vec_f32("b.vec").unwrap();
+        assert_eq!(v, vec![0.5, -1.0, 2.0, 8.0]);
+        assert_eq!(f.vec_i32("c.assign").unwrap(), vec![0, 2, 1]);
+        assert_eq!(f.raw("d.sign").unwrap(), &[0xAB, 0x01]);
+        assert_eq!(f.entry("a.mat").unwrap().nbytes, 24);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,384 @@
+//! Fused multi-vector (matrix x batch-of-vectors) kernels — the batched
+//! decode hot path.
+//!
+//! A scheduling round with B concurrent requests used to call the matvec
+//! kernels B times per weight matrix, streaming every weight byte B times.
+//! These kernels invert the loop: each weight ROW is streamed exactly once
+//! per round and applied to all B activation vectors while it is hot, so a
+//! decode round costs ~one pass over the weights regardless of B (the
+//! memory-bandwidth argument of the paper's §3.2/§5 applied cross-request).
+//!
+//! Batch layout is row-major `(B, dim)` flat slices: slot `s` of `xs` is
+//! `xs[s*dim..(s+1)*dim]`.  Every kernel is BIT-IDENTICAL per slot to its
+//! matvec.rs counterpart: the per-slot accumulation order (weight rows in
+//! ascending index, the same dot reductions, the same i8 scale folding) is
+//! preserved exactly, so the batched engine path produces the same logits
+//! as the per-slot path down to the last ulp.
+//!
+//! Inner loops keep the matvec.rs shape LLVM auto-vectorizes: contiguous
+//! slices, iterator zips (no bounds checks), f32 accumulation, and the
+//! LANES accumulator-array dots from matvec.rs for the row-layout forms.
+//!
+//! The engine drives resident weights ([`Mat`]) through `matmat_in_out` /
+//! `matmat_rows` directly.  The indexed forms (`matmat_rows_indexed`,
+//! `accum_rows_indexed_batch`) are the resident-weight counterparts of the
+//! union-fused sparse FFN; the mmap-streaming engine path implements the
+//! same loop over `RowView` (engine::sparse_ffn::sparse_ffn_apply_batch),
+//! and these kernels double as the reference that path is tested against.
+
+use crate::tensor::matvec::{dot_f16, dot_f32, dot_i8};
+use crate::tensor::Mat;
+use crate::util::f16::f16_to_f32_fast as f16_to_f32;
+
+/// Batched `(in, out)`-layout apply:
+/// `outs[s][j] += sum_i xs[s][i] * w[i][j]` for every slot `s`.
+///
+/// `xs` is `(B, rows)` flat, `outs` is `(B, cols)` flat; `outs` may carry a
+/// residual accumulator (as in matvec).  `scratch` is caller-owned so the
+/// hot loop is allocation-free: the f16 arm uses `cols` floats to decode
+/// each weight row once per round, the i8 arm uses `B*cols` floats for the
+/// per-slot unscaled accumulators (the per-column scale must apply to only
+/// THIS product, exactly as in `matvec_in_out`).
+pub fn matmat_in_out(xs: &[f32], w: &Mat, outs: &mut [f32], scratch: &mut Vec<f32>) {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert!(rows > 0 && cols > 0, "empty weight matrix");
+    assert_eq!(xs.len() % rows, 0, "xs not a whole number of slots");
+    let b = xs.len() / rows;
+    assert_eq!(outs.len(), b * cols);
+    match w {
+        Mat::F32 { data, .. } => {
+            for i in 0..rows {
+                let row = &data[i * cols..(i + 1) * cols];
+                for s in 0..b {
+                    let xi = xs[s * rows + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols..(s + 1) * cols];
+                    for (o, &wij) in out.iter_mut().zip(row) {
+                        *o += xi * wij;
+                    }
+                }
+            }
+        }
+        Mat::F16 { data, .. } => {
+            scratch.clear();
+            scratch.resize(cols, 0.0);
+            for i in 0..rows {
+                // decode the f16 row once; every slot reuses the f32 copy
+                for (r, &h) in scratch.iter_mut().zip(&data[i * cols..(i + 1) * cols]) {
+                    *r = f16_to_f32(h);
+                }
+                for s in 0..b {
+                    let xi = xs[s * rows + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols..(s + 1) * cols];
+                    for (o, &wij) in out.iter_mut().zip(scratch.iter()) {
+                        *o += xi * wij;
+                    }
+                }
+            }
+        }
+        Mat::I8 { data, scale, .. } => {
+            scratch.clear();
+            scratch.resize(b * cols, 0.0);
+            for i in 0..rows {
+                let row = &data[i * cols..(i + 1) * cols];
+                for s in 0..b {
+                    let xi = xs[s * rows + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let acc = &mut scratch[s * cols..(s + 1) * cols];
+                    for (a, &q) in acc.iter_mut().zip(row) {
+                        *a += xi * q as f32;
+                    }
+                }
+            }
+            for s in 0..b {
+                let out = &mut outs[s * cols..(s + 1) * cols];
+                let acc = &scratch[s * cols..(s + 1) * cols];
+                for ((o, &a), &sc) in out.iter_mut().zip(acc).zip(scale) {
+                    *o += a * sc;
+                }
+            }
+        }
+    }
+}
+
+/// Batched row-per-output apply: `outs[s][j] = dot(w[j], xs[s])`.
+/// `xs` is `(B, cols)` flat, `outs` is `(B, rows)` flat.  Each weight row
+/// is read once and dotted against all B activations while cached.
+pub fn matmat_rows(w: &Mat, xs: &[f32], outs: &mut [f32]) {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert!(rows > 0 && cols > 0, "empty weight matrix");
+    assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
+    let b = xs.len() / cols;
+    assert_eq!(outs.len(), b * rows);
+    match w {
+        Mat::F32 { data, .. } => {
+            for j in 0..rows {
+                let row = &data[j * cols..(j + 1) * cols];
+                for s in 0..b {
+                    outs[s * rows + j] = dot_f32(row, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
+        Mat::F16 { data, .. } => {
+            for j in 0..rows {
+                let row = &data[j * cols..(j + 1) * cols];
+                for s in 0..b {
+                    outs[s * rows + j] = dot_f16(row, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
+        Mat::I8 { data, scale, .. } => {
+            for j in 0..rows {
+                let row = &data[j * cols..(j + 1) * cols];
+                for s in 0..b {
+                    outs[s * rows + j] = scale[j] * dot_i8(row, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
+    }
+}
+
+/// Batched sparse row-layout apply: `outs[s][k] = dot(w[idx[k]], xs[s])`.
+/// `xs` is `(B, cols)` flat, `outs` is `(B, idx.len())` flat.  The §3.2
+/// union-compute path: the caller passes the cross-slot UNION of predicted
+/// rows so each selected row streams once per round for every slot.
+pub fn matmat_rows_indexed(w: &Mat, idx: &[u32], xs: &[f32], outs: &mut [f32]) {
+    let cols = w.cols();
+    assert!(cols > 0, "empty weight matrix");
+    assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
+    let b = xs.len() / cols;
+    let k = idx.len();
+    assert_eq!(outs.len(), b * k);
+    match w {
+        Mat::F32 { data, .. } => {
+            for (kk, &j) in idx.iter().enumerate() {
+                let j = j as usize;
+                let row = &data[j * cols..(j + 1) * cols];
+                for s in 0..b {
+                    outs[s * k + kk] = dot_f32(row, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
+        Mat::F16 { data, .. } => {
+            for (kk, &j) in idx.iter().enumerate() {
+                let j = j as usize;
+                let row = &data[j * cols..(j + 1) * cols];
+                for s in 0..b {
+                    outs[s * k + kk] = dot_f16(row, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
+        Mat::I8 { data, scale, .. } => {
+            for (kk, &j) in idx.iter().enumerate() {
+                let j = j as usize;
+                let row = &data[j * cols..(j + 1) * cols];
+                for s in 0..b {
+                    outs[s * k + kk] = scale[j] * dot_i8(row, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
+    }
+}
+
+/// Batched sparse accumulate of selected `(in,out)`-layout rows:
+/// `outs[s][:] += sum_k hs[s][k] * w[idx[k]][:]` — the W_v half of the
+/// union-fused sparse FFN.  `hs` is `(B, idx.len())` flat, `outs` is
+/// `(B, cols)` flat and MUST be zeroed by the caller for the i8 arm (the
+/// per-column scale is folded over the whole accumulator at the end,
+/// mirroring `accum_rows_indexed`).  Slots mask themselves by passing
+/// `hs[s][k] == 0.0` for union rows outside their own predicted set —
+/// zero entries are skipped exactly as the per-slot kernel skips them.
+pub fn accum_rows_indexed_batch(w: &Mat, idx: &[u32], hs: &[f32], b: usize, outs: &mut [f32]) {
+    let cols = w.cols();
+    let k = idx.len();
+    assert_eq!(hs.len(), b * k);
+    assert_eq!(outs.len(), b * cols);
+    match w {
+        Mat::F32 { data, .. } => {
+            for (kk, &j) in idx.iter().enumerate() {
+                let row = &data[j as usize * cols..(j as usize + 1) * cols];
+                for s in 0..b {
+                    let hk = hs[s * k + kk];
+                    if hk == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols..(s + 1) * cols];
+                    for (o, &wv) in out.iter_mut().zip(row) {
+                        *o += hk * wv;
+                    }
+                }
+            }
+        }
+        Mat::F16 { data, .. } => {
+            for (kk, &j) in idx.iter().enumerate() {
+                let row = &data[j as usize * cols..(j as usize + 1) * cols];
+                for s in 0..b {
+                    let hk = hs[s * k + kk];
+                    if hk == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols..(s + 1) * cols];
+                    for (o, &hh) in out.iter_mut().zip(row) {
+                        *o += hk * f16_to_f32(hh);
+                    }
+                }
+            }
+        }
+        Mat::I8 { data, scale, .. } => {
+            for (kk, &j) in idx.iter().enumerate() {
+                let row = &data[j as usize * cols..(j as usize + 1) * cols];
+                for s in 0..b {
+                    let hk = hs[s * k + kk];
+                    if hk == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols..(s + 1) * cols];
+                    for (o, &q) in out.iter_mut().zip(row) {
+                        *o += hk * q as f32;
+                    }
+                }
+            }
+            for s in 0..b {
+                let out = &mut outs[s * cols..(s + 1) * cols];
+                for (o, &sc) in out.iter_mut().zip(scale) {
+                    *o *= sc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matvec::{
+        accum_rows_indexed, matvec_in_out, matvec_rows, matvec_rows_indexed,
+    };
+    use crate::util::XorShift;
+
+    fn randv(r: &mut XorShift, n: usize) -> Vec<f32> {
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    /// The three dtype variants of one f32 matrix (i8 scale per column for
+    /// in-out layout, per row for rows layout — chosen by `scale_rows`).
+    fn variants(rows: usize, cols: usize, data: &[f32], scale_rows: bool) -> Vec<Mat> {
+        let q: Vec<i8> = data.iter().map(|v| (v * 30.0).clamp(-127.0, 127.0) as i8).collect();
+        let scale_len = if scale_rows { rows } else { cols };
+        let scale: Vec<f32> = (0..scale_len).map(|i| 0.01 + 0.001 * i as f32).collect();
+        vec![
+            Mat::from_f32(rows, cols, data.to_vec()),
+            Mat::f32_to_f16_mat(rows, cols, data),
+            Mat::I8 { rows, cols, data: q, scale },
+        ]
+    }
+
+    #[test]
+    fn matmat_in_out_bitwise_matches_matvec_per_slot() {
+        let mut r = XorShift::new(11);
+        let (rows, cols) = (23, 17);
+        let data = randv(&mut r, rows * cols);
+        for w in variants(rows, cols, &data, false) {
+            for b in [1usize, 2, 5] {
+                let xs = randv(&mut r, b * rows);
+                // residual content must be preserved identically too
+                let residual = randv(&mut r, b * cols);
+                let mut outs = residual.clone();
+                let mut scratch = Vec::new();
+                matmat_in_out(&xs, &w, &mut outs, &mut scratch);
+                for s in 0..b {
+                    let mut want = residual[s * cols..(s + 1) * cols].to_vec();
+                    let mut acc = Vec::new();
+                    matvec_in_out(&xs[s * rows..(s + 1) * rows], &w, &mut want, &mut acc);
+                    assert_eq!(&outs[s * cols..(s + 1) * cols], &want[..], "slot {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmat_rows_bitwise_matches_matvec_per_slot() {
+        let mut r = XorShift::new(12);
+        let (rows, cols) = (19, 21);
+        let data = randv(&mut r, rows * cols);
+        for w in variants(rows, cols, &data, true) {
+            for b in [1usize, 3, 8] {
+                let xs = randv(&mut r, b * cols);
+                let mut outs = vec![0.0f32; b * rows];
+                matmat_rows(&w, &xs, &mut outs);
+                for s in 0..b {
+                    let mut want = vec![0.0f32; rows];
+                    matvec_rows(&w, &xs[s * cols..(s + 1) * cols], &mut want);
+                    assert_eq!(&outs[s * rows..(s + 1) * rows], &want[..], "slot {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmat_rows_indexed_bitwise_matches_matvec_per_slot() {
+        let mut r = XorShift::new(13);
+        let (rows, cols) = (29, 11);
+        let data = randv(&mut r, rows * cols);
+        let idx = vec![0u32, 3, 7, 8, 20, 28];
+        for w in variants(rows, cols, &data, true) {
+            for b in [1usize, 4] {
+                let xs = randv(&mut r, b * cols);
+                let mut outs = vec![0.0f32; b * idx.len()];
+                matmat_rows_indexed(&w, &idx, &xs, &mut outs);
+                for s in 0..b {
+                    let mut want = vec![0.0f32; idx.len()];
+                    matvec_rows_indexed(&w, &idx, &xs[s * cols..(s + 1) * cols], &mut want);
+                    assert_eq!(&outs[s * idx.len()..(s + 1) * idx.len()], &want[..], "slot {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accum_batch_bitwise_matches_accum_per_slot() {
+        let mut r = XorShift::new(14);
+        let (rows, cols) = (26, 9); // (F, D) layout
+        let data = randv(&mut r, rows * cols);
+        let idx = vec![1u32, 4, 5, 12, 25];
+        for w in variants(rows, cols, &data, false) {
+            for b in [1usize, 3] {
+                let mut hs = randv(&mut r, b * idx.len());
+                // sprinkle zeros: masked-out union rows must be skipped
+                for (i, h) in hs.iter_mut().enumerate() {
+                    if i % 3 == 0 {
+                        *h = 0.0;
+                    }
+                }
+                let mut outs = vec![0.0f32; b * cols];
+                accum_rows_indexed_batch(&w, &idx, &hs, b, &mut outs);
+                let k = idx.len();
+                for s in 0..b {
+                    let mut want = vec![0.0f32; cols];
+                    accum_rows_indexed(&w, &idx, &hs[s * k..(s + 1) * k], &mut want);
+                    assert_eq!(&outs[s * cols..(s + 1) * cols], &want[..], "slot {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_slot_equals_matvec_on_empty_index() {
+        // degenerate sparse round: no predicted rows at all
+        let w = Mat::from_f32(4, 3, vec![1.0; 12]);
+        let mut outs = vec![0.0f32; 3];
+        accum_rows_indexed_batch(&w, &[], &[], 1, &mut outs);
+        assert_eq!(outs, vec![0.0, 0.0, 0.0]);
+        let xs = vec![1.0f32, 2.0, 3.0];
+        let mut o = vec![0.0f32; 0];
+        matmat_rows_indexed(&w, &[], &xs, &mut o);
+        assert!(o.is_empty());
+    }
+}

@@ -10,7 +10,11 @@ use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
 /// `out[j] += sum_i x[i] * w[i][j]` for `(in, out)`-layout `w`.
 /// `out` must be zeroed (or carry an accumulator) by the caller.
-pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32]) {
+///
+/// `acc` is caller-owned scratch used only by the i8 arm (resized to
+/// `cols` there, untouched otherwise) — hot-loop callers keep one in
+/// their `Scratch` so this stays allocation-free as documented.
+pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32], acc: &mut Vec<f32>) {
     let (rows, cols) = (w.rows(), w.cols());
     assert_eq!(x.len(), rows);
     assert_eq!(out.len(), cols);
@@ -40,8 +44,9 @@ pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32]) {
         Mat::I8 { data, scale, .. } => {
             // `out` may carry a residual accumulator, so the per-column
             // scale must apply only to THIS product: accumulate unscaled
-            // in a scratch, then fold scale while adding.
-            let mut acc = vec![0f32; cols];
+            // in the caller's scratch, then fold scale while adding.
+            acc.clear();
+            acc.resize(cols, 0.0);
             for (i, &xi) in x.iter().enumerate() {
                 if xi == 0.0 {
                     continue;
@@ -51,7 +56,7 @@ pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32]) {
                     *a += xi * q as f32;
                 }
             }
-            for ((o, a), &s) in out.iter_mut().zip(acc).zip(scale) {
+            for ((o, &a), &s) in out.iter_mut().zip(acc.iter()).zip(scale) {
                 *o += a * s;
             }
         }
@@ -299,7 +304,7 @@ mod tests {
         let w: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
         let x: Vec<f32> = (0..rows).map(|_| r.normal()).collect();
         let mut out = vec![0f32; cols];
-        matvec_in_out(&x, &Mat::from_f32(rows, cols, w.clone()), &mut out);
+        matvec_in_out(&x, &Mat::from_f32(rows, cols, w.clone()), &mut out, &mut Vec::new());
         let want = naive(&x, &w, rows, cols);
         for (a, b) in out.iter().zip(&want) {
             assert!((a - b).abs() < 1e-4);
@@ -332,7 +337,7 @@ mod tests {
         };
         let x = vec![1.0f32, 2.0];
         let mut out = vec![10.0f32, 20.0]; // residual
-        matvec_in_out(&x, &w, &mut out);
+        matvec_in_out(&x, &w, &mut out, &mut Vec::new());
         assert_eq!(out, vec![11.0, 22.0]);
     }
 
@@ -344,8 +349,8 @@ mod tests {
         let x: Vec<f32> = (0..rows).map(|_| r.normal()).collect();
         let mut out32 = vec![0f32; cols];
         let mut out16 = vec![0f32; cols];
-        matvec_in_out(&x, &Mat::from_f32(rows, cols, w.clone()), &mut out32);
-        matvec_in_out(&x, &Mat::f32_to_f16_mat(rows, cols, &w), &mut out16);
+        matvec_in_out(&x, &Mat::from_f32(rows, cols, w.clone()), &mut out32, &mut Vec::new());
+        matvec_in_out(&x, &Mat::f32_to_f16_mat(rows, cols, &w), &mut out16, &mut Vec::new());
         for (a, b) in out32.iter().zip(&out16) {
             assert!((a - b).abs() < 0.05, "{a} vs {b}");
         }

@@ -12,11 +12,18 @@
 //! * `(out, in)` "row-per-output": `out[j] = dot(w[j], x)` — used by
 //!   `wk_t`, `head`, `emb`, where the sparse/hierarchical loaders need
 //!   contiguous per-neuron / per-token rows.
+//!
+//! Each orientation exists in two arities: single-vector ([`matvec`], the
+//! per-slot decode path) and multi-vector ([`matmat`], the batched decode
+//! path that streams each weight row once per scheduling round and applies
+//! it to all B slot activations — bit-identical per slot to matvec).
 
 pub mod mat;
+pub mod matmat;
 pub mod matvec;
 pub mod ops;
 
 pub use mat::{DType, Mat};
+pub use matmat::*;
 pub use matvec::*;
 pub use ops::*;

@@ -10,6 +10,8 @@
 //! });
 //! ```
 
+pub mod synth;
+
 use crate::util::XorShift;
 
 /// Generation context handed to each property iteration.

@@ -1,0 +1,250 @@
+//! Synthetic RWKV checkpoints — deterministic random models written in the
+//! real `.rkv` + manifest format so engine paths (dense, sparse-FFN,
+//! hierarchical head, batched decode) are exercised by `cargo test` alone,
+//! without `make artifacts`.  Weights are random but well-scaled; these
+//! models generate noise, not language — the tests assert *consistency*
+//! between execution paths, never quality.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::io::{write_rkv, RkvTensor};
+use crate::json::{self, Value};
+use crate::util::XorShift;
+
+/// Shape + feature knobs for a synthetic model.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub layers: usize,
+    pub heads: usize,
+    pub head_size: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub clusters: usize,
+    /// Store matrices as f16 (else f32).
+    pub f16: bool,
+    /// Use low-rank + enhanced-SVD time-mix projections (else dense).
+    pub lowrank: bool,
+    pub predictors: bool,
+    pub hier_head: bool,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// A tiny model with every technique available (~fast to generate).
+    pub fn tiny() -> Self {
+        Self {
+            layers: 2,
+            heads: 2,
+            head_size: 8,
+            ffn: 40,
+            vocab: 96,
+            clusters: 6,
+            f16: false,
+            lowrank: false,
+            predictors: true,
+            hier_head: true,
+            seed: 0x5EED,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.heads * self.head_size
+    }
+}
+
+fn mat(
+    rng: &mut XorShift,
+    name: &str,
+    rows: usize,
+    cols: usize,
+    gain: f32,
+    f16: bool,
+) -> RkvTensor {
+    let sc = gain / (rows as f32).sqrt();
+    let v: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * sc).collect();
+    if f16 {
+        RkvTensor::f16_from_f32(name, vec![rows, cols], &v)
+    } else {
+        RkvTensor::f32(name, vec![rows, cols], &v)
+    }
+}
+
+fn vecf<F: FnMut(&mut XorShift) -> f32>(
+    rng: &mut XorShift,
+    name: &str,
+    n: usize,
+    mut f: F,
+) -> RkvTensor {
+    let v: Vec<f32> = (0..n).map(|_| f(rng)).collect();
+    RkvTensor::f32(name, vec![n], &v)
+}
+
+fn ln_pair(rng: &mut XorShift, ts: &mut Vec<RkvTensor>, prefix: &str, n: usize) {
+    ts.push(vecf(rng, &format!("{prefix}.scale"), n, |r| 1.0 + 0.05 * r.normal()));
+    ts.push(vecf(rng, &format!("{prefix}.bias"), n, |r| 0.02 * r.normal()));
+}
+
+/// Emit a projection under `prefix`: dense (`.w`), low-rank (`.l`/`.r`) or
+/// enhanced (`.l`/`.r`/`.d`) per the flags — covers every `ProjW` variant.
+fn proj(
+    rng: &mut XorShift,
+    ts: &mut Vec<RkvTensor>,
+    prefix: &str,
+    d: usize,
+    form: ProjForm,
+    f16: bool,
+) {
+    let rank = (d / 4).max(2);
+    match form {
+        ProjForm::Dense => ts.push(mat(rng, &format!("{prefix}.w"), d, d, 0.8, f16)),
+        ProjForm::LowRank => {
+            ts.push(mat(rng, &format!("{prefix}.l"), d, rank, 0.8, f16));
+            ts.push(mat(rng, &format!("{prefix}.r"), rank, d, 0.8, f16));
+        }
+        ProjForm::Enhanced => {
+            ts.push(mat(rng, &format!("{prefix}.l"), d, rank, 0.8, f16));
+            ts.push(mat(rng, &format!("{prefix}.r"), rank, d, 0.8, f16));
+            ts.push(vecf(rng, &format!("{prefix}.d"), d, |r| 0.5 + 0.1 * r.normal()));
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum ProjForm {
+    Dense,
+    LowRank,
+    Enhanced,
+}
+
+/// Write `<artifacts>/models/<name>.json` + `.rkv` for a synthetic model.
+pub fn write_synth_rwkv(artifacts: &Path, name: &str, spec: &SynthSpec) -> Result<()> {
+    let d = spec.dim();
+    let (f, v, c) = (spec.ffn, spec.vocab, spec.clusters.max(1));
+    let f16 = spec.f16;
+    let mut rng = XorShift::new(spec.seed);
+    let mut ts: Vec<RkvTensor> = Vec::new();
+
+    ln_pair(&mut rng, &mut ts, "ln0", d);
+    ln_pair(&mut rng, &mut ts, "ln_out", d);
+    ts.push(mat(&mut rng, "emb", v, d, 3.0, f16));
+    ts.push(mat(&mut rng, "head", v, d, 1.0, f16));
+    if spec.hier_head {
+        ts.push(mat(&mut rng, "hh.h1", c, d, 1.0, f16));
+        let assign: Vec<i32> = (0..v as i32).map(|t| t % c as i32).collect();
+        ts.push(RkvTensor::i32("hh.assign", vec![v], &assign));
+    }
+    for i in 0..spec.layers {
+        let p = format!("b{i}");
+        ln_pair(&mut rng, &mut ts, &format!("{p}.ln1"), d);
+        ln_pair(&mut rng, &mut ts, &format!("{p}.ln2"), d);
+        ln_pair(&mut rng, &mut ts, &format!("{p}.att.lnx"), d);
+        for mu in ["mu_r", "mu_k", "mu_v", "mu_g"] {
+            ts.push(vecf(&mut rng, &format!("{p}.att.{mu}"), d, |r| r.next_f32()));
+        }
+        ts.push(vecf(&mut rng, &format!("{p}.att.decay"), d, |r| {
+            0.55 + 0.4 * r.next_f32()
+        }));
+        ts.push(vecf(&mut rng, &format!("{p}.att.first"), d, |r| 0.05 * r.normal()));
+        let (fr, fk, fv2, fg) = if spec.lowrank {
+            // cover every ProjW variant across the four projections
+            (ProjForm::LowRank, ProjForm::LowRank, ProjForm::LowRank, ProjForm::Enhanced)
+        } else {
+            (ProjForm::Dense, ProjForm::Dense, ProjForm::Dense, ProjForm::Dense)
+        };
+        proj(&mut rng, &mut ts, &format!("{p}.att.wr"), d, fr, f16);
+        proj(&mut rng, &mut ts, &format!("{p}.att.wk"), d, fk, f16);
+        proj(&mut rng, &mut ts, &format!("{p}.att.wv"), d, fv2, f16);
+        proj(&mut rng, &mut ts, &format!("{p}.att.wg"), d, fg, f16);
+        ts.push(mat(&mut rng, &format!("{p}.att.wo.w"), d, d, 0.6, f16));
+        for mu in ["mu_k", "mu_r"] {
+            ts.push(vecf(&mut rng, &format!("{p}.ffn.{mu}"), d, |r| r.next_f32()));
+        }
+        proj(
+            &mut rng,
+            &mut ts,
+            &format!("{p}.ffn.wr"),
+            d,
+            if spec.lowrank { ProjForm::LowRank } else { ProjForm::Dense },
+            f16,
+        );
+        ts.push(mat(&mut rng, &format!("{p}.ffn.wk_t"), f, d, 0.8, f16));
+        ts.push(mat(&mut rng, &format!("{p}.ffn.wv"), f, d, 0.8, f16));
+        if spec.predictors {
+            let n = (d / 2).max(4);
+            ts.push(mat(&mut rng, &format!("{p}.pred.l1"), d, n, 1.0, f16));
+            ts.push(mat(&mut rng, &format!("{p}.pred.l2"), n, f, 1.0, f16));
+            let packed: Vec<u8> = (0..d.div_ceil(8) * f)
+                .map(|_| (rng.next_u64() & 0xff) as u8)
+                .collect();
+            ts.push(RkvTensor::u8(
+                &format!("{p}.pred.sign"),
+                vec![d.div_ceil(8), f],
+                packed,
+            ));
+            ts.push(vecf(&mut rng, &format!("{p}.pred.scale"), f, |r| {
+                0.05 + 0.1 * r.next_f32()
+            }));
+        }
+    }
+
+    let models = artifacts.join("models");
+    std::fs::create_dir_all(&models)?;
+    write_rkv(&models.join(format!("{name}.rkv")), &ts)?;
+
+    let manifest = json::obj(vec![
+        ("name", json::s(name)),
+        ("precision", json::s(if f16 { "f16" } else { "f32" })),
+        (
+            "config",
+            json::obj(vec![
+                ("arch", json::s("rwkv")),
+                ("variant", json::s("synthetic")),
+                ("dim", json::num(d as f64)),
+                ("layers", json::num(spec.layers as f64)),
+                ("vocab", json::num(v as f64)),
+                ("head_size", json::num(spec.head_size as f64)),
+            ]),
+        ),
+        ("heads", json::num(spec.heads as f64)),
+        ("ffn_dim", json::num(f as f64)),
+        ("has_predictors", Value::Bool(spec.predictors)),
+        ("has_hier_head", Value::Bool(spec.hier_head)),
+        (
+            "runtime",
+            json::obj(vec![
+                ("t_mlp", json::num(0.6)),
+                ("t_quant", json::num(0.8)),
+                ("hh_p_min", json::num(0.9)),
+                ("hh_k_min", json::num(2.0)),
+                ("hh_k_max", json::num(4.0)),
+                ("emb_cache_capacity", json::num(8.0)),
+            ]),
+        ),
+    ]);
+    std::fs::write(models.join(format!("{name}.json")), manifest.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::weights::WeightStore;
+
+    #[test]
+    fn synth_checkpoint_loads_through_store() {
+        let dir = std::env::temp_dir().join(format!("rwkv-synth-{}", std::process::id()));
+        let spec = SynthSpec::tiny();
+        write_synth_rwkv(&dir, "synth-unit", &spec).unwrap();
+        let store = WeightStore::open(&dir.join("models/synth-unit.json")).unwrap();
+        assert!(store.manifest.is_rwkv());
+        assert_eq!(store.manifest.dim, spec.dim());
+        assert_eq!(store.manifest.ffn_dim, spec.ffn);
+        assert!(store.rkv.has("b0.pred.sign"));
+        assert!(store.rkv.has("hh.h1"));
+        let emb = store.rkv.entry("emb").unwrap();
+        assert_eq!(emb.shape, vec![spec.vocab, spec.dim()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,159 @@
+//! Bit-exact equivalence: the weight-streaming batched decode round must
+//! produce IDENTICAL logits and states to the per-slot path, for B in
+//! {1, 2, 8}, across dense and sparse-FFN configs (plus hierarchical head,
+//! low-rank projections, f16 storage and the layerwise strategy).
+//!
+//! Runs on synthetic checkpoints (testutil::synth) — no `make artifacts`
+//! needed, so this is tier-1 coverage for the batched engine.
+
+use std::path::PathBuf;
+
+use rwkv_lite::config::{EngineConfig, LoadStrategy};
+use rwkv_lite::engine::{state::RwkvState, RwkvEngine};
+use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
+
+fn synth_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rwkv-batcheq-{}-{}", tag, std::process::id()))
+}
+
+fn assert_states_identical(a: &RwkvState, b: &RwkvState, ctx: &str) {
+    assert_eq!(a.att_x, b.att_x, "{ctx}: att_x state diverged");
+    assert_eq!(a.wkv, b.wkv, "{ctx}: wkv state diverged");
+    assert_eq!(a.ffn_x, b.ffn_x, "{ctx}: ffn_x state diverged");
+}
+
+/// Build per-slot contexts, then compare one decode step per slot against
+/// one batched round, bit for bit (logits AND recurrent state).
+fn check_equivalence(tag: &str, spec: &SynthSpec, cfg_mut: impl Fn(&mut EngineConfig)) {
+    let dir = synth_dir(tag);
+    write_synth_rwkv(&dir, "m", spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg_mut(&mut cfg);
+    for &b in &[1usize, 2, 8] {
+        let mut seq = RwkvEngine::load(cfg.clone()).expect("load seq engine");
+        let mut bat = RwkvEngine::load(cfg.clone()).expect("load batch engine");
+        // distinct warm contexts per slot
+        let mut seq_states: Vec<RwkvState> = (0..b).map(|_| seq.new_state()).collect();
+        for (s, st) in seq_states.iter_mut().enumerate() {
+            for t in 0..((s % 3) + 2) {
+                let tok = ((3 + 7 * s + 5 * t) % spec.vocab) as u32;
+                seq.forward_hidden(tok, st).unwrap();
+            }
+        }
+        let mut bat_states = seq_states.clone();
+        let toks: Vec<u32> = (0..b).map(|s| ((5 + 11 * s) % spec.vocab) as u32).collect();
+        let mut seq_logits = Vec::with_capacity(b);
+        for (s, st) in seq_states.iter_mut().enumerate() {
+            seq_logits.push(seq.forward_token(toks[s], st).unwrap());
+        }
+        let bat_logits = bat.forward_tokens_batch(&toks, &mut bat_states).unwrap();
+        assert_eq!(bat_logits.len(), b);
+        for s in 0..b {
+            assert_eq!(
+                seq_logits[s], bat_logits[s],
+                "{tag} B={b} slot {s}: batched logits must be bit-identical"
+            );
+            assert_states_identical(
+                &seq_states[s],
+                &bat_states[s],
+                &format!("{tag} B={b} slot {s}"),
+            );
+        }
+        // a second round from the advanced states must stay identical too
+        let toks2: Vec<u32> = (0..b).map(|s| ((23 + 3 * s) % spec.vocab) as u32).collect();
+        let mut seq_logits2 = Vec::with_capacity(b);
+        for (s, st) in seq_states.iter_mut().enumerate() {
+            seq_logits2.push(seq.forward_token(toks2[s], st).unwrap());
+        }
+        let bat_logits2 = bat.forward_tokens_batch(&toks2, &mut bat_states).unwrap();
+        for s in 0..b {
+            assert_eq!(
+                seq_logits2[s], bat_logits2[s],
+                "{tag} B={b} slot {s}: round 2 diverged"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batch_equals_per_slot_dense_f32() {
+    let mut spec = SynthSpec::tiny();
+    spec.predictors = false;
+    spec.hier_head = false;
+    check_equivalence("dense-f32", &spec, |_| {});
+}
+
+#[test]
+fn batch_equals_per_slot_sparse_ffn() {
+    let spec = SynthSpec::tiny();
+    check_equivalence("sparse", &spec, |c| {
+        c.sparse_ffn = true;
+    });
+}
+
+#[test]
+fn batch_equals_per_slot_all_techniques_f16_lowrank() {
+    let mut spec = SynthSpec::tiny();
+    spec.f16 = true;
+    spec.lowrank = true;
+    spec.seed = 0xBEEF;
+    check_equivalence("all-f16-lr", &spec, |c| {
+        c.sparse_ffn = true;
+        c.hier_head = true;
+        c.emb_cache = true;
+    });
+}
+
+#[test]
+fn batch_equals_per_slot_dense_layerwise() {
+    let mut spec = SynthSpec::tiny();
+    spec.predictors = false;
+    spec.hier_head = false;
+    spec.seed = 0xFACE;
+    check_equivalence("dense-layerwise", &spec, |c| {
+        c.strategy = LoadStrategy::Layerwise;
+    });
+}
+
+#[test]
+fn batch_round_telemetry_and_union_accounting() {
+    let spec = SynthSpec::tiny();
+    let dir = synth_dir("telemetry");
+    write_synth_rwkv(&dir, "m", &spec).unwrap();
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = true;
+    let mut e = RwkvEngine::load(cfg).unwrap();
+    let mut states: Vec<RwkvState> = (0..4).map(|_| e.new_state()).collect();
+    let toks = [1u32, 9, 17, 33];
+    e.forward_tokens_batch(&toks, &mut states).unwrap();
+    assert_eq!(e.metrics.counter("batch_rounds"), 1);
+    assert_eq!(e.metrics.counter("batch_slot_tokens"), 4);
+    assert!(e.last_round_weight_bytes > 0, "round weight bytes recorded");
+    let union = e.metrics.counter("batch_union_rows");
+    let indiv = e.metrics.counter("batch_individual_rows");
+    assert!(union > 0, "sparse rounds must select rows");
+    assert!(union <= indiv, "union {union} cannot exceed per-slot sum {indiv}");
+    // dense-layer weight bytes must not grow with B: a 1-slot round on a
+    // dense config streams the same layer bytes as an 8-slot round
+    let dir2 = synth_dir("telemetry-dense");
+    let mut spec2 = SynthSpec::tiny();
+    spec2.predictors = false;
+    spec2.hier_head = false;
+    write_synth_rwkv(&dir2, "m", &spec2).unwrap();
+    let cfg2 = EngineConfig::vanilla("m", dir2.clone());
+    let mut e2 = RwkvEngine::load(cfg2).unwrap();
+    let mut bytes_by_b = Vec::new();
+    for b in [1usize, 8] {
+        let mut states: Vec<RwkvState> = (0..b).map(|_| e2.new_state()).collect();
+        let toks: Vec<u32> = (0..b as u32).collect();
+        e2.forward_tokens_batch(&toks, &mut states).unwrap();
+        bytes_by_b.push(e2.last_round_weight_bytes);
+    }
+    assert_eq!(
+        bytes_by_b[0], bytes_by_b[1],
+        "dense round weight bytes must be constant in B"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}

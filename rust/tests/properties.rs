@@ -2,7 +2,8 @@
 //! invariants — the no-proptest substrate exercised for real.
 
 use rwkv_lite::tensor::{
-    self, bit_matvec, layer_norm, matvec_in_out, matvec_rows, matvec_rows_indexed, Mat,
+    self, accum_rows_indexed, accum_rows_indexed_batch, bit_matvec, layer_norm, matmat_in_out,
+    matmat_rows, matmat_rows_indexed, matvec_in_out, matvec_rows, matvec_rows_indexed, Mat,
 };
 use rwkv_lite::testutil::{check, ensure, ensure_close, Gen};
 use rwkv_lite::util::{f16_to_f32, f32_to_f16, logsumexp, softmax_inplace};
@@ -18,12 +19,13 @@ fn prop_matvec_linearity() {
         let y = g.vec_normal(rows);
         let (a, b) = (g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0));
         let mut lhs = vec![0.0; cols];
+        let mut acc = Vec::new();
         let mix: Vec<f32> = x.iter().zip(&y).map(|(xi, yi)| a * xi + b * yi).collect();
-        matvec_in_out(&mix, &w, &mut lhs);
+        matvec_in_out(&mix, &w, &mut lhs, &mut acc);
         let mut ox = vec![0.0; cols];
         let mut oy = vec![0.0; cols];
-        matvec_in_out(&x, &w, &mut ox);
-        matvec_in_out(&y, &w, &mut oy);
+        matvec_in_out(&x, &w, &mut ox, &mut acc);
+        matvec_in_out(&y, &w, &mut oy, &mut acc);
         for j in 0..cols {
             ensure_close(lhs[j], a * ox[j] + b * oy[j], 1e-3, "linearity")?;
         }
@@ -50,7 +52,7 @@ fn prop_rows_layout_is_transpose_of_in_out() {
         let mut a = vec![0.0; rows];
         matvec_rows(&w_rows, &x, &mut a);
         let mut b = vec![0.0; rows];
-        matvec_in_out(&x, &w_io, &mut b);
+        matvec_in_out(&x, &w_io, &mut b, &mut Vec::new());
         for j in 0..rows {
             ensure_close(a[j], b[j], 1e-3, "transpose equivalence")?;
         }
@@ -156,6 +158,110 @@ fn prop_bit_matvec_sign_flip_antisymmetric() {
         bit_matvec(&packed, &scale, in_dim, &neg, &mut b);
         for (p, q) in a.iter().zip(&b) {
             ensure_close(*p, -*q, 1e-3, "antisymmetry")?;
+        }
+        Ok(())
+    });
+}
+
+/// Random-dtype matrix generator shared by the matmat properties:
+/// f32 / f16 / i8 with the scale length the consumer expects.
+fn gen_mat(g: &mut Gen, rows: usize, cols: usize, scale_rows: bool) -> Mat {
+    let data = g.vec_normal(rows * cols);
+    match g.usize_in(0, 3) % 3 {
+        0 => Mat::from_f32(rows, cols, data),
+        1 => Mat::f32_to_f16_mat(rows, cols, &data),
+        _ => {
+            let q: Vec<i8> = data.iter().map(|v| (v * 30.0).clamp(-127.0, 127.0) as i8).collect();
+            let n = if scale_rows { rows } else { cols };
+            let scale: Vec<f32> = (0..n).map(|_| g.f32_in(0.005, 0.05)).collect();
+            Mat::I8 { rows, cols, data: q, scale }
+        }
+    }
+}
+
+#[test]
+fn prop_matmat_in_out_is_per_slot_matvec() {
+    // every dtype, random B: batched kernel == B independent matvecs, bitwise
+    check("matmat_in_out == per-slot matvec", 100, |g: &mut Gen| {
+        let rows = g.usize_in(1, 24);
+        let cols = g.usize_in(1, 24);
+        let b = g.usize_in(1, 9);
+        let w = gen_mat(g, rows, cols, false);
+        let xs = g.vec_normal(b * rows);
+        let residual = g.vec_normal(b * cols);
+        let mut outs = residual.clone();
+        matmat_in_out(&xs, &w, &mut outs, &mut Vec::new());
+        for s in 0..b {
+            let mut want = residual[s * cols..(s + 1) * cols].to_vec();
+            matvec_in_out(&xs[s * rows..(s + 1) * rows], &w, &mut want, &mut Vec::new());
+            ensure(outs[s * cols..(s + 1) * cols] == want[..], "bitwise slot equality")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matmat_rows_is_per_slot_matvec() {
+    check("matmat_rows == per-slot matvec_rows", 100, |g: &mut Gen| {
+        let rows = g.usize_in(1, 24);
+        let cols = g.usize_in(1, 24);
+        let b = g.usize_in(1, 9);
+        let w = gen_mat(g, rows, cols, true);
+        let xs = g.vec_normal(b * cols);
+        let mut outs = vec![0.0f32; b * rows];
+        matmat_rows(&w, &xs, &mut outs);
+        for s in 0..b {
+            let mut want = vec![0.0f32; rows];
+            matvec_rows(&w, &xs[s * cols..(s + 1) * cols], &mut want);
+            ensure(outs[s * rows..(s + 1) * rows] == want[..], "bitwise slot equality")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matmat_rows_indexed_is_per_slot_matvec() {
+    check("matmat_rows_indexed == per-slot", 100, |g: &mut Gen| {
+        let rows = g.usize_in(2, 32);
+        let cols = g.usize_in(1, 20);
+        let b = g.usize_in(1, 6);
+        let w = gen_mat(g, rows, cols, true);
+        let idx = g.indices(rows, 12);
+        let xs = g.vec_normal(b * cols);
+        let k = idx.len();
+        let mut outs = vec![0.0f32; b * k];
+        matmat_rows_indexed(&w, &idx, &xs, &mut outs);
+        for s in 0..b {
+            let mut want = vec![0.0f32; k];
+            matvec_rows_indexed(&w, &idx, &xs[s * cols..(s + 1) * cols], &mut want);
+            ensure(outs[s * k..(s + 1) * k] == want[..], "bitwise slot equality")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_accum_rows_batch_is_per_slot_accum() {
+    check("accum_rows_indexed_batch == per-slot", 100, |g: &mut Gen| {
+        let rows = g.usize_in(2, 32);
+        let cols = g.usize_in(1, 20);
+        let b = g.usize_in(1, 6);
+        let w = gen_mat(g, rows, cols, false);
+        let idx = g.indices(rows, 10);
+        let k = idx.len();
+        let mut hs = g.vec_normal(b * k);
+        // union-masking is expressed as zeros — they must be skipped
+        for (i, h) in hs.iter_mut().enumerate() {
+            if i % 4 == 0 {
+                *h = 0.0;
+            }
+        }
+        let mut outs = vec![0.0f32; b * cols];
+        accum_rows_indexed_batch(&w, &idx, &hs, b, &mut outs);
+        for s in 0..b {
+            let mut want = vec![0.0f32; cols];
+            accum_rows_indexed(&w, &idx, &hs[s * k..(s + 1) * k], &mut want);
+            ensure(outs[s * cols..(s + 1) * cols] == want[..], "bitwise slot equality")?;
         }
         Ok(())
     });
