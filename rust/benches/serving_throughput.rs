@@ -1,28 +1,38 @@
-//! Dynamic-batching throughput: aggregate tok/s vs batch size — shows the
-//! weight-streaming batched decode actually amortizes per-round work
-//! (one pass over the weights, sparse row unions, scheduler overhead)
-//! across concurrent requests.  Alongside tok/s it reports the weight-GB
-//! streamed per decode round: for dense layers this is ~constant in B,
-//! which is exactly why aggregate throughput scales.
+//! Serving throughput under the session-round scheduler.
+//!
+//! Part 1 — decode: aggregate tok/s vs batch size, showing the
+//! weight-streaming round amortizes one pass over the weights across
+//! concurrent requests (weight-GB per round ~constant in B for dense
+//! layers).
+//!
+//! Part 2 — prefill: a prompt-heavy sweep over `prefill_chunk`, showing
+//! chunked `(B', T)` prefill amortizes the SAME weight pass across the
+//! chunk: weight-GB per prompt token falls ~1/T vs the old one-token-
+//! per-round prompt loop (chunk=1 column).
 //!
 //! Run: `cargo bench --bench serving_throughput` (artifacts required;
 //! falls back to a synthetic checkpoint when they are missing so the
-//! bench is always runnable).
+//! bench is always runnable).  `-- --smoke` runs a seconds-long variant
+//! (B<=2, few tokens) used by CI to exercise the serving path in release
+//! mode.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use rwkv_lite::config::EngineConfig;
 use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator, Event, Request};
+use rwkv_lite::engine::session::Session;
+use rwkv_lite::engine::RwkvEngine;
 use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
 use rwkv_lite::util::Stopwatch;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut model = "rwkv-ours-small".to_string();
     let mut artifacts = PathBuf::from("artifacts");
     let mut synth_guard: Option<PathBuf> = None;
-    if !artifacts.join("models").join(format!("{model}.json")).exists() {
-        // no artifacts: synthesize an f16 medium-ish model so the batching
-        // economics are still measurable
+    if smoke || !artifacts.join("models").join(format!("{model}.json")).exists() {
+        // no artifacts (or smoke mode): synthesize an f16 medium-ish model
+        // so the batching economics are still measurable
         let dir = std::env::temp_dir().join(format!("rwkv-bench-synth-{}", std::process::id()));
         let mut spec = SynthSpec::tiny();
         spec.layers = 6;
@@ -31,33 +41,47 @@ fn main() {
         spec.ffn = 672;
         spec.vocab = 1024;
         spec.f16 = true;
-        eprintln!("NOTE: artifacts missing; using a synthetic f16 model at {}", dir.display());
+        eprintln!("NOTE: using a synthetic f16 model at {}", dir.display());
         write_synth_rwkv(&dir, "synthetic-medium", &spec).expect("synth model");
         model = "synthetic-medium".to_string();
         artifacts = dir.clone();
         synth_guard = Some(dir);
     }
-    println!("serving throughput vs batch size ({model}, 24 tok/request)\n");
+
+    decode_sweep(&model, &artifacts, smoke);
+    prefill_sweep(&model, &artifacts, smoke);
+
+    if let Some(dir) = synth_guard {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Aggregate decode throughput vs dynamic batch size (coordinator path).
+fn decode_sweep(model: &str, artifacts: &Path, smoke: bool) {
+    let (batches, max_tokens, req_mult): (&[usize], usize, usize) =
+        if smoke { (&[1, 2], 6, 2) } else { (&[1, 2, 4, 8], 24, 3) };
+    println!("serving throughput vs batch size ({model}, {max_tokens} tok/request)\n");
     println!(
         "{:>6} {:>10} {:>14} {:>12} {:>14} {:>14}",
         "batch", "requests", "agg tok/s", "p50 lat (s)", "GB/round", "rounds"
     );
-    for &batch in &[1usize, 2, 4, 8] {
-        let cfg = EngineConfig::all_techniques(&model, artifacts.clone());
+    for &batch in batches {
+        let cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
         let coordinator = Coordinator::spawn(
-            move || rwkv_lite::engine::RwkvEngine::load(cfg),
+            move || RwkvEngine::load(cfg),
             BatchPolicy { max_batch: batch, window_ms: 2 },
         );
-        let n_req = batch * 3;
+        let n_req = batch * req_mult;
         let wall = Stopwatch::start();
         let rxs: Vec<_> = (0..n_req as u64)
             .map(|i| {
                 coordinator.submit(Request {
                     id: i,
                     prompt: vec![2, 100 + i as u32 % 64],
-                    max_tokens: 24,
+                    max_tokens,
                     temperature: 0.8,
                     top_p: 0.95,
+                    ..Request::default()
                 })
             })
             .collect();
@@ -66,7 +90,7 @@ fn main() {
         for rx in rxs {
             for ev in rx {
                 match ev {
-                    Event::Done { tokens, seconds } => {
+                    Event::Done { tokens, seconds, .. } => {
                         total += tokens;
                         lats.push(seconds);
                         break;
@@ -77,8 +101,8 @@ fn main() {
             }
         }
         let secs = wall.elapsed_secs();
-        let rounds = coordinator.metrics.counter("decode_rounds").max(1);
-        let round_bytes = coordinator.metrics.counter("decode_round_weight_bytes");
+        let rounds = coordinator.metrics.counter("rounds").max(1);
+        let round_bytes = coordinator.metrics.counter("round_weight_bytes");
         println!(
             "{:>6} {:>10} {:>14.1} {:>12.3} {:>14.4} {:>14}",
             batch,
@@ -89,7 +113,52 @@ fn main() {
             rounds,
         );
     }
-    if let Some(dir) = synth_guard {
-        std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Prompt-heavy sweep: weight bytes per prompt token vs `prefill_chunk`
+/// (engine-level session rounds; chunk=1 is the old per-token loop).
+fn prefill_sweep(model: &str, artifacts: &Path, smoke: bool) {
+    let (chunks, p, prompt_len): (&[usize], usize, usize) =
+        if smoke { (&[1, 8], 2, 24) } else { (&[1, 2, 4, 8, 16], 4, 96) };
+    println!(
+        "\nprefill amortization ({model}, {p} concurrent prompts x {prompt_len} tokens)\n"
+    );
+    println!(
+        "{:>6} {:>16} {:>18} {:>16}",
+        "chunk", "prefill tok/s", "GB/prompt-token", "prefill rounds"
+    );
+    for &chunk in chunks {
+        let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+        cfg.prefill_chunk = chunk;
+        let mut engine = RwkvEngine::load(cfg).expect("load engine");
+        // token ids stay small so the prompt is valid for any vocab size
+        let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| 2 + (i * 7) % 64).collect();
+        let mut sessions: Vec<Session> = (0..p)
+            .map(|i| {
+                let mut s = Session::new(&engine, i as u64, &prompt);
+                s.max_tokens = 2;
+                s
+            })
+            .collect();
+        let (mut prefill_secs, mut prefill_bytes, mut prefill_tokens, mut prefill_rounds) =
+            (0.0f64, 0u64, 0usize, 0u64);
+        while sessions.iter().any(|s| !s.is_done()) {
+            let t = Stopwatch::start();
+            let report = engine.step_round(&mut sessions).expect("round");
+            if report.prefill_tokens > 0 {
+                prefill_secs += t.elapsed_secs();
+                prefill_bytes += report.round_weight_bytes;
+                prefill_tokens += report.prefill_tokens;
+                prefill_rounds += 1;
+            }
+        }
+        println!(
+            "{:>6} {:>16.1} {:>18.6} {:>16}",
+            chunk,
+            prefill_tokens as f64 / prefill_secs.max(1e-9),
+            prefill_bytes as f64 / prefill_tokens.max(1) as f64 / 1e9,
+            prefill_rounds,
+        );
     }
+    println!("\nGB/prompt-token falls ~1/chunk: one weight pass serves the whole chunk");
 }

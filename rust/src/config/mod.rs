@@ -72,6 +72,9 @@ pub struct EngineConfig {
     pub emb_cache_capacity: usize,
     /// Override hierarchical-head p_min (0 = manifest default).
     pub hh_p_min: f32,
+    /// Max prompt tokens a prefill session advances per scheduling round
+    /// (the `(B', T)` fused-prefill chunk; clamped to >= 1 at use).
+    pub prefill_chunk: usize,
     pub seed: u64,
 }
 
@@ -87,6 +90,7 @@ impl Default for EngineConfig {
             emb_cache: false,
             emb_cache_capacity: 0,
             hh_p_min: 0.0,
+            prefill_chunk: 8,
             seed: 0,
         }
     }
@@ -131,6 +135,7 @@ impl EngineConfig {
             ("emb_cache", Value::Bool(self.emb_cache)),
             ("emb_cache_capacity", json::num(self.emb_cache_capacity as f64)),
             ("hh_p_min", json::num(self.hh_p_min as f64)),
+            ("prefill_chunk", json::num(self.prefill_chunk as f64)),
             ("seed", json::num(self.seed as f64)),
         ])
     }
@@ -155,6 +160,7 @@ impl EngineConfig {
         c.emb_cache = b("emb_cache", false);
         c.emb_cache_capacity = v.f64_at(&["emb_cache_capacity"]).unwrap_or(0.0) as usize;
         c.hh_p_min = v.f64_at(&["hh_p_min"]).unwrap_or(0.0) as f32;
+        c.prefill_chunk = v.f64_at(&["prefill_chunk"]).unwrap_or(8.0) as usize;
         c.seed = v.f64_at(&["seed"]).unwrap_or(0.0) as u64;
         Ok(c)
     }

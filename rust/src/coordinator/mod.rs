@@ -1,29 +1,35 @@
-//! Request coordinator (S21): router + dynamic batcher + decode scheduler.
+//! Request coordinator (S21): router + dynamic batcher + round scheduler.
 //!
-//! Edge-serving shape: one engine (one device) decodes a *batch* of
-//! concurrent requests round-robin, one token each per scheduling round
-//! (continuous batching: new requests join mid-flight).
+//! Edge-serving shape: one engine (one device) advances a set of
+//! concurrent [`Session`]s round-robin (continuous batching: new requests
+//! join mid-flight).  The whole loop is one call per round —
+//! `RwkvEngine::step_round` — which fuses prompt-phase sessions (chunked
+//! `(B', T)` prefill) and decode-phase sessions into a SINGLE pass over
+//! the weights: every projection, FFN matrix and the head stream from
+//! storage once per round and serve every row while hot, so dense-layer
+//! bytes-per-round are constant in the number of sessions and aggregate
+//! tok/s scales with the batch.  The §3.2 sparse FFN unions predicted
+//! rows across all prompt and decode rows of the round (each row masked
+//! to its own set — bit-identical to the per-slot path).  Sampling and
+//! stop-token checking happen inside the round; this loop only routes the
+//! emitted tokens to their streams.
 //!
-//! Batched decode design (one weight pass per round): decode-phase slots
-//! advance through `RwkvEngine::forward_tokens_batch`, which keeps all B
-//! activations in a `(B, D)` scratch and drives every projection, FFN
-//! matrix and the head through the tensor::matmat multi-vector kernels —
-//! each weight row streams from storage ONCE per round and serves every
-//! slot while hot, so dense-layer bytes-per-round are constant in B and
-//! aggregate tok/s scales with the batch.  The §3.2 sparse FFN is fused
-//! across the round (the PowerInfer-style amortization): per-slot
-//! predictor index sets are UNIONED, one pass over the union rows computes
-//! every slot's activations (each slot masked to its own predicted set, so
-//! results stay bit-identical to the per-slot path), and the union bytes
-//! are what residency accounting charges.  Per-round telemetry
-//! (`decode_rounds`, `decode_round_weight_bytes`, `decode_slot_tokens`)
-//! lands in the coordinator registry for benches and dashboards.
+//! Lifecycle: [`Coordinator::submit`] returns a [`RequestHandle`] whose
+//! `cancel()` retires the session at the next round boundary; a client
+//! that drops its handle mid-stream is detected via `Event` send failure
+//! and retired the same way ([`FinishReason::Cancelled`]).
+//!
+//! Per-round telemetry in the coordinator registry: `rounds`,
+//! `round_seconds`, `round_weight_bytes`, `prefill_tokens`,
+//! `decode_tokens`, `requests_admitted` / `requests_completed` /
+//! `requests_cancelled`, `tokens_out`.
 //!
 //! Topology: N client threads -> mpsc -> coordinator thread (owns the
 //! engine) -> per-request streaming channels.
 
 pub mod batcher;
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -31,9 +37,12 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use crate::engine::sampler::Sampler;
-use crate::engine::{state::RwkvState, RwkvEngine};
+use crate::engine::session::Session;
+use crate::engine::RwkvEngine;
 use crate::metrics::Registry;
 use batcher::{BatchPolicy, DynamicBatcher};
+
+pub use crate::engine::session::FinishReason;
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -43,31 +52,84 @@ pub struct Request {
     pub max_tokens: usize,
     pub temperature: f32,
     pub top_p: f32,
+    /// Extra stop token ids (EOS always stops; the stop token is emitted).
+    pub stop_tokens: Vec<u32>,
+    /// Explicit sampler seed; `None` falls back to the request id.
+    pub seed: Option<u64>,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Self {
+            id: 0,
+            prompt: Vec::new(),
+            max_tokens: 32,
+            temperature: 0.0,
+            top_p: 1.0,
+            stop_tokens: Vec::new(),
+            seed: None,
+        }
+    }
 }
 
 /// Streamed events for one request.
 #[derive(Clone, Debug)]
 pub enum Event {
     Token { token: u32 },
-    Done { tokens: usize, seconds: f64 },
+    Done { tokens: usize, seconds: f64, reason: FinishReason },
     Error { message: String },
 }
 
 pub(crate) struct Submission {
     pub(crate) req: Request,
     pub(crate) tx: Sender<Event>,
+    pub(crate) cancel: Arc<AtomicBool>,
 }
 
-/// In-flight decode slot.
-struct Slot {
-    req: Request,
-    tx: Sender<Event>,
-    state: RwkvState,
-    sampler: Sampler,
-    last_token: u32,
-    produced: usize,
-    prompt_pos: usize,
-    started: crate::util::Stopwatch,
+/// Client side of a submitted request: the event stream plus a cancel
+/// switch.  Dropping the handle (or its iterator) also cancels — the
+/// coordinator notices the dead stream on the next emitted token.
+pub struct RequestHandle {
+    pub id: u64,
+    rx: Receiver<Event>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RequestHandle {
+    /// Ask the coordinator to retire this request at the next round
+    /// boundary; the stream then ends with `Done { reason: Cancelled }`.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Next event, or `None` once the stream is closed.
+    pub fn recv(&self) -> Option<Event> {
+        self.rx.recv().ok()
+    }
+
+    /// Borrowing event iterator (keeps the handle, so `cancel()` stays
+    /// available mid-stream).
+    pub fn iter(&self) -> std::sync::mpsc::Iter<'_, Event> {
+        self.rx.iter()
+    }
+}
+
+impl IntoIterator for RequestHandle {
+    type Item = Event;
+    type IntoIter = std::sync::mpsc::IntoIter<Event>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.rx.into_iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a RequestHandle {
+    type Item = Event;
+    type IntoIter = std::sync::mpsc::Iter<'a, Event>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.rx.iter()
+    }
 }
 
 pub struct Coordinator {
@@ -103,15 +165,18 @@ impl Coordinator {
         Self { tx, handle: Some(handle), metrics }
     }
 
-    /// Submit a request; returns the event stream receiver.
-    pub fn submit(&self, req: Request) -> Receiver<Event> {
+    /// Submit a request; returns a cancellable handle over the stream.
+    pub fn submit(&self, req: Request) -> RequestHandle {
         let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let id = req.id;
         // A send failure means the coordinator thread exited; surface it
         // on the stream instead of panicking.
-        if self.tx.send(Submission { req, tx: tx.clone() }).is_err() {
+        let sub = Submission { req, tx: tx.clone(), cancel: Arc::clone(&cancel) };
+        if self.tx.send(sub).is_err() {
             let _ = tx.send(Event::Error { message: "coordinator stopped".into() });
         }
-        rx
+        RequestHandle { id, rx, cancel }
     }
 
     /// Convenience: run one request to completion.
@@ -140,6 +205,13 @@ impl Drop for Coordinator {
     }
 }
 
+/// Per-session plumbing the engine does not need to know about.
+struct Conn {
+    tx: Sender<Event>,
+    cancel: Arc<AtomicBool>,
+    started: crate::util::Stopwatch,
+}
+
 fn run_loop(
     engine: &mut RwkvEngine,
     rx: Receiver<Submission>,
@@ -147,119 +219,101 @@ fn run_loop(
     metrics: &Registry,
 ) {
     let mut batcher = DynamicBatcher::new(policy);
-    let mut slots: Vec<Slot> = Vec::new();
+    let mut sessions: Vec<Session> = Vec::new();
+    let mut conns: Vec<Conn> = Vec::new();
     loop {
         // admit new work (blocking when idle, draining when busy)
-        let admitted = batcher.admit(&rx, slots.len());
-        match admitted {
-            batcher::Admit::Closed if slots.is_empty() => break,
+        match batcher.admit(&rx, sessions.len()) {
+            batcher::Admit::Closed if sessions.is_empty() => break,
             batcher::Admit::Requests(subs) => {
                 for s in subs {
                     metrics.inc("requests_admitted", 1);
-                    slots.push(Slot {
-                        state: engine.new_state(),
-                        sampler: Sampler::new(s.req.temperature, s.req.top_p, s.req.id),
-                        last_token: crate::text::BOS,
-                        produced: 0,
-                        prompt_pos: 0,
-                        started: crate::util::Stopwatch::start(),
-                        req: s.req,
+                    let mut stop = s.req.stop_tokens.clone();
+                    if !stop.contains(&crate::text::EOS) {
+                        stop.push(crate::text::EOS);
+                    }
+                    let mut sess = Session::new(engine, s.req.id, &s.req.prompt);
+                    sess.max_tokens = s.req.max_tokens;
+                    sess.stop_tokens = stop;
+                    sess.sampler = Sampler::new(
+                        s.req.temperature,
+                        s.req.top_p,
+                        s.req.seed.unwrap_or(s.req.id),
+                    );
+                    sessions.push(sess);
+                    conns.push(Conn {
                         tx: s.tx,
+                        cancel: s.cancel,
+                        started: crate::util::Stopwatch::start(),
                     });
                 }
             }
             _ => {}
         }
-        if slots.is_empty() {
+        if sessions.is_empty() {
             continue;
         }
-        // one scheduling round: each slot advances one token.  Slots still
-        // in prefill step individually; decode-phase slots advance as ONE
-        // batched engine call (sparse-row unions amortize, see engine::
-        // forward_tokens_batch).
+        // apply client-side cancellations before stepping
+        for (sess, conn) in sessions.iter_mut().zip(&conns) {
+            if conn.cancel.load(Ordering::Relaxed) {
+                sess.cancel();
+            }
+        }
+        // ONE engine call per scheduling round: chunked prefill + batched
+        // decode + sampling + stop checks all happen inside step_round
         let round = crate::util::Stopwatch::start();
-        let mut finished: Vec<usize> = Vec::new();
-        let mut decode_idx: Vec<usize> = Vec::new();
-        for (i, slot) in slots.iter_mut().enumerate() {
-            if slot.prompt_pos < slot.req.prompt.len() {
-                if let Err(e) = engine.forward_hidden(slot.last_token, &mut slot.state) {
-                    let _ = slot.tx.send(Event::Error { message: e.to_string() });
-                    finished.push(i);
-                    continue;
+        let report = match engine.step_round(&mut sessions) {
+            Ok(r) => r,
+            Err(e) => {
+                // a round error is engine-global (the fused pass serves
+                // every session): every in-flight stream gets the error,
+                // then terminates with a Cancelled Done so per-request
+                // accounting (admitted = completed + cancelled) stays
+                // consistent
+                for (sess, conn) in sessions.iter().zip(&conns) {
+                    let _ = conn.tx.send(Event::Error { message: e.to_string() });
+                    let _ = conn.tx.send(Event::Done {
+                        tokens: sess.tokens_produced(),
+                        seconds: conn.started.elapsed_secs(),
+                        reason: FinishReason::Cancelled,
+                    });
+                    metrics.inc("requests_cancelled", 1);
+                    metrics.inc("tokens_out", sess.tokens_produced() as u64);
                 }
-                slot.last_token = slot.req.prompt[slot.prompt_pos];
-                slot.prompt_pos += 1;
-            } else {
-                decode_idx.push(i);
+                sessions.clear();
+                conns.clear();
+                continue;
             }
-        }
-        if !decode_idx.is_empty() && engine.cfg.backend == crate::config::Backend::Xla {
-            // XLA backend has no batched path: step slots individually
-            for &i in &decode_idx {
-                let slot = &mut slots[i];
-                match engine.forward_token(slot.last_token, &mut slot.state) {
-                    Ok(mut logits) => {
-                        let tok = slot.sampler.sample(&mut logits);
-                        slot.last_token = tok;
-                        slot.produced += 1;
-                        let _ = slot.tx.send(Event::Token { token: tok });
-                        if slot.produced >= slot.req.max_tokens || tok == crate::text::EOS {
-                            finished.push(i);
-                        }
-                    }
-                    Err(e) => {
-                        let _ = slot.tx.send(Event::Error { message: e.to_string() });
-                        finished.push(i);
-                    }
-                }
-            }
-        } else if !decode_idx.is_empty() {
-            // move states out so the batch call can borrow them together
-            let tokens: Vec<u32> = decode_idx.iter().map(|&i| slots[i].last_token).collect();
-            let mut states: Vec<RwkvState> = decode_idx
-                .iter()
-                .map(|&i| std::mem::replace(&mut slots[i].state, RwkvState::zero(0, 0, 1, 1)))
-                .collect();
-            match engine.forward_tokens_batch(&tokens, &mut states) {
-                Ok(all_logits) => {
-                    metrics.inc("decode_rounds", 1);
-                    metrics.inc("decode_round_weight_bytes", engine.last_round_weight_bytes);
-                    metrics.inc("decode_slot_tokens", tokens.len() as u64);
-                    for ((&i, state), mut logits) in
-                        decode_idx.iter().zip(states).zip(all_logits)
-                    {
-                        let slot = &mut slots[i];
-                        slot.state = state;
-                        let tok = slot.sampler.sample(&mut logits);
-                        slot.last_token = tok;
-                        slot.produced += 1;
-                        let _ = slot.tx.send(Event::Token { token: tok });
-                        if slot.produced >= slot.req.max_tokens || tok == crate::text::EOS {
-                            finished.push(i);
-                        }
-                    }
-                }
-                Err(e) => {
-                    for (&i, state) in decode_idx.iter().zip(states) {
-                        let slot = &mut slots[i];
-                        slot.state = state;
-                        let _ = slot.tx.send(Event::Error { message: e.to_string() });
-                        finished.push(i);
-                    }
-                }
-            }
-        }
-        finished.sort_unstable();
-        finished.dedup();
-        metrics.observe("round_seconds", round.elapsed_secs());
+        };
         metrics.inc("rounds", 1);
-        for &i in finished.iter().rev() {
-            let slot = slots.remove(i);
-            metrics.inc("requests_completed", 1);
-            metrics.inc("tokens_out", slot.produced as u64);
-            let _ = slot.tx.send(Event::Done {
-                tokens: slot.produced,
-                seconds: slot.started.elapsed_secs(),
+        metrics.observe("round_seconds", round.elapsed_secs());
+        metrics.inc("round_weight_bytes", report.round_weight_bytes);
+        metrics.inc("prefill_tokens", report.prefill_tokens as u64);
+        metrics.inc("decode_tokens", report.decode_tokens as u64);
+        for em in &report.emitted {
+            if conns[em.session].tx.send(Event::Token { token: em.token }).is_err() {
+                // the client went away: stop paying weight passes for it
+                sessions[em.session].cancel();
+            }
+        }
+        // retire finished sessions (round stops + cancellations)
+        for i in (0..sessions.len()).rev() {
+            let reason = match sessions[i].finish_reason() {
+                Some(r) => r,
+                None => continue,
+            };
+            let sess = sessions.remove(i);
+            let conn = conns.remove(i);
+            if reason == FinishReason::Cancelled {
+                metrics.inc("requests_cancelled", 1);
+            } else {
+                metrics.inc("requests_completed", 1);
+            }
+            metrics.inc("tokens_out", sess.tokens_produced() as u64);
+            let _ = conn.tx.send(Event::Done {
+                tokens: sess.tokens_produced(),
+                seconds: conn.started.elapsed_secs(),
+                reason,
             });
         }
     }

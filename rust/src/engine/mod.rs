@@ -7,15 +7,25 @@
 //! * Loading strategies full / layerwise (§5.1) with auditable residency.
 //! * Backends: pure-rust kernels (native) or AOT HLO via PJRT (xla).
 //!
-//! Decode runs in two shapes: the per-slot path ([`RwkvEngine::forward_token`])
-//! and the weight-streaming batched path ([`RwkvEngine::forward_tokens_batch`])
-//! that advances every slot of a scheduling round through one pass over the
-//! weights (tensor::matmat kernels + union-fused sparse FFN).  The two paths
-//! are bit-identical per slot.
+//! The engine has ONE fused entry point for serving work: a *round*
+//! ([`RwkvEngine::step_round`], see [`session`]) advances a mixed set of
+//! sessions — prefill sessions by a chunk of up to `prefill_chunk` prompt
+//! tokens, decode sessions by one token — through a single pass over the
+//! weights.  Internally every session contributes a contiguous run of
+//! token rows to one `(N, D)` activation batch (a [`SegSpan`] each), all
+//! projections / FFN matrices / the head stream once per round through the
+//! tensor::matmat kernels, and the §3.2 sparse FFN unions predicted rows
+//! across every row of the round.  The head runs only on rows that must
+//! emit a token (decode rows and prompt-final rows).
+//!
+//! The per-slot path ([`RwkvEngine::forward_token`]) and the one-token
+//! batched path ([`RwkvEngine::forward_tokens_batch`]) remain as thin
+//! views of the same math; every path is bit-identical per slot.
 
 pub mod emb_cache;
 pub mod hier_head;
 pub mod sampler;
+pub mod session;
 pub mod sparse_ffn;
 pub mod state;
 pub mod transformer;
@@ -137,11 +147,12 @@ impl Scratch {
     }
 }
 
-/// Round-persistent scratch for the batched decode path: activations live
-/// in `(B, D)` row-major flat buffers so the matmat kernels stream each
-/// weight row once for the whole round.  Everything here is reused across
-/// rounds and layers — after warm-up a decode round performs no heap
-/// allocation beyond the returned logits vectors.
+/// Round-persistent scratch for the fused segment rounds: activations
+/// live in `(N, D)` row-major flat buffers so the matmat kernels stream
+/// each weight row once for the whole round.  Everything here is reused
+/// across rounds and layers — after warm-up the per-layer hot loop
+/// performs no heap allocation; only per-round planning (span/flag vecs)
+/// and the returned logits allocate.
 struct BatchScratch {
     x: Vec<f32>,       // (B, D) residual stream
     xa: Vec<f32>,      // (B, D) ln1 output / final hidden
@@ -249,6 +260,61 @@ fn wkv_decode_step(
                 orow[j] += ri * (ui * a + srow[j]);
                 srow[j] = wi * srow[j] + a;
             }
+        }
+    }
+}
+
+/// One session's contiguous run of token rows inside a fused round batch.
+///
+/// Decode sessions contribute a single row (`len == 1`); prefill sessions
+/// contribute up to `prefill_chunk` rows processed teacher-forced in
+/// sequence order.  `sess` indexes the `states` slice the segment
+/// advances; `start` is the segment's first row in the flat `(N, D)`
+/// activation buffers.
+#[derive(Clone, Copy, Debug)]
+pub struct SegSpan {
+    pub sess: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Which per-layer shift state a segment token-shift reads.
+#[derive(Clone, Copy)]
+enum ShiftCarry {
+    /// Time-mix shift (`RwkvState::att_x`).
+    Att,
+    /// Channel-mix shift (`RwkvState::ffn_x`).
+    Ffn,
+}
+
+/// Token-shift over segment rows: row `t` of a segment mixes with row
+/// `t-1` of the same segment; each segment's first row mixes with that
+/// session's carried shift state (read straight from `states`, so the
+/// hot loop stays allocation-free).  Bit-identical to the per-token
+/// [`lerp_shift`] because each row runs the exact scalar loop.
+#[allow(clippy::too_many_arguments)]
+fn lerp_shift_seq(
+    d: usize,
+    spans: &[SegSpan],
+    states: &[RwkvState],
+    layer: usize,
+    carry: ShiftCarry,
+    src: &[f32],
+    mu: &[f32],
+    out: &mut [f32],
+) {
+    for sp in spans {
+        for t in 0..sp.len {
+            let row = sp.start + t;
+            let prev: &[f32] = if t == 0 {
+                match carry {
+                    ShiftCarry::Att => &states[sp.sess].att_x[layer],
+                    ShiftCarry::Ffn => &states[sp.sess].ffn_x[layer],
+                }
+            } else {
+                &src[(row - 1) * d..row * d]
+            };
+            lerp_shift(&src[row * d..(row + 1) * d], prev, mu, &mut out[row * d..(row + 1) * d]);
         }
     }
 }
@@ -558,23 +624,14 @@ impl RwkvEngine {
     }
 
     // ------------------------------------------------------------------
-    // Batched decode round (weight-streaming path)
+    // Fused segment round (weight-streaming path)
     // ------------------------------------------------------------------
 
     /// Batched decode round: advance each slot one token with ONE pass over
-    /// the weights.
-    ///
-    /// Activations live in `(B, D)` flat buffers ([`BatchScratch`]) and
-    /// every projection / FFN matrix / head matrix is applied through the
-    /// tensor::matmat multi-vector kernels, so each weight row streams once
-    /// per round and serves all B slots while hot.  The §3.2 sparse FFN is
-    /// fused across slots: the per-slot predictor index sets are unioned
-    /// and one pass over the union rows computes every slot's activations
-    /// (each slot masked to its own predicted set).  Only the time-mix
-    /// state recurrence and the element-wise norms/shifts stay per-slot.
-    ///
-    /// Numerically BIT-IDENTICAL to calling [`Self::forward_token`] per
-    /// slot — the kernels preserve the per-slot accumulation order exactly.
+    /// the weights.  A thin view of the fused segment pass (see
+    /// [`Self::step_round`]) where every session contributes a single row;
+    /// numerically BIT-IDENTICAL to calling [`Self::forward_token`] per
+    /// slot.
     ///
     /// Telemetry: `batch_rounds`, `batch_round_weight_bytes` (dense-layer
     /// bytes are constant in B — that is the point), `batch_union_rows` /
@@ -590,21 +647,66 @@ impl RwkvEngine {
         if n == 0 {
             return Ok(Vec::new());
         }
+        let round = crate::util::Stopwatch::start();
+        let spans: Vec<SegSpan> = (0..n).map(|i| SegSpan { sess: i, start: i, len: 1 }).collect();
+        let need: Vec<bool> = vec![true; n];
+        let (logits, round_bytes) = self.forward_segments(tokens, &spans, states, &need)?;
+        self.metrics.inc("batch_rounds", 1);
+        self.metrics.inc("batch_round_weight_bytes", round_bytes);
+        self.metrics.inc("batch_slot_tokens", n as u64);
+        self.metrics.observe("batch_round_secs", round.elapsed_secs());
+        Ok(logits)
+    }
+
+    /// The fused round core: advance every segment of token rows through
+    /// one pass over the weights.
+    ///
+    /// Activations for all `N = Σ len` rows live in `(N, D)` flat buffers
+    /// (`BatchScratch`) and every projection / FFN matrix / head matrix
+    /// is applied through the tensor::matmat multi-vector kernels, so each
+    /// weight row streams once per round and serves every row (decode
+    /// slots AND prompt chunks) while hot.  The §3.2 sparse FFN is fused
+    /// across the whole round: per-row predictor index sets are unioned
+    /// and one pass over the union rows computes every row's activations
+    /// (each row masked to its own predicted set).  Only the WKV state
+    /// recurrence and the element-wise norms/shifts stay per-row — and
+    /// within a segment those run in sequence order, so a prefill chunk is
+    /// bit-identical to feeding its tokens through [`Self::forward_hidden`]
+    /// one at a time.
+    ///
+    /// The head runs only on the FINAL row of segments flagged in
+    /// `need_logits` (decode rows, prompt-completing rows); non-final
+    /// prompt positions skip ln_out + head entirely.  Returns the logits
+    /// for flagged segments (in span order) and the round's weight bytes
+    /// (dense matrices counted once regardless of N).
+    pub(crate) fn forward_segments(
+        &mut self,
+        tokens: &[u32],
+        spans: &[SegSpan],
+        states: &mut [RwkvState],
+        need_logits: &[bool],
+    ) -> Result<(Vec<Vec<f32>>, u64)> {
+        debug_assert_eq!(spans.len(), need_logits.len());
+        let n = tokens.len();
+        debug_assert_eq!(n, spans.iter().map(|sp| sp.len).sum::<usize>());
+        anyhow::ensure!(self.xla.is_none(), "fused rounds are native-backend only");
+        if n == 0 {
+            return Ok((Vec::new(), 0));
+        }
         let d = self.info.dim;
         self.last_stats = StepStats::default();
-        let round = crate::util::Stopwatch::start();
         self.bbuf.ensure(n, d);
         let mut round_bytes: u64 = 0;
 
-        // embed + ln0 into the (B, D) residual stream
+        // embed + ln0 into the (N, D) residual stream
         let t_emb = crate::util::Stopwatch::start();
         let mut xbuf = std::mem::take(&mut self.bbuf.x);
         let mut row = std::mem::take(&mut self.bbuf.t1);
         row.clear();
         row.resize(d, 0.0);
-        for (s, &tok) in tokens.iter().enumerate() {
+        for (r, &tok) in tokens.iter().enumerate() {
             self.embed(tok, &mut row)?;
-            layer_norm(&row, &self.ln0.scale, &self.ln0.bias, 1e-5, &mut xbuf[s * d..(s + 1) * d]);
+            layer_norm(&row, &self.ln0.scale, &self.ln0.bias, 1e-5, &mut xbuf[r * d..(r + 1) * d]);
         }
         row.clear();
         row.resize(n * d, 0.0);
@@ -620,7 +722,7 @@ impl RwkvEngine {
                 self.blocks[layer].clone().context("block not preloaded")?
             };
             let t_tm = crate::util::Stopwatch::start();
-            self.time_mix_batch(&block, layer, n, states);
+            self.time_mix_seq(&block, layer, spans, states);
             self.last_stats.timemix_secs += t_tm.elapsed_secs();
             round_bytes += block.att.wr.nbytes()
                 + block.att.wk.nbytes()
@@ -628,7 +730,7 @@ impl RwkvEngine {
                 + block.att.wg.nbytes()
                 + block.att.wo.nbytes();
             let t_cm = crate::util::Stopwatch::start();
-            round_bytes += self.chan_mix_batch(&block, layer, n, states)?;
+            round_bytes += self.chan_mix_seq(&block, layer, spans, states)?;
             self.last_stats.chanmix_secs += t_cm.elapsed_secs();
             if layerwise {
                 drop(block);
@@ -636,173 +738,162 @@ impl RwkvEngine {
             }
         }
 
-        // final layer norm into (B, D) hidden, then the batched head
-        {
-            let bb = &mut self.bbuf;
-            for s in 0..n {
-                layer_norm(
-                    &bb.x[s * d..(s + 1) * d],
-                    &self.ln_out.scale,
-                    &self.ln_out.bias,
-                    1e-5,
-                    &mut bb.xa[s * d..(s + 1) * d],
-                );
+        // ln_out + head only for rows that must emit: gather the final row
+        // of each flagged segment into a compact (Bh, D) hidden buffer
+        let flagged: Vec<usize> = spans
+            .iter()
+            .zip(need_logits)
+            .filter(|(_, &f)| f)
+            .map(|(sp, _)| sp.start + sp.len - 1)
+            .collect();
+        let bh = flagged.len();
+        let mut logits_out: Vec<Vec<f32>> = Vec::new();
+        if bh > 0 {
+            {
+                let bb = &mut self.bbuf;
+                for (j, &row) in flagged.iter().enumerate() {
+                    layer_norm(
+                        &bb.x[row * d..(row + 1) * d],
+                        &self.ln_out.scale,
+                        &self.ln_out.bias,
+                        1e-5,
+                        &mut bb.xa[j * d..(j + 1) * d],
+                    );
+                }
             }
-        }
-        let t_head = crate::util::Stopwatch::start();
-        let vocab = self.info.vocab;
-        let mut logits_out: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; vocab]).collect();
-        if let Some(hh) = &mut self.hier {
-            let stats = hh.logits_batch(
-                &self.store,
-                &self.store.tracker,
-                &self.bbuf.xa,
-                &mut logits_out,
-            )?;
-            self.last_stats.head_rows = stats.tokens_loaded;
-            round_bytes += hh.h1_nbytes() + stats.bytes;
-        } else if let Some(hm) = &self.head_mat {
-            // dense head: stream the vocab matrix once for the whole round
-            let mut flat = std::mem::take(&mut self.bbuf.h);
-            flat.clear();
-            flat.resize(n * vocab, 0.0);
-            matmat_rows(hm, &self.bbuf.xa, &mut flat);
-            for (s, out) in logits_out.iter_mut().enumerate() {
-                out.copy_from_slice(&flat[s * vocab..(s + 1) * vocab]);
+            let t_head = crate::util::Stopwatch::start();
+            let vocab = self.info.vocab;
+            logits_out = (0..bh).map(|_| vec![0.0f32; vocab]).collect();
+            if let Some(hh) = &mut self.hier {
+                let stats = hh.logits_batch(
+                    &self.store,
+                    &self.store.tracker,
+                    &self.bbuf.xa[..bh * d],
+                    &mut logits_out,
+                )?;
+                self.last_stats.head_rows = stats.tokens_loaded;
+                round_bytes += hh.h1_nbytes() + stats.bytes;
+            } else if let Some(hm) = &self.head_mat {
+                // dense head: stream the vocab matrix once for the round
+                let mut flat = std::mem::take(&mut self.bbuf.h);
+                flat.clear();
+                flat.resize(bh * vocab, 0.0);
+                matmat_rows(hm, &self.bbuf.xa[..bh * d], &mut flat);
+                for (s, out) in logits_out.iter_mut().enumerate() {
+                    out.copy_from_slice(&flat[s * vocab..(s + 1) * vocab]);
+                }
+                self.bbuf.h = flat;
+                self.last_stats.head_rows = vocab;
+                round_bytes += hm.nbytes();
+            } else {
+                bail!("no head path configured");
             }
-            self.bbuf.h = flat;
-            self.last_stats.head_rows = vocab;
-            round_bytes += hm.nbytes();
-        } else {
-            bail!("no head path configured");
+            self.last_stats.head_secs = t_head.elapsed_secs();
         }
-        self.last_stats.head_secs = t_head.elapsed_secs();
 
         self.last_round_weight_bytes = round_bytes;
-        self.metrics.inc("batch_rounds", 1);
-        self.metrics.inc("batch_round_weight_bytes", round_bytes);
-        self.metrics.inc("batch_slot_tokens", n as u64);
-        self.metrics.observe("batch_round_secs", round.elapsed_secs());
-        Ok(logits_out)
+        Ok((logits_out, round_bytes))
     }
 
-    /// Batched time-mix: shared projections go through the matmat kernels
-    /// (one weight pass for all slots); the WKV recurrence, norms and
-    /// shifts run per slot on that slot's state.
-    fn time_mix_batch(&mut self, b: &BlockW, layer: usize, n: usize, states: &mut [RwkvState]) {
+    /// Segment time-mix: shared projections go through the matmat kernels
+    /// (one weight pass for all rows); the WKV recurrence, norms and
+    /// shifts run per row in segment order on that session's state.
+    fn time_mix_seq(
+        &mut self,
+        b: &BlockW,
+        layer: usize,
+        spans: &[SegSpan],
+        states: &mut [RwkvState],
+    ) {
         let (h, hs) = (self.info.heads, self.info.head_size);
         let d = self.info.dim;
+        let n: usize = spans.iter().map(|sp| sp.len).sum();
+        {
+            let bb = &mut self.bbuf;
+            // ln1 over every row FIRST: within-segment shifts read the
+            // previous row's xa
+            for r in 0..n {
+                layer_norm(
+                    &bb.x[r * d..(r + 1) * d],
+                    &b.ln1.scale,
+                    &b.ln1.bias,
+                    1e-5,
+                    &mut bb.xa[r * d..(r + 1) * d],
+                );
+            }
+            let ca = ShiftCarry::Att;
+            lerp_shift_seq(d, spans, states, layer, ca, &bb.xa, &b.att.mu_r, &mut bb.t1);
+            b.att.wr.apply_batch(&bb.t1, n, &mut bb.r, &mut bb.rank, &mut bb.acc);
+            lerp_shift_seq(d, spans, states, layer, ca, &bb.xa, &b.att.mu_k, &mut bb.t1);
+            b.att.wk.apply_batch(&bb.t1, n, &mut bb.k, &mut bb.rank, &mut bb.acc);
+            lerp_shift_seq(d, spans, states, layer, ca, &bb.xa, &b.att.mu_v, &mut bb.t1);
+            b.att.wv.apply_batch(&bb.t1, n, &mut bb.v, &mut bb.rank, &mut bb.acc);
+            lerp_shift_seq(d, spans, states, layer, ca, &bb.xa, &b.att.mu_g, &mut bb.t1);
+            b.att.wg.apply_batch(&bb.t1, n, &mut bb.g, &mut bb.rank, &mut bb.acc);
+        }
         let bb = &mut self.bbuf;
-        for s in 0..n {
-            layer_norm(
-                &bb.x[s * d..(s + 1) * d],
-                &b.ln1.scale,
-                &b.ln1.bias,
-                1e-5,
-                &mut bb.xa[s * d..(s + 1) * d],
-            );
-        }
-        for s in 0..n {
-            lerp_shift(
-                &bb.xa[s * d..(s + 1) * d],
-                &states[s].att_x[layer],
-                &b.att.mu_r,
-                &mut bb.t1[s * d..(s + 1) * d],
-            );
-        }
-        b.att.wr.apply_batch(&bb.t1, n, &mut bb.r, &mut bb.rank, &mut bb.acc);
-        for s in 0..n {
-            lerp_shift(
-                &bb.xa[s * d..(s + 1) * d],
-                &states[s].att_x[layer],
-                &b.att.mu_k,
-                &mut bb.t1[s * d..(s + 1) * d],
-            );
-        }
-        b.att.wk.apply_batch(&bb.t1, n, &mut bb.k, &mut bb.rank, &mut bb.acc);
-        for s in 0..n {
-            lerp_shift(
-                &bb.xa[s * d..(s + 1) * d],
-                &states[s].att_x[layer],
-                &b.att.mu_v,
-                &mut bb.t1[s * d..(s + 1) * d],
-            );
-        }
-        b.att.wv.apply_batch(&bb.t1, n, &mut bb.v, &mut bb.rank, &mut bb.acc);
-        for s in 0..n {
-            lerp_shift(
-                &bb.xa[s * d..(s + 1) * d],
-                &states[s].att_x[layer],
-                &b.att.mu_g,
-                &mut bb.t1[s * d..(s + 1) * d],
-            );
-        }
-        b.att.wg.apply_batch(&bb.t1, n, &mut bb.g, &mut bb.rank, &mut bb.acc);
-        for s in 0..n {
-            for v in bb.g[s * d..(s + 1) * d].iter_mut() {
-                *v = silu(*v);
+        for sp in spans {
+            for t in 0..sp.len {
+                let row = sp.start + t;
+                for v in bb.g[row * d..(row + 1) * d].iter_mut() {
+                    *v = silu(*v);
+                }
+                wkv_decode_step(
+                    h,
+                    hs,
+                    &b.att.decay,
+                    &b.att.first,
+                    &bb.r[row * d..(row + 1) * d],
+                    &bb.k[row * d..(row + 1) * d],
+                    &bb.v[row * d..(row + 1) * d],
+                    &mut states[sp.sess].wkv[layer],
+                    &mut bb.att_out[row * d..(row + 1) * d],
+                );
+                group_norm_heads(
+                    &mut bb.att_out[row * d..(row + 1) * d],
+                    h,
+                    &b.att.lnx.scale,
+                    &b.att.lnx.bias,
+                );
+                for i in 0..d {
+                    bb.att_out[row * d + i] *= bb.g[row * d + i];
+                }
             }
-            wkv_decode_step(
-                h,
-                hs,
-                &b.att.decay,
-                &b.att.first,
-                &bb.r[s * d..(s + 1) * d],
-                &bb.k[s * d..(s + 1) * d],
-                &bb.v[s * d..(s + 1) * d],
-                &mut states[s].wkv[layer],
-                &mut bb.att_out[s * d..(s + 1) * d],
-            );
-            group_norm_heads(
-                &mut bb.att_out[s * d..(s + 1) * d],
-                h,
-                &b.att.lnx.scale,
-                &b.att.lnx.bias,
-            );
-            for i in 0..d {
-                bb.att_out[s * d + i] *= bb.g[s * d + i];
-            }
-            states[s].att_x[layer].copy_from_slice(&bb.xa[s * d..(s + 1) * d]);
+            // carry the shift state: xa of the segment's LAST row
+            let last = sp.start + sp.len - 1;
+            states[sp.sess].att_x[layer].copy_from_slice(&bb.xa[last * d..(last + 1) * d]);
         }
         // one streaming pass of wo for the whole round (+= residual)
         matmat_in_out(&bb.att_out, &b.att.wo, &mut bb.x, &mut bb.acc);
     }
 
-    /// Batched channel-mix.  Sparse configs predict per slot, then compute
-    /// on the cross-slot UNION of predicted rows in one streaming pass;
+    /// Segment channel-mix.  Sparse configs predict per row, then compute
+    /// on the round-wide UNION of predicted rows in one streaming pass;
     /// dense configs run wk_t/wv through the matmat kernels.  Returns the
     /// channel-mix weight bytes streamed this round.
-    fn chan_mix_batch(
+    fn chan_mix_seq(
         &mut self,
         b: &BlockW,
         layer: usize,
-        n: usize,
+        spans: &[SegSpan],
         states: &mut [RwkvState],
     ) -> Result<u64> {
         let d = self.info.dim;
+        let n: usize = spans.iter().map(|sp| sp.len).sum();
         {
             let bb = &mut self.bbuf;
-            for s in 0..n {
+            for r in 0..n {
                 layer_norm(
-                    &bb.x[s * d..(s + 1) * d],
+                    &bb.x[r * d..(r + 1) * d],
                     &b.ln2.scale,
                     &b.ln2.bias,
                     1e-5,
-                    &mut bb.xf[s * d..(s + 1) * d],
-                );
-                lerp_shift(
-                    &bb.xf[s * d..(s + 1) * d],
-                    &states[s].ffn_x[layer],
-                    &b.ffn.mu_k,
-                    &mut bb.t1[s * d..(s + 1) * d],
-                );
-                lerp_shift(
-                    &bb.xf[s * d..(s + 1) * d],
-                    &states[s].ffn_x[layer],
-                    &b.ffn.mu_r,
-                    &mut bb.t2[s * d..(s + 1) * d],
+                    &mut bb.xf[r * d..(r + 1) * d],
                 );
             }
+            let cf = ShiftCarry::Ffn;
+            lerp_shift_seq(d, spans, states, layer, cf, &bb.xf, &b.ffn.mu_k, &mut bb.t1); // xk
+            lerp_shift_seq(d, spans, states, layer, cf, &bb.xf, &b.ffn.mu_r, &mut bb.t2); // xr
             b.ffn.wr.apply_batch(&bb.t2, n, &mut bb.r, &mut bb.rank, &mut bb.acc);
             for v in bb.r.iter_mut() {
                 *v = sigmoid(*v);
@@ -810,35 +901,35 @@ impl RwkvEngine {
         }
         let mut bytes = b.ffn.wr.nbytes();
         if self.cfg.sparse_ffn {
-            // predict per slot (the predictor is per-slot math) into the
+            // predict per row (the predictor is per-token math) into the
             // round-persistent index sets
-            for s in 0..n {
+            for r in 0..n {
                 let bb = &mut self.bbuf;
                 let pred = self.preds[layer].as_mut().context("predictor missing")?;
                 if pred.mode == sparse_ffn::PredMode::GroundTruth {
-                    let xk = &bb.t1[s * d..(s + 1) * d];
-                    bb.slot_idx[s] = SparsePredictor::ground_truth(&self.store, layer, xk)?;
-                    pred.note_external(bb.slot_idx[s].len(), self.info.ffn);
+                    let xk = &bb.t1[r * d..(r + 1) * d];
+                    bb.slot_idx[r] = SparsePredictor::ground_truth(&self.store, layer, xk)?;
+                    pred.note_external(bb.slot_idx[r].len(), self.info.ffn);
                 } else {
                     pred.predict(
-                        &bb.t1[s * d..(s + 1) * d],
+                        &bb.t1[r * d..(r + 1) * d],
                         &mut bb.pred_n,
                         &mut bb.pred_f,
                         &mut bb.pred_f2,
-                        &mut bb.slot_idx[s],
+                        &mut bb.slot_idx[r],
                     );
                 }
             }
             let bb = &mut self.bbuf;
             bb.union_idx.clear();
-            for s in 0..n {
+            for r in 0..n {
                 let (union, slots) = (&mut bb.union_idx, &bb.slot_idx);
-                union.extend_from_slice(&slots[s]);
+                union.extend_from_slice(&slots[r]);
             }
             bb.union_idx.sort_unstable();
             bb.union_idx.dedup();
             // §3.2 round accounting: the union rows stream from storage
-            // once and serve every slot in the round
+            // once and serve every row in the round
             let row_bytes = sparse_ffn::ffn_row_pair_bytes(&self.store, layer)?;
             let union_bytes = bb.union_idx.len() as u64 * row_bytes;
             self.store.tracker.load(crate::metrics::Group::ChanMix, union_bytes);
@@ -849,7 +940,7 @@ impl RwkvEngine {
                 bb.slot_idx[..n].iter().map(|v| v.len() as u64).sum(),
             );
             bytes += union_bytes;
-            // union-fused compute: one pass over union rows for all slots
+            // union-fused compute: one pass over union rows for all rows
             let total = sparse_ffn::sparse_ffn_apply_batch(
                 &self.store,
                 layer,
@@ -860,8 +951,8 @@ impl RwkvEngine {
                 &mut bb.h,
                 &mut bb.cursors,
             )?;
-            for s in 0..n {
-                let active = bb.slot_idx[s].len();
+            for r in 0..n {
+                let active = bb.slot_idx[r].len();
                 self.last_stats.ffn_active += active;
                 self.last_stats.ffn_total += total;
                 self.ffn_active_by_layer[layer] += active as u64;
@@ -876,8 +967,8 @@ impl RwkvEngine {
             bb.h.resize(n * f, 0.0);
             matmat_rows(wk_t, &bb.t1, &mut bb.h);
             sqrelu_inplace(&mut bb.h);
-            for s in 0..n {
-                let nz = bb.h[s * f..(s + 1) * f].iter().filter(|&&v| v > 0.0).count();
+            for r in 0..n {
+                let nz = bb.h[r * f..(r + 1) * f].iter().filter(|&&v| v > 0.0).count();
                 self.ffn_active_by_layer[layer] += nz as u64;
                 self.ffn_count_by_layer[layer] += f as u64;
                 self.last_stats.ffn_active += nz;
@@ -888,16 +979,25 @@ impl RwkvEngine {
             bytes += wk_t.nbytes() + wv.nbytes();
         }
         let bb = &mut self.bbuf;
-        for s in 0..n {
-            for i in 0..d {
-                bb.x[s * d + i] += bb.r[s * d + i] * bb.ffn_out[s * d + i];
+        for sp in spans {
+            for t in 0..sp.len {
+                let row = sp.start + t;
+                for i in 0..d {
+                    bb.x[row * d + i] += bb.r[row * d + i] * bb.ffn_out[row * d + i];
+                }
             }
-            states[s].ffn_x[layer].copy_from_slice(&bb.xf[s * d..(s + 1) * d]);
+            let last = sp.start + sp.len - 1;
+            states[sp.sess].ffn_x[layer].copy_from_slice(&bb.xf[last * d..(last + 1) * d]);
         }
         Ok(bytes)
     }
 
     /// Consume a prompt (teacher-forced), then sample `n` tokens.
+    ///
+    /// A thin wrapper over the session API: the prompt prefills in fused
+    /// chunks of `cfg.prefill_chunk` through [`Self::step_round`] —
+    /// bit-identical to the old per-token loop, several times fewer weight
+    /// passes.  No implicit stop tokens: exactly `n` tokens come back.
     pub fn generate(
         &mut self,
         prompt: &[u32],
@@ -905,20 +1005,15 @@ impl RwkvEngine {
         sampler: &mut Sampler,
         state: &mut RwkvState,
     ) -> Result<Vec<u32>> {
-        let mut last = crate::text::BOS;
-        for &t in prompt {
-            self.forward_hidden(last, state)?;
-            last = t;
-        }
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            let mut logits = self.forward_token(last, state)?;
-            let tok = sampler.sample(&mut logits);
-            out.push(tok);
-            last = tok;
-            self.metrics.inc("tokens_generated", 1);
-        }
-        Ok(out)
+        let mut sess = session::Session::new(self, 0, prompt);
+        sess.max_tokens = n;
+        sess.sampler = sampler.clone();
+        sess.swap_state(state);
+        let result = self.run_session(&mut sess);
+        // hand the (possibly partially advanced) state back even on error
+        sess.swap_state(state);
+        *sampler = sess.sampler.clone();
+        result
     }
 
     /// (current, peak) weight-residency bytes.

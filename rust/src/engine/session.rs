@@ -1,0 +1,362 @@
+//! Session-centric inference: one `step_round` entry point for mixed
+//! prefill + decode work.
+//!
+//! A [`Session`] owns everything one generation request needs — the
+//! recurrent [`RwkvState`], the [`Sampler`], generation params
+//! (`max_tokens`, `stop_tokens`) and its [`Phase`].  The engine advances
+//! any set of sessions with [`RwkvEngine::step_round`]: prefill sessions
+//! move a chunk of up to `cfg.prefill_chunk` prompt tokens, decode
+//! sessions move one token, and everything shares ONE weight-streaming
+//! pass (the fused segment rounds in `engine::forward_segments`).
+//! Sampling and
+//! stop-checking happen inside the round, so callers only consume the
+//! emitted tokens from the returned [`RoundReport`].
+//!
+//! Invariants:
+//! * A session's token stream is `[BOS, prompt...]`; the head runs only on
+//!   the stream's final position and on decode rows, so non-final prompt
+//!   positions never pay head bytes.
+//! * Chunked prefill is bit-identical to feeding the same tokens through
+//!   [`RwkvEngine::forward_hidden`] one at a time (every chunk size, every
+//!   dtype/technique config) — enforced by `tests/prefill_equivalence.rs`.
+//! * A round's dense-layer weight bytes are constant in the number of
+//!   prefill rows and decode slots (`RoundReport::round_weight_bytes`).
+
+use anyhow::Result;
+
+use super::sampler::Sampler;
+use super::state::RwkvState;
+use super::{RwkvEngine, SegSpan};
+
+/// Why a session stopped emitting tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Emitted `max_tokens` tokens.
+    MaxTokens,
+    /// Sampled a stop token (EOS or a request-supplied stop id); the stop
+    /// token itself is emitted, matching the coordinator's historical
+    /// EOS behaviour.
+    Stop(u32),
+    /// Cancelled by the caller ([`Session::cancel`]) or retired by the
+    /// coordinator after the client went away.
+    Cancelled,
+}
+
+impl FinishReason {
+    /// Stable wire name (server protocol / CLI reporting).
+    pub fn name(self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "length",
+            FinishReason::Stop(_) => "stop",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Where a session is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Consuming the prompt; `pos` tokens of the feed stream are done.
+    Prefill { pos: usize },
+    /// Prompt consumed; each round emits one sampled token.
+    Decode,
+    /// No further work; the session keeps its final state for inspection.
+    Done { reason: FinishReason },
+}
+
+/// One in-flight generation request: recurrent state + sampler + params +
+/// phase.  Construct with [`Session::new`], then adjust the public fields;
+/// drive with [`RwkvEngine::step_round`].
+pub struct Session {
+    pub id: u64,
+    pub sampler: Sampler,
+    pub max_tokens: usize,
+    /// Token ids that end the session when sampled (the coordinator adds
+    /// EOS; [`RwkvEngine::generate`] leaves this empty for fixed-length
+    /// generation).
+    pub stop_tokens: Vec<u32>,
+    state: RwkvState,
+    /// `[BOS, prompt...]` — the teacher-forced stream prefill consumes.
+    feed: Vec<u32>,
+    phase: Phase,
+    last_token: u32,
+    produced: usize,
+    /// Already surfaced in a `RoundReport::finished` (exactly-once).
+    reported: bool,
+}
+
+impl Session {
+    /// A session for `prompt`, defaulting to greedy sampling seeded by
+    /// `id` and `max_tokens = 32`; set the public fields to customize.
+    pub fn new(engine: &RwkvEngine, id: u64, prompt: &[u32]) -> Self {
+        let mut feed = Vec::with_capacity(prompt.len() + 1);
+        feed.push(crate::text::BOS);
+        feed.extend_from_slice(prompt);
+        Self {
+            id,
+            sampler: Sampler::new(0.0, 1.0, id),
+            max_tokens: 32,
+            stop_tokens: Vec::new(),
+            state: engine.new_state(),
+            feed,
+            phase: Phase::Prefill { pos: 0 },
+            last_token: crate::text::BOS,
+            produced: 0,
+            reported: false,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.phase, Phase::Done { .. })
+    }
+
+    /// `Some(reason)` once the session is done.
+    pub fn finish_reason(&self) -> Option<FinishReason> {
+        match self.phase {
+            Phase::Done { reason } => Some(reason),
+            _ => None,
+        }
+    }
+
+    /// Tokens emitted so far.
+    pub fn tokens_produced(&self) -> usize {
+        self.produced
+    }
+
+    /// Stop the session; the next round reports it finished.  No-op once
+    /// done (a real finish reason is never overwritten).
+    pub fn cancel(&mut self) {
+        if !self.is_done() {
+            self.phase = Phase::Done { reason: FinishReason::Cancelled };
+        }
+    }
+
+    pub fn state(&self) -> &RwkvState {
+        &self.state
+    }
+
+    /// Exchange the session's recurrent state with `other` (lets callers
+    /// resume from / recover an externally owned state without copying).
+    pub fn swap_state(&mut self, other: &mut RwkvState) {
+        std::mem::swap(&mut self.state, other);
+    }
+}
+
+/// A token emitted by [`RwkvEngine::step_round`]; `session` indexes the
+/// slice passed to the round.
+#[derive(Clone, Copy, Debug)]
+pub struct Emission {
+    pub session: usize,
+    pub token: u32,
+}
+
+/// What one scheduling round did.
+#[derive(Clone, Debug, Default)]
+pub struct RoundReport {
+    /// Sampled tokens, in session order (at most one per session).
+    pub emitted: Vec<Emission>,
+    /// Sessions that entered `Done` this round (indexes into the slice).
+    pub finished: Vec<usize>,
+    /// Prompt tokens advanced across all prefill sessions.
+    pub prefill_tokens: usize,
+    /// Decode rows advanced (one per decode session).
+    pub decode_tokens: usize,
+    /// Weight bytes streamed by the fused pass — constant in the number
+    /// of prefill/decode sessions for dense layers (0 on the XLA
+    /// fallback, which has no byte accounting).
+    pub round_weight_bytes: u64,
+}
+
+impl RwkvEngine {
+    /// Advance every active session by one scheduling round through ONE
+    /// pass over the weights: prefill sessions move up to
+    /// `cfg.prefill_chunk` prompt tokens, decode sessions move one token,
+    /// and sessions that reach a sampling position get their token
+    /// sampled, stop-checked and reported — `Done` sessions are skipped.
+    /// This is the single entry point the serving stack is built on.
+    pub fn step_round(&mut self, sessions: &mut [Session]) -> Result<RoundReport> {
+        let chunk = self.cfg.prefill_chunk.max(1);
+        let round = crate::util::Stopwatch::start();
+        // plan: one segment of token rows per active session
+        let mut spans: Vec<SegSpan> = Vec::new();
+        let mut flat_tokens: Vec<u32> = Vec::new();
+        let mut need: Vec<bool> = Vec::new();
+        let mut planned: Vec<usize> = Vec::new();
+        let mut report = RoundReport::default();
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            match sess.phase {
+                Phase::Done { .. } => {
+                    // e.g. cancelled between rounds: surface it exactly
+                    // once (the flag is set only when the report is
+                    // actually delivered, so a failed round retries it)
+                    if !sess.reported {
+                        report.finished.push(i);
+                    }
+                    continue;
+                }
+                Phase::Prefill { pos } => {
+                    let take = chunk.min(sess.feed.len() - pos);
+                    spans.push(SegSpan { sess: planned.len(), start: flat_tokens.len(), len: take });
+                    flat_tokens.extend_from_slice(&sess.feed[pos..pos + take]);
+                    need.push(pos + take == sess.feed.len());
+                    planned.push(i);
+                    report.prefill_tokens += take;
+                }
+                Phase::Decode => {
+                    spans.push(SegSpan { sess: planned.len(), start: flat_tokens.len(), len: 1 });
+                    flat_tokens.push(sess.last_token);
+                    need.push(true);
+                    planned.push(i);
+                    report.decode_tokens += 1;
+                }
+            }
+        }
+        if planned.is_empty() {
+            for &i in &report.finished {
+                sessions[i].reported = true;
+            }
+            return Ok(report);
+        }
+
+        // the fused pass borrows all states together; lend them out
+        let mut states: Vec<RwkvState> = planned
+            .iter()
+            .map(|&i| std::mem::replace(&mut sessions[i].state, RwkvState::zero(0, 0, 1, 1)))
+            .collect();
+        let result = if self.xla.is_some() {
+            self.step_segments_sequential(&flat_tokens, &spans, &mut states, &need)
+        } else {
+            self.forward_segments(&flat_tokens, &spans, &mut states, &need)
+        };
+        for (&i, st) in planned.iter().zip(states) {
+            sessions[i].state = st;
+        }
+        let (mut logits, round_bytes) = result?;
+        report.round_weight_bytes = round_bytes;
+        // the round succeeded, so this report WILL reach the caller:
+        // pre-Done sessions queued during planning are now safely marked
+        for &i in &report.finished {
+            sessions[i].reported = true;
+        }
+
+        // sample + stop-check inside the round
+        let mut li = 0usize;
+        for (k, sp) in spans.iter().enumerate() {
+            let sess = &mut sessions[planned[k]];
+            if let Phase::Prefill { pos } = sess.phase {
+                let new_pos = pos + sp.len;
+                sess.phase = if new_pos == sess.feed.len() {
+                    Phase::Decode
+                } else {
+                    Phase::Prefill { pos: new_pos }
+                };
+            }
+            if need[k] {
+                let lg = &mut logits[li];
+                li += 1;
+                if sess.produced >= sess.max_tokens {
+                    // max_tokens == 0: never sample
+                    sess.phase = Phase::Done { reason: FinishReason::MaxTokens };
+                } else {
+                    let tok = sess.sampler.sample(lg);
+                    sess.produced += 1;
+                    sess.last_token = tok;
+                    report.emitted.push(Emission { session: planned[k], token: tok });
+                    if sess.stop_tokens.contains(&tok) {
+                        sess.phase = Phase::Done { reason: FinishReason::Stop(tok) };
+                    } else if sess.produced >= sess.max_tokens {
+                        sess.phase = Phase::Done { reason: FinishReason::MaxTokens };
+                    }
+                }
+            }
+            if sess.is_done() && !sess.reported {
+                sess.reported = true;
+                report.finished.push(planned[k]);
+            }
+        }
+
+        self.metrics.inc("session_rounds", 1);
+        self.metrics.inc("round_weight_bytes", report.round_weight_bytes);
+        self.metrics.inc("round_prefill_tokens", report.prefill_tokens as u64);
+        self.metrics.inc("round_decode_tokens", report.decode_tokens as u64);
+        self.metrics.observe("round_secs", round.elapsed_secs());
+        Ok(report)
+    }
+
+    /// Drive `sess` until it finishes, returning every emitted token —
+    /// the shared loop under [`Self::generate`], the CLI and the exp
+    /// drivers (the coordinator drives rounds itself to multiplex
+    /// sessions).
+    pub fn run_session(&mut self, sess: &mut Session) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(sess.max_tokens);
+        while !sess.is_done() {
+            let report = self.step_round(std::slice::from_mut(sess))?;
+            out.extend(report.emitted.iter().map(|e| e.token));
+            self.metrics.inc("tokens_generated", report.emitted.len() as u64);
+        }
+        Ok(out)
+    }
+
+    /// Teacher-forced sequence prefill for one state: advance over
+    /// `tokens` in fused chunks of `cfg.prefill_chunk` and return the
+    /// final position's logits.  Bit-identical to [`Self::forward_hidden`]
+    /// per token plus [`Self::head_logits`] on the last.
+    pub fn forward_sequence(&mut self, tokens: &[u32], state: &mut RwkvState) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "forward_sequence needs at least one token");
+        if self.xla.is_some() {
+            for &t in &tokens[..tokens.len() - 1] {
+                self.forward_hidden(t, state)?;
+            }
+            return self.forward_token(tokens[tokens.len() - 1], state);
+        }
+        let chunk = self.cfg.prefill_chunk.max(1);
+        let mut states = [std::mem::replace(state, RwkvState::zero(0, 0, 1, 1))];
+        let mut result: Result<Vec<f32>> = Err(anyhow::anyhow!("empty sequence"));
+        let mut pos = 0usize;
+        while pos < tokens.len() {
+            let take = chunk.min(tokens.len() - pos);
+            let last = pos + take == tokens.len();
+            let spans = [SegSpan { sess: 0, start: 0, len: take }];
+            result = self
+                .forward_segments(&tokens[pos..pos + take], &spans, &mut states, &[last])
+                .map(|(mut lg, _)| if last { lg.remove(0) } else { Vec::new() });
+            if result.is_err() {
+                break;
+            }
+            pos += take;
+        }
+        let [st] = states;
+        *state = st;
+        result
+    }
+
+    /// XLA fallback for [`Self::step_round`]: the session API stays the
+    /// single entry point, but segments step token-by-token through the
+    /// per-slot path (no fused kernels on that backend).
+    fn step_segments_sequential(
+        &mut self,
+        tokens: &[u32],
+        spans: &[SegSpan],
+        states: &mut [RwkvState],
+        need_logits: &[bool],
+    ) -> Result<(Vec<Vec<f32>>, u64)> {
+        let mut logits_out: Vec<Vec<f32>> = Vec::new();
+        for (k, sp) in spans.iter().enumerate() {
+            let st = &mut states[sp.sess];
+            for t in 0..sp.len {
+                let tok = tokens[sp.start + t];
+                if t + 1 == sp.len && need_logits[k] {
+                    let hidden = self.forward_hidden(tok, st)?;
+                    logits_out.push(self.head_logits(&hidden)?);
+                } else {
+                    self.forward_hidden(tok, st)?;
+                }
+            }
+        }
+        Ok((logits_out, 0))
+    }
+}

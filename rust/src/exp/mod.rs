@@ -16,6 +16,7 @@ use anyhow::{bail, Result};
 use crate::cli::Args;
 use crate::config::{EngineConfig, LoadStrategy};
 use crate::engine::sampler::Sampler;
+use crate::engine::session::Session;
 use crate::engine::RwkvEngine;
 use crate::json::Value;
 
@@ -116,16 +117,23 @@ pub fn tasks_path(args: &Args) -> PathBuf {
     artifacts_dir(args).join("data").join("tasks.json")
 }
 
+/// Drive one session to completion through the serving entry point
+/// (`RwkvEngine::step_round`) — the exp drivers measure the same fused
+/// prefill + decode rounds the coordinator runs.
+pub fn run_session(engine: &mut RwkvEngine, prompt: &[u32], n: usize, seed: u64) -> Result<Vec<u32>> {
+    let mut sess = Session::new(engine, seed, prompt);
+    sess.max_tokens = n;
+    sess.sampler = Sampler::new(0.8, 0.95, seed);
+    engine.run_session(&mut sess)
+}
+
 /// Generate `n` tokens after a short prompt; returns (tps, engine).
 pub fn measure_tps(mut engine: RwkvEngine, args: &Args, n: usize) -> Result<(f64, RwkvEngine)> {
     let prompt = corpus_prompt(args, 16)?;
-    let mut sampler = Sampler::new(0.8, 0.95, 42);
-    let mut state = engine.new_state();
     // warmup + prefill
-    engine.generate(&prompt, 4, &mut sampler, &mut state)?;
+    run_session(&mut engine, &prompt, 4, 42)?;
     let t = crate::util::Stopwatch::start();
-    let mut state = engine.new_state();
-    engine.generate(&prompt, n, &mut sampler, &mut state)?;
+    run_session(&mut engine, &prompt, n, 42)?;
     let secs = t.elapsed_secs();
     Ok(((n as f64) / secs, engine))
 }
@@ -150,9 +158,7 @@ pub fn peak_after_generation(
     cfg.strategy = strategy;
     let mut engine = RwkvEngine::load(cfg)?;
     let prompt = corpus_prompt(args, 16)?;
-    let mut sampler = Sampler::new(0.8, 0.95, 7);
-    let mut state = engine.new_state();
-    engine.generate(&prompt, n, &mut sampler, &mut state)?;
+    run_session(&mut engine, &prompt, n, 7)?;
     let (_, peak) = engine.memory_report();
     Ok((peak, engine))
 }

@@ -6,17 +6,23 @@
 //! inventory and EXPERIMENTS.md for the paper-vs-measured results.
 //!
 //! Layer map:
-//! * [`tensor`] — f32/f16/int8/1-bit matvec kernels (the ARM-NEON-kernel
-//!   analog; §4 of the paper) and small math ops.
+//! * [`tensor`] — f32/f16/int8/1-bit matvec + multi-vector matmat kernels
+//!   (the ARM-NEON-kernel analog; §4 of the paper) and small math ops.
 //! * [`io`] — the `.rkv` checkpoint format (mmap reader) + JSON manifests.
 //! * [`engine`] — the inference engine: weight store with loading
 //!   strategies, sparse FFN (§3.2), hierarchical head (§3.3), embedding
 //!   cache (§3.3), native and XLA/PJRT backends.
+//! * [`engine::session`] — the serving surface: a `Session` owns state +
+//!   sampler + generation params; `RwkvEngine::step_round` advances any
+//!   mix of chunked-prefill and decode sessions through ONE
+//!   weight-streaming pass, sampling and stop-checking inside the round.
 //! * [`runtime`] — PJRT wrapper executing the AOT-lowered HLO components
 //!   (L2 jax + L1 Pallas, compiled at `make artifacts` time).
-//! * [`coordinator`] — request router + dynamic batcher + scheduler.
+//! * [`coordinator`] — request router + dynamic batcher + the round loop
+//!   over sessions; `submit` returns a cancellable `RequestHandle`.
 //! * [`server`] — a small TCP serving front-end (edge deployment demo).
-//! * [`exp`] — drivers that regenerate every table/figure of the paper.
+//! * [`exp`] — drivers that regenerate every table/figure of the paper,
+//!   riding the same session rounds as the serving stack.
 
 // Kernel-style code: indexed loops are deliberate (they are the shapes
 // LLVM auto-vectorizes) and hot-path functions thread several scratch

@@ -16,6 +16,7 @@ use rwkv_lite::cli::{self, flag, opt, opt_def, Args};
 use rwkv_lite::config::{Backend, EngineConfig, LoadStrategy};
 use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator};
 use rwkv_lite::engine::sampler::Sampler;
+use rwkv_lite::engine::session::Session;
 use rwkv_lite::engine::RwkvEngine;
 use rwkv_lite::server::Server;
 use rwkv_lite::text::Vocab;
@@ -31,9 +32,11 @@ const SPECS: &[cli::OptSpec] = &[
     flag("no-hh", "disable hierarchical head"),
     flag("no-emb-cache", "disable embedding cache"),
     opt("prompt", "prompt text (generate)"),
+    opt("stop", "comma-separated stop words (generate)"),
     opt_def("n", "tokens to generate / measure", "64"),
     opt_def("temperature", "sampling temperature (0 = greedy)", "0.8"),
     opt_def("top-p", "nucleus mass", "0.95"),
+    opt_def("prefill-chunk", "prompt tokens fused per round", "8"),
     opt_def("limit", "max examples per eval task", "0"),
     opt_def("addr", "listen address (serve)", "127.0.0.1:7070"),
     opt_def("batch", "max dynamic batch size (serve)", "8"),
@@ -71,6 +74,7 @@ fn engine_config(a: &Args) -> Result<EngineConfig> {
     }
     cfg.strategy = LoadStrategy::parse(a.get_or("strategy", "full"))?;
     cfg.backend = Backend::parse(a.get_or("backend", "native"))?;
+    cfg.prefill_chunk = a.usize_or("prefill-chunk", 8)?;
     cfg.seed = a.u64_or("seed", 0)?;
     Ok(cfg)
 }
@@ -90,22 +94,29 @@ fn cmd_generate(a: &Args) -> Result<()> {
     let prompt_text = a.get("prompt").unwrap_or("the");
     let prompt = v.encode(prompt_text);
     let n = a.usize_or("n", 64)?;
-    let mut sampler = Sampler::new(
+    // one session driven round-by-round through the serving entry point
+    let mut sess = Session::new(&engine, 0, &prompt);
+    sess.max_tokens = n;
+    sess.sampler = Sampler::new(
         a.f32_or("temperature", 0.8)?,
         a.f32_or("top-p", 0.95)?,
         a.u64_or("seed", 42)?,
     );
-    let mut state = engine.new_state();
+    if let Some(stops) = a.get("stop") {
+        sess.stop_tokens =
+            v.stop_token_ids(stops.split(',').map(|w| w.trim()).filter(|w| !w.is_empty()))?;
+    }
     let t = rwkv_lite::util::Stopwatch::start();
-    let out = engine.generate(&prompt, n, &mut sampler, &mut state)?;
+    let out = engine.run_session(&mut sess)?;
     let secs = t.elapsed_secs();
     println!("{} {}", prompt_text, v.decode(&out));
     let (cur, peak) = engine.memory_report();
     eprintln!(
-        "\n[{} tokens in {:.2}s = {:.1} tok/s | resident {} peak {}]",
+        "\n[{} tokens in {:.2}s = {:.1} tok/s | finish: {} | resident {} peak {}]",
         out.len(),
         secs,
         out.len() as f64 / secs,
+        sess.finish_reason().map(|r| r.name()).unwrap_or("?"),
         rwkv_lite::util::fmt_bytes(cur),
         rwkv_lite::util::fmt_bytes(peak),
     );

@@ -1,11 +1,20 @@
 //! TCP serving front-end (S22): newline-delimited JSON protocol.
 //!
-//! Request:  {"prompt": "<text>", "max_tokens": 32, "temperature": 0.8}
+//! Request:  {"prompt": "<text>", "max_tokens": 32, "temperature": 0.8,
+//!            "top_p": 0.95, "stop": ["word", ...], "seed": 7}
+//!           (`stop` words are vocab-encoded into stop token ids; unknown
+//!           words are rejected with an error line.  `seed` pins the
+//!           sampler for cross-run determinism — omitted, the request id
+//!           seeds it; valid seeds are integers in [0, 2^53), anything
+//!           else is treated as absent since JSON numbers are f64)
 //! Response: {"token": "<word>"} per generated token, then
-//!           {"done": true, "tokens": n, "seconds": s, "tps": r}
+//!           {"done": true, "tokens": n, "seconds": s, "tps": r,
+//!            "reason": "length"|"stop"|"cancelled"}
 //!
 //! Thread-per-connection feeding the single coordinator (which owns the
-//! engine and batches across connections).
+//! engine and advances all connections' sessions in fused rounds).  A
+//! dropped connection cancels its session: the coordinator sees the dead
+//! stream and retires the slot instead of decoding into the void.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -83,12 +92,33 @@ impl Server {
                 }
             };
             let prompt_text = v.str_at(&["prompt"]).unwrap_or("").to_string();
+            let stop_words: Vec<&str> = v
+                .get("stop")
+                .and_then(|s| s.as_arr())
+                .map(|ws| ws.iter().filter_map(|w| w.as_str()).collect())
+                .unwrap_or_default();
+            let stop_tokens = match self.vocab.stop_token_ids(stop_words) {
+                Ok(t) => t,
+                Err(e) => {
+                    let msg = json::obj(vec![("error", json::s(&e.to_string()))]);
+                    writeln!(writer, "{}", msg.to_string())?;
+                    continue;
+                }
+            };
             let req = Request {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 prompt: self.vocab.encode(&prompt_text),
                 max_tokens: v.f64_at(&["max_tokens"]).unwrap_or(32.0) as usize,
                 temperature: v.f64_at(&["temperature"]).unwrap_or(0.0) as f32,
                 top_p: v.f64_at(&["top_p"]).unwrap_or(1.0) as f32,
+                stop_tokens,
+                // only integers in [0, 2^53) round-trip exactly through
+                // JSON f64; anything else is treated as absent rather than
+                // silently saturating/truncating into seed collisions
+                seed: v
+                    .f64_at(&["seed"])
+                    .filter(|&s| s >= 0.0 && s < 9007199254740992.0 && s.fract() == 0.0)
+                    .map(|s| s as u64),
             };
             let rx = self.coordinator.submit(req);
             for ev in rx {
@@ -97,12 +127,13 @@ impl Server {
                         let msg = json::obj(vec![("token", json::s(self.vocab.word(token)))]);
                         writeln!(writer, "{}", msg.to_string())?;
                     }
-                    Event::Done { tokens, seconds } => {
+                    Event::Done { tokens, seconds, reason } => {
                         let msg = json::obj(vec![
                             ("done", Value::Bool(true)),
                             ("tokens", json::num(tokens as f64)),
                             ("seconds", json::num(seconds)),
                             ("tps", json::num(tokens as f64 / seconds.max(1e-9))),
+                            ("reason", json::s(reason.name())),
                         ]);
                         writeln!(writer, "{}", msg.to_string())?;
                         break;
@@ -129,6 +160,8 @@ pub struct Completion {
     pub tokens: usize,
     pub seconds: f64,
     pub tps: f64,
+    /// Finish reason wire name ("length" | "stop" | "cancelled").
+    pub reason: String,
 }
 
 impl Client {
@@ -161,6 +194,7 @@ impl Client {
                 out.tokens = v.f64_at(&["tokens"]).unwrap_or(0.0) as usize;
                 out.seconds = v.f64_at(&["seconds"]).unwrap_or(0.0);
                 out.tps = v.f64_at(&["tps"]).unwrap_or(0.0);
+                out.reason = v.str_at(&["reason"]).unwrap_or("").to_string();
                 break;
             } else if let Some(e) = v.str_at(&["error"]) {
                 anyhow::bail!("server error: {e}");

@@ -73,6 +73,26 @@ impl Vocab {
             .collect::<Vec<_>>()
             .join(" ")
     }
+
+    /// Encode stop words into stop token ids, rejecting words not in the
+    /// vocabulary — those would encode to [`UNK`] and end a stream on ANY
+    /// out-of-vocab emission.  Literal `<unk>` is allowed.  Shared by the
+    /// server protocol and the CLI `--stop` flag so the policy cannot
+    /// drift between front-ends.
+    pub fn stop_token_ids<'a, I>(&self, words: I) -> Result<Vec<u32>>
+    where
+        I: IntoIterator<Item = &'a str>,
+    {
+        let mut out = Vec::new();
+        for w in words {
+            let id = self.id(w);
+            if id == UNK && w != "<unk>" {
+                anyhow::bail!("stop word '{w}' is not in the vocabulary");
+            }
+            out.push(id);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]

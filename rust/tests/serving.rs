@@ -1,12 +1,18 @@
-//! Serving-stack integration: coordinator batching + TCP server/client.
+//! Serving-stack integration: session-round coordinator + TCP
+//! server/client.  Coordinator behaviour (cancellation, stop tokens,
+//! explicit seeds) runs on synthetic checkpoints so it is tier-1
+//! coverage; the end-to-end TCP tests still require `make artifacts`.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use rwkv_lite::config::EngineConfig;
-use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator, Event, Request};
+use rwkv_lite::coordinator::{
+    batcher::BatchPolicy, Coordinator, Event, FinishReason, Request,
+};
 use rwkv_lite::engine::RwkvEngine;
 use rwkv_lite::server::{Client, Server};
+use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
 use rwkv_lite::text::Vocab;
 
 fn artifacts() -> PathBuf {
@@ -25,6 +31,39 @@ fn coordinator(model: &'static str, batch: usize) -> Coordinator {
     )
 }
 
+/// Coordinator over a synthetic checkpoint (runs without artifacts).
+fn synth_coordinator(tag: &str, batch: usize) -> (Coordinator, PathBuf) {
+    synth_coordinator_spec(tag, batch, SynthSpec::tiny())
+}
+
+/// Like [`synth_coordinator`] but with a caller-chosen model shape — the
+/// cancellation tests use a bigger model so decode rounds take real time
+/// and the producer cannot outrun the consumer by hundreds of tokens.
+fn synth_coordinator_spec(tag: &str, batch: usize, spec: SynthSpec) -> (Coordinator, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("rwkv-serve-synth-{}-{}", tag, std::process::id()));
+    write_synth_rwkv(&dir, "m", &spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = spec.predictors;
+    cfg.hier_head = spec.hier_head;
+    let c = Coordinator::spawn(
+        move || RwkvEngine::load(cfg),
+        BatchPolicy { max_batch: batch, window_ms: 1 },
+    );
+    (c, dir)
+}
+
+/// A medium-shaped synthetic model: one decode round costs enough wall
+/// time that a consumer thread acting within a few rounds is safe.
+fn slow_spec() -> SynthSpec {
+    let mut spec = SynthSpec::tiny();
+    spec.layers = 6;
+    spec.heads = 12;
+    spec.head_size = 16; // D = 192
+    spec.ffn = 672;
+    spec.vocab = 1024;
+    spec
+}
+
 #[test]
 fn single_request_completes() {
     if !have("rwkv-ours-tiny") {
@@ -37,8 +76,7 @@ fn single_request_completes() {
             id: 1,
             prompt: vec![2, 5, 6],
             max_tokens: 8,
-            temperature: 0.0,
-            top_p: 1.0,
+            ..Request::default()
         })
         .unwrap();
     assert!(!out.is_empty() && out.len() <= 8);
@@ -60,6 +98,7 @@ fn concurrent_requests_all_complete_and_batch() {
             max_tokens: 12,
             temperature: 0.7,
             top_p: 0.95,
+            ..Request::default()
         }));
     }
     let mut done = 0;
@@ -87,23 +126,211 @@ fn concurrent_requests_all_complete_and_batch() {
 }
 
 #[test]
-fn deterministic_same_seed_same_output() {
-    if !have("rwkv-ours-tiny") {
-        eprintln!("SKIP: artifacts missing");
-        return;
-    }
-    let c = coordinator("rwkv-ours-tiny", 2);
+fn deterministic_same_id_same_output() {
+    let (c, dir) = synth_coordinator("det-id", 2);
     let req = |id| Request {
         id,
         prompt: vec![2, 7, 8],
         max_tokens: 10,
         temperature: 0.9,
         top_p: 0.9,
+        ..Request::default()
     };
-    // sampler seeded by request id: same id -> same tokens
+    // without an explicit seed the sampler falls back to the request id:
+    // same id -> same tokens
     let a = c.generate_blocking(req(42)).unwrap();
     let b = c.generate_blocking(req(42)).unwrap();
     assert_eq!(a, b);
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn explicit_seed_decouples_determinism_from_request_id() {
+    let (c, dir) = synth_coordinator("det-seed", 2);
+    let req = |id, seed| Request {
+        id,
+        prompt: vec![2, 7, 8],
+        max_tokens: 10,
+        temperature: 0.9,
+        top_p: 0.9,
+        seed,
+        ..Request::default()
+    };
+    // DIFFERENT ids, same explicit seed -> identical streams
+    let a = c.generate_blocking(req(1, Some(777))).unwrap();
+    let b = c.generate_blocking(req(2, Some(777))).unwrap();
+    assert_eq!(a, b, "explicit seed must pin the stream across request ids");
+    assert!(!a.is_empty());
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Find a prompt whose deterministic greedy continuation is at least
+/// `need` tokens long (i.e. EOS-free that far) — keeps the cancellation /
+/// stop tests deterministic on synthetic models, where greedy streams can
+/// hit EOS by chance.
+fn eos_free_prompt(c: &Coordinator, need: usize) -> Option<Vec<u32>> {
+    let candidates: [&[u32]; 8] = [
+        &[2, 11, 30],
+        &[2, 5],
+        &[2, 9],
+        &[4, 40, 4],
+        &[7, 3, 19],
+        &[2, 50, 61],
+        &[2, 33, 8, 21],
+        &[5, 77],
+    ];
+    for (i, p) in candidates.iter().enumerate() {
+        let out = c
+            .generate_blocking(Request {
+                id: 900 + i as u64,
+                prompt: p.to_vec(),
+                max_tokens: need,
+                ..Request::default()
+            })
+            .unwrap();
+        if out.len() == need {
+            return Some(p.to_vec());
+        }
+    }
+    None
+}
+
+#[test]
+fn stop_tokens_end_the_stream() {
+    let (c, dir) = synth_coordinator("stop", 2);
+    let Some(prompt) = eos_free_prompt(&c, 8) else {
+        eprintln!("SKIP: no EOS-free greedy stream on this synth model");
+        std::fs::remove_dir_all(&dir).ok();
+        return;
+    };
+    let base = Request { id: 9, prompt, max_tokens: 8, ..Request::default() };
+    // greedy is deterministic: learn the stream, then stop on its 3rd token
+    let stream = c.generate_blocking(base.clone()).unwrap();
+    assert!(stream.len() >= 3, "need a few tokens to stop on");
+    let stop = stream[2];
+    let first = stream.iter().position(|&t| t == stop).unwrap();
+    let handle = c.submit(Request { id: 10, stop_tokens: vec![stop], max_tokens: 64, ..base });
+    let mut out = Vec::new();
+    let mut reason = None;
+    for ev in handle {
+        match ev {
+            Event::Token { token } => out.push(token),
+            Event::Done { reason: r, .. } => {
+                reason = Some(r);
+                break;
+            }
+            Event::Error { message } => panic!("{message}"),
+        }
+    }
+    assert_eq!(out, stream[..=first].to_vec(), "stream ends AT the stop token");
+    assert_eq!(reason, Some(FinishReason::Stop(stop)));
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cancel_handle_retires_session() {
+    let (c, dir) = synth_coordinator_spec("cancel", 2, slow_spec());
+    // the producer can outrun the consumer before cancel lands, so the
+    // greedy stream must stay EOS-free well past the cancellation point
+    let Some(prompt) = eos_free_prompt(&c, 256) else {
+        eprintln!("SKIP: no EOS-free greedy stream on this synth model");
+        std::fs::remove_dir_all(&dir).ok();
+        return;
+    };
+    let done_before = c.metrics.counter("requests_completed");
+    let handle = c.submit(Request {
+        id: 1,
+        prompt,
+        max_tokens: 100_000, // would decode for a long time without cancel
+        ..Request::default()
+    });
+    let mut seen = 0;
+    let mut reason = None;
+    for ev in handle.iter() {
+        match ev {
+            Event::Token { .. } => {
+                seen += 1;
+                if seen == 3 {
+                    handle.cancel();
+                }
+            }
+            Event::Done { reason: r, .. } => {
+                reason = Some(r);
+                break;
+            }
+            Event::Error { message } => panic!("{message}"),
+        }
+    }
+    assert!(seen >= 3, "got {seen} tokens before cancel");
+    assert_eq!(reason, Some(FinishReason::Cancelled));
+    assert_eq!(c.metrics.counter("requests_cancelled"), 1);
+    assert_eq!(c.metrics.counter("requests_completed"), done_before);
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn dropped_client_is_detected_and_cancelled() {
+    let (c, dir) = synth_coordinator_spec("gone", 2, slow_spec());
+    let Some(prompt) = eos_free_prompt(&c, 256) else {
+        eprintln!("SKIP: no EOS-free greedy stream on this synth model");
+        std::fs::remove_dir_all(&dir).ok();
+        return;
+    };
+    let handle = c.submit(Request {
+        id: 1,
+        prompt,
+        max_tokens: 100_000,
+        ..Request::default()
+    });
+    // consume a couple of tokens, then walk away mid-stream
+    let mut seen = 0;
+    for ev in handle.iter() {
+        if matches!(ev, Event::Token { .. }) {
+            seen += 1;
+            if seen == 2 {
+                break;
+            }
+        }
+    }
+    drop(handle);
+    // the coordinator notices the dead stream on the next emitted token
+    // and retires the session instead of decoding into the void
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    while c.metrics.counter("requests_cancelled") == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "coordinator never cancelled the orphaned session"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(c.metrics.counter("requests_cancelled"), 1);
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prefill_rounds_are_chunked_not_per_token() {
+    let (c, dir) = synth_coordinator("chunked", 2);
+    // a 30-token prompt with prefill_chunk=8 needs ceil(31/8)=4 prefill
+    // rounds; the old per-token loop needed 31
+    let prompt: Vec<u32> = (0..30).map(|i| (4 + i) % 90).collect();
+    let out = c
+        .generate_blocking(Request { id: 1, prompt, max_tokens: 2, ..Request::default() })
+        .unwrap();
+    assert!(!out.is_empty());
+    let prefill = c.metrics.counter("prefill_tokens");
+    let rounds = c.metrics.counter("rounds");
+    assert_eq!(prefill, 31, "BOS + 30 prompt tokens prefilled");
+    assert!(
+        rounds <= 6,
+        "31 prefill tokens + 2 decode tokens must fit in ~5 chunked rounds, got {rounds}"
+    );
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -122,6 +349,7 @@ fn tcp_server_round_trip() {
     let completion = client.complete("the", 8, 0.0).unwrap();
     assert!(completion.tokens > 0);
     assert!(!completion.text.is_empty());
+    assert!(!completion.reason.is_empty(), "done line carries a finish reason");
     assert!(completion.tps > 0.0);
     drop(client);
     handle.join().unwrap().unwrap();
