@@ -10,11 +10,17 @@
 //! chunk: weight-GB per prompt token falls ~1/T vs the old one-token-
 //! per-round prompt loop (chunk=1 column).
 //!
+//! Part 3 — intra-round parallelism: a threads × batch sweep at the
+//! engine level, showing aggregate tok/s rising with threads at fixed B
+//! (bit-identical output — the knob only moves compute across cores)
+//! plus the per-phase round split (wkv / matmul / head).
+//!
 //! Run: `cargo bench --bench serving_throughput` (artifacts required;
 //! falls back to a synthetic checkpoint when they are missing so the
 //! bench is always runnable).  `-- --smoke` runs a seconds-long variant
 //! (B<=2, few tokens) used by CI to exercise the serving path in release
-//! mode.
+//! mode; `-- --threads N` pins the thread sweep to {1, N} and runs the
+//! decode/prefill sweeps with N compute threads (CI smokes `--threads 4`).
 
 use std::path::{Path, PathBuf};
 
@@ -26,7 +32,27 @@ use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
 use rwkv_lite::util::Stopwatch;
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    // `--threads N` / `--threads=N`: pin the compute-thread count for all
+    // sweeps (0 = all cores); invalid values abort instead of silently
+    // running single-threaded
+    let pinned: Option<usize> = args
+        .iter()
+        .enumerate()
+        .find_map(|(i, a)| {
+            a.strip_prefix("--threads=").map(str::to_string).or_else(|| {
+                (a == "--threads").then(|| args.get(i + 1).cloned().unwrap_or_default())
+            })
+        })
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("--threads needs a number, got '{v}'")))
+        .map(|n: usize| {
+            if n == 0 {
+                std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+            } else {
+                n
+            }
+        });
     let mut model = "rwkv-ours-small".to_string();
     let mut artifacts = PathBuf::from("artifacts");
     let mut synth_guard: Option<PathBuf> = None;
@@ -48,8 +74,10 @@ fn main() {
         synth_guard = Some(dir);
     }
 
-    decode_sweep(&model, &artifacts, smoke);
-    prefill_sweep(&model, &artifacts, smoke);
+    let threads = pinned.unwrap_or(1);
+    decode_sweep(&model, &artifacts, smoke, threads);
+    prefill_sweep(&model, &artifacts, smoke, threads);
+    thread_sweep(&model, &artifacts, smoke, pinned);
 
     if let Some(dir) = synth_guard {
         std::fs::remove_dir_all(&dir).ok();
@@ -57,16 +85,19 @@ fn main() {
 }
 
 /// Aggregate decode throughput vs dynamic batch size (coordinator path).
-fn decode_sweep(model: &str, artifacts: &Path, smoke: bool) {
+fn decode_sweep(model: &str, artifacts: &Path, smoke: bool, threads: usize) {
     let (batches, max_tokens, req_mult): (&[usize], usize, usize) =
         if smoke { (&[1, 2], 6, 2) } else { (&[1, 2, 4, 8], 24, 3) };
-    println!("serving throughput vs batch size ({model}, {max_tokens} tok/request)\n");
+    println!(
+        "serving throughput vs batch size ({model}, {max_tokens} tok/request, {threads} threads)\n"
+    );
     println!(
         "{:>6} {:>10} {:>14} {:>12} {:>14} {:>14}",
         "batch", "requests", "agg tok/s", "p50 lat (s)", "GB/round", "rounds"
     );
     for &batch in batches {
-        let cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+        let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+        cfg.threads = threads;
         let coordinator = Coordinator::spawn(
             move || RwkvEngine::load(cfg),
             BatchPolicy { max_batch: batch, window_ms: 2 },
@@ -117,7 +148,7 @@ fn decode_sweep(model: &str, artifacts: &Path, smoke: bool) {
 
 /// Prompt-heavy sweep: weight bytes per prompt token vs `prefill_chunk`
 /// (engine-level session rounds; chunk=1 is the old per-token loop).
-fn prefill_sweep(model: &str, artifacts: &Path, smoke: bool) {
+fn prefill_sweep(model: &str, artifacts: &Path, smoke: bool, threads: usize) {
     let (chunks, p, prompt_len): (&[usize], usize, usize) =
         if smoke { (&[1, 8], 2, 24) } else { (&[1, 2, 4, 8, 16], 4, 96) };
     println!(
@@ -130,6 +161,7 @@ fn prefill_sweep(model: &str, artifacts: &Path, smoke: bool) {
     for &chunk in chunks {
         let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
         cfg.prefill_chunk = chunk;
+        cfg.threads = threads;
         let mut engine = RwkvEngine::load(cfg).expect("load engine");
         // token ids stay small so the prompt is valid for any vocab size
         let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| 2 + (i * 7) % 64).collect();
@@ -161,4 +193,71 @@ fn prefill_sweep(model: &str, artifacts: &Path, smoke: bool) {
         );
     }
     println!("\nGB/prompt-token falls ~1/chunk: one weight pass serves the whole chunk");
+}
+
+/// Intra-round parallelism: aggregate decode tok/s over a threads × batch
+/// grid (engine-level rounds), with the per-phase round split.  Output is
+/// bit-identical across the threads axis — only the wall clock moves.
+fn thread_sweep(model: &str, artifacts: &Path, smoke: bool, pinned: Option<usize>) {
+    let threads_list: Vec<usize> = match pinned {
+        Some(n) if n > 1 => vec![1, n],
+        Some(_) => vec![1],
+        None if smoke => vec![1, 2],
+        None => vec![1, 2, 4],
+    };
+    let (batches, steps): (&[usize], usize) = if smoke { (&[2], 8) } else { (&[1, 4, 8], 32) };
+    println!("\nintra-round parallelism: decode tok/s over threads x batch\n");
+    println!(
+        "{:>8} {:>6} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "threads", "batch", "agg tok/s", "wkv ms", "matmul ms", "head ms", "round ms"
+    );
+    for &batch in batches {
+        for &threads in &threads_list {
+            let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+            cfg.threads = threads;
+            let mut engine = RwkvEngine::load(cfg).expect("load engine");
+            let mut sessions: Vec<Session> = (0..batch)
+                .map(|i| {
+                    let mut s = Session::new(&engine, i as u64, &[2, 10 + i as u32]);
+                    s.max_tokens = steps + 8; // never finishes inside the loop
+                    s
+                })
+                .collect();
+            // move every session into Decode (consume the tiny prompts)
+            while sessions
+                .iter()
+                .any(|s| !matches!(s.phase(), rwkv_lite::engine::session::Phase::Decode))
+            {
+                engine.step_round(&mut sessions).expect("prefill round");
+            }
+            // phase means must cover ONLY the timed decode rounds below,
+            // not the prefill warm-up rounds already observed above
+            let skip = engine.metrics.timings("round_secs").len();
+            let wall = Stopwatch::start();
+            for _ in 0..steps {
+                engine.step_round(&mut sessions).expect("decode round");
+            }
+            let secs = wall.elapsed_secs();
+            let ms = |name: &str| {
+                let t = engine.metrics.timings(name);
+                let t = &t[skip.min(t.len())..];
+                if t.is_empty() {
+                    0.0
+                } else {
+                    t.iter().sum::<f64>() / t.len() as f64 * 1e3
+                }
+            };
+            println!(
+                "{:>8} {:>6} {:>12.1} {:>12.3} {:>12.3} {:>12.3} {:>12.3}",
+                threads,
+                batch,
+                (steps * batch) as f64 / secs,
+                ms("round_wkv_secs"),
+                ms("round_matmul_secs"),
+                ms("round_head_secs"),
+                ms("round_secs"),
+            );
+        }
+    }
+    println!("\ntok/s rises with threads at fixed batch; output is bit-identical across rows");
 }

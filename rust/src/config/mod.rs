@@ -75,6 +75,11 @@ pub struct EngineConfig {
     /// Max prompt tokens a prefill session advances per scheduling round
     /// (the `(B', T)` fused-prefill chunk; clamped to >= 1 at use).
     pub prefill_chunk: usize,
+    /// Intra-round compute lanes (sharded kernels + per-slot WKV /
+    /// predictor): `0` = one lane per available core, `1` =
+    /// single-threaded, `k` = `k` lanes.  Rounds are bit-identical for
+    /// every value — this knob only trades cores for latency.
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -91,6 +96,7 @@ impl Default for EngineConfig {
             emb_cache_capacity: 0,
             hh_p_min: 0.0,
             prefill_chunk: 8,
+            threads: 0,
             seed: 0,
         }
     }
@@ -136,6 +142,7 @@ impl EngineConfig {
             ("emb_cache_capacity", json::num(self.emb_cache_capacity as f64)),
             ("hh_p_min", json::num(self.hh_p_min as f64)),
             ("prefill_chunk", json::num(self.prefill_chunk as f64)),
+            ("threads", json::num(self.threads as f64)),
             ("seed", json::num(self.seed as f64)),
         ])
     }
@@ -161,6 +168,7 @@ impl EngineConfig {
         c.emb_cache_capacity = v.f64_at(&["emb_cache_capacity"]).unwrap_or(0.0) as usize;
         c.hh_p_min = v.f64_at(&["hh_p_min"]).unwrap_or(0.0) as f32;
         c.prefill_chunk = v.f64_at(&["prefill_chunk"]).unwrap_or(8.0) as usize;
+        c.threads = v.f64_at(&["threads"]).unwrap_or(0.0) as usize;
         c.seed = v.f64_at(&["seed"]).unwrap_or(0.0) as u64;
         Ok(c)
     }
@@ -174,10 +182,12 @@ mod tests {
     fn json_round_trip() {
         let mut c = EngineConfig::all_techniques("rwkv-ours-small", PathBuf::from("artifacts"));
         c.strategy = LoadStrategy::Layerwise;
+        c.threads = 4;
         let v = c.to_json();
         let c2 = EngineConfig::from_json(&v).unwrap();
         assert_eq!(c2.model, c.model);
         assert_eq!(c2.strategy, c.strategy);
+        assert_eq!(c2.threads, 4);
         assert!(c2.sparse_ffn && c2.hier_head && c2.emb_cache);
     }
 

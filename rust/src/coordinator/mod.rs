@@ -25,7 +25,12 @@
 //! `requests_cancelled`, `tokens_out`.
 //!
 //! Topology: N client threads -> mpsc -> coordinator thread (owns the
-//! engine) -> per-request streaming channels.
+//! engine) -> per-request streaming channels.  Intra-round compute
+//! parallelism lives BELOW this loop: the engine factory is handed a
+//! [`crate::pool::ThreadPool`] handle (`RwkvEngine::load_with_pool`, the
+//! `--threads` knob) and every `step_round` fans its kernels, per-slot
+//! WKV recurrence and predictor out over those workers — the coordinator
+//! thread stays the only place sessions are mutated between rounds.
 
 pub mod batcher;
 

@@ -21,6 +21,19 @@
 //! The per-slot path ([`RwkvEngine::forward_token`]) and the one-token
 //! batched path ([`RwkvEngine::forward_tokens_batch`]) remain as thin
 //! views of the same math; every path is bit-identical per slot.
+//!
+//! Intra-round parallelism: with a compute pool ([`crate::pool`], the
+//! `threads` knob) every heavy section of a round fans out across cores —
+//! the weight-streaming matmuls shard over output ranges (each lane
+//! streams a disjoint weight slice), the per-slot WKV recurrence and the
+//! §3.2 predictor shard over segments/rows with per-lane scratch, and the
+//! union-fused sparse FFN shards its two passes over union rows and slots.
+//! Rounds are BIT-IDENTICAL for every `threads` value (enforced by
+//! `tests/thread_equivalence.rs`): sharding never cuts through a
+//! floating-point reduction, it only changes which core computes which
+//! output range.  Per-phase timing lands in the engine registry as
+//! `round_wkv_secs` / `round_matmul_secs` / `round_pred_secs` /
+//! `round_head_secs`.
 
 pub mod emb_cache;
 pub mod hier_head;
@@ -39,8 +52,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{Backend, EngineConfig, LoadStrategy};
 use crate::metrics::{MemTracker, Registry};
+use crate::pool::{Par, SharedSliceMut, ThreadPool};
 use crate::tensor::{
-    group_norm_heads, layer_norm, lerp_shift, matmat_in_out, matmat_rows, matvec_in_out,
+    group_norm_heads, layer_norm, lerp_shift, matmat_in_out_par, matmat_rows_par, matvec_in_out,
     matvec_rows, sigmoid, silu, sqrelu_inplace, Mat,
 };
 use emb_cache::EmbCache;
@@ -69,6 +83,16 @@ pub struct StepStats {
     pub timemix_secs: f64,
     pub chanmix_secs: f64,
     pub head_secs: f64,
+    /// Per-phase split of a fused round (subsets of timemix/chanmix):
+    /// the per-slot WKV recurrence; the weight-streaming matmul blocks
+    /// (`matmul_secs` also covers the elementwise mix math interleaved
+    /// with them — norms, token-shift lerps, activations, FFN stats);
+    /// and the per-row sparsity predictor.  Observed per round as
+    /// `round_wkv_secs` / `round_matmul_secs` / `round_pred_secs` in the
+    /// engine registry (alongside `round_head_secs`).
+    pub wkv_secs: f64,
+    pub matmul_secs: f64,
+    pub pred_secs: f64,
     pub ffn_active: usize,
     pub ffn_total: usize,
     pub head_rows: usize,
@@ -79,6 +103,12 @@ pub struct RwkvEngine {
     pub cfg: EngineConfig,
     pub store: Arc<WeightStore>,
     pub metrics: Registry,
+    /// Intra-round compute pool (`None` == single-threaded).  Rounds are
+    /// bit-identical for every pool size; the pool only changes which
+    /// core computes which output range.
+    pool: Option<Arc<ThreadPool>>,
+    /// Effective compute-lane count (`pool` lanes, or 1).
+    pub threads: usize,
     ln0: LnW,
     ln_out: LnW,
     blocks: Vec<Option<BlockW>>,
@@ -166,17 +196,28 @@ struct BatchScratch {
     att_out: Vec<f32>, // (B, D)
     ffn_out: Vec<f32>, // (B, D)
     rank: Vec<f32>,    // (B, rank) low-rank projection intermediate
-    acc: Vec<f32>,     // matmat kernel scratch (f16 row decode / i8 accum)
-    h: Vec<f32>,       // (B, U) sparse activations or (B, F)/(B, V) dense
-    // per-slot predictor scratch (the predictor itself is per-slot math)
-    pred_n: Vec<f32>,
-    pred_f: Vec<f32>,
-    pred_f2: Vec<f32>,
+    /// Per-LANE matmat kernel scratch (f16 row decode / i8 accumulators):
+    /// sharded kernels hand entry `i` to lane `i`, so no locks sit on the
+    /// hot path.
+    accs: Vec<Vec<f32>>,
+    h: Vec<f32>, // (B, U) sparse activations or (B, F)/(B, V) dense
+    /// Per-LANE predictor scratch (the predictor itself is per-row math
+    /// run across the pool).
+    pred_lanes: Vec<PredScratch>,
     /// Per-slot predicted row sets, reused every layer (no per-layer
     /// clone/realloc — the vectors keep their capacity across rounds).
     slot_idx: Vec<Vec<u32>>,
     union_idx: Vec<u32>,
+    /// Per-lane × per-slot merge cursors for the union-fused sparse FFN.
     cursors: Vec<usize>,
+}
+
+/// One lane's sparsity-predictor scratch (§3.2 MLP + shadow buffers).
+#[derive(Default)]
+struct PredScratch {
+    n: Vec<f32>,
+    f: Vec<f32>,
+    f2: Vec<f32>,
 }
 
 impl BatchScratch {
@@ -194,11 +235,9 @@ impl BatchScratch {
             att_out: Vec::new(),
             ffn_out: Vec::new(),
             rank: Vec::new(),
-            acc: Vec::new(),
+            accs: Vec::new(),
             h: Vec::new(),
-            pred_n: Vec::new(),
-            pred_f: Vec::new(),
-            pred_f2: Vec::new(),
+            pred_lanes: Vec::new(),
             slot_idx: Vec::new(),
             union_idx: Vec::new(),
             cursors: Vec::new(),
@@ -206,8 +245,12 @@ impl BatchScratch {
     }
 
     /// Size every `(B, D)` buffer for an `n`-slot round (exact lengths —
-    /// the matmat kernels infer B from them).
-    fn ensure(&mut self, n: usize, d: usize) {
+    /// the matmat kernels infer B from them) and make sure one scratch
+    /// lane exists per compute lane.
+    fn ensure(&mut self, n: usize, d: usize, lanes: usize) {
+        while self.pred_lanes.len() < lanes {
+            self.pred_lanes.push(PredScratch::default());
+        }
         let len = n * d;
         for buf in [
             &mut self.x,
@@ -320,8 +363,21 @@ fn lerp_shift_seq(
 }
 
 impl RwkvEngine {
-    /// Open a model by name (e.g. "rwkv-ours-small") under `cfg.artifacts`.
+    /// Open a model by name (e.g. "rwkv-ours-small") under `cfg.artifacts`,
+    /// building the intra-round compute pool from `cfg.threads`
+    /// (see [`crate::pool::for_threads`]).
     pub fn load(cfg: EngineConfig) -> Result<Self> {
+        let pool = crate::pool::for_threads(cfg.threads);
+        Self::load_with_pool(cfg, pool)
+    }
+
+    /// Open a model sharing an externally constructed compute pool — the
+    /// serving stack builds ONE pool and threads the handle through
+    /// coordinator/engine construction so every round fans out over the
+    /// same workers.  `None` runs rounds single-threaded (the bit-identical
+    /// reference path).
+    pub fn load_with_pool(cfg: EngineConfig, pool: Option<Arc<ThreadPool>>) -> Result<Self> {
+        let threads = pool.as_ref().map_or(1, |p| p.workers() + 1);
         let manifest_path: PathBuf = cfg
             .artifacts
             .join("models")
@@ -400,6 +456,8 @@ impl RwkvEngine {
             cfg,
             store,
             metrics: Registry::new(),
+            pool,
+            threads,
             ln0,
             ln_out,
             blocks,
@@ -695,7 +753,7 @@ impl RwkvEngine {
         }
         let d = self.info.dim;
         self.last_stats = StepStats::default();
-        self.bbuf.ensure(n, d);
+        self.bbuf.ensure(n, d, self.threads);
         let mut round_bytes: u64 = 0;
 
         // embed + ln0 into the (N, D) residual stream
@@ -774,11 +832,13 @@ impl RwkvEngine {
                 self.last_stats.head_rows = stats.tokens_loaded;
                 round_bytes += hh.h1_nbytes() + stats.bytes;
             } else if let Some(hm) = &self.head_mat {
-                // dense head: stream the vocab matrix once for the round
+                // dense head: stream the vocab matrix once for the round,
+                // output rows sharded across the pool
                 let mut flat = std::mem::take(&mut self.bbuf.h);
                 flat.clear();
                 flat.resize(bh * vocab, 0.0);
-                matmat_rows(hm, &self.bbuf.xa[..bh * d], &mut flat);
+                let par = Par::new(self.pool.as_deref());
+                matmat_rows_par(hm, &self.bbuf.xa[..bh * d], &mut flat, par);
                 for (s, out) in logits_out.iter_mut().enumerate() {
                     out.copy_from_slice(&flat[s * vocab..(s + 1) * vocab]);
                 }
@@ -795,9 +855,11 @@ impl RwkvEngine {
         Ok((logits_out, round_bytes))
     }
 
-    /// Segment time-mix: shared projections go through the matmat kernels
-    /// (one weight pass for all rows); the WKV recurrence, norms and
-    /// shifts run per row in segment order on that session's state.
+    /// Segment time-mix: shared projections go through the sharded matmat
+    /// kernels (one weight pass for all rows, output ranges split across
+    /// the pool); the WKV recurrence, norms and shifts run per row in
+    /// segment order on that session's state — segments are independent,
+    /// so they fan out across the pool one-segment-per-lane-chunk.
     fn time_mix_seq(
         &mut self,
         b: &BlockW,
@@ -808,6 +870,8 @@ impl RwkvEngine {
         let (h, hs) = (self.info.heads, self.info.head_size);
         let d = self.info.dim;
         let n: usize = spans.iter().map(|sp| sp.len).sum();
+        let par = Par::new(self.pool.as_deref());
+        let t_mm = crate::util::Stopwatch::start();
         {
             let bb = &mut self.bbuf;
             // ln1 over every row FIRST: within-segment shifts read the
@@ -823,48 +887,71 @@ impl RwkvEngine {
             }
             let ca = ShiftCarry::Att;
             lerp_shift_seq(d, spans, states, layer, ca, &bb.xa, &b.att.mu_r, &mut bb.t1);
-            b.att.wr.apply_batch(&bb.t1, n, &mut bb.r, &mut bb.rank, &mut bb.acc);
+            b.att.wr.apply_batch(&bb.t1, n, &mut bb.r, &mut bb.rank, &mut bb.accs, par);
             lerp_shift_seq(d, spans, states, layer, ca, &bb.xa, &b.att.mu_k, &mut bb.t1);
-            b.att.wk.apply_batch(&bb.t1, n, &mut bb.k, &mut bb.rank, &mut bb.acc);
+            b.att.wk.apply_batch(&bb.t1, n, &mut bb.k, &mut bb.rank, &mut bb.accs, par);
             lerp_shift_seq(d, spans, states, layer, ca, &bb.xa, &b.att.mu_v, &mut bb.t1);
-            b.att.wv.apply_batch(&bb.t1, n, &mut bb.v, &mut bb.rank, &mut bb.acc);
+            b.att.wv.apply_batch(&bb.t1, n, &mut bb.v, &mut bb.rank, &mut bb.accs, par);
             lerp_shift_seq(d, spans, states, layer, ca, &bb.xa, &b.att.mu_g, &mut bb.t1);
-            b.att.wg.apply_batch(&bb.t1, n, &mut bb.g, &mut bb.rank, &mut bb.acc);
+            b.att.wg.apply_batch(&bb.t1, n, &mut bb.g, &mut bb.rank, &mut bb.accs, par);
         }
-        let bb = &mut self.bbuf;
-        for sp in spans {
-            for t in 0..sp.len {
-                let row = sp.start + t;
-                for v in bb.g[row * d..(row + 1) * d].iter_mut() {
-                    *v = silu(*v);
+        self.last_stats.matmul_secs += t_mm.elapsed_secs();
+        // per-slot WKV recurrence across the pool: each lane owns a chunk
+        // of whole segments (disjoint rows of g/att_out, disjoint states)
+        let t_wkv = crate::util::Stopwatch::start();
+        {
+            let bb = &mut self.bbuf;
+            let g_view = SharedSliceMut::new(&mut bb.g);
+            let out_view = SharedSliceMut::new(&mut bb.att_out);
+            let st_view = SharedSliceMut::new(states);
+            let (rr, kk, vv, xa) = (&bb.r[..], &bb.k[..], &bb.v[..], &bb.xa[..]);
+            par.run(spans.len(), &|_lane, sp0, sp1| {
+                // Safety: a segment's rows and its session state are
+                // touched by exactly one lane (spans partition the rows,
+                // sessions are unique per span).
+                let g = unsafe { g_view.get() };
+                let att_out = unsafe { out_view.get() };
+                let states = unsafe { st_view.get() };
+                for sp in &spans[sp0..sp1] {
+                    let st = &mut states[sp.sess];
+                    for t in 0..sp.len {
+                        let row = sp.start + t;
+                        for v in g[row * d..(row + 1) * d].iter_mut() {
+                            *v = silu(*v);
+                        }
+                        wkv_decode_step(
+                            h,
+                            hs,
+                            &b.att.decay,
+                            &b.att.first,
+                            &rr[row * d..(row + 1) * d],
+                            &kk[row * d..(row + 1) * d],
+                            &vv[row * d..(row + 1) * d],
+                            &mut st.wkv[layer],
+                            &mut att_out[row * d..(row + 1) * d],
+                        );
+                        group_norm_heads(
+                            &mut att_out[row * d..(row + 1) * d],
+                            h,
+                            &b.att.lnx.scale,
+                            &b.att.lnx.bias,
+                        );
+                        for i in 0..d {
+                            att_out[row * d + i] *= g[row * d + i];
+                        }
+                    }
+                    // carry the shift state: xa of the segment's LAST row
+                    let last = sp.start + sp.len - 1;
+                    st.att_x[layer].copy_from_slice(&xa[last * d..(last + 1) * d]);
                 }
-                wkv_decode_step(
-                    h,
-                    hs,
-                    &b.att.decay,
-                    &b.att.first,
-                    &bb.r[row * d..(row + 1) * d],
-                    &bb.k[row * d..(row + 1) * d],
-                    &bb.v[row * d..(row + 1) * d],
-                    &mut states[sp.sess].wkv[layer],
-                    &mut bb.att_out[row * d..(row + 1) * d],
-                );
-                group_norm_heads(
-                    &mut bb.att_out[row * d..(row + 1) * d],
-                    h,
-                    &b.att.lnx.scale,
-                    &b.att.lnx.bias,
-                );
-                for i in 0..d {
-                    bb.att_out[row * d + i] *= bb.g[row * d + i];
-                }
-            }
-            // carry the shift state: xa of the segment's LAST row
-            let last = sp.start + sp.len - 1;
-            states[sp.sess].att_x[layer].copy_from_slice(&bb.xa[last * d..(last + 1) * d]);
+            });
         }
+        self.last_stats.wkv_secs += t_wkv.elapsed_secs();
         // one streaming pass of wo for the whole round (+= residual)
-        matmat_in_out(&bb.att_out, &b.att.wo, &mut bb.x, &mut bb.acc);
+        let t_wo = crate::util::Stopwatch::start();
+        let bb = &mut self.bbuf;
+        matmat_in_out_par(&bb.att_out, &b.att.wo, &mut bb.x, &mut bb.accs, par);
+        self.last_stats.matmul_secs += t_wo.elapsed_secs();
     }
 
     /// Segment channel-mix.  Sparse configs predict per row, then compute
@@ -880,6 +967,8 @@ impl RwkvEngine {
     ) -> Result<u64> {
         let d = self.info.dim;
         let n: usize = spans.iter().map(|sp| sp.len).sum();
+        let par = Par::new(self.pool.as_deref());
+        let t_mm = crate::util::Stopwatch::start();
         {
             let bb = &mut self.bbuf;
             for r in 0..n {
@@ -894,32 +983,60 @@ impl RwkvEngine {
             let cf = ShiftCarry::Ffn;
             lerp_shift_seq(d, spans, states, layer, cf, &bb.xf, &b.ffn.mu_k, &mut bb.t1); // xk
             lerp_shift_seq(d, spans, states, layer, cf, &bb.xf, &b.ffn.mu_r, &mut bb.t2); // xr
-            b.ffn.wr.apply_batch(&bb.t2, n, &mut bb.r, &mut bb.rank, &mut bb.acc);
+            b.ffn.wr.apply_batch(&bb.t2, n, &mut bb.r, &mut bb.rank, &mut bb.accs, par);
             for v in bb.r.iter_mut() {
                 *v = sigmoid(*v);
             }
         }
+        self.last_stats.matmul_secs += t_mm.elapsed_secs();
         let mut bytes = b.ffn.wr.nbytes();
         if self.cfg.sparse_ffn {
-            // predict per row (the predictor is per-token math) into the
-            // round-persistent index sets
-            for r in 0..n {
-                let bb = &mut self.bbuf;
-                let pred = self.preds[layer].as_mut().context("predictor missing")?;
-                if pred.mode == sparse_ffn::PredMode::GroundTruth {
+            // predict per row into the round-persistent index sets.  The
+            // predictor is independent per token row, so non-oracle modes
+            // fan the rows out across the pool with per-lane scratch; the
+            // oracle (GroundTruth) mode reads the store and stays serial.
+            let t_pred = crate::util::Stopwatch::start();
+            let gt = self.preds[layer].as_ref().context("predictor missing")?.mode
+                == sparse_ffn::PredMode::GroundTruth;
+            if gt {
+                for r in 0..n {
+                    let bb = &mut self.bbuf;
+                    let pred = self.preds[layer].as_mut().context("predictor missing")?;
                     let xk = &bb.t1[r * d..(r + 1) * d];
                     bb.slot_idx[r] = SparsePredictor::ground_truth(&self.store, layer, xk)?;
                     pred.note_external(bb.slot_idx[r].len(), self.info.ffn);
-                } else {
-                    pred.predict(
-                        &bb.t1[r * d..(r + 1) * d],
-                        &mut bb.pred_n,
-                        &mut bb.pred_f,
-                        &mut bb.pred_f2,
-                        &mut bb.slot_idx[r],
-                    );
+                }
+            } else {
+                {
+                    let pred = self.preds[layer].as_ref().context("predictor missing")?;
+                    let bb = &mut self.bbuf;
+                    let slot_view = SharedSliceMut::new(&mut bb.slot_idx[..n]);
+                    let lane_view = SharedSliceMut::new(&mut bb.pred_lanes);
+                    let t1 = &bb.t1[..];
+                    par.run(n, &|lane, r0, r1| {
+                        // Safety: each row's index set is written by one
+                        // lane; each lane uses its own scratch entry.
+                        let slots = unsafe { slot_view.get() };
+                        let ps = &mut unsafe { lane_view.get() }[lane];
+                        for r in r0..r1 {
+                            pred.predict_into(
+                                &t1[r * d..(r + 1) * d],
+                                &mut ps.n,
+                                &mut ps.f,
+                                &mut ps.f2,
+                                &mut slots[r],
+                            );
+                        }
+                    });
+                }
+                // telemetry on the round thread (the parallel core is
+                // telemetry-free so no locks sit on the hot path)
+                let pred = self.preds[layer].as_mut().context("predictor missing")?;
+                for r in 0..n {
+                    pred.note_external(self.bbuf.slot_idx[r].len(), self.info.ffn);
                 }
             }
+            self.last_stats.pred_secs += t_pred.elapsed_secs();
             let bb = &mut self.bbuf;
             bb.union_idx.clear();
             for r in 0..n {
@@ -940,7 +1057,9 @@ impl RwkvEngine {
                 bb.slot_idx[..n].iter().map(|v| v.len() as u64).sum(),
             );
             bytes += union_bytes;
-            // union-fused compute: one pass over union rows for all rows
+            // union-fused compute: one pass over union rows for all rows,
+            // sharded across the pool (see sparse_ffn_apply_batch)
+            let t_sp = crate::util::Stopwatch::start();
             let total = sparse_ffn::sparse_ffn_apply_batch(
                 &self.store,
                 layer,
@@ -950,7 +1069,9 @@ impl RwkvEngine {
                 &mut bb.ffn_out,
                 &mut bb.h,
                 &mut bb.cursors,
+                par,
             )?;
+            self.last_stats.matmul_secs += t_sp.elapsed_secs();
             for r in 0..n {
                 let active = bb.slot_idx[r].len();
                 self.last_stats.ffn_active += active;
@@ -965,7 +1086,8 @@ impl RwkvEngine {
             let bb = &mut self.bbuf;
             bb.h.clear();
             bb.h.resize(n * f, 0.0);
-            matmat_rows(wk_t, &bb.t1, &mut bb.h);
+            let t_ff = crate::util::Stopwatch::start();
+            matmat_rows_par(wk_t, &bb.t1, &mut bb.h, par);
             sqrelu_inplace(&mut bb.h);
             for r in 0..n {
                 let nz = bb.h[r * f..(r + 1) * f].iter().filter(|&&v| v > 0.0).count();
@@ -974,8 +1096,10 @@ impl RwkvEngine {
                 self.last_stats.ffn_active += nz;
                 self.last_stats.ffn_total += f;
             }
+            let bb = &mut self.bbuf;
             bb.ffn_out.fill(0.0);
-            matmat_in_out(&bb.h, wv, &mut bb.ffn_out, &mut bb.acc);
+            matmat_in_out_par(&bb.h, wv, &mut bb.ffn_out, &mut bb.accs, par);
+            self.last_stats.matmul_secs += t_ff.elapsed_secs();
             bytes += wk_t.nbytes() + wv.nbytes();
         }
         let bb = &mut self.bbuf;

@@ -284,6 +284,12 @@ impl RwkvEngine {
         self.metrics.inc("round_prefill_tokens", report.prefill_tokens as u64);
         self.metrics.inc("round_decode_tokens", report.decode_tokens as u64);
         self.metrics.observe("round_secs", round.elapsed_secs());
+        // per-phase split of the fused pass (where did this round's time
+        // go: recurrence vs weight-streaming matmuls vs predictor vs head)
+        self.metrics.observe("round_wkv_secs", self.last_stats.wkv_secs);
+        self.metrics.observe("round_matmul_secs", self.last_stats.matmul_secs);
+        self.metrics.observe("round_pred_secs", self.last_stats.pred_secs);
+        self.metrics.observe("round_head_secs", self.last_stats.head_secs);
         Ok(report)
     }
 

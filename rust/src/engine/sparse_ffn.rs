@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use crate::engine::weights::{ProjW, WeightStore};
 use crate::metrics::{Group, MemTracker};
+use crate::pool::{Par, SharedSliceMut};
 use crate::tensor::{bit_matvec, matvec_in_out, sigmoid};
 
 /// Which predictor drives row selection (Figure 9's study).
@@ -120,10 +121,26 @@ impl SparsePredictor {
     }
 
     /// Predict the active-neuron index set for input `xk` (the channel-mix
-    /// key input).  `scratch` buffers are caller-owned to keep this
-    /// allocation-free on the hot path.
+    /// key input), recording telemetry.  `scratch` buffers are
+    /// caller-owned to keep this allocation-free on the hot path.
     pub fn predict(
         &mut self,
+        xk: &[f32],
+        scratch_n: &mut Vec<f32>,
+        scratch_f: &mut Vec<f32>,
+        scratch_f2: &mut Vec<f32>,
+        out_idx: &mut Vec<u32>,
+    ) {
+        self.predict_into(xk, scratch_n, scratch_f, scratch_f2, out_idx);
+        self.note_external(out_idx.len(), self.l2.cols());
+    }
+
+    /// Telemetry-free prediction core (`&self`, fully deterministic per
+    /// row): the engine's parallel predictor path runs one call per token
+    /// row across the pool with per-lane scratch, then accounts telemetry
+    /// once on the round thread via [`SparsePredictor::note_external`].
+    pub fn predict_into(
+        &self,
         xk: &[f32],
         scratch_n: &mut Vec<f32>,
         scratch_f: &mut Vec<f32>,
@@ -172,8 +189,6 @@ impl SparsePredictor {
                 out_idx.push(j as u32);
             }
         }
-        self.tokens += 1;
-        self.kept_sum += out_idx.len() as f64 / f as f64;
     }
 
     /// Record telemetry for an externally-chosen index set (GT mode).
@@ -253,9 +268,16 @@ pub fn sparse_ffn_apply(
 /// the result matches the per-slot path to the last bit.
 ///
 /// `xks` / `outs` are `(B, D)` flat; `h` is resized to `(B, U)` flat;
-/// `cursors` is per-slot merge-walk scratch.  Residency accounting for
-/// the union bytes is the caller's job (it knows the round context).
-/// Returns the FFN width F (for per-slot stats).
+/// `cursors` is per-lane × per-slot merge-walk scratch.  Residency
+/// accounting for the union bytes is the caller's job (it knows the round
+/// context).  Returns the FFN width F (for per-slot stats).
+///
+/// Parallelism: pass 1 (wk_t dots) shards over union-row ranges — each
+/// lane streams a disjoint subset of the union rows, re-seeding its
+/// per-slot merge cursors by binary search at its range start; pass 2
+/// (W_v accumulation) shards over slots — each lane owns whole `(D,)`
+/// output rows and walks union rows in the same ascending order as the
+/// serial path.  Both passes are bit-identical for every pool size.
 #[allow(clippy::too_many_arguments)]
 pub fn sparse_ffn_apply_batch(
     store: &WeightStore,
@@ -266,6 +288,7 @@ pub fn sparse_ffn_apply_batch(
     outs: &mut [f32],
     h: &mut Vec<f32>,
     cursors: &mut Vec<usize>,
+    par: Par<'_>,
 ) -> Result<usize> {
     let wk_t = store.row_view(&format!("b{layer}.ffn.wk_t"))?;
     let wv = store.row_view(&format!("b{layer}.ffn.wv"))?;
@@ -277,33 +300,58 @@ pub fn sparse_ffn_apply_batch(
     h.clear();
     h.resize(b * u, 0.0);
     cursors.clear();
-    cursors.resize(b, 0);
+    cursors.resize(par.lanes() * b, 0);
     // pass 1: wk_t rows — stream each union row once, dot it against every
     // slot that predicted it (merge-walk over the sorted per-slot sets)
-    for (uk, &j) in union_idx.iter().enumerate() {
-        for s in 0..b {
-            let idx = &slot_idx[s];
-            let c = cursors[s];
-            if c < idx.len() && idx[c] == j {
-                cursors[s] = c + 1;
-                let a = wk_t.dot_row(j as usize, &xks[s * d..(s + 1) * d]).max(0.0);
-                h[s * u + uk] = a * a;
+    {
+        let h_view = SharedSliceMut::new(h.as_mut_slice());
+        let cur_view = SharedSliceMut::new(cursors.as_mut_slice());
+        let wk_ref = &wk_t;
+        par.run(u, &|lane, u0, u1| {
+            // Safety: lanes write disjoint `uk` ranges of `h` and their
+            // own `cursors` stripe.
+            let h = unsafe { h_view.get() };
+            let cur = &mut unsafe { cur_view.get() }[lane * b..(lane + 1) * b];
+            // re-seed each slot's merge cursor at this lane's range start
+            // (slot sets are sorted subsets of the union)
+            for (s, c) in cur.iter_mut().enumerate() {
+                *c = slot_idx[s].partition_point(|&x| x < union_idx[u0]);
             }
-        }
+            for (uk, &j) in union_idx.iter().enumerate().take(u1).skip(u0) {
+                for s in 0..b {
+                    let idx = &slot_idx[s];
+                    let c = cur[s];
+                    if c < idx.len() && idx[c] == j {
+                        cur[s] = c + 1;
+                        let a = wk_ref.dot_row(j as usize, &xks[s * d..(s + 1) * d]).max(0.0);
+                        h[s * u + uk] = a * a;
+                    }
+                }
+            }
+        });
     }
-    // pass 2: wv rows — zero h entries (masked-out slots or sqrelu zeros)
-    // are skipped exactly as the per-slot kernel skips them
+    // pass 2: wv rows per SLOT — zero h entries (masked-out slots or
+    // sqrelu zeros) are skipped exactly as the per-slot kernel skips them,
+    // union rows visited in the same ascending order
     outs.fill(0.0);
-    for (uk, &j) in union_idx.iter().enumerate() {
-        for s in 0..b {
-            let hv = h[s * u + uk];
-            if hv != 0.0 {
-                wv.accum_row(j as usize, hv, &mut outs[s * d..(s + 1) * d]);
+    {
+        let out_view = SharedSliceMut::new(&mut *outs);
+        let h_ref = &h[..];
+        let wv_ref = &wv;
+        par.run(b, &|_lane, s0, s1| {
+            // Safety: lanes own disjoint slot ranges of `outs`.
+            let outs = unsafe { out_view.get() };
+            for s in s0..s1 {
+                let out = &mut outs[s * d..(s + 1) * d];
+                for (uk, &j) in union_idx.iter().enumerate() {
+                    let hv = h_ref[s * u + uk];
+                    if hv != 0.0 {
+                        wv_ref.accum_row(j as usize, hv, out);
+                    }
+                }
+                wv_ref.apply_col_scale(out);
             }
-        }
-    }
-    for s in 0..b {
-        wv.apply_col_scale(&mut outs[s * d..(s + 1) * d]);
+        });
     }
     Ok(wk_t.rows)
 }

@@ -15,7 +15,8 @@ use anyhow::{bail, Result};
 
 use crate::io::{Manifest, RkvFile};
 use crate::metrics::{Group, MemTracker};
-use crate::tensor::{matmat_in_out, matvec_in_out, DType, Mat};
+use crate::pool::Par;
+use crate::tensor::{matmat_in_out_par, matvec_in_out, DType, Mat};
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
 /// Component group of a tensor, by naming convention (export.py).
@@ -328,33 +329,35 @@ impl ProjW {
     }
 
     /// Batched `outs[s] = proj(xs[s])` over `(B, dim)` flat activations —
-    /// every weight row streams once for the whole round.  Bit-identical
-    /// per slot to [`ProjW::apply`].  `scratch` holds the `(B, rank)`
-    /// intermediate for the low-rank forms; `acc` is the matmat kernel
-    /// scratch (f16 row decode / i8 accumulators).
+    /// every weight row streams once for the whole round, sharded over
+    /// `par`'s lanes (inline without a pool; bit-identical either way).
+    /// Bit-identical per slot to [`ProjW::apply`].  `scratch` holds the
+    /// `(B, rank)` intermediate for the low-rank forms; `accs` is the
+    /// per-lane matmat kernel scratch (f16 row decode / i8 accumulators).
     pub fn apply_batch(
         &self,
         xs: &[f32],
         b: usize,
         outs: &mut [f32],
         scratch: &mut Vec<f32>,
-        acc: &mut Vec<f32>,
+        accs: &mut Vec<Vec<f32>>,
+        par: Par<'_>,
     ) {
         outs.fill(0.0);
         match self {
-            ProjW::Dense(w) => matmat_in_out(xs, w, outs, acc),
+            ProjW::Dense(w) => matmat_in_out_par(xs, w, outs, accs, par),
             ProjW::LowRank { l, r } => {
                 scratch.clear();
                 scratch.resize(b * l.cols(), 0.0);
-                matmat_in_out(xs, l, scratch, acc);
-                matmat_in_out(scratch, r, outs, acc);
+                matmat_in_out_par(xs, l, scratch, accs, par);
+                matmat_in_out_par(scratch, r, outs, accs, par);
             }
             ProjW::Enhanced { l, r, d } => {
                 scratch.clear();
                 scratch.resize(b * l.cols(), 0.0);
-                matmat_in_out(xs, l, scratch, acc);
+                matmat_in_out_par(xs, l, scratch, accs, par);
                 crate::tensor::sqrelu_inplace(scratch);
-                matmat_in_out(scratch, r, outs, acc);
+                matmat_in_out_par(scratch, r, outs, accs, par);
                 let dim = d.len();
                 for s in 0..b {
                     let (x, out) = (&xs[s * dim..(s + 1) * dim], &mut outs[s * dim..(s + 1) * dim]);

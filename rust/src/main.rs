@@ -37,6 +37,7 @@ const SPECS: &[cli::OptSpec] = &[
     opt_def("temperature", "sampling temperature (0 = greedy)", "0.8"),
     opt_def("top-p", "nucleus mass", "0.95"),
     opt_def("prefill-chunk", "prompt tokens fused per round", "8"),
+    opt_def("threads", "intra-round compute threads (0 = all cores, 1 = serial)", "0"),
     opt_def("limit", "max examples per eval task", "0"),
     opt_def("addr", "listen address (serve)", "127.0.0.1:7070"),
     opt_def("batch", "max dynamic batch size (serve)", "8"),
@@ -75,6 +76,7 @@ fn engine_config(a: &Args) -> Result<EngineConfig> {
     cfg.strategy = LoadStrategy::parse(a.get_or("strategy", "full"))?;
     cfg.backend = Backend::parse(a.get_or("backend", "native"))?;
     cfg.prefill_chunk = a.usize_or("prefill-chunk", 8)?;
+    cfg.threads = a.usize_or("threads", 0)?;
     cfg.seed = a.u64_or("seed", 0)?;
     Ok(cfg)
 }
@@ -134,7 +136,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let cfg = engine_config(a)?;
     let v = vocab(a)?;
     let policy = BatchPolicy { max_batch: a.usize_or("batch", 8)?, window_ms: 2 };
-    let coordinator = Coordinator::spawn(move || RwkvEngine::load(cfg), policy);
+    // ONE compute pool for the process, its handle threaded through the
+    // coordinator's engine factory: every scheduling round fans out over
+    // these workers (--threads; 0 = all cores)
+    let pool = rwkv_lite::pool::for_threads(cfg.threads);
+    let coordinator = Coordinator::spawn(move || RwkvEngine::load_with_pool(cfg, pool), policy);
     let server = Arc::new(Server::new(coordinator, v));
     server.serve(a.get_or("addr", "127.0.0.1:7070"), None)
 }

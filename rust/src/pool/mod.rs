@@ -1,25 +1,129 @@
-//! Fixed-size thread pool (substrate S23 — no tokio in this environment).
+//! Fixed-size thread pool + scoped data-parallel sections (substrate S23
+//! — no tokio, no rayon in this environment).
 //!
-//! Used by the coordinator for request handling and by the layerwise
-//! loader to prefetch layer N+1 while layer N executes.
+//! Two kinds of work run here:
+//!
+//! * **Fire-and-forget / future-style jobs** — [`ThreadPool::spawn`] and
+//!   [`ThreadPool::submit`], used for background work such as layerwise
+//!   prefetch.  Jobs are `'static` boxed closures delivered over an mpsc
+//!   channel that all workers drain.
+//! * **Scoped data-parallel sections** — [`ThreadPool::parallel_for`],
+//!   the intra-round compute path.  The closure may borrow stack data
+//!   (weights, activation buffers): the call does not return until every
+//!   chunk has finished, so the borrows stay valid without `Arc`/clone.
+//!
+//! # Scheduling
+//!
+//! `parallel_for(n, f)` splits `0..n` into `workers() + 1` contiguous
+//! chunks by **deterministic static chunking**: chunk sizes depend only on
+//! `n` and the pool size (`n / lanes` items each, the first `n % lanes`
+//! chunks take one extra), never on runtime timing.  Chunk 0 runs inline
+//! on the calling thread; the rest are dispatched to workers.  No closure
+//! is boxed per call — a chunk descriptor is a small plain struct — so a
+//! section adds no per-call heap allocation beyond the channel node.
+//!
+//! Work assignment is static, not work-stealing: for the engine's use
+//! (equal-cost output rows / slots) this is both faster and — more
+//! importantly — *reproducible*.  Numerical determinism, however, does not
+//! depend on the chunking at all: callers only ever shard work whose
+//! per-element reduction order is unchanged by the split (see
+//! `tensor::matmat`), so results are bit-identical for every pool size,
+//! including the inline `threads = 1` path.
+//!
+//! # Panic semantics
+//!
+//! A panicking job never takes a worker down (every job runs under
+//! `catch_unwind`, so pool capacity is preserved) and never deadlocks the
+//! caller:
+//!
+//! * [`Task::wait`] resumes the job's panic on the *submitting* thread
+//!   instead of hanging on a channel whose sender died.
+//! * [`ThreadPool::parallel_for`] waits for **all** chunks (borrowed data
+//!   must outlive every worker's access), then resumes the first chunk
+//!   panic on the caller.
+//! * `Drop` sends every worker a shutdown message and joins the
+//!   `JoinHandle`s — workers are never detached.
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+type Panic = Box<dyn Any + Send + 'static>;
+
+/// One chunk of a scoped [`ThreadPool::parallel_for`] section.
+///
+/// Raw pointers erase the caller's stack lifetimes; this is sound because
+/// `parallel_for` does not return until [`Latch`] has counted every chunk
+/// done, so the pointees strictly outlive all worker access.
+struct Chunk {
+    /// The section body, shared by every chunk: `f(chunk, start, end)`.
+    f: *const (dyn Fn(usize, usize, usize) + Sync),
+    chunk: usize,
+    start: usize,
+    end: usize,
+    latch: *const Latch,
+}
+
+// Safety: see `Chunk` — the caller blocks until the latch opens, so the
+// borrowed closure/latch outlive the worker's use of these pointers.
+unsafe impl Send for Chunk {}
 
 enum Msg {
     Run(Job),
+    Scoped(Chunk),
     Shutdown,
 }
 
+/// Completion latch for one `parallel_for` call: counts outstanding
+/// chunks and records the first panic payload.
+#[derive(Default)]
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct LatchState {
+    remaining: usize,
+    panic: Option<Panic>,
+}
+
+impl Latch {
+    fn done(&self, panic: Option<Panic>) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<Panic> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.panic.take()
+    }
+}
+
+/// Fixed pool of named worker threads; see the module docs for the
+/// scheduling and panic contracts.
 pub struct ThreadPool {
-    tx: Sender<Msg>,
+    /// Guarded so the pool is `Sync` and an `Arc<ThreadPool>` can be
+    /// threaded through engine/coordinator construction; only the owning
+    /// compute thread dispatches, so the lock is uncontended.
+    tx: Mutex<Sender<Msg>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl ThreadPool {
+    /// Spawn a pool of `n` workers (clamped to at least 1).
     pub fn new(n: usize) -> Self {
         let (tx, rx) = channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
@@ -31,34 +135,134 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {
-                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Run(job)) => {
+                                // a panicking job must not kill the worker
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Ok(Msg::Scoped(c)) => {
+                                // Safety: pointees outlive this call (the
+                                // submitter blocks on the latch).
+                                let f = unsafe { &*c.f };
+                                let latch = unsafe { &*c.latch };
+                                let r = catch_unwind(AssertUnwindSafe(|| {
+                                    f(c.chunk, c.start, c.end)
+                                }));
+                                latch.done(r.err());
+                            }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
                     .expect("spawn pool worker")
             })
             .collect();
-        Self { tx, workers }
+        Self { tx: Mutex::new(tx), workers }
     }
 
+    /// Number of worker threads (total parallelism of a scoped section is
+    /// `workers() + 1`: the caller runs a chunk too).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn send(&self, msg: Msg) {
+        self.tx.lock().unwrap().send(msg).expect("pool alive");
+    }
+
+    /// Run `f` asynchronously (fire-and-forget).  A panic inside `f` is
+    /// swallowed (the worker survives); use [`ThreadPool::submit`] when
+    /// the caller needs the result or the panic.
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+        self.send(Msg::Run(Box::new(f)));
     }
 
     /// Run `f` asynchronously, returning a handle to await its result.
     pub fn submit<T: Send + 'static, F: FnOnce() -> T + Send + 'static>(&self, f: F) -> Task<T> {
         let (tx, rx) = channel();
         self.spawn(move || {
-            let _ = tx.send(f());
+            let r = catch_unwind(AssertUnwindSafe(f));
+            let _ = tx.send(r);
         });
         Task { rx }
     }
+
+    /// Scoped data-parallel for: run `f(chunk, start, end)` over the
+    /// deterministic static chunking of `0..n` (see module docs), using
+    /// the calling thread plus every worker.  Returns when ALL chunks are
+    /// done; `f` may therefore borrow local data.  If any chunk panics,
+    /// the first panic resumes on the caller after the section completes.
+    ///
+    /// ```
+    /// use std::sync::atomic::{AtomicU64, Ordering};
+    /// use rwkv_lite::pool::ThreadPool;
+    ///
+    /// let pool = ThreadPool::new(3);
+    /// let xs: Vec<u64> = (0..100).collect(); // borrowed, not moved
+    /// let total = AtomicU64::new(0);
+    /// pool.parallel_for(xs.len(), &|_chunk, start, end| {
+    ///     let part: u64 = xs[start..end].iter().sum();
+    ///     total.fetch_add(part, Ordering::Relaxed);
+    /// });
+    /// assert_eq!(total.load(Ordering::Relaxed), 99 * 100 / 2);
+    /// ```
+    pub fn parallel_for(&self, n: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let lanes = self.workers.len() + 1;
+        let latch = Latch::default();
+        // non-empty chunk count is min(n, lanes); the count must be set
+        // before any worker can decrement
+        latch.state.lock().unwrap().remaining = n.min(lanes) - 1;
+        let fp: *const (dyn Fn(usize, usize, usize) + Sync) = f;
+        let lp: *const Latch = &latch;
+        let mut bounds = chunk_bounds(n, lanes);
+        let (c0, s0, e0) = bounds.next().expect("n > 0 has a first chunk");
+        for (chunk, start, end) in bounds {
+            self.send(Msg::Scoped(Chunk { f: fp, chunk, start, end, latch: lp }));
+        }
+        // chunk 0 runs inline on the caller; even if it panics we MUST
+        // wait for the workers first (they borrow the caller's stack)
+        let mine = catch_unwind(AssertUnwindSafe(|| f(c0, s0, e0)));
+        let theirs = latch.wait();
+        if let Err(p) = mine {
+            resume_unwind(p);
+        }
+        if let Some(p) = theirs {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Build the compute pool for a `threads` knob (config / `--threads`):
+/// `0` = one lane per available core, `1` = no pool (run inline), `k` =
+/// `k` lanes (`k - 1` workers plus the calling thread).
+pub fn for_threads(threads: usize) -> Option<Arc<ThreadPool>> {
+    let lanes = match threads {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        t => t,
+    };
+    (lanes > 1).then(|| Arc::new(ThreadPool::new(lanes - 1)))
+}
+
+/// The deterministic static chunking of `0..n` into at most `lanes`
+/// non-empty `(chunk, start, end)` ranges: `n / lanes` items per chunk,
+/// the first `n % lanes` chunks take one extra.
+fn chunk_bounds(n: usize, lanes: usize) -> impl Iterator<Item = (usize, usize, usize)> {
+    let base = n / lanes;
+    let extra = n % lanes;
+    let mut start = 0usize;
+    (0..lanes).filter_map(move |c| {
+        let len = base + usize::from(c < extra);
+        let s = start;
+        start += len;
+        (len > 0).then_some((c, s, s + len))
+    })
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         for _ in &self.workers {
-            let _ = self.tx.send(Msg::Shutdown);
+            let _ = self.tx.lock().unwrap().send(Msg::Shutdown);
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -68,16 +272,100 @@ impl Drop for ThreadPool {
 
 /// A pending result from [`ThreadPool::submit`].
 pub struct Task<T> {
-    rx: Receiver<T>,
+    rx: Receiver<std::thread::Result<T>>,
 }
 
 impl<T> Task<T> {
+    /// Block for the result.  If the job panicked, the panic resumes HERE
+    /// (on the submitter) instead of hanging on a dead channel.
     pub fn wait(self) -> T {
-        self.rx.recv().expect("task completed")
+        match self.rx.recv() {
+            Ok(Ok(v)) => v,
+            Ok(Err(p)) => resume_unwind(p),
+            Err(_) => panic!("pool shut down before task completed"),
+        }
     }
 
+    /// Non-blocking poll; `None` while still running.  Panics (resuming
+    /// the job's panic) if the job panicked.
     pub fn try_wait(&self) -> Option<T> {
-        self.rx.try_recv().ok()
+        match self.rx.try_recv() {
+            Ok(Ok(v)) => Some(v),
+            Ok(Err(p)) => resume_unwind(p),
+            Err(_) => None,
+        }
+    }
+}
+
+/// Copyable parallelism handle passed down to the sharded kernels:
+/// `Par::none()` (or a `threads = 1` engine) runs sections inline;
+/// otherwise sections fan out over the pool.  Results are bit-identical
+/// either way — the handle only chooses who computes which range.
+#[derive(Clone, Copy, Default)]
+pub struct Par<'a> {
+    pool: Option<&'a ThreadPool>,
+}
+
+impl<'a> Par<'a> {
+    /// Inline execution (the single-threaded reference path).
+    pub fn none() -> Self {
+        Self { pool: None }
+    }
+
+    /// Fan out over `pool` when `Some`, inline when `None`.
+    pub fn new(pool: Option<&'a ThreadPool>) -> Self {
+        Self { pool }
+    }
+
+    /// Number of concurrent lanes a section is split into (1 == inline).
+    /// Per-lane scratch owners size their buffers with this.
+    pub fn lanes(&self) -> usize {
+        self.pool.map_or(1, |p| p.workers() + 1)
+    }
+
+    /// Run `f(chunk, start, end)` over the static chunking of `0..n`
+    /// (inline as `f(0, 0, n)` without a pool).  See
+    /// [`ThreadPool::parallel_for`].
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
+        match self.pool {
+            Some(p) => p.parallel_for(n, f),
+            None => {
+                if n > 0 {
+                    f(0, 0, n)
+                }
+            }
+        }
+    }
+}
+
+/// Shared-mutable slice view for handing ONE buffer to several chunks of a
+/// scoped section that write **disjoint** element ranges (sharded kernel
+/// outputs, per-lane scratch, per-session states).
+///
+/// Safety contract (callers): every element is accessed by at most one
+/// chunk, and the underlying buffer outlives the section — guaranteed by
+/// `parallel_for` blocking until all chunks finish.
+pub(crate) struct SharedSliceMut<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SharedSliceMut<T> {}
+unsafe impl<T: Send> Sync for SharedSliceMut<T> {}
+
+impl<T> SharedSliceMut<T> {
+    pub(crate) fn new(s: &mut [T]) -> Self {
+        Self { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Reconstruct the full slice inside a chunk.
+    ///
+    /// # Safety
+    /// The chunk must only touch elements no other chunk touches, per the
+    /// type-level contract above.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn get(&self) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
     }
 }
 
@@ -114,5 +402,83 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(5)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn task_wait_propagates_panic_instead_of_hanging() {
+        let pool = ThreadPool::new(1);
+        let t = pool.submit(|| -> u32 { panic!("job exploded") });
+        let r = catch_unwind(AssertUnwindSafe(|| t.wait()));
+        let p = r.expect_err("wait must propagate the job panic");
+        let msg = p.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "job exploded");
+        // the worker survived the panic and still runs jobs
+        assert_eq!(pool.submit(|| 7).wait(), 7);
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let pool = ThreadPool::new(3);
+        for n in [0usize, 1, 2, 3, 4, 7, 100] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for(n, &|_c, s, e| {
+                for h in &hits[s..e] {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n={n}: every index exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn chunking_is_deterministic_and_static() {
+        // depends only on (n, lanes): recomputing gives identical bounds
+        let a: Vec<_> = chunk_bounds(13, 4).collect();
+        let b: Vec<_> = chunk_bounds(13, 4).collect();
+        assert_eq!(a, b);
+        assert_eq!(a, vec![(0, 0, 4), (1, 4, 7), (2, 7, 10), (3, 10, 13)]);
+        // n < lanes: only non-empty chunks materialize, indexes preserved
+        let c: Vec<_> = chunk_bounds(2, 4).collect();
+        assert_eq!(c, vec![(0, 0, 1), (1, 1, 2)]);
+    }
+
+    #[test]
+    fn parallel_for_borrows_and_writes_disjoint_ranges() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0usize; 257];
+        let view = SharedSliceMut::new(&mut out);
+        pool.parallel_for(257, &|_c, s, e| {
+            let out = unsafe { view.get() };
+            for (i, o) in out[s..e].iter_mut().enumerate() {
+                *o = s + i;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn parallel_for_propagates_chunk_panic_after_completion() {
+        let pool = ThreadPool::new(2);
+        let done = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(30, &|c, s, e| {
+                if c == 1 {
+                    panic!("chunk down");
+                }
+                done.fetch_add(e - s, Ordering::Relaxed);
+            });
+        }));
+        assert!(r.is_err(), "worker-chunk panic must reach the caller");
+        // pool still usable afterwards
+        let total = AtomicUsize::new(0);
+        pool.parallel_for(10, &|_c, s, e| {
+            total.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 10);
     }
 }

@@ -11,10 +11,16 @@
 //!           {"done": true, "tokens": n, "seconds": s, "tps": r,
 //!            "reason": "length"|"stop"|"cancelled"}
 //!
+//! The full protocol (request fields, response lines, error shapes) is
+//! documented in `docs/serving.md` together with every CLI flag.
+//!
 //! Thread-per-connection feeding the single coordinator (which owns the
-//! engine and advances all connections' sessions in fused rounds).  A
-//! dropped connection cancels its session: the coordinator sees the dead
-//! stream and retires the slot instead of decoding into the void.
+//! engine and advances all connections' sessions in fused rounds; the
+//! engine's compute pool — the `--threads` knob, `"threads"` in the
+//! serialized `EngineConfig` JSON — parallelizes each round across
+//! cores).  A dropped
+//! connection cancels its session: the coordinator sees the dead stream
+//! and retires the slot instead of decoding into the void.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

@@ -1,5 +1,5 @@
 //! Fused multi-vector (matrix x batch-of-vectors) kernels — the batched
-//! decode hot path.
+//! decode hot path — and their row-sharded parallel forms.
 //!
 //! A scheduling round with B concurrent requests used to call the matvec
 //! kernels B times per weight matrix, streaming every weight byte B times.
@@ -8,12 +8,55 @@
 //! decode round costs ~one pass over the weights regardless of B (the
 //! memory-bandwidth argument of the paper's §3.2/§5 applied cross-request).
 //!
+//! # Dtype support matrix
+//!
+//! | kernel                        | f32 | f16 | i8 (scale)        |
+//! |-------------------------------|-----|-----|-------------------|
+//! | [`matmat_in_out`]             | yes | yes | per-column        |
+//! | [`matmat_rows`]               | yes | yes | per-row           |
+//! | [`matmat_rows_indexed`]       | yes | yes | per-row           |
+//! | [`accum_rows_indexed_batch`]  | yes | yes | per-column        |
+//!
+//! Low-rank / enhanced-SVD projections (§3.1) are compositions of
+//! `matmat_in_out` over their factor matrices (see
+//! `engine::weights::ProjW::apply_batch`), so they inherit both the dtype
+//! matrix and the sharding below.
+//!
+//! # Batch layout and bit-identity
+//!
 //! Batch layout is row-major `(B, dim)` flat slices: slot `s` of `xs` is
 //! `xs[s*dim..(s+1)*dim]`.  Every kernel is BIT-IDENTICAL per slot to its
 //! matvec.rs counterpart: the per-slot accumulation order (weight rows in
 //! ascending index, the same dot reductions, the same i8 scale folding) is
 //! preserved exactly, so the batched engine path produces the same logits
 //! as the per-slot path down to the last ulp.
+//!
+//! # Sharding contract (the `_par` forms)
+//!
+//! Each kernel has a `*_par` twin that splits its **output elements** into
+//! disjoint contiguous ranges and computes each range on one lane of a
+//! [`crate::pool::ThreadPool`] (deterministic static chunking; inline when
+//! the [`Par`] handle has no pool):
+//!
+//! * row-per-output kernels (`matmat_rows`, `matmat_rows_indexed`) shard
+//!   over **output rows** — each lane streams a disjoint contiguous slice
+//!   of the weight matrix;
+//! * `(in, out)`-layout kernels (`matmat_in_out`,
+//!   `accum_rows_indexed_batch`) shard over **output columns** — each lane
+//!   streams a disjoint column slice of every weight row.
+//!
+//! Either way every weight byte is read exactly once per round across all
+//! lanes, and every output element is written by exactly one lane.
+//!
+//! # Determinism guarantee
+//!
+//! The value of each output element is computed by the *same* sequence of
+//! floating-point operations in every sharding (the split never cuts
+//! through a reduction: reductions run over weight-row index inside a
+//! single lane, in ascending order, exactly as in the serial kernel), so
+//! `_par` results are bit-identical to the serial kernels for EVERY pool
+//! size — the engine's `threads ∈ {1, 2, 8}` equivalence tests
+//! (`tests/thread_equivalence.rs`) enforce this end to end.
 //!
 //! Inner loops keep the matvec.rs shape LLVM auto-vectorizes: contiguous
 //! slices, iterator zips (no bounds checks), f32 accumulation, and the
@@ -26,9 +69,100 @@
 //! same loop over `RowView` (engine::sparse_ffn::sparse_ffn_apply_batch),
 //! and these kernels double as the reference that path is tested against.
 
+use crate::pool::{Par, SharedSliceMut};
 use crate::tensor::matvec::{dot_f16, dot_f32, dot_i8};
 use crate::tensor::Mat;
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
+
+/// Grow a per-lane scratch pool to `lanes` entries (capacity is retained
+/// across rounds, so the hot loop stays allocation-free after warm-up).
+fn ensure_lanes(scratch: &mut Vec<Vec<f32>>, lanes: usize) {
+    while scratch.len() < lanes {
+        scratch.push(Vec::new());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (in, out) layout — shard over output COLUMNS
+// ---------------------------------------------------------------------------
+
+/// Column-range core of [`matmat_in_out`]: computes output columns
+/// `[c0, c1)` for every slot (reads `w[i][c0..c1]` of every weight row —
+/// a disjoint weight slice per lane).  Per-column accumulation order is
+/// identical to the full-range kernel, hence bit-identical.
+fn matmat_in_out_cols(
+    xs: &[f32],
+    w: &Mat,
+    outs: &mut [f32],
+    scratch: &mut Vec<f32>,
+    c0: usize,
+    c1: usize,
+) {
+    let (rows, cols) = (w.rows(), w.cols());
+    let b = xs.len() / rows;
+    let cw = c1 - c0;
+    match w {
+        Mat::F32 { data, .. } => {
+            for i in 0..rows {
+                let row = &data[i * cols + c0..i * cols + c1];
+                for s in 0..b {
+                    let xi = xs[s * rows + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols + c0..s * cols + c1];
+                    for (o, &wij) in out.iter_mut().zip(row) {
+                        *o += xi * wij;
+                    }
+                }
+            }
+        }
+        Mat::F16 { data, .. } => {
+            scratch.clear();
+            scratch.resize(cw, 0.0);
+            for i in 0..rows {
+                // decode the f16 row slice once; every slot reuses it
+                for (r, &h) in scratch.iter_mut().zip(&data[i * cols + c0..i * cols + c1]) {
+                    *r = f16_to_f32(h);
+                }
+                for s in 0..b {
+                    let xi = xs[s * rows + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols + c0..s * cols + c1];
+                    for (o, &wij) in out.iter_mut().zip(scratch.iter()) {
+                        *o += xi * wij;
+                    }
+                }
+            }
+        }
+        Mat::I8 { data, scale, .. } => {
+            scratch.clear();
+            scratch.resize(b * cw, 0.0);
+            for i in 0..rows {
+                let row = &data[i * cols + c0..i * cols + c1];
+                for s in 0..b {
+                    let xi = xs[s * rows + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let acc = &mut scratch[s * cw..(s + 1) * cw];
+                    for (a, &q) in acc.iter_mut().zip(row) {
+                        *a += xi * q as f32;
+                    }
+                }
+            }
+            for s in 0..b {
+                let out = &mut outs[s * cols + c0..s * cols + c1];
+                let acc = &scratch[s * cw..(s + 1) * cw];
+                for ((o, &a), &sc) in out.iter_mut().zip(acc).zip(&scale[c0..c1]) {
+                    *o += a * sc;
+                }
+            }
+        }
+    }
+}
 
 /// Batched `(in, out)`-layout apply:
 /// `outs[s][j] += sum_i xs[s][i] * w[i][j]` for every slot `s`.
@@ -45,63 +179,67 @@ pub fn matmat_in_out(xs: &[f32], w: &Mat, outs: &mut [f32], scratch: &mut Vec<f3
     assert_eq!(xs.len() % rows, 0, "xs not a whole number of slots");
     let b = xs.len() / rows;
     assert_eq!(outs.len(), b * cols);
+    matmat_in_out_cols(xs, w, outs, scratch, 0, cols);
+}
+
+/// [`matmat_in_out`] sharded over output columns across `par`'s lanes
+/// (inline without a pool).  Bit-identical to the serial kernel for every
+/// pool size; `scratch` holds one kernel scratch per lane.
+pub fn matmat_in_out_par(
+    xs: &[f32],
+    w: &Mat,
+    outs: &mut [f32],
+    scratch: &mut Vec<Vec<f32>>,
+    par: Par<'_>,
+) {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert!(rows > 0 && cols > 0, "empty weight matrix");
+    assert_eq!(xs.len() % rows, 0, "xs not a whole number of slots");
+    let b = xs.len() / rows;
+    assert_eq!(outs.len(), b * cols);
+    ensure_lanes(scratch, par.lanes());
+    let out_view = SharedSliceMut::new(outs);
+    let scr_view = SharedSliceMut::new(scratch);
+    par.run(cols, &|chunk, c0, c1| {
+        // Safety: lanes write disjoint column ranges / scratch entries.
+        let outs = unsafe { out_view.get() };
+        let scr = &mut unsafe { scr_view.get() }[chunk];
+        matmat_in_out_cols(xs, w, outs, scr, c0, c1);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (out, in) row-per-output layout — shard over output ROWS
+// ---------------------------------------------------------------------------
+
+/// Row-range core of [`matmat_rows`]: output rows `[j0, j1)` for every
+/// slot (streams the contiguous weight rows `w[j0..j1]` — a disjoint
+/// weight slice per lane).
+fn matmat_rows_range(w: &Mat, xs: &[f32], outs: &mut [f32], j0: usize, j1: usize) {
+    let (rows, cols) = (w.rows(), w.cols());
+    let b = xs.len() / cols;
     match w {
         Mat::F32 { data, .. } => {
-            for i in 0..rows {
-                let row = &data[i * cols..(i + 1) * cols];
+            for j in j0..j1 {
+                let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    let xi = xs[s * rows + i];
-                    if xi == 0.0 {
-                        continue;
-                    }
-                    let out = &mut outs[s * cols..(s + 1) * cols];
-                    for (o, &wij) in out.iter_mut().zip(row) {
-                        *o += xi * wij;
-                    }
+                    outs[s * rows + j] = dot_f32(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
         Mat::F16 { data, .. } => {
-            scratch.clear();
-            scratch.resize(cols, 0.0);
-            for i in 0..rows {
-                // decode the f16 row once; every slot reuses the f32 copy
-                for (r, &h) in scratch.iter_mut().zip(&data[i * cols..(i + 1) * cols]) {
-                    *r = f16_to_f32(h);
-                }
+            for j in j0..j1 {
+                let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    let xi = xs[s * rows + i];
-                    if xi == 0.0 {
-                        continue;
-                    }
-                    let out = &mut outs[s * cols..(s + 1) * cols];
-                    for (o, &wij) in out.iter_mut().zip(scratch.iter()) {
-                        *o += xi * wij;
-                    }
+                    outs[s * rows + j] = dot_f16(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
         Mat::I8 { data, scale, .. } => {
-            scratch.clear();
-            scratch.resize(b * cols, 0.0);
-            for i in 0..rows {
-                let row = &data[i * cols..(i + 1) * cols];
+            for j in j0..j1 {
+                let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    let xi = xs[s * rows + i];
-                    if xi == 0.0 {
-                        continue;
-                    }
-                    let acc = &mut scratch[s * cols..(s + 1) * cols];
-                    for (a, &q) in acc.iter_mut().zip(row) {
-                        *a += xi * q as f32;
-                    }
-                }
-            }
-            for s in 0..b {
-                let out = &mut outs[s * cols..(s + 1) * cols];
-                let acc = &scratch[s * cols..(s + 1) * cols];
-                for ((o, &a), &sc) in out.iter_mut().zip(acc).zip(scale) {
-                    *o += a * sc;
+                    outs[s * rows + j] = scale[j] * dot_i8(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -117,28 +255,63 @@ pub fn matmat_rows(w: &Mat, xs: &[f32], outs: &mut [f32]) {
     assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
     let b = xs.len() / cols;
     assert_eq!(outs.len(), b * rows);
+    matmat_rows_range(w, xs, outs, 0, rows);
+}
+
+/// [`matmat_rows`] sharded over output rows across `par`'s lanes — each
+/// lane streams a disjoint contiguous slice of the weight matrix.
+pub fn matmat_rows_par(w: &Mat, xs: &[f32], outs: &mut [f32], par: Par<'_>) {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert!(rows > 0 && cols > 0, "empty weight matrix");
+    assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
+    let b = xs.len() / cols;
+    assert_eq!(outs.len(), b * rows);
+    let out_view = SharedSliceMut::new(outs);
+    par.run(rows, &|_chunk, j0, j1| {
+        // Safety: lanes write disjoint output-row index sets.
+        let outs = unsafe { out_view.get() };
+        matmat_rows_range(w, xs, outs, j0, j1);
+    });
+}
+
+/// Index-range core of [`matmat_rows_indexed`]: selected positions
+/// `[k0, k1)` of `idx` for every slot.
+fn matmat_rows_indexed_range(
+    w: &Mat,
+    idx: &[u32],
+    xs: &[f32],
+    outs: &mut [f32],
+    k0: usize,
+    k1: usize,
+) {
+    let cols = w.cols();
+    let b = xs.len() / cols;
+    let k = idx.len();
     match w {
         Mat::F32 { data, .. } => {
-            for j in 0..rows {
+            for (kk, &j) in idx.iter().enumerate().take(k1).skip(k0) {
+                let j = j as usize;
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    outs[s * rows + j] = dot_f32(row, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * k + kk] = dot_f32(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
         Mat::F16 { data, .. } => {
-            for j in 0..rows {
+            for (kk, &j) in idx.iter().enumerate().take(k1).skip(k0) {
+                let j = j as usize;
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    outs[s * rows + j] = dot_f16(row, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * k + kk] = dot_f16(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
         Mat::I8 { data, scale, .. } => {
-            for j in 0..rows {
+            for (kk, &j) in idx.iter().enumerate().take(k1).skip(k0) {
+                let j = j as usize;
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    outs[s * rows + j] = scale[j] * dot_i8(row, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * k + kk] = scale[j] * dot_i8(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -154,33 +327,89 @@ pub fn matmat_rows_indexed(w: &Mat, idx: &[u32], xs: &[f32], outs: &mut [f32]) {
     assert!(cols > 0, "empty weight matrix");
     assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
     let b = xs.len() / cols;
+    assert_eq!(outs.len(), b * idx.len());
+    matmat_rows_indexed_range(w, idx, xs, outs, 0, idx.len());
+}
+
+/// [`matmat_rows_indexed`] sharded over the selected index positions —
+/// each lane streams a disjoint subset of the selected weight rows.
+pub fn matmat_rows_indexed_par(w: &Mat, idx: &[u32], xs: &[f32], outs: &mut [f32], par: Par<'_>) {
+    let cols = w.cols();
+    assert!(cols > 0, "empty weight matrix");
+    assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
+    let b = xs.len() / cols;
+    assert_eq!(outs.len(), b * idx.len());
+    let out_view = SharedSliceMut::new(outs);
+    par.run(idx.len(), &|_chunk, k0, k1| {
+        // Safety: lanes write disjoint `kk` positions of every slot.
+        let outs = unsafe { out_view.get() };
+        matmat_rows_indexed_range(w, idx, xs, outs, k0, k1);
+    });
+}
+
+/// Column-range core of [`accum_rows_indexed_batch`]: accumulates output
+/// columns `[c0, c1)`.  Row visit order (ascending `kk`) per column is
+/// unchanged, hence bit-identical to the full-range kernel.
+fn accum_rows_indexed_batch_cols(
+    w: &Mat,
+    idx: &[u32],
+    hs: &[f32],
+    b: usize,
+    outs: &mut [f32],
+    c0: usize,
+    c1: usize,
+) {
+    let cols = w.cols();
     let k = idx.len();
-    assert_eq!(outs.len(), b * k);
     match w {
         Mat::F32 { data, .. } => {
             for (kk, &j) in idx.iter().enumerate() {
-                let j = j as usize;
-                let row = &data[j * cols..(j + 1) * cols];
+                let row = &data[j as usize * cols + c0..j as usize * cols + c1];
                 for s in 0..b {
-                    outs[s * k + kk] = dot_f32(row, &xs[s * cols..(s + 1) * cols]);
+                    let hk = hs[s * k + kk];
+                    if hk == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols + c0..s * cols + c1];
+                    for (o, &wv) in out.iter_mut().zip(row) {
+                        *o += hk * wv;
+                    }
                 }
             }
         }
         Mat::F16 { data, .. } => {
             for (kk, &j) in idx.iter().enumerate() {
-                let j = j as usize;
-                let row = &data[j * cols..(j + 1) * cols];
+                let row = &data[j as usize * cols + c0..j as usize * cols + c1];
                 for s in 0..b {
-                    outs[s * k + kk] = dot_f16(row, &xs[s * cols..(s + 1) * cols]);
+                    let hk = hs[s * k + kk];
+                    if hk == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols + c0..s * cols + c1];
+                    for (o, &hh) in out.iter_mut().zip(row) {
+                        *o += hk * f16_to_f32(hh);
+                    }
                 }
             }
         }
         Mat::I8 { data, scale, .. } => {
             for (kk, &j) in idx.iter().enumerate() {
-                let j = j as usize;
-                let row = &data[j * cols..(j + 1) * cols];
+                let row = &data[j as usize * cols + c0..j as usize * cols + c1];
                 for s in 0..b {
-                    outs[s * k + kk] = scale[j] * dot_i8(row, &xs[s * cols..(s + 1) * cols]);
+                    let hk = hs[s * k + kk];
+                    if hk == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols + c0..s * cols + c1];
+                    for (o, &q) in out.iter_mut().zip(row) {
+                        *o += hk * q as f32;
+                    }
+                }
+            }
+            for s in 0..b {
+                let out = &mut outs[s * cols + c0..s * cols + c1];
+                for (o, &sc) in out.iter_mut().zip(&scale[c0..c1]) {
+                    *o *= sc;
                 }
             }
         }
@@ -200,64 +429,36 @@ pub fn accum_rows_indexed_batch(w: &Mat, idx: &[u32], hs: &[f32], b: usize, outs
     let k = idx.len();
     assert_eq!(hs.len(), b * k);
     assert_eq!(outs.len(), b * cols);
-    match w {
-        Mat::F32 { data, .. } => {
-            for (kk, &j) in idx.iter().enumerate() {
-                let row = &data[j as usize * cols..(j as usize + 1) * cols];
-                for s in 0..b {
-                    let hk = hs[s * k + kk];
-                    if hk == 0.0 {
-                        continue;
-                    }
-                    let out = &mut outs[s * cols..(s + 1) * cols];
-                    for (o, &wv) in out.iter_mut().zip(row) {
-                        *o += hk * wv;
-                    }
-                }
-            }
-        }
-        Mat::F16 { data, .. } => {
-            for (kk, &j) in idx.iter().enumerate() {
-                let row = &data[j as usize * cols..(j as usize + 1) * cols];
-                for s in 0..b {
-                    let hk = hs[s * k + kk];
-                    if hk == 0.0 {
-                        continue;
-                    }
-                    let out = &mut outs[s * cols..(s + 1) * cols];
-                    for (o, &hh) in out.iter_mut().zip(row) {
-                        *o += hk * f16_to_f32(hh);
-                    }
-                }
-            }
-        }
-        Mat::I8 { data, scale, .. } => {
-            for (kk, &j) in idx.iter().enumerate() {
-                let row = &data[j as usize * cols..(j as usize + 1) * cols];
-                for s in 0..b {
-                    let hk = hs[s * k + kk];
-                    if hk == 0.0 {
-                        continue;
-                    }
-                    let out = &mut outs[s * cols..(s + 1) * cols];
-                    for (o, &q) in out.iter_mut().zip(row) {
-                        *o += hk * q as f32;
-                    }
-                }
-            }
-            for s in 0..b {
-                let out = &mut outs[s * cols..(s + 1) * cols];
-                for (o, &sc) in out.iter_mut().zip(scale) {
-                    *o *= sc;
-                }
-            }
-        }
-    }
+    accum_rows_indexed_batch_cols(w, idx, hs, b, outs, 0, cols);
+}
+
+/// [`accum_rows_indexed_batch`] sharded over output columns — each lane
+/// accumulates a disjoint column slice of every selected weight row, in
+/// the same ascending row order as the serial kernel.
+pub fn accum_rows_indexed_batch_par(
+    w: &Mat,
+    idx: &[u32],
+    hs: &[f32],
+    b: usize,
+    outs: &mut [f32],
+    par: Par<'_>,
+) {
+    let cols = w.cols();
+    let k = idx.len();
+    assert_eq!(hs.len(), b * k);
+    assert_eq!(outs.len(), b * cols);
+    let out_view = SharedSliceMut::new(outs);
+    par.run(cols, &|_chunk, c0, c1| {
+        // Safety: lanes accumulate disjoint column ranges.
+        let outs = unsafe { out_view.get() };
+        accum_rows_indexed_batch_cols(w, idx, hs, b, outs, c0, c1);
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pool::ThreadPool;
     use crate::tensor::matvec::{
         accum_rows_indexed, matvec_in_out, matvec_rows, matvec_rows_indexed,
     };
@@ -380,5 +581,85 @@ mod tests {
         let mut o = vec![0.0f32; 0];
         matmat_rows_indexed(&w, &[], &xs, &mut o);
         assert!(o.is_empty());
+    }
+
+    /// Every `_par` form must be BITWISE identical to its serial kernel for
+    /// every dtype and several pool sizes (including pools larger than the
+    /// work) — the sharding contract of the module docs.
+    #[test]
+    fn par_kernels_bitwise_match_serial_for_all_pool_sizes() {
+        let mut r = XorShift::new(15);
+        let (rows, cols) = (23, 19);
+        let data = randv(&mut r, rows * cols);
+        let idx = vec![1u32, 2, 6, 9, 14, 21, 22];
+        let pools: Vec<ThreadPool> =
+            vec![ThreadPool::new(1), ThreadPool::new(3), ThreadPool::new(8)];
+        for scale_rows in [false, true] {
+            for w in variants(rows, cols, &data, scale_rows) {
+                let b = 3usize;
+                // --- matmat_in_out (B, rows) -> (B, cols)
+                if !scale_rows {
+                    let xs = randv(&mut r, b * rows);
+                    let residual = randv(&mut r, b * cols);
+                    let mut want = residual.clone();
+                    matmat_in_out(&xs, &w, &mut want, &mut Vec::new());
+                    for pool in &pools {
+                        let mut got = residual.clone();
+                        let mut scr = Vec::new();
+                        matmat_in_out_par(&xs, &w, &mut got, &mut scr, Par::new(Some(pool)));
+                        assert_eq!(got, want, "in_out, pool={}", pool.workers());
+                    }
+                    // --- accum_rows_indexed_batch (per-column scale)
+                    let mut hs = randv(&mut r, b * idx.len());
+                    for (i, h) in hs.iter_mut().enumerate() {
+                        if i % 4 == 0 {
+                            *h = 0.0;
+                        }
+                    }
+                    let mut want = vec![0.0f32; b * cols];
+                    accum_rows_indexed_batch(&w, &idx, &hs, b, &mut want);
+                    for pool in &pools {
+                        let mut got = vec![0.0f32; b * cols];
+                        accum_rows_indexed_batch_par(
+                            &w,
+                            &idx,
+                            &hs,
+                            b,
+                            &mut got,
+                            Par::new(Some(pool)),
+                        );
+                        assert_eq!(got, want, "accum, pool={}", pool.workers());
+                    }
+                } else {
+                    // --- matmat_rows / matmat_rows_indexed (per-row scale)
+                    let xs = randv(&mut r, b * cols);
+                    let mut want = vec![0.0f32; b * rows];
+                    matmat_rows(&w, &xs, &mut want);
+                    for pool in &pools {
+                        let mut got = vec![0.0f32; b * rows];
+                        matmat_rows_par(&w, &xs, &mut got, Par::new(Some(pool)));
+                        assert_eq!(got, want, "rows, pool={}", pool.workers());
+                    }
+                    let mut want = vec![0.0f32; b * idx.len()];
+                    matmat_rows_indexed(&w, &idx, &xs, &mut want);
+                    for pool in &pools {
+                        let mut got = vec![0.0f32; b * idx.len()];
+                        matmat_rows_indexed_par(&w, &idx, &xs, &mut got, Par::new(Some(pool)));
+                        assert_eq!(got, want, "rows_indexed, pool={}", pool.workers());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_without_pool_runs_inline() {
+        let w = Mat::from_f32(4, 5, (0..20).map(|i| i as f32).collect());
+        let xs = vec![1.0f32, 0.5, -1.0, 2.0];
+        let mut want = vec![0.0f32; 5];
+        matmat_in_out(&xs, &w, &mut want, &mut Vec::new());
+        let mut got = vec![0.0f32; 5];
+        matmat_in_out_par(&xs, &w, &mut got, &mut Vec::new(), Par::none());
+        assert_eq!(got, want);
     }
 }

@@ -1,4 +1,24 @@
-//! Fused matvec kernels — the hot path of token generation.
+//! Fused matvec kernels — the hot path of single-slot token generation
+//! and the per-slot REFERENCE the batched/parallel paths are tested
+//! against.
+//!
+//! # Dtype support matrix
+//!
+//! | kernel                  | f32 | f16 | i8 (scale)   | packed |
+//! |-------------------------|-----|-----|--------------|--------|
+//! | [`matvec_in_out`]       | yes | yes | per-column   | —      |
+//! | [`matvec_rows`]         | yes | yes | per-row      | —      |
+//! | [`matvec_rows_indexed`] | yes | yes | per-row      | —      |
+//! | [`accum_rows_indexed`]  | yes | yes | per-column   | —      |
+//! | [`bit_matvec`]          | —   | —   | —            | 1-bit  |
+//! | [`nib4_matvec`]         | —   | —   | —            | 4-bit  |
+//!
+//! # Determinism
+//!
+//! Every kernel is a fixed sequence of f32 operations (ascending weight
+//! rows, the LANES accumulator-array dots) — no runtime reassociation, so
+//! repeated calls are bit-identical, and the multi-vector `matmat` twins
+//! (serial AND pool-sharded) reproduce these results exactly per slot.
 //!
 //! Inner loops are shaped for LLVM auto-vectorization: contiguous slices,
 //! no bounds checks in the loop body (iterator zips), f32 accumulation.

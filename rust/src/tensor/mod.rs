@@ -16,7 +16,11 @@
 //! Each orientation exists in two arities: single-vector ([`matvec`], the
 //! per-slot decode path) and multi-vector ([`matmat`], the batched decode
 //! path that streams each weight row once per scheduling round and applies
-//! it to all B slot activations — bit-identical per slot to matvec).
+//! it to all B slot activations — bit-identical per slot to matvec).  The
+//! multi-vector kernels additionally have `_par` forms sharded over
+//! disjoint output ranges of a [`crate::pool::ThreadPool`] — bit-identical
+//! to their serial twins for every pool size (see the `matmat` module docs
+//! for the sharding contract and determinism guarantee).
 
 pub mod mat;
 pub mod matmat;

@@ -1,0 +1,195 @@
+//! Bit-exact equivalence for intra-round parallelism: `step_round` with
+//! `threads ∈ {1, 2, 8}` must produce IDENTICAL emitted token streams,
+//! recurrent states, logits and per-round weight-byte accounting
+//! (`round_weight_bytes`) across dense, sparse-FFN, hier-head and
+//! f16 + low-rank synthetic checkpoints.
+//!
+//! The sharded kernels never split a floating-point reduction across
+//! lanes and the WKV/predictor work is independent per slot/row, so the
+//! thread count may only change WHICH core computes an output range —
+//! never its value.  This test is the end-to-end enforcement of that
+//! contract (the per-kernel enforcement lives in `tensor::matmat` tests).
+//!
+//! Runs on synthetic checkpoints (testutil::synth) — no `make artifacts`
+//! needed, so this is tier-1 coverage.
+
+use std::path::PathBuf;
+
+use rwkv_lite::config::EngineConfig;
+use rwkv_lite::engine::session::Session;
+use rwkv_lite::engine::{state::RwkvState, RwkvEngine};
+use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn synth_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rwkv-threq-{}-{}", tag, std::process::id()))
+}
+
+/// Everything one serving run produces that must not depend on `threads`.
+#[derive(Debug, PartialEq)]
+struct RunTrace {
+    /// Emitted tokens per session, in emission order.
+    emitted: Vec<Vec<u32>>,
+    /// `round_weight_bytes` of every round, in order.
+    round_bytes: Vec<u64>,
+    /// Final logits of a standalone chunked prefill per prompt.
+    logits: Vec<Vec<f32>>,
+}
+
+fn final_states(sessions: &[Session]) -> Vec<RwkvState> {
+    sessions.iter().map(|s| s.state().clone()).collect()
+}
+
+fn assert_states_identical(a: &RwkvState, b: &RwkvState, ctx: &str) {
+    assert_eq!(a.att_x, b.att_x, "{ctx}: att_x state diverged");
+    assert_eq!(a.wkv, b.wkv, "{ctx}: wkv state diverged");
+    assert_eq!(a.ffn_x, b.ffn_x, "{ctx}: ffn_x state diverged");
+}
+
+/// Drive a mixed prefill/decode serving run + standalone prefills with
+/// `threads` compute lanes and record everything observable.
+fn run_with_threads(
+    cfg: &EngineConfig,
+    prompts: &[Vec<u32>],
+    threads: usize,
+) -> (RunTrace, Vec<RwkvState>) {
+    let mut cfg = cfg.clone();
+    cfg.threads = threads;
+    let mut engine = RwkvEngine::load(cfg).expect("load engine");
+    let mut sessions: Vec<Session> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut s = Session::new(&engine, i as u64, p);
+            s.max_tokens = 5; // greedy sampler is the Session default
+            s
+        })
+        .collect();
+    let mut emitted: Vec<Vec<u32>> = vec![Vec::new(); sessions.len()];
+    let mut round_bytes = Vec::new();
+    let mut rounds = 0;
+    while sessions.iter().any(|s| !s.is_done()) {
+        let report = engine.step_round(&mut sessions).expect("round");
+        for e in &report.emitted {
+            emitted[e.session].push(e.token);
+        }
+        round_bytes.push(report.round_weight_bytes);
+        rounds += 1;
+        assert!(rounds < 64, "round loop did not converge");
+    }
+    // standalone chunked prefill: logits must be bit-identical too
+    let logits = prompts
+        .iter()
+        .map(|p| {
+            let mut feed = vec![2u32]; // BOS
+            feed.extend_from_slice(p);
+            let mut st = engine.new_state();
+            engine.forward_sequence(&feed, &mut st).expect("prefill")
+        })
+        .collect();
+    (RunTrace { emitted, round_bytes, logits }, final_states(&sessions))
+}
+
+/// The core check: every thread count yields the same trace and states.
+fn check_thread_equivalence(tag: &str, spec: &SynthSpec, cfg_mut: impl Fn(&mut EngineConfig)) {
+    let dir = synth_dir(tag);
+    write_synth_rwkv(&dir, "m", spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.prefill_chunk = 3; // long prompts still prefill while short decode
+    cfg_mut(&mut cfg);
+    // mixed lengths: genuinely mixed prefill+decode rounds under chunk 3
+    let prompts: Vec<Vec<u32>> = vec![
+        (0..9).map(|i| ((11 + 5 * i) % spec.vocab) as u32).collect(),
+        vec![7],
+        vec![4, 40, 4, 44],
+        (0..13).map(|i| ((3 + 17 * i) % spec.vocab) as u32).collect(),
+    ];
+    let (want, want_states) = run_with_threads(&cfg, &prompts, THREADS[0]);
+    assert!(want.round_bytes.iter().any(|&b| b > 0), "{tag}: rounds stream weight bytes");
+    for &threads in &THREADS[1..] {
+        let (got, got_states) = run_with_threads(&cfg, &prompts, threads);
+        assert_eq!(
+            got.emitted, want.emitted,
+            "{tag} threads={threads}: emitted streams must be bit-identical"
+        );
+        assert_eq!(
+            got.round_bytes, want.round_bytes,
+            "{tag} threads={threads}: round_weight_bytes must not depend on threads"
+        );
+        assert_eq!(
+            got.logits, want.logits,
+            "{tag} threads={threads}: prefill logits must be bit-identical"
+        );
+        for (i, (a, b)) in want_states.iter().zip(&got_states).enumerate() {
+            assert_states_identical(a, b, &format!("{tag} threads={threads} session {i}"));
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn threads_equivalent_dense_f32() {
+    let mut spec = SynthSpec::tiny();
+    spec.predictors = false;
+    spec.hier_head = false;
+    check_thread_equivalence("dense-f32", &spec, |_| {});
+}
+
+#[test]
+fn threads_equivalent_sparse_ffn() {
+    let spec = SynthSpec::tiny();
+    check_thread_equivalence("sparse", &spec, |c| {
+        c.sparse_ffn = true;
+    });
+}
+
+#[test]
+fn threads_equivalent_hier_head() {
+    let spec = SynthSpec::tiny();
+    check_thread_equivalence("hier", &spec, |c| {
+        c.hier_head = true;
+    });
+}
+
+#[test]
+fn threads_equivalent_all_techniques_f16_lowrank() {
+    let mut spec = SynthSpec::tiny();
+    spec.f16 = true;
+    spec.lowrank = true;
+    spec.seed = 0xBEEF;
+    check_thread_equivalence("all-f16-lr", &spec, |c| {
+        c.sparse_ffn = true;
+        c.hier_head = true;
+        c.emb_cache = true;
+    });
+}
+
+/// The threaded round must also match the SINGLE-SLOT sequential path
+/// (forward_hidden per token), tying thread equivalence back to the
+/// per-slot reference the other equivalence suites use.
+#[test]
+fn threaded_round_matches_sequential_reference() {
+    let spec = SynthSpec::tiny();
+    let dir = synth_dir("seqref");
+    write_synth_rwkv(&dir, "m", &spec).unwrap();
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = true;
+    let feed: Vec<u32> = vec![2, 9, 21, 3, 15, 40];
+    // sequential per-token reference, single-threaded engine
+    cfg.threads = 1;
+    let mut seq = RwkvEngine::load(cfg.clone()).unwrap();
+    let mut st_ref = seq.new_state();
+    for &t in &feed[..feed.len() - 1] {
+        seq.forward_hidden(t, &mut st_ref).unwrap();
+    }
+    let want = seq.forward_token(feed[feed.len() - 1], &mut st_ref).unwrap();
+    // fused chunked prefill on an 8-lane engine
+    cfg.threads = 8;
+    let mut fused = RwkvEngine::load(cfg).unwrap();
+    let mut st = fused.new_state();
+    let got = fused.forward_sequence(&feed, &mut st).unwrap();
+    assert_eq!(got, want, "threaded fused prefill == sequential per-token logits");
+    assert_states_identical(&st_ref, &st, "seqref");
+    std::fs::remove_dir_all(&dir).ok();
+}
