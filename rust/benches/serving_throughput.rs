@@ -15,16 +15,26 @@
 //! (bit-identical output — the knob only moves compute across cores)
 //! plus the per-phase round split (wkv / matmul / head).
 //!
+//! Part 4 — layerwise streaming: prefetch on/off × threads at fixed B,
+//! showing the double-buffered block prefetcher hides the per-layer load
+//! stall: the round thread's exposed block acquisition time
+//! (`round_block_load_secs`) collapses to the prefetch wait
+//! (`round_prefetch_wait_secs`), which stays well under the off-row's
+//! block load time — the streaming genuinely overlapped compute.
+//!
 //! Run: `cargo bench --bench serving_throughput` (artifacts required;
 //! falls back to a synthetic checkpoint when they are missing so the
 //! bench is always runnable).  `-- --smoke` runs a seconds-long variant
 //! (B<=2, few tokens) used by CI to exercise the serving path in release
 //! mode; `-- --threads N` pins the thread sweep to {1, N} and runs the
-//! decode/prefill sweeps with N compute threads (CI smokes `--threads 4`).
+//! decode/prefill sweeps with N compute threads (CI smokes `--threads 4`);
+//! `-- --strategy layerwise` runs parts 1–3 under layerwise loading so CI
+//! exercises the streaming+prefetch path in release (part 4 always runs
+//! both prefetch settings).
 
 use std::path::{Path, PathBuf};
 
-use rwkv_lite::config::EngineConfig;
+use rwkv_lite::config::{EngineConfig, LoadStrategy};
 use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator, Event, Request};
 use rwkv_lite::engine::session::Session;
 use rwkv_lite::engine::RwkvEngine;
@@ -53,6 +63,19 @@ fn main() {
                 n
             }
         });
+    // `--strategy full|layerwise` (or `--strategy=...`): the loading
+    // strategy for parts 1–3 (part 4 is always layerwise — that is its
+    // point); invalid values abort
+    let strategy: LoadStrategy = args
+        .iter()
+        .enumerate()
+        .find_map(|(i, a)| {
+            a.strip_prefix("--strategy=").map(str::to_string).or_else(|| {
+                (a == "--strategy").then(|| args.get(i + 1).cloned().unwrap_or_default())
+            })
+        })
+        .map(|v| LoadStrategy::parse(&v).unwrap_or_else(|e| panic!("{e}")))
+        .unwrap_or(LoadStrategy::Full);
     let mut model = "rwkv-ours-small".to_string();
     let mut artifacts = PathBuf::from("artifacts");
     let mut synth_guard: Option<PathBuf> = None;
@@ -75,9 +98,10 @@ fn main() {
     }
 
     let threads = pinned.unwrap_or(1);
-    decode_sweep(&model, &artifacts, smoke, threads);
-    prefill_sweep(&model, &artifacts, smoke, threads);
-    thread_sweep(&model, &artifacts, smoke, pinned);
+    decode_sweep(&model, &artifacts, smoke, threads, strategy);
+    prefill_sweep(&model, &artifacts, smoke, threads, strategy);
+    thread_sweep(&model, &artifacts, smoke, pinned, strategy);
+    layerwise_sweep(&model, &artifacts, smoke, pinned);
 
     if let Some(dir) = synth_guard {
         std::fs::remove_dir_all(&dir).ok();
@@ -85,11 +109,18 @@ fn main() {
 }
 
 /// Aggregate decode throughput vs dynamic batch size (coordinator path).
-fn decode_sweep(model: &str, artifacts: &Path, smoke: bool, threads: usize) {
+fn decode_sweep(
+    model: &str,
+    artifacts: &Path,
+    smoke: bool,
+    threads: usize,
+    strategy: LoadStrategy,
+) {
     let (batches, max_tokens, req_mult): (&[usize], usize, usize) =
         if smoke { (&[1, 2], 6, 2) } else { (&[1, 2, 4, 8], 24, 3) };
     println!(
-        "serving throughput vs batch size ({model}, {max_tokens} tok/request, {threads} threads)\n"
+        "serving throughput vs batch size ({model}, {max_tokens} tok/request, {threads} threads, {} loading)\n",
+        strategy.name()
     );
     println!(
         "{:>6} {:>10} {:>14} {:>12} {:>14} {:>14}",
@@ -98,6 +129,7 @@ fn decode_sweep(model: &str, artifacts: &Path, smoke: bool, threads: usize) {
     for &batch in batches {
         let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
         cfg.threads = threads;
+        cfg.strategy = strategy;
         let coordinator = Coordinator::spawn(
             move || RwkvEngine::load(cfg),
             BatchPolicy { max_batch: batch, window_ms: 2 },
@@ -148,11 +180,18 @@ fn decode_sweep(model: &str, artifacts: &Path, smoke: bool, threads: usize) {
 
 /// Prompt-heavy sweep: weight bytes per prompt token vs `prefill_chunk`
 /// (engine-level session rounds; chunk=1 is the old per-token loop).
-fn prefill_sweep(model: &str, artifacts: &Path, smoke: bool, threads: usize) {
+fn prefill_sweep(
+    model: &str,
+    artifacts: &Path,
+    smoke: bool,
+    threads: usize,
+    strategy: LoadStrategy,
+) {
     let (chunks, p, prompt_len): (&[usize], usize, usize) =
         if smoke { (&[1, 8], 2, 24) } else { (&[1, 2, 4, 8, 16], 4, 96) };
     println!(
-        "\nprefill amortization ({model}, {p} concurrent prompts x {prompt_len} tokens)\n"
+        "\nprefill amortization ({model}, {p} concurrent prompts x {prompt_len} tokens, {} loading)\n",
+        strategy.name()
     );
     println!(
         "{:>6} {:>16} {:>18} {:>16}",
@@ -162,6 +201,7 @@ fn prefill_sweep(model: &str, artifacts: &Path, smoke: bool, threads: usize) {
         let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
         cfg.prefill_chunk = chunk;
         cfg.threads = threads;
+        cfg.strategy = strategy;
         let mut engine = RwkvEngine::load(cfg).expect("load engine");
         // token ids stay small so the prompt is valid for any vocab size
         let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| 2 + (i * 7) % 64).collect();
@@ -198,7 +238,13 @@ fn prefill_sweep(model: &str, artifacts: &Path, smoke: bool, threads: usize) {
 /// Intra-round parallelism: aggregate decode tok/s over a threads × batch
 /// grid (engine-level rounds), with the per-phase round split.  Output is
 /// bit-identical across the threads axis — only the wall clock moves.
-fn thread_sweep(model: &str, artifacts: &Path, smoke: bool, pinned: Option<usize>) {
+fn thread_sweep(
+    model: &str,
+    artifacts: &Path,
+    smoke: bool,
+    pinned: Option<usize>,
+    strategy: LoadStrategy,
+) {
     let threads_list: Vec<usize> = match pinned {
         Some(n) if n > 1 => vec![1, n],
         Some(_) => vec![1],
@@ -215,6 +261,7 @@ fn thread_sweep(model: &str, artifacts: &Path, smoke: bool, pinned: Option<usize
         for &threads in &threads_list {
             let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
             cfg.threads = threads;
+            cfg.strategy = strategy;
             let mut engine = RwkvEngine::load(cfg).expect("load engine");
             let mut sessions: Vec<Session> = (0..batch)
                 .map(|i| {
@@ -260,4 +307,79 @@ fn thread_sweep(model: &str, artifacts: &Path, smoke: bool, pinned: Option<usize
         }
     }
     println!("\ntok/s rises with threads at fixed batch; output is bit-identical across rows");
+}
+
+/// Layerwise streaming: prefetch on/off × threads at fixed batch
+/// (engine-level decode rounds).  The `block ms` column is the round
+/// thread's total exposed block-acquisition stall per round; `wait ms` is
+/// the part spent waiting for an in-flight background load.  With
+/// prefetch on, `block ms` ≈ `wait ms` and both sit well under the
+/// off-row's `block ms` — block N+1 streamed while block N computed.
+/// Output is bit-identical across every row.
+fn layerwise_sweep(model: &str, artifacts: &Path, smoke: bool, pinned: Option<usize>) {
+    let threads_list: Vec<usize> = match pinned {
+        Some(n) if n > 1 => vec![1, n],
+        Some(_) => vec![1],
+        None if smoke => vec![1, 2],
+        None => vec![1, 2, 4],
+    };
+    let (batch, steps): (usize, usize) = if smoke { (2, 6) } else { (4, 24) };
+    println!("\nlayerwise streaming: decode rounds, prefetch on/off x threads (batch {batch})\n");
+    println!(
+        "{:>8} {:>9} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "threads", "prefetch", "agg tok/s", "round ms", "block ms", "wait ms", "blocks"
+    );
+    for &threads in &threads_list {
+        for &prefetch in &[false, true] {
+            let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+            cfg.strategy = LoadStrategy::Layerwise;
+            cfg.threads = threads;
+            cfg.prefetch = prefetch;
+            let mut engine = RwkvEngine::load(cfg).expect("load engine");
+            let mut sessions: Vec<Session> = (0..batch)
+                .map(|i| {
+                    let mut s = Session::new(&engine, i as u64, &[2, 10 + i as u32]);
+                    s.max_tokens = steps + 8; // never finishes inside the loop
+                    s
+                })
+                .collect();
+            // move every session into Decode (consume the tiny prompts)
+            while sessions
+                .iter()
+                .any(|s| !matches!(s.phase(), rwkv_lite::engine::session::Phase::Decode))
+            {
+                engine.step_round(&mut sessions).expect("prefill round");
+            }
+            let skip = engine.metrics.timings("round_secs").len();
+            let blocks0 = engine.metrics.counter("blocks_prefetched");
+            let wall = Stopwatch::start();
+            for _ in 0..steps {
+                engine.step_round(&mut sessions).expect("decode round");
+            }
+            let secs = wall.elapsed_secs();
+            let ms = |name: &str| {
+                let t = engine.metrics.timings(name);
+                let t = &t[skip.min(t.len())..];
+                if t.is_empty() {
+                    0.0
+                } else {
+                    t.iter().sum::<f64>() / t.len() as f64 * 1e3
+                }
+            };
+            println!(
+                "{:>8} {:>9} {:>12.1} {:>12.3} {:>12.3} {:>12.3} {:>8}",
+                threads,
+                if prefetch { "on" } else { "off" },
+                (steps * batch) as f64 / secs,
+                ms("round_secs"),
+                ms("round_block_load_secs"),
+                ms("round_prefetch_wait_secs"),
+                engine.metrics.counter("blocks_prefetched") - blocks0,
+            );
+        }
+    }
+    println!(
+        "\nprefetch on: the exposed block stall collapses to the prefetch wait \
+         (wait << the off-row's block ms — streaming overlapped compute)"
+    );
 }

@@ -75,6 +75,14 @@ pub struct EngineConfig {
     /// Max prompt tokens a prefill session advances per scheduling round
     /// (the `(B', T)` fused-prefill chunk; clamped to >= 1 at use).
     pub prefill_chunk: usize,
+    /// Double-buffered block prefetch for [`LoadStrategy::Layerwise`]:
+    /// while the round computes block N, a background I/O task streams
+    /// block N+1 so the layer boundary only pays the (usually tiny)
+    /// remaining wait instead of a full block load.  Bit-identical either
+    /// way; costs ~one extra resident block (§5.1 accounting reports the
+    /// double-buffered peak).  Ignored for `Full` loading and the XLA
+    /// backend.  On by default.
+    pub prefetch: bool,
     /// Intra-round compute lanes (sharded kernels + per-slot WKV /
     /// predictor): `0` = one lane per available core, `1` =
     /// single-threaded, `k` = `k` lanes.  Rounds are bit-identical for
@@ -96,6 +104,7 @@ impl Default for EngineConfig {
             emb_cache_capacity: 0,
             hh_p_min: 0.0,
             prefill_chunk: 8,
+            prefetch: true,
             threads: 0,
             seed: 0,
         }
@@ -142,6 +151,7 @@ impl EngineConfig {
             ("emb_cache_capacity", json::num(self.emb_cache_capacity as f64)),
             ("hh_p_min", json::num(self.hh_p_min as f64)),
             ("prefill_chunk", json::num(self.prefill_chunk as f64)),
+            ("prefetch", Value::Bool(self.prefetch)),
             ("threads", json::num(self.threads as f64)),
             ("seed", json::num(self.seed as f64)),
         ])
@@ -168,6 +178,7 @@ impl EngineConfig {
         c.emb_cache_capacity = v.f64_at(&["emb_cache_capacity"]).unwrap_or(0.0) as usize;
         c.hh_p_min = v.f64_at(&["hh_p_min"]).unwrap_or(0.0) as f32;
         c.prefill_chunk = v.f64_at(&["prefill_chunk"]).unwrap_or(8.0) as usize;
+        c.prefetch = b("prefetch", true);
         c.threads = v.f64_at(&["threads"]).unwrap_or(0.0) as usize;
         c.seed = v.f64_at(&["seed"]).unwrap_or(0.0) as u64;
         Ok(c)
@@ -183,12 +194,22 @@ mod tests {
         let mut c = EngineConfig::all_techniques("rwkv-ours-small", PathBuf::from("artifacts"));
         c.strategy = LoadStrategy::Layerwise;
         c.threads = 4;
+        c.prefetch = false;
         let v = c.to_json();
         let c2 = EngineConfig::from_json(&v).unwrap();
         assert_eq!(c2.model, c.model);
         assert_eq!(c2.strategy, c.strategy);
         assert_eq!(c2.threads, 4);
+        assert!(!c2.prefetch, "prefetch=false must survive the round trip");
         assert!(c2.sparse_ffn && c2.hier_head && c2.emb_cache);
+    }
+
+    #[test]
+    fn prefetch_defaults_on() {
+        assert!(EngineConfig::default().prefetch);
+        // absent key (older config JSON) keeps the default
+        let c = EngineConfig::from_json(&json::obj(vec![])).unwrap();
+        assert!(c.prefetch);
     }
 
     #[test]

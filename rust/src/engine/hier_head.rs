@@ -9,7 +9,13 @@
 //! distribution smooth — assigning -inf wrecks perplexity (paper §3.3).
 //!
 //! [`HierHead::logits_batch`] serves a whole scheduling round: H1 streams
-//! once for all slots (tensor::matmat), and the exact head rows touched by
+//! once for all slots (`tensor::matmat_rows_par`, output rows sharded
+//! across the pool), and the exact-row scoring — the O(rows·D) bulk of the
+//! head at high B — fans out over the pool too: every (slot, token) dot
+//! product is an independent output position, so the flat job list shards
+//! across lanes exactly like `tensor::matmat_rows_indexed_par` shards
+//! selected index positions.  Sharding never cuts a reduction, so results
+//! are bit-identical for every thread count.  Exact head rows touched by
 //! the round are accounted as the cross-slot UNION (a row streamed for one
 //! slot serves every other slot that selected its cluster).
 
@@ -19,7 +25,8 @@ use anyhow::Result;
 
 use crate::engine::weights::WeightStore;
 use crate::metrics::{Group, MemTracker};
-use crate::tensor::{matmat_rows, matvec_rows, Mat};
+use crate::pool::{Par, SharedSliceMut};
+use crate::tensor::{matmat_rows_par, matvec_rows, Mat};
 use crate::util::softmax_inplace;
 
 pub struct HierHead {
@@ -69,95 +76,13 @@ impl HierHead {
         self.h1.nbytes()
     }
 
-    /// Compute the (approximate) full-vocabulary logits for `hidden`.
-    pub fn logits(
-        &mut self,
-        store: &WeightStore,
-        tracker: &MemTracker,
-        hidden: &[f32],
-        out: &mut [f32],
-    ) -> Result<HeadStats> {
-        let c = self.h1.rows();
-        // Step 1: cluster probabilities (Eq. 7)
-        let mut cl = vec![0.0f32; c];
-        matvec_rows(&self.h1, hidden, &mut cl);
-        let (clusters_selected, n_loaded, row_bytes) =
-            self.logits_with_cl(store, hidden, &mut cl, out, None)?;
-        let bytes = n_loaded as u64 * row_bytes;
-        tracker.load(Group::Head, bytes);
-        tracker.unload(Group::Head, bytes);
-        self.tokens += 1;
-        self.rows_loaded_sum += n_loaded as u64;
-        self.bytes_streamed += bytes;
-        Ok(HeadStats { clusters_selected, tokens_loaded: n_loaded, bytes })
-    }
-
-    /// Batched-round logits: one H1 streaming pass scores every slot's
-    /// clusters, then each slot runs the exact per-slot selection (bit-
-    /// identical to [`HierHead::logits`]).  Exact head-row bytes are
-    /// accounted as the cross-slot union — a row streams once per round.
-    /// Returns aggregated stats: `clusters_selected` summed over slots,
-    /// `tokens_loaded` / `bytes` for the union.
-    pub fn logits_batch(
-        &mut self,
-        store: &WeightStore,
-        tracker: &MemTracker,
-        hiddens: &[f32],
-        outs: &mut [Vec<f32>],
-    ) -> Result<HeadStats> {
-        let c = self.h1.rows();
-        let d = self.h1.cols();
-        let b = outs.len();
-        debug_assert_eq!(hiddens.len(), b * d);
-        let mut cls = vec![0.0f32; b * c];
-        matmat_rows(&self.h1, hiddens, &mut cls);
-        let mut head_row_bytes = 0u64;
-        let mut loaded_union: Vec<u32> = Vec::new();
-        let mut clusters_sum = 0usize;
-        for (s, out) in outs.iter_mut().enumerate() {
-            let hidden = &hiddens[s * d..(s + 1) * d];
-            let (sel, n_loaded, row_bytes) = self.logits_with_cl(
-                store,
-                hidden,
-                &mut cls[s * c..(s + 1) * c],
-                out,
-                Some(&mut loaded_union),
-            )?;
-            head_row_bytes = row_bytes;
-            clusters_sum += sel;
-            self.tokens += 1;
-            self.rows_loaded_sum += n_loaded as u64;
-        }
-        loaded_union.sort_unstable();
-        loaded_union.dedup();
-        let bytes = loaded_union.len() as u64 * head_row_bytes;
-        tracker.load(Group::Head, bytes);
-        tracker.unload(Group::Head, bytes);
-        self.bytes_streamed += bytes;
-        Ok(HeadStats {
-            clusters_selected: clusters_sum,
-            tokens_loaded: loaded_union.len(),
-            bytes,
-        })
-    }
-
-    /// Shared per-slot core: softmax the cluster scores, select clusters,
-    /// stream exact logits, spread the pseudo logit.  When `loaded` is
-    /// given, each loaded token row is appended (the batched caller
-    /// accounts bytes as the round union; the per-slot caller passes
-    /// `None` to stay allocation-free).  Returns (clusters selected,
-    /// rows loaded, head row bytes).
-    fn logits_with_cl(
-        &self,
-        store: &WeightStore,
-        hidden: &[f32],
-        cl: &mut [f32],
-        out: &mut [f32],
-        mut loaded: Option<&mut Vec<u32>>,
-    ) -> Result<(usize, usize, u64)> {
-        let c = cl.len();
+    /// Softmax the cluster scores in place and apply the selection rule
+    /// (Eq. 7): clusters in descending probability until `p_min` mass is
+    /// covered, bounded by `k_min`/`k_max`.  Returns the selected cluster
+    /// ids (in selection order) and their cumulative probability.
+    fn select_clusters(&self, cl: &mut [f32]) -> (Vec<usize>, f32) {
         softmax_inplace(cl);
-        let mut order: Vec<usize> = (0..c).collect();
+        let mut order: Vec<usize> = (0..cl.len()).collect();
         order.sort_by(|&a, &b| cl[b].partial_cmp(&cl[a]).unwrap());
         let mut csum = 0.0f32;
         let mut selected = Vec::with_capacity(self.k_max);
@@ -170,50 +95,171 @@ impl HierHead {
                 break;
             }
         }
+        (selected, csum)
+    }
+
+    /// Step 3: spread the pseudo logit (Eq. 9) over tokens of unselected
+    /// clusters.  From softmax algebra:
+    ///   S_known = sum_{known} exp(l);  P_known = csum (cluster head)
+    ///   S_unknown = S_known * (1 - P_known) / P_known
+    ///   pseudo = ln(S_unknown / N_unknown)
+    fn pseudo_fill(
+        &self,
+        selected: &[usize],
+        csum: f32,
+        max_known: f32,
+        n_loaded: usize,
+        out: &mut [f32],
+    ) {
+        let n_unknown = out.len() - n_loaded;
+        if n_unknown == 0 {
+            return;
+        }
+        let mut s_known = 0.0f64;
+        for &ci in selected {
+            for &tok in &self.clusters[ci] {
+                s_known += ((out[tok as usize] - max_known) as f64).exp();
+            }
+        }
+        let p_known = csum.clamp(1e-4, 1.0 - 1e-6) as f64;
+        let s_unknown = s_known * (1.0 - p_known) / p_known;
+        let pseudo = (s_unknown / n_unknown as f64).ln() as f32 + max_known;
+        let mut selected_mask = vec![false; self.clusters.len()];
+        for &ci in selected {
+            selected_mask[ci] = true;
+        }
+        for (tok, o) in out.iter_mut().enumerate() {
+            if self
+                .assign
+                .get(tok)
+                .map(|&cc| !selected_mask[cc as usize])
+                .unwrap_or(true)
+            {
+                *o = pseudo;
+            }
+        }
+    }
+
+    /// Compute the (approximate) full-vocabulary logits for `hidden`.
+    pub fn logits(
+        &mut self,
+        store: &WeightStore,
+        tracker: &MemTracker,
+        hidden: &[f32],
+        out: &mut [f32],
+    ) -> Result<HeadStats> {
+        let c = self.h1.rows();
+        // Step 1: cluster probabilities (Eq. 7)
+        let mut cl = vec![0.0f32; c];
+        matvec_rows(&self.h1, hidden, &mut cl);
+        let (selected, csum) = self.select_clusters(&mut cl);
         // Step 2: exact logits for tokens of selected clusters (Eq. 8)
         let head = store.row_view("head")?;
         let mut n_loaded = 0usize;
         let mut max_known = f32::NEG_INFINITY;
-        let mut selected_mask = vec![false; c];
         for &ci in &selected {
-            selected_mask[ci] = true;
             for &tok in &self.clusters[ci] {
                 let lg = head.dot_row(tok as usize, hidden);
                 out[tok as usize] = lg;
                 max_known = max_known.max(lg);
                 n_loaded += 1;
-                if let Some(l) = loaded.as_mut() {
-                    l.push(tok);
-                }
             }
         }
-        // Step 3: pseudo logits (Eq. 9).  From softmax algebra:
-        //   S_known = sum_{known} exp(l);  P_known = csum (cluster head)
-        //   S_unknown = S_known * (1 - P_known) / P_known
-        //   pseudo = ln(S_unknown / N_unknown)
-        let n_unknown = out.len() - n_loaded;
-        if n_unknown > 0 {
-            let mut s_known = 0.0f64;
+        self.pseudo_fill(&selected, csum, max_known, n_loaded, out);
+        let bytes = n_loaded as u64 * head.row_bytes();
+        tracker.load(Group::Head, bytes);
+        tracker.unload(Group::Head, bytes);
+        self.tokens += 1;
+        self.rows_loaded_sum += n_loaded as u64;
+        self.bytes_streamed += bytes;
+        Ok(HeadStats { clusters_selected: selected.len(), tokens_loaded: n_loaded, bytes })
+    }
+
+    /// Batched-round logits: one H1 streaming pass scores every slot's
+    /// clusters, then the exact per-(slot, token) head rows are scored
+    /// across the pool (bit-identical to [`HierHead::logits`] per slot —
+    /// each dot product is one whole reduction, the pool only picks who
+    /// computes it).  Exact head-row bytes are accounted as the cross-slot
+    /// union — a row streams once per round.  Returns aggregated stats:
+    /// `clusters_selected` summed over slots, `tokens_loaded` / `bytes`
+    /// for the union.
+    pub fn logits_batch(
+        &mut self,
+        store: &WeightStore,
+        tracker: &MemTracker,
+        hiddens: &[f32],
+        outs: &mut [Vec<f32>],
+        par: Par<'_>,
+    ) -> Result<HeadStats> {
+        let c = self.h1.rows();
+        let d = self.h1.cols();
+        let b = outs.len();
+        debug_assert_eq!(hiddens.len(), b * d);
+        let mut cls = vec![0.0f32; b * c];
+        matmat_rows_par(&self.h1, hiddens, &mut cls, par);
+        // per-slot cluster selection (cheap serial math), flattened into
+        // one (slot, token) job list in per-slot selection order
+        let mut selections: Vec<(Vec<usize>, f32)> = Vec::with_capacity(b);
+        let mut jobs: Vec<(u32, u32)> = Vec::new();
+        let mut slot_job0: Vec<usize> = Vec::with_capacity(b + 1);
+        for s in 0..b {
+            let (selected, csum) = self.select_clusters(&mut cls[s * c..(s + 1) * c]);
+            slot_job0.push(jobs.len());
             for &ci in &selected {
                 for &tok in &self.clusters[ci] {
-                    s_known += ((out[tok as usize] - max_known) as f64).exp();
+                    jobs.push((s as u32, tok));
                 }
             }
-            let p_known = csum.clamp(1e-4, 1.0 - 1e-6) as f64;
-            let s_unknown = s_known * (1.0 - p_known) / p_known;
-            let pseudo = (s_unknown / n_unknown as f64).ln() as f32 + max_known;
-            for (tok, o) in out.iter_mut().enumerate() {
-                if self
-                    .assign
-                    .get(tok)
-                    .map(|&cc| !selected_mask[cc as usize])
-                    .unwrap_or(true)
-                {
-                    *o = pseudo;
-                }
-            }
+            selections.push((selected, csum));
         }
-        Ok((selected.len(), n_loaded, head.row_bytes()))
+        slot_job0.push(jobs.len());
+        // exact-row scoring sharded over flat job positions — the
+        // streamed-row analogue of `matmat_rows_indexed_par`: each lane
+        // owns a disjoint contiguous slice of output positions and
+        // streams only the head rows those positions name
+        let head = store.row_view("head")?;
+        let mut scores = vec![0.0f32; jobs.len()];
+        {
+            let view = SharedSliceMut::new(&mut scores);
+            par.run(jobs.len(), &|_lane, k0, k1| {
+                // Safety: lanes write disjoint score positions.
+                let scores = unsafe { view.get() };
+                for (k, &(s, tok)) in jobs.iter().enumerate().take(k1).skip(k0) {
+                    let s = s as usize;
+                    scores[k] = head.dot_row(tok as usize, &hiddens[s * d..(s + 1) * d]);
+                }
+            });
+        }
+        // scatter + pseudo logits per slot, in the exact per-slot order of
+        // the serial path
+        let mut loaded_union: Vec<u32> = Vec::new();
+        let mut clusters_sum = 0usize;
+        for (s, out) in outs.iter_mut().enumerate() {
+            let (selected, csum) = &selections[s];
+            let js = &jobs[slot_job0[s]..slot_job0[s + 1]];
+            let sc = &scores[slot_job0[s]..slot_job0[s + 1]];
+            let mut max_known = f32::NEG_INFINITY;
+            for (&(_, tok), &lg) in js.iter().zip(sc) {
+                out[tok as usize] = lg;
+                max_known = max_known.max(lg);
+                loaded_union.push(tok);
+            }
+            self.pseudo_fill(selected, *csum, max_known, js.len(), out);
+            clusters_sum += selected.len();
+        }
+        self.tokens += b as u64;
+        self.rows_loaded_sum += jobs.len() as u64;
+        loaded_union.sort_unstable();
+        loaded_union.dedup();
+        let bytes = loaded_union.len() as u64 * head.row_bytes();
+        tracker.load(Group::Head, bytes);
+        tracker.unload(Group::Head, bytes);
+        self.bytes_streamed += bytes;
+        Ok(HeadStats {
+            clusters_selected: clusters_sum,
+            tokens_loaded: loaded_union.len(),
+            bytes,
+        })
     }
 
     pub fn mean_tokens_loaded(&self) -> f64 {

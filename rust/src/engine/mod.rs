@@ -34,6 +34,15 @@
 //! output range.  Per-phase timing lands in the engine registry as
 //! `round_wkv_secs` / `round_matmul_secs` / `round_pred_secs` /
 //! `round_head_secs`.
+//!
+//! Layerwise streaming overlap: under `LoadStrategy::Layerwise` with
+//! `cfg.prefetch` (the default) a [`weights::BlockPrefetcher`]
+//! double-buffers the block stream — a dedicated I/O worker loads block
+//! N+1 while block N computes, and both layer loops acquire blocks
+//! through the same `layerwise_block()` swap point.  Bit-identical to
+//! synchronous loading (`tests/prefetch_equivalence.rs`); the exposed
+//! stall is observable as `round_block_load_secs` /
+//! `round_prefetch_wait_secs` (+ the `blocks_prefetched` counter).
 
 pub mod emb_cache;
 pub mod hier_head;
@@ -62,7 +71,7 @@ use hier_head::HierHead;
 use sampler::Sampler;
 use sparse_ffn::SparsePredictor;
 use state::RwkvState;
-use weights::{BlockW, LnW, WeightStore};
+use weights::{BlockPrefetcher, BlockW, LnW, WeightStore};
 use xla_backend::XlaRwkv;
 
 /// Static shape info (from the manifest).
@@ -93,6 +102,17 @@ pub struct StepStats {
     pub wkv_secs: f64,
     pub matmul_secs: f64,
     pub pred_secs: f64,
+    /// Layerwise loading: total time the round thread spent stalled
+    /// acquiring blocks (synchronous loads + prefetch waits).  With
+    /// prefetch on this collapses to `prefetch_wait_secs`; with it off it
+    /// is the full per-round block streaming cost.
+    pub block_load_secs: f64,
+    /// Layerwise prefetch: the subset of `block_load_secs` spent waiting
+    /// for an in-flight background load to land (the UN-hidden remainder
+    /// of the block's streaming latency).
+    pub prefetch_wait_secs: f64,
+    /// Blocks served from a completed background prefetch this pass.
+    pub blocks_prefetched: usize,
     pub ffn_active: usize,
     pub ffn_total: usize,
     pub head_rows: usize,
@@ -117,6 +137,10 @@ pub struct RwkvEngine {
     head_mat: Option<Arc<Mat>>, // resident dense head when HH disabled
     pub hier: Option<HierHead>,
     pub preds: Vec<Option<SparsePredictor>>,
+    /// Layerwise double-buffered block streaming (`cfg.prefetch`, native
+    /// backend): block N+1 loads on a background I/O worker while block N
+    /// computes.  `None` == synchronous per-layer loads.
+    prefetcher: Option<BlockPrefetcher>,
     xla: Option<XlaRwkv>,
     buf: Scratch,      // allocation-free per-slot hot loop
     bbuf: BatchScratch, // allocation-free batched-round hot loop
@@ -436,13 +460,21 @@ impl RwkvEngine {
             });
         }
 
-        // blocks (full strategy preloads; layerwise streams per token)
+        // blocks (full strategy preloads; layerwise streams per round)
         let mut blocks: Vec<Option<BlockW>> = (0..m.layers).map(|_| None).collect();
         if cfg.strategy == LoadStrategy::Full && cfg.backend == Backend::Native {
             for (i, b) in blocks.iter_mut().enumerate() {
                 *b = Some(BlockW::load(&store, i, !cfg.sparse_ffn)?);
             }
         }
+        // layerwise: double-buffer the block stream unless disabled (a
+        // 1-layer model would only ever prefetch the block it is about to
+        // unload, so it stays synchronous too)
+        let prefetcher = (cfg.strategy == LoadStrategy::Layerwise
+            && cfg.backend == Backend::Native
+            && cfg.prefetch
+            && m.layers > 1)
+            .then(|| BlockPrefetcher::new(Arc::clone(&store), !cfg.sparse_ffn, m.layers));
 
         let xla = if cfg.backend == Backend::Xla {
             Some(XlaRwkv::load(&store, &cfg.artifacts, info)?)
@@ -466,6 +498,7 @@ impl RwkvEngine {
             head_mat,
             hier,
             preds,
+            prefetcher,
             xla,
             buf,
             bbuf: BatchScratch::new(),
@@ -618,6 +651,31 @@ impl RwkvEngine {
     // Full-model step (per-slot path)
     // ------------------------------------------------------------------
 
+    /// Acquire block `layer` for a layerwise pass — from the prefetcher's
+    /// double buffer when enabled, synchronously otherwise — timing the
+    /// round thread's exposed stall into `last_stats.block_load_secs`.
+    /// Bit-identical either way: the same stored bytes are decoded.
+    fn layerwise_block(&mut self, layer: usize) -> Result<BlockW> {
+        let t = crate::util::Stopwatch::start();
+        let block = match self.prefetcher.as_mut() {
+            Some(pf) => pf.take(layer)?,
+            None => BlockW::load(&self.store, layer, !self.cfg.sparse_ffn)?,
+        };
+        self.last_stats.block_load_secs += t.elapsed_secs();
+        Ok(block)
+    }
+
+    /// Fold the prefetcher's counters into `last_stats` (once per pass,
+    /// after the layer loop — the background task itself is telemetry-
+    /// free so no locks sit on the I/O path).
+    fn drain_prefetch_stats(&mut self) {
+        if let Some(pf) = self.prefetcher.as_mut() {
+            let (wait, hits, _sync) = pf.drain_round_stats();
+            self.last_stats.prefetch_wait_secs = wait;
+            self.last_stats.blocks_prefetched = hits as usize;
+        }
+    }
+
     /// Advance one token; returns the final hidden state (post ln_out).
     pub fn forward_hidden(&mut self, token: u32, state: &mut RwkvState) -> Result<Vec<f32>> {
         self.last_stats = StepStats::default();
@@ -635,7 +693,7 @@ impl RwkvEngine {
         let layerwise = self.cfg.strategy == LoadStrategy::Layerwise;
         for layer in 0..self.info.layers {
             let block = if layerwise {
-                BlockW::load(&self.store, layer, !self.cfg.sparse_ffn)?
+                self.layerwise_block(layer)?
             } else {
                 self.blocks[layer].clone().context("block not preloaded")?
             };
@@ -650,6 +708,7 @@ impl RwkvEngine {
                 self.store.unload_prefix(&format!("b{layer}."));
             }
         }
+        self.drain_prefetch_stats();
         let mut hidden = vec![0.0f32; self.info.dim];
         layer_norm(&self.buf.x, &self.ln_out.scale, &self.ln_out.bias, 1e-5, &mut hidden);
         Ok(hidden)
@@ -775,7 +834,7 @@ impl RwkvEngine {
         let layerwise = self.cfg.strategy == LoadStrategy::Layerwise;
         for layer in 0..self.info.layers {
             let block = if layerwise {
-                BlockW::load(&self.store, layer, !self.cfg.sparse_ffn)?
+                self.layerwise_block(layer)?
             } else {
                 self.blocks[layer].clone().context("block not preloaded")?
             };
@@ -795,6 +854,7 @@ impl RwkvEngine {
                 self.store.unload_prefix(&format!("b{layer}."));
             }
         }
+        self.drain_prefetch_stats();
 
         // ln_out + head only for rows that must emit: gather the final row
         // of each flagged segment into a compact (Bh, D) hidden buffer
@@ -828,6 +888,7 @@ impl RwkvEngine {
                     &self.store.tracker,
                     &self.bbuf.xa[..bh * d],
                     &mut logits_out,
+                    Par::new(self.pool.as_deref()),
                 )?;
                 self.last_stats.head_rows = stats.tokens_loaded;
                 round_bytes += hh.h1_nbytes() + stats.bytes;

@@ -290,6 +290,13 @@ impl RwkvEngine {
         self.metrics.observe("round_matmul_secs", self.last_stats.matmul_secs);
         self.metrics.observe("round_pred_secs", self.last_stats.pred_secs);
         self.metrics.observe("round_head_secs", self.last_stats.head_secs);
+        // layerwise block streaming: total stall acquiring blocks, the
+        // part spent waiting on in-flight prefetches (the UN-hidden
+        // remainder), and how many blocks a background load served.
+        // All zero under `Full` loading.
+        self.metrics.observe("round_block_load_secs", self.last_stats.block_load_secs);
+        self.metrics.observe("round_prefetch_wait_secs", self.last_stats.prefetch_wait_secs);
+        self.metrics.inc("blocks_prefetched", self.last_stats.blocks_prefetched as u64);
         Ok(report)
     }
 

@@ -8,6 +8,7 @@
 //! via [`RowView`] and accounted as transient bytes.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
@@ -15,7 +16,7 @@ use anyhow::{bail, Result};
 
 use crate::io::{Manifest, RkvFile};
 use crate::metrics::{Group, MemTracker};
-use crate::pool::Par;
+use crate::pool::{Par, Task, ThreadPool};
 use crate::tensor::{matmat_in_out_par, matvec_in_out, DType, Mat};
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
@@ -452,5 +453,133 @@ impl BlockW {
             att,
             ffn,
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Double-buffered layerwise block prefetch (§5.1 + ROADMAP "Layerwise
+// strategy + batching")
+// ---------------------------------------------------------------------------
+
+/// Double-buffers `LoadStrategy::Layerwise` block streaming: while the
+/// round thread computes block N, a dedicated single-worker I/O pool
+/// streams block N+1 ([`ThreadPool::submit`] + `advise_prefix` kernel
+/// readahead), so the layer boundary pays only the *remaining* wait
+/// instead of a full cold load.  After the last layer the prefetch wraps
+/// to block 0, overlapping the next round's first load with this round's
+/// head + sampling.
+///
+/// The two "buffers" are the block the engine currently holds and the
+/// in-flight [`Task`]'s [`BlockW`] — both plain Arc'd tensor bundles, so
+/// the swap at the layer boundary is a channel receive, not a copy.
+/// Prefetching never changes the math (the same bytes are decoded either
+/// way) and `round_weight_bytes` accounting is untouched; the one
+/// observable cost is residency: up to TWO blocks are resident during the
+/// overlap, and the [`MemTracker`] reports that double-buffered peak
+/// honestly.
+///
+/// The I/O worker is deliberately NOT the intra-round compute pool: a
+/// block load parked on a compute worker would stall `parallel_for`
+/// sections (and with `threads = 1` there is no compute pool at all).
+pub struct BlockPrefetcher {
+    io: ThreadPool,
+    store: Arc<WeightStore>,
+    dense_ffn: bool,
+    layers: usize,
+    /// The in-flight background load, tagged with its layer.
+    inflight: Option<(usize, Task<Result<BlockW>>)>,
+    /// Seconds the round thread spent blocked on in-flight loads since
+    /// the last [`BlockPrefetcher::drain_round_stats`].
+    wait_secs: f64,
+    /// Blocks served from a background load since the last drain.
+    prefetched: u64,
+    /// Blocks the round thread had to load synchronously (cold start or
+    /// a stale in-flight layer) since the last drain.
+    sync_loads: u64,
+}
+
+impl BlockPrefetcher {
+    pub fn new(store: Arc<WeightStore>, dense_ffn: bool, layers: usize) -> Self {
+        Self {
+            io: ThreadPool::named(1, "rwkv-prefetch"),
+            store,
+            dense_ffn,
+            layers,
+            inflight: None,
+            wait_secs: 0.0,
+            prefetched: 0,
+            sync_loads: 0,
+        }
+    }
+
+    /// Hand the round thread block `layer`, then start streaming the next
+    /// block in the background.  The caller remains responsible for
+    /// `unload_prefix("b{layer}.")` after computing the block, exactly as
+    /// on the non-prefetching path.
+    pub fn take(&mut self, layer: usize) -> Result<BlockW> {
+        let block = match self.inflight.take() {
+            Some((l, task)) if l == layer => {
+                let t = crate::util::Stopwatch::start();
+                let r = task.wait();
+                self.wait_secs += t.elapsed_secs();
+                self.prefetched += 1;
+                r?
+            }
+            other => {
+                // Stale in-flight layer (callers always walk 0..L, so this
+                // is a cold start or an aborted previous pass): let it
+                // land, release its tracked bytes, and load synchronously.
+                if let Some((l, task)) = other {
+                    let _ = task.wait();
+                    self.store.unload_prefix(&format!("b{l}."));
+                }
+                self.sync_loads += 1;
+                BlockW::load(&self.store, layer, self.dense_ffn)?
+            }
+        };
+        // Overlap the next block's streaming with this block's compute;
+        // wrapping to 0 keeps the pipeline primed across rounds.  A
+        // 1-layer model would prefetch the block the engine is about to
+        // unload (racing the unload), so it stays synchronous.
+        let next = (layer + 1) % self.layers;
+        if next != layer {
+            let store = Arc::clone(&self.store);
+            let dense_ffn = self.dense_ffn;
+            let task = self.io.submit(move || {
+                // readahead exactly what the load below decodes: never
+                // the resident predictor tensors, and not the sparse-
+                // managed FFN matrices (§3.2 streams their rows per
+                // round) unless this engine runs the FFN dense
+                store.rkv.advise_prefix_where(&format!("b{next}."), |name| {
+                    !name.contains(".pred.")
+                        && (dense_ffn
+                            || !(name.contains(".ffn.wk_t") || name.contains(".ffn.wv")))
+                });
+                BlockW::load(&store, next, dense_ffn)
+            });
+            self.inflight = Some((next, task));
+        }
+        Ok(block)
+    }
+
+    /// Drain `(wait_secs, blocks_prefetched, blocks_loaded_sync)`
+    /// accumulated since the previous drain (per-round telemetry).
+    pub fn drain_round_stats(&mut self) -> (f64, u64, u64) {
+        let out = (self.wait_secs, self.prefetched, self.sync_loads);
+        self.wait_secs = 0.0;
+        self.prefetched = 0;
+        self.sync_loads = 0;
+        out
+    }
+}
+
+impl Drop for BlockPrefetcher {
+    fn drop(&mut self) {
+        // Let the in-flight load land, then release its tracked bytes so
+        // the residency report returns to the engine's baseline.
+        if let Some((l, task)) = self.inflight.take() {
+            let _ = catch_unwind(AssertUnwindSafe(|| task.wait()));
+            self.store.unload_prefix(&format!("b{l}."));
+        }
     }
 }

@@ -149,6 +149,11 @@ pub fn lambada_acc(engine: &mut RwkvEngine, args: &Args, limit: usize) -> Result
 }
 
 /// Peak weight-residency after generating `n` tokens (fresh engine).
+///
+/// The §5.1 figures report SINGLE-block layerwise streaming, so the
+/// double-buffered prefetcher (a serving-latency default that keeps a
+/// second block resident) is disabled here; `exp speed` keeps the
+/// serving default.
 pub fn peak_after_generation(
     args: &Args,
     mut cfg: EngineConfig,
@@ -156,6 +161,7 @@ pub fn peak_after_generation(
     n: usize,
 ) -> Result<(u64, RwkvEngine)> {
     cfg.strategy = strategy;
+    cfg.prefetch = false;
     let mut engine = RwkvEngine::load(cfg)?;
     let prompt = corpus_prompt(args, 16)?;
     run_session(&mut engine, &prompt, n, 7)?;

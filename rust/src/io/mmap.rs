@@ -5,6 +5,14 @@
 //! paper's "load only a small subset of the model parameters" model — the
 //! file-backed pages behind untouched weights never count against the
 //! inference footprint.
+//!
+//! The mapping is `PROT_READ`/`MAP_PRIVATE` for its whole lifetime, so it
+//! doubles as the *shared file handle* for concurrent per-block reads:
+//! any number of threads may fault pages simultaneously (the layerwise
+//! prefetcher streams block N+1 on an I/O thread while the round thread
+//! still reads block N).  [`Mmap::advise_willneed`] hands the kernel an
+//! explicit readahead hint for a byte range so a background prefetch
+//! starts disk I/O for a whole block instead of faulting page by page.
 
 use std::fs::File;
 use std::os::unix::io::AsRawFd;
@@ -54,6 +62,30 @@ impl Mmap {
 
     pub fn len(&self) -> usize {
         self.len
+    }
+
+    /// Best-effort `madvise(MADV_WILLNEED)` on `[offset, offset + len)`:
+    /// asks the kernel to start reading the backing pages now, so a
+    /// later copy out of the range faults warm pages instead of cold
+    /// disk.  Bounds are clamped and page-aligned; failures are ignored
+    /// (the copy still works, just colder).
+    pub fn advise_willneed(&self, offset: usize, len: usize) {
+        if len == 0 || offset >= self.len {
+            return;
+        }
+        // SAFETY: sysconf is always safe to call.
+        let page = unsafe { libc::sysconf(libc::_SC_PAGESIZE) }.max(1) as usize;
+        let start = offset - offset % page;
+        let end = (offset + len).min(self.len);
+        // SAFETY: [start, end) lies inside the live mapping; madvise with
+        // WILLNEED never alters the mapping's contents or protection.
+        unsafe {
+            libc::madvise(
+                (self.ptr as *mut u8).add(start) as *mut libc::c_void,
+                end - start,
+                libc::MADV_WILLNEED,
+            );
+        }
     }
 
     pub fn is_empty(&self) -> bool {

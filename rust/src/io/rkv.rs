@@ -180,6 +180,37 @@ impl RkvFile {
         Ok(&all[row * cols..(row + 1) * cols])
     }
 
+    /// Kick off kernel readahead for every tensor whose name starts with
+    /// `prefix` (see [`Mmap::advise_willneed`]); returns the stored bytes
+    /// advised.  The layerwise prefetcher calls this before decoding a
+    /// block so the disk streams the block's tensors ahead of the typed
+    /// copies instead of faulting tensor by tensor.
+    pub fn advise_prefix(&self, prefix: &str) -> u64 {
+        self.advise_prefix_where(prefix, |_| true)
+    }
+
+    /// [`RkvFile::advise_prefix`] restricted to tensors `keep` accepts.
+    /// Readahead must match what the caller will actually decode: the
+    /// layerwise prefetcher skips the sparse-managed FFN matrices (their
+    /// rows stream individually per §3.2) and the resident predictor
+    /// tensors, otherwise MADV_WILLNEED would drag the block's largest
+    /// tensors off disk for nothing.
+    pub fn advise_prefix_where<F: Fn(&str) -> bool>(&self, prefix: &str, keep: F) -> u64 {
+        let mut advised = 0u64;
+        for (name, e) in self.index.range(prefix.to_string()..) {
+            if !name.starts_with(prefix) {
+                break;
+            }
+            if !keep(name) {
+                continue;
+            }
+            self.map
+                .advise_willneed(self.data_offset + e.offset as usize, e.nbytes as usize);
+            advised += e.nbytes;
+        }
+        advised
+    }
+
     /// Total stored bytes across all tensors (checkpoint "Params" size).
     pub fn total_bytes(&self) -> u64 {
         self.index.values().map(|e| e.nbytes).sum()
@@ -329,6 +360,16 @@ mod tests {
         assert_eq!(f.vec_i32("c.assign").unwrap(), vec![0, 2, 1]);
         assert_eq!(f.raw("d.sign").unwrap(), &[0xAB, 0x01]);
         assert_eq!(f.entry("a.mat").unwrap().nbytes, 24);
+        // readahead hint walks exactly the prefix's tensors (a no-op for
+        // correctness; the byte count is the observable contract)
+        assert_eq!(f.advise_prefix("a."), 24);
+        assert_eq!(f.advise_prefix(""), f.total_bytes());
+        assert_eq!(f.advise_prefix("zzz"), 0);
+        assert_eq!(
+            f.advise_prefix_where("", |n| n != "a.mat"),
+            f.total_bytes() - 24,
+            "filtered readahead skips excluded tensors"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

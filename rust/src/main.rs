@@ -37,6 +37,7 @@ const SPECS: &[cli::OptSpec] = &[
     opt_def("temperature", "sampling temperature (0 = greedy)", "0.8"),
     opt_def("top-p", "nucleus mass", "0.95"),
     opt_def("prefill-chunk", "prompt tokens fused per round", "8"),
+    opt_def("prefetch", "layerwise block prefetch (double-buffered): on|off", "on"),
     opt_def("threads", "intra-round compute threads (0 = all cores, 1 = serial)", "0"),
     opt_def("limit", "max examples per eval task", "0"),
     opt_def("addr", "listen address (serve)", "127.0.0.1:7070"),
@@ -76,6 +77,11 @@ fn engine_config(a: &Args) -> Result<EngineConfig> {
     cfg.strategy = LoadStrategy::parse(a.get_or("strategy", "full"))?;
     cfg.backend = Backend::parse(a.get_or("backend", "native"))?;
     cfg.prefill_chunk = a.usize_or("prefill-chunk", 8)?;
+    cfg.prefetch = match a.get_or("prefetch", "on") {
+        "on" => true,
+        "off" => false,
+        other => bail!("--prefetch takes on|off, got '{other}'"),
+    };
     cfg.threads = a.usize_or("threads", 0)?;
     cfg.seed = a.u64_or("seed", 0)?;
     Ok(cfg)

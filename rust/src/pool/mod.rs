@@ -123,15 +123,24 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spawn a pool of `n` workers (clamped to at least 1).
+    /// Spawn a pool of `n` workers (clamped to at least 1) named
+    /// `rwkv-pool-{i}`.
     pub fn new(n: usize) -> Self {
+        Self::named(n, "rwkv-pool")
+    }
+
+    /// Spawn a pool of `n` workers (clamped to at least 1) with thread
+    /// names `{name}-{i}` — dedicated pools (e.g. the layerwise
+    /// prefetcher's I/O worker) stay tellable from the compute lanes in
+    /// profilers and panic messages.
+    pub fn named(n: usize, name: &str) -> Self {
         let (tx, rx) = channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..n.max(1))
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 std::thread::Builder::new()
-                    .name(format!("rwkv-pool-{i}"))
+                    .name(format!("{name}-{i}"))
                     .spawn(move || loop {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {
@@ -388,6 +397,15 @@ mod tests {
             t.wait();
         }
         assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn named_pool_names_workers() {
+        let pool = ThreadPool::named(1, "rwkv-io");
+        let name = pool
+            .submit(|| std::thread::current().name().map(str::to_string))
+            .wait();
+        assert_eq!(name.as_deref(), Some("rwkv-io-0"));
     }
 
     #[test]

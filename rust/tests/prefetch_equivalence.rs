@@ -1,0 +1,205 @@
+//! Bit-exact equivalence for the layerwise block prefetcher: under
+//! `LoadStrategy::Layerwise`, serving runs with prefetch on/off ×
+//! `threads ∈ {1, 2, 8}` must produce IDENTICAL emitted token streams,
+//! recurrent states, logits and per-round weight-byte accounting
+//! (`round_weight_bytes`).
+//!
+//! The prefetcher only moves WHERE a block's bytes are decoded (a
+//! background I/O worker instead of the round thread) and WHEN (during
+//! the previous layer's compute instead of at the layer boundary) — never
+//! what they decode to.  This test is the end-to-end enforcement of that
+//! contract across dense and all-techniques (sparse-FFN + hier-head +
+//! f16/low-rank) configs, on both the fused round path and the per-slot
+//! `forward_token` path.
+//!
+//! Runs on synthetic checkpoints (testutil::synth) — no `make artifacts`
+//! needed, so this is tier-1 coverage.
+
+use std::path::PathBuf;
+
+use rwkv_lite::config::{EngineConfig, LoadStrategy};
+use rwkv_lite::engine::session::Session;
+use rwkv_lite::engine::{state::RwkvState, RwkvEngine};
+use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn synth_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rwkv-pfeq-{}-{}", tag, std::process::id()))
+}
+
+/// Everything one serving run produces that must not depend on the
+/// prefetch knob (or threads).
+#[derive(Debug, PartialEq)]
+struct RunTrace {
+    /// Emitted tokens per session, in emission order.
+    emitted: Vec<Vec<u32>>,
+    /// `round_weight_bytes` of every round, in order.
+    round_bytes: Vec<u64>,
+    /// Final logits of a standalone chunked prefill per prompt.
+    logits: Vec<Vec<f32>>,
+}
+
+fn assert_states_identical(a: &RwkvState, b: &RwkvState, ctx: &str) {
+    assert_eq!(a.att_x, b.att_x, "{ctx}: att_x state diverged");
+    assert_eq!(a.wkv, b.wkv, "{ctx}: wkv state diverged");
+    assert_eq!(a.ffn_x, b.ffn_x, "{ctx}: ffn_x state diverged");
+}
+
+/// Drive a mixed prefill/decode serving run + standalone prefills and
+/// record everything observable, plus the `blocks_prefetched` counter.
+fn run_with(
+    cfg: &EngineConfig,
+    prompts: &[Vec<u32>],
+    threads: usize,
+    prefetch: bool,
+) -> (RunTrace, Vec<RwkvState>, u64) {
+    let mut cfg = cfg.clone();
+    cfg.strategy = LoadStrategy::Layerwise;
+    cfg.threads = threads;
+    cfg.prefetch = prefetch;
+    let mut engine = RwkvEngine::load(cfg).expect("load engine");
+    let mut sessions: Vec<Session> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut s = Session::new(&engine, i as u64, p);
+            s.max_tokens = 5; // greedy sampler is the Session default
+            s
+        })
+        .collect();
+    let mut emitted: Vec<Vec<u32>> = vec![Vec::new(); sessions.len()];
+    let mut round_bytes = Vec::new();
+    let mut rounds = 0;
+    while sessions.iter().any(|s| !s.is_done()) {
+        let report = engine.step_round(&mut sessions).expect("round");
+        for e in &report.emitted {
+            emitted[e.session].push(e.token);
+        }
+        round_bytes.push(report.round_weight_bytes);
+        rounds += 1;
+        assert!(rounds < 64, "round loop did not converge");
+    }
+    // standalone chunked prefill: logits must be bit-identical too
+    let logits = prompts
+        .iter()
+        .map(|p| {
+            let mut feed = vec![2u32]; // BOS
+            feed.extend_from_slice(p);
+            let mut st = engine.new_state();
+            engine.forward_sequence(&feed, &mut st).expect("prefill")
+        })
+        .collect();
+    let states = sessions.iter().map(|s| s.state().clone()).collect();
+    (RunTrace { emitted, round_bytes, logits }, states, engine.metrics.counter("blocks_prefetched"))
+}
+
+/// The core check: prefetch on/off × every thread count yields the same
+/// trace and states as the single-threaded non-prefetching reference.
+fn check_prefetch_equivalence(tag: &str, spec: &SynthSpec, cfg_mut: impl Fn(&mut EngineConfig)) {
+    let dir = synth_dir(tag);
+    write_synth_rwkv(&dir, "m", spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.prefill_chunk = 3; // long prompts still prefill while short decode
+    cfg_mut(&mut cfg);
+    // mixed lengths: genuinely mixed prefill+decode rounds under chunk 3
+    let prompts: Vec<Vec<u32>> = vec![
+        (0..9).map(|i| ((11 + 5 * i) % spec.vocab) as u32).collect(),
+        vec![7],
+        vec![4, 40, 4, 44],
+        (0..13).map(|i| ((3 + 17 * i) % spec.vocab) as u32).collect(),
+    ];
+    let (want, want_states, base_blocks) = run_with(&cfg, &prompts, THREADS[0], false);
+    assert!(want.round_bytes.iter().any(|&b| b > 0), "{tag}: rounds stream weight bytes");
+    assert_eq!(base_blocks, 0, "{tag}: prefetch off must never count prefetched blocks");
+    for &threads in &THREADS {
+        for &prefetch in &[false, true] {
+            if threads == THREADS[0] && !prefetch {
+                continue; // the reference itself
+            }
+            let ctx = format!("{tag} threads={threads} prefetch={prefetch}");
+            let (got, got_states, blocks) = run_with(&cfg, &prompts, threads, prefetch);
+            assert_eq!(got.emitted, want.emitted, "{ctx}: emitted streams must be bit-identical");
+            assert_eq!(
+                got.round_bytes, want.round_bytes,
+                "{ctx}: round_weight_bytes must not depend on prefetch/threads"
+            );
+            assert_eq!(got.logits, want.logits, "{ctx}: prefill logits must be bit-identical");
+            for (i, (a, b)) in want_states.iter().zip(&got_states).enumerate() {
+                assert_states_identical(a, b, &format!("{ctx} session {i}"));
+            }
+            if prefetch {
+                assert!(blocks > 0, "{ctx}: the double buffer must actually serve blocks");
+            } else {
+                assert_eq!(blocks, 0, "{ctx}: prefetch off must stay synchronous");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prefetch_equivalent_dense_f32() {
+    let mut spec = SynthSpec::tiny();
+    spec.layers = 3; // a real pipeline: N computes while N+1 streams
+    spec.predictors = false;
+    spec.hier_head = false;
+    check_prefetch_equivalence("dense-f32", &spec, |_| {});
+}
+
+#[test]
+fn prefetch_equivalent_all_techniques_f16_lowrank() {
+    let mut spec = SynthSpec::tiny();
+    spec.f16 = true;
+    spec.lowrank = true;
+    spec.seed = 0xBEEF;
+    check_prefetch_equivalence("all-f16-lr", &spec, |c| {
+        c.sparse_ffn = true;
+        c.hier_head = true;
+        c.emb_cache = true;
+    });
+}
+
+/// The prefetching fused round must also match the SINGLE-SLOT sequential
+/// per-token path (`forward_token` on a prefetching layerwise engine),
+/// tying the prefetcher back to the per-slot reference the other
+/// equivalence suites use — both entry points walk layers 0..L, so both
+/// ride the same double buffer.
+#[test]
+fn prefetched_round_matches_sequential_reference() {
+    let mut spec = SynthSpec::tiny();
+    spec.layers = 3;
+    let dir = synth_dir("seqref");
+    write_synth_rwkv(&dir, "m", &spec).unwrap();
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.strategy = LoadStrategy::Layerwise;
+    cfg.sparse_ffn = true;
+    let feed: Vec<u32> = vec![2, 9, 21, 3, 15, 40];
+    // sequential per-token reference, prefetch off, single-threaded
+    cfg.threads = 1;
+    cfg.prefetch = false;
+    let mut seq = RwkvEngine::load(cfg.clone()).unwrap();
+    let mut st_ref = seq.new_state();
+    for &t in &feed[..feed.len() - 1] {
+        seq.forward_hidden(t, &mut st_ref).unwrap();
+    }
+    let want = seq.forward_token(feed[feed.len() - 1], &mut st_ref).unwrap();
+    // per-token path on a PREFETCHING engine
+    cfg.prefetch = true;
+    let mut pf = RwkvEngine::load(cfg.clone()).unwrap();
+    let mut st_pf = pf.new_state();
+    for &t in &feed[..feed.len() - 1] {
+        pf.forward_hidden(t, &mut st_pf).unwrap();
+    }
+    let got_tok = pf.forward_token(feed[feed.len() - 1], &mut st_pf).unwrap();
+    assert_eq!(got_tok, want, "per-token path with prefetch == without");
+    assert_states_identical(&st_ref, &st_pf, "seqref per-token");
+    // fused chunked prefill on a prefetching 8-lane engine
+    cfg.threads = 8;
+    let mut fused = RwkvEngine::load(cfg).unwrap();
+    let mut st = fused.new_state();
+    let got = fused.forward_sequence(&feed, &mut st).unwrap();
+    assert_eq!(got, want, "prefetched fused prefill == sequential per-token logits");
+    assert_states_identical(&st_ref, &st, "seqref fused");
+    std::fs::remove_dir_all(&dir).ok();
+}
