@@ -22,6 +22,17 @@
 //! (`round_prefetch_wait_secs`), which stays well under the off-row's
 //! block load time — the streaming genuinely overlapped compute.
 //!
+//! Part 5 — prefix-state cache (runs only with `--state-cache-mb N`):
+//! one shared system prompt + short per-request user turns, cold vs
+//! warm.  The first request prefills the whole prompt and populates the
+//! cache; every later request forks off the cached prefix state, so its
+//! prefill tokens (and prefill weight-GB, and time-to-first-token)
+//! collapse to just the un-cached suffix.  The sweep ASSERTS
+//! `cache_hits > 0` (bit-identity is covered by
+//! `tests/state_cache_equivalence.rs`), which makes it the warm-cache
+//! release smoke: `-- --smoke --state-cache-mb 64`.  Gated on the flag
+//! so the other CI smoke invocations stay distinct.
+//!
 //! Run: `cargo bench --bench serving_throughput` (artifacts required;
 //! falls back to a synthetic checkpoint when they are missing so the
 //! bench is always runnable).  `-- --smoke` runs a seconds-long variant
@@ -30,16 +41,29 @@
 //! decode/prefill sweeps with N compute threads (CI smokes `--threads 4`);
 //! `-- --strategy layerwise` runs parts 1–3 under layerwise loading so CI
 //! exercises the streaming+prefetch path in release (part 4 always runs
-//! both prefetch settings).
+//! both prefetch settings); `-- --state-cache-mb N` enables part 5 with
+//! an N-MiB cache budget (omitted, part 5 is skipped).
 
 use std::path::{Path, PathBuf};
 
 use rwkv_lite::config::{EngineConfig, LoadStrategy};
 use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator, Event, Request};
 use rwkv_lite::engine::session::Session;
+use rwkv_lite::engine::state_cache::{CacheConfig, StateCache};
 use rwkv_lite::engine::RwkvEngine;
 use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
 use rwkv_lite::util::Stopwatch;
+
+/// `--flag value` / `--flag=value` lookup over argv — the one parser
+/// every bench knob shares.
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    let prefixed = format!("{flag}=");
+    args.iter().enumerate().find_map(|(i, a)| {
+        a.strip_prefix(&prefixed)
+            .map(str::to_string)
+            .or_else(|| (a == flag).then(|| args.get(i + 1).cloned().unwrap_or_default()))
+    })
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -47,14 +71,7 @@ fn main() {
     // `--threads N` / `--threads=N`: pin the compute-thread count for all
     // sweeps (0 = all cores); invalid values abort instead of silently
     // running single-threaded
-    let pinned: Option<usize> = args
-        .iter()
-        .enumerate()
-        .find_map(|(i, a)| {
-            a.strip_prefix("--threads=").map(str::to_string).or_else(|| {
-                (a == "--threads").then(|| args.get(i + 1).cloned().unwrap_or_default())
-            })
-        })
+    let pinned: Option<usize> = flag_value(&args, "--threads")
         .map(|v| v.parse().unwrap_or_else(|_| panic!("--threads needs a number, got '{v}'")))
         .map(|n: usize| {
             if n == 0 {
@@ -66,16 +83,19 @@ fn main() {
     // `--strategy full|layerwise` (or `--strategy=...`): the loading
     // strategy for parts 1–3 (part 4 is always layerwise — that is its
     // point); invalid values abort
-    let strategy: LoadStrategy = args
-        .iter()
-        .enumerate()
-        .find_map(|(i, a)| {
-            a.strip_prefix("--strategy=").map(str::to_string).or_else(|| {
-                (a == "--strategy").then(|| args.get(i + 1).cloned().unwrap_or_default())
-            })
-        })
+    let strategy: LoadStrategy = flag_value(&args, "--strategy")
         .map(|v| LoadStrategy::parse(&v).unwrap_or_else(|e| panic!("{e}")))
         .unwrap_or(LoadStrategy::Full);
+    // `--state-cache-mb N` (or `--state-cache-mb=N`): part 5's prefix-
+    // state cache budget.  0 (the default) SKIPS part 5, so the plain
+    // `--smoke` CI steps don't duplicate the dedicated warm-cache smoke;
+    // invalid values abort
+    let cache_mb: usize = flag_value(&args, "--state-cache-mb")
+        .map(|v| {
+            v.parse()
+                .unwrap_or_else(|_| panic!("--state-cache-mb needs a number, got '{v}'"))
+        })
+        .unwrap_or(0);
     let mut model = "rwkv-ours-small".to_string();
     let mut artifacts = PathBuf::from("artifacts");
     let mut synth_guard: Option<PathBuf> = None;
@@ -102,6 +122,9 @@ fn main() {
     prefill_sweep(&model, &artifacts, smoke, threads, strategy);
     thread_sweep(&model, &artifacts, smoke, pinned, strategy);
     layerwise_sweep(&model, &artifacts, smoke, pinned);
+    if cache_mb > 0 {
+        state_cache_sweep(&model, &artifacts, smoke, threads, strategy, cache_mb);
+    }
 
     if let Some(dir) = synth_guard {
         std::fs::remove_dir_all(&dir).ok();
@@ -382,4 +405,86 @@ fn layerwise_sweep(model: &str, artifacts: &Path, smoke: bool, pinned: Option<us
         "\nprefetch on: the exposed block stall collapses to the prefetch wait \
          (wait << the off-row's block ms — streaming overlapped compute)"
     );
+}
+
+/// Prefix-state cache: one shared system prompt, distinct short user
+/// turns.  Request 0 is cold (full prefill, populates the cache); every
+/// later request forks from the deepest cached chunk boundary of the
+/// shared prefix, so `prefill tok`, `prefill GB` and TTFT collapse to
+/// the un-cached suffix.  The final assertions make this the warm-cache
+/// release smoke.
+fn state_cache_sweep(
+    model: &str,
+    artifacts: &Path,
+    smoke: bool,
+    threads: usize,
+    strategy: LoadStrategy,
+    cache_mb: usize,
+) {
+    let (sys_len, n_req, max_tokens): (usize, usize, usize) =
+        if smoke { (24, 3, 4) } else { (96, 6, 8) };
+    println!(
+        "\nprefix-state cache: shared {sys_len}-token system prompt, distinct user turns \
+         ({} MiB budget, {} loading)\n",
+        cache_mb.max(1),
+        strategy.name()
+    );
+    println!(
+        "{:>8} {:>12} {:>13} {:>13} {:>12} {:>12}",
+        "request", "cached tok", "prefill tok", "prefill GB", "ttft ms", "decode tok"
+    );
+    let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+    cfg.threads = threads;
+    cfg.strategy = strategy;
+    let mut engine = RwkvEngine::load(cfg).expect("load engine");
+    let mut cache = StateCache::new(CacheConfig::with_mb(cache_mb.max(1)));
+    // token ids stay small so the prompt is valid for any vocab size
+    let system: Vec<u32> = (0..sys_len as u32).map(|i| 2 + (i * 5) % 64).collect();
+    for r in 0..n_req {
+        let mut prompt = system.clone();
+        prompt.extend([68 + r as u32, 2 + r as u32]); // the user turn
+        let (mut sess, cached) = Session::new_with_cache(&engine, r as u64, &prompt, &mut cache);
+        sess.max_tokens = max_tokens;
+        let wall = Stopwatch::start();
+        let mut ttft = f64::NAN;
+        let (mut prefill_tokens, mut prefill_bytes, mut decoded) = (0usize, 0u64, 0usize);
+        while !sess.is_done() {
+            let report = engine
+                .step_round_cached(std::slice::from_mut(&mut sess), Some(&mut cache))
+                .expect("round");
+            if report.prefill_tokens > 0 {
+                prefill_tokens += report.prefill_tokens;
+                prefill_bytes += report.round_weight_bytes;
+            }
+            if ttft.is_nan() && !report.emitted.is_empty() {
+                ttft = wall.elapsed_secs();
+            }
+            decoded += report.emitted.len();
+        }
+        println!(
+            "{:>8} {:>12} {:>13} {:>13.6} {:>12.3} {:>12}",
+            if r == 0 { "0 (cold)".to_string() } else { format!("{r} (warm)") },
+            cached,
+            prefill_tokens,
+            prefill_bytes as f64 / 1e9,
+            ttft * 1e3,
+            decoded,
+        );
+    }
+    let st = cache.stats();
+    println!(
+        "\ncache: {} hits / {} misses, {} tokens served from snapshots, \
+         {} insertions, {} evictions, {:.2} MiB resident",
+        st.hits,
+        st.misses,
+        st.hit_tokens,
+        st.insertions,
+        st.evictions,
+        cache.bytes() as f64 / (1 << 20) as f64,
+    );
+    println!("warm rows: prefill collapses to the un-cached suffix — the state copy is free");
+    // warm-cache smoke contract (CI runs `--smoke --state-cache-mb 64`):
+    // every request after the first MUST hit the shared prefix
+    assert!(st.hits as usize >= n_req - 1, "warm requests must hit the prefix-state cache");
+    assert!(st.hit_tokens > 0, "cache hits must actually skip prefill tokens");
 }

@@ -88,6 +88,17 @@ pub struct EngineConfig {
     /// single-threaded, `k` = `k` lanes.  Rounds are bit-identical for
     /// every value — this knob only trades cores for latency.
     pub threads: usize,
+    /// Prefix-state cache budget in MiB (`0` = disabled).  The serve path
+    /// builds one `engine::state_cache::StateCache` the coordinator owns
+    /// across all requests: shared prompt prefixes fork from a cached
+    /// `RwkvState` snapshot instead of re-running prefill.  Warm-cache
+    /// output is bit-identical to cold prefill.
+    pub state_cache_mb: usize,
+    /// Persist the prefix-state cache here (`io::statefile`): snapshots
+    /// load at startup and save back at shutdown, so a fixed system
+    /// prompt stays warm across process restarts.  Ignored when
+    /// `state_cache_mb == 0`.
+    pub state_file: Option<PathBuf>,
     pub seed: u64,
 }
 
@@ -106,6 +117,8 @@ impl Default for EngineConfig {
             prefill_chunk: 8,
             prefetch: true,
             threads: 0,
+            state_cache_mb: 0,
+            state_file: None,
             seed: 0,
         }
     }
@@ -153,6 +166,17 @@ impl EngineConfig {
             ("prefill_chunk", json::num(self.prefill_chunk as f64)),
             ("prefetch", Value::Bool(self.prefetch)),
             ("threads", json::num(self.threads as f64)),
+            ("state_cache_mb", json::num(self.state_cache_mb as f64)),
+            (
+                "state_file",
+                json::s(
+                    &self
+                        .state_file
+                        .as_ref()
+                        .map(|p| p.display().to_string())
+                        .unwrap_or_default(),
+                ),
+            ),
             ("seed", json::num(self.seed as f64)),
         ])
     }
@@ -180,6 +204,11 @@ impl EngineConfig {
         c.prefill_chunk = v.f64_at(&["prefill_chunk"]).unwrap_or(8.0) as usize;
         c.prefetch = b("prefetch", true);
         c.threads = v.f64_at(&["threads"]).unwrap_or(0.0) as usize;
+        c.state_cache_mb = v.f64_at(&["state_cache_mb"]).unwrap_or(0.0) as usize;
+        c.state_file = v
+            .str_at(&["state_file"])
+            .filter(|s| !s.is_empty())
+            .map(PathBuf::from);
         c.seed = v.f64_at(&["seed"]).unwrap_or(0.0) as u64;
         Ok(c)
     }
@@ -195,6 +224,8 @@ mod tests {
         c.strategy = LoadStrategy::Layerwise;
         c.threads = 4;
         c.prefetch = false;
+        c.state_cache_mb = 64;
+        c.state_file = Some(PathBuf::from("cache.rwst"));
         let v = c.to_json();
         let c2 = EngineConfig::from_json(&v).unwrap();
         assert_eq!(c2.model, c.model);
@@ -202,6 +233,20 @@ mod tests {
         assert_eq!(c2.threads, 4);
         assert!(!c2.prefetch, "prefetch=false must survive the round trip");
         assert!(c2.sparse_ffn && c2.hier_head && c2.emb_cache);
+        assert_eq!(c2.state_cache_mb, 64);
+        assert_eq!(c2.state_file, Some(PathBuf::from("cache.rwst")));
+    }
+
+    #[test]
+    fn state_cache_defaults_off() {
+        let c = EngineConfig::default();
+        assert_eq!(c.state_cache_mb, 0);
+        assert!(c.state_file.is_none());
+        // absent keys (older config JSON) keep the defaults; an empty
+        // state_file string means "none"
+        let c = EngineConfig::from_json(&json::obj(vec![])).unwrap();
+        assert_eq!(c.state_cache_mb, 0);
+        assert!(c.state_file.is_none());
     }
 
     #[test]

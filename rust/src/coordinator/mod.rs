@@ -22,7 +22,10 @@
 //! Per-round telemetry in the coordinator registry: `rounds`,
 //! `round_seconds`, `round_weight_bytes`, `prefill_tokens`,
 //! `decode_tokens`, `requests_admitted` / `requests_completed` /
-//! `requests_cancelled`, `tokens_out`.
+//! `requests_cancelled`, `tokens_out`.  With a prefix-state cache
+//! ([`Coordinator::spawn_with_cache`]): `cache_hits` / `cache_misses` /
+//! `cache_hit_tokens` / `cache_insertions` / `cache_evictions` plus the
+//! `cache_bytes` residency gauge.
 //!
 //! Topology: N client threads -> mpsc -> coordinator thread (owns the
 //! engine) -> per-request streaming channels.  Intra-round compute
@@ -34,6 +37,7 @@
 
 pub mod batcher;
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -43,6 +47,7 @@ use anyhow::Result;
 
 use crate::engine::sampler::Sampler;
 use crate::engine::session::Session;
+use crate::engine::state_cache::StateCache;
 use crate::engine::RwkvEngine;
 use crate::metrics::Registry;
 use batcher::{BatchPolicy, DynamicBatcher};
@@ -59,8 +64,16 @@ pub struct Request {
     pub top_p: f32,
     /// Extra stop token ids (EOS always stops; the stop token is emitted).
     pub stop_tokens: Vec<u32>,
+    /// Multi-token stop sequences (suffix match over emitted tokens; the
+    /// matching tokens are emitted, then the stream ends with
+    /// `reason: "stop"`).
+    pub stop_sequences: Vec<Vec<u32>>,
     /// Explicit sampler seed; `None` falls back to the request id.
     pub seed: Option<u64>,
+    /// Participate in the coordinator's prefix-state cache (fork from the
+    /// longest cached prompt prefix AND contribute snapshots).  Ignored
+    /// when the coordinator has no cache.  Default `true`.
+    pub cache: bool,
 }
 
 impl Default for Request {
@@ -72,7 +85,9 @@ impl Default for Request {
             temperature: 0.0,
             top_p: 1.0,
             stop_tokens: Vec::new(),
+            stop_sequences: Vec::new(),
             seed: None,
+            cache: true,
         }
     }
 }
@@ -81,7 +96,7 @@ impl Default for Request {
 #[derive(Clone, Debug)]
 pub enum Event {
     Token { token: u32 },
-    Done { tokens: usize, seconds: f64, reason: FinishReason },
+    Done { tokens: usize, seconds: f64, reason: FinishReason, cached_tokens: usize },
     Error { message: String },
 }
 
@@ -151,13 +166,32 @@ impl Coordinator {
     where
         F: FnOnce() -> Result<RwkvEngine> + Send + 'static,
     {
+        Self::spawn_with_cache(factory, policy, None, None)
+    }
+
+    /// [`Coordinator::spawn`] with a prefix-state cache: the coordinator
+    /// thread owns ONE cache shared across all requests — lookups fork
+    /// new sessions off cached prompt prefixes, and prefill chunk
+    /// boundaries insert snapshots.  Because the cache lives behind the
+    /// existing single-round-thread model, the hot path pays no extra
+    /// locking.  With `state_file`, snapshots load from that path at
+    /// startup and save back when the coordinator shuts down.
+    pub fn spawn_with_cache<F>(
+        factory: F,
+        policy: BatchPolicy,
+        cache: Option<StateCache>,
+        state_file: Option<PathBuf>,
+    ) -> Self
+    where
+        F: FnOnce() -> Result<RwkvEngine> + Send + 'static,
+    {
         let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
         let metrics = Arc::new(Registry::new());
         let m2 = Arc::clone(&metrics);
         let handle = std::thread::Builder::new()
             .name("rwkv-coordinator".into())
             .spawn(move || match factory() {
-                Ok(mut engine) => run_loop(&mut engine, rx, policy, &m2),
+                Ok(mut engine) => run_loop(&mut engine, rx, policy, &m2, cache, state_file),
                 Err(e) => {
                     // refuse all submissions with the load error
                     let msg = format!("engine load failed: {e:#}");
@@ -215,6 +249,42 @@ struct Conn {
     tx: Sender<Event>,
     cancel: Arc<AtomicBool>,
     started: crate::util::Stopwatch,
+    /// Feed tokens served from the prefix-state cache at admission.
+    cached_tokens: usize,
+}
+
+/// Fingerprint for the prefix-state cache's statefile: model name plus
+/// checkpoint size + mtime.  Shape checks alone cannot distinguish a
+/// fine-tuned checkpoint (identical dims, different weights) whose cached
+/// states would silently break warm==cold bit-identity; re-exporting the
+/// `.rkv` changes the mtime and invalidates the file.
+fn model_tag(engine: &RwkvEngine) -> String {
+    let rkv = engine.store.manifest.rkv_path();
+    let (len, mtime) = std::fs::metadata(&rkv)
+        .map(|m| {
+            let secs = m
+                .modified()
+                .ok()
+                .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            (m.len(), secs)
+        })
+        .unwrap_or((0, 0));
+    format!("{}:{len}:{mtime}", engine.cfg.model)
+}
+
+/// Mirror the cache's counters into the coordinator registry
+/// (`cache_bytes` is a gauge — current residency; the rest are
+/// monotonic).
+fn sync_cache_metrics(cache: &StateCache, metrics: &Registry) {
+    let st = cache.stats();
+    metrics.set("cache_hits", st.hits);
+    metrics.set("cache_misses", st.misses);
+    metrics.set("cache_hit_tokens", st.hit_tokens);
+    metrics.set("cache_insertions", st.insertions);
+    metrics.set("cache_evictions", st.evictions);
+    metrics.set("cache_bytes", cache.bytes());
 }
 
 fn run_loop(
@@ -222,7 +292,24 @@ fn run_loop(
     rx: Receiver<Submission>,
     policy: BatchPolicy,
     metrics: &Registry,
+    mut cache: Option<StateCache>,
+    state_file: Option<PathBuf>,
 ) {
+    // warm the cache from a previous run's snapshots — fingerprint- and
+    // shape-filtered, so a state file written by a different model (even a
+    // same-shape fine-tune) cannot plant stale snapshots on live prefixes
+    // (missing file = cold start; a mismatched or corrupt file is
+    // reported and ignored, never fatal)
+    let tag = cache.as_ref().map(|_| model_tag(engine)).unwrap_or_default();
+    if let (Some(c), Some(path)) = (cache.as_mut(), state_file.as_ref()) {
+        match c.load_matching(path, &tag, &engine.new_state()) {
+            Ok(n) if n > 0 => {
+                eprintln!("[coordinator] loaded {n} state snapshots from {}", path.display())
+            }
+            Ok(_) => {}
+            Err(e) => eprintln!("[coordinator] state file {} ignored: {e:#}", path.display()),
+        }
+    }
     let mut batcher = DynamicBatcher::new(policy);
     let mut sessions: Vec<Session> = Vec::new();
     let mut conns: Vec<Conn> = Vec::new();
@@ -237,9 +324,18 @@ fn run_loop(
                     if !stop.contains(&crate::text::EOS) {
                         stop.push(crate::text::EOS);
                     }
-                    let mut sess = Session::new(engine, s.req.id, &s.req.prompt);
+                    // prefix-state cache lookup: fork off the longest
+                    // cached prefix instead of prefilling from scratch
+                    let (mut sess, cached_tokens) = match cache.as_mut() {
+                        Some(c) if s.req.cache => {
+                            Session::new_with_cache(engine, s.req.id, &s.req.prompt, c)
+                        }
+                        _ => (Session::new(engine, s.req.id, &s.req.prompt), 0),
+                    };
                     sess.max_tokens = s.req.max_tokens;
                     sess.stop_tokens = stop;
+                    sess.stop_seqs = s.req.stop_sequences.clone();
+                    sess.use_cache = s.req.cache;
                     sess.sampler = Sampler::new(
                         s.req.temperature,
                         s.req.top_p,
@@ -250,7 +346,11 @@ fn run_loop(
                         tx: s.tx,
                         cancel: s.cancel,
                         started: crate::util::Stopwatch::start(),
+                        cached_tokens,
                     });
+                }
+                if let Some(c) = cache.as_ref() {
+                    sync_cache_metrics(c, metrics);
                 }
             }
             _ => {}
@@ -267,7 +367,7 @@ fn run_loop(
         // ONE engine call per scheduling round: chunked prefill + batched
         // decode + sampling + stop checks all happen inside step_round
         let round = crate::util::Stopwatch::start();
-        let report = match engine.step_round(&mut sessions) {
+        let report = match engine.step_round_cached(&mut sessions, cache.as_mut()) {
             Ok(r) => r,
             Err(e) => {
                 // a round error is engine-global (the fused pass serves
@@ -281,6 +381,7 @@ fn run_loop(
                         tokens: sess.tokens_produced(),
                         seconds: conn.started.elapsed_secs(),
                         reason: FinishReason::Cancelled,
+                        cached_tokens: conn.cached_tokens,
                     });
                     metrics.inc("requests_cancelled", 1);
                     metrics.inc("tokens_out", sess.tokens_produced() as u64);
@@ -295,6 +396,9 @@ fn run_loop(
         metrics.inc("round_weight_bytes", report.round_weight_bytes);
         metrics.inc("prefill_tokens", report.prefill_tokens as u64);
         metrics.inc("decode_tokens", report.decode_tokens as u64);
+        if let Some(c) = cache.as_ref() {
+            sync_cache_metrics(c, metrics);
+        }
         for em in &report.emitted {
             if conns[em.session].tx.send(Event::Token { token: em.token }).is_err() {
                 // the client went away: stop paying weight passes for it
@@ -319,7 +423,16 @@ fn run_loop(
                 tokens: sess.tokens_produced(),
                 seconds: conn.started.elapsed_secs(),
                 reason,
+                cached_tokens: conn.cached_tokens,
             });
+        }
+    }
+    // persist the warm cache for the next process (best-effort: a failed
+    // save only loses warmth, never correctness)
+    if let (Some(c), Some(path)) = (cache.as_ref(), state_file.as_ref()) {
+        match c.save(path, &tag) {
+            Ok(n) => eprintln!("[coordinator] saved {n} state snapshots to {}", path.display()),
+            Err(e) => eprintln!("[coordinator] state file save failed: {e:#}"),
         }
     }
 }

@@ -35,6 +35,17 @@
 //! `round_wkv_secs` / `round_matmul_secs` / `round_pred_secs` /
 //! `round_head_secs`.
 //!
+//! Prefix-state cache: because the recurrent state is O(1) in sequence
+//! length, a processed prompt prefix caches as ONE `RwkvState` snapshot
+//! regardless of prefix length.  [`state_cache::StateCache`] is a
+//! token-trie-keyed LRU of such snapshots with byte-budgeted eviction;
+//! [`session::Session::new_with_cache`] forks a request off the longest
+//! cached prefix (prefill starts at `pos = matched_len`), and
+//! [`RwkvEngine::step_round_cached`] inserts snapshots at prefill chunk
+//! boundaries.  Warm-cache decode is BIT-IDENTICAL to cold prefill
+//! (`tests/state_cache_equivalence.rs`) — the fork copies the exact f32
+//! state the cold path would have computed.
+//!
 //! Layerwise streaming overlap: under `LoadStrategy::Layerwise` with
 //! `cfg.prefetch` (the default) a [`weights::BlockPrefetcher`]
 //! double-buffers the block stream — a dedicated I/O worker loads block
@@ -50,6 +61,7 @@ pub mod sampler;
 pub mod session;
 pub mod sparse_ffn;
 pub mod state;
+pub mod state_cache;
 pub mod transformer;
 pub mod weights;
 pub mod xla_backend;

@@ -26,6 +26,7 @@ use anyhow::Result;
 
 use super::sampler::Sampler;
 use super::state::RwkvState;
+use super::state_cache::StateCache;
 use super::{RwkvEngine, SegSpan};
 
 /// Why a session stopped emitting tokens.
@@ -37,6 +38,10 @@ pub enum FinishReason {
     /// token itself is emitted, matching the coordinator's historical
     /// EOS behaviour.
     Stop(u32),
+    /// The emitted stream's suffix matched a multi-token stop sequence
+    /// ([`Session::stop_seqs`]); carries the matched sequence's index.
+    /// The matching tokens were already emitted in-stream.
+    StopSeq(u32),
     /// Cancelled by the caller ([`Session::cancel`]) or retired by the
     /// coordinator after the client went away.
     Cancelled,
@@ -47,7 +52,7 @@ impl FinishReason {
     pub fn name(self) -> &'static str {
         match self {
             FinishReason::MaxTokens => "length",
-            FinishReason::Stop(_) => "stop",
+            FinishReason::Stop(_) | FinishReason::StopSeq(_) => "stop",
             FinishReason::Cancelled => "cancelled",
         }
     }
@@ -75,12 +80,26 @@ pub struct Session {
     /// EOS; [`RwkvEngine::generate`] leaves this empty for fixed-length
     /// generation).
     pub stop_tokens: Vec<u32>,
+    /// Multi-token stop sequences: the session ends when the EMITTED
+    /// stream's suffix equals any of these (the matching tokens are
+    /// emitted, consistent with single stop-token semantics).  Empty
+    /// sequences never match.
+    pub stop_seqs: Vec<Vec<u32>>,
+    /// Participate in the prefix-state cache: lookup happens in
+    /// [`Session::new_with_cache`]; snapshot insertion happens at prefill
+    /// chunk boundaries when a cache is passed to
+    /// [`RwkvEngine::step_round_cached`].  `false` opts the request out
+    /// of both (the server's per-request `"cache": false`).
+    pub use_cache: bool,
     state: RwkvState,
     /// `[BOS, prompt...]` — the teacher-forced stream prefill consumes.
     feed: Vec<u32>,
     phase: Phase,
     last_token: u32,
     produced: usize,
+    /// Trailing window of emitted tokens, as long as the longest stop
+    /// sequence — the suffix the stop-sequence match runs over.
+    tail: Vec<u32>,
     /// Already surfaced in a `RoundReport::finished` (exactly-once).
     reported: bool,
 }
@@ -97,13 +116,47 @@ impl Session {
             sampler: Sampler::new(0.0, 1.0, id),
             max_tokens: 32,
             stop_tokens: Vec::new(),
+            stop_seqs: Vec::new(),
+            use_cache: true,
             state: engine.new_state(),
             feed,
             phase: Phase::Prefill { pos: 0 },
             last_token: crate::text::BOS,
             produced: 0,
+            tail: Vec::new(),
             reported: false,
         }
+    }
+
+    /// Like [`Session::new`], but forked off the prefix-state cache: the
+    /// longest cached prefix of the feed stream becomes the starting
+    /// state (one `RwkvState` copy — zero weight bytes) and prefill
+    /// begins at `pos = matched_len`.  The final feed position is never
+    /// matched — it must run through the model so the round has logits to
+    /// sample the first token from.  Returns the session plus the number
+    /// of feed tokens served from the cache (`0` on a miss).
+    ///
+    /// Warm-cache decode is bit-identical to cold prefill: the snapshot
+    /// IS the state the cold path would have computed at that position
+    /// (`tests/state_cache_equivalence.rs`).
+    pub fn new_with_cache(
+        engine: &RwkvEngine,
+        id: u64,
+        prompt: &[u32],
+        cache: &mut StateCache,
+    ) -> (Self, usize) {
+        let mut sess = Self::new(engine, id, prompt);
+        let cap = sess.feed.len() - 1;
+        if let Some((snap, matched)) = cache.lookup(&sess.feed[..cap]) {
+            // a persisted cache from a different model must never fork a
+            // shape-mismatched state — fall back to cold prefill instead
+            if snap.same_shape(&sess.state) {
+                sess.state = (*snap).clone();
+                sess.phase = Phase::Prefill { pos: matched };
+                return (sess, matched);
+            }
+        }
+        (sess, 0)
     }
 
     pub fn phase(&self) -> Phase {
@@ -137,6 +190,30 @@ impl Session {
 
     pub fn state(&self) -> &RwkvState {
         &self.state
+    }
+
+    /// Record an emitted token in the stop-sequence window (bounded by
+    /// the longest sequence; a no-op when there are none).
+    fn note_emitted(&mut self, tok: u32) {
+        let keep = self.stop_seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+        if keep == 0 {
+            return;
+        }
+        self.tail.push(tok);
+        if self.tail.len() > keep {
+            let excess = self.tail.len() - keep;
+            self.tail.drain(..excess);
+        }
+    }
+
+    /// Index of the first stop sequence that suffix-matches the emitted
+    /// stream, if any.
+    fn matched_stop_seq(&self) -> Option<usize> {
+        self.stop_seqs.iter().position(|seq| {
+            !seq.is_empty()
+                && self.tail.len() >= seq.len()
+                && self.tail[self.tail.len() - seq.len()..] == seq[..]
+        })
     }
 
     /// Exchange the session's recurrent state with `other` (lets callers
@@ -179,6 +256,20 @@ impl RwkvEngine {
     /// sampled, stop-checked and reported — `Done` sessions are skipped.
     /// This is the single entry point the serving stack is built on.
     pub fn step_round(&mut self, sessions: &mut [Session]) -> Result<RoundReport> {
+        self.step_round_cached(sessions, None)
+    }
+
+    /// [`Self::step_round`] with a prefix-state cache attached: after the
+    /// fused pass, every prefill session that advanced to `pos` (and has
+    /// [`Session::use_cache`]) snapshots its state under `feed[..pos]` —
+    /// the chunk boundary is exactly where the state equals "prefix
+    /// consumed".  Identical math either way; the cache only ever adds
+    /// state copies, never changes what the round computes.
+    pub fn step_round_cached(
+        &mut self,
+        sessions: &mut [Session],
+        mut cache: Option<&mut StateCache>,
+    ) -> Result<RoundReport> {
         let chunk = self.cfg.prefill_chunk.max(1);
         let round = crate::util::Stopwatch::start();
         // plan: one segment of token rows per active session
@@ -254,6 +345,14 @@ impl RwkvEngine {
                 } else {
                     Phase::Prefill { pos: new_pos }
                 };
+                // prefix-state cache insert point: the session's state now
+                // reflects exactly feed[..new_pos], so it snapshots under
+                // that prefix (a clone only when the prefix is new)
+                if sess.use_cache {
+                    if let Some(c) = cache.as_deref_mut() {
+                        c.insert(&sess.feed[..new_pos], &sess.state);
+                    }
+                }
             }
             if need[k] {
                 let lg = &mut logits[li];
@@ -266,8 +365,11 @@ impl RwkvEngine {
                     sess.produced += 1;
                     sess.last_token = tok;
                     report.emitted.push(Emission { session: planned[k], token: tok });
+                    sess.note_emitted(tok);
                     if sess.stop_tokens.contains(&tok) {
                         sess.phase = Phase::Done { reason: FinishReason::Stop(tok) };
+                    } else if let Some(si) = sess.matched_stop_seq() {
+                        sess.phase = Phase::Done { reason: FinishReason::StopSeq(si as u32) };
                     } else if sess.produced >= sess.max_tokens {
                         sess.phase = Phase::Done { reason: FinishReason::MaxTokens };
                     }

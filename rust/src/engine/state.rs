@@ -15,6 +15,13 @@ pub struct RwkvState {
 }
 
 impl RwkvState {
+    /// Bytes per state element — the payload is f32 everywhere.  The ONE
+    /// place element width is defined: [`RwkvState::nbytes`] and the
+    /// `io::statefile` serializer both derive from it, so a future
+    /// precision change cannot desynchronize byte accounting from the
+    /// on-disk format.
+    pub const ELEM_BYTES: usize = std::mem::size_of::<f32>();
+
     pub fn zero(layers: usize, dim: usize, heads: usize, head_size: usize) -> Self {
         Self {
             dim,
@@ -30,10 +37,54 @@ impl RwkvState {
         self.att_x.len()
     }
 
-    /// Bytes of state memory (for the O(1)-state accounting in fig5/fig6).
+    /// Bytes of state memory (for the O(1)-state accounting in fig5/fig6,
+    /// and the prefix-state cache's byte budget).
     pub fn nbytes(&self) -> u64 {
         let per_layer = self.dim * 2 + self.heads * self.head_size * self.head_size;
-        (4 * per_layer * self.layers()) as u64
+        (Self::ELEM_BYTES * per_layer * self.layers()) as u64
+    }
+
+    /// Same model shape (dims AND layer count) — the single predicate
+    /// behind every "can this state stand in for that one" check: the
+    /// prefix-state cache's fork guard, stale-snapshot replacement,
+    /// statefile load filtering, and the equality helpers below.
+    pub fn same_shape(&self, other: &Self) -> bool {
+        self.dim == other.dim
+            && self.heads == other.heads
+            && self.head_size == other.head_size
+            && self.layers() == other.layers()
+    }
+
+    /// Same shape AND bit-identical payloads (exact f32 bit equality) —
+    /// the contract the prefix-state cache equivalence tests assert.
+    pub fn bitwise_eq(&self, other: &Self) -> bool {
+        fn bits_eq(a: &[Vec<f32>], b: &[Vec<f32>]) -> bool {
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| {
+                    x.len() == y.len()
+                        && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                })
+        }
+        self.same_shape(other)
+            && bits_eq(&self.att_x, &other.att_x)
+            && bits_eq(&self.wkv, &other.wkv)
+            && bits_eq(&self.ffn_x, &other.ffn_x)
+    }
+
+    /// Same shape and every element within absolute tolerance `tol` (for
+    /// tests that cross a lossy boundary and cannot expect bit equality).
+    pub fn approx_eq(&self, other: &Self, tol: f32) -> bool {
+        fn close(a: &[Vec<f32>], b: &[Vec<f32>], tol: f32) -> bool {
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| {
+                    x.len() == y.len()
+                        && x.iter().zip(y).all(|(p, q)| (p - q).abs() <= tol)
+                })
+        }
+        self.same_shape(other)
+            && close(&self.att_x, &other.att_x, tol)
+            && close(&self.wkv, &other.wkv, tol)
+            && close(&self.ffn_x, &other.ffn_x, tol)
     }
 
     pub fn reset(&mut self) {
@@ -59,6 +110,27 @@ mod tests {
         assert_eq!(s.att_x[0].len(), 128);
         assert_eq!(s.wkv[0].len(), 8 * 16 * 16);
         assert_eq!(s.nbytes(), 4 * 4 * (256 + 2048));
+    }
+
+    #[test]
+    fn nbytes_derives_from_elem_width() {
+        let s = RwkvState::zero(3, 8, 2, 4);
+        let per_layer = 8 * 2 + 2 * 4 * 4;
+        assert_eq!(s.nbytes(), (RwkvState::ELEM_BYTES * per_layer * 3) as u64);
+    }
+
+    #[test]
+    fn bitwise_and_approx_eq() {
+        let mut a = RwkvState::zero(2, 8, 2, 4);
+        let mut b = a.clone();
+        assert!(a.bitwise_eq(&b) && a.approx_eq(&b, 0.0));
+        b.wkv[1][3] = 1e-6;
+        assert!(!a.bitwise_eq(&b));
+        assert!(a.approx_eq(&b, 1e-5));
+        assert!(!a.approx_eq(&b, 1e-7));
+        // shape mismatch is never equal
+        a.dim = 9;
+        assert!(!a.bitwise_eq(&b) && !a.approx_eq(&b, 1.0));
     }
 
     #[test]

@@ -1,0 +1,561 @@
+//! Prefix-state cache: snapshot/fork RWKV states so shared prompt
+//! prefixes skip prefill entirely.
+//!
+//! RWKV's recurrent state is O(1) in sequence length — no KV cache —
+//! so caching a processed prompt prefix costs ONE [`RwkvState`] snapshot
+//! (a few MB) regardless of prefix length, something transformer serving
+//! stacks cannot do cheaply.  For the dominant edge workload (one fixed
+//! system prompt + short user turns) this turns almost all prompt tokens
+//! into a state copy: zero weight bytes, zero forward passes.
+//!
+//! Structure: a token trie keyed by feed streams (`[BOS, prompt...]`).
+//! Any node may hold a snapshot — the state after consuming exactly that
+//! prefix — plus an LRU stamp.  [`StateCache::lookup`] walks a feed and
+//! returns the DEEPEST snapshot on its path (longest-prefix match);
+//! [`StateCache::insert`] stores a snapshot, evicting least-recently-used
+//! snapshots until the byte budget (`CacheConfig::max_bytes`, state
+//! payload only — trie nodes are noise next to multi-MB states) holds.
+//! Eviction prunes emptied trie branches so dead prompts do not leak
+//! nodes.
+//!
+//! Concurrency: the cache is deliberately NOT thread-safe.  It lives on
+//! the coordinator's single round thread (the only place sessions are
+//! mutated), so the hot path pays no locks.
+//!
+//! Insertions are driven from `RwkvEngine::step_round_cached` at prefill
+//! chunk boundaries: after a fused round advances a prefill session to
+//! `pos`, the session's state is exactly "feed[..pos] consumed" and is
+//! snapshotted under that prefix.  Lookups happen once per request in
+//! [`super::session::Session::new_with_cache`], which forks the session
+//! off the matched snapshot and starts prefill at `pos = matched_len`.
+//!
+//! Persistence: [`StateCache::save`] / [`StateCache::load`] round-trip
+//! every snapshot through `io::statefile` (versioned header, f32
+//! payload), bit-exact, so a warm cache survives process restarts
+//! (`--state-file`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::state::RwkvState;
+
+/// Sizing knobs for a [`StateCache`].
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Byte budget for resident snapshots (state payload, via
+    /// [`RwkvState::nbytes`]).  Inserting past it evicts LRU snapshots;
+    /// a single state larger than the whole budget is refused.
+    pub max_bytes: u64,
+    /// Shortest prefix worth snapshotting (in feed tokens, BOS included).
+    /// Very short prefixes save almost nothing and pollute the budget.
+    pub min_prefix: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self { max_bytes: 64 << 20, min_prefix: 1 }
+    }
+}
+
+impl CacheConfig {
+    /// A config with `mb` MiB of budget and the default `min_prefix`.
+    pub fn with_mb(mb: usize) -> Self {
+        Self { max_bytes: (mb as u64) << 20, ..Self::default() }
+    }
+}
+
+/// Monotonic counters (never reset; `cache_bytes` is read live from
+/// [`StateCache::bytes`] instead because residency goes down too).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that matched a snapshot.
+    pub hits: u64,
+    /// Lookups that matched nothing.
+    pub misses: u64,
+    /// Feed tokens served from snapshots instead of prefill passes.
+    pub hit_tokens: u64,
+    /// Snapshots stored (refreshing an existing prefix does not count).
+    pub insertions: u64,
+    /// Snapshots evicted to hold the byte budget.
+    pub evictions: u64,
+}
+
+struct Snap {
+    state: Arc<RwkvState>,
+    bytes: u64,
+    /// LRU clock value of the last lookup hit / insert.
+    stamp: u64,
+    /// Prefix length (trie depth) — returned as `matched_len`.
+    len: usize,
+}
+
+struct Node {
+    token: u32,
+    parent: usize,
+    children: BTreeMap<u32, usize>,
+    snap: Option<Snap>,
+}
+
+const ROOT: usize = 0;
+
+pub struct StateCache {
+    cfg: CacheConfig,
+    /// Trie arena; node 0 is the root.  Freed nodes go on `free` and are
+    /// reused (their `snap` is `None` and `children` empty meanwhile).
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// Recency index: stamp -> snapshot-bearing node.  Stamps are unique
+    /// (the clock only moves forward), so the map's first entry is always
+    /// the LRU victim — eviction is O(log snapshots), never an arena
+    /// scan.  Invariant: one entry per resident snapshot, keyed by its
+    /// current stamp.
+    lru: BTreeMap<u64, usize>,
+    clock: u64,
+    bytes: u64,
+    snapshots: usize,
+    stats: CacheStats,
+}
+
+impl StateCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let root = Node { token: 0, parent: ROOT, children: BTreeMap::new(), snap: None };
+        Self {
+            cfg,
+            nodes: vec![root],
+            free: Vec::new(),
+            lru: BTreeMap::new(),
+            clock: 0,
+            bytes: 0,
+            snapshots: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> CacheConfig {
+        self.cfg
+    }
+
+    /// Resident snapshot bytes (the telemetry `cache_bytes` gauge).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Resident snapshot count.
+    pub fn snapshots(&self) -> usize {
+        self.snapshots
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Longest-prefix match: the deepest snapshot along `tokens`' path,
+    /// as `(snapshot, matched_len)` — the state after consuming exactly
+    /// `tokens[..matched_len]`.  A hit refreshes the snapshot's recency.
+    ///
+    /// Callers pass the feed MINUS its final position (`Session::
+    /// new_with_cache` does): the last token must always re-run so the
+    /// round has logits to sample from.
+    pub fn lookup(&mut self, tokens: &[u32]) -> Option<(Arc<RwkvState>, usize)> {
+        let mut cur = ROOT;
+        let mut best: Option<usize> = None;
+        for &t in tokens {
+            match self.nodes[cur].children.get(&t).copied() {
+                Some(next) => {
+                    cur = next;
+                    if self.nodes[cur].snap.is_some() {
+                        best = Some(cur);
+                    }
+                }
+                None => break,
+            }
+        }
+        match best {
+            Some(ni) => {
+                self.clock += 1;
+                let snap = self.nodes[ni].snap.as_mut().expect("best node has snap");
+                let old_stamp = snap.stamp;
+                snap.stamp = self.clock;
+                let len = snap.len;
+                let state = Arc::clone(&snap.state);
+                self.lru.remove(&old_stamp);
+                self.lru.insert(self.clock, ni);
+                self.stats.hits += 1;
+                self.stats.hit_tokens += len as u64;
+                Some((state, len))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// `true` when a snapshot exists at exactly `prefix` (no recency
+    /// refresh, no stats).
+    pub fn contains(&self, prefix: &[u32]) -> bool {
+        let mut cur = ROOT;
+        for &t in prefix {
+            match self.nodes[cur].children.get(&t).copied() {
+                Some(next) => cur = next,
+                None => return false,
+            }
+        }
+        cur != ROOT && self.nodes[cur].snap.is_some()
+    }
+
+    /// Snapshot `state` under `prefix`, evicting LRU snapshots first if
+    /// the budget needs room.  Returns `true` if a new snapshot was
+    /// stored; refreshing an already-cached prefix only touches its
+    /// recency (and skips the state clone entirely).  Prefixes shorter
+    /// than `min_prefix`, empty prefixes and states larger than the whole
+    /// budget are refused.
+    pub fn insert(&mut self, prefix: &[u32], state: &RwkvState) -> bool {
+        let sbytes = state.nbytes();
+        if prefix.is_empty() || prefix.len() < self.cfg.min_prefix || sbytes > self.cfg.max_bytes {
+            return false;
+        }
+        let mut cur = ROOT;
+        for &t in prefix {
+            cur = match self.nodes[cur].children.get(&t).copied() {
+                Some(next) => next,
+                None => {
+                    let node =
+                        Node { token: t, parent: cur, children: BTreeMap::new(), snap: None };
+                    let ni = self.alloc(node);
+                    self.nodes[cur].children.insert(t, ni);
+                    ni
+                }
+            };
+        }
+        self.clock += 1;
+        if let Some(s) = self.nodes[cur].snap.as_mut() {
+            if s.state.same_shape(state) {
+                let old_stamp = s.stamp;
+                s.stamp = self.clock;
+                self.lru.remove(&old_stamp);
+                self.lru.insert(self.clock, cur);
+                return false;
+            }
+            // a stale snapshot from another model's run (e.g. a reused
+            // state file) would otherwise pin this prefix cold forever —
+            // replace it with the live engine's state
+            let old = self.nodes[cur].snap.take().expect("checked above");
+            self.lru.remove(&old.stamp);
+            self.bytes -= old.bytes;
+            self.snapshots -= 1;
+            self.stats.evictions += 1;
+        }
+        // store FIRST, then evict to budget: the new snapshot carries the
+        // newest stamp so the LRU order never victimizes it (unless it
+        // were the sole snapshot — impossible while over budget, since
+        // sbytes <= max_bytes).  Evicting first would let `prune` free the
+        // still-snapless `cur` when the victim is its only descendant.
+        self.nodes[cur].snap = Some(Snap {
+            state: Arc::new(state.clone()),
+            bytes: sbytes,
+            stamp: self.clock,
+            len: prefix.len(),
+        });
+        self.lru.insert(self.clock, cur);
+        self.bytes += sbytes;
+        self.snapshots += 1;
+        self.stats.insertions += 1;
+        while self.bytes > self.cfg.max_bytes {
+            if !self.evict_lru() {
+                break; // unreachable: at least the new snapshot exists
+            }
+        }
+        true
+    }
+
+    /// Drop every snapshot (stats are kept — they are monotonic).
+    pub fn clear(&mut self) {
+        let root = Node { token: 0, parent: ROOT, children: BTreeMap::new(), snap: None };
+        self.nodes = vec![root];
+        self.free.clear();
+        self.lru.clear();
+        self.bytes = 0;
+        self.snapshots = 0;
+    }
+
+    /// Evict the least-recently-used snapshot (the recency index's first
+    /// entry) and prune its now-empty branch.  `false` when the cache
+    /// holds no snapshots.
+    fn evict_lru(&mut self) -> bool {
+        let Some((_, vi)) = self.lru.pop_first() else {
+            return false;
+        };
+        let snap = self.nodes[vi].snap.take().expect("lru entry has snap");
+        self.bytes -= snap.bytes;
+        self.snapshots -= 1;
+        self.stats.evictions += 1;
+        self.prune(vi);
+        true
+    }
+
+    /// Free trie nodes from `ni` upward while they carry neither a
+    /// snapshot nor children.
+    fn prune(&mut self, mut ni: usize) {
+        while ni != ROOT && self.nodes[ni].snap.is_none() && self.nodes[ni].children.is_empty() {
+            let parent = self.nodes[ni].parent;
+            let token = self.nodes[ni].token;
+            self.nodes[parent].children.remove(&token);
+            self.free.push(ni);
+            ni = parent;
+        }
+    }
+
+    fn alloc(&mut self, node: Node) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Reconstruct a snapshot node's prefix by walking parent links.
+    fn prefix_of(&self, mut ni: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        while ni != ROOT {
+            out.push(self.nodes[ni].token);
+            ni = self.nodes[ni].parent;
+        }
+        out.reverse();
+        out
+    }
+
+    /// Every resident snapshot as `(prefix, state)`, least-recently-used
+    /// first (the recency index's order) — the order [`StateCache::save`]
+    /// persists, so a reload re-inserts oldest-first and recency survives
+    /// the round trip.
+    pub fn entries(&self) -> Vec<(Vec<u32>, Arc<RwkvState>)> {
+        self.lru
+            .values()
+            .map(|&ni| {
+                let snap = self.nodes[ni].snap.as_ref().expect("lru node has snap");
+                (self.prefix_of(ni), Arc::clone(&snap.state))
+            })
+            .collect()
+    }
+
+    /// Persist every snapshot to `path` (`io::statefile`) under a
+    /// writer-chosen model fingerprint `tag`; returns how many were
+    /// written.
+    pub fn save(&self, path: &Path, tag: &str) -> Result<usize> {
+        let entries = self.entries();
+        let refs: Vec<(&[u32], &RwkvState)> =
+            entries.iter().map(|(p, s)| (p.as_slice(), s.as_ref())).collect();
+        crate::io::write_statefile(path, tag, &refs)?;
+        Ok(refs.len())
+    }
+
+    /// Load snapshots from `path` into this cache, ignoring the file's
+    /// tag (budget and `min_prefix` apply as usual).  A missing file is a
+    /// fresh start, not an error.  Returns how many snapshots were
+    /// inserted.  Serving code should use [`StateCache::load_matching`].
+    pub fn load(&mut self, path: &Path) -> Result<usize> {
+        if !path.exists() {
+            return Ok(0);
+        }
+        let (_tag, entries) = crate::io::read_statefile(path)?;
+        let mut n = 0;
+        for (prefix, state) in entries {
+            if self.insert(&prefix, &state) {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// [`StateCache::load`] restricted to a file whose model fingerprint
+    /// equals `tag` AND to snapshots whose shape matches `template`
+    /// (e.g. `engine.new_state()`).  Shape alone cannot tell two
+    /// checkpoints apart — a fine-tuned model has identical dims but
+    /// different weights, and forking its states would silently break the
+    /// warm==cold bit-identity contract — so a tag mismatch rejects the
+    /// whole file (an error the coordinator logs, then starts cold).
+    pub fn load_matching(&mut self, path: &Path, tag: &str, template: &RwkvState) -> Result<usize> {
+        if !path.exists() {
+            return Ok(0);
+        }
+        let (file_tag, entries) = crate::io::read_statefile(path)?;
+        if file_tag != tag {
+            anyhow::bail!(
+                "state file was written by a different model (file tag '{file_tag}', \
+                 current '{tag}') — starting cold"
+            );
+        }
+        let mut n = 0;
+        for (prefix, state) in entries {
+            if state.same_shape(template) && self.insert(&prefix, &state) {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(tag: f32) -> RwkvState {
+        let mut st = RwkvState::zero(1, 4, 1, 4);
+        st.att_x[0][0] = tag;
+        st
+    }
+
+    fn cache(max_states: u64) -> StateCache {
+        let bytes = state(0.0).nbytes();
+        StateCache::new(CacheConfig { max_bytes: max_states * bytes, min_prefix: 1 })
+    }
+
+    #[test]
+    fn longest_prefix_match_wins() {
+        let mut c = cache(8);
+        assert!(c.insert(&[2, 5], &state(1.0)));
+        assert!(c.insert(&[2, 5, 7, 9], &state(2.0)));
+        // deeper snapshot on the path wins
+        let (st, len) = c.lookup(&[2, 5, 7, 9, 11]).unwrap();
+        assert_eq!(len, 4);
+        assert_eq!(st.att_x[0][0], 2.0);
+        // diverging after [2,5] falls back to the shallower snapshot
+        let (st, len) = c.lookup(&[2, 5, 8]).unwrap();
+        assert_eq!(len, 2);
+        assert_eq!(st.att_x[0][0], 1.0);
+        assert!(c.lookup(&[3, 3]).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.hit_tokens), (2, 1, 6));
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_storing() {
+        let mut c = cache(8);
+        assert!(c.insert(&[2, 5], &state(1.0)));
+        assert!(!c.insert(&[2, 5], &state(9.0)), "existing prefix only refreshed");
+        assert_eq!(c.snapshots(), 1);
+        let (st, _) = c.lookup(&[2, 5]).unwrap();
+        assert_eq!(st.att_x[0][0], 1.0, "original snapshot kept");
+        assert_eq!(c.stats().insertions, 1);
+    }
+
+    #[test]
+    fn lru_eviction_holds_byte_budget_and_prunes() {
+        let mut c = cache(2);
+        assert!(c.insert(&[2, 1], &state(1.0)));
+        assert!(c.insert(&[2, 2], &state(2.0)));
+        // touch [2,1] so [2,2] is the LRU victim
+        c.lookup(&[2, 1]).unwrap();
+        let nodes_before = c.nodes.len();
+        assert!(c.insert(&[2, 3, 4], &state(3.0)));
+        assert_eq!(c.snapshots(), 2);
+        assert!(c.bytes() <= c.config().max_bytes);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.lookup(&[2, 2]).is_none(), "LRU snapshot evicted");
+        assert!(c.lookup(&[2, 1]).is_some(), "recently used survives");
+        // the [2,2] branch was pruned and its node reused by [2,3,4]
+        assert!(nodes_before >= c.nodes.len() - 1);
+        // evicting everything leaves an insertable cache
+        assert!(c.insert(&[9, 9], &state(4.0)));
+        assert!(c.insert(&[8, 8], &state(5.0)));
+        assert!(c.lookup(&[9, 9]).is_some());
+    }
+
+    /// Regression: inserting a SHORTER prefix whose only-descendant
+    /// snapshot is the eviction victim must not free the node being
+    /// inserted into (evict-then-store did; store-then-evict cannot).
+    #[test]
+    fn eviction_of_descendant_keeps_new_ancestor_snapshot() {
+        let mut c = cache(1); // budget: exactly one snapshot
+        assert!(c.insert(&[2, 5, 7], &state(1.0)));
+        // same path, shorter prefix: [2,5] is snapless interior; the
+        // eviction victim [2,5,7] hangs below it
+        assert!(c.insert(&[2, 5], &state(2.0)));
+        assert_eq!(c.snapshots(), 1);
+        assert_eq!(c.stats().evictions, 1);
+        let (st, len) = c.lookup(&[2, 5, 7]).expect("ancestor snapshot survives");
+        assert_eq!(len, 2);
+        assert_eq!(st.att_x[0][0], 2.0);
+        // the trie stayed consistent: a fresh insert under the same path
+        // works and is found
+        assert!(c.insert(&[2, 5, 9], &state(3.0)));
+        let (st, len) = c.lookup(&[2, 5, 9]).expect("fresh descendant insert works");
+        assert_eq!(len, 3);
+        assert_eq!(st.att_x[0][0], 3.0);
+    }
+
+    #[test]
+    fn refuses_undersized_and_oversized() {
+        let bytes = state(0.0).nbytes();
+        let mut c = StateCache::new(CacheConfig { max_bytes: bytes * 4, min_prefix: 3 });
+        assert!(!c.insert(&[2, 5], &state(1.0)), "below min_prefix");
+        assert!(!c.insert(&[], &state(1.0)), "empty prefix");
+        assert!(c.insert(&[2, 5, 6], &state(1.0)));
+        let big = RwkvState::zero(64, 64, 8, 8);
+        assert!(big.nbytes() > c.config().max_bytes);
+        assert!(!c.insert(&[2, 5, 6, 7], &big), "state larger than whole budget");
+        assert_eq!(c.snapshots(), 1);
+    }
+
+    /// A stale snapshot with a different model shape at the same prefix
+    /// is REPLACED by a live insert (never pinned forever), and
+    /// `load_matching` filters foreign shapes out up front.
+    #[test]
+    fn stale_shape_snapshot_is_replaced_and_filtered() {
+        let mut c = StateCache::new(CacheConfig { max_bytes: 1 << 20, min_prefix: 1 });
+        let foreign = RwkvState::zero(2, 8, 2, 4); // a different model's shape
+        assert!(c.insert(&[2, 5], &foreign));
+        // the live engine inserts its own shape at the same prefix
+        assert!(c.insert(&[2, 5], &state(7.0)), "stale snapshot must be replaced");
+        assert_eq!(c.snapshots(), 1);
+        assert_eq!(c.stats().evictions, 1, "replacement accounts as an eviction");
+        assert_eq!(c.bytes(), state(7.0).nbytes());
+        let (st, _) = c.lookup(&[2, 5]).unwrap();
+        assert!(st.bitwise_eq(&state(7.0)));
+        // load_matching refuses a different model's file: by fingerprint
+        // tag (same-shape fine-tunes!) and, within a file, by shape
+        let dir = std::env::temp_dir().join(format!("rwkv-sc-shape-{}", std::process::id()));
+        let path = dir.join("cache.rwst");
+        let mut foreign_cache = StateCache::new(CacheConfig { max_bytes: 1 << 20, min_prefix: 1 });
+        assert!(foreign_cache.insert(&[2, 9], &foreign));
+        foreign_cache.save(&path, "model-a").unwrap();
+        let mut c2 = StateCache::new(CacheConfig { max_bytes: 1 << 20, min_prefix: 1 });
+        assert!(
+            c2.load_matching(&path, "model-b", &foreign).is_err(),
+            "a tag mismatch (e.g. a same-shape fine-tune) rejects the file"
+        );
+        assert_eq!(c2.snapshots(), 0);
+        assert_eq!(c2.load_matching(&path, "model-a", &state(0.0)).unwrap(), 0);
+        assert_eq!(c2.snapshots(), 0, "matching tag but foreign shape loads nothing");
+        assert_eq!(c2.load_matching(&path, "model-a", &foreign).unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("rwkv-sc-rt-{}", std::process::id()));
+        let path = dir.join("cache.rwst");
+        let mut c = cache(8);
+        assert!(c.insert(&[2, 5], &state(1.5)));
+        assert!(c.insert(&[2, 5, 7], &state(2.5)));
+        assert_eq!(c.save(&path, "m").unwrap(), 2);
+        let mut c2 = cache(8);
+        assert_eq!(c2.load(&path).unwrap(), 2);
+        let (st, len) = c2.lookup(&[2, 5, 7]).unwrap();
+        assert_eq!(len, 3);
+        assert!(st.bitwise_eq(&state(2.5)));
+        // missing file: fresh start, not an error
+        let mut c3 = cache(8);
+        assert_eq!(c3.load(&dir.join("nope.rwst")).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

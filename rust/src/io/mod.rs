@@ -3,7 +3,9 @@
 pub mod manifest;
 pub mod mmap;
 pub mod rkv;
+pub mod statefile;
 
 pub use manifest::Manifest;
 pub use mmap::Mmap;
 pub use rkv::{write_rkv, RkvFile, RkvTensor, TensorEntry};
+pub use statefile::{read_statefile, write_statefile};

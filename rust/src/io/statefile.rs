@@ -1,0 +1,300 @@
+//! Binary save/load for `RwkvState` snapshots (the prefix-state cache's
+//! persistence format).
+//!
+//! Because RWKV's recurrent state is O(1) in sequence length, a fully
+//! processed prompt prefix persists as one fixed-size snapshot — a few
+//! MB regardless of how long the prefix was.  A statefile holds any
+//! number of `(token-prefix, state)` entries so `engine::state_cache`
+//! can survive process restarts (`--state-file`).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  b"RWST"
+//! u32    version (=1)
+//! u16    tag_len, tag bytes   (model fingerprint, writer-chosen)
+//! u32    n_entries
+//! entry  n_entries x {
+//!          u32 prefix_len, u32 prefix[prefix_len],
+//!          u32 layers, u32 dim, u32 heads, u32 head_size,
+//!          per layer: f32 att_x[dim], f32 wkv[heads*head_size^2],
+//!                     f32 ffn_x[dim]
+//!        }
+//! ```
+//!
+//! The tag exists because shape alone cannot tell two checkpoints apart:
+//! a fine-tuned model has identical dims but different weights, and its
+//! states are NOT interchangeable.  The writer stamps whatever identity
+//! it has (the coordinator uses model name + checkpoint size + mtime);
+//! the reader returns it for the caller to compare.
+//!
+//! The payload is f32 (`RwkvState::ELEM_BYTES` — the element width is
+//! defined once, in `engine::state`), so a save/load round trip is
+//! bit-exact: a restored snapshot decodes the same stream a live one
+//! would (`tests/state_cache_equivalence.rs`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::state::RwkvState;
+
+pub const STATEFILE_MAGIC: &[u8; 4] = b"RWST";
+pub const STATEFILE_VERSION: u32 = 1;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Write `(token-prefix, state)` entries to `path` under a writer-chosen
+/// model `tag` (atomic enough for the cache's shutdown save: written as
+/// one buffer, one `fs::write`).
+pub fn write_statefile(path: &Path, tag: &str, entries: &[(&[u32], &RwkvState)]) -> Result<()> {
+    bail_on_long_tag(tag)?;
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(STATEFILE_MAGIC);
+    put_u32(&mut out, STATEFILE_VERSION);
+    out.extend_from_slice(&(tag.len() as u16).to_le_bytes());
+    out.extend_from_slice(tag.as_bytes());
+    put_u32(&mut out, entries.len() as u32);
+    for (prefix, st) in entries {
+        put_u32(&mut out, prefix.len() as u32);
+        for &t in *prefix {
+            put_u32(&mut out, t);
+        }
+        put_u32(&mut out, st.layers() as u32);
+        put_u32(&mut out, st.dim as u32);
+        put_u32(&mut out, st.heads as u32);
+        put_u32(&mut out, st.head_size as u32);
+        for l in 0..st.layers() {
+            put_f32s(&mut out, &st.att_x[l]);
+            put_f32s(&mut out, &st.wkv[l]);
+            put_f32s(&mut out, &st.ffn_x[l]);
+        }
+    }
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, &out).with_context(|| format!("writing statefile {}", path.display()))
+}
+
+fn bail_on_long_tag(tag: &str) -> Result<()> {
+    if tag.len() > u16::MAX as usize {
+        bail!("statefile tag too long ({} bytes)", tag.len());
+    }
+    Ok(())
+}
+
+/// Bounds-checked little-endian cursor over the statefile bytes.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len().saturating_sub(self.pos)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        if self.pos + 2 > self.b.len() {
+            bail!("statefile truncated at byte {}", self.pos);
+        }
+        let v = u16::from_le_bytes(self.b[self.pos..self.pos + 2].try_into().unwrap());
+        self.pos += 2;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.b.len() {
+            bail!("statefile truncated at byte {}", self.pos);
+        }
+        let v = u32::from_le_bytes(self.b[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = n * RwkvState::ELEM_BYTES;
+        if self.pos + bytes > self.b.len() {
+            bail!("statefile truncated at byte {}", self.pos);
+        }
+        let out = self.b[self.pos..self.pos + bytes]
+            .chunks_exact(RwkvState::ELEM_BYTES)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.pos += bytes;
+        Ok(out)
+    }
+}
+
+/// Read a statefile: the writer's model tag plus every
+/// `(token-prefix, state)` entry, in file order.
+pub fn read_statefile(path: &Path) -> Result<(String, Vec<(Vec<u32>, RwkvState)>)> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading statefile {}", path.display()))?;
+    if bytes.len() < 8 || &bytes[0..4] != STATEFILE_MAGIC {
+        bail!("{}: not a statefile (bad magic)", path.display());
+    }
+    let mut cur = Cursor { b: &bytes, pos: 4 };
+    let version = cur.u32()?;
+    if version != STATEFILE_VERSION {
+        bail!("{}: unsupported statefile version {version}", path.display());
+    }
+    let tag_len = cur.u16()? as usize;
+    if tag_len > cur.remaining() {
+        bail!("statefile tag exceeds file size");
+    }
+    let tag = std::str::from_utf8(&bytes[cur.pos..cur.pos + tag_len])
+        .context("statefile tag is not UTF-8")?
+        .to_string();
+    cur.pos += tag_len;
+    let n = cur.u32()? as usize;
+    // every count below is attacker-controlled (a corrupt/truncated file):
+    // bound allocations by the bytes actually present, so a bad header
+    // returns Err instead of aborting on a multi-GB reservation
+    let mut out = Vec::new();
+    for i in 0..n {
+        let plen = cur.u32()? as usize;
+        if plen > cur.remaining() / 4 {
+            bail!("statefile entry {i}: prefix length {plen} exceeds file size");
+        }
+        let mut prefix = Vec::with_capacity(plen);
+        for _ in 0..plen {
+            prefix.push(cur.u32()?);
+        }
+        let layers = cur.u32()? as usize;
+        let dim = cur.u32()? as usize;
+        let heads = cur.u32()? as usize;
+        let head_size = cur.u32()? as usize;
+        // u128 compare: a crafted heads/head_size pair could overflow the
+        // usize product before the payload bound gets a chance to reject
+        if heads as u128 * head_size as u128 != dim as u128 || dim == 0 || layers == 0 {
+            bail!(
+                "statefile entry {i}: inconsistent shape ({layers}L, dim {dim}, {heads}x{head_size})"
+            );
+        }
+        // u128: dims are u32-sized, so per-layer element math cannot be
+        // trusted to fit u64 before validation
+        let per_layer = dim as u128 * 2 + heads as u128 * head_size as u128 * head_size as u128;
+        let payload = per_layer * layers as u128 * RwkvState::ELEM_BYTES as u128;
+        if payload > cur.remaining() as u128 {
+            bail!("statefile entry {i}: payload exceeds file size");
+        }
+        let mut st = RwkvState::zero(layers, dim, heads, head_size);
+        for l in 0..layers {
+            st.att_x[l] = cur.f32s(dim)?;
+            st.wkv[l] = cur.f32s(heads * head_size * head_size)?;
+            st.ffn_x[l] = cur.f32s(dim)?;
+        }
+        out.push((prefix, st));
+    }
+    Ok((tag, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled_state(seed: f32) -> RwkvState {
+        let mut st = RwkvState::zero(2, 8, 2, 4);
+        let vecs = st.att_x.iter_mut().chain(st.wkv.iter_mut()).chain(st.ffn_x.iter_mut());
+        for (i, v) in vecs.enumerate() {
+            for (j, x) in v.iter_mut().enumerate() {
+                *x = seed + i as f32 * 0.25 + j as f32 * 0.0625;
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn round_trips_bit_exact_with_tag() {
+        let dir = std::env::temp_dir().join(format!("rwst-rt-{}", std::process::id()));
+        let path = dir.join("cache.rwst");
+        let a = filled_state(1.0);
+        let b = filled_state(-3.5);
+        write_statefile(&path, "model-x:1234:99", &[(&[2, 5, 9], &a), (&[2, 7], &b)]).unwrap();
+        let (tag, back) = read_statefile(&path).unwrap();
+        assert_eq!(tag, "model-x:1234:99");
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, vec![2, 5, 9]);
+        assert_eq!(back[1].0, vec![2, 7]);
+        assert!(back[0].1.bitwise_eq(&a));
+        assert!(back[1].1.bitwise_eq(&b));
+        // an empty tag is legal (unfingerprinted writers)
+        write_statefile(&path, "", &[(&[4], &a)]).unwrap();
+        let (tag, back) = read_statefile(&path).unwrap();
+        assert_eq!(tag, "");
+        assert_eq!(back.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let dir = std::env::temp_dir().join(format!("rwst-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.rwst");
+        std::fs::write(&bad, b"NOPE....").unwrap();
+        assert!(read_statefile(&bad).is_err());
+        // valid header, truncated payload
+        let path = dir.join("trunc.rwst");
+        let st = filled_state(0.5);
+        write_statefile(&path, "t", &[(&[2, 3], &st)]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        assert!(read_statefile(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Corrupt counts must produce an `Err`, never a huge allocation: the
+    /// reader bounds every count by the bytes actually in the file.
+    #[test]
+    fn rejects_oversized_counts_without_allocating() {
+        let dir = std::env::temp_dir().join(format!("rwst-huge-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut header = Vec::new();
+        header.extend_from_slice(STATEFILE_MAGIC);
+        header.extend_from_slice(&STATEFILE_VERSION.to_le_bytes());
+        header.extend_from_slice(&0u16.to_le_bytes()); // empty tag
+        // n_entries = u32::MAX with no entry bytes behind it
+        let p1 = dir.join("entries.rwst");
+        let mut b = header.clone();
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p1, &b).unwrap();
+        assert!(read_statefile(&p1).is_err());
+        // one entry claiming a u32::MAX-token prefix
+        let p2 = dir.join("prefix.rwst");
+        let mut b = header.clone();
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p2, &b).unwrap();
+        assert!(read_statefile(&p2).is_err());
+        // one entry whose shape implies a payload far beyond the file
+        let p3 = dir.join("payload.rwst");
+        let mut b = header;
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes()); // empty prefix
+        for v in [1u32, 1 << 30, 1 << 15, 1 << 15] {
+            // layers, dim, heads, head_size (heads*head_size == dim)
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p3, &b).unwrap();
+        assert!(read_statefile(&p3).is_err());
+        // a tag length pointing past the end of the file
+        let p4 = dir.join("tag.rwst");
+        let mut b = Vec::new();
+        b.extend_from_slice(STATEFILE_MAGIC);
+        b.extend_from_slice(&STATEFILE_VERSION.to_le_bytes());
+        b.extend_from_slice(&u16::MAX.to_le_bytes());
+        std::fs::write(&p4, &b).unwrap();
+        assert!(read_statefile(&p4).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -17,6 +17,7 @@ use rwkv_lite::config::{Backend, EngineConfig, LoadStrategy};
 use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator};
 use rwkv_lite::engine::sampler::Sampler;
 use rwkv_lite::engine::session::Session;
+use rwkv_lite::engine::state_cache::{CacheConfig, StateCache};
 use rwkv_lite::engine::RwkvEngine;
 use rwkv_lite::server::Server;
 use rwkv_lite::text::Vocab;
@@ -33,6 +34,7 @@ const SPECS: &[cli::OptSpec] = &[
     flag("no-emb-cache", "disable embedding cache"),
     opt("prompt", "prompt text (generate)"),
     opt("stop", "comma-separated stop words (generate)"),
+    opt("stop-seq", "comma-separated multi-word stop sequences (generate)"),
     opt_def("n", "tokens to generate / measure", "64"),
     opt_def("temperature", "sampling temperature (0 = greedy)", "0.8"),
     opt_def("top-p", "nucleus mass", "0.95"),
@@ -42,6 +44,8 @@ const SPECS: &[cli::OptSpec] = &[
     opt_def("limit", "max examples per eval task", "0"),
     opt_def("addr", "listen address (serve)", "127.0.0.1:7070"),
     opt_def("batch", "max dynamic batch size (serve)", "8"),
+    opt_def("state-cache-mb", "prefix-state cache budget in MiB (serve; 0 = off)", "0"),
+    opt("state-file", "persist the prefix-state cache across restarts (serve)"),
     opt("task", "single task name (eval)"),
     opt("seed", "sampler seed"),
 ];
@@ -83,6 +87,8 @@ fn engine_config(a: &Args) -> Result<EngineConfig> {
         other => bail!("--prefetch takes on|off, got '{other}'"),
     };
     cfg.threads = a.usize_or("threads", 0)?;
+    cfg.state_cache_mb = a.usize_or("state-cache-mb", 0)?;
+    cfg.state_file = a.get("state-file").map(PathBuf::from);
     cfg.seed = a.u64_or("seed", 0)?;
     Ok(cfg)
 }
@@ -113,6 +119,11 @@ fn cmd_generate(a: &Args) -> Result<()> {
     if let Some(stops) = a.get("stop") {
         sess.stop_tokens =
             v.stop_token_ids(stops.split(',').map(|w| w.trim()).filter(|w| !w.is_empty()))?;
+    }
+    if let Some(seqs) = a.get("stop-seq") {
+        for phrase in seqs.split(',').map(|p| p.trim()).filter(|p| !p.is_empty()) {
+            sess.stop_seqs.push(v.stop_seq_ids(phrase)?);
+        }
     }
     let t = rwkv_lite::util::Stopwatch::start();
     let out = engine.run_session(&mut sess)?;
@@ -146,7 +157,17 @@ fn cmd_serve(a: &Args) -> Result<()> {
     // coordinator's engine factory: every scheduling round fans out over
     // these workers (--threads; 0 = all cores)
     let pool = rwkv_lite::pool::for_threads(cfg.threads);
-    let coordinator = Coordinator::spawn(move || RwkvEngine::load_with_pool(cfg, pool), policy);
+    // one prefix-state cache shared across all requests (--state-cache-mb;
+    // --state-file persists its snapshots across restarts)
+    let cache = (cfg.state_cache_mb > 0)
+        .then(|| StateCache::new(CacheConfig::with_mb(cfg.state_cache_mb)));
+    let state_file = cfg.state_file.clone();
+    let coordinator = Coordinator::spawn_with_cache(
+        move || RwkvEngine::load_with_pool(cfg, pool),
+        policy,
+        cache,
+        state_file,
+    );
     let server = Arc::new(Server::new(coordinator, v));
     server.serve(a.get_or("addr", "127.0.0.1:7070"), None)
 }

@@ -123,6 +123,13 @@ impl Registry {
         *self.counters.lock().unwrap().entry(name.to_string()).or_default() += by;
     }
 
+    /// Overwrite a counter with an absolute value (gauge semantics —
+    /// used for levels that can fall as well as rise, e.g. the
+    /// prefix-state cache's resident `cache_bytes`).
+    pub fn set(&self, name: &str, value: u64) {
+        self.counters.lock().unwrap().insert(name.to_string(), value);
+    }
+
     pub fn observe(&self, name: &str, seconds: f64) {
         self.timings
             .lock()
@@ -204,5 +211,13 @@ mod tests {
         r.observe("step", 0.5);
         assert_eq!(r.counter("tokens"), 5);
         assert_eq!(r.timing_mean("step"), Some(0.5));
+    }
+
+    #[test]
+    fn set_overwrites_gauge() {
+        let r = Registry::new();
+        r.set("cache_bytes", 100);
+        r.set("cache_bytes", 40); // gauges can fall
+        assert_eq!(r.counter("cache_bytes"), 40);
     }
 }

@@ -1,15 +1,22 @@
 //! TCP serving front-end (S22): newline-delimited JSON protocol.
 //!
 //! Request:  {"prompt": "<text>", "max_tokens": 32, "temperature": 0.8,
-//!            "top_p": 0.95, "stop": ["word", ...], "seed": 7}
-//!           (`stop` words are vocab-encoded into stop token ids; unknown
-//!           words are rejected with an error line.  `seed` pins the
-//!           sampler for cross-run determinism — omitted, the request id
-//!           seeds it; valid seeds are integers in [0, 2^53), anything
-//!           else is treated as absent since JSON numbers are f64)
+//!            "top_p": 0.95, "stop": ["word", ...],
+//!            "stop_seqs": ["multi word phrase", ...], "seed": 7,
+//!            "cache": true}
+//!           (`stop` words / `stop_seqs` phrases are vocab-encoded into
+//!           stop token ids / sequences; unknown words are rejected with
+//!           an error line.  `seed` pins the sampler for cross-run
+//!           determinism — omitted, the request id seeds it; valid seeds
+//!           are integers in [0, 2^53), anything else is treated as
+//!           absent since JSON numbers are f64.  `cache: false` opts the
+//!           request out of the prefix-state cache when the server runs
+//!           one — see `--state-cache-mb`)
 //! Response: {"token": "<word>"} per generated token, then
 //!           {"done": true, "tokens": n, "seconds": s, "tps": r,
-//!            "reason": "length"|"stop"|"cancelled"}
+//!            "reason": "length"|"stop"|"cancelled", "cached_tokens": c}
+//!           (`cached_tokens` = prompt feed tokens whose prefill was
+//!           skipped by forking a cached prefix state)
 //!
 //! The full protocol (request fields, response lines, error shapes) is
 //! documented in `docs/serving.md` together with every CLI flag.
@@ -111,6 +118,25 @@ impl Server {
                     continue;
                 }
             };
+            // multi-token stop sequences: each phrase encodes to a token
+            // sequence; rejection policy matches single stop words
+            let stop_phrases: Vec<&str> = v
+                .get("stop_seqs")
+                .and_then(|s| s.as_arr())
+                .map(|ps| ps.iter().filter_map(|p| p.as_str()).collect())
+                .unwrap_or_default();
+            let stop_sequences = match stop_phrases
+                .iter()
+                .map(|p| self.vocab.stop_seq_ids(p))
+                .collect::<anyhow::Result<Vec<_>>>()
+            {
+                Ok(seqs) => seqs,
+                Err(e) => {
+                    let msg = json::obj(vec![("error", json::s(&e.to_string()))]);
+                    writeln!(writer, "{}", msg.to_string())?;
+                    continue;
+                }
+            };
             let req = Request {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 prompt: self.vocab.encode(&prompt_text),
@@ -118,6 +144,7 @@ impl Server {
                 temperature: v.f64_at(&["temperature"]).unwrap_or(0.0) as f32,
                 top_p: v.f64_at(&["top_p"]).unwrap_or(1.0) as f32,
                 stop_tokens,
+                stop_sequences,
                 // only integers in [0, 2^53) round-trip exactly through
                 // JSON f64; anything else is treated as absent rather than
                 // silently saturating/truncating into seed collisions
@@ -125,6 +152,9 @@ impl Server {
                     .f64_at(&["seed"])
                     .filter(|&s| s >= 0.0 && s < 9007199254740992.0 && s.fract() == 0.0)
                     .map(|s| s as u64),
+                // per-request opt-out of the prefix-state cache (a no-op
+                // when the server runs without one)
+                cache: v.get("cache").and_then(|c| c.as_bool()).unwrap_or(true),
             };
             let rx = self.coordinator.submit(req);
             for ev in rx {
@@ -133,13 +163,14 @@ impl Server {
                         let msg = json::obj(vec![("token", json::s(self.vocab.word(token)))]);
                         writeln!(writer, "{}", msg.to_string())?;
                     }
-                    Event::Done { tokens, seconds, reason } => {
+                    Event::Done { tokens, seconds, reason, cached_tokens } => {
                         let msg = json::obj(vec![
                             ("done", Value::Bool(true)),
                             ("tokens", json::num(tokens as f64)),
                             ("seconds", json::num(seconds)),
                             ("tps", json::num(tokens as f64 / seconds.max(1e-9))),
                             ("reason", json::s(reason.name())),
+                            ("cached_tokens", json::num(cached_tokens as f64)),
                         ]);
                         writeln!(writer, "{}", msg.to_string())?;
                         break;
@@ -168,6 +199,9 @@ pub struct Completion {
     pub tps: f64,
     /// Finish reason wire name ("length" | "stop" | "cancelled").
     pub reason: String,
+    /// Prompt feed tokens served from the prefix-state cache (0 when the
+    /// server runs without one or the prefix was cold).
+    pub cached_tokens: usize,
 }
 
 impl Client {
@@ -201,6 +235,7 @@ impl Client {
                 out.seconds = v.f64_at(&["seconds"]).unwrap_or(0.0);
                 out.tps = v.f64_at(&["tps"]).unwrap_or(0.0);
                 out.reason = v.str_at(&["reason"]).unwrap_or("").to_string();
+                out.cached_tokens = v.f64_at(&["cached_tokens"]).unwrap_or(0.0) as usize;
                 break;
             } else if let Some(e) = v.str_at(&["error"]) {
                 anyhow::bail!("server error: {e}");

@@ -93,6 +93,18 @@ impl Vocab {
         }
         Ok(out)
     }
+
+    /// Encode a multi-word stop phrase into its token sequence, with the
+    /// same strictness as [`Vocab::stop_token_ids`] (out-of-vocab words
+    /// are rejected — they would otherwise silently become [`UNK`] and
+    /// match any unknown emission).  Empty phrases are rejected: an empty
+    /// sequence would never (or, naively, always) match.  Shared by the
+    /// server's `stop_seqs` field and the CLI `--stop-seq` flag.
+    pub fn stop_seq_ids(&self, phrase: &str) -> Result<Vec<u32>> {
+        let toks = self.stop_token_ids(phrase.split_whitespace())?;
+        anyhow::ensure!(!toks.is_empty(), "empty stop sequence");
+        Ok(toks)
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +133,13 @@ mod tests {
         let v = toy();
         assert_eq!(v.encode("the dog"), vec![4, UNK]);
         assert_eq!(v.word(999), "<unk>");
+    }
+
+    #[test]
+    fn stop_seq_ids_strict() {
+        let v = toy();
+        assert_eq!(v.stop_seq_ids("the cat sat").unwrap(), vec![4, 5, 6]);
+        assert!(v.stop_seq_ids("the dog").is_err(), "OOV word rejected");
+        assert!(v.stop_seq_ids("").is_err(), "empty phrase rejected");
     }
 }

@@ -292,3 +292,45 @@ fn stop_token_finishes_session() {
     assert_eq!(sess.tokens_produced(), first + 1);
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// Multi-token stop sequences suffix-match the EMITTED stream: the
+/// session ends the round the last token of the sequence is sampled
+/// (tokens of the match are emitted), and single stop tokens still win
+/// when they fire first.
+#[test]
+fn stop_sequence_finishes_session() {
+    let spec = SynthSpec::tiny();
+    let dir = synth_dir("stopseq");
+    write_synth_rwkv(&dir, "m", &spec).unwrap();
+    let cfg = EngineConfig::vanilla("m", dir.clone());
+    let mut engine = RwkvEngine::load(cfg.clone()).unwrap();
+    let (stream, _) = greedy_reference(&mut engine, &[8, 30], 6);
+    let seq = vec![stream[1], stream[2]];
+    let first_end = (1..stream.len()).find(|&e| stream[e - 1..=e] == seq[..]).unwrap();
+    let mut engine2 = RwkvEngine::load(cfg.clone()).unwrap();
+    let mut sess = Session::new(&engine2, 0, &[8, 30]);
+    sess.max_tokens = 64;
+    sess.stop_seqs = vec![vec![999_999], seq.clone()];
+    let mut out = Vec::new();
+    while !sess.is_done() {
+        let report = engine2.step_round(std::slice::from_mut(&mut sess)).unwrap();
+        out.extend(report.emitted.iter().map(|e| e.token));
+    }
+    assert_eq!(out, stream[..=first_end].to_vec(), "stream ends AFTER the sequence");
+    assert_eq!(sess.finish_reason(), Some(FinishReason::StopSeq(1)));
+    assert_eq!(sess.finish_reason().unwrap().name(), "stop");
+    // a single-token match of the sequence alone must NOT stop: only the
+    // full suffix does (re-run with a longer, never-matching sequence)
+    let mut engine3 = RwkvEngine::load(cfg).unwrap();
+    let mut sess3 = Session::new(&engine3, 0, &[8, 30]);
+    sess3.max_tokens = 4;
+    sess3.stop_seqs = vec![vec![stream[1], 999_999]];
+    let mut out3 = Vec::new();
+    while !sess3.is_done() {
+        let report = engine3.step_round(std::slice::from_mut(&mut sess3)).unwrap();
+        out3.extend(report.emitted.iter().map(|e| e.token));
+    }
+    assert_eq!(out3, stream[..4].to_vec(), "partial sequence matches never stop");
+    assert_eq!(sess3.finish_reason(), Some(FinishReason::MaxTokens));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -10,6 +10,7 @@ use rwkv_lite::config::EngineConfig;
 use rwkv_lite::coordinator::{
     batcher::BatchPolicy, Coordinator, Event, FinishReason, Request,
 };
+use rwkv_lite::engine::state_cache::{CacheConfig, StateCache};
 use rwkv_lite::engine::RwkvEngine;
 use rwkv_lite::server::{Client, Server};
 use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
@@ -226,6 +227,142 @@ fn stop_tokens_end_the_stream() {
     }
     assert_eq!(out, stream[..=first].to_vec(), "stream ends AT the stop token");
     assert_eq!(reason, Some(FinishReason::Stop(stop)));
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Multi-token stop sequences end the stream AFTER the matching suffix
+/// is emitted, with `reason: "stop"` — on top of single stop tokens.
+#[test]
+fn stop_sequences_end_the_stream() {
+    let (c, dir) = synth_coordinator("stopseq", 2);
+    let Some(prompt) = eos_free_prompt(&c, 8) else {
+        eprintln!("SKIP: no EOS-free greedy stream on this synth model");
+        std::fs::remove_dir_all(&dir).ok();
+        return;
+    };
+    let base = Request { id: 20, prompt, max_tokens: 8, ..Request::default() };
+    // greedy is deterministic: learn the stream, stop on tokens 2..=3
+    let stream = c.generate_blocking(base.clone()).unwrap();
+    assert!(stream.len() >= 4, "need a few tokens for a 2-token stop seq");
+    let seq = vec![stream[1], stream[2]];
+    // earliest suffix match in the greedy stream (it may repeat tokens)
+    let first_end = (1..stream.len())
+        .find(|&e| stream[e - 1..=e] == seq[..])
+        .unwrap();
+    let handle = c.submit(Request {
+        id: 21,
+        stop_sequences: vec![seq.clone()],
+        max_tokens: 64,
+        ..base
+    });
+    let mut out = Vec::new();
+    let mut reason = None;
+    for ev in handle {
+        match ev {
+            Event::Token { token } => out.push(token),
+            Event::Done { reason: r, .. } => {
+                reason = Some(r);
+                break;
+            }
+            Event::Error { message } => panic!("{message}"),
+        }
+    }
+    assert_eq!(out, stream[..=first_end].to_vec(), "stream ends AFTER the stop sequence");
+    assert_eq!(reason, Some(FinishReason::StopSeq(0)));
+    assert_eq!(reason.unwrap().name(), "stop", "wire name matches single-token stops");
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Coordinator-owned prefix-state cache: a repeated prompt's second
+/// request reports `cached_tokens > 0`, streams identically, and the
+/// registry carries the cache telemetry.
+#[test]
+fn coordinator_cache_skips_repeat_prefill() {
+    let dir = std::env::temp_dir().join(format!("rwkv-serve-cache-{}", std::process::id()));
+    write_synth_rwkv(&dir, "m", &SynthSpec::tiny()).expect("write synth model");
+    let cfg = EngineConfig::vanilla("m", dir.clone());
+    let state_path = dir.join("cache.rwst");
+    let c = Coordinator::spawn_with_cache(
+        move || RwkvEngine::load(cfg),
+        BatchPolicy { max_batch: 2, window_ms: 1 },
+        Some(StateCache::new(CacheConfig::with_mb(16))),
+        Some(state_path.clone()),
+    );
+    let prompt: Vec<u32> = (0..24).map(|i| (4 + 3 * i) % 90).collect();
+    let run = |id: u64| {
+        let handle = c.submit(Request {
+            id,
+            prompt: prompt.clone(),
+            max_tokens: 4,
+            seed: Some(7),
+            ..Request::default()
+        });
+        let mut out = Vec::new();
+        let mut cached = usize::MAX;
+        for ev in handle {
+            match ev {
+                Event::Token { token } => out.push(token),
+                Event::Done { cached_tokens, .. } => {
+                    cached = cached_tokens;
+                    break;
+                }
+                Event::Error { message } => panic!("{message}"),
+            }
+        }
+        (out, cached)
+    };
+    let (cold_stream, cold_cached) = run(1);
+    assert_eq!(cold_cached, 0, "first request is a cold miss");
+    let (warm_stream, warm_cached) = run(2);
+    assert!(warm_cached > 0, "repeat prompt must fork off the cache");
+    assert_eq!(warm_stream, cold_stream, "warm stream must be bit-identical");
+    assert!(c.metrics.counter("cache_hits") >= 1);
+    assert!(c.metrics.counter("cache_hit_tokens") >= warm_cached as u64);
+    assert!(c.metrics.counter("cache_bytes") > 0);
+    // prefill telemetry confirms the skipped forward passes: the warm
+    // request only prefills feed_len - cached tokens
+    let feed_len = (prompt.len() + 1) as u64;
+    assert_eq!(
+        c.metrics.counter("prefill_tokens"),
+        feed_len + (feed_len - warm_cached as u64),
+        "second request must not re-run matched prefill tokens"
+    );
+    // shutdown persists the snapshots for the next process
+    drop(c);
+    assert!(state_path.exists(), "coordinator saves the cache on shutdown");
+    let (tag, entries) = rwkv_lite::io::read_statefile(&state_path).expect("readable statefile");
+    assert!(tag.starts_with("m:"), "statefile carries the model fingerprint, got '{tag}'");
+    assert!(!entries.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `"cache": false` requests neither read nor populate the shared cache.
+#[test]
+fn cache_opt_out_request_stays_cold() {
+    let dir = std::env::temp_dir().join(format!("rwkv-serve-nocache-{}", std::process::id()));
+    write_synth_rwkv(&dir, "m", &SynthSpec::tiny()).expect("write synth model");
+    let cfg = EngineConfig::vanilla("m", dir.clone());
+    let c = Coordinator::spawn_with_cache(
+        move || RwkvEngine::load(cfg),
+        BatchPolicy { max_batch: 2, window_ms: 1 },
+        Some(StateCache::new(CacheConfig::with_mb(16))),
+        None,
+    );
+    let prompt: Vec<u32> = (0..20).map(|i| (5 + 2 * i) % 90).collect();
+    let req = |id| Request {
+        id,
+        prompt: prompt.clone(),
+        max_tokens: 2,
+        cache: false,
+        ..Request::default()
+    };
+    c.generate_blocking(req(1)).unwrap();
+    c.generate_blocking(req(2)).unwrap();
+    assert_eq!(c.metrics.counter("cache_hits"), 0);
+    assert_eq!(c.metrics.counter("cache_insertions"), 0);
+    assert_eq!(c.metrics.counter("cache_bytes"), 0);
     drop(c);
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,353 @@
+//! Prefix-state cache equivalence: a warm-cache request — one that forks
+//! off a cached `RwkvState` snapshot and starts prefill mid-feed — must
+//! be BIT-IDENTICAL (states, logits, emitted streams) to the same
+//! request run cold, across dense / sparse-FFN / hier-head /
+//! f16+low-rank / layerwise configs and thread counts {1, 8}, for exact
+//! and partial prefix hits, and while eviction is shredding the cache
+//! under byte pressure.  Also covers the `io::statefile` persistence
+//! round trip.
+//!
+//! The acceptance invariant: a second request with an identical prompt
+//! prefix performs ZERO prefill forward passes for the matched tokens —
+//! asserted via the cache's `hit_tokens` AND the per-round
+//! `prefill_tokens` telemetry (warm prefill == feed length − matched).
+//!
+//! Runs on synthetic checkpoints (testutil::synth) — tier-1 coverage, no
+//! `make artifacts` needed.
+
+use std::path::PathBuf;
+
+use rwkv_lite::config::{EngineConfig, LoadStrategy};
+use rwkv_lite::engine::session::Session;
+use rwkv_lite::engine::state::RwkvState;
+use rwkv_lite::engine::state_cache::{CacheConfig, StateCache};
+use rwkv_lite::engine::RwkvEngine;
+use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
+
+fn synth_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rwkv-stcache-{}-{}", tag, std::process::id()))
+}
+
+/// What one request observed, for bit-exact comparison.
+struct RunResult {
+    stream: Vec<u32>,
+    /// Feed tokens served from the cache at session creation.
+    cached: usize,
+    /// Sum of `RoundReport::prefill_tokens` — the forward passes the
+    /// prompt actually paid.
+    prefill_tokens: usize,
+    state: RwkvState,
+}
+
+/// Drive one greedy session to completion through `step_round_cached`.
+fn run_one(
+    engine: &mut RwkvEngine,
+    mut cache: Option<&mut StateCache>,
+    prompt: &[u32],
+    n: usize,
+) -> RunResult {
+    let (mut sess, cached) = match cache.as_deref_mut() {
+        Some(c) => Session::new_with_cache(engine, 0, prompt, c),
+        None => (Session::new(engine, 0, prompt), 0),
+    };
+    sess.max_tokens = n;
+    let mut stream = Vec::new();
+    let mut prefill_tokens = 0usize;
+    while !sess.is_done() {
+        let report = engine
+            .step_round_cached(std::slice::from_mut(&mut sess), cache.as_deref_mut())
+            .expect("round");
+        stream.extend(report.emitted.iter().map(|e| e.token));
+        prefill_tokens += report.prefill_tokens;
+    }
+    RunResult { stream, cached, prefill_tokens, state: sess.state().clone() }
+}
+
+/// The chunk boundary the cache can serve for a feed of `feed_len`
+/// tokens: snapshots land at prefill chunk boundaries, and the final
+/// feed position is never matched (its logits must be computed).
+fn expected_match(feed_len: usize, chunk: usize) -> usize {
+    let cap = feed_len - 1;
+    let (mut best, mut pos) = (0usize, 0usize);
+    while pos < feed_len {
+        pos += chunk.min(feed_len - pos);
+        if pos <= cap {
+            best = pos;
+        }
+    }
+    best
+}
+
+/// Cold-vs-warm equivalence for one config, threads {1, 8}: identical
+/// prompts (exact-prefix hit) and a shared-prefix prompt (partial hit).
+fn check_cache(tag: &str, spec: &SynthSpec, cfg_mut: impl Fn(&mut EngineConfig)) {
+    let dir = synth_dir(tag);
+    write_synth_rwkv(&dir, "m", spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg_mut(&mut cfg);
+    let n = 5usize;
+    let chunk = cfg.prefill_chunk.max(1);
+    let shared: Vec<u32> = (0..20).map(|i| ((5 + 7 * i) % spec.vocab) as u32).collect();
+    let mut extended = shared.clone();
+    extended.extend([9, 12, 3].map(|t| t % spec.vocab as u32));
+
+    for &threads in &[1usize, 8] {
+        let ctx = format!("{tag} threads={threads}");
+        let mut c = cfg.clone();
+        c.threads = threads;
+        let mut engine = RwkvEngine::load(c).expect("load engine");
+
+        // cold references (no cache anywhere)
+        let cold = run_one(&mut engine, None, &shared, n);
+        let cold_ext = run_one(&mut engine, None, &extended, n);
+        let feed_len = shared.len() + 1; // [BOS, prompt...]
+        assert_eq!(cold.prefill_tokens, feed_len, "{ctx}: cold prefill covers the feed");
+
+        let mut cache = StateCache::new(CacheConfig { max_bytes: 64 << 20, min_prefix: 1 });
+
+        // request 1: populates the cache, still bit-identical to cold
+        let r1 = run_one(&mut engine, Some(&mut cache), &shared, n);
+        assert_eq!(r1.cached, 0, "{ctx}: first request is a miss");
+        assert_eq!(r1.stream, cold.stream, "{ctx}: populating run must match cold");
+        assert!(r1.state.bitwise_eq(&cold.state), "{ctx}: populating-run state diverged");
+
+        // request 2: identical prompt — exact-prefix warm hit
+        let hit_tokens_before = cache.stats().hit_tokens;
+        let r2 = run_one(&mut engine, Some(&mut cache), &shared, n);
+        let want_match = expected_match(feed_len, chunk);
+        assert!(want_match > 0, "{ctx}: test prompt too short to cache");
+        assert_eq!(r2.cached, want_match, "{ctx}: deepest chunk-boundary snapshot matches");
+        assert_eq!(
+            cache.stats().hit_tokens - hit_tokens_before,
+            want_match as u64,
+            "{ctx}: cache_hit_tokens accounts the skipped feed tokens"
+        );
+        // ZERO prefill forward passes for the matched tokens
+        assert_eq!(
+            r2.prefill_tokens,
+            feed_len - want_match,
+            "{ctx}: warm prefill must only run the un-matched suffix"
+        );
+        assert_eq!(r2.stream, cold.stream, "{ctx}: warm stream must be bit-identical");
+        assert!(r2.state.bitwise_eq(&cold.state), "{ctx}: warm final state diverged");
+
+        // request 3: longer prompt sharing the prefix — partial hit.  The
+        // full shared feed (a completed-prefill snapshot) is on its path.
+        let r3 = run_one(&mut engine, Some(&mut cache), &extended, n);
+        assert_eq!(r3.cached, feed_len, "{ctx}: partial hit forks off the full shared feed");
+        assert_eq!(
+            r3.prefill_tokens,
+            extended.len() + 1 - feed_len,
+            "{ctx}: partial-hit prefill covers only the new suffix"
+        );
+        assert_eq!(r3.stream, cold_ext.stream, "{ctx}: partial-hit stream must be bit-identical");
+        assert!(r3.state.bitwise_eq(&cold_ext.state), "{ctx}: partial-hit state diverged");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn warm_cache_equals_cold_dense_f32() {
+    let mut spec = SynthSpec::tiny();
+    spec.predictors = false;
+    spec.hier_head = false;
+    check_cache("dense-f32", &spec, |_| {});
+}
+
+#[test]
+fn warm_cache_equals_cold_sparse_ffn() {
+    let spec = SynthSpec::tiny();
+    check_cache("sparse", &spec, |c| {
+        c.sparse_ffn = true;
+    });
+}
+
+#[test]
+fn warm_cache_equals_cold_hier_head() {
+    let spec = SynthSpec::tiny();
+    check_cache("hier", &spec, |c| {
+        c.hier_head = true;
+    });
+}
+
+#[test]
+fn warm_cache_equals_cold_all_techniques_f16_lowrank() {
+    let mut spec = SynthSpec::tiny();
+    spec.f16 = true;
+    spec.lowrank = true;
+    spec.seed = 0xBEEF;
+    check_cache("all-f16-lr", &spec, |c| {
+        c.sparse_ffn = true;
+        c.hier_head = true;
+        c.emb_cache = true;
+    });
+}
+
+#[test]
+fn warm_cache_equals_cold_layerwise() {
+    let mut spec = SynthSpec::tiny();
+    spec.predictors = false;
+    spec.hier_head = false;
+    spec.seed = 0xFACE;
+    check_cache("layerwise", &spec, |c| {
+        c.strategy = LoadStrategy::Layerwise;
+    });
+}
+
+/// Odd prefill chunks put snapshots at non-multiple-of-8 boundaries; the
+/// match math and bit-identity must hold there too.
+#[test]
+fn warm_cache_equals_cold_chunk_3() {
+    let spec = SynthSpec::tiny();
+    check_cache("chunk3", &spec, |c| {
+        c.sparse_ffn = true;
+        c.prefill_chunk = 3;
+    });
+}
+
+/// Eviction under byte pressure: a budget of ~2 snapshots while several
+/// prompts stream through.  Evictions must happen, the budget must hold,
+/// evicted prefixes must miss — and every stream must stay bit-identical
+/// to its cold reference (an evicted prefix only costs prefill, never
+/// correctness).
+#[test]
+fn eviction_under_pressure_keeps_streams_identical() {
+    let spec = SynthSpec::tiny();
+    let dir = synth_dir("evict");
+    write_synth_rwkv(&dir, "m", &spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = true;
+    let mut engine = RwkvEngine::load(cfg).expect("load engine");
+    let n = 4usize;
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|p| (0..16).map(|i| ((3 + 5 * p + 11 * i) % spec.vocab) as u32).collect())
+        .collect();
+    let cold: Vec<_> = prompts.iter().map(|p| run_one(&mut engine, None, p, n)).collect();
+
+    let state_bytes = engine.new_state().nbytes();
+    let mut cache = StateCache::new(CacheConfig { max_bytes: 2 * state_bytes, min_prefix: 1 });
+    for (p, c) in prompts.iter().zip(&cold) {
+        let warm = run_one(&mut engine, Some(&mut cache), p, n);
+        assert_eq!(warm.stream, c.stream, "stream under eviction pressure diverged");
+        assert!(warm.state.bitwise_eq(&c.state), "state under eviction pressure diverged");
+        assert!(cache.bytes() <= 2 * state_bytes, "byte budget violated");
+        assert!(cache.snapshots() <= 2, "budget admits at most 2 snapshots");
+    }
+    assert!(cache.stats().evictions > 0, "pressure must actually evict");
+    // the last prompt's snapshots are the most recent — still resident
+    let warm_last = run_one(&mut engine, Some(&mut cache), &prompts[3], n);
+    assert!(warm_last.cached > 0, "most recent prompt stays warm");
+    assert_eq!(warm_last.stream, cold[3].stream);
+    // the first prompt's snapshots were evicted long ago — cold again,
+    // but still correct
+    let re0 = run_one(&mut engine, Some(&mut cache), &prompts[0], n);
+    assert_eq!(re0.stream, cold[0].stream);
+    assert!(re0.state.bitwise_eq(&cold[0].state));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Opted-out sessions (`use_cache = false` / request `"cache": false`)
+/// neither read nor populate the cache.
+#[test]
+fn opt_out_sessions_do_not_touch_the_cache() {
+    let spec = SynthSpec::tiny();
+    let dir = synth_dir("optout");
+    write_synth_rwkv(&dir, "m", &spec).expect("write synth model");
+    let cfg = EngineConfig::vanilla("m", dir.clone());
+    let mut engine = RwkvEngine::load(cfg).expect("load engine");
+    let prompt: Vec<u32> = (0..12).map(|i| ((7 + 3 * i) % spec.vocab) as u32).collect();
+    let mut cache = StateCache::new(CacheConfig { max_bytes: 64 << 20, min_prefix: 1 });
+    let mut sess = Session::new(&engine, 0, &prompt);
+    sess.max_tokens = 3;
+    sess.use_cache = false;
+    while !sess.is_done() {
+        engine
+            .step_round_cached(std::slice::from_mut(&mut sess), Some(&mut cache))
+            .expect("round");
+    }
+    assert_eq!(cache.snapshots(), 0, "opted-out prefill must not insert snapshots");
+    assert_eq!(cache.bytes(), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `io::statefile` persistence: snapshots harvested from real prefill
+/// survive a save/load round trip bit-exactly, and a revived cache
+/// serves warm requests identical to the original's.
+#[test]
+fn statefile_round_trip_revives_a_warm_cache() {
+    let spec = SynthSpec::tiny();
+    let dir = synth_dir("persist");
+    write_synth_rwkv(&dir, "m", &spec).expect("write synth model");
+    let cfg = EngineConfig::vanilla("m", dir.clone());
+    let mut engine = RwkvEngine::load(cfg).expect("load engine");
+    let prompt: Vec<u32> = (0..18).map(|i| ((2 + 9 * i) % spec.vocab) as u32).collect();
+    let n = 5usize;
+
+    let cold = run_one(&mut engine, None, &prompt, n);
+    let mut cache = StateCache::new(CacheConfig { max_bytes: 64 << 20, min_prefix: 1 });
+    run_one(&mut engine, Some(&mut cache), &prompt, n);
+    assert!(cache.snapshots() > 0);
+
+    let path = dir.join("cache.rwst");
+    let saved = cache.save(&path, "synth-m").expect("save statefile");
+    assert_eq!(saved, cache.snapshots());
+
+    // a fresh process: new cache, revived from disk
+    let mut revived = StateCache::new(cache.config());
+    assert_eq!(revived.load(&path).expect("load statefile"), saved);
+    assert_eq!(revived.snapshots(), cache.snapshots());
+    assert_eq!(revived.bytes(), cache.bytes());
+    // the persisted snapshots are bit-identical to the live ones
+    for ((pa, sa), (pb, sb)) in cache.entries().iter().zip(revived.entries().iter()) {
+        assert_eq!(pa, pb, "persisted prefix order diverged");
+        assert!(sa.bitwise_eq(sb.as_ref()), "persisted snapshot payload diverged");
+        assert!(sa.approx_eq(sb.as_ref(), 0.0), "approx_eq(0) must agree with bitwise_eq");
+    }
+    // and a warm request through the revived cache matches cold exactly
+    let warm = run_one(&mut engine, Some(&mut revived), &prompt, n);
+    assert!(warm.cached > 0, "revived cache must hit");
+    assert_eq!(warm.stream, cold.stream, "revived-cache stream must be bit-identical");
+    assert!(warm.state.bitwise_eq(&cold.state));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Multi-session rounds: several sessions share one cache; mixed
+/// warm/cold batches stay bit-identical to their solo cold runs.
+#[test]
+fn shared_cache_across_batched_sessions() {
+    let spec = SynthSpec::tiny();
+    let dir = synth_dir("batch");
+    write_synth_rwkv(&dir, "m", &spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = true;
+    let mut engine = RwkvEngine::load(cfg).expect("load engine");
+    let n = 4usize;
+    let shared: Vec<u32> = (0..14).map(|i| ((6 + 5 * i) % spec.vocab) as u32).collect();
+    let other: Vec<u32> = vec![3, 40, 17, 9];
+    let cold_shared = run_one(&mut engine, None, &shared, n);
+    let cold_other = run_one(&mut engine, None, &other, n);
+
+    let mut cache = StateCache::new(CacheConfig { max_bytes: 64 << 20, min_prefix: 1 });
+    // warm the shared prefix
+    run_one(&mut engine, Some(&mut cache), &shared, n);
+    // one warm + one cold session advance together in fused rounds
+    let (mut s0, cached0) = Session::new_with_cache(&engine, 0, &shared, &mut cache);
+    let (mut s1, cached1) = Session::new_with_cache(&engine, 1, &other, &mut cache);
+    assert!(cached0 > 0, "shared prompt must be warm");
+    assert_eq!(cached1, 0, "distinct prompt must be cold");
+    s0.max_tokens = n;
+    s1.max_tokens = n;
+    let mut sessions = vec![s0, s1];
+    let mut streams: Vec<Vec<u32>> = vec![Vec::new(), Vec::new()];
+    while sessions.iter().any(|s| !s.is_done()) {
+        let report = engine.step_round_cached(&mut sessions, Some(&mut cache)).expect("round");
+        for e in &report.emitted {
+            streams[e.session].push(e.token);
+        }
+    }
+    assert_eq!(streams[0], cold_shared.stream, "warm batched session diverged");
+    assert_eq!(streams[1], cold_other.stream, "cold batched session diverged");
+    assert!(sessions[0].state().bitwise_eq(&cold_shared.state));
+    assert!(sessions[1].state().bitwise_eq(&cold_other.state));
+    std::fs::remove_dir_all(&dir).ok();
+}
