@@ -14,7 +14,7 @@ use anyhow::Result;
 use rwkv_lite::config::EngineConfig;
 use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator};
 use rwkv_lite::engine::RwkvEngine;
-use rwkv_lite::server::{Client, Server};
+use rwkv_lite::server::{Client, ServeOptions, Server};
 use rwkv_lite::text::Vocab;
 use rwkv_lite::util::{percentile, Stopwatch};
 
@@ -33,7 +33,8 @@ fn main() -> Result<()> {
     let addr = "127.0.0.1:17474";
     {
         let s = Arc::clone(&server);
-        std::thread::spawn(move || s.serve(addr, Some(n_clients)));
+        let opts = ServeOptions { max_total_conns: Some(n_clients), ..ServeOptions::default() };
+        std::thread::spawn(move || s.serve(addr, opts));
     }
     std::thread::sleep(std::time::Duration::from_millis(200));
 

@@ -47,7 +47,9 @@
 use std::path::{Path, PathBuf};
 
 use rwkv_lite::config::{EngineConfig, LoadStrategy};
-use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator, Event, Request};
+use rwkv_lite::coordinator::{
+    batcher::BatchPolicy, AdmissionPolicy, Coordinator, CoordinatorConfig, Event, Request,
+};
 use rwkv_lite::engine::session::Session;
 use rwkv_lite::engine::state_cache::{CacheConfig, StateCache};
 use rwkv_lite::engine::RwkvEngine;
@@ -124,6 +126,11 @@ fn main() {
     layerwise_sweep(&model, &artifacts, smoke, pinned);
     if cache_mb > 0 {
         state_cache_sweep(&model, &artifacts, smoke, threads, strategy, cache_mb);
+    }
+    // `--overload`: part 6, the bounded-admission release smoke — gated
+    // on the flag so the other CI smoke invocations stay distinct
+    if args.iter().any(|a| a == "--overload") {
+        overload_smoke(&model, &artifacts, smoke, threads, strategy);
     }
 
     if let Some(dir) = synth_guard {
@@ -487,4 +494,99 @@ fn state_cache_sweep(
     // every request after the first MUST hit the shared prefix
     assert!(st.hits as usize >= n_req - 1, "warm requests must hit the prefix-state cache");
     assert!(st.hit_tokens > 0, "cache hits must actually skip prefill tokens");
+}
+
+/// Part 6 — overload release smoke (CI runs `--smoke --overload`): a
+/// burst far past `max_queue=2, max_concurrency=2` must shed the excess
+/// IMMEDIATELY with structured rejections, complete every admitted
+/// request, keep the accounting invariant, and never deadlock.
+fn overload_smoke(
+    model: &str,
+    artifacts: &Path,
+    smoke: bool,
+    threads: usize,
+    strategy: LoadStrategy,
+) {
+    let (burst, max_tokens): (usize, usize) = if smoke { (16, 4) } else { (64, 16) };
+    println!("\noverload: burst of {burst} vs max_queue=2, max_concurrency=2\n");
+    let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+    cfg.threads = threads;
+    cfg.strategy = strategy;
+    let coordinator = Coordinator::spawn_cfg(
+        move || RwkvEngine::load(cfg),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 2, window_ms: 2 },
+            admission: AdmissionPolicy {
+                max_queue: 2,
+                max_concurrency: 2,
+                ..AdmissionPolicy::default()
+            },
+            ..CoordinatorConfig::default()
+        },
+    );
+    // warm up: the burst must land on a loaded engine to measure shedding
+    coordinator
+        .generate_blocking(Request {
+            id: 10_000,
+            prompt: vec![2, 9],
+            max_tokens: 1,
+            ..Request::default()
+        })
+        .expect("warm-up request");
+    let wall = Stopwatch::start();
+    let rxs: Vec<_> = (0..burst as u64)
+        .map(|i| {
+            coordinator.submit(Request {
+                id: i,
+                prompt: vec![2, 50 + i as u32 % 32],
+                max_tokens,
+                ..Request::default()
+            })
+        })
+        .collect();
+    let (mut completed, mut rejected) = (0usize, 0usize);
+    let mut reject_lat = Vec::new();
+    for rx in rxs {
+        let t = Stopwatch::start();
+        for ev in rx {
+            match ev {
+                Event::Done { .. } => {
+                    completed += 1;
+                    break;
+                }
+                Event::Rejected { .. } => {
+                    rejected += 1;
+                    reject_lat.push(t.elapsed_secs());
+                    break;
+                }
+                Event::Error { message } => panic!("{message}"),
+                Event::Token { .. } => {}
+            }
+        }
+    }
+    let secs = wall.elapsed_secs();
+    println!(
+        "{:>10} {:>10} {:>14} {:>16}",
+        "completed", "rejected", "wall (s)", "p50 shed lat (ms)"
+    );
+    println!(
+        "{:>10} {:>10} {:>14.2} {:>16.3}",
+        completed,
+        rejected,
+        secs,
+        rwkv_lite::util::percentile(&reject_lat, 50.0) * 1e3,
+    );
+    assert_eq!(completed + rejected, burst, "every request gets exactly one terminal event");
+    assert!(rejected > 0, "a {burst}-deep burst against a 4-slot system must shed");
+    assert!(completed > 0, "the queue must still make progress under overload");
+    let m = &coordinator.metrics;
+    let admitted = m.counter("requests_admitted");
+    let terminated = m.counter("requests_completed")
+        + m.counter("requests_cancelled")
+        + m.counter("requests_deadline_exceeded");
+    assert_eq!(admitted, terminated, "accounting invariant violated");
+    println!(
+        "\nsheds are immediate (no queue wait) and the admitted set completes: \
+         admitted={admitted} rejected={rejected}"
+    );
 }

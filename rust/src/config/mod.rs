@@ -99,6 +99,26 @@ pub struct EngineConfig {
     /// prompt stays warm across process restarts.  Ignored when
     /// `state_cache_mb == 0`.
     pub state_file: Option<PathBuf>,
+    /// Bounded admission: max requests waiting for a session slot.  A
+    /// submission arriving with the queue full is shed IMMEDIATELY with a
+    /// structured `overloaded` reply (429 semantics) instead of queueing
+    /// forever.  `0` = unbounded (legacy behaviour).
+    pub max_queue: usize,
+    /// Max sessions in flight at once (the round's multiplexing cap).
+    /// `0` = follow the batch policy's `max_batch`.
+    pub max_concurrency: usize,
+    /// Reject prompts longer than this many tokens at admission (`0` =
+    /// unlimited) — one multi-MB prompt cannot monopolize prefill rounds.
+    pub max_prompt_tokens: usize,
+    /// Default per-request deadline in milliseconds (`0` = none).  A
+    /// request's own `deadline_ms` field overrides; expired sessions
+    /// retire at the next round boundary with `reason: "deadline"`.
+    pub deadline_ms: u64,
+    /// Graceful-shutdown drain budget in milliseconds: after
+    /// SIGINT/SIGTERM the coordinator stops admitting and keeps stepping
+    /// in-flight sessions for up to this long before cancelling the rest
+    /// and saving the statefile.
+    pub drain_ms: u64,
     pub seed: u64,
 }
 
@@ -119,6 +139,11 @@ impl Default for EngineConfig {
             threads: 0,
             state_cache_mb: 0,
             state_file: None,
+            max_queue: 64,
+            max_concurrency: 0,
+            max_prompt_tokens: 0,
+            deadline_ms: 0,
+            drain_ms: 5000,
             seed: 0,
         }
     }
@@ -177,6 +202,11 @@ impl EngineConfig {
                         .unwrap_or_default(),
                 ),
             ),
+            ("max_queue", json::num(self.max_queue as f64)),
+            ("max_concurrency", json::num(self.max_concurrency as f64)),
+            ("max_prompt_tokens", json::num(self.max_prompt_tokens as f64)),
+            ("deadline_ms", json::num(self.deadline_ms as f64)),
+            ("drain_ms", json::num(self.drain_ms as f64)),
             ("seed", json::num(self.seed as f64)),
         ])
     }
@@ -209,6 +239,11 @@ impl EngineConfig {
             .str_at(&["state_file"])
             .filter(|s| !s.is_empty())
             .map(PathBuf::from);
+        c.max_queue = v.f64_at(&["max_queue"]).unwrap_or(64.0) as usize;
+        c.max_concurrency = v.f64_at(&["max_concurrency"]).unwrap_or(0.0) as usize;
+        c.max_prompt_tokens = v.f64_at(&["max_prompt_tokens"]).unwrap_or(0.0) as usize;
+        c.deadline_ms = v.f64_at(&["deadline_ms"]).unwrap_or(0.0) as u64;
+        c.drain_ms = v.f64_at(&["drain_ms"]).unwrap_or(5000.0) as u64;
         c.seed = v.f64_at(&["seed"]).unwrap_or(0.0) as u64;
         Ok(c)
     }
@@ -226,6 +261,11 @@ mod tests {
         c.prefetch = false;
         c.state_cache_mb = 64;
         c.state_file = Some(PathBuf::from("cache.rwst"));
+        c.max_queue = 7;
+        c.max_concurrency = 3;
+        c.max_prompt_tokens = 4096;
+        c.deadline_ms = 1500;
+        c.drain_ms = 250;
         let v = c.to_json();
         let c2 = EngineConfig::from_json(&v).unwrap();
         assert_eq!(c2.model, c.model);
@@ -235,6 +275,26 @@ mod tests {
         assert!(c2.sparse_ffn && c2.hier_head && c2.emb_cache);
         assert_eq!(c2.state_cache_mb, 64);
         assert_eq!(c2.state_file, Some(PathBuf::from("cache.rwst")));
+        assert_eq!(c2.max_queue, 7);
+        assert_eq!(c2.max_concurrency, 3);
+        assert_eq!(c2.max_prompt_tokens, 4096);
+        assert_eq!(c2.deadline_ms, 1500);
+        assert_eq!(c2.drain_ms, 250);
+    }
+
+    #[test]
+    fn admission_defaults() {
+        let c = EngineConfig::default();
+        assert_eq!(c.max_queue, 64, "bounded admission is on by default");
+        assert_eq!(c.max_concurrency, 0);
+        assert_eq!(c.max_prompt_tokens, 0);
+        assert_eq!(c.deadline_ms, 0);
+        assert_eq!(c.drain_ms, 5000);
+        // absent keys (older config JSON) keep the defaults
+        let c = EngineConfig::from_json(&json::obj(vec![])).unwrap();
+        assert_eq!(c.max_queue, 64);
+        assert_eq!(c.deadline_ms, 0);
+        assert_eq!(c.drain_ms, 5000);
     }
 
     #[test]

@@ -35,20 +35,33 @@ impl DynamicBatcher {
         Self { policy }
     }
 
-    /// Pull work from the queue.  With `in_flight == 0` this blocks until
-    /// a request (or disconnect); otherwise it drains whatever is pending
-    /// without stalling the decode loop.
-    pub(crate) fn admit(&mut self, rx: &Receiver<Submission>, in_flight: usize) -> Admit {
+    /// Pull work from the queue.  With `in_flight == 0` this waits up to
+    /// `idle_tick` for a request (a bounded wait, so the round loop can
+    /// observe shutdown/drain flags between ticks); otherwise it drains
+    /// whatever is pending without stalling the decode loop.  `max_live`
+    /// caps total in-flight sessions (the `--max-concurrency` knob; the
+    /// batch policy's `max_batch` still bounds admissions per call).
+    pub(crate) fn admit(
+        &mut self,
+        rx: &Receiver<Submission>,
+        in_flight: usize,
+        max_live: usize,
+        idle_tick: Duration,
+    ) -> Admit {
         let mut out = Vec::new();
-        let capacity = self.policy.max_batch.saturating_sub(in_flight);
+        let capacity = self
+            .policy
+            .max_batch
+            .min(max_live.saturating_sub(in_flight));
         if capacity == 0 {
             return Admit::None;
         }
         if in_flight == 0 {
-            // idle: block for the first request
-            match rx.recv() {
+            // idle: wait (bounded) for the first request
+            match rx.recv_timeout(idle_tick) {
                 Ok(s) => out.push(s),
-                Err(_) => return Admit::Closed,
+                Err(RecvTimeoutError::Timeout) => return Admit::None,
+                Err(RecvTimeoutError::Disconnected) => return Admit::Closed,
             }
             // then batch within the window
             let deadline = Duration::from_millis(self.policy.window_ms);

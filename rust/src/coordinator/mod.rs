@@ -14,6 +14,27 @@
 //! stop-token checking happen inside the round; this loop only routes the
 //! emitted tokens to their streams.
 //!
+//! Overload resilience ([`AdmissionPolicy`], knobs surfaced as
+//! `EngineConfig`/CLI fields): admission is BOUNDED — at most `max_queue`
+//! submissions wait for a slot and at most `max_concurrency` sessions are
+//! in flight; a submission past the bound is shed immediately with
+//! [`Event::Rejected`] (429 semantics, `retry_after_ms` hint) instead of
+//! queueing forever.  Prompts over `max_prompt_tokens` are refused the
+//! same way.  Each request can carry a deadline; expired sessions retire
+//! at the next round boundary with [`FinishReason::DeadlineExceeded`]
+//! (partial tokens were already streamed).  Under sustained pressure the
+//! loop degrades gracefully: with requests waiting behind a full slot
+//! set, prefill chunks shrink so decode sessions get their next token
+//! sooner — chunking never changes the math, so admitted streams stay
+//! bit-identical.
+//!
+//! Graceful shutdown: [`Coordinator::begin_shutdown`] (the serve path's
+//! SIGINT/SIGTERM handler) flips a drain flag — new submissions are
+//! rejected, in-flight sessions keep stepping for up to the drain budget,
+//! stragglers are then cancelled (every admitted request still gets a
+//! terminal [`Event::Done`]), and the prefix-state cache saves its
+//! statefile before the thread exits.
+//!
 //! Lifecycle: [`Coordinator::submit`] returns a [`RequestHandle`] whose
 //! `cancel()` retires the session at the next round boundary; a client
 //! that drops its handle mid-stream is detected via `Event` send failure
@@ -22,7 +43,13 @@
 //! Per-round telemetry in the coordinator registry: `rounds`,
 //! `round_seconds`, `round_weight_bytes`, `prefill_tokens`,
 //! `decode_tokens`, `requests_admitted` / `requests_completed` /
-//! `requests_cancelled`, `tokens_out`.  With a prefix-state cache
+//! `requests_cancelled` / `requests_rejected` /
+//! `requests_deadline_exceeded`, `tokens_out`, the `queue_depth` gauge
+//! and `queue_wait_secs` timings.  Accounting invariant (asserted by
+//! `tests/overload.rs` and `tests/faults.rs`): every submission is
+//! rejected or admitted, and every admitted request terminates exactly
+//! once — `requests_admitted == requests_completed + requests_cancelled
+//! + requests_deadline_exceeded`.  With a prefix-state cache
 //! ([`Coordinator::spawn_with_cache`]): `cache_hits` / `cache_misses` /
 //! `cache_hit_tokens` / `cache_insertions` / `cache_evictions` plus the
 //! `cache_bytes` residency gauge.
@@ -38,21 +65,28 @@
 pub mod batcher;
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::config::EngineConfig;
 use crate::engine::sampler::Sampler;
 use crate::engine::session::Session;
 use crate::engine::state_cache::StateCache;
 use crate::engine::RwkvEngine;
 use crate::metrics::Registry;
+use crate::testutil::faults::FaultPlan;
 use batcher::{BatchPolicy, DynamicBatcher};
 
 pub use crate::engine::session::FinishReason;
+
+/// How long the round loop waits for work when idle before re-checking
+/// the shutdown/drain flags (purely an internal wake-up cadence).
+const IDLE_TICK: Duration = Duration::from_millis(50);
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -74,6 +108,12 @@ pub struct Request {
     /// longest cached prompt prefix AND contribute snapshots).  Ignored
     /// when the coordinator has no cache.  Default `true`.
     pub cache: bool,
+    /// Per-request deadline in milliseconds, measured from submission.
+    /// `None` falls back to [`AdmissionPolicy::default_deadline_ms`]
+    /// (`0` there = no deadline).  An expired session retires at the next
+    /// round boundary with `reason: "deadline"`, keeping the tokens it
+    /// already streamed.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for Request {
@@ -88,6 +128,30 @@ impl Default for Request {
             stop_sequences: Vec::new(),
             seed: None,
             cache: true,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// Why a submission was refused before any session was created (no
+/// engine work was done; `requests_admitted` does NOT count it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The admission queue is full (`max_queue`); retry after the hint.
+    Overloaded,
+    /// The prompt exceeds `max_prompt_tokens`.
+    PromptTooLong { tokens: usize, limit: usize },
+    /// The coordinator is draining for shutdown (or already stopped).
+    ShuttingDown,
+}
+
+impl RejectReason {
+    /// Stable wire name (the server's structured `error` field).
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            RejectReason::Overloaded => "overloaded",
+            RejectReason::PromptTooLong { .. } => "prompt_too_long",
+            RejectReason::ShuttingDown => "shutting_down",
         }
     }
 }
@@ -98,12 +162,20 @@ pub enum Event {
     Token { token: u32 },
     Done { tokens: usize, seconds: f64, reason: FinishReason, cached_tokens: usize },
     Error { message: String },
+    /// Shed at admission (load, prompt limit, or shutdown) — terminal;
+    /// no session existed, so no `Done` follows.  `retry_after_ms` is a
+    /// backoff hint from recent round latency and queue depth.
+    Rejected { reason: RejectReason, retry_after_ms: u64 },
 }
 
 pub(crate) struct Submission {
     pub(crate) req: Request,
     pub(crate) tx: Sender<Event>,
     pub(crate) cancel: Arc<AtomicBool>,
+    /// Started at submission — queue wait telemetry.
+    pub(crate) queued: crate::util::Stopwatch,
+    /// Absolute deadline resolved at submission time.
+    pub(crate) deadline: Option<Instant>,
 }
 
 /// Client side of a submitted request: the event stream plus a cancel
@@ -152,10 +224,96 @@ impl<'a> IntoIterator for &'a RequestHandle {
     }
 }
 
+/// Bounded-admission / deadline / drain knobs.  The default is fully
+/// permissive (legacy behaviour: unbounded queue, no deadline) so
+/// library users and benches opt in explicitly; the serve path builds
+/// one from `EngineConfig` where bounded admission is the default.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    /// Max submissions waiting for a session slot (`0` = unbounded).
+    pub max_queue: usize,
+    /// Max sessions in flight (`0` = the batch policy's `max_batch`).
+    pub max_concurrency: usize,
+    /// Reject prompts longer than this many tokens (`0` = unlimited).
+    pub max_prompt_tokens: usize,
+    /// Deadline applied to requests that don't carry their own (`0` =
+    /// none).
+    pub default_deadline_ms: u64,
+    /// Shutdown drain budget: how long in-flight sessions may keep
+    /// stepping after [`Coordinator::begin_shutdown`].
+    pub drain_ms: u64,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        Self {
+            max_queue: 0,
+            max_concurrency: 0,
+            max_prompt_tokens: 0,
+            default_deadline_ms: 0,
+            drain_ms: 5000,
+        }
+    }
+}
+
+impl AdmissionPolicy {
+    /// The serve path's policy: every knob comes from the engine config
+    /// (CLI flags / config JSON), where `max_queue` defaults to 64.
+    pub fn from_config(cfg: &EngineConfig) -> Self {
+        Self {
+            max_queue: cfg.max_queue,
+            max_concurrency: cfg.max_concurrency,
+            max_prompt_tokens: cfg.max_prompt_tokens,
+            default_deadline_ms: cfg.deadline_ms,
+            drain_ms: cfg.drain_ms,
+        }
+    }
+}
+
+/// Everything [`Coordinator::spawn_cfg`] needs beyond the engine factory.
+pub struct CoordinatorConfig {
+    pub policy: BatchPolicy,
+    pub admission: AdmissionPolicy,
+    /// Prefix-state cache the coordinator thread owns across requests.
+    pub cache: Option<StateCache>,
+    /// Statefile for the cache (load at startup, save at shutdown).
+    pub state_file: Option<PathBuf>,
+    /// Test-only fault-injection plan ([`crate::testutil::faults`]):
+    /// deterministic engine-round errors and artificially slow rounds.
+    /// Production callers leave this `None`.
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            policy: BatchPolicy::default(),
+            admission: AdmissionPolicy::default(),
+            cache: None,
+            state_file: None,
+            faults: None,
+        }
+    }
+}
+
+/// Submit-side state shared between client threads and the round loop.
+#[derive(Default)]
+struct Gate {
+    /// Submissions sent but not yet admitted into sessions.
+    queued: AtomicUsize,
+    /// Shutdown flag: reject new work, drain in-flight.
+    draining: AtomicBool,
+    /// EWMA of recent round wall time (nanos) — the `retry_after_ms`
+    /// estimate (`0` until the first round completes).
+    round_nanos: AtomicU64,
+}
+
 pub struct Coordinator {
     tx: Sender<Submission>,
     handle: Option<JoinHandle<()>>,
     pub metrics: Arc<Registry>,
+    admission: AdmissionPolicy,
+    gate: Arc<Gate>,
 }
 
 impl Coordinator {
@@ -166,7 +324,7 @@ impl Coordinator {
     where
         F: FnOnce() -> Result<RwkvEngine> + Send + 'static,
     {
-        Self::spawn_with_cache(factory, policy, None, None)
+        Self::spawn_cfg(factory, CoordinatorConfig { policy, ..CoordinatorConfig::default() })
     }
 
     /// [`Coordinator::spawn`] with a prefix-state cache: the coordinator
@@ -185,13 +343,28 @@ impl Coordinator {
     where
         F: FnOnce() -> Result<RwkvEngine> + Send + 'static,
     {
+        Self::spawn_cfg(
+            factory,
+            CoordinatorConfig { policy, cache, state_file, ..CoordinatorConfig::default() },
+        )
+    }
+
+    /// Fully-configured spawn: batching + admission bounds + cache +
+    /// statefile + (tests only) fault injection.
+    pub fn spawn_cfg<F>(factory: F, cfg: CoordinatorConfig) -> Self
+    where
+        F: FnOnce() -> Result<RwkvEngine> + Send + 'static,
+    {
         let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
         let metrics = Arc::new(Registry::new());
         let m2 = Arc::clone(&metrics);
+        let gate = Arc::new(Gate::default());
+        let g2 = Arc::clone(&gate);
+        let admission = cfg.admission;
         let handle = std::thread::Builder::new()
             .name("rwkv-coordinator".into())
             .spawn(move || match factory() {
-                Ok(mut engine) => run_loop(&mut engine, rx, policy, &m2, cache, state_file),
+                Ok(mut engine) => run_loop(&mut engine, rx, cfg, &m2, &g2),
                 Err(e) => {
                     // refuse all submissions with the load error
                     let msg = format!("engine load failed: {e:#}");
@@ -201,21 +374,102 @@ impl Coordinator {
                 }
             })
             .expect("spawn coordinator");
-        Self { tx, handle: Some(handle), metrics }
+        Self { tx, handle: Some(handle), metrics, admission, gate }
     }
 
     /// Submit a request; returns a cancellable handle over the stream.
+    /// Admission is bounded: past `max_queue` (or over the prompt limit,
+    /// or during shutdown) the stream carries a single terminal
+    /// [`Event::Rejected`] and no engine work happens.
     pub fn submit(&self, req: Request) -> RequestHandle {
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let id = req.id;
-        // A send failure means the coordinator thread exited; surface it
-        // on the stream instead of panicking.
-        let sub = Submission { req, tx: tx.clone(), cancel: Arc::clone(&cancel) };
-        if self.tx.send(sub).is_err() {
-            let _ = tx.send(Event::Error { message: "coordinator stopped".into() });
+        if let Err(reason) = self.try_enqueue(req, tx.clone(), Arc::clone(&cancel)) {
+            self.metrics.inc("requests_rejected", 1);
+            let retry_after_ms = match reason {
+                RejectReason::Overloaded => self.retry_after_ms(),
+                _ => 0,
+            };
+            let _ = tx.send(Event::Rejected { reason, retry_after_ms });
         }
         RequestHandle { id, rx, cancel }
+    }
+
+    /// The bounded-admission gate.  `Err` = shed (nothing was enqueued).
+    fn try_enqueue(
+        &self,
+        req: Request,
+        tx: Sender<Event>,
+        cancel: Arc<AtomicBool>,
+    ) -> std::result::Result<(), RejectReason> {
+        if self.gate.draining.load(Ordering::Acquire) {
+            return Err(RejectReason::ShuttingDown);
+        }
+        let limit = self.admission.max_prompt_tokens;
+        if limit > 0 && req.prompt.len() > limit {
+            return Err(RejectReason::PromptTooLong { tokens: req.prompt.len(), limit });
+        }
+        // reserve a queue slot (CAS so a burst cannot overshoot the bound)
+        if self.admission.max_queue > 0 {
+            let mut depth = self.gate.queued.load(Ordering::Relaxed);
+            loop {
+                if depth >= self.admission.max_queue {
+                    return Err(RejectReason::Overloaded);
+                }
+                match self.gate.queued.compare_exchange_weak(
+                    depth,
+                    depth + 1,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(d) => depth = d,
+                }
+            }
+        } else {
+            self.gate.queued.fetch_add(1, Ordering::AcqRel);
+        }
+        self.metrics.set("queue_depth", self.gate.queued.load(Ordering::Relaxed) as u64);
+        let ms = req.deadline_ms.unwrap_or(self.admission.default_deadline_ms);
+        let deadline = (ms > 0).then(|| Instant::now() + Duration::from_millis(ms));
+        let sub = Submission { req, tx, cancel, queued: crate::util::Stopwatch::start(), deadline };
+        if self.tx.send(sub).is_err() {
+            // coordinator thread exited: release the slot, surface it
+            self.gate.queued.fetch_sub(1, Ordering::AcqRel);
+            return Err(RejectReason::ShuttingDown);
+        }
+        Ok(())
+    }
+
+    /// Backoff hint for shed requests: queue depth × recent round time
+    /// (a fresh coordinator with no round history suggests 50 ms).
+    fn retry_after_ms(&self) -> u64 {
+        let ns = self.gate.round_nanos.load(Ordering::Relaxed);
+        if ns == 0 {
+            return 50;
+        }
+        let round_ms = (ns / 1_000_000).max(1);
+        let depth = self.gate.queued.load(Ordering::Relaxed) as u64;
+        (round_ms * (depth + 1)).clamp(1, 60_000)
+    }
+
+    /// Begin graceful shutdown (the SIGINT/SIGTERM path): new
+    /// submissions are rejected with `shutting_down`, in-flight sessions
+    /// keep stepping for up to the drain budget (each still ends with a
+    /// terminal `Done`), then the statefile is saved.  Non-blocking; use
+    /// [`Coordinator::shutdown`] to also wait for the drain.
+    pub fn begin_shutdown(&self) {
+        self.gate.draining.store(true, Ordering::Release);
+    }
+
+    /// [`Coordinator::begin_shutdown`] + wait for the coordinator thread
+    /// to finish draining and persist its statefile.
+    pub fn shutdown(&mut self) {
+        self.begin_shutdown();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
     }
 
     /// Convenience: run one request to completion.
@@ -227,6 +481,10 @@ impl Coordinator {
                 Event::Token { token } => out.push(token),
                 Event::Done { .. } => break,
                 Event::Error { message } => anyhow::bail!("generation failed: {message}"),
+                Event::Rejected { reason, retry_after_ms } => anyhow::bail!(
+                    "request rejected: {} (retry_after_ms={retry_after_ms})",
+                    reason.wire_name()
+                ),
             }
         }
         Ok(out)
@@ -251,6 +509,8 @@ struct Conn {
     started: crate::util::Stopwatch,
     /// Feed tokens served from the prefix-state cache at admission.
     cached_tokens: usize,
+    /// Absolute request deadline (checked at round boundaries).
+    deadline: Option<Instant>,
 }
 
 /// Fingerprint for the prefix-state cache's statefile: model name plus
@@ -287,14 +547,27 @@ fn sync_cache_metrics(cache: &StateCache, metrics: &Registry) {
     metrics.set("cache_bytes", cache.bytes());
 }
 
+/// Overload degradation: with `queued` requests waiting behind a FULL
+/// slot set, prefill chunks shrink (halving per waiting request, floor
+/// 1) so decode sessions reach their next token sooner — round latency
+/// is roughly linear in planned rows.  Chunking never changes the math
+/// (`tests/prefill_equivalence.rs`), so admitted streams stay
+/// bit-identical; an un-pressured loop always uses the full chunk.
+fn degraded_chunk(base: usize, queued: usize, in_flight: usize, max_live: usize) -> usize {
+    if queued == 0 || in_flight < max_live {
+        return base;
+    }
+    (base >> queued.min(8)).max(1)
+}
+
 fn run_loop(
     engine: &mut RwkvEngine,
     rx: Receiver<Submission>,
-    policy: BatchPolicy,
+    cfg: CoordinatorConfig,
     metrics: &Registry,
-    mut cache: Option<StateCache>,
-    state_file: Option<PathBuf>,
+    gate: &Gate,
 ) {
+    let CoordinatorConfig { policy, admission, mut cache, state_file, faults } = cfg;
     // warm the cache from a previous run's snapshots — fingerprint- and
     // shape-filtered, so a state file written by a different model (even a
     // same-shape fine-tune) cannot plant stale snapshots on live prefixes
@@ -310,16 +583,54 @@ fn run_loop(
             Err(e) => eprintln!("[coordinator] state file {} ignored: {e:#}", path.display()),
         }
     }
+    let max_live = if admission.max_concurrency > 0 {
+        admission.max_concurrency
+    } else {
+        policy.max_batch
+    };
+    let base_chunk = engine.cfg.prefill_chunk.max(1);
     let mut batcher = DynamicBatcher::new(policy);
     let mut sessions: Vec<Session> = Vec::new();
     let mut conns: Vec<Conn> = Vec::new();
+    let mut round_index: u64 = 0;
+    let mut drain_deadline: Option<Instant> = None;
     loop {
-        // admit new work (blocking when idle, draining when busy)
-        match batcher.admit(&rx, sessions.len()) {
+        let draining = gate.draining.load(Ordering::Acquire);
+        if draining && drain_deadline.is_none() {
+            drain_deadline = Some(Instant::now() + Duration::from_millis(admission.drain_ms));
+        }
+        // admit new work (bounded idle wait so drain flags stay observable)
+        match batcher.admit(&rx, sessions.len(), max_live, IDLE_TICK) {
             batcher::Admit::Closed if sessions.is_empty() => break,
             batcher::Admit::Requests(subs) => {
                 for s in subs {
+                    gate.queued.fetch_sub(1, Ordering::AcqRel);
+                    metrics.set("queue_depth", gate.queued.load(Ordering::Relaxed) as u64);
+                    metrics.observe("queue_wait_secs", s.queued.elapsed_secs());
+                    if draining {
+                        // raced the shutdown flag into the queue: shed,
+                        // never started
+                        metrics.inc("requests_rejected", 1);
+                        let _ = s.tx.send(Event::Rejected {
+                            reason: RejectReason::ShuttingDown,
+                            retry_after_ms: 0,
+                        });
+                        continue;
+                    }
                     metrics.inc("requests_admitted", 1);
+                    if s.deadline.map(|d| Instant::now() >= d).unwrap_or(false) {
+                        // expired while queued: admitted, retired before
+                        // any engine work (still a terminal Done, so the
+                        // accounting invariant holds)
+                        metrics.inc("requests_deadline_exceeded", 1);
+                        let _ = s.tx.send(Event::Done {
+                            tokens: 0,
+                            seconds: s.queued.elapsed_secs(),
+                            reason: FinishReason::DeadlineExceeded,
+                            cached_tokens: 0,
+                        });
+                        continue;
+                    }
                     let mut stop = s.req.stop_tokens.clone();
                     if !stop.contains(&crate::text::EOS) {
                         stop.push(crate::text::EOS);
@@ -347,6 +658,7 @@ fn run_loop(
                         cancel: s.cancel,
                         started: crate::util::Stopwatch::start(),
                         cached_tokens,
+                        deadline: s.deadline,
                     });
                 }
                 if let Some(c) = cache.as_ref() {
@@ -356,25 +668,64 @@ fn run_loop(
             _ => {}
         }
         if sessions.is_empty() {
+            if draining {
+                // drained: shed whatever is still queued, then exit
+                while let Ok(s) = rx.try_recv() {
+                    gate.queued.fetch_sub(1, Ordering::AcqRel);
+                    metrics.inc("requests_rejected", 1);
+                    let _ = s.tx.send(Event::Rejected {
+                        reason: RejectReason::ShuttingDown,
+                        retry_after_ms: 0,
+                    });
+                }
+                break;
+            }
             continue;
         }
-        // apply client-side cancellations before stepping
+        // round-boundary retirement checks: client cancellations, the
+        // drain budget, per-request deadlines
+        let now = Instant::now();
+        let drain_expired = drain_deadline.map(|d| now >= d).unwrap_or(false);
         for (sess, conn) in sessions.iter_mut().zip(&conns) {
             if conn.cancel.load(Ordering::Relaxed) {
                 sess.cancel();
+            } else if drain_expired {
+                // drain budget exhausted: hard-stop the stragglers (each
+                // still gets a terminal Done below)
+                sess.cancel();
+            } else if conn.deadline.map(|d| now >= d).unwrap_or(false) {
+                sess.finish(FinishReason::DeadlineExceeded);
             }
         }
+        // SLO degradation: decode-priority under queue pressure
+        let queued_now = gate.queued.load(Ordering::Relaxed);
+        engine.cfg.prefill_chunk = degraded_chunk(base_chunk, queued_now, sessions.len(), max_live);
+        // test-only fault hook: deterministic slow rounds / round errors
+        let injected = match faults.as_ref() {
+            Some(plan) => {
+                if let Some(pause) = plan.slow_round_delay(round_index) {
+                    std::thread::sleep(pause);
+                }
+                plan.round_error(round_index)
+            }
+            None => None,
+        };
+        round_index += 1;
         // ONE engine call per scheduling round: chunked prefill + batched
         // decode + sampling + stop checks all happen inside step_round
         let round = crate::util::Stopwatch::start();
-        let report = match engine.step_round_cached(&mut sessions, cache.as_mut()) {
+        let result = match injected {
+            Some(e) => Err(e),
+            None => engine.step_round_cached(&mut sessions, cache.as_mut()),
+        };
+        let report = match result {
             Ok(r) => r,
             Err(e) => {
                 // a round error is engine-global (the fused pass serves
                 // every session): every in-flight stream gets the error,
                 // then terminates with a Cancelled Done so per-request
-                // accounting (admitted = completed + cancelled) stays
-                // consistent
+                // accounting (admitted = completed + cancelled +
+                // deadline_exceeded) stays consistent
                 for (sess, conn) in sessions.iter().zip(&conns) {
                     let _ = conn.tx.send(Event::Error { message: e.to_string() });
                     let _ = conn.tx.send(Event::Done {
@@ -391,8 +742,14 @@ fn run_loop(
                 continue;
             }
         };
+        let round_secs = round.elapsed_secs();
+        // EWMA round time feeds the submit-side retry_after_ms hint
+        let sample = (round_secs * 1e9) as u64;
+        let prev = gate.round_nanos.load(Ordering::Relaxed);
+        let next = if prev == 0 { sample } else { (3 * prev + sample) / 4 };
+        gate.round_nanos.store(next.max(1), Ordering::Relaxed);
         metrics.inc("rounds", 1);
-        metrics.observe("round_seconds", round.elapsed_secs());
+        metrics.observe("round_seconds", round_secs);
         metrics.inc("round_weight_bytes", report.round_weight_bytes);
         metrics.inc("prefill_tokens", report.prefill_tokens as u64);
         metrics.inc("decode_tokens", report.decode_tokens as u64);
@@ -405,7 +762,8 @@ fn run_loop(
                 sessions[em.session].cancel();
             }
         }
-        // retire finished sessions (round stops + cancellations)
+        // retire finished sessions (round stops + cancellations +
+        // deadline expiries)
         for i in (0..sessions.len()).rev() {
             let reason = match sessions[i].finish_reason() {
                 Some(r) => r,
@@ -413,10 +771,10 @@ fn run_loop(
             };
             let sess = sessions.remove(i);
             let conn = conns.remove(i);
-            if reason == FinishReason::Cancelled {
-                metrics.inc("requests_cancelled", 1);
-            } else {
-                metrics.inc("requests_completed", 1);
+            match reason {
+                FinishReason::Cancelled => metrics.inc("requests_cancelled", 1),
+                FinishReason::DeadlineExceeded => metrics.inc("requests_deadline_exceeded", 1),
+                _ => metrics.inc("requests_completed", 1),
             }
             metrics.inc("tokens_out", sess.tokens_produced() as u64);
             let _ = conn.tx.send(Event::Done {
@@ -427,6 +785,8 @@ fn run_loop(
             });
         }
     }
+    // restore the configured chunk (the loop may exit mid-degradation)
+    engine.cfg.prefill_chunk = base_chunk;
     // persist the warm cache for the next process (best-effort: a failed
     // save only loses warmth, never correctness)
     if let (Some(c), Some(path)) = (cache.as_ref(), state_file.as_ref()) {
@@ -434,5 +794,52 @@ fn run_loop(
             Ok(n) => eprintln!("[coordinator] saved {n} state snapshots to {}", path.display()),
             Err(e) => eprintln!("[coordinator] state file save failed: {e:#}"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degraded_chunk_shrinks_only_under_pressure() {
+        // no queue -> full chunk, whatever the occupancy
+        assert_eq!(degraded_chunk(8, 0, 4, 4), 8);
+        // queue but free slots -> still full chunk
+        assert_eq!(degraded_chunk(8, 3, 2, 4), 8);
+        // full slots + queue -> halve per waiting request, floor 1
+        assert_eq!(degraded_chunk(8, 1, 4, 4), 4);
+        assert_eq!(degraded_chunk(8, 2, 4, 4), 2);
+        assert_eq!(degraded_chunk(8, 3, 4, 4), 1);
+        assert_eq!(degraded_chunk(8, 100, 4, 4), 1);
+        assert_eq!(degraded_chunk(1, 5, 4, 4), 1);
+    }
+
+    #[test]
+    fn reject_reason_wire_names() {
+        assert_eq!(RejectReason::Overloaded.wire_name(), "overloaded");
+        assert_eq!(
+            RejectReason::PromptTooLong { tokens: 10, limit: 4 }.wire_name(),
+            "prompt_too_long"
+        );
+        assert_eq!(RejectReason::ShuttingDown.wire_name(), "shutting_down");
+    }
+
+    #[test]
+    fn admission_policy_from_config() {
+        let cfg = EngineConfig {
+            max_queue: 3,
+            max_concurrency: 2,
+            max_prompt_tokens: 100,
+            deadline_ms: 750,
+            drain_ms: 1234,
+            ..EngineConfig::default()
+        };
+        let p = AdmissionPolicy::from_config(&cfg);
+        assert_eq!(p.max_queue, 3);
+        assert_eq!(p.max_concurrency, 2);
+        assert_eq!(p.max_prompt_tokens, 100);
+        assert_eq!(p.default_deadline_ms, 750);
+        assert_eq!(p.drain_ms, 1234);
     }
 }

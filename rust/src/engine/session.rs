@@ -45,6 +45,10 @@ pub enum FinishReason {
     /// Cancelled by the caller ([`Session::cancel`]) or retired by the
     /// coordinator after the client went away.
     Cancelled,
+    /// The request's deadline passed before the session finished (the
+    /// coordinator checks at round boundaries, so partial tokens were
+    /// already streamed).  Wire name: `"deadline"`.
+    DeadlineExceeded,
 }
 
 impl FinishReason {
@@ -54,6 +58,7 @@ impl FinishReason {
             FinishReason::MaxTokens => "length",
             FinishReason::Stop(_) | FinishReason::StopSeq(_) => "stop",
             FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExceeded => "deadline",
         }
     }
 }
@@ -183,8 +188,15 @@ impl Session {
     /// Stop the session; the next round reports it finished.  No-op once
     /// done (a real finish reason is never overwritten).
     pub fn cancel(&mut self) {
+        self.finish(FinishReason::Cancelled);
+    }
+
+    /// Stop the session with an explicit terminal `reason` (the
+    /// coordinator's deadline enforcement).  No-op once done — an earlier
+    /// finish reason is never overwritten.
+    pub fn finish(&mut self, reason: FinishReason) {
         if !self.is_done() {
-            self.phase = Phase::Done { reason: FinishReason::Cancelled };
+            self.phase = Phase::Done { reason };
         }
     }
 

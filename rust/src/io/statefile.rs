@@ -10,7 +10,7 @@
 //! Layout (little-endian):
 //! ```text
 //! magic  b"RWST"
-//! u32    version (=1)
+//! u32    version (=2)
 //! u16    tag_len, tag bytes   (model fingerprint, writer-chosen)
 //! u32    n_entries
 //! entry  n_entries x {
@@ -19,7 +19,14 @@
 //!          per layer: f32 att_x[dim], f32 wkv[heads*head_size^2],
 //!                     f32 ffn_x[dim]
 //!        }
+//! u32    FNV-1a checksum over every preceding byte
 //! ```
+//!
+//! The trailing checksum (version 2) catches SILENT damage: a statefile
+//! with a flipped payload byte would otherwise load cleanly and plant a
+//! corrupted state on a live prefix, breaking warm==cold bit-identity in
+//! a way no shape check can see.  A mismatch fails the load; the cache
+//! then just cold-starts (losing warmth, never correctness).
 //!
 //! The tag exists because shape alone cannot tell two checkpoints apart:
 //! a fine-tuned model has identical dims but different weights, and its
@@ -39,7 +46,20 @@ use anyhow::{bail, Context, Result};
 use crate::engine::state::RwkvState;
 
 pub const STATEFILE_MAGIC: &[u8; 4] = b"RWST";
-pub const STATEFILE_VERSION: u32 = 1;
+pub const STATEFILE_VERSION: u32 = 2;
+
+/// FNV-1a over the statefile body — the trailing integrity word.  Any
+/// single-byte change alters the digest (the XOR step injects a distinct
+/// value and every later step is a bijection), so bit-flip corruption is
+/// always detected; this is an integrity check, not an authenticity one.
+pub fn statefile_checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -77,6 +97,8 @@ pub fn write_statefile(path: &Path, tag: &str, entries: &[(&[u32], &RwkvState)])
             put_f32s(&mut out, &st.ffn_x[l]);
         }
     }
+    let digest = statefile_checksum(&out);
+    put_u32(&mut out, digest);
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -138,12 +160,23 @@ impl<'a> Cursor<'a> {
 /// Read a statefile: the writer's model tag plus every
 /// `(token-prefix, state)` entry, in file order.
 pub fn read_statefile(path: &Path) -> Result<(String, Vec<(Vec<u32>, RwkvState)>)> {
-    let bytes =
-        std::fs::read(path).with_context(|| format!("reading statefile {}", path.display()))?;
-    if bytes.len() < 8 || &bytes[0..4] != STATEFILE_MAGIC {
+    let all = std::fs::read(path).with_context(|| format!("reading statefile {}", path.display()))?;
+    if all.len() < 12 || &all[0..4] != STATEFILE_MAGIC {
         bail!("{}: not a statefile (bad magic)", path.display());
     }
-    let mut cur = Cursor { b: &bytes, pos: 4 };
+    // integrity first: the trailing word must match a digest of the body,
+    // so truncation and silent bit-flips are rejected before any parsing
+    let (bytes, tail) = all.split_at(all.len() - 4);
+    let stored = u32::from_le_bytes(tail.try_into().unwrap());
+    let computed = statefile_checksum(bytes);
+    if stored != computed {
+        bail!(
+            "{}: statefile checksum mismatch (stored {stored:#010x}, computed {computed:#010x}) — \
+             truncated or corrupt",
+            path.display()
+        );
+    }
+    let mut cur = Cursor { b: bytes, pos: 4 };
     let version = cur.u32()?;
     if version != STATEFILE_VERSION {
         bail!("{}: unsupported statefile version {version}", path.display());
@@ -255,10 +288,17 @@ mod tests {
 
     /// Corrupt counts must produce an `Err`, never a huge allocation: the
     /// reader bounds every count by the bytes actually in the file.
+    /// Every crafted file carries a VALID checksum so the count-bounding
+    /// logic itself is what rejects it, not the integrity word.
     #[test]
     fn rejects_oversized_counts_without_allocating() {
         let dir = std::env::temp_dir().join(format!("rwst-huge-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
+        let sealed = |mut b: Vec<u8>| {
+            let digest = statefile_checksum(&b);
+            b.extend_from_slice(&digest.to_le_bytes());
+            b
+        };
         let mut header = Vec::new();
         header.extend_from_slice(STATEFILE_MAGIC);
         header.extend_from_slice(&STATEFILE_VERSION.to_le_bytes());
@@ -267,14 +307,14 @@ mod tests {
         let p1 = dir.join("entries.rwst");
         let mut b = header.clone();
         b.extend_from_slice(&u32::MAX.to_le_bytes());
-        std::fs::write(&p1, &b).unwrap();
+        std::fs::write(&p1, sealed(b)).unwrap();
         assert!(read_statefile(&p1).is_err());
         // one entry claiming a u32::MAX-token prefix
         let p2 = dir.join("prefix.rwst");
         let mut b = header.clone();
         b.extend_from_slice(&1u32.to_le_bytes());
         b.extend_from_slice(&u32::MAX.to_le_bytes());
-        std::fs::write(&p2, &b).unwrap();
+        std::fs::write(&p2, sealed(b)).unwrap();
         assert!(read_statefile(&p2).is_err());
         // one entry whose shape implies a payload far beyond the file
         let p3 = dir.join("payload.rwst");
@@ -285,7 +325,7 @@ mod tests {
             // layers, dim, heads, head_size (heads*head_size == dim)
             b.extend_from_slice(&v.to_le_bytes());
         }
-        std::fs::write(&p3, &b).unwrap();
+        std::fs::write(&p3, sealed(b)).unwrap();
         assert!(read_statefile(&p3).is_err());
         // a tag length pointing past the end of the file
         let p4 = dir.join("tag.rwst");
@@ -293,8 +333,29 @@ mod tests {
         b.extend_from_slice(STATEFILE_MAGIC);
         b.extend_from_slice(&STATEFILE_VERSION.to_le_bytes());
         b.extend_from_slice(&u16::MAX.to_le_bytes());
-        std::fs::write(&p4, &b).unwrap();
+        std::fs::write(&p4, sealed(b)).unwrap();
         assert!(read_statefile(&p4).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Version 2's trailing FNV word: any single flipped byte anywhere in
+    /// the file fails the load — silent corruption cannot plant states.
+    #[test]
+    fn checksum_rejects_any_single_byte_flip() {
+        let dir = std::env::temp_dir().join(format!("rwst-sum-{}", std::process::id()));
+        let path = dir.join("cache.rwst");
+        let st = filled_state(2.0);
+        write_statefile(&path, "m:1:2", &[(&[2, 5], &st)]).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        assert!(read_statefile(&path).is_ok());
+        // probe a spread of offsets: header, tag, counts, payload, digest
+        for off in [0usize, 5, 9, 14, clean.len() / 2, clean.len() - 1] {
+            let mut bad = clean.clone();
+            bad[off] = !bad[off];
+            std::fs::write(&path, &bad).unwrap();
+            let err = read_statefile(&path);
+            assert!(err.is_err(), "flip at byte {off} must fail the load");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -8,18 +8,22 @@
 //!   info       model + artifact inventory
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use rwkv_lite::cli::{self, flag, opt, opt_def, Args};
 use rwkv_lite::config::{Backend, EngineConfig, LoadStrategy};
-use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator};
+use rwkv_lite::coordinator::{
+    batcher::BatchPolicy, AdmissionPolicy, Coordinator, CoordinatorConfig,
+};
 use rwkv_lite::engine::sampler::Sampler;
 use rwkv_lite::engine::session::Session;
 use rwkv_lite::engine::state_cache::{CacheConfig, StateCache};
 use rwkv_lite::engine::RwkvEngine;
-use rwkv_lite::server::Server;
+use rwkv_lite::server::{ServeOptions, Server};
 use rwkv_lite::text::Vocab;
 use rwkv_lite::{evalsuite, exp};
 
@@ -44,6 +48,12 @@ const SPECS: &[cli::OptSpec] = &[
     opt_def("limit", "max examples per eval task", "0"),
     opt_def("addr", "listen address (serve)", "127.0.0.1:7070"),
     opt_def("batch", "max dynamic batch size (serve)", "8"),
+    opt_def("max-queue", "bounded admission: max queued requests (serve; 0 = unbounded)", "64"),
+    opt_def("max-concurrency", "max in-flight sessions (serve; 0 = --batch)", "0"),
+    opt_def("max-prompt-tokens", "reject prompts over this many tokens (serve; 0 = off)", "0"),
+    opt_def("deadline-ms", "default per-request deadline (serve; 0 = none)", "0"),
+    opt_def("drain-ms", "graceful-shutdown drain budget in ms (serve)", "5000"),
+    opt_def("max-connections", "concurrent TCP connection cap (serve; 0 = unlimited)", "0"),
     opt_def("state-cache-mb", "prefix-state cache budget in MiB (serve; 0 = off)", "0"),
     opt("state-file", "persist the prefix-state cache across restarts (serve)"),
     opt("task", "single task name (eval)"),
@@ -87,6 +97,11 @@ fn engine_config(a: &Args) -> Result<EngineConfig> {
         other => bail!("--prefetch takes on|off, got '{other}'"),
     };
     cfg.threads = a.usize_or("threads", 0)?;
+    cfg.max_queue = a.usize_or("max-queue", 64)?;
+    cfg.max_concurrency = a.usize_or("max-concurrency", 0)?;
+    cfg.max_prompt_tokens = a.usize_or("max-prompt-tokens", 0)?;
+    cfg.deadline_ms = a.u64_or("deadline-ms", 0)?;
+    cfg.drain_ms = a.u64_or("drain-ms", 5000)?;
     cfg.state_cache_mb = a.usize_or("state-cache-mb", 0)?;
     cfg.state_file = a.get("state-file").map(PathBuf::from);
     cfg.seed = a.u64_or("seed", 0)?;
@@ -149,10 +164,32 @@ fn cmd_generate(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Process-wide shutdown latch flipped by the SIGINT/SIGTERM handler.
+/// Signal handlers may only touch `static` atomics (async-signal-safe);
+/// a watcher thread relays the latch into the serve/coordinator flags.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_shutdown_signal(_sig: libc::c_int) {
+    SHUTDOWN.store(true, Ordering::Release);
+}
+
+fn install_shutdown_handler() {
+    let handler = on_shutdown_signal as extern "C" fn(libc::c_int);
+    unsafe {
+        libc::signal(libc::SIGINT, handler as libc::sighandler_t);
+        libc::signal(libc::SIGTERM, handler as libc::sighandler_t);
+    }
+}
+
 fn cmd_serve(a: &Args) -> Result<()> {
     let cfg = engine_config(a)?;
     let v = vocab(a)?;
     let policy = BatchPolicy { max_batch: a.usize_or("batch", 8)?, window_ms: 2 };
+    // bounded admission / deadlines / drain budget all ride on the engine
+    // config (--max-queue, --max-concurrency, --max-prompt-tokens,
+    // --deadline-ms, --drain-ms)
+    let admission = AdmissionPolicy::from_config(&cfg);
+    let max_connections = a.usize_or("max-connections", 0)?;
     // ONE compute pool for the process, its handle threaded through the
     // coordinator's engine factory: every scheduling round fans out over
     // these workers (--threads; 0 = all cores)
@@ -162,14 +199,43 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let cache = (cfg.state_cache_mb > 0)
         .then(|| StateCache::new(CacheConfig::with_mb(cfg.state_cache_mb)));
     let state_file = cfg.state_file.clone();
-    let coordinator = Coordinator::spawn_with_cache(
+    let coordinator = Coordinator::spawn_cfg(
         move || RwkvEngine::load_with_pool(cfg, pool),
-        policy,
-        cache,
-        state_file,
+        CoordinatorConfig { policy, admission, cache, state_file, ..CoordinatorConfig::default() },
     );
     let server = Arc::new(Server::new(coordinator, v));
-    server.serve(a.get_or("addr", "127.0.0.1:7070"), None)
+    // graceful shutdown: signal -> static latch -> watcher thread flips
+    // the accept-loop flag AND starts the coordinator drain, so in-flight
+    // requests finish (or hit the drain budget) while the listener stops
+    // taking new connections
+    install_shutdown_handler();
+    let stop_accepting = Arc::new(AtomicBool::new(false));
+    {
+        let flag = Arc::clone(&stop_accepting);
+        let coord = Arc::clone(&server.coordinator);
+        std::thread::spawn(move || loop {
+            if SHUTDOWN.load(Ordering::Acquire) {
+                eprintln!("[serve] shutdown signal: draining");
+                coord.begin_shutdown();
+                flag.store(true, Ordering::Release);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        });
+    }
+    let opts = ServeOptions {
+        max_total_conns: None,
+        max_connections,
+        shutdown: Some(Arc::clone(&stop_accepting)),
+    };
+    Arc::clone(&server).serve(a.get_or("addr", "127.0.0.1:7070"), opts)?;
+    // serve returned with every connection thread joined; ensure the
+    // drain runs even on non-signal exits, then release the last server
+    // handle so the coordinator thread finishes (persisting its
+    // statefile) before the process exits
+    server.coordinator.begin_shutdown();
+    drop(server);
+    Ok(())
 }
 
 fn cmd_eval(a: &Args) -> Result<()> {

@@ -3,7 +3,7 @@
 //! Request:  {"prompt": "<text>", "max_tokens": 32, "temperature": 0.8,
 //!            "top_p": 0.95, "stop": ["word", ...],
 //!            "stop_seqs": ["multi word phrase", ...], "seed": 7,
-//!            "cache": true}
+//!            "cache": true, "deadline_ms": 2000}
 //!           (`stop` words / `stop_seqs` phrases are vocab-encoded into
 //!           stop token ids / sequences; unknown words are rejected with
 //!           an error line.  `seed` pins the sampler for cross-run
@@ -11,12 +11,24 @@
 //!           are integers in [0, 2^53), anything else is treated as
 //!           absent since JSON numbers are f64.  `cache: false` opts the
 //!           request out of the prefix-state cache when the server runs
-//!           one — see `--state-cache-mb`)
-//! Response: {"token": "<word>"} per generated token, then
+//!           one — see `--state-cache-mb`.  `deadline_ms` bounds the
+//!           request's wall time from admission; `--deadline-ms` sets the
+//!           server default.  Numeric fields are validated: negative/NaN
+//!           `max_tokens`/`temperature`/`top_p`/`deadline_ms` get a
+//!           structured error line instead of silently casting.)
+//! Response: {"token": "<word>"} per generated token, then ONE terminal
+//!           line —
 //!           {"done": true, "tokens": n, "seconds": s, "tps": r,
-//!            "reason": "length"|"stop"|"cancelled", "cached_tokens": c}
-//!           (`cached_tokens` = prompt feed tokens whose prefill was
-//!           skipped by forking a cached prefix state)
+//!            "reason": "length"|"stop"|"cancelled"|"deadline",
+//!            "cached_tokens": c}
+//!           on success (`cached_tokens` = prompt feed tokens whose
+//!           prefill was skipped by forking a cached prefix state), or
+//!           {"error": "overloaded", "retry_after_ms": m}
+//!           when bounded admission sheds the request (429 semantics;
+//!           also "prompt_too_long" / "shutting_down"), or
+//!           {"error": msg, "tokens": n, "seconds": s, "reason": r}
+//!           when the engine failed mid-request — the error line carries
+//!           the final token/latency accounting.
 //!
 //! The full protocol (request fields, response lines, error shapes) is
 //! documented in `docs/serving.md` together with every CLI flag.
@@ -25,20 +37,41 @@
 //! engine and advances all connections' sessions in fused rounds; the
 //! engine's compute pool — the `--threads` knob, `"threads"` in the
 //! serialized `EngineConfig` JSON — parallelizes each round across
-//! cores).  A dropped
+//! cores).  Connection threads are reaped as they finish (no JoinHandle
+//! leak on long-running servers) and `--max-connections` caps concurrent
+//! clients — excess connections get a structured `too_many_connections`
+//! line and are closed before touching the engine.  A dropped
 //! connection cancels its session: the coordinator sees the dead stream
-//! and retires the slot instead of decoding into the void.
+//! and retires the slot instead of decoding into the void.  A shutdown
+//! flag ([`ServeOptions::shutdown`], flipped by the CLI's SIGINT/SIGTERM
+//! handler) stops the accept loop so the coordinator can drain.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Coordinator, Event, Request};
+use crate::coordinator::{Coordinator, Event, RejectReason, Request};
 use crate::json::{self, Value};
 use crate::text::Vocab;
+
+/// Accept-loop knobs for [`Server::serve`].
+#[derive(Clone, Default)]
+pub struct ServeOptions {
+    /// Stop after accepting this many connections in total (used by
+    /// tests/examples for clean shutdown); `None` = serve forever.
+    pub max_total_conns: Option<usize>,
+    /// Concurrent connection cap (`0` = unlimited): connections past the
+    /// cap receive `{"error":"too_many_connections",...}` and are closed.
+    pub max_connections: usize,
+    /// Cooperative shutdown: when the flag flips true the accept loop
+    /// stops taking connections and `serve` returns after joining the
+    /// in-flight connection threads.
+    pub shutdown: Option<Arc<AtomicBool>>,
+}
 
 pub struct Server {
     pub coordinator: Arc<Coordinator>,
@@ -55,26 +88,63 @@ impl Server {
         }
     }
 
-    /// Serve forever (or until `max_conns` connections when Some — used by
-    /// tests/examples for clean shutdown).
-    pub fn serve(self: Arc<Self>, addr: &str, max_conns: Option<usize>) -> Result<()> {
+    /// Accept connections until the shutdown flag flips (or
+    /// `max_total_conns` is reached).  Finished connection threads are
+    /// reaped continuously — a long-running server holds one JoinHandle
+    /// per LIVE connection, not per connection ever served.
+    pub fn serve(self: Arc<Self>, addr: &str, opts: ServeOptions) -> Result<()> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        // non-blocking accept so the loop can observe the shutdown flag
+        listener.set_nonblocking(true).context("listener nonblocking")?;
         eprintln!("[server] listening on {addr}");
-        let mut handles = Vec::new();
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let active = Arc::new(AtomicUsize::new(0));
         let mut served = 0usize;
-        for stream in listener.incoming() {
-            let stream = stream?;
-            let me = Arc::clone(&self);
-            handles.push(std::thread::spawn(move || {
-                if let Err(e) = me.handle_conn(stream) {
-                    eprintln!("[server] connection error: {e:#}");
-                }
-            }));
-            served += 1;
-            if let Some(m) = max_conns {
-                if served >= m {
+        loop {
+            if let Some(flag) = opts.shutdown.as_ref() {
+                if flag.load(Ordering::Acquire) {
+                    eprintln!("[server] shutdown: no longer accepting connections");
                     break;
                 }
+            }
+            // reap: drop handles of connections that already hung up
+            handles.retain(|h| !h.is_finished());
+            match listener.accept() {
+                Ok((mut stream, _peer)) => {
+                    // the accepted socket must block: per-connection
+                    // threads read/write it synchronously
+                    stream.set_nonblocking(false).context("stream blocking")?;
+                    if opts.max_connections > 0
+                        && active.load(Ordering::Acquire) >= opts.max_connections
+                    {
+                        // over the concurrent cap: structured refusal,
+                        // closed without touching the engine
+                        let _ = writeln!(
+                            stream,
+                            r#"{{"error":"too_many_connections","retry_after_ms":1000}}"#
+                        );
+                        continue;
+                    }
+                    let me = Arc::clone(&self);
+                    let counter = Arc::clone(&active);
+                    counter.fetch_add(1, Ordering::AcqRel);
+                    handles.push(std::thread::spawn(move || {
+                        if let Err(e) = me.handle_conn(stream) {
+                            eprintln!("[server] connection error: {e:#}");
+                        }
+                        counter.fetch_sub(1, Ordering::AcqRel);
+                    }));
+                    served += 1;
+                    if let Some(m) = opts.max_total_conns {
+                        if served >= m {
+                            break;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(e.into()),
             }
         }
         for h in handles {
@@ -104,59 +174,22 @@ impl Server {
                     continue;
                 }
             };
-            let prompt_text = v.str_at(&["prompt"]).unwrap_or("").to_string();
-            let stop_words: Vec<&str> = v
-                .get("stop")
-                .and_then(|s| s.as_arr())
-                .map(|ws| ws.iter().filter_map(|w| w.as_str()).collect())
-                .unwrap_or_default();
-            let stop_tokens = match self.vocab.stop_token_ids(stop_words) {
-                Ok(t) => t,
-                Err(e) => {
-                    let msg = json::obj(vec![("error", json::s(&e.to_string()))]);
+            let req = match self.build_request(&v) {
+                Ok(r) => r,
+                Err(msg) => {
+                    let msg = json::obj(vec![("error", json::s(&msg))]);
                     writeln!(writer, "{}", msg.to_string())?;
                     continue;
                 }
-            };
-            // multi-token stop sequences: each phrase encodes to a token
-            // sequence; rejection policy matches single stop words
-            let stop_phrases: Vec<&str> = v
-                .get("stop_seqs")
-                .and_then(|s| s.as_arr())
-                .map(|ps| ps.iter().filter_map(|p| p.as_str()).collect())
-                .unwrap_or_default();
-            let stop_sequences = match stop_phrases
-                .iter()
-                .map(|p| self.vocab.stop_seq_ids(p))
-                .collect::<anyhow::Result<Vec<_>>>()
-            {
-                Ok(seqs) => seqs,
-                Err(e) => {
-                    let msg = json::obj(vec![("error", json::s(&e.to_string()))]);
-                    writeln!(writer, "{}", msg.to_string())?;
-                    continue;
-                }
-            };
-            let req = Request {
-                id: self.next_id.fetch_add(1, Ordering::Relaxed),
-                prompt: self.vocab.encode(&prompt_text),
-                max_tokens: v.f64_at(&["max_tokens"]).unwrap_or(32.0) as usize,
-                temperature: v.f64_at(&["temperature"]).unwrap_or(0.0) as f32,
-                top_p: v.f64_at(&["top_p"]).unwrap_or(1.0) as f32,
-                stop_tokens,
-                stop_sequences,
-                // only integers in [0, 2^53) round-trip exactly through
-                // JSON f64; anything else is treated as absent rather than
-                // silently saturating/truncating into seed collisions
-                seed: v
-                    .f64_at(&["seed"])
-                    .filter(|&s| s >= 0.0 && s < 9007199254740992.0 && s.fract() == 0.0)
-                    .map(|s| s as u64),
-                // per-request opt-out of the prefix-state cache (a no-op
-                // when the server runs without one)
-                cache: v.get("cache").and_then(|c| c.as_bool()).unwrap_or(true),
             };
             let rx = self.coordinator.submit(req);
+            // Wire contract: EVERY request's stream ends with exactly one
+            // terminal line.  A mid-request engine failure arrives as
+            // Error followed by a Done carrying the final counts; the two
+            // merge into one terminal error line so clients never lose
+            // the token/latency accounting.
+            let mut pending_err: Option<String> = None;
+            let mut terminal = false;
             for ev in rx {
                 match ev {
                     Event::Token { token } => {
@@ -164,25 +197,127 @@ impl Server {
                         writeln!(writer, "{}", msg.to_string())?;
                     }
                     Event::Done { tokens, seconds, reason, cached_tokens } => {
-                        let msg = json::obj(vec![
-                            ("done", Value::Bool(true)),
-                            ("tokens", json::num(tokens as f64)),
-                            ("seconds", json::num(seconds)),
-                            ("tps", json::num(tokens as f64 / seconds.max(1e-9))),
-                            ("reason", json::s(reason.name())),
-                            ("cached_tokens", json::num(cached_tokens as f64)),
-                        ]);
+                        let msg = match pending_err.take() {
+                            Some(err) => json::obj(vec![
+                                ("error", json::s(&err)),
+                                ("tokens", json::num(tokens as f64)),
+                                ("seconds", json::num(seconds)),
+                                ("reason", json::s(reason.name())),
+                            ]),
+                            None => json::obj(vec![
+                                ("done", Value::Bool(true)),
+                                ("tokens", json::num(tokens as f64)),
+                                ("seconds", json::num(seconds)),
+                                ("tps", json::num(tokens as f64 / seconds.max(1e-9))),
+                                ("reason", json::s(reason.name())),
+                                ("cached_tokens", json::num(cached_tokens as f64)),
+                            ]),
+                        };
                         writeln!(writer, "{}", msg.to_string())?;
+                        terminal = true;
                         break;
                     }
                     Event::Error { message } => {
-                        let msg = json::obj(vec![("error", json::s(&message))]);
+                        // hold it: the coordinator follows with a Done
+                        // carrying final counts (merged above)
+                        pending_err = Some(message);
+                    }
+                    Event::Rejected { reason, retry_after_ms } => {
+                        let mut fields = vec![
+                            ("error", json::s(reason.wire_name())),
+                            ("retry_after_ms", json::num(retry_after_ms as f64)),
+                        ];
+                        if let RejectReason::PromptTooLong { tokens, limit } = &reason {
+                            fields.push((
+                                "detail",
+                                json::s(&format!("prompt {tokens} tokens > limit {limit}")),
+                            ));
+                        }
+                        let msg = json::obj(fields);
                         writeln!(writer, "{}", msg.to_string())?;
+                        terminal = true;
                         break;
                     }
                 }
             }
+            if !terminal {
+                // the stream closed without a Done (e.g. the engine never
+                // loaded): still emit one terminal line
+                let err = pending_err.unwrap_or_else(|| "stream closed".into());
+                let msg = json::obj(vec![("error", json::s(&err))]);
+                writeln!(writer, "{}", msg.to_string())?;
+            }
         }
+    }
+
+    /// Parse + validate one request line.  `Err(message)` becomes a
+    /// structured `{"error": message}` reply — out-of-range numerics are
+    /// rejected here instead of silently casting through `as usize` /
+    /// `as f32`.
+    fn build_request(&self, v: &Value) -> std::result::Result<Request, String> {
+        let prompt_text = v.str_at(&["prompt"]).unwrap_or("").to_string();
+        let max_tokens = match v.f64_at(&["max_tokens"]) {
+            None => 32,
+            Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= 1e9 => x as usize,
+            Some(x) => return Err(format!("invalid max_tokens {x}: need an integer in [0, 1e9]")),
+        };
+        let temperature = match v.f64_at(&["temperature"]) {
+            None => 0.0,
+            Some(x) if x.is_finite() && x >= 0.0 => x as f32,
+            Some(x) => return Err(format!("invalid temperature {x}: need a finite number >= 0")),
+        };
+        let top_p = match v.f64_at(&["top_p"]) {
+            None => 1.0,
+            Some(x) if x.is_finite() && x > 0.0 && x <= 1.0 => x as f32,
+            Some(x) => return Err(format!("invalid top_p {x}: need a number in (0, 1]")),
+        };
+        let deadline_ms = match v.f64_at(&["deadline_ms"]) {
+            None => None,
+            Some(x) if x.is_finite() && x > 0.0 && x.fract() == 0.0 && x <= 1e12 => {
+                Some(x as u64)
+            }
+            Some(x) => {
+                return Err(format!("invalid deadline_ms {x}: need an integer in (0, 1e12]"))
+            }
+        };
+        let stop_words: Vec<&str> = v
+            .get("stop")
+            .and_then(|s| s.as_arr())
+            .map(|ws| ws.iter().filter_map(|w| w.as_str()).collect())
+            .unwrap_or_default();
+        let stop_tokens = self.vocab.stop_token_ids(stop_words).map_err(|e| e.to_string())?;
+        // multi-token stop sequences: each phrase encodes to a token
+        // sequence; rejection policy matches single stop words
+        let stop_phrases: Vec<&str> = v
+            .get("stop_seqs")
+            .and_then(|s| s.as_arr())
+            .map(|ps| ps.iter().filter_map(|p| p.as_str()).collect())
+            .unwrap_or_default();
+        let stop_sequences = stop_phrases
+            .iter()
+            .map(|p| self.vocab.stop_seq_ids(p))
+            .collect::<anyhow::Result<Vec<_>>>()
+            .map_err(|e| e.to_string())?;
+        Ok(Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            prompt: self.vocab.encode(&prompt_text),
+            max_tokens,
+            temperature,
+            top_p,
+            stop_tokens,
+            stop_sequences,
+            // only integers in [0, 2^53) round-trip exactly through
+            // JSON f64; anything else is treated as absent rather than
+            // silently saturating/truncating into seed collisions
+            seed: v
+                .f64_at(&["seed"])
+                .filter(|&s| s >= 0.0 && s < 9007199254740992.0 && s.fract() == 0.0)
+                .map(|s| s as u64),
+            // per-request opt-out of the prefix-state cache (a no-op
+            // when the server runs without one)
+            cache: v.get("cache").and_then(|c| c.as_bool()).unwrap_or(true),
+            deadline_ms,
+        })
     }
 }
 
@@ -197,7 +332,8 @@ pub struct Completion {
     pub tokens: usize,
     pub seconds: f64,
     pub tps: f64,
-    /// Finish reason wire name ("length" | "stop" | "cancelled").
+    /// Finish reason wire name ("length" | "stop" | "cancelled" |
+    /// "deadline").
     pub reason: String,
     /// Prompt feed tokens served from the prefix-state cache (0 when the
     /// server runs without one or the prefix was cold).
@@ -215,16 +351,10 @@ impl Client {
             ("max_tokens", json::num(max_tokens as f64)),
             ("temperature", json::num(temperature as f64)),
         ]);
-        writeln!(self.stream, "{}", req.to_string())?;
-        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let lines = self.request_raw(&req.to_string())?;
         let mut out = Completion::default();
-        let mut line = String::new();
-        loop {
-            line.clear();
-            if reader.read_line(&mut line)? == 0 {
-                break;
-            }
-            let v = json::parse(line.trim())?;
+        for line in &lines {
+            let v = json::parse(line)?;
             if let Some(tok) = v.str_at(&["token"]) {
                 if !out.text.is_empty() {
                     out.text.push(' ');
@@ -236,11 +366,38 @@ impl Client {
                 out.tps = v.f64_at(&["tps"]).unwrap_or(0.0);
                 out.reason = v.str_at(&["reason"]).unwrap_or("").to_string();
                 out.cached_tokens = v.f64_at(&["cached_tokens"]).unwrap_or(0.0) as usize;
-                break;
             } else if let Some(e) = v.str_at(&["error"]) {
                 anyhow::bail!("server error: {e}");
             }
         }
         Ok(out)
+    }
+
+    /// Send one raw request line and collect raw response lines through
+    /// the terminal line (one carrying `done` or `error`) — the overload
+    /// / deadline / fault tests inspect wire shapes directly.
+    pub fn request_raw(&mut self, req_line: &str) -> Result<Vec<String>> {
+        writeln!(self.stream, "{req_line}")?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut lines = Vec::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            let text = line.trim().to_string();
+            if text.is_empty() {
+                continue;
+            }
+            let terminal = json::parse(&text)
+                .map(|v| v.get("done").is_some() || v.get("error").is_some())
+                .unwrap_or(false);
+            lines.push(text);
+            if terminal {
+                break;
+            }
+        }
+        Ok(lines)
     }
 }

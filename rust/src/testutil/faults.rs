@@ -1,0 +1,147 @@
+//! Deterministic fault injection for the serving stack (TEST-ONLY).
+//!
+//! A [`FaultPlan`] rides into the coordinator through
+//! `CoordinatorConfig::faults` and is consulted once per scheduling
+//! round, BEFORE the engine call: a round listed as slow sleeps first
+//! (widening race windows so cancellation/disconnect tests are
+//! deterministic instead of timing-lucky), and a round listed as failing
+//! skips the engine entirely and behaves exactly like
+//! `step_round_cached` returning `Err` — exercising the engine-global
+//! error path (every in-flight stream gets `Error` then a terminal
+//! `Done`).  Round indices are 0-based over the coordinator's lifetime
+//! and count every stepped round, prefill or decode.
+//!
+//! The statefile helpers ([`truncate_file`], [`corrupt_byte`]) damage
+//! on-disk artifacts so the corrupt/truncated-statefile recovery paths
+//! (`io::statefile` load is best-effort, never fatal) are exercised in
+//! `tests/faults.rs` without hand-crafted binary fixtures.
+//!
+//! Production code never constructs a plan; the hook costs one `Option`
+//! check per round when unset.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::time::Duration;
+
+/// Deterministic per-round fault schedule.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Rounds (0-based) whose engine call is replaced by an error.
+    fail_rounds: Vec<u64>,
+    /// `(round, sleep_ms)`: rounds that sleep before stepping.
+    slow_rounds: Vec<(u64, u64)>,
+    /// Message carried by injected errors (a recognizable default).
+    message: String,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Inject an engine-round failure at `round` (0-based).
+    pub fn fail_round(mut self, round: u64) -> Self {
+        self.fail_rounds.push(round);
+        self
+    }
+
+    /// Sleep `ms` before stepping `round` (0-based).  Only the listed
+    /// round sleeps; use [`FaultPlan::slow_rounds_from`] for a sustained
+    /// window.
+    pub fn slow_round(mut self, round: u64, ms: u64) -> Self {
+        self.slow_rounds.push((round, ms));
+        self
+    }
+
+    /// Sleep `ms` before EVERY round from `start` (0-based) through
+    /// `start + count - 1` — a sustained slowdown window.
+    pub fn slow_rounds_from(mut self, start: u64, count: u64, ms: u64) -> Self {
+        for r in start..start + count {
+            self.slow_rounds.push((r, ms));
+        }
+        self
+    }
+
+    /// Override the injected error message.
+    pub fn with_message(mut self, msg: &str) -> Self {
+        self.message = msg.to_string();
+        self
+    }
+
+    /// Sleep to apply before `round`, if any (the coordinator hook).
+    pub fn slow_round_delay(&self, round: u64) -> Option<Duration> {
+        self.slow_rounds
+            .iter()
+            .find(|(r, _)| *r == round)
+            .map(|&(_, ms)| Duration::from_millis(ms))
+    }
+
+    /// Error replacing the engine call at `round`, if scheduled.
+    pub fn round_error(&self, round: u64) -> Option<anyhow::Error> {
+        self.fail_rounds.contains(&round).then(|| {
+            let msg = if self.message.is_empty() {
+                format!("injected fault: round {round} failed")
+            } else {
+                self.message.clone()
+            };
+            anyhow::anyhow!(msg)
+        })
+    }
+}
+
+/// Truncate `path` to its first `keep` bytes (a crash mid-write).
+pub fn truncate_file(path: &Path, keep: u64) -> std::io::Result<()> {
+    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.set_len(keep)?;
+    Ok(())
+}
+
+/// Flip every bit of the byte at `offset` in `path` (silent corruption).
+pub fn corrupt_byte(path: &Path, offset: u64) -> std::io::Result<()> {
+    let mut f = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+    f.seek(SeekFrom::Start(offset))?;
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b)?;
+    b[0] = !b[0];
+    f.seek(SeekFrom::Start(offset))?;
+    f.write_all(&b)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_schedules_failures_and_slowdowns() {
+        let p = FaultPlan::new().fail_round(3).slow_round(1, 20).slow_rounds_from(5, 2, 7);
+        assert!(p.round_error(3).is_some());
+        assert!(p.round_error(2).is_none());
+        assert_eq!(p.slow_round_delay(1), Some(Duration::from_millis(20)));
+        assert_eq!(p.slow_round_delay(5), Some(Duration::from_millis(7)));
+        assert_eq!(p.slow_round_delay(6), Some(Duration::from_millis(7)));
+        assert_eq!(p.slow_round_delay(7), None);
+        assert_eq!(p.slow_round_delay(0), None);
+    }
+
+    #[test]
+    fn injected_error_carries_round_or_custom_message() {
+        let p = FaultPlan::new().fail_round(0);
+        assert!(p.round_error(0).unwrap().to_string().contains("round 0"));
+        let p = FaultPlan::new().fail_round(0).with_message("disk on fire");
+        assert_eq!(p.round_error(0).unwrap().to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn file_damage_helpers() {
+        let dir = std::env::temp_dir().join(format!("rwkv-faults-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("victim.bin");
+        std::fs::write(&path, [1u8, 2, 3, 4, 5]).unwrap();
+        truncate_file(&path, 2).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, 2]);
+        corrupt_byte(&path, 1).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, !2u8]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

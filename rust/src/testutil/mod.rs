@@ -10,6 +10,7 @@
 //! });
 //! ```
 
+pub mod faults;
 pub mod synth;
 
 use crate::util::XorShift;

@@ -1,0 +1,253 @@
+//! Fault-injection suite: deterministic engine-round failures, client
+//! disconnect races widened by slow rounds, and damaged-statefile
+//! recovery — all on synthetic checkpoints (tier-1).
+//!
+//! Each test re-asserts the accounting invariant:
+//! `requests_admitted == requests_completed + requests_cancelled +
+//! requests_deadline_exceeded` (rejections are counted separately).
+
+use std::path::PathBuf;
+
+use rwkv_lite::config::EngineConfig;
+use rwkv_lite::coordinator::{
+    batcher::BatchPolicy, AdmissionPolicy, Coordinator, CoordinatorConfig, Event, FinishReason,
+    Request,
+};
+use rwkv_lite::engine::state_cache::{CacheConfig, StateCache};
+use rwkv_lite::engine::RwkvEngine;
+use rwkv_lite::testutil::faults::{corrupt_byte, truncate_file, FaultPlan};
+use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
+
+fn synth_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rwkv-faults-{}-{}", tag, std::process::id()));
+    write_synth_rwkv(&dir, "m", &SynthSpec::tiny()).expect("write synth model");
+    dir
+}
+
+fn engine_cfg(dir: &PathBuf) -> EngineConfig {
+    let spec = SynthSpec::tiny();
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = spec.predictors;
+    cfg.hier_head = spec.hier_head;
+    cfg
+}
+
+fn faulty_coordinator(dir: &PathBuf, faults: FaultPlan) -> Coordinator {
+    faulty_coordinator_window(dir, faults, 1)
+}
+
+fn faulty_coordinator_window(dir: &PathBuf, faults: FaultPlan, window_ms: u64) -> Coordinator {
+    let cfg = engine_cfg(dir);
+    Coordinator::spawn_cfg(
+        move || RwkvEngine::load(cfg),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 4, window_ms },
+            faults: Some(faults),
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+fn assert_accounting(c: &Coordinator) {
+    let admitted = c.metrics.counter("requests_admitted");
+    let terminated = c.metrics.counter("requests_completed")
+        + c.metrics.counter("requests_cancelled")
+        + c.metrics.counter("requests_deadline_exceeded");
+    assert_eq!(admitted, terminated, "admitted={admitted} terminated={terminated}");
+}
+
+/// An injected round error is engine-global: EVERY in-flight stream gets
+/// `Error` followed by a terminal `Done` (reason: cancelled) carrying the
+/// final counts — and the coordinator keeps serving afterwards.
+#[test]
+fn injected_round_error_terminates_all_streams_then_recovers() {
+    let dir = synth_dir("round-error");
+    // round 0 fails; a generous batching window guarantees BOTH
+    // back-to-back submissions are admitted into it together
+    let c = faulty_coordinator_window(
+        &dir,
+        FaultPlan::new().fail_round(0).with_message("injected: io"),
+        250,
+    );
+    let handles: Vec<_> = (0..2u64)
+        .map(|i| {
+            c.submit(Request {
+                id: i,
+                prompt: vec![2, 5 + i as u32],
+                max_tokens: 4,
+                ..Request::default()
+            })
+        })
+        .collect();
+    for h in handles {
+        let mut saw_error = None;
+        let mut saw_done = None;
+        for ev in h {
+            match ev {
+                Event::Error { message } => saw_error = Some(message),
+                Event::Done { tokens, reason, .. } => {
+                    saw_done = Some((tokens, reason));
+                    break;
+                }
+                Event::Token { .. } => {}
+                Event::Rejected { reason, .. } => {
+                    panic!("unexpected rejection: {}", reason.wire_name())
+                }
+            }
+        }
+        assert_eq!(saw_error.as_deref(), Some("injected: io"));
+        let (tokens, reason) = saw_done.expect("error must be followed by a terminal Done");
+        assert_eq!(reason, FinishReason::Cancelled);
+        assert_eq!(tokens, 0, "round 0 failed before any token was produced");
+    }
+    assert_eq!(c.metrics.counter("requests_cancelled"), 2);
+    assert_accounting(&c);
+    // the loop survived the bad round: a fresh request completes
+    let fresh = Request { id: 9, prompt: vec![2, 7], max_tokens: 3, ..Request::default() };
+    let out = c.generate_blocking(fresh).unwrap();
+    assert!(!out.is_empty());
+    assert_eq!(c.metrics.counter("requests_completed"), 1);
+    assert_accounting(&c);
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Cancellation during an artificially slow prefill round lands at the
+/// round boundary: terminal Done, zero tokens, no double-retirement.
+#[test]
+fn cancel_during_slow_prefill_round() {
+    let dir = synth_dir("cancel-slow");
+    let c = faulty_coordinator(&dir, FaultPlan::new().slow_rounds_from(0, 10_000, 30));
+    let h = c.submit(Request {
+        id: 1,
+        prompt: (0..60).map(|i| 4 + i % 32).collect(),
+        max_tokens: 100,
+        ..Request::default()
+    });
+    // the 60-token prompt needs many 30ms rounds; cancel mid-prefill
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    h.cancel();
+    let mut tokens_seen = 0usize;
+    let mut reason = None;
+    for ev in &h {
+        match ev {
+            Event::Token { .. } => tokens_seen += 1,
+            Event::Done { reason: r, .. } => {
+                reason = Some(r);
+                break;
+            }
+            other => panic!("unexpected event: {other:?}"),
+        }
+    }
+    assert_eq!(reason, Some(FinishReason::Cancelled));
+    assert_eq!(tokens_seen, 0, "cancelled during prefill: no tokens streamed");
+    assert_eq!(c.metrics.counter("requests_cancelled"), 1);
+    assert_eq!(c.metrics.counter("requests_completed"), 0);
+    assert_accounting(&c);
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A client that disconnects mid-stream (handle dropped) is detected on
+/// the next emitted token and retired as cancelled — counted exactly once.
+#[test]
+fn disconnect_mid_stream_is_cancelled_once() {
+    let dir = synth_dir("disconnect");
+    let c = faulty_coordinator(&dir, FaultPlan::new().slow_rounds_from(0, 10_000, 15));
+    let h = c.submit(Request {
+        id: 1,
+        prompt: (0..40).map(|i| 4 + i % 32).collect(),
+        max_tokens: 100_000,
+        ..Request::default()
+    });
+    // walk away while the request is still being served
+    std::thread::sleep(std::time::Duration::from_millis(40));
+    drop(h);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while c.metrics.counter("requests_cancelled") == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "coordinator never retired the orphaned session"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    // settle a few more rounds: the retirement must not double-count
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert_eq!(c.metrics.counter("requests_cancelled"), 1);
+    assert_accounting(&c);
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Statefile cache round-trip under damage: a truncated or bit-flipped
+/// statefile is reported and IGNORED (cold start), never fatal — and a
+/// healthy restart still warm-starts from disk.
+#[test]
+fn damaged_statefile_recovers_cold() {
+    let dir = synth_dir("statefile");
+    let state_path = dir.join("cache.rwst");
+    let prompt: Vec<u32> = (0..24).map(|i| (4 + 3 * i) % 90).collect();
+    let spawn = |path: PathBuf| {
+        let cfg = engine_cfg(&dir);
+        Coordinator::spawn_cfg(
+            move || RwkvEngine::load(cfg),
+            CoordinatorConfig {
+                policy: BatchPolicy { max_batch: 2, window_ms: 1 },
+                admission: AdmissionPolicy::default(),
+                cache: Some(StateCache::new(CacheConfig::with_mb(16))),
+                state_file: Some(path),
+                faults: None,
+            },
+        )
+    };
+    let run = |c: &Coordinator, id: u64| {
+        let h = c.submit(Request {
+            id,
+            prompt: prompt.clone(),
+            max_tokens: 2,
+            seed: Some(7),
+            ..Request::default()
+        });
+        let mut cached = usize::MAX;
+        for ev in h {
+            match ev {
+                Event::Done { cached_tokens, .. } => {
+                    cached = cached_tokens;
+                    break;
+                }
+                Event::Error { message } => panic!("{message}"),
+                _ => {}
+            }
+        }
+        cached
+    };
+    // 1) seed the statefile
+    let c = spawn(state_path.clone());
+    run(&c, 1);
+    drop(c); // saves on shutdown
+    assert!(state_path.exists());
+    let healthy = std::fs::read(&state_path).unwrap();
+    assert!(healthy.len() > 16);
+
+    // 2) healthy restart warm-starts (sanity for the damage cases below)
+    let c = spawn(state_path.clone());
+    assert!(run(&c, 2) > 0, "healthy statefile must warm-start the cache");
+    drop(c);
+
+    // 3) truncated file (crash mid-write): cold start, no crash
+    std::fs::write(&state_path, &healthy).unwrap();
+    truncate_file(&state_path, (healthy.len() / 2) as u64).unwrap();
+    let c = spawn(state_path.clone());
+    assert_eq!(run(&c, 3), 0, "truncated statefile must be ignored (cold start)");
+    assert_accounting(&c);
+    drop(c);
+
+    // 4) silent single-byte corruption: cold start, no crash
+    std::fs::write(&state_path, &healthy).unwrap();
+    corrupt_byte(&state_path, (healthy.len() / 3) as u64).unwrap();
+    let c = spawn(state_path.clone());
+    assert_eq!(run(&c, 4), 0, "corrupt statefile must be ignored (cold start)");
+    assert_accounting(&c);
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}

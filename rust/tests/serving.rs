@@ -8,11 +8,14 @@ use std::sync::Arc;
 
 use rwkv_lite::config::EngineConfig;
 use rwkv_lite::coordinator::{
-    batcher::BatchPolicy, Coordinator, Event, FinishReason, Request,
+    batcher::BatchPolicy, AdmissionPolicy, Coordinator, CoordinatorConfig, Event, FinishReason,
+    Request,
 };
 use rwkv_lite::engine::state_cache::{CacheConfig, StateCache};
 use rwkv_lite::engine::RwkvEngine;
-use rwkv_lite::server::{Client, Server};
+use rwkv_lite::json;
+use rwkv_lite::server::{Client, ServeOptions, Server};
+use rwkv_lite::testutil::faults::FaultPlan;
 use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
 use rwkv_lite::text::Vocab;
 
@@ -114,6 +117,7 @@ fn concurrent_requests_all_complete_and_batch() {
                     break;
                 }
                 Event::Error { message } => panic!("request failed: {message}"),
+                Event::Rejected { reason, .. } => panic!("rejected: {}", reason.wire_name()),
             }
         }
     }
@@ -223,6 +227,7 @@ fn stop_tokens_end_the_stream() {
                 break;
             }
             Event::Error { message } => panic!("{message}"),
+            Event::Rejected { reason, .. } => panic!("rejected: {}", reason.wire_name()),
         }
     }
     assert_eq!(out, stream[..=first].to_vec(), "stream ends AT the stop token");
@@ -266,6 +271,7 @@ fn stop_sequences_end_the_stream() {
                 break;
             }
             Event::Error { message } => panic!("{message}"),
+            Event::Rejected { reason, .. } => panic!("rejected: {}", reason.wire_name()),
         }
     }
     assert_eq!(out, stream[..=first_end].to_vec(), "stream ends AFTER the stop sequence");
@@ -309,6 +315,7 @@ fn coordinator_cache_skips_repeat_prefill() {
                     break;
                 }
                 Event::Error { message } => panic!("{message}"),
+                Event::Rejected { reason, .. } => panic!("rejected: {}", reason.wire_name()),
             }
         }
         (out, cached)
@@ -399,6 +406,7 @@ fn cancel_handle_retires_session() {
                 break;
             }
             Event::Error { message } => panic!("{message}"),
+            Event::Rejected { reason, .. } => panic!("rejected: {}", reason.wire_name()),
         }
     }
     assert!(seen >= 3, "got {seen} tokens before cancel");
@@ -470,6 +478,167 @@ fn prefill_rounds_are_chunked_not_per_token() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Vocabulary matching the synthetic checkpoints (96 words, specials in
+/// the standard slots) — lets the TCP protocol tests run without
+/// `make artifacts`.
+fn synth_vocab() -> Vocab {
+    let mut words: Vec<String> =
+        ["<pad>", "<unk>", "<bos>", "<eos>"].iter().map(|s| s.to_string()).collect();
+    for i in 4..96 {
+        words.push(format!("w{i}"));
+    }
+    Vocab::from_words(words)
+}
+
+/// Spawn a TCP server over a synthetic coordinator; returns the server
+/// thread handle (serves `conns` connections then exits) and the addr.
+fn synth_server(
+    tag: &str,
+    addr: &'static str,
+    conns: usize,
+    admission: AdmissionPolicy,
+    faults: Option<FaultPlan>,
+) -> (std::thread::JoinHandle<anyhow::Result<()>>, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("rwkv-tcp-{}-{}", tag, std::process::id()));
+    let spec = SynthSpec::tiny();
+    write_synth_rwkv(&dir, "m", &spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = spec.predictors;
+    cfg.hier_head = spec.hier_head;
+    let c = Coordinator::spawn_cfg(
+        move || RwkvEngine::load(cfg),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 4, window_ms: 1 },
+            admission,
+            faults,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let server = Arc::new(Server::new(c, synth_vocab()));
+    let handle = std::thread::spawn(move || {
+        server.serve(
+            addr,
+            ServeOptions { max_total_conns: Some(conns), ..ServeOptions::default() },
+        )
+    });
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    (handle, dir)
+}
+
+/// Out-of-range numerics are refused with a structured error line (no
+/// silent `as usize` casts), and the connection keeps serving.
+#[test]
+fn tcp_validation_rejects_bad_numerics() {
+    let (server, dir) =
+        synth_server("validate", "127.0.0.1:17372", 1, AdmissionPolicy::default(), None);
+    let mut client = Client::connect("127.0.0.1:17372").unwrap();
+    let bad = [
+        (r#"{"prompt":"w5","max_tokens":-3}"#, "invalid max_tokens"),
+        (r#"{"prompt":"w5","max_tokens":2000000000000}"#, "invalid max_tokens"),
+        (r#"{"prompt":"w5","max_tokens":1.5}"#, "invalid max_tokens"),
+        (r#"{"prompt":"w5","temperature":-0.5}"#, "invalid temperature"),
+        (r#"{"prompt":"w5","top_p":1.5}"#, "invalid top_p"),
+        (r#"{"prompt":"w5","top_p":0}"#, "invalid top_p"),
+        (r#"{"prompt":"w5","deadline_ms":-20}"#, "invalid deadline_ms"),
+    ];
+    for (req, want) in bad {
+        let lines = client.request_raw(req).unwrap();
+        assert_eq!(lines.len(), 1, "validation failure is a single terminal line: {lines:?}");
+        let v = json::parse(&lines[0]).unwrap();
+        let err = v.str_at(&["error"]).expect("structured error field");
+        assert!(err.contains(want), "error '{err}' should mention '{want}'");
+    }
+    // the same connection still serves a valid request afterwards
+    let done = client.complete("w5 w6", 3, 0.0).unwrap();
+    assert!(done.tokens > 0);
+    drop(client);
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Admission rejections reach the wire as structured error lines with
+/// 429 semantics: `prompt_too_long` here (deterministic — no timing).
+#[test]
+fn tcp_prompt_limit_rejection_wire_shape() {
+    let admission = AdmissionPolicy { max_prompt_tokens: 2, ..AdmissionPolicy::default() };
+    let (server, dir) = synth_server("promptcap", "127.0.0.1:17373", 1, admission, None);
+    let mut client = Client::connect("127.0.0.1:17373").unwrap();
+    let lines = client.request_raw(r#"{"prompt":"w5 w6 w7 w8","max_tokens":2}"#).unwrap();
+    assert_eq!(lines.len(), 1);
+    let v = json::parse(&lines[0]).unwrap();
+    assert_eq!(v.str_at(&["error"]), Some("prompt_too_long"));
+    assert_eq!(v.f64_at(&["retry_after_ms"]), Some(0.0));
+    assert!(v.str_at(&["detail"]).unwrap_or("").contains("limit 2"));
+    // an in-bounds prompt on the same connection completes
+    let done = client.complete("w5 w6", 2, 0.0).unwrap();
+    assert!(done.tokens > 0);
+    drop(client);
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A mid-request engine failure reaches the client as ONE terminal error
+/// line that still carries the final token/latency accounting (the
+/// coordinator's Error + Done merge on the wire).
+#[test]
+fn tcp_round_error_line_carries_final_counts() {
+    let faults = FaultPlan::new().fail_round(0).with_message("injected: round lost");
+    let (server, dir) = synth_server(
+        "rounderr",
+        "127.0.0.1:17374",
+        1,
+        AdmissionPolicy::default(),
+        Some(faults),
+    );
+    let mut client = Client::connect("127.0.0.1:17374").unwrap();
+    let lines = client.request_raw(r#"{"prompt":"w5 w6","max_tokens":4}"#).unwrap();
+    let last = json::parse(lines.last().expect("terminal line")).unwrap();
+    assert_eq!(last.str_at(&["error"]), Some("injected: round lost"));
+    assert_eq!(last.str_at(&["reason"]), Some("cancelled"));
+    let token_lines =
+        lines.iter().filter(|l| json::parse(l).unwrap().get("token").is_some()).count();
+    assert_eq!(last.f64_at(&["tokens"]), Some(token_lines as f64), "counts survive the error");
+    // the server recovered: the NEXT request on this connection completes
+    // (round 0 is the only poisoned round)
+    let done = client.complete("w7 w8", 2, 0.0).unwrap();
+    assert!(done.tokens > 0);
+    drop(client);
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Per-request `deadline_ms` over the wire: injected slow rounds make a
+/// short deadline land mid-prefill, and the terminal line reports
+/// `reason: "deadline"` with the partial token count.
+#[test]
+fn tcp_deadline_wire_shape() {
+    let faults = FaultPlan::new().slow_rounds_from(0, 10_000, 25);
+    let (server, dir) = synth_server(
+        "deadline",
+        "127.0.0.1:17375",
+        1,
+        AdmissionPolicy::default(),
+        Some(faults),
+    );
+    let mut client = Client::connect("127.0.0.1:17375").unwrap();
+    // 40-word prompt: ~6 prefill rounds at 25ms each vs a 60ms deadline
+    let words: Vec<String> = (0..40).map(|i| format!("w{}", 4 + i % 32)).collect();
+    let req = format!(
+        r#"{{"prompt":"{}","max_tokens":50,"deadline_ms":60}}"#,
+        words.join(" ")
+    );
+    let lines = client.request_raw(&req).unwrap();
+    let last = json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(last.str_at(&["reason"]), Some("deadline"));
+    assert!(last.get("done").is_some(), "a deadline expiry is a normal Done");
+    let token_lines =
+        lines.iter().filter(|l| json::parse(l).unwrap().get("token").is_some()).count();
+    assert_eq!(last.f64_at(&["tokens"]), Some(token_lines as f64));
+    drop(client);
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn tcp_server_round_trip() {
     if !have("rwkv-ours-tiny") {
@@ -480,7 +649,9 @@ fn tcp_server_round_trip() {
     let server = Arc::new(Server::new(coordinator("rwkv-ours-tiny", 4), vocab));
     let addr = "127.0.0.1:17371";
     let s2 = Arc::clone(&server);
-    let handle = std::thread::spawn(move || s2.serve(addr, Some(1)));
+    let handle = std::thread::spawn(move || {
+        s2.serve(addr, ServeOptions { max_total_conns: Some(1), ..ServeOptions::default() })
+    });
     std::thread::sleep(std::time::Duration::from_millis(150));
     let mut client = Client::connect(addr).unwrap();
     let completion = client.complete("the", 8, 0.0).unwrap();
