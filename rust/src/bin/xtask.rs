@@ -1,0 +1,143 @@
+//! Source-text lints rustc/clippy can't express, run in CI next to the
+//! compiler lints (PR 7's unsafe audit):
+//!
+//! - `lint-unchecked` — `src/tensor/` is the hot-loop core where an
+//!   out-of-bounds index silently corrupts activations; it must use
+//!   checked indexing (or the audited `SharedSliceMut` protocol), never
+//!   `get_unchecked` / `from_raw_parts` / `unwrap_unchecked`.
+//! - `lint-safety` — every `unsafe` block or `unsafe impl` in `src/`
+//!   needs a `SAFETY:` comment within the preceding few lines, so the
+//!   justification lives next to the obligation it discharges.
+//!
+//! Both walk the committed source text, so they hold for cfg'd-out code
+//! (miri/loom paths) that a compiler-based lint would never see.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+#![warn(clippy::disallowed_types)]
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+const UNCHECKED_PATTERNS: [&str; 4] =
+    ["get_unchecked", "from_raw_parts", "unwrap_unchecked", "unchecked_mul"];
+
+fn main() -> Result<()> {
+    let task = std::env::args().nth(1).unwrap_or_default();
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    match task.as_str() {
+        "lint-unchecked" => lint_unchecked(&src.join("tensor")),
+        "lint-safety" => lint_safety(&src),
+        _ => bail!("usage: xtask <lint-unchecked|lint-safety>"),
+    }
+}
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            rust_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(())
+}
+
+/// Strip `//` comments so a pattern *mentioned* in prose (like this
+/// file's own docs) doesn't trip the lint.  Good enough for this
+/// codebase: no raw strings or block comments contain the patterns.
+fn code_part(line: &str) -> &str {
+    line.split("//").next().unwrap_or(line)
+}
+
+fn lint_unchecked(tensor_dir: &Path) -> Result<()> {
+    let mut files = Vec::new();
+    rust_files(tensor_dir, &mut files)?;
+    let mut bad = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)?;
+        for (i, line) in text.lines().enumerate() {
+            let code = code_part(line);
+            for pat in UNCHECKED_PATTERNS {
+                if code.contains(pat) {
+                    bad.push(format!("{}:{}: `{pat}`", path.display(), i + 1));
+                }
+            }
+        }
+    }
+    if !bad.is_empty() {
+        bail!(
+            "unchecked indexing in src/tensor/ ({} site(s)) — use checked slices or the \
+             SharedSliceMut protocol:\n  {}",
+            bad.len(),
+            bad.join("\n  ")
+        );
+    }
+    println!("lint-unchecked: {} tensor files clean", files.len());
+    Ok(())
+}
+
+/// Is the site at `lines[i]` justified by the contiguous run of
+/// comments/attributes directly above it?  A `// SAFETY:` comment covers
+/// any site; a rustdoc `# Safety` section covers `unsafe fn`
+/// declarations (the caller-obligation idiom — the body's own blocks
+/// still need their own `SAFETY:`).  Also accepts `SAFETY:` on the site
+/// line itself (one-line `unsafe { ... } // SAFETY: ...` style).
+fn has_safety_justification(lines: &[&str], i: usize) -> bool {
+    if lines[i].contains("SAFETY:") {
+        return true;
+    }
+    let mut k = i;
+    while k > 0 {
+        k -= 1;
+        let t = lines[k].trim_start();
+        let is_meta =
+            t.is_empty() || t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!");
+        if !is_meta {
+            return false;
+        }
+        if t.contains("SAFETY:") || t.contains("# Safety") {
+            return true;
+        }
+    }
+    false
+}
+
+fn lint_safety(src: &Path) -> Result<()> {
+    let mut files = Vec::new();
+    rust_files(src, &mut files)?;
+    // this binary's own sources hold pattern text in docs; the lint is
+    // about the library and its kernels
+    files.retain(|p| !p.components().any(|c| c.as_os_str() == "bin"));
+    let mut bad = Vec::new();
+    let mut sites = 0usize;
+    for path in &files {
+        let text = std::fs::read_to_string(path)?;
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, line) in lines.iter().enumerate() {
+            let code = code_part(line);
+            let is_site = code.contains("unsafe {")
+                || code.contains("unsafe impl")
+                || code.contains("unsafe fn");
+            if !is_site {
+                continue;
+            }
+            sites += 1;
+            if !has_safety_justification(&lines, i) {
+                bad.push(format!("{}:{}: {}", path.display(), i + 1, line.trim()));
+            }
+        }
+    }
+    if !bad.is_empty() {
+        bail!(
+            "{} unsafe site(s) without a `// SAFETY:` (or `# Safety` doc) justification:\n  {}",
+            bad.len(),
+            bad.join("\n  ")
+        );
+    }
+    println!("lint-safety: {sites} unsafe sites documented across {} files", files.len());
+    Ok(())
+}

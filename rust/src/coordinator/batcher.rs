@@ -3,7 +3,7 @@
 //! without waiting (continuous batching — new requests join mid-flight,
 //! vLLM-style, scaled to a single-device edge serving loop).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use crate::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::Duration;
 
 use super::Submission;

@@ -1,0 +1,207 @@
+//! Submit-side admission gate shared between client threads and the
+//! round loop.
+//!
+//! This is the only coordinator state touched from OUTSIDE the
+//! coordinator thread (every client thread calling
+//! [`Coordinator::submit`](super::Coordinator::submit) races through
+//! it), so it is kept small, lock-free, and — since PR 7 — built on
+//! [`crate::sync`] atomics so the loom model tests below can exhaustively
+//! check the reserve/release protocol under every interleaving.
+//!
+//! Protocol:
+//! - `try_reserve` claims a queue slot before the submission is sent
+//!   down the mpsc channel.  With a bound, the claim is a CAS loop so a
+//!   burst of concurrent submitters can never overshoot `max_queue`
+//!   (checked by `loom_gate_reserve_never_overshoots`).
+//! - `release` returns the slot once the round loop admits (or sheds)
+//!   the submission, or when the send itself fails.
+//! - `begin_drain` / `is_draining` is a Release/Acquire flag pair: the
+//!   shutdown path flips it, submitters observe it before reserving.
+//! - `note_round_nanos` / `round_nanos` is a monotonic-ish EWMA of round
+//!   wall time feeding the `retry_after_ms` backoff hint; Relaxed is
+//!   enough because the value is advisory (a hint, never a correctness
+//!   input).
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Submit-side state shared between client threads and the round loop.
+pub(crate) struct Gate {
+    /// Submissions sent but not yet admitted into sessions.
+    queued: AtomicUsize,
+    /// Shutdown flag: reject new work, drain in-flight.
+    draining: AtomicBool,
+    /// EWMA of recent round wall time (nanos) — the `retry_after_ms`
+    /// estimate (`0` until the first round completes).
+    round_nanos: AtomicU64,
+}
+
+impl Gate {
+    // `new` rather than `Default`/const-init: loom atomics have neither
+    // a const constructor nor `Default`.
+    pub(crate) fn new() -> Self {
+        Self {
+            queued: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            round_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim a queue slot.  `max_queue == 0` means unbounded: always
+    /// succeeds.  Otherwise a CAS loop enforces the bound exactly —
+    /// concurrent claimers cannot overshoot it.
+    pub(crate) fn try_reserve(&self, max_queue: usize) -> bool {
+        if max_queue == 0 {
+            self.queued.fetch_add(1, Ordering::AcqRel);
+            return true;
+        }
+        let mut depth = self.queued.load(Ordering::Relaxed);
+        loop {
+            if depth >= max_queue {
+                return false;
+            }
+            match self.queued.compare_exchange_weak(
+                depth,
+                depth + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(d) => depth = d,
+            }
+        }
+    }
+
+    /// Return a slot claimed by [`Gate::try_reserve`].  Callers uphold
+    /// the pairing (exactly one release per successful reserve); an
+    /// unpaired release would underflow and wrap the depth gauge.
+    pub(crate) fn release(&self) {
+        self.queued.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Current queue depth (advisory: a racing reserve/release may move
+    /// it immediately — used for the gauge metric and the backoff hint).
+    pub(crate) fn depth(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub(crate) fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Fold one round's wall time (nanos) into the EWMA
+    /// (`next = (3*prev + sample) / 4`; the first sample seeds it).
+    /// Only the round loop calls this, so load-then-store is not a race.
+    pub(crate) fn note_round_nanos(&self, sample: u64) {
+        let prev = self.round_nanos.load(Ordering::Relaxed);
+        let next = if prev == 0 { sample } else { (3 * prev + sample) / 4 };
+        // `.max(1)` so a sub-nanosecond round cannot reset the
+        // "no history yet" sentinel
+        self.round_nanos.store(next.max(1), Ordering::Relaxed);
+    }
+
+    /// EWMA round wall time in nanos (`0` = no round has completed).
+    pub(crate) fn round_nanos(&self) -> u64 {
+        self.round_nanos.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::Gate;
+
+    #[test]
+    fn unbounded_reserve_always_succeeds() {
+        let g = Gate::new();
+        for i in 0..100 {
+            assert!(g.try_reserve(0));
+            assert_eq!(g.depth(), i + 1);
+        }
+    }
+
+    #[test]
+    fn bounded_reserve_sheds_at_limit() {
+        let g = Gate::new();
+        assert!(g.try_reserve(2));
+        assert!(g.try_reserve(2));
+        assert!(!g.try_reserve(2));
+        assert_eq!(g.depth(), 2);
+        g.release();
+        assert!(g.try_reserve(2));
+        assert!(!g.try_reserve(2));
+    }
+
+    #[test]
+    fn drain_flag_round_trips() {
+        let g = Gate::new();
+        assert!(!g.is_draining());
+        g.begin_drain();
+        assert!(g.is_draining());
+    }
+
+    #[test]
+    fn round_ewma_seeds_then_smooths() {
+        let g = Gate::new();
+        assert_eq!(g.round_nanos(), 0);
+        g.note_round_nanos(1000);
+        assert_eq!(g.round_nanos(), 1000);
+        g.note_round_nanos(2000);
+        assert_eq!(g.round_nanos(), (3 * 1000 + 2000) / 4);
+        // a zero sample cannot re-arm the "no history" sentinel
+        let g2 = Gate::new();
+        g2.note_round_nanos(0);
+        assert_eq!(g2.round_nanos(), 1);
+    }
+}
+
+// Loom model tests (run by the CI `loom` job with
+// `RUSTFLAGS="--cfg loom" cargo test --lib --release loom_`): exhaustive
+// interleaving checks of the reserve/release CAS protocol.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::Gate;
+    use crate::sync::Arc;
+
+    /// Two threads race `try_reserve(1)`: exactly one may win, and the
+    /// depth must equal the number of winners (never overshooting the
+    /// bound, never losing a claim).
+    #[test]
+    fn loom_gate_reserve_never_overshoots() {
+        loom::model(|| {
+            let gate = Arc::new(Gate::new());
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let g = Arc::clone(&gate);
+                    loom::thread::spawn(move || g.try_reserve(1))
+                })
+                .collect();
+            let wins = handles.into_iter().filter(|h| h.join().unwrap()).count();
+            assert_eq!(wins, 1, "exactly one of two racers may claim the single slot");
+            assert_eq!(gate.depth(), 1);
+        });
+    }
+
+    /// A release concurrent with a racing reserve: the racer either sees
+    /// the slot free (claims it) or full (sheds) — but the final depth
+    /// is always consistent with the set of successful claims.
+    #[test]
+    fn loom_gate_release_frees_slot_for_racer() {
+        loom::model(|| {
+            let gate = Arc::new(Gate::new());
+            assert!(gate.try_reserve(1));
+            let g = Arc::clone(&gate);
+            let racer = loom::thread::spawn(move || g.try_reserve(1));
+            gate.release();
+            let won = racer.join().unwrap();
+            let expect = if won { 1 } else { 0 };
+            assert_eq!(gate.depth(), expect);
+            if !won {
+                // the slot is free after both threads are done
+                assert!(gate.try_reserve(1));
+            }
+        });
+    }
+}

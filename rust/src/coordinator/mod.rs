@@ -63,11 +63,9 @@
 //! thread stays the only place sessions are mutated between rounds.
 
 pub mod batcher;
+mod gate;
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -79,8 +77,12 @@ use crate::engine::session::Session;
 use crate::engine::state_cache::StateCache;
 use crate::engine::RwkvEngine;
 use crate::metrics::Registry;
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::Arc;
 use crate::testutil::faults::FaultPlan;
 use batcher::{BatchPolicy, DynamicBatcher};
+use gate::Gate;
 
 pub use crate::engine::session::FinishReason;
 
@@ -296,18 +298,6 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// Submit-side state shared between client threads and the round loop.
-#[derive(Default)]
-struct Gate {
-    /// Submissions sent but not yet admitted into sessions.
-    queued: AtomicUsize,
-    /// Shutdown flag: reject new work, drain in-flight.
-    draining: AtomicBool,
-    /// EWMA of recent round wall time (nanos) — the `retry_after_ms`
-    /// estimate (`0` until the first round completes).
-    round_nanos: AtomicU64,
-}
-
 pub struct Coordinator {
     tx: Sender<Submission>,
     handle: Option<JoinHandle<()>>,
@@ -358,7 +348,7 @@ impl Coordinator {
         let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
         let metrics = Arc::new(Registry::new());
         let m2 = Arc::clone(&metrics);
-        let gate = Arc::new(Gate::default());
+        let gate = Arc::new(Gate::new());
         let g2 = Arc::clone(&gate);
         let admission = cfg.admission;
         let handle = std::thread::Builder::new()
@@ -403,40 +393,25 @@ impl Coordinator {
         tx: Sender<Event>,
         cancel: Arc<AtomicBool>,
     ) -> std::result::Result<(), RejectReason> {
-        if self.gate.draining.load(Ordering::Acquire) {
+        if self.gate.is_draining() {
             return Err(RejectReason::ShuttingDown);
         }
         let limit = self.admission.max_prompt_tokens;
         if limit > 0 && req.prompt.len() > limit {
             return Err(RejectReason::PromptTooLong { tokens: req.prompt.len(), limit });
         }
-        // reserve a queue slot (CAS so a burst cannot overshoot the bound)
-        if self.admission.max_queue > 0 {
-            let mut depth = self.gate.queued.load(Ordering::Relaxed);
-            loop {
-                if depth >= self.admission.max_queue {
-                    return Err(RejectReason::Overloaded);
-                }
-                match self.gate.queued.compare_exchange_weak(
-                    depth,
-                    depth + 1,
-                    Ordering::AcqRel,
-                    Ordering::Relaxed,
-                ) {
-                    Ok(_) => break,
-                    Err(d) => depth = d,
-                }
-            }
-        } else {
-            self.gate.queued.fetch_add(1, Ordering::AcqRel);
+        // reserve a queue slot (a CAS loop inside the gate, so a burst
+        // cannot overshoot the bound — loom-checked in `gate.rs`)
+        if !self.gate.try_reserve(self.admission.max_queue) {
+            return Err(RejectReason::Overloaded);
         }
-        self.metrics.set("queue_depth", self.gate.queued.load(Ordering::Relaxed) as u64);
+        self.metrics.set("queue_depth", self.gate.depth() as u64);
         let ms = req.deadline_ms.unwrap_or(self.admission.default_deadline_ms);
         let deadline = (ms > 0).then(|| Instant::now() + Duration::from_millis(ms));
         let sub = Submission { req, tx, cancel, queued: crate::util::Stopwatch::start(), deadline };
         if self.tx.send(sub).is_err() {
             // coordinator thread exited: release the slot, surface it
-            self.gate.queued.fetch_sub(1, Ordering::AcqRel);
+            self.gate.release();
             return Err(RejectReason::ShuttingDown);
         }
         Ok(())
@@ -445,12 +420,12 @@ impl Coordinator {
     /// Backoff hint for shed requests: queue depth × recent round time
     /// (a fresh coordinator with no round history suggests 50 ms).
     fn retry_after_ms(&self) -> u64 {
-        let ns = self.gate.round_nanos.load(Ordering::Relaxed);
+        let ns = self.gate.round_nanos();
         if ns == 0 {
             return 50;
         }
         let round_ms = (ns / 1_000_000).max(1);
-        let depth = self.gate.queued.load(Ordering::Relaxed) as u64;
+        let depth = self.gate.depth() as u64;
         (round_ms * (depth + 1)).clamp(1, 60_000)
     }
 
@@ -460,7 +435,7 @@ impl Coordinator {
     /// terminal `Done`), then the statefile is saved.  Non-blocking; use
     /// [`Coordinator::shutdown`] to also wait for the drain.
     pub fn begin_shutdown(&self) {
-        self.gate.draining.store(true, Ordering::Release);
+        self.gate.begin_drain();
     }
 
     /// [`Coordinator::begin_shutdown`] + wait for the coordinator thread
@@ -595,7 +570,7 @@ fn run_loop(
     let mut round_index: u64 = 0;
     let mut drain_deadline: Option<Instant> = None;
     loop {
-        let draining = gate.draining.load(Ordering::Acquire);
+        let draining = gate.is_draining();
         if draining && drain_deadline.is_none() {
             drain_deadline = Some(Instant::now() + Duration::from_millis(admission.drain_ms));
         }
@@ -604,8 +579,8 @@ fn run_loop(
             batcher::Admit::Closed if sessions.is_empty() => break,
             batcher::Admit::Requests(subs) => {
                 for s in subs {
-                    gate.queued.fetch_sub(1, Ordering::AcqRel);
-                    metrics.set("queue_depth", gate.queued.load(Ordering::Relaxed) as u64);
+                    gate.release();
+                    metrics.set("queue_depth", gate.depth() as u64);
                     metrics.observe("queue_wait_secs", s.queued.elapsed_secs());
                     if draining {
                         // raced the shutdown flag into the queue: shed,
@@ -671,7 +646,7 @@ fn run_loop(
             if draining {
                 // drained: shed whatever is still queued, then exit
                 while let Ok(s) = rx.try_recv() {
-                    gate.queued.fetch_sub(1, Ordering::AcqRel);
+                    gate.release();
                     metrics.inc("requests_rejected", 1);
                     let _ = s.tx.send(Event::Rejected {
                         reason: RejectReason::ShuttingDown,
@@ -698,7 +673,7 @@ fn run_loop(
             }
         }
         // SLO degradation: decode-priority under queue pressure
-        let queued_now = gate.queued.load(Ordering::Relaxed);
+        let queued_now = gate.depth();
         engine.cfg.prefill_chunk = degraded_chunk(base_chunk, queued_now, sessions.len(), max_live);
         // test-only fault hook: deterministic slow rounds / round errors
         let injected = match faults.as_ref() {
@@ -744,10 +719,7 @@ fn run_loop(
         };
         let round_secs = round.elapsed_secs();
         // EWMA round time feeds the submit-side retry_after_ms hint
-        let sample = (round_secs * 1e9) as u64;
-        let prev = gate.round_nanos.load(Ordering::Relaxed);
-        let next = if prev == 0 { sample } else { (3 * prev + sample) / 4 };
-        gate.round_nanos.store(next.max(1), Ordering::Relaxed);
+        gate.note_round_nanos((round_secs * 1e9) as u64);
         metrics.inc("rounds", 1);
         metrics.observe("round_seconds", round_secs);
         metrics.inc("round_weight_bytes", report.round_weight_bytes);

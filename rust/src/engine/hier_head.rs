@@ -222,7 +222,9 @@ impl HierHead {
         {
             let view = SharedSliceMut::new(&mut scores);
             par.run(jobs.len(), &|_lane, k0, k1| {
-                // Safety: lanes write disjoint score positions.
+                view.debug_claim(k0, k1);
+                // SAFETY: each lane writes only score positions [k0, k1)
+                // — disjoint ranges, claimed above in debug builds.
                 let scores = unsafe { view.get() };
                 for (k, &(s, tok)) in jobs.iter().enumerate().take(k1).skip(k0) {
                     let s = s as usize;

@@ -979,11 +979,17 @@ impl RwkvEngine {
             let st_view = SharedSliceMut::new(states);
             let (rr, kk, vv, xa) = (&bb.r[..], &bb.k[..], &bb.v[..], &bb.xa[..]);
             par.run(spans.len(), &|_lane, sp0, sp1| {
-                // Safety: a segment's rows and its session state are
+                g_view.debug_claim(sp0, sp1);
+                out_view.debug_claim(sp0, sp1);
+                st_view.debug_claim(sp0, sp1);
+                // SAFETY: a segment's rows and its session state are
                 // touched by exactly one lane (spans partition the rows,
-                // sessions are unique per span).
+                // sessions are unique per span); the span-range claims
+                // above assert the partition in debug builds.
                 let g = unsafe { g_view.get() };
+                // SAFETY: as above — disjoint span ranges per lane.
                 let att_out = unsafe { out_view.get() };
+                // SAFETY: as above — one session state per span.
                 let states = unsafe { st_view.get() };
                 for sp in &spans[sp0..sp1] {
                     let st = &mut states[sp.sess];
@@ -1087,9 +1093,14 @@ impl RwkvEngine {
                     let lane_view = SharedSliceMut::new(&mut bb.pred_lanes);
                     let t1 = &bb.t1[..];
                     par.run(n, &|lane, r0, r1| {
-                        // Safety: each row's index set is written by one
-                        // lane; each lane uses its own scratch entry.
+                        slot_view.debug_claim(r0, r1);
+                        lane_view.debug_claim(lane, lane + 1);
+                        // SAFETY: each row's index set is written by
+                        // exactly one lane (disjoint [r0, r1) ranges,
+                        // claimed above in debug builds).
                         let slots = unsafe { slot_view.get() };
+                        // SAFETY: scratch entry `lane` belongs to this
+                        // lane alone (claimed above).
                         let ps = &mut unsafe { lane_view.get() }[lane];
                         for r in r0..r1 {
                             pred.predict_into(

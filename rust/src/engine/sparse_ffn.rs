@@ -308,9 +308,14 @@ pub fn sparse_ffn_apply_batch(
         let cur_view = SharedSliceMut::new(cursors.as_mut_slice());
         let wk_ref = &wk_t;
         par.run(u, &|lane, u0, u1| {
-            // Safety: lanes write disjoint `uk` ranges of `h` and their
-            // own `cursors` stripe.
+            h_view.debug_claim(u0, u1);
+            cur_view.debug_claim(lane, lane + 1);
+            // SAFETY: each lane writes only union positions [u0, u1) of
+            // `h` (every slot) — disjoint ranges, claimed above in debug
+            // builds.
             let h = unsafe { h_view.get() };
+            // SAFETY: cursor stripe `lane` belongs to this lane alone
+            // (claimed above).
             let cur = &mut unsafe { cur_view.get() }[lane * b..(lane + 1) * b];
             // re-seed each slot's merge cursor at this lane's range start
             // (slot sets are sorted subsets of the union)
@@ -339,7 +344,9 @@ pub fn sparse_ffn_apply_batch(
         let h_ref = &h[..];
         let wv_ref = &wv;
         par.run(b, &|_lane, s0, s1| {
-            // Safety: lanes own disjoint slot ranges of `outs`.
+            out_view.debug_claim(s0, s1);
+            // SAFETY: each lane owns slots [s0, s1) of `outs` — disjoint
+            // ranges, claimed above in debug builds.
             let outs = unsafe { out_view.get() };
             for s in s0..s1 {
                 let out = &mut outs[s * d..(s + 1) * d];

@@ -10,14 +10,15 @@
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
 use crate::io::{Manifest, RkvFile};
 use crate::metrics::{Group, MemTracker};
 use crate::pool::{Par, Task, ThreadPool};
+use crate::sync::{Arc, Mutex};
 use crate::tensor::{matmat_in_out_par, matvec_in_out, DType, Mat};
+use crate::util::cast::cast_slice_len;
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
 /// Component group of a tensor, by naming convention (export.py).
@@ -123,21 +124,21 @@ impl WeightStore {
                 Ok(2 * cols as u64)
             }
             DType::F32 => {
-                let raw = self.rkv.raw("emb")?;
-                let all = unsafe {
-                    std::slice::from_raw_parts(raw.as_ptr() as *const f32, raw.len() / 4)
-                };
-                let r = &all[token as usize * cols..(token as usize + 1) * cols];
+                let all = self.rkv.typed::<f32>("emb")?;
+                let row = token as usize;
+                let r = all
+                    .get(row * cols..(row + 1) * cols)
+                    .ok_or_else(|| anyhow::anyhow!("emb row {row} out of range"))?;
                 out.copy_from_slice(r);
                 Ok(4 * cols as u64)
             }
             DType::I8 => {
-                let raw = self.rkv.raw("emb")?;
+                let all = self.rkv.typed::<i8>("emb")?;
                 let scale = self.vec("emb.scale")?;
-                let q = unsafe {
-                    std::slice::from_raw_parts(raw.as_ptr() as *const i8, raw.len())
-                };
-                let r = &q[token as usize * cols..(token as usize + 1) * cols];
+                let row = token as usize;
+                let r = all
+                    .get(row * cols..(row + 1) * cols)
+                    .ok_or_else(|| anyhow::anyhow!("emb row {row} out of range"))?;
                 for ((o, &qv), &s) in out.iter_mut().zip(r).zip(scale.iter()) {
                     *o = qv as f32 * s;
                 }
@@ -154,19 +155,33 @@ impl WeightStore {
         if e.shape.len() != 2 {
             bail!("row_view on non-2D tensor {name}");
         }
+        let (rows, cols) = (e.shape[0], e.shape[1]);
         let scale = if e.dtype == DType::I8 {
             Some(self.rkv.vec_f32(&format!("{name}.scale"))?)
         } else {
             None
         };
-        Ok(RowView {
-            dtype: e.dtype,
-            rows: e.shape[0],
-            cols: e.shape[1],
-            raw: self.rkv.raw(name)?,
-            scale,
-        })
+        // Typed ONCE here through the checked cast helpers (length is
+        // `rows * cols` by the `.rkv` parse invariant, alignment by the
+        // writer's 64-byte payload alignment); every later row access is
+        // safe indexed slicing — no unsafe on the per-token hot path.
+        let raw = self.rkv.raw(name)?;
+        let data = match e.dtype {
+            DType::F16 => RowData::F16(cast_slice_len::<u16>(raw, rows * cols)?),
+            DType::F32 => RowData::F32(cast_slice_len::<f32>(raw, rows * cols)?),
+            DType::I8 => RowData::I8(cast_slice_len::<i8>(raw, rows * cols)?),
+            other => bail!("row_view dtype {other:?} unsupported for {name}"),
+        };
+        Ok(RowView { dtype: e.dtype, rows, cols, data, scale })
     }
+}
+
+/// The storage-precision payload behind a [`RowView`], typed at
+/// construction so row access needs no casting.
+enum RowData<'a> {
+    F16(&'a [u16]),
+    F32(&'a [f32]),
+    I8(&'a [i8]),
 }
 
 /// Borrowed row-major matrix view in storage precision.
@@ -174,7 +189,7 @@ pub struct RowView<'a> {
     pub dtype: DType,
     pub rows: usize,
     pub cols: usize,
-    raw: &'a [u8],
+    data: RowData<'a>,
     /// Per-row scale (i8, row-per-output tensors like wk_t/head) OR
     /// per-column scale (i8, (in,out) tensors like wv) — consumer knows.
     pub scale: Option<Vec<f32>>,
@@ -188,27 +203,14 @@ impl<'a> RowView<'a> {
     /// `dot(row_j, x)` with per-ROW scale applied for i8.
     pub fn dot_row(&self, j: usize, x: &[f32]) -> f32 {
         debug_assert_eq!(x.len(), self.cols);
-        match self.dtype {
-            DType::F16 => {
-                let all = unsafe {
-                    std::slice::from_raw_parts(self.raw.as_ptr() as *const u16, self.rows * self.cols)
-                };
-                crate::tensor::dot_f16(&all[j * self.cols..(j + 1) * self.cols], x)
-            }
-            DType::F32 => {
-                let all = unsafe {
-                    std::slice::from_raw_parts(self.raw.as_ptr() as *const f32, self.rows * self.cols)
-                };
-                crate::tensor::dot_f32(&all[j * self.cols..(j + 1) * self.cols], x)
-            }
-            DType::I8 => {
-                let all = unsafe {
-                    std::slice::from_raw_parts(self.raw.as_ptr() as *const i8, self.rows * self.cols)
-                };
+        let lo = j * self.cols;
+        match &self.data {
+            RowData::F16(all) => crate::tensor::dot_f16(&all[lo..lo + self.cols], x),
+            RowData::F32(all) => crate::tensor::dot_f32(&all[lo..lo + self.cols], x),
+            RowData::I8(all) => {
                 let s = self.scale.as_ref().map(|s| s[j]).unwrap_or(1.0);
-                s * crate::tensor::dot_i8(&all[j * self.cols..(j + 1) * self.cols], x)
+                s * crate::tensor::dot_i8(&all[lo..lo + self.cols], x)
             }
-            _ => f32::NAN,
         }
     }
 
@@ -216,32 +218,23 @@ impl<'a> RowView<'a> {
     /// via [`RowView::apply_col_scale`] after accumulation).
     pub fn accum_row(&self, j: usize, h: f32, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.cols);
-        match self.dtype {
-            DType::F16 => {
-                let all = unsafe {
-                    std::slice::from_raw_parts(self.raw.as_ptr() as *const u16, self.rows * self.cols)
-                };
-                for (o, &v) in out.iter_mut().zip(&all[j * self.cols..(j + 1) * self.cols]) {
+        let lo = j * self.cols;
+        match &self.data {
+            RowData::F16(all) => {
+                for (o, &v) in out.iter_mut().zip(&all[lo..lo + self.cols]) {
                     *o += h * f16_to_f32(v);
                 }
             }
-            DType::F32 => {
-                let all = unsafe {
-                    std::slice::from_raw_parts(self.raw.as_ptr() as *const f32, self.rows * self.cols)
-                };
-                for (o, &v) in out.iter_mut().zip(&all[j * self.cols..(j + 1) * self.cols]) {
+            RowData::F32(all) => {
+                for (o, &v) in out.iter_mut().zip(&all[lo..lo + self.cols]) {
                     *o += h * v;
                 }
             }
-            DType::I8 => {
-                let all = unsafe {
-                    std::slice::from_raw_parts(self.raw.as_ptr() as *const i8, self.rows * self.cols)
-                };
-                for (o, &v) in out.iter_mut().zip(&all[j * self.cols..(j + 1) * self.cols]) {
+            RowData::I8(all) => {
+                for (o, &v) in out.iter_mut().zip(&all[lo..lo + self.cols]) {
                     *o += h * v as f32;
                 }
             }
-            _ => {}
         }
     }
 

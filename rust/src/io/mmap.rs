@@ -13,6 +13,12 @@
 //! still reads block N).  [`Mmap::advise_willneed`] hands the kernel an
 //! explicit readahead hint for a byte range so a background prefetch
 //! starts disk I/O for a whole block instead of faulting page by page.
+//!
+//! Two backings share the same API: the real `mmap`, and an owned
+//! 8-byte-aligned in-memory copy ([`Mmap::from_bytes`]).  Under Miri —
+//! which has no `mmap`/`madvise` — `open` transparently reads the file
+//! into the owned backing, so every `io` test runs under the interpreter
+//! unchanged; the fuzzers feed mutated buffers through the same path.
 
 use std::fs::File;
 use std::os::unix::io::AsRawFd;
@@ -20,24 +26,48 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-pub struct Mmap {
-    ptr: *mut libc::c_void,
-    len: usize,
+use crate::util::cast::AlignedBytes;
+
+enum Backing {
+    /// A live `PROT_READ`/`MAP_PRIVATE` mapping, unmapped exactly once in
+    /// `Drop`.
+    Map { ptr: *mut libc::c_void, len: usize },
+    /// Owned aligned copy: Miri runs, in-memory checkpoints, fuzz inputs.
+    Owned(AlignedBytes),
 }
 
-// SAFETY: the mapping is read-only (PROT_READ, MAP_PRIVATE) for its
-// whole lifetime, so shared references across threads are sound.
+pub struct Mmap {
+    backing: Backing,
+}
+
+// SAFETY: `Mmap` is an immutable byte buffer for its entire lifetime.
+// The `Map` backing is PROT_READ/MAP_PRIVATE — no API returns `&mut`,
+// nothing ever writes through the mapping, and `munmap` runs exactly once
+// in `Drop`, strictly after every `bytes()` borrow has ended (they borrow
+// `&self`).  The `Owned` backing is a plain heap buffer with the same
+// read-only API.  Concurrent readers therefore cannot race; moving the
+// struct between threads moves only the pointer/length.  (A concurrent
+// truncation of the *file* by another process can SIGBUS a mapped read —
+// an accepted operational hazard of file mapping, not a memory-safety
+// issue introduced by these impls.)
 unsafe impl Send for Mmap {}
+// SAFETY: see `Send` above — the shared-reference API is read-only.
 unsafe impl Sync for Mmap {}
 
 impl Mmap {
     pub fn open(path: &Path) -> Result<Self> {
+        if cfg!(miri) {
+            // Miri cannot model mmap; an owned copy preserves the API
+            // (and the alignment guarantees) for interpreted tests.
+            return Self::open_copied(path);
+        }
         let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
         let len = file.metadata()?.len() as usize;
         if len == 0 {
             bail!("cannot mmap empty file {}", path.display());
         }
-        // SAFETY: valid fd, length checked; mapping is read-only/private.
+        // SAFETY: valid fd, non-zero length; the kernel picks the address
+        // (null hint) and the mapping is read-only/private.
         let ptr = unsafe {
             libc::mmap(
                 std::ptr::null_mut(),
@@ -51,53 +81,90 @@ impl Mmap {
         if ptr == libc::MAP_FAILED {
             bail!("mmap({}) failed: {}", path.display(), std::io::Error::last_os_error());
         }
-        Ok(Self { ptr, len })
+        Ok(Self { backing: Backing::Map { ptr, len } })
+    }
+
+    /// Read the whole file into the owned backing (the Miri path; also
+    /// useful for tiny checkpoints where mapping buys nothing).
+    fn open_copied(path: &Path) -> Result<Self> {
+        let data = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if data.is_empty() {
+            bail!("cannot mmap empty file {}", path.display());
+        }
+        Ok(Self::from_bytes(&data))
+    }
+
+    /// An in-memory "mapping" over a copy of `data` (8-byte aligned, so
+    /// typed views behave exactly like the mmap'd file, which is
+    /// page-aligned).  Used by the parser fuzzers and Miri tests.
+    pub fn from_bytes(data: &[u8]) -> Self {
+        Self { backing: Backing::Owned(AlignedBytes::from_slice(data)) }
     }
 
     pub fn bytes(&self) -> &[u8] {
-        // SAFETY: ptr/len come from a successful mmap; mapping lives as
-        // long as self.
-        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        match &self.backing {
+            // SAFETY: ptr/len come from a successful mmap that lives as
+            // long as self; the mapping is never written through or
+            // remapped, so a shared byte view is sound for `&self`'s
+            // lifetime.
+            Backing::Map { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr as *const u8, *len)
+            },
+            Backing::Owned(a) => a.bytes(),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.len
+        match &self.backing {
+            Backing::Map { len, .. } => *len,
+            Backing::Owned(a) => a.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// Best-effort `madvise(MADV_WILLNEED)` on `[offset, offset + len)`:
     /// asks the kernel to start reading the backing pages now, so a
     /// later copy out of the range faults warm pages instead of cold
-    /// disk.  Bounds are clamped and page-aligned; failures are ignored
-    /// (the copy still works, just colder).
+    /// disk.  Bounds are overflow-checked and clamped to the mapping,
+    /// the start is page-aligned; failures are ignored (the copy still
+    /// works, just colder).  A no-op on the owned backing.
     pub fn advise_willneed(&self, offset: usize, len: usize) {
-        if len == 0 || offset >= self.len {
+        let Backing::Map { ptr, len: map_len } = &self.backing else {
+            return;
+        };
+        if len == 0 || offset >= *map_len {
             return;
         }
         // SAFETY: sysconf is always safe to call.
         let page = unsafe { libc::sysconf(libc::_SC_PAGESIZE) }.max(1) as usize;
         let start = offset - offset % page;
-        let end = (offset + len).min(self.len);
-        // SAFETY: [start, end) lies inside the live mapping; madvise with
-        // WILLNEED never alters the mapping's contents or protection.
+        // `offset < map_len` already; saturating add caps a huge `len`
+        // request at the end of the mapping instead of wrapping around.
+        let end = offset.saturating_add(len).min(*map_len);
+        // SAFETY: start < end <= map_len, so [start, end) lies inside the
+        // live mapping; madvise with WILLNEED never alters the mapping's
+        // contents or protection.
         unsafe {
             libc::madvise(
-                (self.ptr as *mut u8).add(start) as *mut libc::c_void,
+                (*ptr as *mut u8).add(start) as *mut libc::c_void,
                 end - start,
                 libc::MADV_WILLNEED,
             );
         }
     }
-
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
 }
 
 impl Drop for Mmap {
     fn drop(&mut self) {
-        // SAFETY: ptr/len from mmap; unmapped exactly once.
-        unsafe {
-            libc::munmap(self.ptr, self.len);
+        if let Backing::Map { ptr, len } = &self.backing {
+            // SAFETY: ptr/len from a successful mmap; Drop runs once, and
+            // no borrow of the mapping can outlive self.
+            unsafe {
+                libc::munmap(*ptr, *len);
+            }
         }
     }
 }
@@ -127,6 +194,31 @@ mod tests {
         let path = dir.join(format!("rkvlite-empty-{}", std::process::id()));
         File::create(&path).unwrap();
         assert!(Mmap::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn owned_backing_matches_source() {
+        let m = Mmap::from_bytes(b"in-memory map");
+        assert_eq!(m.bytes(), b"in-memory map");
+        assert_eq!(m.len(), 13);
+        assert!(!m.is_empty());
+        // advise is a documented no-op here — including absurd ranges
+        m.advise_willneed(usize::MAX - 1, usize::MAX);
+    }
+
+    #[test]
+    fn advise_overflow_ranges_are_safe() {
+        let dir = std::env::temp_dir().join(format!("rkvlite-adv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("adv.bin");
+        std::fs::write(&path, vec![7u8; 8192]).unwrap();
+        let m = Mmap::open(&path).unwrap();
+        // offset + len would overflow usize: must clamp, not wrap
+        m.advise_willneed(4096, usize::MAX);
+        m.advise_willneed(usize::MAX, 1); // offset past the end: no-op
+        m.advise_willneed(0, 0); // empty: no-op
+        assert_eq!(m.bytes()[0], 7);
         std::fs::remove_file(&path).ok();
     }
 }

@@ -7,5 +7,5 @@ pub mod statefile;
 
 pub use manifest::Manifest;
 pub use mmap::Mmap;
-pub use rkv::{write_rkv, RkvFile, RkvTensor, TensorEntry};
-pub use statefile::{read_statefile, write_statefile};
+pub use rkv::{rkv_bytes, write_rkv, RkvFile, RkvTensor, TensorEntry};
+pub use statefile::{read_statefile, read_statefile_bytes, statefile_bytes, write_statefile};

@@ -10,15 +10,23 @@
 //!                      u32 dims[ndim], u64 offset(rel), u64 nbytes }
 //! data   64-byte-aligned tensor payloads
 //! ```
+//!
+//! The checkpoint is *untrusted input* (fuzzed in `tests/fuzz_smoke.rs`):
+//! every header field is cursor-checked, every entry's payload range is
+//! overflow-checked against the file, and the shape-derived element count
+//! must equal the stored byte count — so a malformed file is an `Err`
+//! from [`RkvFile::open`], never a panic and never an out-of-bounds view
+//! in a later accessor.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::io::Mmap;
 use crate::tensor::{DType, Mat};
+use crate::util::cast::{cast_slice, Pod};
 use crate::util::f16::f16_to_f32;
 
 #[derive(Clone, Debug)]
@@ -36,57 +44,124 @@ impl TensorEntry {
     }
 }
 
+/// Bounds-checked little-endian reader over the header bytes: truncated
+/// or oversized fields surface as `Err`, never slice panics.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| anyhow!("rkv index truncated at byte {} (want {n} more)", self.pos))?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+}
+
+/// Dimensions beyond this are corruption, not tensors (export writes ≤2).
+const MAX_NDIM: usize = 8;
+
 pub struct RkvFile {
     map: Arc<Mmap>,
     data_offset: usize,
     index: BTreeMap<String, TensorEntry>,
 }
 
-fn rd_u16(b: &[u8], o: usize) -> u16 {
-    u16::from_le_bytes([b[o], b[o + 1]])
-}
-fn rd_u32(b: &[u8], o: usize) -> u32 {
-    u32::from_le_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]])
-}
-fn rd_u64(b: &[u8], o: usize) -> u64 {
-    let mut a = [0u8; 8];
-    a.copy_from_slice(&b[o..o + 8]);
-    u64::from_le_bytes(a)
-}
-
 impl RkvFile {
     pub fn open(path: &Path) -> Result<Self> {
         let map = Arc::new(Mmap::open(path)?);
+        Self::parse(map).with_context(|| format!("parsing rkv {}", path.display()))
+    }
+
+    /// Parse an in-memory checkpoint image (fuzzers, tests, future
+    /// network transports) through the identical validation path.
+    pub fn open_bytes(data: &[u8]) -> Result<Self> {
+        Self::parse(Arc::new(Mmap::from_bytes(data)))
+    }
+
+    fn parse(map: Arc<Mmap>) -> Result<Self> {
         let b = map.bytes();
         if b.len() < 20 || &b[0..4] != b"RKV1" {
-            bail!("{}: not an RKV1 file", path.display());
+            bail!("not an RKV1 file");
         }
-        let version = rd_u32(b, 4);
+        let mut cur = Cursor { b, pos: 4 };
+        let version = cur.u32()?;
         if version != 1 {
             bail!("unsupported rkv version {version}");
         }
-        let n = rd_u32(b, 8) as usize;
-        let data_offset = rd_u64(b, 12) as usize;
-        let mut pos = 20usize;
+        let n = cur.u32()? as usize;
+        let data_offset64 = cur.u64()?;
+        if data_offset64 > b.len() as u64 {
+            bail!("data offset {data_offset64} exceeds file size {}", b.len());
+        }
+        let data_offset = data_offset64 as usize;
         let mut index = BTreeMap::new();
-        for _ in 0..n {
-            let nl = rd_u16(b, pos) as usize;
-            pos += 2;
-            let name = std::str::from_utf8(&b[pos..pos + nl])?.to_string();
-            pos += nl;
-            let dtype = DType::from_code(b[pos])?;
-            let ndim = b[pos + 1] as usize;
-            pos += 2;
+        for i in 0..n {
+            let nl = cur.u16()? as usize;
+            let name = std::str::from_utf8(cur.take(nl)?)
+                .with_context(|| format!("tensor {i}: name is not UTF-8"))?
+                .to_string();
+            let dtype = DType::from_code(cur.u8()?)?;
+            let ndim = cur.u8()? as usize;
+            if ndim > MAX_NDIM {
+                bail!("tensor '{name}': implausible rank {ndim}");
+            }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(rd_u32(b, pos) as usize);
-                pos += 4;
+                shape.push(cur.u32()? as usize);
             }
-            let offset = rd_u64(b, pos);
-            let nbytes = rd_u64(b, pos + 8);
-            pos += 16;
-            if data_offset as u64 + offset + nbytes > b.len() as u64 {
+            let offset = cur.u64()?;
+            let nbytes = cur.u64()?;
+            // payload window must sit inside the file — checked without
+            // u64 wrap-around
+            let end = data_offset64
+                .checked_add(offset)
+                .and_then(|v| v.checked_add(nbytes))
+                .ok_or_else(|| anyhow!("tensor '{name}': offset arithmetic overflows"))?;
+            if end > b.len() as u64 {
                 bail!("tensor '{name}' exceeds file bounds");
+            }
+            // the shape must account for every stored byte: this is what
+            // lets typed views be length-checked instead of trusted
+            let numel = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| anyhow!("tensor '{name}': element count overflows"))?;
+            let expect_bytes = (numel as u64)
+                .checked_mul(dtype.size() as u64)
+                .ok_or_else(|| anyhow!("tensor '{name}': byte count overflows"))?;
+            if expect_bytes != nbytes {
+                bail!(
+                    "tensor '{name}': shape {shape:?} x {dtype:?} wants {expect_bytes} bytes, \
+                     header says {nbytes}"
+                );
             }
             index.insert(
                 name.clone(),
@@ -114,21 +189,19 @@ impl RkvFile {
     pub fn raw(&self, name: &str) -> Result<&[u8]> {
         let e = self.entry(name)?;
         let start = self.data_offset + e.offset as usize;
-        Ok(&self.map.bytes()[start..start + e.nbytes as usize])
+        // the range was validated against the file at parse time; `get`
+        // keeps even a logic error here an Err, not a panic
+        self.map
+            .bytes()
+            .get(start..start + e.nbytes as usize)
+            .ok_or_else(|| anyhow!("tensor '{name}': payload range invalid"))
     }
 
-    fn typed<T: Copy>(&self, name: &str) -> Result<&[T]> {
-        let raw = self.raw(name)?;
-        let size = std::mem::size_of::<T>();
-        if raw.len() % size != 0 {
-            bail!("tensor '{name}' size not a multiple of element size");
-        }
-        if raw.as_ptr() as usize % std::mem::align_of::<T>() != 0 {
-            bail!("tensor '{name}' misaligned"); // export aligns to 64
-        }
-        // SAFETY: alignment and length checked; T is Copy/POD here (f32,
-        // u16, i8, i32) and the mapping outlives self.
-        Ok(unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const T, raw.len() / size) })
+    /// Typed zero-copy view.  Length is derived from (and checked
+    /// against) the stored bytes via `util::cast`, so a shape/payload
+    /// mismatch can never produce an oversized slice.
+    pub fn typed<T: Pod>(&self, name: &str) -> Result<&[T]> {
+        cast_slice::<T>(self.raw(name)?).with_context(|| format!("tensor '{name}'"))
     }
 
     /// Load a 1-D f32 vector (copies; counted by the caller's tracker).
@@ -175,8 +248,15 @@ impl RkvFile {
     /// Zero-copy row view of an f16 matrix (embedding cache fast path).
     pub fn row_f16(&self, name: &str, row: usize) -> Result<&[u16]> {
         let e = self.entry(name)?;
-        let cols = *e.shape.last().unwrap();
+        let cols = *e.shape.last().unwrap_or(&0);
+        if cols == 0 {
+            bail!("tensor '{name}': zero-width rows");
+        }
         let all = self.typed::<u16>(name)?;
+        let rows = all.len() / cols;
+        if row >= rows {
+            bail!("tensor '{name}': row {row} out of range (rows = {rows})");
+        }
         Ok(&all[row * cols..(row + 1) * cols])
     }
 
@@ -288,14 +368,14 @@ fn align_up(n: u64) -> u64 {
     n.div_ceil(ALIGN) * ALIGN
 }
 
-/// Write an `.rkv` checkpoint in the exact layout [`RkvFile::open`] reads
-/// (64-byte-aligned payloads, version 1).  Used by the synthetic-model
-/// test fixtures so the engine paths are exercised without `make
-/// artifacts`.
-pub fn write_rkv(path: &Path, tensors: &[RkvTensor]) -> Result<()> {
+/// Serialize tensors to the exact `.rkv` image [`RkvFile::open`] reads
+/// (64-byte-aligned payloads, version 1).  Split from [`write_rkv`] so
+/// the fuzz seeds and in-memory round-trip tests share the writer.
+pub fn rkv_bytes(tensors: &[RkvTensor]) -> Vec<u8> {
     // index size first: entries are variable-length (name + dims)
     let mut index_size = 0u64;
     for t in tensors {
+        assert!(t.name.len() <= u16::MAX as usize, "tensor name too long");
         index_size += 2 + t.name.len() as u64 + 2 + 4 * t.shape.len() as u64 + 16;
     }
     let data_offset = align_up(20 + index_size);
@@ -328,6 +408,14 @@ pub fn write_rkv(path: &Path, tensors: &[RkvTensor]) -> Result<()> {
         out.resize((data_offset + off) as usize, 0);
         out.extend_from_slice(&t.data);
     }
+    out
+}
+
+/// Write an `.rkv` checkpoint in the exact layout [`RkvFile::open`] reads.
+/// Used by the synthetic-model test fixtures so the engine paths are
+/// exercised without `make artifacts`.
+pub fn write_rkv(path: &Path, tensors: &[RkvTensor]) -> Result<()> {
+    let out = rkv_bytes(tensors);
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
@@ -340,16 +428,20 @@ pub fn write_rkv(path: &Path, tensors: &[RkvTensor]) -> Result<()> {
 mod tests {
     use super::*;
 
-    #[test]
-    fn write_then_read_round_trips() {
-        let dir = std::env::temp_dir().join(format!("rkv-rt-{}", std::process::id()));
-        let path = dir.join("t.rkv");
-        let tensors = vec![
+    fn sample_tensors() -> Vec<RkvTensor> {
+        vec![
             RkvTensor::f32("a.mat", vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
             RkvTensor::f16_from_f32("b.vec", vec![4], &[0.5, -1.0, 2.0, 8.0]),
             RkvTensor::i32("c.assign", vec![3], &[0, 2, 1]),
             RkvTensor::u8("d.sign", vec![1, 2], vec![0xAB, 0x01]),
-        ];
+        ]
+    }
+
+    #[test]
+    fn write_then_read_round_trips() {
+        let dir = std::env::temp_dir().join(format!("rkv-rt-{}", std::process::id()));
+        let path = dir.join("t.rkv");
+        let tensors = sample_tensors();
         write_rkv(&path, &tensors).unwrap();
         let f = RkvFile::open(&path).unwrap();
         assert_eq!(f.entry("a.mat").unwrap().shape, vec![2, 3]);
@@ -371,5 +463,38 @@ mod tests {
             "filtered readahead skips excluded tensors"
         );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_bytes_matches_open() {
+        let bytes = rkv_bytes(&sample_tensors());
+        let f = RkvFile::open_bytes(&bytes).unwrap();
+        assert_eq!(f.mat("a.mat").unwrap().to_f32_vec(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(f.names().count(), 4);
+    }
+
+    #[test]
+    fn row_f16_bounds_checked() {
+        let bytes = rkv_bytes(&[RkvTensor::f16_from_f32(
+            "emb",
+            vec![2, 3],
+            &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+        )]);
+        let f = RkvFile::open_bytes(&bytes).unwrap();
+        assert_eq!(f.row_f16("emb", 1).unwrap().len(), 3);
+        assert!(f.row_f16("emb", 2).is_err(), "row past the end must Err");
+    }
+
+    #[test]
+    fn shape_payload_mismatch_rejected_at_open() {
+        // shape says 2x3 f32 (24 bytes) but the header claims only 12
+        // stored bytes: accepted by the old parser, the root of the
+        // RowView out-of-bounds hazard — must now fail at open.
+        let mut bytes = rkv_bytes(&[RkvTensor::f32("m", vec![2, 3], &[0.0; 6])]);
+        // entry layout after 20-byte header: name_len(2) + "m"(1) +
+        // dtype(1) + ndim(1) + dims(8) + offset(8) -> nbytes at +21
+        let nbytes_pos = 20 + 2 + 1 + 1 + 1 + 8 + 8;
+        bytes[nbytes_pos..nbytes_pos + 8].copy_from_slice(&12u64.to_le_bytes());
+        assert!(RkvFile::open_bytes(&bytes).is_err());
     }
 }

@@ -71,10 +71,11 @@ fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
     }
 }
 
-/// Write `(token-prefix, state)` entries to `path` under a writer-chosen
-/// model `tag` (atomic enough for the cache's shutdown save: written as
-/// one buffer, one `fs::write`).
-pub fn write_statefile(path: &Path, tag: &str, entries: &[(&[u32], &RwkvState)]) -> Result<()> {
+/// Serialize `(token-prefix, state)` entries to the checksummed
+/// statefile image under a writer-chosen model `tag`.  Split from
+/// [`write_statefile`] so fuzz seeds and in-memory round trips share the
+/// writer.
+pub fn statefile_bytes(tag: &str, entries: &[(&[u32], &RwkvState)]) -> Result<Vec<u8>> {
     bail_on_long_tag(tag)?;
     let mut out: Vec<u8> = Vec::new();
     out.extend_from_slice(STATEFILE_MAGIC);
@@ -99,6 +100,14 @@ pub fn write_statefile(path: &Path, tag: &str, entries: &[(&[u32], &RwkvState)])
     }
     let digest = statefile_checksum(&out);
     put_u32(&mut out, digest);
+    Ok(out)
+}
+
+/// Write `(token-prefix, state)` entries to `path` under a writer-chosen
+/// model `tag` (atomic enough for the cache's shutdown save: written as
+/// one buffer, one `fs::write`).
+pub fn write_statefile(path: &Path, tag: &str, entries: &[(&[u32], &RwkvState)]) -> Result<()> {
+    let out = statefile_bytes(tag, entries)?;
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -144,10 +153,15 @@ impl<'a> Cursor<'a> {
     }
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        let bytes = n * RwkvState::ELEM_BYTES;
-        if self.pos + bytes > self.b.len() {
+        // `n` is derived from attacker-controlled shape fields: both the
+        // byte count and the end position are overflow-checked
+        let end = n
+            .checked_mul(RwkvState::ELEM_BYTES)
+            .and_then(|bytes| self.pos.checked_add(bytes));
+        let Some(end) = end.filter(|&e| e <= self.b.len()) else {
             bail!("statefile truncated at byte {}", self.pos);
-        }
+        };
+        let bytes = end - self.pos;
         let out = self.b[self.pos..self.pos + bytes]
             .chunks_exact(RwkvState::ELEM_BYTES)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -161,8 +175,18 @@ impl<'a> Cursor<'a> {
 /// `(token-prefix, state)` entry, in file order.
 pub fn read_statefile(path: &Path) -> Result<(String, Vec<(Vec<u32>, RwkvState)>)> {
     let all = std::fs::read(path).with_context(|| format!("reading statefile {}", path.display()))?;
+    read_statefile_bytes(&all, &path.display().to_string())
+}
+
+/// Parse an in-memory statefile image (`origin` labels errors).  The
+/// fuzzers drive this directly; [`read_statefile`] is a thin file
+/// wrapper.
+pub fn read_statefile_bytes(
+    all: &[u8],
+    origin: &str,
+) -> Result<(String, Vec<(Vec<u32>, RwkvState)>)> {
     if all.len() < 12 || &all[0..4] != STATEFILE_MAGIC {
-        bail!("{}: not a statefile (bad magic)", path.display());
+        bail!("{origin}: not a statefile (bad magic)");
     }
     // integrity first: the trailing word must match a digest of the body,
     // so truncation and silent bit-flips are rejected before any parsing
@@ -171,15 +195,14 @@ pub fn read_statefile(path: &Path) -> Result<(String, Vec<(Vec<u32>, RwkvState)>
     let computed = statefile_checksum(bytes);
     if stored != computed {
         bail!(
-            "{}: statefile checksum mismatch (stored {stored:#010x}, computed {computed:#010x}) — \
-             truncated or corrupt",
-            path.display()
+            "{origin}: statefile checksum mismatch (stored {stored:#010x}, computed \
+             {computed:#010x}) — truncated or corrupt"
         );
     }
     let mut cur = Cursor { b: bytes, pos: 4 };
     let version = cur.u32()?;
     if version != STATEFILE_VERSION {
-        bail!("{}: unsupported statefile version {version}", path.display());
+        bail!("{origin}: unsupported statefile version {version}");
     }
     let tag_len = cur.u16()? as usize;
     if tag_len > cur.remaining() {

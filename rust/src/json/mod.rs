@@ -90,7 +90,11 @@ impl Value {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no Infinity/NaN tokens; `null` keeps the
+                    // writer's output always re-parseable
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{}", n);
@@ -162,10 +166,18 @@ pub fn arr(v: Vec<Value>) -> Value {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// Containers deeper than this are rejected: the parser recurses per
+/// nesting level, and unbounded input (the TCP server feeds this parser)
+/// must not be able to overflow the stack — an uncatchable abort, unlike
+/// the `Err` this limit produces.  128 is far beyond any manifest or
+/// request this crate exchanges.
+pub const MAX_DEPTH: usize = 128;
+
 pub fn parse(text: &str) -> Result<Value> {
     let mut p = Parser {
         b: text.as_bytes(),
         i: 0,
+        depth: 0,
     };
     p.skip_ws();
     let v = p.value()?;
@@ -185,6 +197,7 @@ pub fn parse_file(path: &std::path::Path) -> Result<Value> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -209,8 +222,8 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Value> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Self::object),
+            Some(b'[') => self.nested(Self::array),
             Some(b'"') => Ok(Value::Str(self.string()?)),
             Some(b't') => self.lit("true", Value::Bool(true)),
             Some(b'f') => self.lit("false", Value::Bool(false)),
@@ -218,6 +231,18 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             other => bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.i),
         }
+    }
+
+    /// Run a container parser one nesting level down, enforcing
+    /// [`MAX_DEPTH`] (stack-overflow guard; see its docs).
+    fn nested(&mut self, f: fn(&mut Self) -> Result<Value>) -> Result<Value> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.i);
+        }
+        let r = f(self);
+        self.depth -= 1;
+        r
     }
 
     fn lit(&mut self, word: &str, v: Value) -> Result<Value> {
@@ -381,5 +406,45 @@ mod tests {
     fn writer_escapes_and_ints() {
         let v = obj(vec![("k", s("a\"b")), ("n", num(3.0))]);
         assert_eq!(v.to_string(), r#"{"k":"a\"b","n":3}"#);
+    }
+
+    #[test]
+    fn writer_emits_null_for_non_finite() {
+        // "inf"/"NaN" are not JSON; the writer's output must always
+        // re-parse (a property the json fuzz target checks at scale)
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let v = arr(vec![num(bad), num(1.0)]);
+            assert_eq!(v.to_string(), "[null,1]");
+            assert!(parse(&v.to_string()).is_ok());
+        }
+    }
+
+    #[test]
+    fn depth_limit_rejects_instead_of_overflowing() {
+        // exactly at the limit: fine
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(parse(&ok).is_ok());
+        // one past: Err
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        assert!(parse(&deep).is_err());
+        // pathological input must come back as Err, not a stack overflow
+        assert!(parse(&"[".repeat(200_000)).is_err());
+        assert!(parse(&"{\"a\":".repeat(50_000)).is_err());
+        // depth is per-path, not cumulative: wide-but-shallow stays legal
+        let wide = format!("[{}1]", "[1],".repeat(1_000));
+        assert!(parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn huge_numeric_literals_parse_to_infinity() {
+        // f64 semantics: 1e999 overflows to +inf — the *parser* accepts
+        // it; consumers (the server's request validation) must reject
+        // non-finite where it matters
+        let v = parse("1e999").unwrap();
+        assert_eq!(v.as_f64(), Some(f64::INFINITY));
+        let v = parse("-1e999").unwrap();
+        assert_eq!(v.as_f64(), Some(f64::NEG_INFINITY));
+        // and the writer round-trips them as null (valid JSON)
+        assert_eq!(parse(&v.to_string()).unwrap(), Value::Null);
     }
 }

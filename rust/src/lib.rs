@@ -30,6 +30,13 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::manual_memcpy)]
+// Unsafe discipline (docs/correctness.md): every `unsafe` block carries a
+// `// SAFETY:` contract, unsafe fns may not silently nest unsafe ops, and
+// raw `std::sync` primitives are forbidden outside `crate::sync`
+// (clippy.toml) so the loom build models the real code.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+#![warn(clippy::disallowed_types)]
 
 pub mod cli;
 pub mod config;
@@ -44,6 +51,7 @@ pub mod metrics;
 pub mod pool;
 pub mod runtime;
 pub mod server;
+pub mod sync;
 pub mod tensor;
 pub mod testutil;
 pub mod text;

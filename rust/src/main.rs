@@ -7,12 +7,19 @@
 //!   exp <id>   regenerate a paper table/figure (DESIGN.md §5)
 //!   info       model + artifact inventory
 
+// Same unsafe-audit posture as the library crate (see `src/lib.rs`):
+// every unsafe block must be justified and fully explicit.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+#![warn(clippy::disallowed_types)]
+
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
+
+use rwkv_lite::sync::atomic::{AtomicBool, Ordering};
+use rwkv_lite::sync::Arc;
 
 use rwkv_lite::cli::{self, flag, opt, opt_def, Args};
 use rwkv_lite::config::{Backend, EngineConfig, LoadStrategy};
@@ -175,6 +182,10 @@ extern "C" fn on_shutdown_signal(_sig: libc::c_int) {
 
 fn install_shutdown_handler() {
     let handler = on_shutdown_signal as extern "C" fn(libc::c_int);
+    // SAFETY: `on_shutdown_signal` is async-signal-safe — it only stores
+    // to a `static` atomic (no allocation, locking, or formatting), and
+    // the handler pointer has the exact `extern "C" fn(c_int)` signature
+    // `sighandler_t` expects for these two signals.
     unsafe {
         libc::signal(libc::SIGINT, handler as libc::sighandler_t);
         libc::signal(libc::SIGTERM, handler as libc::sighandler_t);

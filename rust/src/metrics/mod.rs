@@ -8,7 +8,8 @@
 //! running total is what `exp fig5/fig6/table7` report.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+
+use crate::sync::Mutex;
 
 /// Component groups used by the Figure 6 breakdown.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -49,14 +50,22 @@ struct MemInner {
 }
 
 /// Thread-safe residency tracker.
-#[derive(Default, Debug)]
+#[derive(Debug)]
 pub struct MemTracker {
     inner: Mutex<MemInner>,
 }
 
+// manual (not derived) so the shim's loom `Mutex`, which has no
+// `Default`, still compiles
+impl Default for MemTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl MemTracker {
     pub fn new() -> Self {
-        Self::default()
+        Self { inner: Mutex::new(MemInner::default()) }
     }
 
     pub fn load(&self, group: Group, bytes: u64) {
@@ -108,15 +117,24 @@ impl MemTracker {
 }
 
 /// Simple named counters/timers for the serving stack.
-#[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, u64>>,
     timings: Mutex<BTreeMap<String, Vec<f64>>>,
 }
 
+// manual for the same loom-compatibility reason as `MemTracker`
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Registry {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            counters: Mutex::new(BTreeMap::new()),
+            timings: Mutex::new(BTreeMap::new()),
+        }
     }
 
     pub fn inc(&self, name: &str, by: u64) {

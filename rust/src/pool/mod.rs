@@ -43,12 +43,23 @@
 //!   panic on the caller.
 //! * `Drop` sends every worker a shutdown message and joins the
 //!   `JoinHandle`s — workers are never detached.
+//!
+//! # Verification
+//!
+//! The cross-thread protocols here ([`Latch`], [`TaskSlot`]) are built on
+//! `crate::sync` so the CI loom job model-checks them exhaustively (the
+//! `loom_*` tests below); the raw-pointer hand-off is additionally run
+//! under Miri and ThreadSanitizer, and [`SharedSliceMut`] carries a
+//! debug-build claims ledger that turns any violation of the
+//! disjoint-range contract into a deterministic panic.  See
+//! `docs/correctness.md` for the full matrix.
 
 use std::any::Any;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 type Panic = Box<dyn Any + Send + 'static>;
@@ -67,8 +78,10 @@ struct Chunk {
     latch: *const Latch,
 }
 
-// Safety: see `Chunk` — the caller blocks until the latch opens, so the
-// borrowed closure/latch outlive the worker's use of these pointers.
+// SAFETY: see `Chunk` — the caller blocks until the latch opens, so the
+// borrowed closure/latch outlive the worker's use of these pointers; the
+// pointees themselves are `Sync` (`f` by bound, `Latch` by construction),
+// so dereferencing them from a worker thread is sound.
 unsafe impl Send for Chunk {}
 
 enum Msg {
@@ -79,19 +92,44 @@ enum Msg {
 
 /// Completion latch for one `parallel_for` call: counts outstanding
 /// chunks and records the first panic payload.
-#[derive(Default)]
+///
+/// # Lifetime audit (the `Chunk.latch` raw pointer)
+///
+/// The latch lives on the caller's stack and workers reach it through a
+/// raw pointer, so the caller must not return while any worker can still
+/// touch it.  [`Latch::wait`] only returns once `remaining == 0`, and a
+/// worker's *last* access is dropping the mutex guard inside
+/// [`Latch::done`] — which is also the release that lets the waiting
+/// caller re-acquire the mutex and observe `remaining == 0`.  The
+/// notification is sent while the lock is still held, so the waiter
+/// cannot wake, return, and free the latch between the decrement and the
+/// notify.  (Rust's `std` mutex explicitly supports being freed
+/// immediately after the owner's unlock, the classic condvar-destruction
+/// pattern.)  The `loom_latch_*` models below check exactly this
+/// protocol, including that `done` publishes the worker's chunk writes to
+/// the waiter.
 struct Latch {
     state: Mutex<LatchState>,
     cv: Condvar,
 }
 
-#[derive(Default)]
 struct LatchState {
     remaining: usize,
     panic: Option<Panic>,
 }
 
 impl Latch {
+    /// A latch counting `remaining` outstanding chunks.  (Constructed
+    /// explicitly rather than via `Default` + mutation so the count is
+    /// set before the latch address can ever escape to a worker — and
+    /// because loom's `Mutex` has no `Default`.)
+    fn new(remaining: usize) -> Self {
+        Self {
+            state: Mutex::new(LatchState { remaining, panic: None }),
+            cv: Condvar::new(),
+        }
+    }
+
     fn done(&self, panic: Option<Panic>) {
         let mut st = self.state.lock().unwrap();
         st.remaining -= 1;
@@ -149,9 +187,11 @@ impl ThreadPool {
                                 let _ = catch_unwind(AssertUnwindSafe(job));
                             }
                             Ok(Msg::Scoped(c)) => {
-                                // Safety: pointees outlive this call (the
-                                // submitter blocks on the latch).
+                                // SAFETY: the pointees outlive this call —
+                                // the submitter blocks on the latch until
+                                // `done` below has run (see `Latch` docs).
                                 let f = unsafe { &*c.f };
+                                // SAFETY: same lifetime argument as `c.f`.
                                 let latch = unsafe { &*c.latch };
                                 let r = catch_unwind(AssertUnwindSafe(|| {
                                     f(c.chunk, c.start, c.end)
@@ -185,13 +225,20 @@ impl ThreadPool {
     }
 
     /// Run `f` asynchronously, returning a handle to await its result.
+    ///
+    /// The result travels through a [`TaskSlot`] (mutex + condvar, not a
+    /// channel) so the completion hand-off is loom-modeled; a drop guard
+    /// marks the slot orphaned if the job is destroyed unexecuted (pool
+    /// shut down first), so [`Task::wait`] can never hang.
     pub fn submit<T: Send + 'static, F: FnOnce() -> T + Send + 'static>(&self, f: F) -> Task<T> {
-        let (tx, rx) = channel();
+        let slot = Arc::new(TaskSlot::new());
+        let guard = OrphanGuard { slot: Arc::clone(&slot) };
         self.spawn(move || {
             let r = catch_unwind(AssertUnwindSafe(f));
-            let _ = tx.send(r);
+            guard.slot.complete(r);
+            // `guard` drops here; `orphan` is a no-op once a result is in.
         });
-        Task { rx }
+        Task { slot }
     }
 
     /// Scoped data-parallel for: run `f(chunk, start, end)` over the
@@ -201,8 +248,8 @@ impl ThreadPool {
     /// the first panic resumes on the caller after the section completes.
     ///
     /// ```
-    /// use std::sync::atomic::{AtomicU64, Ordering};
     /// use rwkv_lite::pool::ThreadPool;
+    /// use rwkv_lite::sync::atomic::{AtomicU64, Ordering};
     ///
     /// let pool = ThreadPool::new(3);
     /// let xs: Vec<u64> = (0..100).collect(); // borrowed, not moved
@@ -218,10 +265,9 @@ impl ThreadPool {
             return;
         }
         let lanes = self.workers.len() + 1;
-        let latch = Latch::default();
-        // non-empty chunk count is min(n, lanes); the count must be set
-        // before any worker can decrement
-        latch.state.lock().unwrap().remaining = n.min(lanes) - 1;
+        // non-empty chunk count is min(n, lanes); the count is fixed at
+        // construction, before the latch address escapes to any worker
+        let latch = Latch::new(n.min(lanes) - 1);
         let fp: *const (dyn Fn(usize, usize, usize) + Sync) = f;
         let lp: *const Latch = &latch;
         let mut bounds = chunk_bounds(n, lanes);
@@ -279,29 +325,109 @@ impl Drop for ThreadPool {
     }
 }
 
+/// The completion slot a submitted job reports into: a mutex/condvar
+/// cell instead of a one-shot channel, so loom can model the
+/// complete/wait/orphan races (`loom_task_slot_*` below).
+struct TaskSlot<T> {
+    state: Mutex<SlotState<T>>,
+    cv: Condvar,
+}
+
+struct SlotState<T> {
+    result: Option<std::thread::Result<T>>,
+    /// The job was destroyed without running (pool shut down while it sat
+    /// in the queue), or the result was already taken: waiting is futile.
+    orphaned: bool,
+}
+
+impl<T> TaskSlot<T> {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(SlotState { result: None, orphaned: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, r: std::thread::Result<T>) {
+        let mut st = self.state.lock().unwrap();
+        st.result = Some(r);
+        self.cv.notify_all();
+    }
+
+    /// Mark the slot dead if (and only if) no result ever arrived.
+    fn orphan(&self) {
+        let mut st = self.state.lock().unwrap();
+        if st.result.is_none() {
+            st.orphaned = true;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until a result or orphan marker; `None` means the job will
+    /// never produce one.
+    fn take_blocking(&self) -> Option<std::thread::Result<T>> {
+        let mut st = self.state.lock().unwrap();
+        while st.result.is_none() && !st.orphaned {
+            st = self.cv.wait(st).unwrap();
+        }
+        let r = st.result.take();
+        // a taken result must not be awaited twice
+        st.orphaned = true;
+        r
+    }
+
+    /// `Ok(Some)` result ready (taken), `Ok(None)` still running,
+    /// `Err(())` orphaned.
+    fn try_take(&self) -> Result<Option<std::thread::Result<T>>, ()> {
+        let mut st = self.state.lock().unwrap();
+        match st.result.take() {
+            Some(r) => {
+                st.orphaned = true;
+                Ok(Some(r))
+            }
+            None if st.orphaned => Err(()),
+            None => Ok(None),
+        }
+    }
+}
+
+/// Marks the slot orphaned when the job closure is dropped — whether
+/// after running (no-op: a result is already in) or unexecuted because
+/// the pool shut down with the job still queued.
+struct OrphanGuard<T> {
+    slot: Arc<TaskSlot<T>>,
+}
+
+impl<T> Drop for OrphanGuard<T> {
+    fn drop(&mut self) {
+        self.slot.orphan();
+    }
+}
+
 /// A pending result from [`ThreadPool::submit`].
 pub struct Task<T> {
-    rx: Receiver<std::thread::Result<T>>,
+    slot: Arc<TaskSlot<T>>,
 }
 
 impl<T> Task<T> {
     /// Block for the result.  If the job panicked, the panic resumes HERE
-    /// (on the submitter) instead of hanging on a dead channel.
+    /// (on the submitter) instead of hanging on a dead slot.
     pub fn wait(self) -> T {
-        match self.rx.recv() {
-            Ok(Ok(v)) => v,
-            Ok(Err(p)) => resume_unwind(p),
-            Err(_) => panic!("pool shut down before task completed"),
+        match self.slot.take_blocking() {
+            Some(Ok(v)) => v,
+            Some(Err(p)) => resume_unwind(p),
+            None => panic!("pool shut down before task completed"),
         }
     }
 
-    /// Non-blocking poll; `None` while still running.  Panics (resuming
-    /// the job's panic) if the job panicked.
+    /// Non-blocking poll; `None` while still running (or if the slot was
+    /// already consumed/orphaned).  Panics (resuming the job's panic) if
+    /// the job panicked.
     pub fn try_wait(&self) -> Option<T> {
-        match self.rx.try_recv() {
-            Ok(Ok(v)) => Some(v),
-            Ok(Err(p)) => resume_unwind(p),
-            Err(_) => None,
+        match self.slot.try_take() {
+            Ok(Some(Ok(v))) => Some(v),
+            Ok(Some(Err(p))) => resume_unwind(p),
+            Ok(None) | Err(()) => None,
         }
     }
 }
@@ -354,17 +480,38 @@ impl<'a> Par<'a> {
 /// Safety contract (callers): every element is accessed by at most one
 /// chunk, and the underlying buffer outlives the section — guaranteed by
 /// `parallel_for` blocking until all chunks finish.
+///
+/// In debug builds every chunk additionally registers the shard range it
+/// claims via [`SharedSliceMut::debug_claim`]; overlapping claims panic
+/// deterministically, turning a would-be data race into a test failure.
+/// Claims are in the *shard-index space* the section chunks over (rows,
+/// columns, spans, lanes — whatever `parallel_for(n, ..)`'s `n` counts),
+/// which need not be element indices of the underlying buffer.
 pub(crate) struct SharedSliceMut<T> {
     ptr: *mut T,
     len: usize,
+    #[cfg(debug_assertions)]
+    claims: Mutex<Vec<(usize, usize)>>,
 }
 
+// SAFETY: the view is only shared between the chunks of one scoped
+// section; callers uphold disjoint element access (debug-asserted via the
+// claims ledger), the buffer outlives the section, and the ledger itself
+// is behind a `Mutex` — so sending the view to worker threads cannot
+// introduce aliased mutation.
 unsafe impl<T: Send> Send for SharedSliceMut<T> {}
+// SAFETY: same argument as `Send`; `&SharedSliceMut` only exposes the
+// raw parts and the internally-synchronized ledger.
 unsafe impl<T: Send> Sync for SharedSliceMut<T> {}
 
 impl<T> SharedSliceMut<T> {
     pub(crate) fn new(s: &mut [T]) -> Self {
-        Self { ptr: s.as_mut_ptr(), len: s.len() }
+        Self {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+            #[cfg(debug_assertions)]
+            claims: Mutex::new(Vec::new()),
+        }
     }
 
     /// Reconstruct the full slice inside a chunk.
@@ -374,14 +521,35 @@ impl<T> SharedSliceMut<T> {
     /// type-level contract above.
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn get(&self) -> &mut [T] {
-        std::slice::from_raw_parts_mut(self.ptr, self.len)
+        // SAFETY: ptr/len come from the live `&mut [T]` this view was
+        // built from; the caller upholds the disjointness contract.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
     }
+
+    /// Debug-assert that `[start, end)` (in the section's shard-index
+    /// space) is claimed by exactly this one chunk.  Call once per chunk
+    /// before writing; compiled out in release builds.
+    #[cfg(debug_assertions)]
+    pub(crate) fn debug_claim(&self, start: usize, end: usize) {
+        let mut claims = self.claims.lock().unwrap();
+        for &(s, e) in claims.iter() {
+            assert!(
+                end <= s || start >= e,
+                "SharedSliceMut: overlapping shard claims [{start}, {end}) vs [{s}, {e})"
+            );
+        }
+        claims.push((start, end));
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    pub(crate) fn debug_claim(&self, _start: usize, _end: usize) {}
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn runs_all_jobs() {
@@ -435,6 +603,21 @@ mod tests {
     }
 
     #[test]
+    fn task_try_wait_polls_then_takes() {
+        let pool = ThreadPool::new(1);
+        let t = pool.submit(|| 11);
+        // poll until the result lands, then the slot is consumed
+        let v = loop {
+            if let Some(v) = t.try_wait() {
+                break v;
+            }
+            std::thread::yield_now();
+        };
+        assert_eq!(v, 11);
+        assert_eq!(t.try_wait(), None, "a taken result is gone");
+    }
+
+    #[test]
     fn parallel_for_covers_every_index_once() {
         let pool = ThreadPool::new(3);
         for n in [0usize, 1, 2, 3, 4, 7, 100] {
@@ -469,6 +652,8 @@ mod tests {
         let mut out = vec![0usize; 257];
         let view = SharedSliceMut::new(&mut out);
         pool.parallel_for(257, &|_c, s, e| {
+            view.debug_claim(s, e);
+            // SAFETY: each chunk writes only its own [s, e) shard.
             let out = unsafe { view.get() };
             for (i, o) in out[s..e].iter_mut().enumerate() {
                 *o = s + i;
@@ -477,6 +662,17 @@ mod tests {
         for (i, &v) in out.iter().enumerate() {
             assert_eq!(v, i);
         }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn debug_claim_panics_on_overlap() {
+        let mut buf = vec![0u8; 8];
+        let view = SharedSliceMut::new(&mut buf);
+        view.debug_claim(0, 4);
+        view.debug_claim(4, 8); // disjoint: fine
+        let r = catch_unwind(AssertUnwindSafe(|| view.debug_claim(3, 5)));
+        assert!(r.is_err(), "overlapping claim must panic");
     }
 
     #[test]
@@ -498,5 +694,113 @@ mod tests {
             total.fetch_add(e - s, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 10);
+    }
+}
+
+/// Exhaustive interleaving models for the latch and task-slot protocols.
+/// Only compiled by the CI loom job (`RUSTFLAGS="--cfg loom" cargo test
+/// --lib loom_`), where `crate::sync` resolves to `loom::sync`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::{Latch, Panic, TaskSlot};
+    use crate::sync::Arc;
+    use loom::cell::UnsafeCell;
+
+    /// Two workers write disjoint cells then `done()`; after `wait()`
+    /// returns, both writes must be visible to the caller (the latch is
+    /// the only synchronization — exactly the `parallel_for` protocol).
+    #[test]
+    fn loom_latch_publishes_worker_writes() {
+        loom::model(|| {
+            let latch = Arc::new(Latch::new(2));
+            let cells = Arc::new((UnsafeCell::new(0u32), UnsafeCell::new(0u32)));
+            let mut workers = Vec::new();
+            for id in 0..2u32 {
+                let latch = Arc::clone(&latch);
+                let cells = Arc::clone(&cells);
+                workers.push(loom::thread::spawn(move || {
+                    let cell = if id == 0 { &cells.0 } else { &cells.1 };
+                    // SAFETY: each worker writes only its own cell, and
+                    // the caller reads only after the latch opens.
+                    cell.with_mut(|p| unsafe { *p = id + 1 });
+                    latch.done(None);
+                }));
+            }
+            assert!(latch.wait().is_none());
+            // SAFETY: all workers have counted down; no writer is live.
+            let a = cells.0.with(|p| unsafe { *p });
+            // SAFETY: as above.
+            let b = cells.1.with(|p| unsafe { *p });
+            assert_eq!((a, b), (1, 2));
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+    }
+
+    /// A worker panic payload recorded concurrently with completion must
+    /// surface exactly once from `wait()`.
+    #[test]
+    fn loom_latch_reports_panic_from_any_worker() {
+        loom::model(|| {
+            let latch = Arc::new(Latch::new(2));
+            let mut workers = Vec::new();
+            for id in 0..2u32 {
+                let latch = Arc::clone(&latch);
+                workers.push(loom::thread::spawn(move || {
+                    let payload = (id == 0).then(|| Box::new("boom") as Panic);
+                    latch.done(payload);
+                }));
+            }
+            let p = latch.wait().expect("one worker reported a panic");
+            assert_eq!(p.downcast_ref::<&str>(), Some(&"boom"));
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+    }
+
+    /// Completion racing the blocking waiter: the value always arrives.
+    #[test]
+    fn loom_task_slot_complete_vs_wait() {
+        loom::model(|| {
+            let slot = Arc::new(TaskSlot::new());
+            let s = Arc::clone(&slot);
+            let t = loom::thread::spawn(move || s.complete(Ok(7u32)));
+            let r = slot.take_blocking();
+            assert!(matches!(r, Some(Ok(7))));
+            t.join().unwrap();
+        });
+    }
+
+    /// A job destroyed unexecuted (pool shutdown) must unblock the
+    /// waiter with `None`, never deadlock.
+    #[test]
+    fn loom_task_slot_orphan_unblocks_waiter() {
+        loom::model(|| {
+            let slot = Arc::new(TaskSlot::<u32>::new());
+            let s = Arc::clone(&slot);
+            let t = loom::thread::spawn(move || s.orphan());
+            let r = slot.take_blocking();
+            assert!(r.is_none());
+            t.join().unwrap();
+        });
+    }
+
+    /// The normal worker path (`complete` then the drop-guard's `orphan`)
+    /// racing the waiter: the result must never be lost.
+    #[test]
+    fn loom_task_slot_orphan_after_complete_keeps_result() {
+        loom::model(|| {
+            let slot = Arc::new(TaskSlot::new());
+            let s = Arc::clone(&slot);
+            let t = loom::thread::spawn(move || {
+                s.complete(Ok(1u32));
+                s.orphan();
+            });
+            let r = slot.take_blocking();
+            assert!(matches!(r, Some(Ok(1))));
+            t.join().unwrap();
+        });
     }
 }

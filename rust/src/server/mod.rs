@@ -46,17 +46,23 @@
 //! flag ([`ServeOptions::shutdown`], flipped by the CLI's SIGINT/SIGTERM
 //! handler) stops the accept loop so the coordinator can drain.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Coordinator, Event, RejectReason, Request};
 use crate::json::{self, Value};
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::Arc;
 use crate::text::Vocab;
+
+/// Hard per-request line cap: a client (or garbage traffic) streaming an
+/// endless line without a newline would otherwise grow the read buffer
+/// unboundedly.  Past the cap the connection gets a structured error and
+/// is closed (the line has no frame boundary left to resynchronize on).
+const MAX_LINE_BYTES: u64 = 1 << 20;
 
 /// Accept-loop knobs for [`Server::serve`].
 #[derive(Clone, Default)]
@@ -160,8 +166,14 @@ impl Server {
         let mut line = String::new();
         loop {
             line.clear();
-            if reader.read_line(&mut line)? == 0 {
+            // bounded read: `take` stops a newline-less flood at the cap
+            let n = (&mut reader).take(MAX_LINE_BYTES).read_line(&mut line)?;
+            if n == 0 {
                 return Ok(()); // client closed
+            }
+            if n as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
+                writeln!(writer, r#"{{"error":"request line exceeds {} bytes"}}"#, MAX_LINE_BYTES)?;
+                return Ok(());
             }
             let trimmed = line.trim();
             if trimmed.is_empty() {

@@ -1,0 +1,54 @@
+//! Synchronization shim: the ONE place the crate names `std::sync`
+//! primitives (enforced by `clippy.toml`'s `disallowed-types` list).
+//!
+//! Under the normal build this module is a zero-cost re-export of
+//! `std::sync`.  Under `RUSTFLAGS="--cfg loom"` (the CI `loom` job) the
+//! lock/condvar/atomic types come from [loom], whose model checker
+//! exhaustively explores thread interleavings of the unit tests named
+//! `loom_*` — see `docs/correctness.md`.  Code that wants to be
+//! model-checked must go through `crate::sync`, never `std::sync`.
+//!
+//! Deliberate exceptions (documented here so the shim's boundary is the
+//! whole story):
+//!
+//! * **`Arc`** is always `std::sync::Arc`.  The modeled protocols (latch,
+//!   task slot, admission gate) do not rely on `Arc`'s reclamation
+//!   ordering, and keeping one `Arc` type means the engine's pervasive
+//!   `Arc<WeightStore>` / `Arc<Mat>` plumbing is identical under both
+//!   cfgs.
+//! * **`mpsc`** is always `std::sync::mpsc` — loom has no channel model.
+//!   The pool's worker dispatch channel is therefore *not* model-checked;
+//!   the latch/task-slot protocols layered on top of it are, and they are
+//!   where the raw-pointer hand-offs live.
+//! * **`OnceLock`** (the f16 decode table) stays `std::sync::OnceLock`:
+//!   pure lazily-computed data, no cross-thread protocol.
+//!
+//! The loom build only compiles the library's unit-test target
+//! (`cargo test --lib` with `--cfg loom`); the binaries keep using the
+//! std types via this same path, which is why `static` atomics in
+//! `main.rs` still const-initialize.
+
+#![allow(clippy::disallowed_types)]
+
+pub use std::sync::mpsc;
+pub use std::sync::Arc;
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, RwLock};
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard, RwLock};
+
+/// Atomic integer/bool types plus `Ordering`, swapped wholesale under
+/// loom.  Import as `crate::sync::atomic::{AtomicUsize, Ordering}`.
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+}

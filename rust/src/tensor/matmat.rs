@@ -201,8 +201,13 @@ pub fn matmat_in_out_par(
     let out_view = SharedSliceMut::new(outs);
     let scr_view = SharedSliceMut::new(scratch);
     par.run(cols, &|chunk, c0, c1| {
-        // Safety: lanes write disjoint column ranges / scratch entries.
+        out_view.debug_claim(c0, c1);
+        scr_view.debug_claim(chunk, chunk + 1);
+        // SAFETY: each lane writes only output columns [c0, c1) of every
+        // slot and scratch entry `chunk` — disjoint ranges, asserted by
+        // the claims above in debug builds.
         let outs = unsafe { out_view.get() };
+        // SAFETY: as above — scratch entry `chunk` belongs to this lane.
         let scr = &mut unsafe { scr_view.get() }[chunk];
         matmat_in_out_cols(xs, w, outs, scr, c0, c1);
     });
@@ -268,7 +273,9 @@ pub fn matmat_rows_par(w: &Mat, xs: &[f32], outs: &mut [f32], par: Par<'_>) {
     assert_eq!(outs.len(), b * rows);
     let out_view = SharedSliceMut::new(outs);
     par.run(rows, &|_chunk, j0, j1| {
-        // Safety: lanes write disjoint output-row index sets.
+        out_view.debug_claim(j0, j1);
+        // SAFETY: each lane writes only output rows [j0, j1) of every
+        // slot — disjoint index sets, claimed above in debug builds.
         let outs = unsafe { out_view.get() };
         matmat_rows_range(w, xs, outs, j0, j1);
     });
@@ -341,7 +348,9 @@ pub fn matmat_rows_indexed_par(w: &Mat, idx: &[u32], xs: &[f32], outs: &mut [f32
     assert_eq!(outs.len(), b * idx.len());
     let out_view = SharedSliceMut::new(outs);
     par.run(idx.len(), &|_chunk, k0, k1| {
-        // Safety: lanes write disjoint `kk` positions of every slot.
+        out_view.debug_claim(k0, k1);
+        // SAFETY: each lane writes only selected positions [k0, k1) of
+        // every slot — disjoint `kk` sets, claimed above in debug builds.
         let outs = unsafe { out_view.get() };
         matmat_rows_indexed_range(w, idx, xs, outs, k0, k1);
     });
@@ -449,7 +458,9 @@ pub fn accum_rows_indexed_batch_par(
     assert_eq!(outs.len(), b * cols);
     let out_view = SharedSliceMut::new(outs);
     par.run(cols, &|_chunk, c0, c1| {
-        // Safety: lanes accumulate disjoint column ranges.
+        out_view.debug_claim(c0, c1);
+        // SAFETY: each lane accumulates only output columns [c0, c1) of
+        // every slot — disjoint ranges, claimed above in debug builds.
         let outs = unsafe { out_view.get() };
         accum_rows_indexed_batch_cols(w, idx, hs, b, outs, c0, c1);
     });

@@ -1,0 +1,260 @@
+//! Offline structure-aware byte fuzzer (PR 7's parser hardening).
+//!
+//! The container has no cargo-fuzz / libFuzzer, so this is a
+//! self-contained deterministic mutation engine over seed corpora: each
+//! iteration picks a seed, applies a small burst of mutations (bit
+//! flips, interesting bytes, interesting little-endian words, truncation,
+//! insertion, cross-seed splicing — the classic AFL menu), and feeds the
+//! result to the target under `catch_unwind`.
+//!
+//! A "crash" is any panic escaping the target.  Parsers under test return
+//! `Result` for malformed input, so every panic is a bug by contract —
+//! the harness collects up to [`MAX_CRASHES`] of them (iteration, input
+//! hex, panic message) for the regression suite in `tests/fuzz_smoke.rs`
+//! to report.
+//!
+//! Determinism: same seeds + same `iters` + same `seed` ⇒ the same byte
+//! sequences, so a CI failure reproduces locally byte-for-byte.  Note
+//! stack overflows are NOT catchable by `catch_unwind` — recursion-depth
+//! bugs must be prevented at the parser level (see `json::MAX_DEPTH`);
+//! the fuzzer would simply abort on one, which still fails CI.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::XorShift;
+
+/// Upper bound on collected crashes: past this the input space is
+/// clearly broken and more examples add noise, not signal.
+pub const MAX_CRASHES: usize = 8;
+
+/// Hex dump cap — enough to reproduce small inputs verbatim and to
+/// locate big ones in the corpus without megabyte test logs.
+const HEX_CAP: usize = 256;
+
+/// One panicking input, captured for the failure report.
+#[derive(Debug)]
+pub struct FuzzCrash {
+    pub iteration: u64,
+    /// Hex of the first [`HEX_CAP`] bytes of the offending input.
+    pub input_hex: String,
+    /// The panic payload, when it was a string.
+    pub message: String,
+}
+
+/// Aggregate result of a fuzz run.
+#[derive(Debug)]
+pub struct FuzzOutcome {
+    pub iters: u64,
+    pub crashes: Vec<FuzzCrash>,
+}
+
+impl FuzzOutcome {
+    /// Panic with a reproduction report if any input crashed the target.
+    pub fn assert_clean(&self, target_name: &str) {
+        assert!(
+            self.crashes.is_empty(),
+            "fuzz target '{target_name}': {} crashing input(s) in {} iterations:\n{}",
+            self.crashes.len(),
+            self.iters,
+            self.crashes
+                .iter()
+                .map(|c| format!(
+                    "  iter {}: {}\n    input: {}",
+                    c.iteration, c.message, c.input_hex
+                ))
+                .collect::<Vec<_>>()
+                .join("\n"),
+        );
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    let shown = &bytes[..bytes.len().min(HEX_CAP)];
+    let mut s: String = shown.iter().map(|b| format!("{b:02x}")).collect();
+    if bytes.len() > HEX_CAP {
+        s.push_str(&format!("… ({} bytes total)", bytes.len()));
+    }
+    s
+}
+
+const INTERESTING_BYTES: [u8; 8] = [0x00, 0x01, 0x10, 0x7f, 0x80, 0xef, 0xfe, 0xff];
+const INTERESTING_U32: [u32; 8] =
+    [0, 1, 0x7fff_ffff, 0x8000_0000, 0xffff_ffff, 0xffff_fffe, 64, 0x0100_0000];
+const INTERESTING_U64: [u64; 8] = [
+    0,
+    1,
+    u64::MAX,
+    i64::MAX as u64,
+    1 << 32,
+    (1 << 32) + 1,
+    u64::MAX - 64,
+    1 << 63,
+];
+
+/// Apply one random mutation in place.
+fn mutate(input: &mut Vec<u8>, seeds: &[Vec<u8>], rng: &mut XorShift) {
+    if input.is_empty() {
+        input.push(rng.next_u64() as u8);
+        return;
+    }
+    match rng.below(7) {
+        // single bit flip
+        0 => {
+            let i = rng.below(input.len());
+            input[i] ^= 1 << rng.below(8);
+        }
+        // interesting byte
+        1 => {
+            let i = rng.below(input.len());
+            input[i] = INTERESTING_BYTES[rng.below(INTERESTING_BYTES.len())];
+        }
+        // interesting u32, little-endian (length/offset fields)
+        2 => {
+            let w = INTERESTING_U32[rng.below(INTERESTING_U32.len())].to_le_bytes();
+            let i = rng.below(input.len());
+            for (k, &b) in w.iter().enumerate() {
+                if let Some(slot) = input.get_mut(i + k) {
+                    *slot = b;
+                }
+            }
+        }
+        // interesting u64, little-endian (the .rkv/statefile field width)
+        3 => {
+            let w = INTERESTING_U64[rng.below(INTERESTING_U64.len())].to_le_bytes();
+            let i = rng.below(input.len());
+            for (k, &b) in w.iter().enumerate() {
+                if let Some(slot) = input.get_mut(i + k) {
+                    *slot = b;
+                }
+            }
+        }
+        // truncate (header/payload cut mid-field)
+        4 => {
+            let keep = rng.below(input.len() + 1);
+            input.truncate(keep);
+        }
+        // insert a short burst of random bytes
+        5 => {
+            let i = rng.below(input.len() + 1);
+            let n = 1 + rng.below(9);
+            for k in 0..n {
+                input.insert(i + k, rng.next_u64() as u8);
+            }
+        }
+        // splice a window from another seed (structure transplant)
+        _ => {
+            let donor = &seeds[rng.below(seeds.len())];
+            if donor.is_empty() {
+                return;
+            }
+            let from = rng.below(donor.len());
+            let len = (1 + rng.below(32)).min(donor.len() - from);
+            let at = rng.below(input.len() + 1);
+            for (k, &b) in donor[from..from + len].iter().enumerate() {
+                if at + k < input.len() {
+                    input[at + k] = b;
+                } else {
+                    input.push(b);
+                }
+            }
+        }
+    }
+}
+
+/// Drive `target` with `iters` mutated inputs derived from `seeds`.
+///
+/// Iteration 0..seeds.len() replays each seed VERBATIM first (the corpus
+/// itself must never crash), then every iteration mutates a fresh copy of
+/// a random seed with a burst of 1–8 mutations.  The target must
+/// tolerate arbitrary bytes; any escaping panic is recorded as a crash.
+pub fn fuzz_bytes<F: FnMut(&[u8])>(
+    seeds: &[Vec<u8>],
+    iters: u64,
+    seed: u64,
+    mut target: F,
+) -> FuzzOutcome {
+    assert!(!seeds.is_empty(), "fuzz_bytes needs at least one seed input");
+    let mut rng = XorShift::new(seed ^ 0xF0_5EED);
+    let mut crashes = Vec::new();
+    let mut run = |it: u64, input: &[u8], crashes: &mut Vec<FuzzCrash>| {
+        let r = catch_unwind(AssertUnwindSafe(|| target(input)));
+        if let Err(payload) = r {
+            let message = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            crashes.push(FuzzCrash { iteration: it, input_hex: hex(input), message });
+        }
+    };
+    let mut it = 0u64;
+    for s in seeds {
+        run(it, s, &mut crashes);
+        it += 1;
+    }
+    while it < iters && crashes.len() < MAX_CRASHES {
+        let mut input = seeds[rng.below(seeds.len())].clone();
+        let edits = 1 + rng.below(8);
+        for _ in 0..edits {
+            mutate(&mut input, seeds, &mut rng);
+        }
+        run(it, &input, &mut crashes);
+        it += 1;
+    }
+    FuzzOutcome { iters: it, crashes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_target_reports_no_crashes() {
+        let seeds = vec![b"hello".to_vec(), vec![0u8; 16]];
+        let out = fuzz_bytes(&seeds, 500, 7, |bytes| {
+            // arbitrary total computation that cannot panic
+            let _ = bytes.iter().fold(0u64, |a, &b| a.wrapping_add(b as u64));
+        });
+        assert_eq!(out.iters, 500);
+        out.assert_clean("fold");
+    }
+
+    #[test]
+    fn panicking_target_is_caught_and_reported() {
+        let seeds = vec![vec![1u8, 2, 3, 4]];
+        let out = fuzz_bytes(&seeds, 300, 11, |bytes| {
+            // deliberately fragile: panics whenever a mutation zeroes
+            // the first byte
+            if bytes.first() == Some(&0) {
+                panic!("boom on zero");
+            }
+        });
+        assert!(!out.crashes.is_empty(), "mutations should hit byte[0] == 0");
+        assert!(out.crashes.len() <= MAX_CRASHES);
+        assert!(out.crashes[0].message.contains("boom"));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let seeds = vec![b"seed-a".to_vec(), b"seed-b".to_vec()];
+        let trace = |seed: u64| {
+            let mut sum = 0u64;
+            fuzz_bytes(&seeds, 200, seed, |b| {
+                sum = sum
+                    .wrapping_mul(31)
+                    .wrapping_add(b.iter().fold(0u64, |a, &x| a.wrapping_add(x as u64)));
+            });
+            sum
+        };
+        assert_eq!(trace(42), trace(42));
+        assert_ne!(trace(42), trace(43));
+    }
+
+    #[test]
+    fn truncation_can_empty_then_regrow() {
+        // regression guard for the empty-input path in `mutate`
+        let seeds = vec![vec![9u8]];
+        let out = fuzz_bytes(&seeds, 400, 3, |_| {});
+        out.assert_clean("noop");
+    }
+}

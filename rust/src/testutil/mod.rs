@@ -11,6 +11,7 @@
 //! ```
 
 pub mod faults;
+pub mod fuzz;
 pub mod synth;
 
 use crate::util::XorShift;

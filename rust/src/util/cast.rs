@@ -1,0 +1,152 @@
+//! Checked reinterpretation of checkpoint bytes as typed slices — the ONE
+//! place the crate turns `&[u8]` into `&[T]`.
+//!
+//! Every weight/state load used to open-code `from_raw_parts` with a
+//! shape-derived length; [`cast_slice`] instead derives the element count
+//! from the byte buffer itself and verifies alignment, so a corrupt or
+//! truncated checkpoint can produce an `Err` but never an out-of-bounds
+//! slice.  [`AlignedBytes`] backs owned copies (the Miri-friendly `Mmap`
+//! double, fuzz inputs) with `u64` storage so the alignment check always
+//! passes regardless of allocator behavior.
+
+use anyhow::{bail, Result};
+
+/// Marker for plain-old-data element types that may be reinterpreted from
+/// raw little-endian checkpoint bytes.
+///
+/// # Safety
+/// Implementors must be primitive types with no padding, no niches/invalid
+/// bit patterns, and no drop glue: every `size_of::<Self>()`-byte pattern
+/// is a valid value.
+pub unsafe trait Pod: Copy + 'static {}
+
+// SAFETY: u8 is a 1-byte primitive; all bit patterns are valid.
+unsafe impl Pod for u8 {}
+// SAFETY: i8 is a 1-byte primitive; all bit patterns are valid.
+unsafe impl Pod for i8 {}
+// SAFETY: u16 is a padding-free primitive; all bit patterns are valid.
+unsafe impl Pod for u16 {}
+// SAFETY: u32 is a padding-free primitive; all bit patterns are valid.
+unsafe impl Pod for u32 {}
+// SAFETY: i32 is a padding-free primitive; all bit patterns are valid.
+unsafe impl Pod for i32 {}
+// SAFETY: f32 is a padding-free primitive; all bit patterns are valid
+// (NaN payloads included).
+unsafe impl Pod for f32 {}
+// SAFETY: u64 is a padding-free primitive; all bit patterns are valid.
+unsafe impl Pod for u64 {}
+
+/// View `bytes` as `&[T]`.  Errors (never UB, never a panic) if the
+/// buffer is misaligned for `T` or not a whole number of elements.
+pub fn cast_slice<T: Pod>(bytes: &[u8]) -> Result<&[T]> {
+    let size = std::mem::size_of::<T>();
+    if bytes.len() % size != 0 {
+        bail!(
+            "byte length {} is not a multiple of the {}-byte element size",
+            bytes.len(),
+            size
+        );
+    }
+    let align = std::mem::align_of::<T>();
+    if bytes.as_ptr() as usize % align != 0 {
+        bail!("buffer is not {align}-byte aligned");
+    }
+    // SAFETY: T: Pod (any bit pattern valid, no padding, no drop glue);
+    // the pointer is aligned (checked above) and the element count covers
+    // exactly bytes.len() bytes inside the borrowed allocation.  The
+    // returned lifetime is tied to `bytes`.
+    Ok(unsafe { std::slice::from_raw_parts(bytes.as_ptr().cast::<T>(), bytes.len() / size) })
+}
+
+/// [`cast_slice`] plus a shape-derived element-count check, for callers
+/// that know how many elements the tensor header promised.
+pub fn cast_slice_len<T: Pod>(bytes: &[u8], expect: usize) -> Result<&[T]> {
+    let s = cast_slice::<T>(bytes)?;
+    if s.len() != expect {
+        bail!("element count {} != expected {}", s.len(), expect);
+    }
+    Ok(s)
+}
+
+/// Owned byte buffer stored as `u64` words, so `cast_slice` to any
+/// primitive dtype (max alignment 8) always passes the alignment check.
+/// `Vec<u8>` from `fs::read` only guarantees 1-byte alignment — enough
+/// for `mmap`-replacement *storage* but not for typed views.
+pub struct AlignedBytes {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBytes {
+    pub fn from_slice(b: &[u8]) -> Self {
+        let mut words = Vec::with_capacity(b.len().div_ceil(8));
+        for chunk in b.chunks(8) {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            words.push(u64::from_ne_bytes(w));
+        }
+        Self { words, len: b.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: `words` owns at least `len` bytes (ceil(len/8) u64s);
+        // u64 has no padding and every byte of it is a valid u8; u8's
+        // alignment of 1 is always satisfied.  Lifetime tied to &self.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>(), self.len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn casts_aligned_f32() {
+        let raw = AlignedBytes::from_slice(&1.5f32.to_le_bytes());
+        let s = cast_slice::<f32>(raw.bytes()).unwrap();
+        assert_eq!(s, &[1.5]);
+    }
+
+    #[test]
+    fn rejects_ragged_length() {
+        let raw = AlignedBytes::from_slice(&[0u8; 7]);
+        assert!(cast_slice::<f32>(raw.bytes()).is_err());
+        assert!(cast_slice::<u16>(raw.bytes()).is_err());
+        // u8 always works
+        assert_eq!(cast_slice::<u8>(raw.bytes()).unwrap().len(), 7);
+    }
+
+    #[test]
+    fn rejects_misaligned_buffer() {
+        let raw = AlignedBytes::from_slice(&[0u8; 9]);
+        // offset by one byte: 8 bytes remain, but the pointer is odd
+        let view = &raw.bytes()[1..];
+        assert!(cast_slice::<f32>(view).is_err());
+    }
+
+    #[test]
+    fn length_check_catches_shape_mismatch() {
+        let raw = AlignedBytes::from_slice(&[0u8; 16]);
+        assert!(cast_slice_len::<f32>(raw.bytes(), 4).is_ok());
+        assert!(cast_slice_len::<f32>(raw.bytes(), 5).is_err());
+    }
+
+    #[test]
+    fn aligned_bytes_round_trips() {
+        for n in [0usize, 1, 7, 8, 9, 64, 65] {
+            let src: Vec<u8> = (0..n as u32).map(|i| (i * 37) as u8).collect();
+            let a = AlignedBytes::from_slice(&src);
+            assert_eq!(a.bytes(), &src[..]);
+            assert_eq!(a.len(), n);
+            assert_eq!(a.is_empty(), n == 0);
+        }
+    }
+}

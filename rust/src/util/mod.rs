@@ -1,5 +1,7 @@
-//! Small shared utilities: deterministic RNG, f16 conversion, timers.
+//! Small shared utilities: deterministic RNG, f16 conversion, timers,
+//! checked byte casts.
 
+pub mod cast;
 pub mod f16;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,137 @@
+//! Fuzz smoke suite: structure-aware mutation fuzzing of every
+//! untrusted-input parser (PR 7).
+//!
+//! Each target parses arbitrary bytes derived from valid seed corpora;
+//! the parsers' contract is `Err` on malformed input, NEVER a panic, an
+//! abort, or an oversized allocation.  `FUZZ_ITERS` scales the run: the
+//! default keeps `cargo test` quick, the CI `fuzz-smoke` job sets 10000.
+//!
+//! Crashing inputs found here get minimized and pinned as regression
+//! cases in `tests/parser_robustness.rs`.
+
+use rwkv_lite::engine::state::RwkvState;
+use rwkv_lite::io::rkv::RkvFile;
+use rwkv_lite::io::statefile::{read_statefile_bytes, statefile_bytes, statefile_checksum};
+use rwkv_lite::io::{rkv_bytes, RkvTensor};
+use rwkv_lite::json;
+use rwkv_lite::testutil::fuzz::fuzz_bytes;
+
+fn iters() -> u64 {
+    std::env::var("FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000)
+}
+
+/// Seed corpus for the `.rkv` parser: several dtypes, shapes, and an
+/// empty-tensor edge so mutations explore every header field.
+fn rkv_seeds() -> Vec<Vec<u8>> {
+    let a = rkv_bytes(&[
+        RkvTensor::f32("emb", vec![4, 3], &[0.5; 12]),
+        RkvTensor::f16_from_f32("b0.att.wr.w", vec![3, 3], &[1.0; 9]),
+        RkvTensor::i32("hh.assign", vec![4], &[0, 1, 1, 0]),
+    ]);
+    let b = rkv_bytes(&[RkvTensor::u8("q", vec![2, 2], vec![7, 8, 9, 10])]);
+    let c = rkv_bytes(&[]);
+    vec![a, b, c]
+}
+
+/// Whatever `open_bytes` accepts must survive every accessor: the parse
+/// invariants (shape·dtype == payload, in-bounds ranges) are what make
+/// the accessors panic-free, so exercise them all.
+fn exercise_rkv(f: &RkvFile) {
+    let names: Vec<String> = f.names().map(|s| s.to_string()).collect();
+    let _ = f.total_bytes();
+    let _ = f.bytes_where(|n| n.contains('.'));
+    let _ = f.advise_prefix("b0.");
+    for n in &names {
+        let _ = f.entry(n);
+        let _ = f.raw(n);
+        let _ = f.vec_f32(n);
+        let _ = f.vec_i32(n);
+        let _ = f.mat(n);
+        let _ = f.row_f16(n, 0);
+        let _ = f.row_f16(n, 3);
+    }
+}
+
+#[test]
+fn fuzz_rkv_parser() {
+    let seeds = rkv_seeds();
+    let out = fuzz_bytes(&seeds, iters(), 0x52_4b56, |bytes| {
+        if let Ok(f) = RkvFile::open_bytes(bytes) {
+            exercise_rkv(&f);
+        }
+    });
+    out.assert_clean("rkv");
+}
+
+fn statefile_seeds() -> Vec<Vec<u8>> {
+    let mut st = RwkvState::zero(2, 8, 2, 4);
+    for v in st.att_x.iter_mut().chain(st.wkv.iter_mut()).chain(st.ffn_x.iter_mut()) {
+        for (j, x) in v.iter_mut().enumerate() {
+            *x = j as f32 * 0.125 - 1.0;
+        }
+    }
+    let one = statefile_bytes("m:1:2", &[(&[2u32, 5, 9], &st)]).unwrap();
+    let two = statefile_bytes("", &[(&[4u32], &st), (&[4u32, 7], &st)]).unwrap();
+    vec![one, two]
+}
+
+/// Recompute the trailing FNV word so a mutated body passes the
+/// integrity gate — otherwise ~every mutation dies at the checksum and
+/// the actual entry parser never sees fuzzed bytes.
+fn reseal(bytes: &[u8]) -> Option<Vec<u8>> {
+    if bytes.len() < 4 {
+        return None;
+    }
+    let mut out = bytes[..bytes.len() - 4].to_vec();
+    let digest = statefile_checksum(&out);
+    out.extend_from_slice(&digest.to_le_bytes());
+    Some(out)
+}
+
+#[test]
+fn fuzz_statefile_parser() {
+    let seeds = statefile_seeds();
+    let out = fuzz_bytes(&seeds, iters(), 0x52_5753, |bytes| {
+        // raw: exercises the magic/length/checksum gates
+        let _ = read_statefile_bytes(bytes, "fuzz");
+        // resealed: exercises the shape/count/payload validation behind
+        // a valid checksum
+        if let Some(sealed) = reseal(bytes) {
+            let _ = read_statefile_bytes(&sealed, "fuzz-sealed");
+        }
+    });
+    out.assert_clean("statefile");
+}
+
+fn json_seeds() -> Vec<Vec<u8>> {
+    vec![
+        br#"{"prompt":"the quick","max_tokens":32,"temperature":0.8,"top_p":0.95}"#.to_vec(),
+        br#"{"a":[1,2.5,-3e4,true,false,null],"b":{"c":"A\n\"x\""}}"#.to_vec(),
+        br#"[[[{"deep":[1]}]]]"#.to_vec(),
+        br#""lone string with \\ escapes""#.to_vec(),
+        b"1e308".to_vec(),
+    ]
+}
+
+#[test]
+fn fuzz_json_parser() {
+    let seeds = json_seeds();
+    let out = fuzz_bytes(&seeds, iters(), 0x4a_534f4e, |bytes| {
+        let Ok(text) = std::str::from_utf8(bytes) else {
+            return;
+        };
+        if let Ok(v) = json::parse(text) {
+            // writer/parser closure: anything the parser accepts, the
+            // writer must serialize to something the parser re-accepts
+            // (non-finite numbers print as null — still re-parseable)
+            let emitted = v.to_string();
+            json::parse(&emitted).unwrap_or_else(|e| {
+                panic!("writer output failed to reparse: {e}\n  emitted: {emitted}")
+            });
+        }
+    });
+    out.assert_clean("json");
+}

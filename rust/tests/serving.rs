@@ -639,6 +639,59 @@ fn tcp_deadline_wire_shape() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Numeric extremes and malformed JSON over the wire (PR 7, rides the
+/// parser-fuzzing work): `1e999` overflows f64 to inf, `1e-999`
+/// underflows to 0, `9e18` exceeds the sane cap, a literal `NaN` is a
+/// JSON syntax error, and absurd nesting trips the depth limit — every
+/// one must come back as a structured error line with the connection
+/// still usable.  An over-long request line (the one unrecoverable case:
+/// no frame boundary to resync on) gets an error line and a close.
+#[test]
+fn tcp_extreme_numerics_and_malformed_json() {
+    let (server, dir) =
+        synth_server("extreme", "127.0.0.1:17376", 1, AdmissionPolicy::default(), None);
+    let mut client = Client::connect("127.0.0.1:17376").unwrap();
+    let deep = format!(r#"{{"prompt":{}"x"{}}}"#, "[".repeat(200), "]".repeat(200));
+    let bad = [
+        (r#"{"prompt":"w5","temperature":1e999}"#, "invalid temperature"),
+        (r#"{"prompt":"w5","max_tokens":1e999}"#, "invalid max_tokens"),
+        (r#"{"prompt":"w5","max_tokens":9e18}"#, "invalid max_tokens"),
+        (r#"{"prompt":"w5","top_p":1e-999}"#, "invalid top_p"),
+        (r#"{"prompt":"w5","temperature":NaN}"#, "bad request"),
+        (deep.as_str(), "bad request"),
+    ];
+    for (req, want) in bad {
+        let lines = client.request_raw(req).unwrap();
+        assert_eq!(lines.len(), 1, "one terminal error line for {want}: {lines:?}");
+        let v = json::parse(&lines[0]).unwrap();
+        let err = v.str_at(&["error"]).expect("structured error field");
+        assert!(err.contains(want), "error '{err}' should mention '{want}'");
+    }
+    // connection survived all of the above
+    let done = client.complete("w5 w6", 2, 0.0).unwrap();
+    assert!(done.tokens > 0);
+    // a >1 MiB request line: the server sends a best-effort error line
+    // and closes (no newline was seen, so there is no resync point).
+    // Closing with unread bytes still in the socket makes the kernel
+    // reset the connection, which can race the error line's delivery —
+    // accept any of {error line, clean EOF, reset}, but never a hang or
+    // a served request
+    let huge = format!(r#"{{"prompt":"{}"}}"#, "w".repeat(1 << 20));
+    match client.request_raw(&huge) {
+        Ok(lines) => {
+            assert!(lines.len() <= 1, "over-cap line must not be served: {lines:?}");
+            if let Some(first) = lines.first() {
+                let v = json::parse(first).unwrap();
+                assert!(v.str_at(&["error"]).unwrap().contains("request line exceeds"));
+            }
+        }
+        Err(_) => {} // connection reset before the error line arrived
+    }
+    drop(client);
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn tcp_server_round_trip() {
     if !have("rwkv-ours-tiny") {
