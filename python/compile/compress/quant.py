@@ -74,3 +74,100 @@ def quant_error(w: np.ndarray, bits: int) -> float:
     """Relative Frobenius error introduced by `bits`-bit quantization."""
     q, s = int_quant(w, bits)
     return float(np.linalg.norm(w - int_dequant(q, s)) / (np.linalg.norm(w) + 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Group-quantized streaming weights (Q4 / Q4_1) — rust/src/tensor/q4.rs
+# ---------------------------------------------------------------------------
+
+#: Elements per quantization group, along the row (col) axis.
+Q4_GROUP = 32
+
+
+def _pack_nibbles(nib: np.ndarray, cols: int) -> np.ndarray:
+    """Pack a (rows, padded_cols) array of 4-bit values two-per-byte:
+    even col -> LOW nibble, odd col -> HIGH nibble of byte (r, c // 2)."""
+    packed = (nib[:, 0::2] | (nib[:, 1::2] << 4)).astype(np.uint8)
+    return np.ascontiguousarray(packed[:, : (cols + 1) // 2])
+
+
+def group_q4(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Q4: 32-element groups along cols, per-group symmetric f16 scale.
+
+    Returns (packed (rows, ceil(cols/2)) u8, scale (rows, ceil(cols/32)) f16).
+    Bit-exact with rust `tensor::q4::quantize_q4`: the quantizer divides by
+    the f16-ROUNDED scale (so python and rust agree on every nibble), all
+    arithmetic stays in float32, rounding is ties-to-even (np.round), and
+    the pad nibble of an odd trailing column is 8 (offset-binary zero).
+    """
+    w = np.ascontiguousarray(w, np.float32)
+    rows, cols = w.shape
+    ng = -(-cols // Q4_GROUP)
+    pcols = ng * Q4_GROUP
+    wp = np.zeros((rows, pcols), np.float32)
+    wp[:, :cols] = w
+    g = wp.reshape(rows, ng, Q4_GROUP)
+    amax = np.abs(g).max(axis=2)  # zero padding is inert under |.|max
+    sbits = (amax / np.float32(7.0)).astype(np.float16)
+    s = sbits.astype(np.float32)
+    denom = np.where(s == 0.0, np.float32(1.0), s)
+    q = np.clip(np.round(g / denom[:, :, None]), -7, 7).astype(np.int16) + 8
+    nib = q.reshape(rows, pcols).astype(np.uint8)
+    nib[:, cols:] = 8
+    return _pack_nibbles(nib, cols), sbits
+
+
+def group_q4_dequant(packed: np.ndarray, scale: np.ndarray, cols: int) -> np.ndarray:
+    """Inverse of `group_q4` (float32), matching rust `dq4` per element."""
+    rows = packed.shape[0]
+    nib = np.empty((rows, packed.shape[1] * 2), np.int16)
+    nib[:, 0::2] = (packed & 0xF).astype(np.int16) - 8
+    nib[:, 1::2] = ((packed >> 4) & 0xF).astype(np.int16) - 8
+    s = np.repeat(scale.astype(np.float32), Q4_GROUP, axis=1)
+    return s[:, :cols] * nib[:, :cols].astype(np.float32)
+
+
+def group_q4_1(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Q4_1: per-group affine — f16 scale (range/15) plus f16 min offset.
+
+    Returns (packed, scale (rows, ng) f16, min (rows, ng) f16).  Bit-exact
+    with rust `tensor::q4::quantize_q4_1`: min/max are taken over the REAL
+    elements only (ragged groups padded with +/-inf, never zero), both
+    parameters are f16-rounded before quantizing, and the pad nibble of an
+    odd trailing column is 0.
+    """
+    w = np.ascontiguousarray(w, np.float32)
+    rows, cols = w.shape
+    ng = -(-cols // Q4_GROUP)
+    pcols = ng * Q4_GROUP
+    lo = np.full((rows, pcols), np.inf, np.float32)
+    hi = np.full((rows, pcols), -np.inf, np.float32)
+    lo[:, :cols] = w
+    hi[:, :cols] = w
+    mn = lo.reshape(rows, ng, Q4_GROUP).min(axis=2)
+    mx = hi.reshape(rows, ng, Q4_GROUP).max(axis=2)
+    sbits = ((mx - mn) / np.float32(15.0)).astype(np.float16)
+    mbits = mn.astype(np.float16)
+    s = sbits.astype(np.float32)
+    m = mbits.astype(np.float32)
+    denom = np.where(s == 0.0, np.float32(1.0), s)
+    wp = np.zeros((rows, pcols), np.float32)
+    wp[:, :cols] = w
+    g = wp.reshape(rows, ng, Q4_GROUP)
+    q = np.clip(np.round((g - m[:, :, None]) / denom[:, :, None]), 0, 15)
+    nib = q.reshape(rows, pcols).astype(np.uint8)
+    nib[:, cols:] = 0
+    return _pack_nibbles(nib, cols), sbits, mbits
+
+
+def group_q4_1_dequant(
+    packed: np.ndarray, scale: np.ndarray, mn: np.ndarray, cols: int
+) -> np.ndarray:
+    """Inverse of `group_q4_1` (float32), matching rust `dq4_1`."""
+    rows = packed.shape[0]
+    nib = np.empty((rows, packed.shape[1] * 2), np.uint8)
+    nib[:, 0::2] = packed & 0xF
+    nib[:, 1::2] = (packed >> 4) & 0xF
+    s = np.repeat(scale.astype(np.float32), Q4_GROUP, axis=1)[:, :cols]
+    m = np.repeat(mn.astype(np.float32), Q4_GROUP, axis=1)[:, :cols]
+    return s * nib[:, :cols].astype(np.float32) + m

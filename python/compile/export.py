@@ -54,7 +54,7 @@ import numpy as np
 from .common import ModelConfig
 from .compress import quant
 
-DTYPES = {"f32": 0, "f16": 1, "i8": 2, "u8": 3, "i32": 4}
+DTYPES = {"f32": 0, "f16": 1, "i8": 2, "u8": 3, "i32": 4, "q4": 5, "q4_1": 6}
 _NP_OF = {0: np.float32, 1: np.float16, 2: np.int8, 3: np.uint8, 4: np.int32}
 
 ALIGN = 64
@@ -67,15 +67,43 @@ def _dtype_code(a: np.ndarray) -> int:
     raise TypeError(f"unsupported dtype {a.dtype}")
 
 
-def write_rkv(path: str, tensors: Dict[str, np.ndarray]) -> int:
-    """Write tensors; returns total bytes written."""
+class PackedTensor:
+    """A sub-byte tensor staged for `write_rkv`: the dtype code cannot be
+    inferred from a numpy dtype, and the LOGICAL shape (rows, cols) does
+    not match the packed payload's byte count, so both are explicit.
+
+    For q4/q4_1 the payload is the (rows, ceil(cols/2)) nibble-packed u8
+    array from `compress.quant.group_q4`/`group_q4_1`; the per-group f16
+    siblings are staged as ordinary float16 arrays alongside.
+    """
+
+    def __init__(self, code: int, shape: Tuple[int, ...], data: np.ndarray):
+        self.code = int(code)
+        self.shape = tuple(int(d) for d in shape)
+        self.data = np.ascontiguousarray(data, np.uint8)
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.nbytes
+
+
+def _staged(v) -> Tuple[np.ndarray, int, Tuple[int, ...]]:
+    """Normalize a tensor-dict value to (payload array, dtype code, shape)."""
+    if isinstance(v, PackedTensor):
+        return v.data, v.code, v.shape
+    a = np.ascontiguousarray(v)
+    return a, _dtype_code(a), a.shape
+
+
+def write_rkv(path: str, tensors: Dict[str, Any]) -> int:
+    """Write tensors (ndarrays or PackedTensors); returns bytes written."""
     names = list(tensors.keys())
-    index: List[Tuple[str, np.ndarray, int]] = []
+    index: List[Tuple[str, np.ndarray, int, Tuple[int, ...], int]] = []
     off = 0
     for n in names:
-        a = np.ascontiguousarray(tensors[n])
+        a, code, shape = _staged(tensors[n])
         off = (off + ALIGN - 1) // ALIGN * ALIGN
-        index.append((n, a, off))
+        index.append((n, a, code, shape, off))
         off += a.nbytes
 
     header = bytearray()
@@ -83,11 +111,11 @@ def write_rkv(path: str, tensors: Dict[str, np.ndarray]) -> int:
     header += struct.pack("<II", 1, len(names))
     header_fixed_end = len(header) + 8  # u64 data_offset comes next
     body = bytearray()
-    for n, a, toff in index:
+    for n, a, code, shape, toff in index:
         nb = n.encode()
         body += struct.pack("<H", len(nb)) + nb
-        body += struct.pack("<BB", _dtype_code(a), a.ndim)
-        body += struct.pack(f"<{a.ndim}I", *a.shape)
+        body += struct.pack("<BB", code, len(shape))
+        body += struct.pack(f"<{len(shape)}I", *shape)
         body += struct.pack("<QQ", toff, a.nbytes)
     data_offset = (header_fixed_end + len(body) + ALIGN - 1) // ALIGN * ALIGN
     header += struct.pack("<Q", data_offset)
@@ -97,7 +125,7 @@ def write_rkv(path: str, tensors: Dict[str, np.ndarray]) -> int:
         f.write(body)
         f.write(b"\0" * (data_offset - header_fixed_end - len(body)))
         pos = 0
-        for n, a, toff in index:
+        for n, a, code, shape, toff in index:
             if toff > pos:
                 f.write(b"\0" * (toff - pos))
                 pos = toff
@@ -107,8 +135,9 @@ def write_rkv(path: str, tensors: Dict[str, np.ndarray]) -> int:
     return total
 
 
-def read_rkv(path: str) -> Dict[str, np.ndarray]:
-    """Reader (used by round-trip tests; rust has its own)."""
+def read_rkv(path: str) -> Dict[str, Any]:
+    """Reader (used by round-trip tests; rust has its own).  Sub-byte
+    tensors come back as `PackedTensor` (payload bytes + logical shape)."""
     with open(path, "rb") as f:
         raw = f.read()
     assert raw[:4] == b"RKV1"
@@ -116,7 +145,7 @@ def read_rkv(path: str) -> Dict[str, np.ndarray]:
     assert version == 1
     (data_offset,) = struct.unpack_from("<Q", raw, 12)
     pos = 20
-    out: Dict[str, np.ndarray] = {}
+    out: Dict[str, Any] = {}
     for _ in range(n):
         (nl,) = struct.unpack_from("<H", raw, pos)
         pos += 2
@@ -128,8 +157,13 @@ def read_rkv(path: str) -> Dict[str, np.ndarray]:
         pos += 4 * nd
         off, nbytes = struct.unpack_from("<QQ", raw, pos)
         pos += 16
-        a = np.frombuffer(raw, dtype=_NP_OF[dt], count=nbytes // np.dtype(_NP_OF[dt]).itemsize, offset=data_offset + off)
-        out[name] = a.reshape(dims)
+        if dt in (DTYPES["q4"], DTYPES["q4_1"]):
+            rows, cols = dims
+            payload = np.frombuffer(raw, np.uint8, count=nbytes, offset=data_offset + off)
+            out[name] = PackedTensor(dt, dims, payload.reshape(rows, (cols + 1) // 2))
+        else:
+            a = np.frombuffer(raw, dtype=_NP_OF[dt], count=nbytes // np.dtype(_NP_OF[dt]).itemsize, offset=data_offset + off)
+            out[name] = a.reshape(dims)
     return out
 
 
@@ -142,14 +176,27 @@ def read_rkv(path: str) -> Dict[str, np.ndarray]:
 _MATRIX_MIN = 1 << 12
 
 
-def _emit(tensors: Dict[str, np.ndarray], name: str, a: np.ndarray, precision: str,
+def _emit(tensors: Dict[str, Any], name: str, a: np.ndarray, precision: str,
           transpose: bool = False):
     """Store a tensor; if `transpose`, quantize per-output-column first (the
-    semantics of the original x@W orientation) then store W^T row-major."""
+    semantics of the original x@W orientation) then store W^T row-major.
+
+    `q4`/`q4_1` group-quantize along the STORED row axis (32-element
+    groups) and stage the packed nibbles plus f16 `.scale` (and `.min`)
+    siblings — exactly the layout rust `tensor::q4` consumes."""
     a = np.asarray(a)
-    if a.ndim == 2 and a.size >= _MATRIX_MIN and precision in ("f16", "int8"):
+    if a.ndim == 2 and a.size >= _MATRIX_MIN and precision in ("f16", "int8", "q4", "q4_1"):
         if precision == "f16":
             tensors[name] = (a.T if transpose else a).astype(np.float16)
+        elif precision in ("q4", "q4_1"):
+            w = np.ascontiguousarray(a.T if transpose else a, np.float32)
+            if precision == "q4":
+                packed, scale = quant.group_q4(w)
+            else:
+                packed, scale, mn = quant.group_q4_1(w)
+                tensors[name + ".min"] = mn
+            tensors[name] = PackedTensor(DTYPES[precision], w.shape, packed)
+            tensors[name + ".scale"] = scale
         else:
             q, scale = quant.int_quant(a.astype(np.float32), 8)
             tensors[name] = np.ascontiguousarray(q.T) if transpose else q
@@ -161,7 +208,13 @@ def _emit(tensors: Dict[str, np.ndarray], name: str, a: np.ndarray, precision: s
 def _emit_proj(tensors, prefix: str, p: Dict[str, np.ndarray], precision: str):
     for key in ("w", "l", "r", "d"):
         if key in p:
-            _emit(tensors, f"{prefix}.{key}", p[key], precision)
+            # hybrid recipe (RWKVQuant): only the large dense `.w` takes
+            # the group-quantized format; low-rank factors are small and
+            # outlier-dense, so they stay f16 under a q4 export
+            kp = precision
+            if precision in ("q4", "q4_1") and key != "w":
+                kp = "f16"
+            _emit(tensors, f"{prefix}.{key}", p[key], kp)
 
 
 def model_tensors(
@@ -173,8 +226,14 @@ def model_tensors(
     hier_head: Optional[Dict[str, np.ndarray]] = None,
     shadows4: Optional[List[Dict[str, np.ndarray]]] = None,
 ) -> Dict[str, np.ndarray]:
-    t: Dict[str, np.ndarray] = {}
-    _emit(t, "emb", params["emb"], precision)
+    t: Dict[str, Any] = {}
+    # hybrid selection under a q4 export: embeddings are row-streamed and
+    # outlier-heavy, so they stay f16; ffn.wv takes the offset-carrying
+    # q4_1 variant; everything else large and dense goes q4
+    qmode = precision in ("q4", "q4_1")
+    emb_prec = "f16" if qmode else precision
+    wv_prec = "q4_1" if qmode else precision
+    _emit(t, "emb", params["emb"], emb_prec)
     # head stored transposed (V, D): row per vocab token (see module doc).
     _emit(t, "head", params["head"], precision, transpose=True)
     for ln in ("ln0", "ln_out"):
@@ -200,7 +259,7 @@ def model_tensors(
         _emit_proj(t, f"{p}.ffn.wr", ffn["wr"], precision)
         # wk stored transposed (F, D): row per FFN neuron (see module doc).
         _emit(t, f"{p}.ffn.wk_t", ffn["wk"], precision, transpose=True)
-        _emit(t, f"{p}.ffn.wv", ffn["wv"], precision)
+        _emit(t, f"{p}.ffn.wv", ffn["wv"], wv_prec)
         if predictors is not None:
             # predictors are auxiliary nets: always INT8 regardless of the
             # model precision (their job is a binary decision; quantization

@@ -107,6 +107,60 @@ def test_nibble_quant_round_trip(rng):
         assert np.all(np.abs(back - w) <= scale / 2 + 1e-6)
 
 
+def test_group_q4_round_trip(rng):
+    for cols in (32, 40, 37, 5):  # whole, multi-group, ragged, sub-group
+        w = rng.standard_normal((7, cols)).astype(np.float32)
+        packed, scale = quant.group_q4(w)
+        assert packed.dtype == np.uint8 and packed.shape == (7, (cols + 1) // 2)
+        assert scale.dtype == np.float16
+        assert scale.shape == (7, -(-cols // quant.Q4_GROUP))
+        back = quant.group_q4_dequant(packed, scale, cols)
+        # symmetric 4-bit: error bounded by half a quantization step
+        step = np.repeat(scale.astype(np.float32), quant.Q4_GROUP, axis=1)[:, :cols]
+        assert np.all(np.abs(back - w) <= step / 2 + 1e-6)
+
+
+def test_group_q4_1_round_trip(rng):
+    for cols in (32, 40, 37, 5):
+        w = rng.standard_normal((7, cols)).astype(np.float32)
+        packed, scale, mn = quant.group_q4_1(w)
+        assert packed.shape == (7, (cols + 1) // 2)
+        assert scale.dtype == np.float16 and mn.dtype == np.float16
+        back = quant.group_q4_1_dequant(packed, scale, mn, cols)
+        # affine 4-bit: half a step plus the f16 rounding of the offset
+        step = np.repeat(scale.astype(np.float32), quant.Q4_GROUP, axis=1)[:, :cols]
+        slack = step / 2 + np.abs(w) * 1e-3 + 1e-6
+        assert np.all(np.abs(back - w) <= slack)
+
+
+def test_group_q4_pad_nibbles_are_canonical(rng):
+    # odd trailing column: high nibble of the last byte must be 8 for q4
+    # (offset-binary zero) and 0 for q4_1 — the rust reader relies on the
+    # quantizers being bit-deterministic about bytes it never dequantizes
+    w = rng.standard_normal((3, 5)).astype(np.float32)
+    packed, _ = quant.group_q4(w)
+    assert np.all(packed[:, 2] >> 4 == 8)
+    packed1, _, _ = quant.group_q4_1(w)
+    assert np.all(packed1[:, 2] >> 4 == 0)
+
+
+def test_group_q4_1_ragged_group_ignores_padding(rng):
+    # every value in the ragged final group is >= 2: zero-padding would
+    # drag the group minimum to 0 and corrupt the offset — the quantizer
+    # must take min/max over REAL elements only
+    w = 2.0 + rng.random((4, 40)).astype(np.float32)
+    _, _, mn = quant.group_q4_1(w)
+    assert np.all(mn.astype(np.float32) >= 1.9)
+
+
+def test_group_q4_zero_group_survives(rng):
+    w = np.zeros((2, 64), np.float32)
+    packed, scale = quant.group_q4(w)
+    assert np.all(scale == 0)
+    back = quant.group_q4_dequant(packed, scale, 64)
+    assert np.all(back == 0)
+
+
 def test_nibble_more_accurate_than_sign(rng):
     w = rng.standard_normal((64, 32)).astype(np.float32)
     p4, s4 = quant.nibble_quant(w)

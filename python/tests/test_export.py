@@ -103,6 +103,45 @@ def test_int8_transposed_quant_consistency(rng, monkeypatch):
     np.testing.assert_allclose(back, w.T, atol=float(np.abs(w).max() / 100))
 
 
+def test_q4_packed_round_trip(tmp_path, rng):
+    from compile.compress import quant
+
+    w = rng.standard_normal((6, 37)).astype(np.float32)  # ragged + odd
+    packed, scale = quant.group_q4(w)
+    tensors = {
+        "w": export.PackedTensor(export.DTYPES["q4"], w.shape, packed),
+        "w.scale": scale,
+    }
+    path = str(tmp_path / "q.rkv")
+    export.write_rkv(path, tensors)
+    back = export.read_rkv(path)
+    assert isinstance(back["w"], export.PackedTensor)
+    assert back["w"].code == export.DTYPES["q4"]
+    assert back["w"].shape == (6, 37)
+    np.testing.assert_array_equal(back["w"].data, packed)
+    assert back["w.scale"].dtype == np.float16
+    np.testing.assert_array_equal(back["w.scale"], scale)
+
+
+def test_q4_export_hybrid_selection(monkeypatch):
+    monkeypatch.setattr(export, "_MATRIX_MIN", 1)  # tiny test dims
+    p = rwkv.init(TINY, 3)
+    t = export.model_tensors(p, TINY, precision="q4")
+    # big dense matrices go q4 with f16 per-group scale blocks
+    assert isinstance(t["head"], export.PackedTensor)
+    assert t["head"].code == export.DTYPES["q4"]
+    assert t["head"].shape == (64, 32)
+    assert t["head.scale"].dtype == np.float16
+    assert t["head.scale"].shape == (64, 1)
+    assert isinstance(t["b0.att.wr.w"], export.PackedTensor)
+    assert isinstance(t["b0.ffn.wk_t"], export.PackedTensor)
+    # ffn.wv takes the affine q4_1 variant with a .min sibling
+    assert t["b0.ffn.wv"].code == export.DTYPES["q4_1"]
+    assert "b0.ffn.wv.min" in t
+    # hybrid recipe: embeddings stay f16
+    assert t["emb"].dtype == np.float16
+
+
 def test_export_model_writes_manifest(tmp_path):
     p = rwkv.init(TINY, 2)
     path = export.export_model(str(tmp_path), "m", p, TINY, "f16")

@@ -45,14 +45,35 @@ fn main() {
             matvec_in_out(&x, &w8, &mut out, &mut acc);
         });
         println!("    -> {:.2} GB/s", bytes32 / 4.0 / s.p50_s / 1e9);
+        // group-quantized: GB/s is computed over the PACKED footprint
+        // (nibbles + f16 group scales), the bytes that actually stream
+        let wq4 = Mat::quantize_q4_mat(rows, cols, &wf);
+        let wq41 = Mat::quantize_q4_1_mat(rows, cols, &wf);
+        let (bq4, bq41) = (wq4.nbytes() as f64, wq41.nbytes() as f64);
+        let s = bench(&format!("matvec_in_out q4  {rows}x{cols} (fused dequant)"), 50, 0.4, || {
+            out.fill(0.0);
+            matvec_in_out(&x, &wq4, &mut out, &mut acc);
+        });
+        println!("    -> {:.2} GB/s", bq4 / s.p50_s / 1e9);
+        let s = bench(&format!("matvec_in_out q4_1 {rows}x{cols} (fused dequant)"), 50, 0.4, || {
+            out.fill(0.0);
+            matvec_in_out(&x, &wq41, &mut out, &mut acc);
+        });
+        println!("    -> {:.2} GB/s", bq41 / s.p50_s / 1e9);
         bench(&format!("matvec_rows   f16 {rows}x{cols}"), 50, 0.4, || {
             matvec_rows(&w16, &xc, &mut out_r);
+        });
+        bench(&format!("matvec_rows   q4  {rows}x{cols}"), 50, 0.4, || {
+            matvec_rows(&wq4, &xc, &mut out_r);
         });
         // sparse row selection at 80% sparsity (the paper's regime)
         let idx: Vec<u32> = (0..rows as u32).filter(|i| i % 5 == 0).collect();
         let mut out_s = vec![0.0f32; idx.len()];
         bench(&format!("matvec_rows_indexed f16 {}/{} rows", idx.len(), rows), 50, 0.4, || {
             matvec_rows_indexed(&w16, &idx, &xc, &mut out_s);
+        });
+        bench(&format!("matvec_rows_indexed q4  {}/{} rows", idx.len(), rows), 50, 0.4, || {
+            matvec_rows_indexed(&wq4, &idx, &xc, &mut out_s);
         });
         println!();
     }

@@ -42,7 +42,9 @@
 //! `-- --strategy layerwise` runs parts 1–3 under layerwise loading so CI
 //! exercises the streaming+prefetch path in release (part 4 always runs
 //! both prefetch settings); `-- --state-cache-mb N` enables part 5 with
-//! an N-MiB cache budget (omitted, part 5 is skipped).
+//! an N-MiB cache budget (omitted, part 5 is skipped); `-- --overload`
+//! enables part 6 (bounded-admission shedding); `-- --quantized` enables
+//! part 7 (f16 vs Q4 bytes-per-round, asserting the <= 0.55x contract).
 
 use std::path::{Path, PathBuf};
 
@@ -131,6 +133,11 @@ fn main() {
     // on the flag so the other CI smoke invocations stay distinct
     if args.iter().any(|a| a == "--overload") {
         overload_smoke(&model, &artifacts, smoke, threads, strategy);
+    }
+    // `--quantized`: part 7, the sub-byte-weights release smoke — builds
+    // its own f16 + q4 checkpoints, so it ignores the shared model
+    if args.iter().any(|a| a == "--quantized") {
+        quantized_smoke(smoke, threads, strategy);
     }
 
     if let Some(dir) = synth_guard {
@@ -494,6 +501,88 @@ fn state_cache_sweep(
     // every request after the first MUST hit the shared prefix
     assert!(st.hits as usize >= n_req - 1, "warm requests must hit the prefix-state cache");
     assert!(st.hit_tokens > 0, "cache hits must actually skip prefill tokens");
+}
+
+/// Part 7 — quantized-weights release smoke (CI runs `--smoke
+/// --quantized`): the same synthetic model exported twice — f16 vs the
+/// group-quantized Q4 hybrid recipe — and decoded under identical
+/// configs.  Decode is bandwidth-bound, so the quantized round's weight
+/// pass is the whole point: the smoke ASSERTS quantized GB/round <=
+/// 0.55x the f16 figure (packed nibbles + f16 group scales ~ 0.31x per
+/// matrix; embeddings and norms stay float).  Bit-exactness of the
+/// quantized kernels is covered by `tests/properties.rs` and the
+/// equivalence suites — this part pins the byte economics.
+fn quantized_smoke(smoke: bool, threads: usize, strategy: LoadStrategy) {
+    let (batch, steps): (usize, usize) = if smoke { (2, 6) } else { (4, 24) };
+    println!("\nquantized streaming weights: f16 vs q4 checkpoint (batch {batch})\n");
+    println!(
+        "{:>8} {:>12} {:>14} {:>12} {:>12}",
+        "format", "ckpt MiB", "GB/round", "agg tok/s", "rounds"
+    );
+    let mut gb_per_round = [0.0f64; 2];
+    for (slot, q4) in [(0usize, false), (1, true)] {
+        let tag = if q4 { "q4" } else { "f16" };
+        let dir =
+            std::env::temp_dir().join(format!("rwkv-bench-quant-{tag}-{}", std::process::id()));
+        let mut spec = SynthSpec::tiny();
+        spec.layers = 6;
+        spec.heads = 12;
+        spec.head_size = 16; // D=192, the paper's medium shape
+        spec.ffn = 672;
+        spec.vocab = 1024;
+        spec.f16 = true;
+        spec.q4 = q4;
+        // pure dense rounds: predictors / hierarchical head would make the
+        // streamed-row set input-dependent and cloud the byte comparison
+        spec.predictors = false;
+        spec.hier_head = false;
+        write_synth_rwkv(&dir, "synthetic-quant", &spec).expect("synth model");
+        let ckpt_bytes = std::fs::metadata(dir.join("models/synthetic-quant.rkv"))
+            .map(|m| m.len())
+            .unwrap_or(0);
+        let mut cfg = EngineConfig::all_techniques("synthetic-quant", dir.clone());
+        cfg.threads = threads;
+        cfg.strategy = strategy;
+        let mut engine = RwkvEngine::load(cfg).expect("load engine");
+        let mut sessions: Vec<Session> = (0..batch)
+            .map(|i| {
+                let mut s = Session::new(&engine, i as u64, &[2, 10 + i as u32]);
+                s.max_tokens = steps + 8; // never finishes inside the loop
+                s
+            })
+            .collect();
+        // move every session into Decode (consume the tiny prompts)
+        while sessions
+            .iter()
+            .any(|s| !matches!(s.phase(), rwkv_lite::engine::session::Phase::Decode))
+        {
+            engine.step_round(&mut sessions).expect("prefill round");
+        }
+        let (mut bytes, mut rounds) = (0u64, 0u64);
+        let wall = Stopwatch::start();
+        for _ in 0..steps {
+            let report = engine.step_round(&mut sessions).expect("decode round");
+            bytes += report.round_weight_bytes;
+            rounds += 1;
+        }
+        let secs = wall.elapsed_secs();
+        gb_per_round[slot] = bytes as f64 / rounds as f64 / 1e9;
+        println!(
+            "{:>8} {:>12.2} {:>14.6} {:>12.1} {:>12}",
+            tag,
+            ckpt_bytes as f64 / (1 << 20) as f64,
+            gb_per_round[slot],
+            (steps * batch) as f64 / secs,
+            rounds,
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    let ratio = gb_per_round[1] / gb_per_round[0];
+    println!("\nquantized/f16 bytes-per-round ratio: {ratio:.3} (contract: <= 0.55)");
+    assert!(
+        ratio <= 0.55,
+        "quantized round must stream <= 0.55x the f16 weight bytes, got {ratio:.3}"
+    );
 }
 
 /// Part 6 — overload release smoke (CI runs `--smoke --overload`): a

@@ -17,6 +17,7 @@ use crate::io::{Manifest, RkvFile};
 use crate::metrics::{Group, MemTracker};
 use crate::pool::{Par, Task, ThreadPool};
 use crate::sync::{Arc, Mutex};
+use crate::tensor::q4::{dot_q4, dot_q4_1, dq4, dq4_1, q4_groups, q4_row_packed_bytes};
 use crate::tensor::{matmat_in_out_par, matvec_in_out, DType, Mat};
 use crate::util::cast::cast_slice_len;
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
@@ -170,9 +171,39 @@ impl WeightStore {
             DType::F16 => RowData::F16(cast_slice_len::<u16>(raw, rows * cols)?),
             DType::F32 => RowData::F32(cast_slice_len::<f32>(raw, rows * cols)?),
             DType::I8 => RowData::I8(cast_slice_len::<i8>(raw, rows * cols)?),
+            // Q4/Q4_1 group scales live inside RowData (per-row slices of
+            // the f16 sibling tensors) and are folded in per element by
+            // dot_row/accum_row, so `RowView::scale` stays None and
+            // `apply_col_scale` is a no-op for these dtypes.
+            DType::Q4 => RowData::Q4 {
+                packed: raw,
+                scale: self.q4_sibling(name, "scale", rows, cols)?,
+            },
+            DType::Q41 => RowData::Q41 {
+                packed: raw,
+                scale: self.q4_sibling(name, "scale", rows, cols)?,
+                min: self.q4_sibling(name, "min", rows, cols)?,
+            },
             other => bail!("row_view dtype {other:?} unsupported for {name}"),
         };
         Ok(RowView { dtype: e.dtype, rows, cols, data, scale })
+    }
+
+    /// Zero-copy per-group parameter sibling of a Q4/Q4_1 tensor,
+    /// validated to f16 `[rows, groups(cols)]` so per-row slicing in the
+    /// row kernels can never over-read.
+    fn q4_sibling(&self, base: &str, suffix: &str, rows: usize, cols: usize) -> Result<&[u16]> {
+        let name = format!("{base}.{suffix}");
+        let e = self.rkv.entry(&name)?;
+        let ng = q4_groups(cols);
+        if e.dtype != DType::F16 || e.shape != [rows, ng] {
+            bail!(
+                "tensor '{name}': quantized sibling must be f16 [{rows}, {ng}], got {:?} {:?}",
+                e.dtype,
+                e.shape
+            );
+        }
+        cast_slice_len::<u16>(self.rkv.raw(&name)?, rows * ng)
     }
 }
 
@@ -182,6 +213,8 @@ enum RowData<'a> {
     F16(&'a [u16]),
     F32(&'a [f32]),
     I8(&'a [i8]),
+    Q4 { packed: &'a [u8], scale: &'a [u16] },
+    Q41 { packed: &'a [u8], scale: &'a [u16], min: &'a [u16] },
 }
 
 /// Borrowed row-major matrix view in storage precision.
@@ -196,8 +229,15 @@ pub struct RowView<'a> {
 }
 
 impl<'a> RowView<'a> {
+    /// Stored bytes one row streams: packed payload plus the per-group
+    /// parameter bytes for the sub-byte dtypes (this is what the
+    /// technique byte-accounting charges per row touched).
     pub fn row_bytes(&self) -> u64 {
-        (self.cols * self.dtype.size()) as u64
+        match self.dtype {
+            DType::Q4 => (q4_row_packed_bytes(self.cols) + 2 * q4_groups(self.cols)) as u64,
+            DType::Q41 => (q4_row_packed_bytes(self.cols) + 4 * q4_groups(self.cols)) as u64,
+            d => (self.cols * d.size()) as u64,
+        }
     }
 
     /// `dot(row_j, x)` with per-ROW scale applied for i8.
@@ -210,6 +250,19 @@ impl<'a> RowView<'a> {
             RowData::I8(all) => {
                 let s = self.scale.as_ref().map(|s| s[j]).unwrap_or(1.0);
                 s * crate::tensor::dot_i8(&all[lo..lo + self.cols], x)
+            }
+            RowData::Q4 { packed, scale } => {
+                let (prb, ng) = (q4_row_packed_bytes(self.cols), q4_groups(self.cols));
+                dot_q4(&packed[j * prb..(j + 1) * prb], &scale[j * ng..(j + 1) * ng], x)
+            }
+            RowData::Q41 { packed, scale, min } => {
+                let (prb, ng) = (q4_row_packed_bytes(self.cols), q4_groups(self.cols));
+                dot_q4_1(
+                    &packed[j * prb..(j + 1) * prb],
+                    &scale[j * ng..(j + 1) * ng],
+                    &min[j * ng..(j + 1) * ng],
+                    x,
+                )
             }
         }
     }
@@ -233,6 +286,26 @@ impl<'a> RowView<'a> {
             RowData::I8(all) => {
                 for (o, &v) in out.iter_mut().zip(&all[lo..lo + self.cols]) {
                     *o += h * v as f32;
+                }
+            }
+            // group scales fold in per element here (unlike i8's deferred
+            // per-column fold), so `apply_col_scale` stays a no-op and the
+            // output may carry a residual at all times
+            RowData::Q4 { packed, scale } => {
+                let (prb, ng) = (q4_row_packed_bytes(self.cols), q4_groups(self.cols));
+                let prow = &packed[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                for (c, o) in out.iter_mut().enumerate() {
+                    *o += h * dq4(prow, srow, c);
+                }
+            }
+            RowData::Q41 { packed, scale, min } => {
+                let (prb, ng) = (q4_row_packed_bytes(self.cols), q4_groups(self.cols));
+                let prow = &packed[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                let mrow = &min[j * ng..(j + 1) * ng];
+                for (c, o) in out.iter_mut().enumerate() {
+                    *o += h * dq4_1(prow, srow, mrow, c);
                 }
             }
         }

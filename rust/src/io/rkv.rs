@@ -25,6 +25,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::io::Mmap;
+use crate::tensor::q4::{q4_groups, quantize_q4, quantize_q4_1};
 use crate::tensor::{DType, Mat};
 use crate::util::cast::{cast_slice, Pod};
 use crate::util::f16::f16_to_f32;
@@ -150,13 +151,15 @@ impl RkvFile {
             }
             // the shape must account for every stored byte: this is what
             // lets typed views be length-checked instead of trusted
-            let numel = shape
+            shape
                 .iter()
                 .try_fold(1usize, |acc, &d| acc.checked_mul(d))
                 .ok_or_else(|| anyhow!("tensor '{name}': element count overflows"))?;
-            let expect_bytes = (numel as u64)
-                .checked_mul(dtype.size() as u64)
-                .ok_or_else(|| anyhow!("tensor '{name}': byte count overflows"))?;
+            // sub-byte dtypes have a packed byte count (and a required
+            // rank); `bytes_for` owns that mapping for every dtype
+            let expect_bytes = dtype.bytes_for(&shape).ok_or_else(|| {
+                anyhow!("tensor '{name}': shape {shape:?} invalid for dtype {dtype:?}")
+            })?;
             if expect_bytes != nbytes {
                 bail!(
                     "tensor '{name}': shape {shape:?} x {dtype:?} wants {expect_bytes} bytes, \
@@ -227,7 +230,9 @@ impl RkvFile {
     }
 
     /// Load a 2-D matrix in its storage precision.  For `I8` tensors the
-    /// sibling `<name>.scale` vector is loaded alongside.
+    /// sibling `<name>.scale` vector is loaded alongside; for `Q4`/`Q4_1`
+    /// the per-group f16 siblings `<name>.scale` (and `<name>.min`) are
+    /// loaded and shape-validated against the group count.
     pub fn mat(&self, name: &str) -> Result<Mat> {
         let e = self.entry(name)?;
         if e.shape.len() != 2 {
@@ -241,8 +246,35 @@ impl RkvFile {
                 let scale = self.vec_f32(&format!("{name}.scale"))?;
                 Mat::I8 { rows, cols, data: self.typed::<i8>(name)?.to_vec(), scale }
             }
+            DType::Q4 => {
+                let scale = self.q4_param(name, "scale", rows, cols)?;
+                Mat::Q4 { rows, cols, data: self.raw(name)?.to_vec(), scale }
+            }
+            DType::Q41 => {
+                let scale = self.q4_param(name, "scale", rows, cols)?;
+                let min = self.q4_param(name, "min", rows, cols)?;
+                Mat::Q41 { rows, cols, data: self.raw(name)?.to_vec(), scale, min }
+            }
             other => bail!("tensor '{name}': dtype {:?} is not a matrix type", other),
         })
+    }
+
+    /// Load a per-group quantization parameter sibling (`<base>.<suffix>`)
+    /// of a Q4/Q4_1 matrix: must be f16 with shape `[rows, groups(cols)]`
+    /// so the fused kernels can index it without bounds hazards.
+    fn q4_param(&self, base: &str, suffix: &str, rows: usize, cols: usize) -> Result<Vec<u16>> {
+        let name = format!("{base}.{suffix}");
+        let e = self.entry(&name)?;
+        let ng = q4_groups(cols);
+        if e.dtype != DType::F16 || e.shape != [rows, ng] {
+            bail!(
+                "tensor '{name}': quantized sibling must be f16 [{rows}, {ng}], \
+                 got {:?} {:?}",
+                e.dtype,
+                e.shape
+            );
+        }
+        Ok(self.typed::<u16>(&name)?.to_vec())
     }
 
     /// Zero-copy row view of an f16 matrix (embedding cache fast path).
@@ -350,6 +382,57 @@ impl RkvTensor {
         debug_assert_eq!(shape.iter().product::<usize>(), v.len());
         Self { name: name.to_string(), dtype: DType::U8, shape, data: v }
     }
+
+    /// Stage raw f16 *bits* (already-rounded quantization parameters —
+    /// re-rounding through f32 would not be a bit-level no-op for NaN
+    /// payloads, so siblings are written verbatim).
+    pub fn f16_bits(name: &str, shape: Vec<usize>, bits: &[u16]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), bits.len());
+        let mut data = Vec::with_capacity(2 * bits.len());
+        for b in bits {
+            data.extend_from_slice(&b.to_le_bytes());
+        }
+        Self { name: name.to_string(), dtype: DType::F16, shape, data }
+    }
+
+    /// Quantize a row-major f32 matrix to Q4 and stage the packed tensor
+    /// plus its `.scale` sibling (append both to the tensor list).
+    pub fn q4_from_f32(name: &str, rows: usize, cols: usize, v: &[f32]) -> Vec<Self> {
+        let (packed, scale) = quantize_q4(rows, cols, v);
+        vec![
+            Self {
+                name: name.to_string(),
+                dtype: DType::Q4,
+                shape: vec![rows, cols],
+                data: packed,
+            },
+            Self::f16_bits(&format!("{name}.scale"), vec![rows, q4_groups(cols)], &scale),
+        ]
+    }
+
+    /// Quantize a row-major f32 matrix to Q4_1 and stage the packed
+    /// tensor plus its `.scale` and `.min` siblings.
+    pub fn q4_1_from_f32(name: &str, rows: usize, cols: usize, v: &[f32]) -> Vec<Self> {
+        let (packed, scale, min) = quantize_q4_1(rows, cols, v);
+        let ng = q4_groups(cols);
+        vec![
+            Self {
+                name: name.to_string(),
+                dtype: DType::Q41,
+                shape: vec![rows, cols],
+                data: packed,
+            },
+            Self::f16_bits(&format!("{name}.scale"), vec![rows, ng], &scale),
+            Self::f16_bits(&format!("{name}.min"), vec![rows, ng], &min),
+        ]
+    }
+
+    /// Stage an arbitrary pre-packed payload under an explicit dtype —
+    /// the malformed-image tests use this to write images the validated
+    /// constructors refuse to produce.
+    pub fn raw(name: &str, dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Self {
+        Self { name: name.to_string(), dtype, shape, data }
+    }
 }
 
 fn dtype_code(d: DType) -> u8 {
@@ -359,6 +442,8 @@ fn dtype_code(d: DType) -> u8 {
         DType::I8 => 2,
         DType::U8 => 3,
         DType::I32 => 4,
+        DType::Q4 => 5,
+        DType::Q41 => 6,
     }
 }
 
@@ -483,6 +568,63 @@ mod tests {
         let f = RkvFile::open_bytes(&bytes).unwrap();
         assert_eq!(f.row_f16("emb", 1).unwrap().len(), 3);
         assert!(f.row_f16("emb", 2).is_err(), "row past the end must Err");
+    }
+
+    #[test]
+    fn q4_write_then_read_round_trips_bitwise() {
+        // odd cols (17) exercises both a ragged group and a pad nibble
+        for (rows, cols) in [(3usize, 32usize), (2, 17), (4, 40)] {
+            let data: Vec<f32> = (0..rows * cols)
+                .map(|i| ((i * 37 + 11) % 23) as f32 * 0.17 - 1.9)
+                .collect();
+            let mut tensors = RkvTensor::q4_from_f32("w", rows, cols, &data);
+            tensors.extend(RkvTensor::q4_1_from_f32("v", rows, cols, &data));
+            let f = RkvFile::open_bytes(&rkv_bytes(&tensors)).unwrap();
+            assert_eq!(f.entry("w").unwrap().dtype, DType::Q4);
+            assert_eq!(f.entry("w").unwrap().shape, vec![rows, cols]);
+            // reader reconstructs exactly what the in-memory quantizer
+            // produces — payload, scale bits, and decoded values
+            let m = f.mat("w").unwrap();
+            assert_eq!(m, Mat::quantize_q4_mat(rows, cols, &data));
+            let m1 = f.mat("v").unwrap();
+            assert_eq!(m1, Mat::quantize_q4_1_mat(rows, cols, &data));
+        }
+    }
+
+    #[test]
+    fn q4_payload_size_mismatch_rejected_at_open() {
+        // a [2, 5] Q4 tensor packs to 2 * ceil(5/2) = 6 bytes; claiming
+        // 5 (as numel/2 truncation would) must fail at open
+        let t = RkvTensor::raw("w", DType::Q4, vec![2, 5], vec![0u8; 5]);
+        assert!(RkvFile::open_bytes(&rkv_bytes(&[t])).is_err());
+    }
+
+    #[test]
+    fn q4_non_matrix_rank_rejected_at_open() {
+        // sub-byte packing is only defined for rank 2 — a 1-D Q4 tensor
+        // has no well-defined packed size and must be rejected outright
+        let t = RkvTensor::raw("w", DType::Q4, vec![6], vec![0u8; 3]);
+        assert!(RkvFile::open_bytes(&rkv_bytes(&[t])).is_err());
+    }
+
+    #[test]
+    fn q4_bad_sibling_rejected_by_mat() {
+        let data = vec![0.5f32; 2 * 32];
+        // missing .scale sibling
+        let main = RkvTensor::q4_from_f32("w", 2, 32, &data).remove(0);
+        let f = RkvFile::open_bytes(&rkv_bytes(&[main])).unwrap();
+        assert!(f.mat("w").is_err(), "missing .scale must Err, not panic");
+        // .scale present but wrong shape (one group short)
+        let wide = vec![0.5f32; 2 * 64];
+        let mut tensors = RkvTensor::q4_from_f32("w", 2, 64, &wide);
+        tensors[1] = RkvTensor::f16_bits("w.scale", vec![2, 1], &[0x3C00, 0x3C00]);
+        let f = RkvFile::open_bytes(&rkv_bytes(&tensors)).unwrap();
+        assert!(f.mat("w").is_err(), "short .scale must Err, not over-read");
+        // .scale present but wrong dtype
+        let mut tensors = RkvTensor::q4_from_f32("w", 2, 32, &data);
+        tensors[1] = RkvTensor::f32("w.scale", vec![2, 1], &[1.0, 1.0]);
+        let f = RkvFile::open_bytes(&rkv_bytes(&tensors)).unwrap();
+        assert!(f.mat("w").is_err(), "f32 .scale must be rejected");
     }
 
     #[test]

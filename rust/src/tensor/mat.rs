@@ -2,6 +2,9 @@
 
 use anyhow::{bail, Result};
 
+use crate::tensor::q4::{
+    dequant_row_q4, dequant_row_q4_1, q4_groups, q4_row_packed_bytes, quantize_q4, quantize_q4_1,
+};
 use crate::util::f16::{f16_to_f32, f32_to_f16};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -11,14 +14,49 @@ pub enum DType {
     I8,
     U8,
     I32,
+    /// Group-quantized 4-bit, symmetric: 32-element groups along the last
+    /// axis, per-group f16 scale in a `<name>.scale` sibling tensor,
+    /// packed two codes per byte (see [`crate::tensor::q4`]).
+    Q4,
+    /// Group-quantized 4-bit with per-group minimum (`<name>.min`
+    /// sibling): asymmetric codes for all-positive tensors.
+    Q41,
 }
 
 impl DType {
+    /// Bytes per element for the scalar dtypes.
+    ///
+    /// # Panics
+    ///
+    /// Panics on the sub-byte dtypes ([`DType::Q4`] / [`DType::Q41`]),
+    /// whose payload size is not per-element — use [`DType::bytes_for`].
     pub fn size(self) -> usize {
         match self {
             DType::F32 | DType::I32 => 4,
             DType::F16 => 2,
             DType::I8 | DType::U8 => 1,
+            DType::Q4 | DType::Q41 => {
+                unreachable!("sub-byte dtype has no per-element size; use bytes_for")
+            }
+        }
+    }
+
+    /// Total payload bytes for `shape`, or `None` when the shape is not
+    /// representable for this dtype: size overflow, or a sub-byte dtype
+    /// with rank != 2 (the pack layout is defined over `(rows, cols)`).
+    pub fn bytes_for(self, shape: &[usize]) -> Option<u64> {
+        match self {
+            DType::Q4 | DType::Q41 => {
+                let [rows, cols] = *shape else { return None };
+                (rows as u64).checked_mul(q4_row_packed_bytes(cols) as u64)
+            }
+            _ => {
+                let mut n: u64 = 1;
+                for &d in shape {
+                    n = n.checked_mul(d as u64)?;
+                }
+                n.checked_mul(self.size() as u64)
+            }
         }
     }
 
@@ -29,6 +67,8 @@ impl DType {
             2 => DType::I8,
             3 => DType::U8,
             4 => DType::I32,
+            5 => DType::Q4,
+            6 => DType::Q41,
             _ => bail!("unknown dtype code {c}"),
         })
     }
@@ -39,23 +79,39 @@ impl DType {
 /// `I8` carries the per-output scale vector (length = the *logical output
 /// dimension*: `cols` for in-out layout, `rows` for row-per-output layout —
 /// the consumer knows which).
-#[derive(Clone, Debug)]
+///
+/// `Q4` / `Q41` carry the group-quantized payload (`rows *
+/// cols.div_ceil(2)` packed bytes) plus the per-(row, group) f16 parameter
+/// bits — `rows * cols.div_ceil(32)` scale entries, and for `Q41` an
+/// equally shaped min array (see [`crate::tensor::q4`] for the layout and
+/// the bit-exactness contract).
+#[derive(Clone, Debug, PartialEq)]
 pub enum Mat {
     F32 { rows: usize, cols: usize, data: Vec<f32> },
     F16 { rows: usize, cols: usize, data: Vec<u16> },
     I8 { rows: usize, cols: usize, data: Vec<i8>, scale: Vec<f32> },
+    Q4 { rows: usize, cols: usize, data: Vec<u8>, scale: Vec<u16> },
+    Q41 { rows: usize, cols: usize, data: Vec<u8>, scale: Vec<u16>, min: Vec<u16> },
 }
 
 impl Mat {
     pub fn rows(&self) -> usize {
         match self {
-            Mat::F32 { rows, .. } | Mat::F16 { rows, .. } | Mat::I8 { rows, .. } => *rows,
+            Mat::F32 { rows, .. }
+            | Mat::F16 { rows, .. }
+            | Mat::I8 { rows, .. }
+            | Mat::Q4 { rows, .. }
+            | Mat::Q41 { rows, .. } => *rows,
         }
     }
 
     pub fn cols(&self) -> usize {
         match self {
-            Mat::F32 { cols, .. } | Mat::F16 { cols, .. } | Mat::I8 { cols, .. } => *cols,
+            Mat::F32 { cols, .. }
+            | Mat::F16 { cols, .. }
+            | Mat::I8 { cols, .. }
+            | Mat::Q4 { cols, .. }
+            | Mat::Q41 { cols, .. } => *cols,
         }
     }
 
@@ -65,16 +121,22 @@ impl Mat {
             Mat::F32 { data, .. } => 4 * data.len() as u64,
             Mat::F16 { data, .. } => 2 * data.len() as u64,
             Mat::I8 { data, scale, .. } => data.len() as u64 + 4 * scale.len() as u64,
+            Mat::Q4 { data, scale, .. } => data.len() as u64 + 2 * scale.len() as u64,
+            Mat::Q41 { data, scale, min, .. } => {
+                data.len() as u64 + 2 * scale.len() as u64 + 2 * min.len() as u64
+            }
         }
     }
 
     /// Bytes of a single row in storage precision (sparse-load accounting).
     pub fn row_bytes(&self) -> u64 {
-        let c = self.cols() as u64;
+        let c = self.cols();
         match self {
-            Mat::F32 { .. } => 4 * c,
-            Mat::F16 { .. } => 2 * c,
-            Mat::I8 { .. } => c + 4, // + its scale entry
+            Mat::F32 { .. } => 4 * c as u64,
+            Mat::F16 { .. } => 2 * c as u64,
+            Mat::I8 { .. } => c as u64 + 4, // + its scale entry
+            Mat::Q4 { .. } => (q4_row_packed_bytes(c) + 2 * q4_groups(c)) as u64,
+            Mat::Q41 { .. } => (q4_row_packed_bytes(c) + 4 * q4_groups(c)) as u64,
         }
     }
 
@@ -89,6 +151,18 @@ impl Mat {
             cols,
             data: data.iter().map(|&x| f32_to_f16(x)).collect(),
         }
+    }
+
+    /// Group-quantize an f32 matrix to the symmetric Q4 format.
+    pub fn quantize_q4_mat(rows: usize, cols: usize, data: &[f32]) -> Self {
+        let (packed, scale) = quantize_q4(rows, cols, data);
+        Mat::Q4 { rows, cols, data: packed, scale }
+    }
+
+    /// Group-quantize an f32 matrix to the asymmetric Q4_1 format.
+    pub fn quantize_q4_1_mat(rows: usize, cols: usize, data: &[f32]) -> Self {
+        let (packed, scale, min) = quantize_q4_1(rows, cols, data);
+        Mat::Q41 { rows, cols, data: packed, scale, min }
     }
 
     /// Decode one row to f32 into `out` (row-per-output layout consumers).
@@ -121,6 +195,23 @@ impl Mat {
                     }
                 }
             }
+            Mat::Q4 { data, scale, .. } => {
+                let (prb, ng) = (q4_row_packed_bytes(c), q4_groups(c));
+                dequant_row_q4(
+                    &data[row * prb..(row + 1) * prb],
+                    &scale[row * ng..(row + 1) * ng],
+                    out,
+                );
+            }
+            Mat::Q41 { data, scale, min, .. } => {
+                let (prb, ng) = (q4_row_packed_bytes(c), q4_groups(c));
+                dequant_row_q4_1(
+                    &data[row * prb..(row + 1) * prb],
+                    &scale[row * ng..(row + 1) * ng],
+                    &min[row * ng..(row + 1) * ng],
+                    out,
+                );
+            }
         }
     }
 
@@ -147,6 +238,13 @@ impl Mat {
                             out[r * cols + c] = data[r * cols + c] as f32 * s;
                         }
                     }
+                }
+                out
+            }
+            Mat::Q4 { rows, cols, .. } | Mat::Q41 { rows, cols, .. } => {
+                let mut out = vec![0f32; rows * cols];
+                for r in 0..*rows {
+                    self.decode_row(r, &mut out[r * cols..(r + 1) * cols]);
                 }
                 out
             }
@@ -210,5 +308,56 @@ mod tests {
             scale: vec![0.01, 0.02],
         };
         assert_eq!(m.to_f32_vec(), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn q4_decode_row_matches_to_f32_vec() {
+        let data: Vec<f32> = (0..3 * 40).map(|i| (i as f32 * 0.37).sin()).collect();
+        for m in [Mat::quantize_q4_mat(3, 40, &data), Mat::quantize_q4_1_mat(3, 40, &data)] {
+            let full = m.to_f32_vec();
+            let mut row = vec![0f32; 40];
+            for r in 0..3 {
+                m.decode_row(r, &mut row);
+                assert_eq!(&row[..], &full[r * 40..(r + 1) * 40]);
+            }
+        }
+    }
+
+    #[test]
+    fn q4_byte_accounting_is_packed_size() {
+        // 2 x 40: payload 2*20, scales 2*2 groups x 2 bytes
+        let data = vec![0.25f32; 80];
+        let m = Mat::quantize_q4_mat(2, 40, &data);
+        assert_eq!(m.nbytes(), 40 + 8);
+        assert_eq!(m.row_bytes(), 20 + 4);
+        let m1 = Mat::quantize_q4_1_mat(2, 40, &data);
+        assert_eq!(m1.nbytes(), 40 + 16);
+        assert_eq!(m1.row_bytes(), 20 + 8);
+        // odd cols: 2 x 33 -> 17 packed bytes + 2 groups per row
+        let data = vec![0.25f32; 66];
+        let m = Mat::quantize_q4_mat(2, 33, &data);
+        assert_eq!(m.nbytes(), 34 + 8);
+        assert_eq!(m.row_bytes(), 17 + 4);
+    }
+
+    #[test]
+    fn dtype_bytes_for() {
+        assert_eq!(DType::F32.bytes_for(&[2, 3]), Some(24));
+        assert_eq!(DType::F16.bytes_for(&[5]), Some(10));
+        assert_eq!(DType::Q4.bytes_for(&[4, 33]), Some(4 * 17));
+        assert_eq!(DType::Q41.bytes_for(&[4, 32]), Some(4 * 16));
+        // sub-byte dtypes are 2-D only
+        assert_eq!(DType::Q4.bytes_for(&[8]), None);
+        assert_eq!(DType::Q4.bytes_for(&[2, 2, 2]), None);
+        // overflow must be caught, not wrapped
+        assert_eq!(DType::F32.bytes_for(&[usize::MAX, usize::MAX]), None);
+        assert_eq!(DType::Q4.bytes_for(&[usize::MAX, usize::MAX]), None);
+    }
+
+    #[test]
+    fn q4_dtype_codes_round_trip() {
+        assert!(matches!(DType::from_code(5), Ok(DType::Q4)));
+        assert!(matches!(DType::from_code(6), Ok(DType::Q41)));
+        assert!(DType::from_code(7).is_err());
     }
 }

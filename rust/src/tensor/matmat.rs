@@ -10,12 +10,16 @@
 //!
 //! # Dtype support matrix
 //!
-//! | kernel                        | f32 | f16 | i8 (scale)        |
-//! |-------------------------------|-----|-----|-------------------|
-//! | [`matmat_in_out`]             | yes | yes | per-column        |
-//! | [`matmat_rows`]               | yes | yes | per-row           |
-//! | [`matmat_rows_indexed`]       | yes | yes | per-row           |
-//! | [`accum_rows_indexed_batch`]  | yes | yes | per-column        |
+//! | kernel                        | f32 | f16 | i8 (scale)        | q4/q4_1 (group) |
+//! |-------------------------------|-----|-----|-------------------|-----------------|
+//! | [`matmat_in_out`]             | yes | yes | per-column        | yes             |
+//! | [`matmat_rows`]               | yes | yes | per-row           | yes             |
+//! | [`matmat_rows_indexed`]       | yes | yes | per-row           | yes             |
+//! | [`accum_rows_indexed_batch`]  | yes | yes | per-column        | yes             |
+//!
+//! The q4/q4_1 arms dequantize in-register ([`crate::tensor::q4`]); each
+//! element's f32 value is a pure function of the stored bytes, so the
+//! column sharding below may split MID-group and stay bit-identical.
 //!
 //! Low-rank / enhanced-SVD projections (§3.1) are compositions of
 //! `matmat_in_out` over their factor matrices (see
@@ -71,6 +75,7 @@
 
 use crate::pool::{Par, SharedSliceMut};
 use crate::tensor::matvec::{dot_f16, dot_f32, dot_i8};
+use crate::tensor::q4::{dot_q4, dot_q4_1, dq4, dq4_1, q4_groups, q4_row_packed_bytes};
 use crate::tensor::Mat;
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
@@ -161,6 +166,53 @@ fn matmat_in_out_cols(
                 }
             }
         }
+        Mat::Q4 { data, scale, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            scratch.clear();
+            scratch.resize(cw, 0.0);
+            for i in 0..rows {
+                // dequantize the column window once; every slot reuses the
+                // exact f32 values the per-slot matvec arm computes
+                let prow = &data[i * prb..(i + 1) * prb];
+                let srow = &scale[i * ng..(i + 1) * ng];
+                for (k, r) in scratch.iter_mut().enumerate() {
+                    *r = dq4(prow, srow, c0 + k);
+                }
+                for s in 0..b {
+                    let xi = xs[s * rows + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols + c0..s * cols + c1];
+                    for (o, &wij) in out.iter_mut().zip(scratch.iter()) {
+                        *o += xi * wij;
+                    }
+                }
+            }
+        }
+        Mat::Q41 { data, scale, min, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            scratch.clear();
+            scratch.resize(cw, 0.0);
+            for i in 0..rows {
+                let prow = &data[i * prb..(i + 1) * prb];
+                let srow = &scale[i * ng..(i + 1) * ng];
+                let mrow = &min[i * ng..(i + 1) * ng];
+                for (k, r) in scratch.iter_mut().enumerate() {
+                    *r = dq4_1(prow, srow, mrow, c0 + k);
+                }
+                for s in 0..b {
+                    let xi = xs[s * rows + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols + c0..s * cols + c1];
+                    for (o, &wij) in out.iter_mut().zip(scratch.iter()) {
+                        *o += xi * wij;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -248,6 +300,27 @@ fn matmat_rows_range(w: &Mat, xs: &[f32], outs: &mut [f32], j0: usize, j1: usize
                 }
             }
         }
+        Mat::Q4 { data, scale, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for j in j0..j1 {
+                let prow = &data[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                for s in 0..b {
+                    outs[s * rows + j] = dot_q4(prow, srow, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
+        Mat::Q41 { data, scale, min, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for j in j0..j1 {
+                let prow = &data[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                let mrow = &min[j * ng..(j + 1) * ng];
+                for s in 0..b {
+                    outs[s * rows + j] = dot_q4_1(prow, srow, mrow, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
     }
 }
 
@@ -319,6 +392,29 @@ fn matmat_rows_indexed_range(
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
                     outs[s * k + kk] = scale[j] * dot_i8(row, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
+        Mat::Q4 { data, scale, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (kk, &j) in idx.iter().enumerate().take(k1).skip(k0) {
+                let j = j as usize;
+                let prow = &data[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                for s in 0..b {
+                    outs[s * k + kk] = dot_q4(prow, srow, &xs[s * cols..(s + 1) * cols]);
+                }
+            }
+        }
+        Mat::Q41 { data, scale, min, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (kk, &j) in idx.iter().enumerate().take(k1).skip(k0) {
+                let j = j as usize;
+                let prow = &data[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                let mrow = &min[j * ng..(j + 1) * ng];
+                for s in 0..b {
+                    outs[s * k + kk] = dot_q4_1(prow, srow, mrow, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -422,6 +518,45 @@ fn accum_rows_indexed_batch_cols(
                 }
             }
         }
+        Mat::Q4 { data, scale, .. } => {
+            // group scales fold in per element (no end-of-loop column
+            // fold), mirroring `accum_rows_indexed`'s q4 arm exactly
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (kk, &j) in idx.iter().enumerate() {
+                let j = j as usize;
+                let prow = &data[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                for s in 0..b {
+                    let hk = hs[s * k + kk];
+                    if hk == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols + c0..s * cols + c1];
+                    for (cc, o) in out.iter_mut().enumerate() {
+                        *o += hk * dq4(prow, srow, c0 + cc);
+                    }
+                }
+            }
+        }
+        Mat::Q41 { data, scale, min, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (kk, &j) in idx.iter().enumerate() {
+                let j = j as usize;
+                let prow = &data[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                let mrow = &min[j * ng..(j + 1) * ng];
+                for s in 0..b {
+                    let hk = hs[s * k + kk];
+                    if hk == 0.0 {
+                        continue;
+                    }
+                    let out = &mut outs[s * cols + c0..s * cols + c1];
+                    for (cc, o) in out.iter_mut().enumerate() {
+                        *o += hk * dq4_1(prow, srow, mrow, c0 + cc);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -479,8 +614,9 @@ mod tests {
         (0..n).map(|_| r.normal()).collect()
     }
 
-    /// The three dtype variants of one f32 matrix (i8 scale per column for
-    /// in-out layout, per row for rows layout — chosen by `scale_rows`).
+    /// The five dtype variants of one f32 matrix (i8 scale per column for
+    /// in-out layout, per row for rows layout — chosen by `scale_rows`;
+    /// q4/q4_1 group parameters are layout-independent).
     fn variants(rows: usize, cols: usize, data: &[f32], scale_rows: bool) -> Vec<Mat> {
         let q: Vec<i8> = data.iter().map(|v| (v * 30.0).clamp(-127.0, 127.0) as i8).collect();
         let scale_len = if scale_rows { rows } else { cols };
@@ -489,6 +625,8 @@ mod tests {
             Mat::from_f32(rows, cols, data.to_vec()),
             Mat::f32_to_f16_mat(rows, cols, data),
             Mat::I8 { rows, cols, data: q, scale },
+            Mat::quantize_q4_mat(rows, cols, data),
+            Mat::quantize_q4_1_mat(rows, cols, data),
         ]
     }
 

@@ -4,14 +4,19 @@
 //!
 //! # Dtype support matrix
 //!
-//! | kernel                  | f32 | f16 | i8 (scale)   | packed |
-//! |-------------------------|-----|-----|--------------|--------|
-//! | [`matvec_in_out`]       | yes | yes | per-column   | —      |
-//! | [`matvec_rows`]         | yes | yes | per-row      | —      |
-//! | [`matvec_rows_indexed`] | yes | yes | per-row      | —      |
-//! | [`accum_rows_indexed`]  | yes | yes | per-column   | —      |
-//! | [`bit_matvec`]          | —   | —   | —            | 1-bit  |
-//! | [`nib4_matvec`]         | —   | —   | —            | 4-bit  |
+//! | kernel                  | f32 | f16 | i8 (scale)   | q4/q4_1 (group) | packed |
+//! |-------------------------|-----|-----|--------------|-----------------|--------|
+//! | [`matvec_in_out`]       | yes | yes | per-column   | yes             | —      |
+//! | [`matvec_rows`]         | yes | yes | per-row      | yes             | —      |
+//! | [`matvec_rows_indexed`] | yes | yes | per-row      | yes             | —      |
+//! | [`accum_rows_indexed`]  | yes | yes | per-column   | yes             | —      |
+//! | [`bit_matvec`]          | —   | —   | —            | —               | 1-bit  |
+//! | [`nib4_matvec`]         | —   | —   | —            | —               | 4-bit  |
+//!
+//! The q4/q4_1 arms dequantize in-register per element via
+//! [`crate::tensor::q4`] (group scales applied inline — no end-of-loop
+//! scale fold like i8, so `out` may always carry a residual) and are
+//! bit-identical to running the f32 arm on the dequantized matrix.
 //!
 //! # Determinism
 //!
@@ -25,6 +30,7 @@
 //! The int8 kernels fold dequantization into the loop (paper §4: fused
 //! dequant+matvec; no materialized f32/f16 weight copy).
 
+use crate::tensor::q4::{dot_q4, dot_q4_1, dq4, dq4_1, q4_groups, q4_row_packed_bytes};
 use crate::tensor::Mat;
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
@@ -80,6 +86,35 @@ pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32], acc: &mut Vec<f32>) {
                 *o += a * s;
             }
         }
+        Mat::Q4 { data, scale, .. } => {
+            // group scales are per (row, group) of THIS product, so they
+            // fold in per element — `out` may carry a residual freely
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let prow = &data[i * prb..(i + 1) * prb];
+                let srow = &scale[i * ng..(i + 1) * ng];
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o += xi * dq4(prow, srow, j);
+                }
+            }
+        }
+        Mat::Q41 { data, scale, min, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let prow = &data[i * prb..(i + 1) * prb];
+                let srow = &scale[i * ng..(i + 1) * ng];
+                let mrow = &min[i * ng..(i + 1) * ng];
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o += xi * dq4_1(prow, srow, mrow, j);
+                }
+            }
+        }
     }
 }
 
@@ -102,6 +137,23 @@ pub fn matvec_rows(w: &Mat, x: &[f32], out: &mut [f32]) {
         Mat::I8 { data, scale, .. } => {
             for (j, o) in out.iter_mut().enumerate() {
                 *o = scale[j] * dot_i8(&data[j * cols..(j + 1) * cols], x);
+            }
+        }
+        Mat::Q4 { data, scale, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = dot_q4(&data[j * prb..(j + 1) * prb], &scale[j * ng..(j + 1) * ng], x);
+            }
+        }
+        Mat::Q41 { data, scale, min, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = dot_q4_1(
+                    &data[j * prb..(j + 1) * prb],
+                    &scale[j * ng..(j + 1) * ng],
+                    &min[j * ng..(j + 1) * ng],
+                    x,
+                );
             }
         }
     }
@@ -132,6 +184,25 @@ pub fn matvec_rows_indexed(w: &Mat, idx: &[u32], x: &[f32], out: &mut [f32]) {
             for (o, &j) in out.iter_mut().zip(idx) {
                 let j = j as usize;
                 *o = scale[j] * dot_i8(&data[j * cols..(j + 1) * cols], x);
+            }
+        }
+        Mat::Q4 { data, scale, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (o, &j) in out.iter_mut().zip(idx) {
+                let j = j as usize;
+                *o = dot_q4(&data[j * prb..(j + 1) * prb], &scale[j * ng..(j + 1) * ng], x);
+            }
+        }
+        Mat::Q41 { data, scale, min, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (o, &j) in out.iter_mut().zip(idx) {
+                let j = j as usize;
+                *o = dot_q4_1(
+                    &data[j * prb..(j + 1) * prb],
+                    &scale[j * ng..(j + 1) * ng],
+                    &min[j * ng..(j + 1) * ng],
+                    x,
+                );
             }
         }
     }
@@ -183,6 +254,37 @@ pub fn accum_rows_indexed(w: &Mat, idx: &[u32], h: &[f32], out: &mut [f32]) {
             }
             for (o, &s) in out.iter_mut().zip(scale) {
                 *o *= s;
+            }
+        }
+        Mat::Q4 { data, scale, .. } => {
+            // group scale applies inline (unlike i8's per-column fold):
+            // the scale belongs to the (row, group) pair, not the column
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (&hk, &j) in h.iter().zip(idx) {
+                if hk == 0.0 {
+                    continue;
+                }
+                let j = j as usize;
+                let prow = &data[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                for (c, o) in out.iter_mut().enumerate() {
+                    *o += hk * dq4(prow, srow, c);
+                }
+            }
+        }
+        Mat::Q41 { data, scale, min, .. } => {
+            let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
+            for (&hk, &j) in h.iter().zip(idx) {
+                if hk == 0.0 {
+                    continue;
+                }
+                let j = j as usize;
+                let prow = &data[j * prb..(j + 1) * prb];
+                let srow = &scale[j * ng..(j + 1) * ng];
+                let mrow = &min[j * ng..(j + 1) * ng];
+                for (c, o) in out.iter_mut().enumerate() {
+                    *o += hk * dq4_1(prow, srow, mrow, c);
+                }
             }
         }
     }
@@ -411,6 +513,46 @@ mod tests {
         }
         for (a, b) in out.iter().zip(&want) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn q4_kernels_bitwise_match_dequantized_dense() {
+        // the q4 arms' contract: BIT-identical to running the f32 arm on
+        // the dequantized matrix, across group-ragged shapes
+        let mut r = XorShift::new(10);
+        for &(rows, cols) in &[(13usize, 32usize), (9, 40), (7, 33), (5, 7)] {
+            let w: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+            let quants =
+                [Mat::quantize_q4_mat(rows, cols, &w), Mat::quantize_q4_1_mat(rows, cols, &w)];
+            for q in quants {
+                let dense = Mat::from_f32(rows, cols, q.to_f32_vec());
+                // (in,out) with a residual accumulator
+                let x: Vec<f32> = (0..rows).map(|_| r.normal()).collect();
+                let residual: Vec<f32> = (0..cols).map(|_| r.normal()).collect();
+                let (mut got, mut want) = (residual.clone(), residual.clone());
+                matvec_in_out(&x, &q, &mut got, &mut Vec::new());
+                matvec_in_out(&x, &dense, &mut want, &mut Vec::new());
+                assert_eq!(got, want, "in_out {rows}x{cols}");
+                // row-per-output
+                let xc: Vec<f32> = (0..cols).map(|_| r.normal()).collect();
+                let (mut got, mut want) = (vec![0f32; rows], vec![0f32; rows]);
+                matvec_rows(&q, &xc, &mut got);
+                matvec_rows(&dense, &xc, &mut want);
+                assert_eq!(got, want, "rows {rows}x{cols}");
+                // indexed subset
+                let idx: Vec<u32> = vec![0, rows as u32 - 1, rows as u32 / 2];
+                let (mut got, mut want) = (vec![0f32; idx.len()], vec![0f32; idx.len()]);
+                matvec_rows_indexed(&q, &idx, &xc, &mut got);
+                matvec_rows_indexed(&dense, &idx, &xc, &mut want);
+                assert_eq!(got, want, "rows_indexed {rows}x{cols}");
+                // sparse accumulate
+                let h = vec![0.5f32, -1.25, 2.0];
+                let (mut got, mut want) = (vec![0f32; cols], vec![0f32; cols]);
+                accum_rows_indexed(&q, &idx, &h, &mut got);
+                accum_rows_indexed(&dense, &idx, &h, &mut want);
+                assert_eq!(got, want, "accum {rows}x{cols}");
+            }
         }
     }
 

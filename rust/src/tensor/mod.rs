@@ -1,5 +1,6 @@
-//! Tensor substrate (S13): weight matrices in f32 / f16 / int8 / 1-bit
-//! representations and the fused matvec kernels over them.
+//! Tensor substrate (S13): weight matrices in f32 / f16 / int8 /
+//! group-quantized 4-bit (Q4/Q4_1, [`q4`]) / 1-bit representations and
+//! the fused matvec kernels over them.
 //!
 //! This module is the rust analog of the paper's custom ARM NEON kernels
 //! (§4): dequantization is fused into the matvec inner loop so a separate
@@ -26,8 +27,10 @@ pub mod mat;
 pub mod matmat;
 pub mod matvec;
 pub mod ops;
+pub mod q4;
 
 pub use mat::{DType, Mat};
 pub use matmat::*;
 pub use matvec::*;
 pub use ops::*;
+pub use q4::*;

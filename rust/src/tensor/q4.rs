@@ -1,0 +1,331 @@
+//! Group-quantized 4-bit weight formats (Q4 / Q4_1): pack layout,
+//! quantizers, and the in-register dequant primitives shared by the
+//! matvec/matmat kernels, [`crate::tensor::Mat`], and the engine's
+//! streaming `RowView` path.
+//!
+//! Layout (the rwkv.cpp-style block quantization of ROADMAP item 1):
+//!
+//! * Elements are grouped along the LAST axis (`cols`) in groups of
+//!   [`Q4_GROUP`] = 32; each (row, group) pair gets its own parameters.
+//! * The payload packs two 4-bit codes per byte, row-major: element
+//!   `(r, c)` lives in byte `r * cols.div_ceil(2) + c / 2`, even `c` in
+//!   the LOW nibble, odd `c` in the HIGH nibble.  A row with odd `cols`
+//!   pads its trailing high nibble: 8 for Q4 (offset-binary zero) and 0
+//!   for Q4_1.
+//! * Group parameters are f16 BITS in sibling arrays of shape
+//!   `(rows, cols.div_ceil(32))`: Q4 stores a scale `s` per group
+//!   (code `q ∈ [1, 15]` offset-binary, value `s * (q - 8)`); Q4_1 adds
+//!   a per-group minimum `m` (code `q ∈ [0, 15]` unsigned, value
+//!   `s * q + m`) so all-positive groups keep full code range.
+//!
+//! # Determinism / bit-exactness contract
+//!
+//! Dequantization of element `(r, c)` is a pure function of the stored
+//! bytes — [`dq4`] / [`dq4_1`] are THE definition, used identically by
+//! the serial kernels, the `_par` shards (a column split mid-group is
+//! safe: no cross-element state), `Mat::decode_row`, and the engine
+//! `RowView` path — and the kernel reductions replicate the matvec.rs
+//! LANES accumulator shape in ascending index order, so every quantized
+//! kernel is bit-identical to running the dense f32 kernel on
+//! [`dequant_row_q4`] output.
+//!
+//! The quantizers round with `round_ties_even` against the f16-ROUNDED
+//! scale (quantize with exactly the scale the dequantizer will see).
+//! The Python exporter (`python/compile/compress/quant.py`) mirrors this
+//! arithmetic operation-for-operation in float32; the cross-language
+//! round-trip test (`tests/q4_export_roundtrip.rs`) pins the equality.
+
+use crate::util::f16::{f16_to_f32_fast, f32_to_f16};
+
+/// Elements per quantization group along the column axis.
+pub const Q4_GROUP: usize = 32;
+
+/// Number of groups (scale entries) per row of `cols` elements.
+#[inline]
+pub fn q4_groups(cols: usize) -> usize {
+    cols.div_ceil(Q4_GROUP)
+}
+
+/// Packed payload bytes per row of `cols` elements (two codes per byte).
+#[inline]
+pub fn q4_row_packed_bytes(cols: usize) -> usize {
+    cols.div_ceil(2)
+}
+
+/// Extract the 4-bit code of element `c` from a packed row.
+#[inline]
+pub fn q4_nib(packed_row: &[u8], c: usize) -> u8 {
+    let b = packed_row[c / 2];
+    if c % 2 == 0 {
+        b & 0x0F
+    } else {
+        b >> 4
+    }
+}
+
+/// Dequantize one Q4 element: `s * (q - 8)` with `s` the group's f16 scale.
+#[inline]
+pub fn dq4(packed_row: &[u8], scale_row: &[u16], c: usize) -> f32 {
+    let s = f16_to_f32_fast(scale_row[c / Q4_GROUP]);
+    s * (q4_nib(packed_row, c) as i32 - 8) as f32
+}
+
+/// Dequantize one Q4_1 element: `s * q + m`.
+#[inline]
+pub fn dq4_1(packed_row: &[u8], scale_row: &[u16], min_row: &[u16], c: usize) -> f32 {
+    let g = c / Q4_GROUP;
+    let s = f16_to_f32_fast(scale_row[g]);
+    let m = f16_to_f32_fast(min_row[g]);
+    s * q4_nib(packed_row, c) as f32 + m
+}
+
+/// Dequantize one packed Q4 row into `out` (`out.len()` = logical cols).
+pub fn dequant_row_q4(packed_row: &[u8], scale_row: &[u16], out: &mut [f32]) {
+    for (c, o) in out.iter_mut().enumerate() {
+        *o = dq4(packed_row, scale_row, c);
+    }
+}
+
+/// Dequantize one packed Q4_1 row into `out`.
+pub fn dequant_row_q4_1(packed_row: &[u8], scale_row: &[u16], min_row: &[u16], out: &mut [f32]) {
+    for (c, o) in out.iter_mut().enumerate() {
+        *o = dq4_1(packed_row, scale_row, min_row, c);
+    }
+}
+
+/// Quantize a row-major `(rows, cols)` f32 matrix to Q4.
+/// Returns `(packed nibbles, per-group f16 scale bits)`.
+pub fn quantize_q4(rows: usize, cols: usize, data: &[f32]) -> (Vec<u8>, Vec<u16>) {
+    assert_eq!(data.len(), rows * cols, "quantize_q4: shape/data mismatch");
+    let ng = q4_groups(cols);
+    let prb = q4_row_packed_bytes(cols);
+    let mut packed = vec![0u8; rows * prb];
+    let mut scale = vec![0u16; rows * ng];
+    for r in 0..rows {
+        let wrow = &data[r * cols..(r + 1) * cols];
+        for g in 0..ng {
+            let lo = g * Q4_GROUP;
+            let hi = ((g + 1) * Q4_GROUP).min(cols);
+            let mut amax = 0f32;
+            for &w in &wrow[lo..hi] {
+                amax = amax.max(w.abs());
+            }
+            // quantize against the f16-ROUNDED scale — exactly the value
+            // every dequant consumer will decode
+            let sbits = f32_to_f16(amax / 7.0);
+            scale[r * ng + g] = sbits;
+            let s = f16_to_f32_fast(sbits);
+            let denom = if s == 0.0 { 1.0 } else { s };
+            for c in lo..hi {
+                let q = (wrow[c] / denom).round_ties_even().clamp(-7.0, 7.0) as i32 + 8;
+                let byte = &mut packed[r * prb + c / 2];
+                if c % 2 == 0 {
+                    *byte |= q as u8;
+                } else {
+                    *byte |= (q as u8) << 4;
+                }
+            }
+        }
+        if cols % 2 == 1 {
+            // trailing pad nibble is offset-binary zero
+            packed[r * prb + prb - 1] |= 8u8 << 4;
+        }
+    }
+    (packed, scale)
+}
+
+/// Quantize a row-major `(rows, cols)` f32 matrix to Q4_1.
+/// Returns `(packed nibbles, scale bits, min bits)`.
+pub fn quantize_q4_1(rows: usize, cols: usize, data: &[f32]) -> (Vec<u8>, Vec<u16>, Vec<u16>) {
+    assert_eq!(data.len(), rows * cols, "quantize_q4_1: shape/data mismatch");
+    let ng = q4_groups(cols);
+    let prb = q4_row_packed_bytes(cols);
+    let mut packed = vec![0u8; rows * prb];
+    let mut scale = vec![0u16; rows * ng];
+    let mut min = vec![0u16; rows * ng];
+    for r in 0..rows {
+        let wrow = &data[r * cols..(r + 1) * cols];
+        for g in 0..ng {
+            let lo = g * Q4_GROUP;
+            let hi = ((g + 1) * Q4_GROUP).min(cols);
+            let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &w in &wrow[lo..hi] {
+                mn = mn.min(w);
+                mx = mx.max(w);
+            }
+            let sbits = f32_to_f16((mx - mn) / 15.0);
+            let mbits = f32_to_f16(mn);
+            scale[r * ng + g] = sbits;
+            min[r * ng + g] = mbits;
+            let s = f16_to_f32_fast(sbits);
+            let m = f16_to_f32_fast(mbits);
+            let denom = if s == 0.0 { 1.0 } else { s };
+            for c in lo..hi {
+                let q = ((wrow[c] - m) / denom).round_ties_even().clamp(0.0, 15.0) as u8;
+                let byte = &mut packed[r * prb + c / 2];
+                if c % 2 == 0 {
+                    *byte |= q;
+                } else {
+                    *byte |= q << 4;
+                }
+            }
+            // Q4_1's pad nibble stays 0 (the buffer is pre-zeroed)
+        }
+    }
+    (packed, scale, min)
+}
+
+// Keep in lock-step with matvec.rs: the dots below must replicate
+// `dot_f32`'s reduction shape exactly (8-lane accumulator array over
+// full chunks, then a scalar tail) for the bit-exactness contract.
+const LANES: usize = 8;
+
+/// `dot(dequant_q4(row), x)` with exactly the [`crate::tensor::dot_f32`]
+/// reduction shape — bit-identical to dequantizing the row to f32 first.
+#[inline]
+pub fn dot_q4(packed_row: &[u8], scale_row: &[u16], x: &[f32]) -> f32 {
+    let n = x.len();
+    let full = n - n % LANES;
+    let mut acc = [0f32; LANES];
+    let mut c = 0;
+    while c < full {
+        for k in 0..LANES {
+            acc[k] += dq4(packed_row, scale_row, c + k) * x[c + k];
+        }
+        c += LANES;
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in full..n {
+        s += dq4(packed_row, scale_row, i) * x[i];
+    }
+    s
+}
+
+/// `dot(dequant_q4_1(row), x)` with the [`crate::tensor::dot_f32`] shape.
+#[inline]
+pub fn dot_q4_1(packed_row: &[u8], scale_row: &[u16], min_row: &[u16], x: &[f32]) -> f32 {
+    let n = x.len();
+    let full = n - n % LANES;
+    let mut acc = [0f32; LANES];
+    let mut c = 0;
+    while c < full {
+        for k in 0..LANES {
+            acc[k] += dq4_1(packed_row, scale_row, min_row, c + k) * x[c + k];
+        }
+        c += LANES;
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in full..n {
+        s += dq4_1(packed_row, scale_row, min_row, i) * x[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matvec::dot_f32;
+    use crate::util::XorShift;
+
+    fn randv(r: &mut XorShift, n: usize) -> Vec<f32> {
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn q4_round_trip_error_bounded_by_half_step() {
+        let mut r = XorShift::new(0x51);
+        for &cols in &[32usize, 64, 33, 31, 7] {
+            let data = randv(&mut r, 2 * cols);
+            let (packed, scale) = quantize_q4(2, cols, &data);
+            let (prb, ng) = (q4_row_packed_bytes(cols), q4_groups(cols));
+            for row in 0..2 {
+                let mut dec = vec![0f32; cols];
+                dequant_row_q4(&packed[row * prb..], &scale[row * ng..], &mut dec);
+                for c in 0..cols {
+                    let s = crate::util::f16::f16_to_f32(scale[row * ng + c / Q4_GROUP]);
+                    let err = (dec[c] - data[row * cols + c]).abs();
+                    // within one quantization step of the group scale
+                    // (half-step plus f16 rounding slack)
+                    assert!(err <= s * 0.51 + 1e-6, "c={c} err={err} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q4_1_round_trip_error_bounded_by_half_step() {
+        let mut r = XorShift::new(0x52);
+        for &cols in &[32usize, 48, 17] {
+            // shift positive so the asymmetric format's min/offset matters
+            let data: Vec<f32> = randv(&mut r, 3 * cols).iter().map(|v| v.abs() + 0.5).collect();
+            let (packed, scale, min) = quantize_q4_1(3, cols, &data);
+            let (prb, ng) = (q4_row_packed_bytes(cols), q4_groups(cols));
+            for row in 0..3 {
+                let mut dec = vec![0f32; cols];
+                dequant_row_q4_1(
+                    &packed[row * prb..],
+                    &scale[row * ng..],
+                    &min[row * ng..],
+                    &mut dec,
+                );
+                for c in 0..cols {
+                    let g = c / Q4_GROUP;
+                    let s = crate::util::f16::f16_to_f32(scale[row * ng + g]);
+                    let err = (dec[c] - data[row * cols + c]).abs();
+                    // half-step + f16 rounding of both scale and min
+                    let slack = s * 0.51 + data[row * cols + c].abs() * 1e-3 + 1e-6;
+                    assert!(err <= slack, "c={c} err={err} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn odd_cols_pad_nibble_is_inert() {
+        // cols=5: the high nibble of byte 2 is padding; Q4 stores 8
+        // (dequantizes to 0), Q4_1 stores 0 — neither can leak into
+        // element values, which only ever index c < cols.
+        let data = vec![0.5f32, -0.25, 0.125, 1.0, -1.0];
+        let (packed, scale) = quantize_q4(1, 5, &data);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(packed[2] >> 4, 8, "Q4 pad nibble must be offset-binary zero");
+        let mut dec = vec![0f32; 5];
+        dequant_row_q4(&packed, &scale, &mut dec);
+        for (d, w) in dec.iter().zip(&data) {
+            assert!((d - w).abs() < 0.2, "{d} vs {w}");
+        }
+        let (packed1, _, _) = quantize_q4_1(1, 5, &data);
+        assert_eq!(packed1[2] >> 4, 0, "Q4_1 pad nibble must be 0");
+    }
+
+    #[test]
+    fn all_zero_group_survives_zero_scale() {
+        let data = vec![0f32; 64];
+        let (packed, scale) = quantize_q4(1, 64, &data);
+        let mut dec = vec![1f32; 64];
+        dequant_row_q4(&packed, &scale, &mut dec);
+        assert!(dec.iter().all(|&v| v == 0.0));
+        let (packed1, scale1, min1) = quantize_q4_1(1, 64, &data);
+        let mut dec1 = vec![1f32; 64];
+        dequant_row_q4_1(&packed1, &scale1, &min1, &mut dec1);
+        assert!(dec1.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dot_q4_bitwise_matches_dense_dot_on_dequant() {
+        let mut r = XorShift::new(0x53);
+        for &cols in &[8usize, 32, 40, 37, 5, 96] {
+            let data = randv(&mut r, cols);
+            let x = randv(&mut r, cols);
+            let (packed, scale) = quantize_q4(1, cols, &data);
+            let mut dec = vec![0f32; cols];
+            dequant_row_q4(&packed, &scale, &mut dec);
+            assert_eq!(dot_q4(&packed, &scale, &x), dot_f32(&dec, &x), "cols={cols}");
+
+            let (p1, s1, m1) = quantize_q4_1(1, cols, &data);
+            let mut dec1 = vec![0f32; cols];
+            dequant_row_q4_1(&p1, &s1, &m1, &mut dec1);
+            assert_eq!(dot_q4_1(&p1, &s1, &m1, &x), dot_f32(&dec1, &x), "cols={cols}");
+        }
+    }
+}

@@ -24,6 +24,12 @@ pub struct SynthSpec {
     pub clusters: usize,
     /// Store matrices as f16 (else f32).
     pub f16: bool,
+    /// Group-quantize the large dense matrices to Q4/Q4_1 (RWKVQuant-style
+    /// hybrid recipe: dense projections, `wo.w`, `ffn.wk_t` and `head` go
+    /// Q4, `ffn.wv` goes Q4_1; embeddings, low-rank factors, predictors
+    /// and all vectors stay in `f16`/`f32`).  Composes with `f16`, which
+    /// then governs only the non-quantized tensors.
+    pub q4: bool,
     /// Use low-rank + enhanced-SVD time-mix projections (else dense).
     pub lowrank: bool,
     pub predictors: bool,
@@ -42,6 +48,7 @@ impl SynthSpec {
             vocab: 96,
             clusters: 6,
             f16: false,
+            q4: false,
             lowrank: false,
             predictors: true,
             hier_head: true,
@@ -54,20 +61,33 @@ impl SynthSpec {
     }
 }
 
+/// Storage encoding of a synthetic matrix.  The RNG draw order is
+/// identical for every encoding (the same `rows * cols` normals are
+/// drawn first, then encoded), so flipping `q4` on a spec changes the
+/// representation of selected tensors, never the underlying values.
+#[derive(Clone, Copy)]
+enum Enc {
+    F32,
+    F16,
+    Q4,
+    Q41,
+}
+
 fn mat(
     rng: &mut XorShift,
     name: &str,
     rows: usize,
     cols: usize,
     gain: f32,
-    f16: bool,
-) -> RkvTensor {
+    enc: Enc,
+) -> Vec<RkvTensor> {
     let sc = gain / (rows as f32).sqrt();
     let v: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * sc).collect();
-    if f16 {
-        RkvTensor::f16_from_f32(name, vec![rows, cols], &v)
-    } else {
-        RkvTensor::f32(name, vec![rows, cols], &v)
+    match enc {
+        Enc::F32 => vec![RkvTensor::f32(name, vec![rows, cols], &v)],
+        Enc::F16 => vec![RkvTensor::f16_from_f32(name, vec![rows, cols], &v)],
+        Enc::Q4 => RkvTensor::q4_from_f32(name, rows, cols, &v),
+        Enc::Q41 => RkvTensor::q4_1_from_f32(name, rows, cols, &v),
     }
 }
 
@@ -88,24 +108,27 @@ fn ln_pair(rng: &mut XorShift, ts: &mut Vec<RkvTensor>, prefix: &str, n: usize) 
 
 /// Emit a projection under `prefix`: dense (`.w`), low-rank (`.l`/`.r`) or
 /// enhanced (`.l`/`.r`/`.d`) per the flags — covers every `ProjW` variant.
+/// Only the dense `.w` takes the quantized encoding; low-rank factors are
+/// small and outlier-dense, so the hybrid recipe keeps them in float.
 fn proj(
     rng: &mut XorShift,
     ts: &mut Vec<RkvTensor>,
     prefix: &str,
     d: usize,
     form: ProjForm,
-    f16: bool,
+    fenc: Enc,
+    wenc: Enc,
 ) {
     let rank = (d / 4).max(2);
     match form {
-        ProjForm::Dense => ts.push(mat(rng, &format!("{prefix}.w"), d, d, 0.8, f16)),
+        ProjForm::Dense => ts.extend(mat(rng, &format!("{prefix}.w"), d, d, 0.8, wenc)),
         ProjForm::LowRank => {
-            ts.push(mat(rng, &format!("{prefix}.l"), d, rank, 0.8, f16));
-            ts.push(mat(rng, &format!("{prefix}.r"), rank, d, 0.8, f16));
+            ts.extend(mat(rng, &format!("{prefix}.l"), d, rank, 0.8, fenc));
+            ts.extend(mat(rng, &format!("{prefix}.r"), rank, d, 0.8, fenc));
         }
         ProjForm::Enhanced => {
-            ts.push(mat(rng, &format!("{prefix}.l"), d, rank, 0.8, f16));
-            ts.push(mat(rng, &format!("{prefix}.r"), rank, d, 0.8, f16));
+            ts.extend(mat(rng, &format!("{prefix}.l"), d, rank, 0.8, fenc));
+            ts.extend(mat(rng, &format!("{prefix}.r"), rank, d, 0.8, fenc));
             ts.push(vecf(rng, &format!("{prefix}.d"), d, |r| 0.5 + 0.1 * r.normal()));
         }
     }
@@ -122,16 +145,21 @@ enum ProjForm {
 pub fn write_synth_rwkv(artifacts: &Path, name: &str, spec: &SynthSpec) -> Result<()> {
     let d = spec.dim();
     let (f, v, c) = (spec.ffn, spec.vocab, spec.clusters.max(1));
-    let f16 = spec.f16;
+    // fenc: tensors the hybrid recipe keeps in float; wenc: the large
+    // dense matrices that take the quantized encoding when `q4` is set
+    let fenc = if spec.f16 { Enc::F16 } else { Enc::F32 };
+    let wenc = if spec.q4 { Enc::Q4 } else { fenc };
     let mut rng = XorShift::new(spec.seed);
     let mut ts: Vec<RkvTensor> = Vec::new();
 
     ln_pair(&mut rng, &mut ts, "ln0", d);
     ln_pair(&mut rng, &mut ts, "ln_out", d);
-    ts.push(mat(&mut rng, "emb", v, d, 3.0, f16));
-    ts.push(mat(&mut rng, "head", v, d, 1.0, f16));
+    // embeddings are row-streamed through `emb_row` (f16/f32/i8 only) and
+    // are outlier-heavy — they always stay in float
+    ts.extend(mat(&mut rng, "emb", v, d, 3.0, fenc));
+    ts.extend(mat(&mut rng, "head", v, d, 1.0, wenc));
     if spec.hier_head {
-        ts.push(mat(&mut rng, "hh.h1", c, d, 1.0, f16));
+        ts.extend(mat(&mut rng, "hh.h1", c, d, 1.0, fenc));
         let assign: Vec<i32> = (0..v as i32).map(|t| t % c as i32).collect();
         ts.push(RkvTensor::i32("hh.assign", vec![v], &assign));
     }
@@ -153,11 +181,11 @@ pub fn write_synth_rwkv(artifacts: &Path, name: &str, spec: &SynthSpec) -> Resul
         } else {
             (ProjForm::Dense, ProjForm::Dense, ProjForm::Dense, ProjForm::Dense)
         };
-        proj(&mut rng, &mut ts, &format!("{p}.att.wr"), d, fr, f16);
-        proj(&mut rng, &mut ts, &format!("{p}.att.wk"), d, fk, f16);
-        proj(&mut rng, &mut ts, &format!("{p}.att.wv"), d, fv2, f16);
-        proj(&mut rng, &mut ts, &format!("{p}.att.wg"), d, fg, f16);
-        ts.push(mat(&mut rng, &format!("{p}.att.wo.w"), d, d, 0.6, f16));
+        proj(&mut rng, &mut ts, &format!("{p}.att.wr"), d, fr, fenc, wenc);
+        proj(&mut rng, &mut ts, &format!("{p}.att.wk"), d, fk, fenc, wenc);
+        proj(&mut rng, &mut ts, &format!("{p}.att.wv"), d, fv2, fenc, wenc);
+        proj(&mut rng, &mut ts, &format!("{p}.att.wg"), d, fg, fenc, wenc);
+        ts.extend(mat(&mut rng, &format!("{p}.att.wo.w"), d, d, 0.6, wenc));
         for mu in ["mu_k", "mu_r"] {
             ts.push(vecf(&mut rng, &format!("{p}.ffn.{mu}"), d, |r| r.next_f32()));
         }
@@ -167,14 +195,24 @@ pub fn write_synth_rwkv(artifacts: &Path, name: &str, spec: &SynthSpec) -> Resul
             &format!("{p}.ffn.wr"),
             d,
             if spec.lowrank { ProjForm::LowRank } else { ProjForm::Dense },
-            f16,
+            fenc,
+            wenc,
         );
-        ts.push(mat(&mut rng, &format!("{p}.ffn.wk_t"), f, d, 0.8, f16));
-        ts.push(mat(&mut rng, &format!("{p}.ffn.wv"), f, d, 0.8, f16));
+        ts.extend(mat(&mut rng, &format!("{p}.ffn.wk_t"), f, d, 0.8, wenc));
+        // wv accumulates (in,out)-style; the offset-carrying Q4_1 variant
+        // covers that kernel family end to end
+        ts.extend(mat(
+            &mut rng,
+            &format!("{p}.ffn.wv"),
+            f,
+            d,
+            0.8,
+            if spec.q4 { Enc::Q41 } else { fenc },
+        ));
         if spec.predictors {
             let n = (d / 2).max(4);
-            ts.push(mat(&mut rng, &format!("{p}.pred.l1"), d, n, 1.0, f16));
-            ts.push(mat(&mut rng, &format!("{p}.pred.l2"), n, f, 1.0, f16));
+            ts.extend(mat(&mut rng, &format!("{p}.pred.l1"), d, n, 1.0, fenc));
+            ts.extend(mat(&mut rng, &format!("{p}.pred.l2"), n, f, 1.0, fenc));
             let packed: Vec<u8> = (0..d.div_ceil(8) * f)
                 .map(|_| (rng.next_u64() & 0xff) as u8)
                 .collect();
@@ -195,7 +233,16 @@ pub fn write_synth_rwkv(artifacts: &Path, name: &str, spec: &SynthSpec) -> Resul
 
     let manifest = json::obj(vec![
         ("name", json::s(name)),
-        ("precision", json::s(if f16 { "f16" } else { "f32" })),
+        (
+            "precision",
+            json::s(if spec.q4 {
+                "q4"
+            } else if spec.f16 {
+                "f16"
+            } else {
+                "f32"
+            }),
+        ),
         (
             "config",
             json::obj(vec![
@@ -245,6 +292,40 @@ mod tests {
         assert!(store.rkv.has("hh.h1"));
         let emb = store.rkv.entry("emb").unwrap();
         assert_eq!(emb.shape, vec![spec.vocab, spec.dim()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn q4_synth_checkpoint_places_formats_per_hybrid_recipe() {
+        use crate::tensor::{DType, Mat};
+        let dir = std::env::temp_dir().join(format!("rwkv-synth-q4-{}", std::process::id()));
+        let mut spec = SynthSpec::tiny();
+        spec.q4 = true;
+        write_synth_rwkv(&dir, "synth-q4", &spec).unwrap();
+        let store = WeightStore::open(&dir.join("models/synth-q4.json")).unwrap();
+        let dt = |n: &str| store.rkv.entry(n).unwrap().dtype;
+        // quantized: dense projections, wo, wk_t (Q4) and wv (Q4_1),
+        // each with f16 per-group siblings alongside
+        assert_eq!(dt("b0.att.wr.w"), DType::Q4);
+        assert_eq!(dt("b0.att.wo.w"), DType::Q4);
+        assert_eq!(dt("b0.ffn.wk_t"), DType::Q4);
+        assert_eq!(dt("b0.ffn.wk_t.scale"), DType::F16);
+        assert_eq!(dt("b0.ffn.wv"), DType::Q41);
+        assert!(store.rkv.has("b0.ffn.wv.min"));
+        assert_eq!(dt("head"), DType::Q4);
+        // float per the hybrid recipe: embeddings, predictors, vectors
+        assert_eq!(dt("emb"), DType::F32);
+        assert_eq!(dt("b0.pred.l1"), DType::F32);
+        // the store loads quantized mats (siblings resolved + validated)
+        assert!(matches!(&*store.mat("b0.att.wo.w").unwrap(), Mat::Q4 { .. }));
+        assert!(matches!(&*store.mat("b0.ffn.wv").unwrap(), Mat::Q41 { .. }));
+        // and row-streams them: a RowView dot over a Q4 row is bitwise
+        // the dense f32 dot over that row's dequantized values
+        let rv = store.row_view("b0.ffn.wk_t").unwrap();
+        let x: Vec<f32> = (0..spec.dim()).map(|i| 0.1 * i as f32 - 0.7).collect();
+        let mut want = vec![0.0f32; spec.dim()];
+        store.mat("b0.ffn.wk_t").unwrap().decode_row(3, &mut want);
+        assert_eq!(rv.dot_row(3, &x), crate::tensor::dot_f32(&want, &x));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

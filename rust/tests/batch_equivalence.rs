@@ -105,6 +105,21 @@ fn batch_equals_per_slot_all_techniques_f16_lowrank() {
     });
 }
 
+/// Group-quantized checkpoint: batched rounds over Q4/Q4_1 weights must
+/// stay bit-identical to the per-slot path (the batched kernels decode
+/// each weight element once per round and reuse it across slots — same
+/// dequantized value, same accumulation order per slot).
+#[test]
+fn batch_equals_per_slot_quantized() {
+    let mut spec = SynthSpec::tiny();
+    spec.q4 = true;
+    spec.seed = 0x0444;
+    check_equivalence("q4", &spec, |c| {
+        c.sparse_ffn = true;
+        c.hier_head = true;
+    });
+}
+
 #[test]
 fn batch_equals_per_slot_dense_layerwise() {
     let mut spec = SynthSpec::tiny();
@@ -156,4 +171,36 @@ fn batch_round_telemetry_and_union_accounting() {
     );
     std::fs::remove_dir_all(&dir).ok();
     std::fs::remove_dir_all(&dir2).ok();
+}
+
+/// The point of Q4 streaming: a quantized checkpoint's decode round must
+/// move at most 0.55x the weight bytes of the same model stored in f16,
+/// through the UNCHANGED engine paths (packed nibbles ~0.25x + per-group
+/// f16 scales ~0.0625x on the quantized matrices; vectors stay float).
+#[test]
+fn quantized_round_streams_at_most_55_percent_of_f16_bytes() {
+    let mut bytes = Vec::new();
+    for q4 in [false, true] {
+        let mut spec = SynthSpec::tiny();
+        // pure dense rounds so round bytes == the streamed matrices
+        spec.predictors = false;
+        spec.hier_head = false;
+        spec.f16 = true;
+        spec.q4 = q4;
+        let dir = synth_dir(if q4 { "ratio-q4" } else { "ratio-f16" });
+        write_synth_rwkv(&dir, "m", &spec).unwrap();
+        let cfg = EngineConfig::vanilla("m", dir.clone());
+        let mut e = RwkvEngine::load(cfg).unwrap();
+        let mut states: Vec<RwkvState> = (0..2).map(|_| e.new_state()).collect();
+        e.forward_tokens_batch(&[3u32, 19], &mut states).unwrap();
+        assert!(e.last_round_weight_bytes > 0);
+        bytes.push(e.last_round_weight_bytes);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    let (f16b, q4b) = (bytes[0] as f64, bytes[1] as f64);
+    assert!(
+        q4b <= 0.55 * f16b,
+        "quantized round streams {q4b} bytes, f16 streams {f16b} — ratio {:.3} > 0.55",
+        q4b / f16b
+    );
 }

@@ -33,7 +33,14 @@ fn rkv_seeds() -> Vec<Vec<u8>> {
     ]);
     let b = rkv_bytes(&[RkvTensor::u8("q", vec![2, 2], vec![7, 8, 9, 10])]);
     let c = rkv_bytes(&[]);
-    vec![a, b, c]
+    // group-quantized tensors with their f16 siblings (odd cols → ragged
+    // final group + pad nibble), so mutations explore the packed-size
+    // validation and the sibling shape checks
+    let vals: Vec<f32> = (0..3 * 37).map(|i| (i % 13) as f32 * 0.3 - 1.7).collect();
+    let mut qt = RkvTensor::q4_from_f32("b0.ffn.wk_t", 3, 37, &vals);
+    qt.extend(RkvTensor::q4_1_from_f32("b0.ffn.wv", 3, 37, &vals));
+    let d = rkv_bytes(&qt);
+    vec![a, b, c, d]
 }
 
 /// Whatever `open_bytes` accepts must survive every accessor: the parse
@@ -49,7 +56,14 @@ fn exercise_rkv(f: &RkvFile) {
         let _ = f.raw(n);
         let _ = f.vec_f32(n);
         let _ = f.vec_i32(n);
-        let _ = f.mat(n);
+        if let Ok(m) = f.mat(n) {
+            // decode a row: quantized payloads must dequantize without
+            // panicking whenever the parse invariants accepted them
+            if m.rows() > 0 {
+                let mut row = vec![0.0f32; m.cols()];
+                m.decode_row(0, &mut row);
+            }
+        }
         let _ = f.row_f16(n, 0);
         let _ = f.row_f16(n, 3);
     }

@@ -145,6 +145,80 @@ fn rkv_shape_byte_count_mismatch_errors() {
     assert!(RkvFile::open_bytes(&img).is_err());
 }
 
+// -------------------------------------------------- rkv: quantized --
+
+#[test]
+fn rkv_q4_payload_length_must_be_packed_size() {
+    // [3, 5] Q4 packs to 3 * ceil(5/2) = 9 bytes; every other claim is a
+    // lie that would let a nibble read run off the payload
+    for nbytes in [8u64, 10, 15, 30] {
+        let img = rkv_image(
+            &[rkv_entry(b"w", 5, 2, &[3, 5], 0, nbytes)],
+            &vec![0u8; nbytes as usize],
+        );
+        assert!(
+            RkvFile::open_bytes(&img).is_err(),
+            "Q4 [3,5] with {nbytes} bytes must be rejected (want 9)"
+        );
+    }
+    // the correct packed size parses
+    let img = rkv_image(&[rkv_entry(b"w", 5, 2, &[3, 5], 0, 9)], &[0u8; 9]);
+    assert!(RkvFile::open_bytes(&img).is_ok());
+}
+
+#[test]
+fn rkv_q4_non_matrix_rank_errors() {
+    // sub-byte packing is defined per row: 1-D and 3-D Q4/Q4_1 tensors
+    // have no packed size and must fail at open, not at first access
+    for (dtype, ndim, dims) in [(5u8, 1u8, vec![6u32]), (6, 1, vec![6]), (5, 3, vec![2, 2, 2])] {
+        let img = rkv_image(&[rkv_entry(b"w", dtype, ndim, &dims, 0, 4)], &[0u8; 4]);
+        assert!(RkvFile::open_bytes(&img).is_err(), "rank {ndim} q4 must be rejected");
+    }
+}
+
+#[test]
+fn rkv_q4_huge_shape_errors() {
+    // maximal 2-D dims: the packed size (rows * ceil(cols/2)) is checked
+    // math and cannot match a small nbytes claim
+    let img = rkv_image(&[rkv_entry(b"w", 5, 2, &[u32::MAX, u32::MAX], 0, 0)], &[]);
+    assert!(RkvFile::open_bytes(&img).is_err());
+    // and the element-count overflow path still fires for q4 codes
+    let dims = [u32::MAX, u32::MAX, u32::MAX];
+    let img = rkv_image(&[rkv_entry(b"w", 6, 3, &dims, 0, 0)], &[]);
+    assert!(RkvFile::open_bytes(&img).is_err());
+}
+
+#[test]
+fn rkv_q4_scale_block_mismatch_rejected_by_mat() {
+    // a valid Q4 [2, 40] payload (40 cols = 2 groups/row) whose .scale
+    // sibling is one group short per row: mat() must Err, never index
+    // past the scale block inside the fused kernels
+    let packed = vec![0x88u8; 2 * 20];
+    let entries = vec![
+        rkv_entry(b"w", 5, 2, &[2, 40], 0, 40),
+        // f16 [2, 1] = 4 bytes, placed right after the 40 packed bytes
+        rkv_entry(b"w.scale", 1, 2, &[2, 1], 40, 4),
+    ];
+    let mut payload = packed;
+    payload.extend_from_slice(&[0u8; 4]);
+    let f = RkvFile::open_bytes(&rkv_image(&entries, &payload)).unwrap();
+    assert!(f.mat("w").is_err(), "short scale block must be rejected");
+}
+
+#[test]
+fn rkv_q4_1_missing_min_sibling_rejected_by_mat() {
+    // Q4_1 needs BOTH .scale and .min; an image with only .scale (e.g. a
+    // truncated re-export) must fail at mat(), not decode offsets as 0
+    let entries = vec![
+        rkv_entry(b"w", 6, 2, &[2, 32], 0, 32),
+        rkv_entry(b"w.scale", 1, 2, &[2, 1], 32, 4),
+    ];
+    let mut payload = vec![0u8; 32];
+    payload.extend_from_slice(&[0u8; 4]);
+    let f = RkvFile::open_bytes(&rkv_image(&entries, &payload)).unwrap();
+    assert!(f.mat("w").is_err(), "missing .min sibling must be rejected");
+}
+
 #[test]
 fn rkv_out_of_range_row_errors_not_panics() {
     let img = rkv_bytes(&[RkvTensor::f16_from_f32("w", vec![2, 2], &[1.0; 4])]);

@@ -164,12 +164,14 @@ fn prop_bit_matvec_sign_flip_antisymmetric() {
 }
 
 /// Random-dtype matrix generator shared by the matmat properties:
-/// f32 / f16 / i8 with the scale length the consumer expects.
+/// f32 / f16 / i8 / q4 / q4_1 with the scale length the consumer expects.
 fn gen_mat(g: &mut Gen, rows: usize, cols: usize, scale_rows: bool) -> Mat {
     let data = g.vec_normal(rows * cols);
-    match g.usize_in(0, 3) % 3 {
+    match g.usize_in(0, 5) % 5 {
         0 => Mat::from_f32(rows, cols, data),
         1 => Mat::f32_to_f16_mat(rows, cols, &data),
+        2 => Mat::quantize_q4_mat(rows, cols, &data),
+        3 => Mat::quantize_q4_1_mat(rows, cols, &data),
         _ => {
             let q: Vec<i8> = data.iter().map(|v| (v * 30.0).clamp(-127.0, 127.0) as i8).collect();
             let n = if scale_rows { rows } else { cols };
@@ -177,6 +179,64 @@ fn gen_mat(g: &mut Gen, rows: usize, cols: usize, scale_rows: bool) -> Mat {
             Mat::I8 { rows, cols, data: q, scale }
         }
     }
+}
+
+/// Dense f32 matrix holding exactly a quantized matrix's decoded values.
+fn dequantized_dense(q: &Mat) -> Mat {
+    Mat::from_f32(q.rows(), q.cols(), q.to_f32_vec())
+}
+
+#[test]
+fn prop_q4_kernels_bitwise_match_dequantized_dense() {
+    // the fused Q4/Q4_1 kernels must produce bit-identical outputs to the
+    // plain f32 kernels run on the dequantized weights — across random
+    // shapes (ragged final groups, cols below / straddling / beyond the
+    // 32-wide group), indexed subsets, and nonzero residuals
+    check("q4 kernels == dequantized dense", 120, |g: &mut Gen| {
+        let rows = g.usize_in(2, 40);
+        let cols = g.usize_in(1, 80);
+        let data = g.vec_normal(rows * cols);
+        let quants = [
+            Mat::quantize_q4_mat(rows, cols, &data),
+            Mat::quantize_q4_1_mat(rows, cols, &data),
+        ];
+        for q in &quants {
+            let d = dequantized_dense(q);
+            // row-per-output
+            let x = g.vec_normal(cols);
+            let mut got = vec![0.0f32; rows];
+            let mut want = vec![0.0f32; rows];
+            matvec_rows(q, &x, &mut got);
+            matvec_rows(&d, &x, &mut want);
+            ensure(got == want, "matvec_rows bitwise")?;
+            // indexed subset
+            let idx = g.indices(rows, 10);
+            let mut gi = vec![0.0f32; idx.len()];
+            let mut wi = vec![0.0f32; idx.len()];
+            matvec_rows_indexed(q, &idx, &x, &mut gi);
+            matvec_rows_indexed(&d, &idx, &x, &mut wi);
+            ensure(gi == wi, "matvec_rows_indexed bitwise")?;
+            // in-out with a residual already in the output
+            let xi = g.vec_normal(rows);
+            let residual = g.vec_normal(cols);
+            let mut go = residual.clone();
+            let mut wo = residual.clone();
+            matvec_in_out(&xi, q, &mut go, &mut Vec::new());
+            matvec_in_out(&xi, &d, &mut wo, &mut Vec::new());
+            ensure(go == wo, "matvec_in_out bitwise")?;
+            // accumulate selected rows (zero coefficients must be skipped)
+            let mut hs = g.vec_normal(idx.len());
+            if let Some(h) = hs.first_mut() {
+                *h = 0.0;
+            }
+            let mut ga = residual.clone();
+            let mut wa = residual.clone();
+            accum_rows_indexed(q, &idx, &hs, &mut ga);
+            accum_rows_indexed(&d, &idx, &hs, &mut wa);
+            ensure(ga == wa, "accum_rows_indexed bitwise")?;
+        }
+        Ok(())
+    });
 }
 
 #[test]

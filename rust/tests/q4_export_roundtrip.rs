@@ -1,0 +1,107 @@
+//! Cross-language Q4 export round-trip: the python compile pipeline
+//! quantizes a matrix (compile/compress/quant.py) and writes an `.rkv`
+//! container (compile/export.py); the rust reader must recover tensors
+//! that are BIT-identical to what rust's own quantizer produces from the
+//! same float input, and the fused kernels over them must match the
+//! dequantize-to-dense reference exactly.
+//!
+//! The two quantizers are specified to agree nibble-for-nibble (both
+//! divide by the f16-ROUNDED scale, round ties-to-even, and write
+//! canonical pad nibbles), so any drift between the languages fails this
+//! test rather than silently degrading served models.
+//!
+//! Skips (with a notice) when `python3` + numpy aren't installed, so
+//! plain `cargo test` still works in minimal environments.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use rwkv_lite::io::rkv::RkvFile;
+use rwkv_lite::tensor::{dot_f32, matvec_rows, Mat};
+
+const ROWS: usize = 6;
+const COLS: usize = 37; // ragged final group + odd trailing column
+
+/// Deterministic float32 pattern computable identically in numpy: every
+/// op stays in f32, so both languages see the exact same input bits.
+fn pattern(n: usize) -> Vec<f32> {
+    (0..n).map(|i| (i % 13) as f32 * 0.3_f32 - 1.7_f32).collect()
+}
+
+const PY_SCRIPT: &str = r#"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+from compile import export
+from compile.compress import quant
+
+rows, cols = 6, 37
+w = (np.arange(rows * cols) % 13).astype(np.float32) * np.float32(0.3) - np.float32(1.7)
+w = w.reshape(rows, cols)
+p4, s4 = quant.group_q4(w)
+p41, s41, m41 = quant.group_q4_1(w)
+export.write_rkv(sys.argv[2], {
+    "w4": export.PackedTensor(export.DTYPES["q4"], w.shape, p4),
+    "w4.scale": s4,
+    "w41": export.PackedTensor(export.DTYPES["q4_1"], w.shape, p41),
+    "w41.scale": s41,
+    "w41.min": m41,
+})
+"#;
+
+#[test]
+fn python_q4_export_matches_rust_quantizer_bitwise() {
+    let python_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../python");
+    let dir = std::env::temp_dir().join(format!("rwkv-q4-xlang-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let rkv_path = dir.join("x.rkv");
+
+    let run = Command::new("python3")
+        .arg("-c")
+        .arg(PY_SCRIPT)
+        .arg(&python_dir)
+        .arg(&rkv_path)
+        .output();
+    let run = match run {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("SKIP q4_export_roundtrip: python3 unavailable ({e})");
+            return;
+        }
+    };
+    if !run.status.success() {
+        let err = String::from_utf8_lossy(&run.stderr);
+        if err.contains("ModuleNotFoundError") || err.contains("ImportError") {
+            eprintln!("SKIP q4_export_roundtrip: python deps unavailable\n{err}");
+            return;
+        }
+        panic!("python quantizer/exporter failed:\n{err}");
+    }
+
+    let f = RkvFile::open(&rkv_path).unwrap();
+    let vals = pattern(ROWS * COLS);
+
+    // container contents == rust quantizer output, bit for bit (packed
+    // nibbles, f16 scale bits, f16 min bits)
+    let want4 = Mat::quantize_q4_mat(ROWS, COLS, &vals);
+    let want41 = Mat::quantize_q4_1_mat(ROWS, COLS, &vals);
+    assert_eq!(f.mat("w4").unwrap(), want4);
+    assert_eq!(f.mat("w41").unwrap(), want41);
+
+    // and the fused kernels over the python-written tensors match the
+    // dequantize-to-f32 dense reference exactly
+    let x: Vec<f32> = (0..COLS).map(|c| (c as f32 * 0.17).sin()).collect();
+    for m in [&want4, &want41] {
+        let mut dense = vec![0.0f32; ROWS * COLS];
+        for r in 0..ROWS {
+            m.decode_row(r, &mut dense[r * COLS..(r + 1) * COLS]);
+        }
+        let mut got = vec![0.0f32; ROWS];
+        matvec_rows(m, &x, &mut got);
+        for r in 0..ROWS {
+            assert_eq!(got[r], dot_f32(&dense[r * COLS..(r + 1) * COLS], &x));
+        }
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}

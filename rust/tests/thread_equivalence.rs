@@ -165,6 +165,21 @@ fn threads_equivalent_all_techniques_f16_lowrank() {
     });
 }
 
+/// Group-quantized checkpoint (Q4 dense/row tensors, Q4_1 ffn.wv): the
+/// in-register dequant kernels shard over output ranges exactly like the
+/// float kernels — mid-group column splits included — so thread count
+/// must stay invisible here too.
+#[test]
+fn threads_equivalent_quantized() {
+    let mut spec = SynthSpec::tiny();
+    spec.q4 = true;
+    spec.seed = 0x0444;
+    check_thread_equivalence("q4", &spec, |c| {
+        c.sparse_ffn = true;
+        c.hier_head = true;
+    });
+}
+
 /// The threaded round must also match the SINGLE-SLOT sequential path
 /// (forward_hidden per token), tying thread equivalence back to the
 /// per-slot reference the other equivalence suites use.
