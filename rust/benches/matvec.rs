@@ -3,9 +3,17 @@
 //! Run: `cargo bench --bench matvec`.  Uses the in-crate bench harness
 //! (S28); reports mean/p50/p95 per op plus effective GB/s, the number to
 //! compare against the host's streaming bandwidth (§Perf roofline).
+//!
+//! The first section is the per-ISA dispatch comparison: every backend
+//! the host can run ([`simd::kernels_for`]) is forced in turn and the
+//! same fused matvec sweep is timed per dtype, printing GB/s and the
+//! speedup over the scalar reference (all backends are bit-identical, so
+//! the speedup is the whole story).
 
+use rwkv_lite::pool::Par;
 use rwkv_lite::tensor::{
-    bit_matvec, matmat_in_out, matmat_rows, matvec_in_out, matvec_rows, matvec_rows_indexed, Mat,
+    matmat_in_out, matmat_rows, matvec_in_out, matvec_rows, matvec_rows_indexed, simd, Mat,
+    ShadowView, SimdBackend,
 };
 use rwkv_lite::util::timer::bench;
 use rwkv_lite::util::XorShift;
@@ -14,9 +22,67 @@ fn randv(r: &mut XorShift, n: usize) -> Vec<f32> {
     (0..n).map(|_| r.normal()).collect()
 }
 
+/// One dot-path matvec sweep per dtype on the forced-active backend;
+/// returns p50 seconds per dtype (for the speedup-vs-scalar column).
+fn isa_sweep(label: &str, wmats: &[(&str, &Mat)], x: &[f32], out: &mut [f32]) -> Vec<f64> {
+    wmats
+        .iter()
+        .map(|&(dt, w)| {
+            let s = bench(&format!("matvec_rows {dt:<4} {label}"), 50, 0.3, || {
+                matvec_rows(w, x, out);
+            });
+            let gbs = w.nbytes() as f64 / s.p50_s / 1e9;
+            println!("    -> {gbs:.2} GB/s");
+            s.p50_s
+        })
+        .collect()
+}
+
 fn main() {
     let mut r = XorShift::new(7);
-    println!("tensor kernel microbench (dims match the medium model)\n");
+    println!(
+        "tensor kernel microbench (dims match the medium model; host auto simd = {})\n",
+        simd::detect().name()
+    );
+
+    // --- per-ISA dispatch comparison (GB/s per dtype x backend) ---------
+    {
+        let (rows, cols) = (768usize, 768usize);
+        let wf = randv(&mut r, rows * cols);
+        let q: Vec<i8> = wf.iter().map(|v| (v * 40.0).clamp(-127.0, 127.0) as i8).collect();
+        let wmats: Vec<(&str, Mat)> = vec![
+            ("f32", Mat::from_f32(rows, cols, wf.clone())),
+            ("f16", Mat::f32_to_f16_mat(rows, cols, &wf)),
+            ("i8", Mat::I8 { rows, cols, data: q, scale: vec![0.025; rows] }),
+            ("q4", Mat::quantize_q4_mat(rows, cols, &wf)),
+            ("q4_1", Mat::quantize_q4_1_mat(rows, cols, &wf)),
+        ];
+        let wrefs: Vec<(&str, &Mat)> = wmats.iter().map(|(n, m)| (*n, m)).collect();
+        let x = randv(&mut r, cols);
+        let mut out = vec![0.0f32; rows];
+        let backends: Vec<SimdBackend> =
+            [SimdBackend::Scalar, SimdBackend::Neon, SimdBackend::Avx2]
+                .into_iter()
+                .filter(|&b| simd::kernels_for(b).is_some())
+                .collect();
+        println!("per-ISA dispatch comparison ({rows}x{cols}, forced via simd::select)\n");
+        let mut scalar_p50: Vec<f64> = Vec::new();
+        for &b in &backends {
+            simd::select(Some(b)).expect("kernels_for said this backend is available");
+            println!("  backend = {}", b.name());
+            let p50s = isa_sweep(&format!("{rows}x{cols} [{}]", b.name()), &wrefs, &x, &mut out);
+            if b == SimdBackend::Scalar {
+                scalar_p50 = p50s;
+            } else {
+                for (&(dt, _), (&sp, &bp)) in wrefs.iter().zip(scalar_p50.iter().zip(&p50s)) {
+                    println!("    {dt:<4} speedup vs scalar: {:.2}x", sp / bp);
+                }
+            }
+            println!();
+        }
+        simd::select(None).expect("auto select always succeeds");
+    }
+
     for &(rows, cols) in &[(192usize, 192usize), (192, 672), (1024, 192)] {
         let wf = randv(&mut r, rows * cols);
         let x = randv(&mut r, rows);
@@ -93,11 +159,11 @@ fn main() {
         let mut scratch = Vec::new();
         let s = bench(&format!("matmat_in_out f16 B={b}"), 50, 0.3, || {
             outs.fill(0.0);
-            matmat_in_out(&xs, &w16, &mut outs, &mut scratch);
+            matmat_in_out(&xs, &w16, &mut outs, &mut scratch, Par::serial());
         });
         println!("    -> {:.2} GB/s per slot-token", bytes16 * b as f64 / s.p50_s / 1e9);
         let s = bench(&format!("matmat_rows   f16 B={b}"), 50, 0.3, || {
-            matmat_rows(&w16, &xsc, &mut outs_r);
+            matmat_rows(&w16, &xsc, &mut outs_r, Par::serial());
         });
         println!("    -> {:.2} GB/s per slot-token", bytes16 * b as f64 / s.p50_s / 1e9);
     }
@@ -109,7 +175,8 @@ fn main() {
     let scale = randv(&mut r, f).iter().map(|v| v.abs() + 0.01).collect::<Vec<_>>();
     let x = randv(&mut r, d);
     let mut out = vec![0.0f32; f];
-    bench(&format!("bit_matvec 1-bit {d}x{f} (shadow predictor)"), 50, 0.4, || {
-        bit_matvec(&packed, &scale, d, &x, &mut out);
+    let shadow = ShadowView::bits(&packed, &scale, d);
+    bench(&format!("ShadowView 1-bit {d}x{f} (shadow predictor)"), 50, 0.4, || {
+        shadow.matvec(&x, &mut out);
     });
 }

@@ -48,7 +48,10 @@
 
 use std::path::{Path, PathBuf};
 
-use rwkv_lite::config::{EngineConfig, LoadStrategy};
+use std::sync::OnceLock;
+
+use rwkv_lite::config::{EngineConfig, LoadStrategy, SimdMode};
+use rwkv_lite::tensor::simd;
 use rwkv_lite::coordinator::{
     batcher::BatchPolicy, AdmissionPolicy, Coordinator, CoordinatorConfig, Event, Request,
 };
@@ -69,9 +72,26 @@ fn flag_value(args: &[String], flag: &str) -> Option<String> {
     })
 }
 
+/// `--simd auto|scalar|neon|avx2` parsed once in `main`; every sweep's
+/// engine config picks it up so forced backends apply to ALL parts.
+static SIMD: OnceLock<SimdMode> = OnceLock::new();
+
+fn simd_mode() -> SimdMode {
+    *SIMD.get().expect("main parses --simd before any sweep")
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
+    // `--simd auto|scalar|neon|avx2` (or `--simd=...`): force the kernel
+    // backend for every engine the sweeps build; invalid values abort.
+    // Bit-identical across backends — this only moves the numbers.
+    let simd_mode_arg: SimdMode = flag_value(&args, "--simd")
+        .map(|v| SimdMode::parse(&v).unwrap_or_else(|e| panic!("{e}")))
+        .unwrap_or(SimdMode::Auto);
+    SIMD.set(simd_mode_arg).expect("--simd parsed once");
+    let backend = simd::select(simd_mode_arg.requested()).unwrap_or_else(|e| panic!("{e}"));
+    println!("active simd kernel backend: {} (--simd {})\n", backend.name(), simd_mode_arg.name());
     // `--threads N` / `--threads=N`: pin the compute-thread count for all
     // sweeps (0 = all cores); invalid values abort instead of silently
     // running single-threaded
@@ -165,6 +185,7 @@ fn decode_sweep(
     );
     for &batch in batches {
         let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+        cfg.simd = simd_mode();
         cfg.threads = threads;
         cfg.strategy = strategy;
         let coordinator = Coordinator::spawn(
@@ -236,6 +257,7 @@ fn prefill_sweep(
     );
     for &chunk in chunks {
         let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+        cfg.simd = simd_mode();
         cfg.prefill_chunk = chunk;
         cfg.threads = threads;
         cfg.strategy = strategy;
@@ -297,6 +319,7 @@ fn thread_sweep(
     for &batch in batches {
         for &threads in &threads_list {
             let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+            cfg.simd = simd_mode();
             cfg.threads = threads;
             cfg.strategy = strategy;
             let mut engine = RwkvEngine::load(cfg).expect("load engine");
@@ -369,6 +392,7 @@ fn layerwise_sweep(model: &str, artifacts: &Path, smoke: bool, pinned: Option<us
     for &threads in &threads_list {
         for &prefetch in &[false, true] {
             let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+            cfg.simd = simd_mode();
             cfg.strategy = LoadStrategy::Layerwise;
             cfg.threads = threads;
             cfg.prefetch = prefetch;
@@ -448,6 +472,7 @@ fn state_cache_sweep(
         "request", "cached tok", "prefill tok", "prefill GB", "ttft ms", "decode tok"
     );
     let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+    cfg.simd = simd_mode();
     cfg.threads = threads;
     cfg.strategy = strategy;
     let mut engine = RwkvEngine::load(cfg).expect("load engine");
@@ -541,6 +566,7 @@ fn quantized_smoke(smoke: bool, threads: usize, strategy: LoadStrategy) {
             .map(|m| m.len())
             .unwrap_or(0);
         let mut cfg = EngineConfig::all_techniques("synthetic-quant", dir.clone());
+        cfg.simd = simd_mode();
         cfg.threads = threads;
         cfg.strategy = strategy;
         let mut engine = RwkvEngine::load(cfg).expect("load engine");
@@ -599,6 +625,7 @@ fn overload_smoke(
     let (burst, max_tokens): (usize, usize) = if smoke { (16, 4) } else { (64, 16) };
     println!("\noverload: burst of {burst} vs max_queue=2, max_concurrency=2\n");
     let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+    cfg.simd = simd_mode();
     cfg.threads = threads;
     cfg.strategy = strategy;
     let coordinator = Coordinator::spawn_cfg(

@@ -55,6 +55,49 @@ impl Backend {
     }
 }
 
+/// SIMD kernel backend selection ([`crate::tensor::simd`]): `Auto` probes
+/// the host at engine load (aarch64 → NEON, x86_64 with AVX2 → AVX2, else
+/// scalar); forcing a backend the host lacks fails at load.  Every
+/// backend is bit-identical to scalar — this knob trades throughput only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    Auto,
+    Scalar,
+    Neon,
+    Avx2,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => SimdMode::Auto,
+            "scalar" => SimdMode::Scalar,
+            "neon" => SimdMode::Neon,
+            "avx2" => SimdMode::Avx2,
+            _ => bail!("unknown simd mode '{s}' (auto|scalar|neon|avx2)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Scalar => "scalar",
+            SimdMode::Neon => "neon",
+            SimdMode::Avx2 => "avx2",
+        }
+    }
+
+    /// The forced backend this mode requests (`None` = auto-detect).
+    pub fn requested(self) -> Option<crate::tensor::SimdBackend> {
+        match self {
+            SimdMode::Auto => None,
+            SimdMode::Scalar => Some(crate::tensor::SimdBackend::Scalar),
+            SimdMode::Neon => Some(crate::tensor::SimdBackend::Neon),
+            SimdMode::Avx2 => Some(crate::tensor::SimdBackend::Avx2),
+        }
+    }
+}
+
 /// Full engine configuration.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -88,6 +131,8 @@ pub struct EngineConfig {
     /// single-threaded, `k` = `k` lanes.  Rounds are bit-identical for
     /// every value — this knob only trades cores for latency.
     pub threads: usize,
+    /// SIMD kernel backend for the tensor inner loops (`--simd`).
+    pub simd: SimdMode,
     /// Prefix-state cache budget in MiB (`0` = disabled).  The serve path
     /// builds one `engine::state_cache::StateCache` the coordinator owns
     /// across all requests: shared prompt prefixes fork from a cached
@@ -137,6 +182,7 @@ impl Default for EngineConfig {
             prefill_chunk: 8,
             prefetch: true,
             threads: 0,
+            simd: SimdMode::Auto,
             state_cache_mb: 0,
             state_file: None,
             max_queue: 64,
@@ -191,6 +237,7 @@ impl EngineConfig {
             ("prefill_chunk", json::num(self.prefill_chunk as f64)),
             ("prefetch", Value::Bool(self.prefetch)),
             ("threads", json::num(self.threads as f64)),
+            ("simd", json::s(self.simd.name())),
             ("state_cache_mb", json::num(self.state_cache_mb as f64)),
             (
                 "state_file",
@@ -234,6 +281,9 @@ impl EngineConfig {
         c.prefill_chunk = v.f64_at(&["prefill_chunk"]).unwrap_or(8.0) as usize;
         c.prefetch = b("prefetch", true);
         c.threads = v.f64_at(&["threads"]).unwrap_or(0.0) as usize;
+        if let Some(s) = v.str_at(&["simd"]) {
+            c.simd = SimdMode::parse(s)?;
+        }
         c.state_cache_mb = v.f64_at(&["state_cache_mb"]).unwrap_or(0.0) as usize;
         c.state_file = v
             .str_at(&["state_file"])
@@ -266,6 +316,7 @@ mod tests {
         c.max_prompt_tokens = 4096;
         c.deadline_ms = 1500;
         c.drain_ms = 250;
+        c.simd = SimdMode::Scalar;
         let v = c.to_json();
         let c2 = EngineConfig::from_json(&v).unwrap();
         assert_eq!(c2.model, c.model);
@@ -280,6 +331,29 @@ mod tests {
         assert_eq!(c2.max_prompt_tokens, 4096);
         assert_eq!(c2.deadline_ms, 1500);
         assert_eq!(c2.drain_ms, 250);
+        assert_eq!(c2.simd, SimdMode::Scalar);
+    }
+
+    #[test]
+    fn simd_defaults_auto() {
+        assert_eq!(EngineConfig::default().simd, SimdMode::Auto);
+        // absent key (older config JSON) keeps the default
+        let c = EngineConfig::from_json(&json::obj(vec![])).unwrap();
+        assert_eq!(c.simd, SimdMode::Auto);
+        for (s, m) in [
+            ("auto", SimdMode::Auto),
+            ("scalar", SimdMode::Scalar),
+            ("neon", SimdMode::Neon),
+            ("avx2", SimdMode::Avx2),
+        ] {
+            assert_eq!(SimdMode::parse(s).unwrap(), m);
+            assert_eq!(m.name(), s);
+        }
+        assert!(SimdMode::Auto.requested().is_none());
+        assert_eq!(
+            SimdMode::Neon.requested(),
+            Some(crate::tensor::SimdBackend::Neon)
+        );
     }
 
     #[test]
@@ -321,5 +395,6 @@ mod tests {
     fn parse_rejects_unknown() {
         assert!(LoadStrategy::parse("bogus").is_err());
         assert!(Backend::parse("gpu").is_err());
+        assert!(SimdMode::parse("sse2").is_err());
     }
 }

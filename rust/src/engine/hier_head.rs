@@ -9,12 +9,12 @@
 //! distribution smooth — assigning -inf wrecks perplexity (paper §3.3).
 //!
 //! [`HierHead::logits_batch`] serves a whole scheduling round: H1 streams
-//! once for all slots (`tensor::matmat_rows_par`, output rows sharded
-//! across the pool), and the exact-row scoring — the O(rows·D) bulk of the
-//! head at high B — fans out over the pool too: every (slot, token) dot
-//! product is an independent output position, so the flat job list shards
-//! across lanes exactly like `tensor::matmat_rows_indexed_par` shards
-//! selected index positions.  Sharding never cuts a reduction, so results
+//! once for all slots (`tensor::matmat_rows` with a pooled [`Par`], output
+//! rows sharded across the pool), and the exact-row scoring — the
+//! O(rows·D) bulk of the head at high B — fans out over the pool too:
+//! every (slot, token) dot product is an independent output position, so
+//! the flat job list shards across lanes exactly like
+//! `tensor::matmat_rows_indexed` shards selected index positions.  Sharding never cuts a reduction, so results
 //! are bit-identical for every thread count.  Exact head rows touched by
 //! the round are accounted as the cross-slot UNION (a row streamed for one
 //! slot serves every other slot that selected its cluster).
@@ -26,7 +26,7 @@ use anyhow::Result;
 use crate::engine::weights::WeightStore;
 use crate::metrics::{Group, MemTracker};
 use crate::pool::{Par, SharedSliceMut};
-use crate::tensor::{matmat_rows_par, matvec_rows, Mat};
+use crate::tensor::{matmat_rows, matvec_rows, Mat};
 use crate::util::softmax_inplace;
 
 pub struct HierHead {
@@ -159,7 +159,7 @@ impl HierHead {
         let mut max_known = f32::NEG_INFINITY;
         for &ci in &selected {
             for &tok in &self.clusters[ci] {
-                let lg = head.dot_row(tok as usize, hidden);
+                let lg = head.dot(tok as usize, hidden);
                 out[tok as usize] = lg;
                 max_known = max_known.max(lg);
                 n_loaded += 1;
@@ -196,7 +196,7 @@ impl HierHead {
         let b = outs.len();
         debug_assert_eq!(hiddens.len(), b * d);
         let mut cls = vec![0.0f32; b * c];
-        matmat_rows_par(&self.h1, hiddens, &mut cls, par);
+        matmat_rows(&self.h1, hiddens, &mut cls, par);
         // per-slot cluster selection (cheap serial math), flattened into
         // one (slot, token) job list in per-slot selection order
         let mut selections: Vec<(Vec<usize>, f32)> = Vec::with_capacity(b);
@@ -214,7 +214,7 @@ impl HierHead {
         }
         slot_job0.push(jobs.len());
         // exact-row scoring sharded over flat job positions — the
-        // streamed-row analogue of `matmat_rows_indexed_par`: each lane
+        // streamed-row analogue of `matmat_rows_indexed`: each lane
         // owns a disjoint contiguous slice of output positions and
         // streams only the head rows those positions name
         let head = store.row_view("head")?;
@@ -228,7 +228,7 @@ impl HierHead {
                 let scores = unsafe { view.get() };
                 for (k, &(s, tok)) in jobs.iter().enumerate().take(k1).skip(k0) {
                     let s = s as usize;
-                    scores[k] = head.dot_row(tok as usize, &hiddens[s * d..(s + 1) * d]);
+                    scores[k] = head.dot(tok as usize, &hiddens[s * d..(s + 1) * d]);
                 }
             });
         }

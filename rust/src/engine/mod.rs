@@ -33,7 +33,10 @@
 //! floating-point reduction, it only changes which core computes which
 //! output range.  Per-phase timing lands in the engine registry as
 //! `round_wkv_secs` / `round_matmul_secs` / `round_pred_secs` /
-//! `round_head_secs`.
+//! `round_head_secs`.  Within each lane the inner loops run on the
+//! runtime-dispatched SIMD kernel table ([`crate::tensor::simd`], the
+//! `--simd` knob, resolved once at load) — every backend is
+//! bit-identical to scalar, so ISA choice never changes output either.
 //!
 //! Prefix-state cache: because the recurrent state is O(1) in sequence
 //! length, a processed prompt prefix caches as ONE `RwkvState` snapshot
@@ -75,8 +78,8 @@ use crate::config::{Backend, EngineConfig, LoadStrategy};
 use crate::metrics::{MemTracker, Registry};
 use crate::pool::{Par, SharedSliceMut, ThreadPool};
 use crate::tensor::{
-    group_norm_heads, layer_norm, lerp_shift, matmat_in_out_par, matmat_rows_par, matvec_in_out,
-    matvec_rows, sigmoid, silu, sqrelu_inplace, Mat,
+    group_norm_heads, layer_norm, lerp_shift, matmat_in_out, matmat_rows, matvec_in_out,
+    matvec_rows, sigmoid, silu, simd, sqrelu_inplace, Mat, SimdBackend,
 };
 use emb_cache::EmbCache;
 use hier_head::HierHead;
@@ -141,6 +144,11 @@ pub struct RwkvEngine {
     pool: Option<Arc<ThreadPool>>,
     /// Effective compute-lane count (`pool` lanes, or 1).
     pub threads: usize,
+    /// Active SIMD kernel backend ([`crate::tensor::simd`]) — resolved
+    /// once at load from `cfg.simd` (forced or auto-detected) and
+    /// reported in telemetry.  Every backend is bit-identical to scalar,
+    /// so this only changes throughput, never output.
+    pub simd: SimdBackend,
     ln0: LnW,
     ln_out: LnW,
     blocks: Vec<Option<BlockW>>,
@@ -414,6 +422,10 @@ impl RwkvEngine {
     /// reference path).
     pub fn load_with_pool(cfg: EngineConfig, pool: Option<Arc<ThreadPool>>) -> Result<Self> {
         let threads = pool.as_ref().map_or(1, |p| p.workers() + 1);
+        // Resolve the SIMD kernel backend before touching any weights:
+        // a forced-but-unavailable backend must fail loudly at load, not
+        // mid-decode.  `select` pins the process-wide kernel table.
+        let simd_backend = simd::select(cfg.simd.requested())?;
         let manifest_path: PathBuf = cfg
             .artifacts
             .join("models")
@@ -495,13 +507,16 @@ impl RwkvEngine {
         };
 
         let buf = Scratch::new(info.dim, info.ffn);
+        let metrics = Registry::new();
+        metrics.set("simd_backend_id", simd_backend.as_u8() as u64);
         Ok(Self {
             info,
             cfg,
             store,
-            metrics: Registry::new(),
+            metrics,
             pool,
             threads,
+            simd: simd_backend,
             ln0,
             ln_out,
             blocks,
@@ -911,7 +926,7 @@ impl RwkvEngine {
                 flat.clear();
                 flat.resize(bh * vocab, 0.0);
                 let par = Par::new(self.pool.as_deref());
-                matmat_rows_par(hm, &self.bbuf.xa[..bh * d], &mut flat, par);
+                matmat_rows(hm, &self.bbuf.xa[..bh * d], &mut flat, par);
                 for (s, out) in logits_out.iter_mut().enumerate() {
                     out.copy_from_slice(&flat[s * vocab..(s + 1) * vocab]);
                 }
@@ -1029,7 +1044,7 @@ impl RwkvEngine {
         // one streaming pass of wo for the whole round (+= residual)
         let t_wo = crate::util::Stopwatch::start();
         let bb = &mut self.bbuf;
-        matmat_in_out_par(&bb.att_out, &b.att.wo, &mut bb.x, &mut bb.accs, par);
+        matmat_in_out(&bb.att_out, &b.att.wo, &mut bb.x, &mut bb.accs, par);
         self.last_stats.matmul_secs += t_wo.elapsed_secs();
     }
 
@@ -1171,7 +1186,7 @@ impl RwkvEngine {
             bb.h.clear();
             bb.h.resize(n * f, 0.0);
             let t_ff = crate::util::Stopwatch::start();
-            matmat_rows_par(wk_t, &bb.t1, &mut bb.h, par);
+            matmat_rows(wk_t, &bb.t1, &mut bb.h, par);
             sqrelu_inplace(&mut bb.h);
             for r in 0..n {
                 let nz = bb.h[r * f..(r + 1) * f].iter().filter(|&&v| v > 0.0).count();
@@ -1182,7 +1197,7 @@ impl RwkvEngine {
             }
             let bb = &mut self.bbuf;
             bb.ffn_out.fill(0.0);
-            matmat_in_out_par(&bb.h, wv, &mut bb.ffn_out, &mut bb.accs, par);
+            matmat_in_out(&bb.h, wv, &mut bb.ffn_out, &mut bb.accs, par);
             self.last_stats.matmul_secs += t_ff.elapsed_secs();
             bytes += wk_t.nbytes() + wv.nbytes();
         }

@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::engine::weights::{ProjW, WeightStore};
 use crate::metrics::{Group, MemTracker};
 use crate::pool::{Par, SharedSliceMut};
-use crate::tensor::{bit_matvec, matvec_in_out, sigmoid};
+use crate::tensor::{matvec_in_out, sigmoid, ShadowView};
 
 /// Which predictor drives row selection (Figure 9's study).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,9 +166,9 @@ impl SparsePredictor {
         scratch_f2.resize(f, 0.0);
         if self.mode == PredMode::Quant4Only {
             let q4 = self.q4.as_ref().expect("load_q4 before Quant4Only");
-            crate::tensor::nib4_matvec(q4, &self.q4_scale, xk.len(), xk, scratch_f2);
+            ShadowView::nib4(q4, &self.q4_scale, xk.len()).matvec(xk, scratch_f2);
         } else {
-            bit_matvec(&self.sign, &self.sign_scale, xk.len(), xk, scratch_f2);
+            ShadowView::bits(&self.sign, &self.sign_scale, xk.len()).matvec(xk, scratch_f2);
         }
         // percentile threshold over shadow scores (keep top (1-t_quant))
         let keep = ((1.0 - self.t_quant) * f as f32).ceil() as usize;
@@ -203,7 +203,7 @@ impl SparsePredictor {
         let wk_t = store.row_view(&format!("b{layer}.ffn.wk_t"))?;
         let mut idx = Vec::new();
         for j in 0..wk_t.rows {
-            if wk_t.dot_row(j, xk) > 0.0 {
+            if wk_t.dot(j, xk) > 0.0 {
                 idx.push(j as u32);
             }
         }
@@ -238,13 +238,13 @@ pub fn sparse_ffn_apply(
     h_scratch.clear();
     h_scratch.resize(idx.len(), 0.0);
     for (k, &j) in idx.iter().enumerate() {
-        let a = wk_t.dot_row(j as usize, xk).max(0.0);
+        let a = wk_t.dot(j as usize, xk).max(0.0);
         h_scratch[k] = a * a;
     }
     out.fill(0.0);
     for (k, &j) in idx.iter().enumerate() {
         if h_scratch[k] != 0.0 {
-            wv.accum_row(j as usize, h_scratch[k], out);
+            wv.accum(j as usize, h_scratch[k], out);
         }
     }
     wv.apply_col_scale(out);
@@ -328,7 +328,7 @@ pub fn sparse_ffn_apply_batch(
                     let c = cur[s];
                     if c < idx.len() && idx[c] == j {
                         cur[s] = c + 1;
-                        let a = wk_ref.dot_row(j as usize, &xks[s * d..(s + 1) * d]).max(0.0);
+                        let a = wk_ref.dot(j as usize, &xks[s * d..(s + 1) * d]).max(0.0);
                         h[s * u + uk] = a * a;
                     }
                 }
@@ -353,7 +353,7 @@ pub fn sparse_ffn_apply_batch(
                 for (uk, &j) in union_idx.iter().enumerate() {
                     let hv = h_ref[s * u + uk];
                     if hv != 0.0 {
-                        wv_ref.accum_row(j as usize, hv, out);
+                        wv_ref.accum(j as usize, hv, out);
                     }
                 }
                 wv_ref.apply_col_scale(out);

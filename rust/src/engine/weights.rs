@@ -17,8 +17,8 @@ use crate::io::{Manifest, RkvFile};
 use crate::metrics::{Group, MemTracker};
 use crate::pool::{Par, Task, ThreadPool};
 use crate::sync::{Arc, Mutex};
-use crate::tensor::q4::{dot_q4, dot_q4_1, dq4, dq4_1, q4_groups, q4_row_packed_bytes};
-use crate::tensor::{matmat_in_out_par, matvec_in_out, DType, Mat};
+use crate::tensor::q4::{q4_groups, q4_row_packed_bytes};
+use crate::tensor::{matmat_in_out, matvec_in_out, simd, DType, Kernels, Mat};
 use crate::util::cast::cast_slice_len;
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
@@ -173,7 +173,7 @@ impl WeightStore {
             DType::I8 => RowData::I8(cast_slice_len::<i8>(raw, rows * cols)?),
             // Q4/Q4_1 group scales live inside RowData (per-row slices of
             // the f16 sibling tensors) and are folded in per element by
-            // dot_row/accum_row, so `RowView::scale` stays None and
+            // `dot`/`accum`, so `RowView::scale` stays None and
             // `apply_col_scale` is a no-op for these dtypes.
             DType::Q4 => RowData::Q4 {
                 packed: raw,
@@ -186,7 +186,10 @@ impl WeightStore {
             },
             other => bail!("row_view dtype {other:?} unsupported for {name}"),
         };
-        Ok(RowView { dtype: e.dtype, rows, cols, data, scale })
+        // The ISA kernel table is resolved ONCE per view (i.e. once per
+        // matrix pass), not per row — `RowView::dot`/`accum` then call
+        // straight through the fn pointers.
+        Ok(RowView { dtype: e.dtype, rows, cols, data, scale, kern: simd::kernels() })
     }
 
     /// Zero-copy per-group parameter sibling of a Q4/Q4_1 tensor,
@@ -226,6 +229,8 @@ pub struct RowView<'a> {
     /// Per-row scale (i8, row-per-output tensors like wk_t/head) OR
     /// per-column scale (i8, (in,out) tensors like wv) — consumer knows.
     pub scale: Option<Vec<f32>>,
+    /// Active SIMD kernel table, resolved at view construction.
+    kern: &'static Kernels,
 }
 
 impl<'a> RowView<'a> {
@@ -240,24 +245,26 @@ impl<'a> RowView<'a> {
         }
     }
 
-    /// `dot(row_j, x)` with per-ROW scale applied for i8.
-    pub fn dot_row(&self, j: usize, x: &[f32]) -> f32 {
+    /// `dot(row_j, x)` with per-ROW scale applied for i8 — the unified
+    /// per-dtype dot: the storage precision was matched once at view
+    /// construction, so this is a slice + one indirect call.
+    pub fn dot(&self, j: usize, x: &[f32]) -> f32 {
         debug_assert_eq!(x.len(), self.cols);
         let lo = j * self.cols;
         match &self.data {
-            RowData::F16(all) => crate::tensor::dot_f16(&all[lo..lo + self.cols], x),
-            RowData::F32(all) => crate::tensor::dot_f32(&all[lo..lo + self.cols], x),
+            RowData::F16(all) => (self.kern.dot_f16)(&all[lo..lo + self.cols], x),
+            RowData::F32(all) => (self.kern.dot_f32)(&all[lo..lo + self.cols], x),
             RowData::I8(all) => {
                 let s = self.scale.as_ref().map(|s| s[j]).unwrap_or(1.0);
-                s * crate::tensor::dot_i8(&all[lo..lo + self.cols], x)
+                s * (self.kern.dot_i8)(&all[lo..lo + self.cols], x)
             }
             RowData::Q4 { packed, scale } => {
                 let (prb, ng) = (q4_row_packed_bytes(self.cols), q4_groups(self.cols));
-                dot_q4(&packed[j * prb..(j + 1) * prb], &scale[j * ng..(j + 1) * ng], x)
+                (self.kern.dot_q4)(&packed[j * prb..(j + 1) * prb], &scale[j * ng..(j + 1) * ng], x)
             }
             RowData::Q41 { packed, scale, min } => {
                 let (prb, ng) = (q4_row_packed_bytes(self.cols), q4_groups(self.cols));
-                dot_q4_1(
+                (self.kern.dot_q4_1)(
                     &packed[j * prb..(j + 1) * prb],
                     &scale[j * ng..(j + 1) * ng],
                     &min[j * ng..(j + 1) * ng],
@@ -269,25 +276,13 @@ impl<'a> RowView<'a> {
 
     /// `out[:] += h * row_j` (per-COLUMN scale for i8 applied by caller
     /// via [`RowView::apply_col_scale`] after accumulation).
-    pub fn accum_row(&self, j: usize, h: f32, out: &mut [f32]) {
+    pub fn accum(&self, j: usize, h: f32, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.cols);
         let lo = j * self.cols;
         match &self.data {
-            RowData::F16(all) => {
-                for (o, &v) in out.iter_mut().zip(&all[lo..lo + self.cols]) {
-                    *o += h * f16_to_f32(v);
-                }
-            }
-            RowData::F32(all) => {
-                for (o, &v) in out.iter_mut().zip(&all[lo..lo + self.cols]) {
-                    *o += h * v;
-                }
-            }
-            RowData::I8(all) => {
-                for (o, &v) in out.iter_mut().zip(&all[lo..lo + self.cols]) {
-                    *o += h * v as f32;
-                }
-            }
+            RowData::F16(all) => (self.kern.axpy_f16)(h, &all[lo..lo + self.cols], out),
+            RowData::F32(all) => (self.kern.axpy_f32)(h, &all[lo..lo + self.cols], out),
+            RowData::I8(all) => (self.kern.axpy_i8)(h, &all[lo..lo + self.cols], out),
             // group scales fold in per element here (unlike i8's deferred
             // per-column fold), so `apply_col_scale` stays a no-op and the
             // output may carry a residual at all times
@@ -295,18 +290,14 @@ impl<'a> RowView<'a> {
                 let (prb, ng) = (q4_row_packed_bytes(self.cols), q4_groups(self.cols));
                 let prow = &packed[j * prb..(j + 1) * prb];
                 let srow = &scale[j * ng..(j + 1) * ng];
-                for (c, o) in out.iter_mut().enumerate() {
-                    *o += h * dq4(prow, srow, c);
-                }
+                (self.kern.axpy_q4)(h, prow, srow, 0, out);
             }
             RowData::Q41 { packed, scale, min } => {
                 let (prb, ng) = (q4_row_packed_bytes(self.cols), q4_groups(self.cols));
                 let prow = &packed[j * prb..(j + 1) * prb];
                 let srow = &scale[j * ng..(j + 1) * ng];
                 let mrow = &min[j * ng..(j + 1) * ng];
-                for (c, o) in out.iter_mut().enumerate() {
-                    *o += h * dq4_1(prow, srow, mrow, c);
-                }
+                (self.kern.axpy_q4_1)(h, prow, srow, mrow, 0, out);
             }
         }
     }
@@ -412,19 +403,19 @@ impl ProjW {
     ) {
         outs.fill(0.0);
         match self {
-            ProjW::Dense(w) => matmat_in_out_par(xs, w, outs, accs, par),
+            ProjW::Dense(w) => matmat_in_out(xs, w, outs, accs, par),
             ProjW::LowRank { l, r } => {
                 scratch.clear();
                 scratch.resize(b * l.cols(), 0.0);
-                matmat_in_out_par(xs, l, scratch, accs, par);
-                matmat_in_out_par(scratch, r, outs, accs, par);
+                matmat_in_out(xs, l, scratch, accs, par);
+                matmat_in_out(scratch, r, outs, accs, par);
             }
             ProjW::Enhanced { l, r, d } => {
                 scratch.clear();
                 scratch.resize(b * l.cols(), 0.0);
-                matmat_in_out_par(xs, l, scratch, accs, par);
+                matmat_in_out(xs, l, scratch, accs, par);
                 crate::tensor::sqrelu_inplace(scratch);
-                matmat_in_out_par(scratch, r, outs, accs, par);
+                matmat_in_out(scratch, r, outs, accs, par);
                 let dim = d.len();
                 for s in 0..b {
                     let (x, out) = (&xs[s * dim..(s + 1) * dim], &mut outs[s * dim..(s + 1) * dim]);

@@ -22,7 +22,7 @@ use rwkv_lite::sync::atomic::{AtomicBool, Ordering};
 use rwkv_lite::sync::Arc;
 
 use rwkv_lite::cli::{self, flag, opt, opt_def, Args};
-use rwkv_lite::config::{Backend, EngineConfig, LoadStrategy};
+use rwkv_lite::config::{Backend, EngineConfig, LoadStrategy, SimdMode};
 use rwkv_lite::coordinator::{
     batcher::BatchPolicy, AdmissionPolicy, Coordinator, CoordinatorConfig,
 };
@@ -52,6 +52,7 @@ const SPECS: &[cli::OptSpec] = &[
     opt_def("prefill-chunk", "prompt tokens fused per round", "8"),
     opt_def("prefetch", "layerwise block prefetch (double-buffered): on|off", "on"),
     opt_def("threads", "intra-round compute threads (0 = all cores, 1 = serial)", "0"),
+    opt_def("simd", "kernel backend: auto|scalar|neon|avx2 (all bit-identical)", "auto"),
     opt_def("limit", "max examples per eval task", "0"),
     opt_def("addr", "listen address (serve)", "127.0.0.1:7070"),
     opt_def("batch", "max dynamic batch size (serve)", "8"),
@@ -104,6 +105,7 @@ fn engine_config(a: &Args) -> Result<EngineConfig> {
         other => bail!("--prefetch takes on|off, got '{other}'"),
     };
     cfg.threads = a.usize_or("threads", 0)?;
+    cfg.simd = SimdMode::parse(a.get_or("simd", "auto"))?;
     cfg.max_queue = a.usize_or("max-queue", 64)?;
     cfg.max_concurrency = a.usize_or("max-concurrency", 0)?;
     cfg.max_prompt_tokens = a.usize_or("max-prompt-tokens", 0)?;

@@ -433,9 +433,11 @@ impl<T> Task<T> {
 }
 
 /// Copyable parallelism handle passed down to the sharded kernels:
-/// `Par::none()` (or a `threads = 1` engine) runs sections inline;
+/// `Par::serial()` (or a `threads = 1` engine) runs sections inline;
 /// otherwise sections fan out over the pool.  Results are bit-identical
-/// either way — the handle only chooses who computes which range.
+/// either way — the handle only chooses who computes which range, which
+/// is what lets each kernel expose ONE entry point instead of a
+/// scalar/`_par` twin pair.
 #[derive(Clone, Copy, Default)]
 pub struct Par<'a> {
     pool: Option<&'a ThreadPool>,
@@ -443,7 +445,7 @@ pub struct Par<'a> {
 
 impl<'a> Par<'a> {
     /// Inline execution (the single-threaded reference path).
-    pub fn none() -> Self {
+    pub fn serial() -> Self {
         Self { pool: None }
     }
 

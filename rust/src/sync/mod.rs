@@ -22,6 +22,11 @@
 //!   where the raw-pointer hand-offs live.
 //! * **`OnceLock`** (the f16 decode table) stays `std::sync::OnceLock`:
 //!   pure lazily-computed data, no cross-thread protocol.
+//! * **`tensor::simd`'s backend selector** is a `std::sync::atomic`
+//!   `AtomicU8` under loom too (loom atomics cannot const-initialize a
+//!   `static`): a single configuration byte written once at engine load,
+//!   read by kernels — no cross-thread protocol to model, and every
+//!   backend it can select is bit-identical anyway.
 //!
 //! The loom build only compiles the library's unit-test target
 //! (`cargo test --lib` with `--cfg loom`); the binaries keep using the

@@ -1,5 +1,6 @@
 //! Fused multi-vector (matrix x batch-of-vectors) kernels — the batched
-//! decode hot path — and their row-sharded parallel forms.
+//! decode hot path, serial or pool-sharded through ONE entry point per
+//! kernel driven by a [`Par`] handle.
 //!
 //! A scheduling round with B concurrent requests used to call the matvec
 //! kernels B times per weight matrix, streaming every weight byte B times.
@@ -26,6 +27,15 @@
 //! `engine::weights::ProjW::apply_batch`), so they inherit both the dtype
 //! matrix and the sharding below.
 //!
+//! # Kernel dispatch
+//!
+//! Each public entry point resolves the active
+//! [`crate::tensor::simd::Kernels`] table ONCE and threads it through its
+//! range core, so the dot / widen / axpy inner loops run on the selected
+//! backend without per-row dispatch.  Every backend is bit-identical to
+//! the scalar reference, so nothing below this paragraph depends on which
+//! one is active.
+//!
 //! # Batch layout and bit-identity
 //!
 //! Batch layout is row-major `(B, dim)` flat slices: slot `s` of `xs` is
@@ -35,12 +45,13 @@
 //! preserved exactly, so the batched engine path produces the same logits
 //! as the per-slot path down to the last ulp.
 //!
-//! # Sharding contract (the `_par` forms)
+//! # Sharding contract (the `Par` argument)
 //!
-//! Each kernel has a `*_par` twin that splits its **output elements** into
-//! disjoint contiguous ranges and computes each range on one lane of a
+//! Each kernel splits its **output elements** into disjoint contiguous
+//! ranges and computes each range on one lane of a
 //! [`crate::pool::ThreadPool`] (deterministic static chunking; inline when
-//! the [`Par`] handle has no pool):
+//! the [`Par`] handle has no pool — pass [`Par::serial`] for the plain
+//! serial kernel):
 //!
 //! * row-per-output kernels (`matmat_rows`, `matmat_rows_indexed`) shard
 //!   over **output rows** — each lane streams a disjoint contiguous slice
@@ -57,14 +68,14 @@
 //! The value of each output element is computed by the *same* sequence of
 //! floating-point operations in every sharding (the split never cuts
 //! through a reduction: reductions run over weight-row index inside a
-//! single lane, in ascending order, exactly as in the serial kernel), so
-//! `_par` results are bit-identical to the serial kernels for EVERY pool
+//! single lane, in ascending order, exactly as with [`Par::serial`]), so
+//! pool-sharded results are bit-identical to serial for EVERY pool
 //! size — the engine's `threads ∈ {1, 2, 8}` equivalence tests
 //! (`tests/thread_equivalence.rs`) enforce this end to end.
 //!
-//! Inner loops keep the matvec.rs shape LLVM auto-vectorizes: contiguous
-//! slices, iterator zips (no bounds checks), f32 accumulation, and the
-//! LANES accumulator-array dots from matvec.rs for the row-layout forms.
+//! Inner loops keep the matvec.rs shape: contiguous slices, iterator zips
+//! (no bounds checks), f32 accumulation, and the LANES accumulator-array
+//! dots shared through the kernel table.
 //!
 //! The engine drives resident weights ([`Mat`]) through `matmat_in_out` /
 //! `matmat_rows` directly.  The indexed forms (`matmat_rows_indexed`,
@@ -74,10 +85,9 @@
 //! and these kernels double as the reference that path is tested against.
 
 use crate::pool::{Par, SharedSliceMut};
-use crate::tensor::matvec::{dot_f16, dot_f32, dot_i8};
-use crate::tensor::q4::{dot_q4, dot_q4_1, dq4, dq4_1, q4_groups, q4_row_packed_bytes};
+use crate::tensor::q4::{q4_groups, q4_row_packed_bytes};
+use crate::tensor::simd::{self, Kernels};
 use crate::tensor::Mat;
-use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
 /// Grow a per-lane scratch pool to `lanes` entries (capacity is retained
 /// across rounds, so the hot loop stays allocation-free after warm-up).
@@ -96,6 +106,7 @@ fn ensure_lanes(scratch: &mut Vec<Vec<f32>>, lanes: usize) {
 /// a disjoint weight slice per lane).  Per-column accumulation order is
 /// identical to the full-range kernel, hence bit-identical.
 fn matmat_in_out_cols(
+    k: &Kernels,
     xs: &[f32],
     w: &Mat,
     outs: &mut [f32],
@@ -115,10 +126,7 @@ fn matmat_in_out_cols(
                     if xi == 0.0 {
                         continue;
                     }
-                    let out = &mut outs[s * cols + c0..s * cols + c1];
-                    for (o, &wij) in out.iter_mut().zip(row) {
-                        *o += xi * wij;
-                    }
+                    (k.axpy_f32)(xi, row, &mut outs[s * cols + c0..s * cols + c1]);
                 }
             }
         }
@@ -127,18 +135,13 @@ fn matmat_in_out_cols(
             scratch.resize(cw, 0.0);
             for i in 0..rows {
                 // decode the f16 row slice once; every slot reuses it
-                for (r, &h) in scratch.iter_mut().zip(&data[i * cols + c0..i * cols + c1]) {
-                    *r = f16_to_f32(h);
-                }
+                (k.widen_f16)(&data[i * cols + c0..i * cols + c1], scratch);
                 for s in 0..b {
                     let xi = xs[s * rows + i];
                     if xi == 0.0 {
                         continue;
                     }
-                    let out = &mut outs[s * cols + c0..s * cols + c1];
-                    for (o, &wij) in out.iter_mut().zip(scratch.iter()) {
-                        *o += xi * wij;
-                    }
+                    (k.axpy_f32)(xi, scratch, &mut outs[s * cols + c0..s * cols + c1]);
                 }
             }
         }
@@ -152,10 +155,7 @@ fn matmat_in_out_cols(
                     if xi == 0.0 {
                         continue;
                     }
-                    let acc = &mut scratch[s * cw..(s + 1) * cw];
-                    for (a, &q) in acc.iter_mut().zip(row) {
-                        *a += xi * q as f32;
-                    }
+                    (k.axpy_i8)(xi, row, &mut scratch[s * cw..(s + 1) * cw]);
                 }
             }
             for s in 0..b {
@@ -175,18 +175,13 @@ fn matmat_in_out_cols(
                 // exact f32 values the per-slot matvec arm computes
                 let prow = &data[i * prb..(i + 1) * prb];
                 let srow = &scale[i * ng..(i + 1) * ng];
-                for (k, r) in scratch.iter_mut().enumerate() {
-                    *r = dq4(prow, srow, c0 + k);
-                }
+                (k.widen_q4)(prow, srow, c0, scratch);
                 for s in 0..b {
                     let xi = xs[s * rows + i];
                     if xi == 0.0 {
                         continue;
                     }
-                    let out = &mut outs[s * cols + c0..s * cols + c1];
-                    for (o, &wij) in out.iter_mut().zip(scratch.iter()) {
-                        *o += xi * wij;
-                    }
+                    (k.axpy_f32)(xi, scratch, &mut outs[s * cols + c0..s * cols + c1]);
                 }
             }
         }
@@ -198,18 +193,13 @@ fn matmat_in_out_cols(
                 let prow = &data[i * prb..(i + 1) * prb];
                 let srow = &scale[i * ng..(i + 1) * ng];
                 let mrow = &min[i * ng..(i + 1) * ng];
-                for (k, r) in scratch.iter_mut().enumerate() {
-                    *r = dq4_1(prow, srow, mrow, c0 + k);
-                }
+                (k.widen_q4_1)(prow, srow, mrow, c0, scratch);
                 for s in 0..b {
                     let xi = xs[s * rows + i];
                     if xi == 0.0 {
                         continue;
                     }
-                    let out = &mut outs[s * cols + c0..s * cols + c1];
-                    for (o, &wij) in out.iter_mut().zip(scratch.iter()) {
-                        *o += xi * wij;
-                    }
+                    (k.axpy_f32)(xi, scratch, &mut outs[s * cols + c0..s * cols + c1]);
                 }
             }
         }
@@ -217,27 +207,18 @@ fn matmat_in_out_cols(
 }
 
 /// Batched `(in, out)`-layout apply:
-/// `outs[s][j] += sum_i xs[s][i] * w[i][j]` for every slot `s`.
+/// `outs[s][j] += sum_i xs[s][i] * w[i][j]` for every slot `s`, sharded
+/// over output columns across `par`'s lanes (inline with [`Par::serial`]
+/// or no pool).  Bit-identical for every pool size.
 ///
-/// `xs` is `(B, rows)` flat, `outs` is `(B, cols)` flat; `outs` may carry a
-/// residual accumulator (as in matvec).  `scratch` is caller-owned so the
-/// hot loop is allocation-free: the f16 arm uses `cols` floats to decode
-/// each weight row once per round, the i8 arm uses `B*cols` floats for the
-/// per-slot unscaled accumulators (the per-column scale must apply to only
-/// THIS product, exactly as in `matvec_in_out`).
-pub fn matmat_in_out(xs: &[f32], w: &Mat, outs: &mut [f32], scratch: &mut Vec<f32>) {
-    let (rows, cols) = (w.rows(), w.cols());
-    assert!(rows > 0 && cols > 0, "empty weight matrix");
-    assert_eq!(xs.len() % rows, 0, "xs not a whole number of slots");
-    let b = xs.len() / rows;
-    assert_eq!(outs.len(), b * cols);
-    matmat_in_out_cols(xs, w, outs, scratch, 0, cols);
-}
-
-/// [`matmat_in_out`] sharded over output columns across `par`'s lanes
-/// (inline without a pool).  Bit-identical to the serial kernel for every
-/// pool size; `scratch` holds one kernel scratch per lane.
-pub fn matmat_in_out_par(
+/// `xs` is `(B, rows)` flat, `outs` is `(B, cols)` flat; `outs` may carry
+/// a residual accumulator (as in matvec).  `scratch` holds one kernel
+/// scratch per lane, caller-owned so the hot loop is allocation-free: the
+/// f16/q4 arms use a column-window decode buffer per lane, the i8 arm
+/// `B*window` floats for the per-slot unscaled accumulators (the
+/// per-column scale must apply to only THIS product, exactly as in
+/// `matvec_in_out`).
+pub fn matmat_in_out(
     xs: &[f32],
     w: &Mat,
     outs: &mut [f32],
@@ -249,6 +230,7 @@ pub fn matmat_in_out_par(
     assert_eq!(xs.len() % rows, 0, "xs not a whole number of slots");
     let b = xs.len() / rows;
     assert_eq!(outs.len(), b * cols);
+    let k = simd::kernels();
     ensure_lanes(scratch, par.lanes());
     let out_view = SharedSliceMut::new(outs);
     let scr_view = SharedSliceMut::new(scratch);
@@ -261,7 +243,7 @@ pub fn matmat_in_out_par(
         let outs = unsafe { out_view.get() };
         // SAFETY: as above — scratch entry `chunk` belongs to this lane.
         let scr = &mut unsafe { scr_view.get() }[chunk];
-        matmat_in_out_cols(xs, w, outs, scr, c0, c1);
+        matmat_in_out_cols(k, xs, w, outs, scr, c0, c1);
     });
 }
 
@@ -272,7 +254,7 @@ pub fn matmat_in_out_par(
 /// Row-range core of [`matmat_rows`]: output rows `[j0, j1)` for every
 /// slot (streams the contiguous weight rows `w[j0..j1]` — a disjoint
 /// weight slice per lane).
-fn matmat_rows_range(w: &Mat, xs: &[f32], outs: &mut [f32], j0: usize, j1: usize) {
+fn matmat_rows_range(k: &Kernels, w: &Mat, xs: &[f32], outs: &mut [f32], j0: usize, j1: usize) {
     let (rows, cols) = (w.rows(), w.cols());
     let b = xs.len() / cols;
     match w {
@@ -280,7 +262,7 @@ fn matmat_rows_range(w: &Mat, xs: &[f32], outs: &mut [f32], j0: usize, j1: usize
             for j in j0..j1 {
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    outs[s * rows + j] = dot_f32(row, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * rows + j] = (k.dot_f32)(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -288,7 +270,7 @@ fn matmat_rows_range(w: &Mat, xs: &[f32], outs: &mut [f32], j0: usize, j1: usize
             for j in j0..j1 {
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    outs[s * rows + j] = dot_f16(row, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * rows + j] = (k.dot_f16)(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -296,7 +278,8 @@ fn matmat_rows_range(w: &Mat, xs: &[f32], outs: &mut [f32], j0: usize, j1: usize
             for j in j0..j1 {
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    outs[s * rows + j] = scale[j] * dot_i8(row, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * rows + j] =
+                        scale[j] * (k.dot_i8)(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -306,7 +289,7 @@ fn matmat_rows_range(w: &Mat, xs: &[f32], outs: &mut [f32], j0: usize, j1: usize
                 let prow = &data[j * prb..(j + 1) * prb];
                 let srow = &scale[j * ng..(j + 1) * ng];
                 for s in 0..b {
-                    outs[s * rows + j] = dot_q4(prow, srow, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * rows + j] = (k.dot_q4)(prow, srow, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -317,46 +300,40 @@ fn matmat_rows_range(w: &Mat, xs: &[f32], outs: &mut [f32], j0: usize, j1: usize
                 let srow = &scale[j * ng..(j + 1) * ng];
                 let mrow = &min[j * ng..(j + 1) * ng];
                 for s in 0..b {
-                    outs[s * rows + j] = dot_q4_1(prow, srow, mrow, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * rows + j] =
+                        (k.dot_q4_1)(prow, srow, mrow, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
     }
 }
 
-/// Batched row-per-output apply: `outs[s][j] = dot(w[j], xs[s])`.
+/// Batched row-per-output apply: `outs[s][j] = dot(w[j], xs[s])`, sharded
+/// over output rows across `par`'s lanes — each lane streams a disjoint
+/// contiguous slice of the weight matrix (inline with [`Par::serial`]).
 /// `xs` is `(B, cols)` flat, `outs` is `(B, rows)` flat.  Each weight row
 /// is read once and dotted against all B activations while cached.
-pub fn matmat_rows(w: &Mat, xs: &[f32], outs: &mut [f32]) {
+pub fn matmat_rows(w: &Mat, xs: &[f32], outs: &mut [f32], par: Par<'_>) {
     let (rows, cols) = (w.rows(), w.cols());
     assert!(rows > 0 && cols > 0, "empty weight matrix");
     assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
     let b = xs.len() / cols;
     assert_eq!(outs.len(), b * rows);
-    matmat_rows_range(w, xs, outs, 0, rows);
-}
-
-/// [`matmat_rows`] sharded over output rows across `par`'s lanes — each
-/// lane streams a disjoint contiguous slice of the weight matrix.
-pub fn matmat_rows_par(w: &Mat, xs: &[f32], outs: &mut [f32], par: Par<'_>) {
-    let (rows, cols) = (w.rows(), w.cols());
-    assert!(rows > 0 && cols > 0, "empty weight matrix");
-    assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
-    let b = xs.len() / cols;
-    assert_eq!(outs.len(), b * rows);
+    let k = simd::kernels();
     let out_view = SharedSliceMut::new(outs);
     par.run(rows, &|_chunk, j0, j1| {
         out_view.debug_claim(j0, j1);
         // SAFETY: each lane writes only output rows [j0, j1) of every
         // slot — disjoint index sets, claimed above in debug builds.
         let outs = unsafe { out_view.get() };
-        matmat_rows_range(w, xs, outs, j0, j1);
+        matmat_rows_range(k, w, xs, outs, j0, j1);
     });
 }
 
 /// Index-range core of [`matmat_rows_indexed`]: selected positions
 /// `[k0, k1)` of `idx` for every slot.
 fn matmat_rows_indexed_range(
+    kern: &Kernels,
     w: &Mat,
     idx: &[u32],
     xs: &[f32],
@@ -373,7 +350,7 @@ fn matmat_rows_indexed_range(
                 let j = j as usize;
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    outs[s * k + kk] = dot_f32(row, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * k + kk] = (kern.dot_f32)(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -382,7 +359,7 @@ fn matmat_rows_indexed_range(
                 let j = j as usize;
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    outs[s * k + kk] = dot_f16(row, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * k + kk] = (kern.dot_f16)(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -391,7 +368,8 @@ fn matmat_rows_indexed_range(
                 let j = j as usize;
                 let row = &data[j * cols..(j + 1) * cols];
                 for s in 0..b {
-                    outs[s * k + kk] = scale[j] * dot_i8(row, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * k + kk] =
+                        scale[j] * (kern.dot_i8)(row, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -402,7 +380,7 @@ fn matmat_rows_indexed_range(
                 let prow = &data[j * prb..(j + 1) * prb];
                 let srow = &scale[j * ng..(j + 1) * ng];
                 for s in 0..b {
-                    outs[s * k + kk] = dot_q4(prow, srow, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * k + kk] = (kern.dot_q4)(prow, srow, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
@@ -414,41 +392,34 @@ fn matmat_rows_indexed_range(
                 let srow = &scale[j * ng..(j + 1) * ng];
                 let mrow = &min[j * ng..(j + 1) * ng];
                 for s in 0..b {
-                    outs[s * k + kk] = dot_q4_1(prow, srow, mrow, &xs[s * cols..(s + 1) * cols]);
+                    outs[s * k + kk] =
+                        (kern.dot_q4_1)(prow, srow, mrow, &xs[s * cols..(s + 1) * cols]);
                 }
             }
         }
     }
 }
 
-/// Batched sparse row-layout apply: `outs[s][k] = dot(w[idx[k]], xs[s])`.
+/// Batched sparse row-layout apply: `outs[s][k] = dot(w[idx[k]], xs[s])`,
+/// sharded over the selected index positions — each lane streams a
+/// disjoint subset of the selected weight rows.
 /// `xs` is `(B, cols)` flat, `outs` is `(B, idx.len())` flat.  The §3.2
 /// union-compute path: the caller passes the cross-slot UNION of predicted
 /// rows so each selected row streams once per round for every slot.
-pub fn matmat_rows_indexed(w: &Mat, idx: &[u32], xs: &[f32], outs: &mut [f32]) {
+pub fn matmat_rows_indexed(w: &Mat, idx: &[u32], xs: &[f32], outs: &mut [f32], par: Par<'_>) {
     let cols = w.cols();
     assert!(cols > 0, "empty weight matrix");
     assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
     let b = xs.len() / cols;
     assert_eq!(outs.len(), b * idx.len());
-    matmat_rows_indexed_range(w, idx, xs, outs, 0, idx.len());
-}
-
-/// [`matmat_rows_indexed`] sharded over the selected index positions —
-/// each lane streams a disjoint subset of the selected weight rows.
-pub fn matmat_rows_indexed_par(w: &Mat, idx: &[u32], xs: &[f32], outs: &mut [f32], par: Par<'_>) {
-    let cols = w.cols();
-    assert!(cols > 0, "empty weight matrix");
-    assert_eq!(xs.len() % cols, 0, "xs not a whole number of slots");
-    let b = xs.len() / cols;
-    assert_eq!(outs.len(), b * idx.len());
+    let kern = simd::kernels();
     let out_view = SharedSliceMut::new(outs);
     par.run(idx.len(), &|_chunk, k0, k1| {
         out_view.debug_claim(k0, k1);
         // SAFETY: each lane writes only selected positions [k0, k1) of
         // every slot — disjoint `kk` sets, claimed above in debug builds.
         let outs = unsafe { out_view.get() };
-        matmat_rows_indexed_range(w, idx, xs, outs, k0, k1);
+        matmat_rows_indexed_range(kern, w, idx, xs, outs, k0, k1);
     });
 }
 
@@ -456,6 +427,7 @@ pub fn matmat_rows_indexed_par(w: &Mat, idx: &[u32], xs: &[f32], outs: &mut [f32
 /// columns `[c0, c1)`.  Row visit order (ascending `kk`) per column is
 /// unchanged, hence bit-identical to the full-range kernel.
 fn accum_rows_indexed_batch_cols(
+    kern: &Kernels,
     w: &Mat,
     idx: &[u32],
     hs: &[f32],
@@ -475,10 +447,7 @@ fn accum_rows_indexed_batch_cols(
                     if hk == 0.0 {
                         continue;
                     }
-                    let out = &mut outs[s * cols + c0..s * cols + c1];
-                    for (o, &wv) in out.iter_mut().zip(row) {
-                        *o += hk * wv;
-                    }
+                    (kern.axpy_f32)(hk, row, &mut outs[s * cols + c0..s * cols + c1]);
                 }
             }
         }
@@ -490,10 +459,7 @@ fn accum_rows_indexed_batch_cols(
                     if hk == 0.0 {
                         continue;
                     }
-                    let out = &mut outs[s * cols + c0..s * cols + c1];
-                    for (o, &hh) in out.iter_mut().zip(row) {
-                        *o += hk * f16_to_f32(hh);
-                    }
+                    (kern.axpy_f16)(hk, row, &mut outs[s * cols + c0..s * cols + c1]);
                 }
             }
         }
@@ -505,10 +471,7 @@ fn accum_rows_indexed_batch_cols(
                     if hk == 0.0 {
                         continue;
                     }
-                    let out = &mut outs[s * cols + c0..s * cols + c1];
-                    for (o, &q) in out.iter_mut().zip(row) {
-                        *o += hk * q as f32;
-                    }
+                    (kern.axpy_i8)(hk, row, &mut outs[s * cols + c0..s * cols + c1]);
                 }
             }
             for s in 0..b {
@@ -531,10 +494,7 @@ fn accum_rows_indexed_batch_cols(
                     if hk == 0.0 {
                         continue;
                     }
-                    let out = &mut outs[s * cols + c0..s * cols + c1];
-                    for (cc, o) in out.iter_mut().enumerate() {
-                        *o += hk * dq4(prow, srow, c0 + cc);
-                    }
+                    (kern.axpy_q4)(hk, prow, srow, c0, &mut outs[s * cols + c0..s * cols + c1]);
                 }
             }
         }
@@ -550,10 +510,14 @@ fn accum_rows_indexed_batch_cols(
                     if hk == 0.0 {
                         continue;
                     }
-                    let out = &mut outs[s * cols + c0..s * cols + c1];
-                    for (cc, o) in out.iter_mut().enumerate() {
-                        *o += hk * dq4_1(prow, srow, mrow, c0 + cc);
-                    }
+                    (kern.axpy_q4_1)(
+                        hk,
+                        prow,
+                        srow,
+                        mrow,
+                        c0,
+                        &mut outs[s * cols + c0..s * cols + c1],
+                    );
                 }
             }
         }
@@ -562,24 +526,16 @@ fn accum_rows_indexed_batch_cols(
 
 /// Batched sparse accumulate of selected `(in,out)`-layout rows:
 /// `outs[s][:] += sum_k hs[s][k] * w[idx[k]][:]` — the W_v half of the
-/// union-fused sparse FFN.  `hs` is `(B, idx.len())` flat, `outs` is
-/// `(B, cols)` flat and MUST be zeroed by the caller for the i8 arm (the
-/// per-column scale is folded over the whole accumulator at the end,
-/// mirroring `accum_rows_indexed`).  Slots mask themselves by passing
-/// `hs[s][k] == 0.0` for union rows outside their own predicted set —
-/// zero entries are skipped exactly as the per-slot kernel skips them.
-pub fn accum_rows_indexed_batch(w: &Mat, idx: &[u32], hs: &[f32], b: usize, outs: &mut [f32]) {
-    let cols = w.cols();
-    let k = idx.len();
-    assert_eq!(hs.len(), b * k);
-    assert_eq!(outs.len(), b * cols);
-    accum_rows_indexed_batch_cols(w, idx, hs, b, outs, 0, cols);
-}
-
-/// [`accum_rows_indexed_batch`] sharded over output columns — each lane
+/// union-fused sparse FFN, sharded over output columns — each lane
 /// accumulates a disjoint column slice of every selected weight row, in
-/// the same ascending row order as the serial kernel.
-pub fn accum_rows_indexed_batch_par(
+/// the same ascending row order as the serial kernel.  `hs` is
+/// `(B, idx.len())` flat, `outs` is `(B, cols)` flat and MUST be zeroed
+/// by the caller for the i8 arm (the per-column scale is folded over the
+/// whole accumulator at the end, mirroring `accum_rows_indexed`).  Slots
+/// mask themselves by passing `hs[s][k] == 0.0` for union rows outside
+/// their own predicted set — zero entries are skipped exactly as the
+/// per-slot kernel skips them.
+pub fn accum_rows_indexed_batch(
     w: &Mat,
     idx: &[u32],
     hs: &[f32],
@@ -591,13 +547,14 @@ pub fn accum_rows_indexed_batch_par(
     let k = idx.len();
     assert_eq!(hs.len(), b * k);
     assert_eq!(outs.len(), b * cols);
+    let kern = simd::kernels();
     let out_view = SharedSliceMut::new(outs);
     par.run(cols, &|_chunk, c0, c1| {
         out_view.debug_claim(c0, c1);
         // SAFETY: each lane accumulates only output columns [c0, c1) of
         // every slot — disjoint ranges, claimed above in debug builds.
         let outs = unsafe { out_view.get() };
-        accum_rows_indexed_batch_cols(w, idx, hs, b, outs, c0, c1);
+        accum_rows_indexed_batch_cols(kern, w, idx, hs, b, outs, c0, c1);
     });
 }
 
@@ -642,7 +599,7 @@ mod tests {
                 let residual = randv(&mut r, b * cols);
                 let mut outs = residual.clone();
                 let mut scratch = Vec::new();
-                matmat_in_out(&xs, &w, &mut outs, &mut scratch);
+                matmat_in_out(&xs, &w, &mut outs, &mut scratch, Par::serial());
                 for s in 0..b {
                     let mut want = residual[s * cols..(s + 1) * cols].to_vec();
                     let mut acc = Vec::new();
@@ -662,7 +619,7 @@ mod tests {
             for b in [1usize, 3, 8] {
                 let xs = randv(&mut r, b * cols);
                 let mut outs = vec![0.0f32; b * rows];
-                matmat_rows(&w, &xs, &mut outs);
+                matmat_rows(&w, &xs, &mut outs, Par::serial());
                 for s in 0..b {
                     let mut want = vec![0.0f32; rows];
                     matvec_rows(&w, &xs[s * cols..(s + 1) * cols], &mut want);
@@ -682,7 +639,7 @@ mod tests {
             for b in [1usize, 4] {
                 let xs = randv(&mut r, b * cols);
                 let mut outs = vec![0.0f32; b * idx.len()];
-                matmat_rows_indexed(&w, &idx, &xs, &mut outs);
+                matmat_rows_indexed(&w, &idx, &xs, &mut outs, Par::serial());
                 for s in 0..b {
                     let mut want = vec![0.0f32; idx.len()];
                     matvec_rows_indexed(&w, &idx, &xs[s * cols..(s + 1) * cols], &mut want);
@@ -708,7 +665,7 @@ mod tests {
                     }
                 }
                 let mut outs = vec![0.0f32; b * cols];
-                accum_rows_indexed_batch(&w, &idx, &hs, b, &mut outs);
+                accum_rows_indexed_batch(&w, &idx, &hs, b, &mut outs, Par::serial());
                 let k = idx.len();
                 for s in 0..b {
                     let mut want = vec![0.0f32; cols];
@@ -724,17 +681,18 @@ mod tests {
         // degenerate sparse round: no predicted rows at all
         let w = Mat::from_f32(4, 3, vec![1.0; 12]);
         let mut outs = vec![0.0f32; 3];
-        accum_rows_indexed_batch(&w, &[], &[], 1, &mut outs);
+        accum_rows_indexed_batch(&w, &[], &[], 1, &mut outs, Par::serial());
         assert_eq!(outs, vec![0.0, 0.0, 0.0]);
         let xs = vec![1.0f32, 2.0, 3.0];
         let mut o = vec![0.0f32; 0];
-        matmat_rows_indexed(&w, &[], &xs, &mut o);
+        matmat_rows_indexed(&w, &[], &xs, &mut o, Par::serial());
         assert!(o.is_empty());
     }
 
-    /// Every `_par` form must be BITWISE identical to its serial kernel for
-    /// every dtype and several pool sizes (including pools larger than the
-    /// work) — the sharding contract of the module docs.
+    /// Every kernel must be BITWISE identical between [`Par::serial`] and
+    /// pool-backed [`Par`] handles for every dtype and several pool sizes
+    /// (including pools larger than the work) — the sharding contract of
+    /// the module docs.
     #[test]
     fn par_kernels_bitwise_match_serial_for_all_pool_sizes() {
         let mut r = XorShift::new(15);
@@ -751,11 +709,11 @@ mod tests {
                     let xs = randv(&mut r, b * rows);
                     let residual = randv(&mut r, b * cols);
                     let mut want = residual.clone();
-                    matmat_in_out(&xs, &w, &mut want, &mut Vec::new());
+                    matmat_in_out(&xs, &w, &mut want, &mut Vec::new(), Par::serial());
                     for pool in &pools {
                         let mut got = residual.clone();
                         let mut scr = Vec::new();
-                        matmat_in_out_par(&xs, &w, &mut got, &mut scr, Par::new(Some(pool)));
+                        matmat_in_out(&xs, &w, &mut got, &mut scr, Par::new(Some(pool)));
                         assert_eq!(got, want, "in_out, pool={}", pool.workers());
                     }
                     // --- accum_rows_indexed_batch (per-column scale)
@@ -766,10 +724,10 @@ mod tests {
                         }
                     }
                     let mut want = vec![0.0f32; b * cols];
-                    accum_rows_indexed_batch(&w, &idx, &hs, b, &mut want);
+                    accum_rows_indexed_batch(&w, &idx, &hs, b, &mut want, Par::serial());
                     for pool in &pools {
                         let mut got = vec![0.0f32; b * cols];
-                        accum_rows_indexed_batch_par(
+                        accum_rows_indexed_batch(
                             &w,
                             &idx,
                             &hs,
@@ -783,17 +741,17 @@ mod tests {
                     // --- matmat_rows / matmat_rows_indexed (per-row scale)
                     let xs = randv(&mut r, b * cols);
                     let mut want = vec![0.0f32; b * rows];
-                    matmat_rows(&w, &xs, &mut want);
+                    matmat_rows(&w, &xs, &mut want, Par::serial());
                     for pool in &pools {
                         let mut got = vec![0.0f32; b * rows];
-                        matmat_rows_par(&w, &xs, &mut got, Par::new(Some(pool)));
+                        matmat_rows(&w, &xs, &mut got, Par::new(Some(pool)));
                         assert_eq!(got, want, "rows, pool={}", pool.workers());
                     }
                     let mut want = vec![0.0f32; b * idx.len()];
-                    matmat_rows_indexed(&w, &idx, &xs, &mut want);
+                    matmat_rows_indexed(&w, &idx, &xs, &mut want, Par::serial());
                     for pool in &pools {
                         let mut got = vec![0.0f32; b * idx.len()];
-                        matmat_rows_indexed_par(&w, &idx, &xs, &mut got, Par::new(Some(pool)));
+                        matmat_rows_indexed(&w, &idx, &xs, &mut got, Par::new(Some(pool)));
                         assert_eq!(got, want, "rows_indexed, pool={}", pool.workers());
                     }
                 }
@@ -806,9 +764,9 @@ mod tests {
         let w = Mat::from_f32(4, 5, (0..20).map(|i| i as f32).collect());
         let xs = vec![1.0f32, 0.5, -1.0, 2.0];
         let mut want = vec![0.0f32; 5];
-        matmat_in_out(&xs, &w, &mut want, &mut Vec::new());
+        matmat_in_out(&xs, &w, &mut want, &mut Vec::new(), Par::serial());
         let mut got = vec![0.0f32; 5];
-        matmat_in_out_par(&xs, &w, &mut got, &mut Vec::new(), Par::none());
+        matmat_in_out(&xs, &w, &mut got, &mut Vec::new(), Par::new(None));
         assert_eq!(got, want);
     }
 }

@@ -10,28 +10,37 @@
 //! | [`matvec_rows`]         | yes | yes | per-row      | yes             | —      |
 //! | [`matvec_rows_indexed`] | yes | yes | per-row      | yes             | —      |
 //! | [`accum_rows_indexed`]  | yes | yes | per-column   | yes             | —      |
-//! | [`bit_matvec`]          | —   | —   | —            | —               | 1-bit  |
-//! | [`nib4_matvec`]         | —   | —   | —            | —               | 4-bit  |
+//! | [`ShadowView::matvec`]  | —   | —   | —            | —               | 1/4-bit|
 //!
 //! The q4/q4_1 arms dequantize in-register per element via
 //! [`crate::tensor::q4`] (group scales applied inline — no end-of-loop
 //! scale fold like i8, so `out` may always carry a residual) and are
 //! bit-identical to running the f32 arm on the dequantized matrix.
 //!
+//! # Kernel dispatch
+//!
+//! Each entry point resolves the active [`crate::tensor::simd::Kernels`]
+//! table ONCE, then runs its dtype arm through the table's `fn` pointers
+//! (dot / axpy per row).  The dispatch is a pure performance knob:
+//! every backend is bit-identical to the scalar reference (the LANES=8
+//! accumulator dots below), so the determinism story is unchanged.
+//!
 //! # Determinism
 //!
 //! Every kernel is a fixed sequence of f32 operations (ascending weight
 //! rows, the LANES accumulator-array dots) — no runtime reassociation, so
-//! repeated calls are bit-identical, and the multi-vector `matmat` twins
-//! (serial AND pool-sharded) reproduce these results exactly per slot.
+//! repeated calls are bit-identical, and the multi-vector `matmat`
+//! kernels (serial AND pool-sharded — one entry point, `Par`-driven)
+//! reproduce these results exactly per slot.
 //!
-//! Inner loops are shaped for LLVM auto-vectorization: contiguous slices,
-//! no bounds checks in the loop body (iterator zips), f32 accumulation.
-//! The int8 kernels fold dequantization into the loop (paper §4: fused
-//! dequant+matvec; no materialized f32/f16 weight copy).
+//! Inner loops are shaped for LLVM auto-vectorization on the scalar
+//! backend: contiguous slices, no bounds checks in the loop body
+//! (iterator zips), f32 accumulation.  The int8 kernels fold
+//! dequantization into the loop (paper §4: fused dequant+matvec; no
+//! materialized f32/f16 weight copy).
 
-use crate::tensor::q4::{dot_q4, dot_q4_1, dq4, dq4_1, q4_groups, q4_row_packed_bytes};
-use crate::tensor::Mat;
+use crate::tensor::q4::{q4_groups, q4_row_packed_bytes};
+use crate::tensor::{simd, Mat};
 use crate::util::f16::f16_to_f32_fast as f16_to_f32;
 
 /// `out[j] += sum_i x[i] * w[i][j]` for `(in, out)`-layout `w`.
@@ -44,16 +53,14 @@ pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32], acc: &mut Vec<f32>) {
     let (rows, cols) = (w.rows(), w.cols());
     assert_eq!(x.len(), rows);
     assert_eq!(out.len(), cols);
+    let k = simd::kernels();
     match w {
         Mat::F32 { data, .. } => {
             for (i, &xi) in x.iter().enumerate() {
                 if xi == 0.0 {
                     continue;
                 }
-                let row = &data[i * cols..(i + 1) * cols];
-                for (o, &wij) in out.iter_mut().zip(row) {
-                    *o += xi * wij;
-                }
+                (k.axpy_f32)(xi, &data[i * cols..(i + 1) * cols], out);
             }
         }
         Mat::F16 { data, .. } => {
@@ -61,10 +68,7 @@ pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32], acc: &mut Vec<f32>) {
                 if xi == 0.0 {
                     continue;
                 }
-                let row = &data[i * cols..(i + 1) * cols];
-                for (o, &h) in out.iter_mut().zip(row) {
-                    *o += xi * f16_to_f32(h);
-                }
+                (k.axpy_f16)(xi, &data[i * cols..(i + 1) * cols], out);
             }
         }
         Mat::I8 { data, scale, .. } => {
@@ -77,10 +81,7 @@ pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32], acc: &mut Vec<f32>) {
                 if xi == 0.0 {
                     continue;
                 }
-                let row = &data[i * cols..(i + 1) * cols];
-                for (a, &q) in acc.iter_mut().zip(row) {
-                    *a += xi * q as f32;
-                }
+                (k.axpy_i8)(xi, &data[i * cols..(i + 1) * cols], acc);
             }
             for ((o, &a), &s) in out.iter_mut().zip(acc.iter()).zip(scale) {
                 *o += a * s;
@@ -96,9 +97,7 @@ pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32], acc: &mut Vec<f32>) {
                 }
                 let prow = &data[i * prb..(i + 1) * prb];
                 let srow = &scale[i * ng..(i + 1) * ng];
-                for (j, o) in out.iter_mut().enumerate() {
-                    *o += xi * dq4(prow, srow, j);
-                }
+                (k.axpy_q4)(xi, prow, srow, 0, out);
             }
         }
         Mat::Q41 { data, scale, min, .. } => {
@@ -110,9 +109,7 @@ pub fn matvec_in_out(x: &[f32], w: &Mat, out: &mut [f32], acc: &mut Vec<f32>) {
                 let prow = &data[i * prb..(i + 1) * prb];
                 let srow = &scale[i * ng..(i + 1) * ng];
                 let mrow = &min[i * ng..(i + 1) * ng];
-                for (j, o) in out.iter_mut().enumerate() {
-                    *o += xi * dq4_1(prow, srow, mrow, j);
-                }
+                (k.axpy_q4_1)(xi, prow, srow, mrow, 0, out);
             }
         }
     }
@@ -123,32 +120,33 @@ pub fn matvec_rows(w: &Mat, x: &[f32], out: &mut [f32]) {
     let (rows, cols) = (w.rows(), w.cols());
     assert_eq!(x.len(), cols);
     assert_eq!(out.len(), rows);
+    let k = simd::kernels();
     match w {
         Mat::F32 { data, .. } => {
             for (j, o) in out.iter_mut().enumerate() {
-                *o = dot_f32(&data[j * cols..(j + 1) * cols], x);
+                *o = (k.dot_f32)(&data[j * cols..(j + 1) * cols], x);
             }
         }
         Mat::F16 { data, .. } => {
             for (j, o) in out.iter_mut().enumerate() {
-                *o = dot_f16(&data[j * cols..(j + 1) * cols], x);
+                *o = (k.dot_f16)(&data[j * cols..(j + 1) * cols], x);
             }
         }
         Mat::I8 { data, scale, .. } => {
             for (j, o) in out.iter_mut().enumerate() {
-                *o = scale[j] * dot_i8(&data[j * cols..(j + 1) * cols], x);
+                *o = scale[j] * (k.dot_i8)(&data[j * cols..(j + 1) * cols], x);
             }
         }
         Mat::Q4 { data, scale, .. } => {
             let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
             for (j, o) in out.iter_mut().enumerate() {
-                *o = dot_q4(&data[j * prb..(j + 1) * prb], &scale[j * ng..(j + 1) * ng], x);
+                *o = (k.dot_q4)(&data[j * prb..(j + 1) * prb], &scale[j * ng..(j + 1) * ng], x);
             }
         }
         Mat::Q41 { data, scale, min, .. } => {
             let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
             for (j, o) in out.iter_mut().enumerate() {
-                *o = dot_q4_1(
+                *o = (k.dot_q4_1)(
                     &data[j * prb..(j + 1) * prb],
                     &scale[j * ng..(j + 1) * ng],
                     &min[j * ng..(j + 1) * ng],
@@ -167,37 +165,38 @@ pub fn matvec_rows_indexed(w: &Mat, idx: &[u32], x: &[f32], out: &mut [f32]) {
     let cols = w.cols();
     assert_eq!(x.len(), cols);
     assert_eq!(out.len(), idx.len());
+    let k = simd::kernels();
     match w {
         Mat::F32 { data, .. } => {
             for (o, &j) in out.iter_mut().zip(idx) {
                 let j = j as usize;
-                *o = dot_f32(&data[j * cols..(j + 1) * cols], x);
+                *o = (k.dot_f32)(&data[j * cols..(j + 1) * cols], x);
             }
         }
         Mat::F16 { data, .. } => {
             for (o, &j) in out.iter_mut().zip(idx) {
                 let j = j as usize;
-                *o = dot_f16(&data[j * cols..(j + 1) * cols], x);
+                *o = (k.dot_f16)(&data[j * cols..(j + 1) * cols], x);
             }
         }
         Mat::I8 { data, scale, .. } => {
             for (o, &j) in out.iter_mut().zip(idx) {
                 let j = j as usize;
-                *o = scale[j] * dot_i8(&data[j * cols..(j + 1) * cols], x);
+                *o = scale[j] * (k.dot_i8)(&data[j * cols..(j + 1) * cols], x);
             }
         }
         Mat::Q4 { data, scale, .. } => {
             let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
             for (o, &j) in out.iter_mut().zip(idx) {
                 let j = j as usize;
-                *o = dot_q4(&data[j * prb..(j + 1) * prb], &scale[j * ng..(j + 1) * ng], x);
+                *o = (k.dot_q4)(&data[j * prb..(j + 1) * prb], &scale[j * ng..(j + 1) * ng], x);
             }
         }
         Mat::Q41 { data, scale, min, .. } => {
             let (ng, prb) = (q4_groups(cols), q4_row_packed_bytes(cols));
             for (o, &j) in out.iter_mut().zip(idx) {
                 let j = j as usize;
-                *o = dot_q4_1(
+                *o = (k.dot_q4_1)(
                     &data[j * prb..(j + 1) * prb],
                     &scale[j * ng..(j + 1) * ng],
                     &min[j * ng..(j + 1) * ng],
@@ -215,16 +214,14 @@ pub fn accum_rows_indexed(w: &Mat, idx: &[u32], h: &[f32], out: &mut [f32]) {
     let cols = w.cols();
     assert_eq!(out.len(), cols);
     assert_eq!(h.len(), idx.len());
+    let k = simd::kernels();
     match w {
         Mat::F32 { data, .. } => {
             for (&hk, &j) in h.iter().zip(idx) {
                 if hk == 0.0 {
                     continue;
                 }
-                let row = &data[j as usize * cols..(j as usize + 1) * cols];
-                for (o, &wv) in out.iter_mut().zip(row) {
-                    *o += hk * wv;
-                }
+                (k.axpy_f32)(hk, &data[j as usize * cols..(j as usize + 1) * cols], out);
             }
         }
         Mat::F16 { data, .. } => {
@@ -232,10 +229,7 @@ pub fn accum_rows_indexed(w: &Mat, idx: &[u32], h: &[f32], out: &mut [f32]) {
                 if hk == 0.0 {
                     continue;
                 }
-                let row = &data[j as usize * cols..(j as usize + 1) * cols];
-                for (o, &hh) in out.iter_mut().zip(row) {
-                    *o += hk * f16_to_f32(hh);
-                }
+                (k.axpy_f16)(hk, &data[j as usize * cols..(j as usize + 1) * cols], out);
             }
         }
         Mat::I8 { data, scale, .. } => {
@@ -247,10 +241,7 @@ pub fn accum_rows_indexed(w: &Mat, idx: &[u32], h: &[f32], out: &mut [f32]) {
                 if hk == 0.0 {
                     continue;
                 }
-                let row = &data[j as usize * cols..(j as usize + 1) * cols];
-                for (o, &q) in out.iter_mut().zip(row) {
-                    *o += hk * q as f32;
-                }
+                (k.axpy_i8)(hk, &data[j as usize * cols..(j as usize + 1) * cols], out);
             }
             for (o, &s) in out.iter_mut().zip(scale) {
                 *o *= s;
@@ -267,9 +258,7 @@ pub fn accum_rows_indexed(w: &Mat, idx: &[u32], h: &[f32], out: &mut [f32]) {
                 let j = j as usize;
                 let prow = &data[j * prb..(j + 1) * prb];
                 let srow = &scale[j * ng..(j + 1) * ng];
-                for (c, o) in out.iter_mut().enumerate() {
-                    *o += hk * dq4(prow, srow, c);
-                }
+                (k.axpy_q4)(hk, prow, srow, 0, out);
             }
         }
         Mat::Q41 { data, scale, min, .. } => {
@@ -282,68 +271,100 @@ pub fn accum_rows_indexed(w: &Mat, idx: &[u32], h: &[f32], out: &mut [f32]) {
                 let prow = &data[j * prb..(j + 1) * prb];
                 let srow = &scale[j * ng..(j + 1) * ng];
                 let mrow = &min[j * ng..(j + 1) * ng];
-                for (c, o) in out.iter_mut().enumerate() {
-                    *o += hk * dq4_1(prow, srow, mrow, c);
-                }
+                (k.axpy_q4_1)(hk, prow, srow, mrow, 0, out);
             }
         }
     }
 }
 
-/// 1-bit sign matvec for the quantized sparsity predictor (§3.2, Eq. 4).
-/// `packed`: (ceil(in/8), out) bytes, bit b of `packed[i/8][j]` = sign of
-/// `w[i][j]` (1 -> +1).  `out[j] = scale[j] * sum_i (+-x[i])`.
-pub fn bit_matvec(packed: &[u8], scale: &[f32], in_dim: usize, x: &[f32], out: &mut [f32]) {
-    let out_dim = scale.len();
-    assert_eq!(out.len(), out_dim);
-    assert_eq!(x.len(), in_dim);
-    assert_eq!(packed.len(), in_dim.div_ceil(8) * out_dim);
-    // sum_i (+-x_i) = 2 * sum_{i: bit set} x_i - sum_i x_i
-    let total: f32 = x.iter().sum();
-    out.fill(0.0);
-    for i in 0..in_dim {
-        let xi = x[i];
-        if xi == 0.0 {
-            continue;
-        }
-        let byte_row = &packed[(i / 8) * out_dim..(i / 8 + 1) * out_dim];
-        let bit = 1u8 << (i % 8);
-        for (o, &b) in out.iter_mut().zip(byte_row) {
-            // branchless select: add xi where the sign bit is set
-            *o += if b & bit != 0 { xi } else { 0.0 };
-        }
-    }
-    for (o, &s) in out.iter_mut().zip(scale) {
-        *o = s * (2.0 * *o - total);
-    }
+/// Sub-byte packing of a [`ShadowView`] — which decode the matvec runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ShadowKind {
+    /// 1-bit sign matrix (§3.2, Eq. 4): bit b of `packed[i/8][j]` is the
+    /// sign of `w[i][j]` (1 -> +1).
+    Bits,
+    /// 4-bit offset-binary (§B.4 / Figure 9): row 2i in the LOW nibble,
+    /// row 2i+1 in the HIGH nibble, each storing q+8 with q in [-7, 7]
+    /// (export.py `nibble_quant`).
+    Nib4,
 }
 
-/// 4-bit nibble matvec for the n-bit shadow predictor (§B.4 / Figure 9).
-/// `packed`: (ceil(in/2), out) bytes; row 2i in the LOW nibble, row 2i+1
-/// in the HIGH nibble, each storing q+8 with q in [-7, 7] (export.py
-/// `nibble_quant`).  `out[j] = scale[j] * sum_i x[i] * q[i][j]`.
-pub fn nib4_matvec(packed: &[u8], scale: &[f32], in_dim: usize, x: &[f32], out: &mut [f32]) {
-    let out_dim = scale.len();
-    assert_eq!(out.len(), out_dim);
-    assert_eq!(x.len(), in_dim);
-    assert_eq!(packed.len(), in_dim.div_ceil(2) * out_dim);
-    out.fill(0.0);
-    // offset-binary: q = nib - 8, so sum x_i*(nib_i - 8)
-    //              = sum x_i*nib_i - 8*sum x_i  (fold the -8 out of the loop)
-    let total: f32 = x.iter().sum();
-    for i2 in 0..in_dim.div_ceil(2) {
-        let x_lo = x[2 * i2];
-        let x_hi = if 2 * i2 + 1 < in_dim { x[2 * i2 + 1] } else { 0.0 };
-        let row = &packed[i2 * out_dim..(i2 + 1) * out_dim];
-        if x_lo == 0.0 && x_hi == 0.0 {
-            continue;
-        }
-        for (o, &b) in out.iter_mut().zip(row) {
-            *o += x_lo * (b & 0xF) as f32 + x_hi * (b >> 4) as f32;
-        }
+/// Borrowed view of a sub-byte shadow matrix for the quantized sparsity
+/// predictor — the unified surface that replaced the `bit_matvec` /
+/// `nib4_matvec` free functions.  Layout is `(packed-rows, out)` bytes
+/// with a per-output-column scale; construct with [`ShadowView::bits`]
+/// or [`ShadowView::nib4`], then call [`ShadowView::matvec`] per token.
+///
+/// Shadow matvecs are deliberately NOT routed through the SIMD kernel
+/// table: the predictor is a few percent of a block's work, and the
+/// bit/nibble unpack loops below autovectorize well enough.
+pub struct ShadowView<'a> {
+    kind: ShadowKind,
+    packed: &'a [u8],
+    scale: &'a [f32],
+    in_dim: usize,
+}
+
+impl<'a> ShadowView<'a> {
+    /// View a 1-bit sign matrix: `(ceil(in/8), out)` packed bytes.
+    pub fn bits(packed: &'a [u8], scale: &'a [f32], in_dim: usize) -> Self {
+        assert_eq!(packed.len(), in_dim.div_ceil(8) * scale.len());
+        ShadowView { kind: ShadowKind::Bits, packed, scale, in_dim }
     }
-    for (o, &s) in out.iter_mut().zip(scale) {
-        *o = s * (*o - 8.0 * total);
+
+    /// View a 4-bit nibble matrix: `(ceil(in/2), out)` packed bytes.
+    pub fn nib4(packed: &'a [u8], scale: &'a [f32], in_dim: usize) -> Self {
+        assert_eq!(packed.len(), in_dim.div_ceil(2) * scale.len());
+        ShadowView { kind: ShadowKind::Nib4, packed, scale, in_dim }
+    }
+
+    /// `out[j] = scale[j] * sum_i x[i] * q[i][j]` with the sub-byte
+    /// decode folded into the loop (`out` is overwritten, not
+    /// accumulated — the predictor score is a fresh vector per token).
+    pub fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        let (in_dim, out_dim) = (self.in_dim, self.scale.len());
+        assert_eq!(x.len(), in_dim);
+        assert_eq!(out.len(), out_dim);
+        out.fill(0.0);
+        let total: f32 = x.iter().sum();
+        match self.kind {
+            ShadowKind::Bits => {
+                // sum_i (+-x_i) = 2 * sum_{i: bit set} x_i - sum_i x_i
+                for i in 0..in_dim {
+                    let xi = x[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let byte_row = &self.packed[(i / 8) * out_dim..(i / 8 + 1) * out_dim];
+                    let bit = 1u8 << (i % 8);
+                    for (o, &b) in out.iter_mut().zip(byte_row) {
+                        // branchless select: add xi where the sign bit is set
+                        *o += if b & bit != 0 { xi } else { 0.0 };
+                    }
+                }
+                for (o, &s) in out.iter_mut().zip(self.scale) {
+                    *o = s * (2.0 * *o - total);
+                }
+            }
+            ShadowKind::Nib4 => {
+                // offset-binary: q = nib - 8, so sum x_i*(nib_i - 8)
+                //   = sum x_i*nib_i - 8*sum x_i  (fold the -8 out of the loop)
+                for i2 in 0..in_dim.div_ceil(2) {
+                    let x_lo = x[2 * i2];
+                    let x_hi = if 2 * i2 + 1 < in_dim { x[2 * i2 + 1] } else { 0.0 };
+                    let row = &self.packed[i2 * out_dim..(i2 + 1) * out_dim];
+                    if x_lo == 0.0 && x_hi == 0.0 {
+                        continue;
+                    }
+                    for (o, &b) in out.iter_mut().zip(row) {
+                        *o += x_lo * (b & 0xF) as f32 + x_hi * (b >> 4) as f32;
+                    }
+                }
+                for (o, &s) in out.iter_mut().zip(self.scale) {
+                    *o = s * (*o - 8.0 * total);
+                }
+            }
+        }
     }
 }
 
@@ -351,6 +372,9 @@ pub fn nib4_matvec(packed: &[u8], scale: &[f32], in_dim: usize, x: &[f32], out: 
 // accumulator serializes the loop and blocks SIMD.  The accumulator-ARRAY
 // form below maps the 8 partial sums onto one vector register, which LLVM
 // reliably turns into packed FMAs (§Perf L3 iteration 2: 4-9x on dots).
+// These are the scalar REFERENCE the `tensor::simd` backends replicate
+// bit-for-bit: same per-lane products, same 8-lane reduce order, same
+// scalar tail.
 const LANES: usize = 8;
 
 #[inline]
@@ -557,7 +581,7 @@ mod tests {
     }
 
     #[test]
-    fn nib4_matvec_matches_dequant_dense() {
+    fn nib4_shadow_matches_dequant_dense() {
         let mut r = XorShift::new(9);
         for &(in_dim, out_dim) in &[(10usize, 6usize), (7, 4), (16, 13)] {
             // random q in [-7, 7], per-column scale
@@ -581,7 +605,7 @@ mod tests {
                 }
             }
             let mut out = vec![0f32; out_dim];
-            nib4_matvec(&packed, &scale, in_dim, &x, &mut out);
+            ShadowView::nib4(&packed, &scale, in_dim).matvec(&x, &mut out);
             for j in 0..out_dim {
                 let mut want = 0f32;
                 for i in 0..in_dim {
@@ -594,7 +618,7 @@ mod tests {
     }
 
     #[test]
-    fn bit_matvec_matches_sign_dense() {
+    fn bit_shadow_matches_sign_dense() {
         let mut r = XorShift::new(6);
         let (in_dim, out_dim): (usize, usize) = (19, 13);
         // random sign matrix
@@ -611,7 +635,7 @@ mod tests {
             }
         }
         let mut out = vec![0f32; out_dim];
-        bit_matvec(&packed, &scale, in_dim, &x, &mut out);
+        ShadowView::bits(&packed, &scale, in_dim).matvec(&x, &mut out);
         for j in 0..out_dim {
             let mut want = 0f32;
             for i in 0..in_dim {

@@ -18,19 +18,28 @@
 //! per-slot decode path) and multi-vector ([`matmat`], the batched decode
 //! path that streams each weight row once per scheduling round and applies
 //! it to all B slot activations — bit-identical per slot to matvec).  The
-//! multi-vector kernels additionally have `_par` forms sharded over
-//! disjoint output ranges of a [`crate::pool::ThreadPool`] — bit-identical
-//! to their serial twins for every pool size (see the `matmat` module docs
-//! for the sharding contract and determinism guarantee).
+//! multi-vector kernels take a [`crate::pool::Par`] handle: serial and
+//! pool-sharded execution share ONE entry point each, sharded over
+//! disjoint output ranges of a [`crate::pool::ThreadPool`] and
+//! bit-identical for every pool size (see the `matmat` module docs for
+//! the sharding contract and determinism guarantee).
+//!
+//! The hot inner loops (dots, fused dequant-dots, f16/q4 widening, row
+//! axpys) are routed through [`simd`]: one runtime-dispatched kernel
+//! table per instruction set (scalar / NEON / AVX2), resolved once per
+//! matrix pass and bit-identical across backends, selectable at engine
+//! load via `--simd`.
 
 pub mod mat;
 pub mod matmat;
 pub mod matvec;
 pub mod ops;
 pub mod q4;
+pub mod simd;
 
 pub use mat::{DType, Mat};
 pub use matmat::*;
 pub use matvec::*;
 pub use ops::*;
 pub use q4::*;
+pub use simd::{Kernels, SimdBackend};

@@ -1,4 +1,10 @@
 //! Element-wise / normalization ops used by the native engine.
+//!
+//! These are deliberately NOT routed through the [`crate::tensor::simd`]
+//! kernel table: they are O(dim) per token (vs the kernels' O(dim²)),
+//! their reductions are whole-vector (a different shape from the LANES=8
+//! dot tree), and keeping them scalar keeps one reference implementation
+//! for the normalization arithmetic the state tests pin.
 
 /// LayerNorm: `out = (x - mean) / sqrt(var + eps) * scale + bias`.
 pub fn layer_norm(x: &[f32], scale: &[f32], bias: &[f32], eps: f32, out: &mut [f32]) {

@@ -175,6 +175,26 @@ pub fn quantize_q4_1(rows: usize, cols: usize, data: &[f32]) -> (Vec<u8>, Vec<u1
     (packed, scale, min)
 }
 
+/// Spread 4 packed bytes (8 consecutive 4-bit codes, low nibble first)
+/// into a `u64` holding one code per byte lane: byte `k` of the result is
+/// the code of element `c + k` when `v` is the little-endian `u32` read
+/// of `packed_row[c/2..c/2 + 4]` (even `c`).
+///
+/// This is the SIMD-friendly unpack used by [`crate::tensor::simd`]: the
+/// result is one widening move away from 8 integer lanes, and it feeds
+/// exactly the same `s * (q - 8)` / `s * q + m` arithmetic as [`q4_nib`],
+/// so vector decode stays bit-identical to [`dq4`] / [`dq4_1`].
+#[inline]
+pub(crate) fn spread_nibbles8(v: u32) -> u64 {
+    let mut w = v as u64;
+    // fan the 4 bytes out to one byte per 16-bit lane
+    w = (w | (w << 16)) & 0x0000_FFFF_0000_FFFF;
+    w = (w | (w << 8)) & 0x00FF_00FF_00FF_00FF;
+    // even elements live in the low nibbles (byte lanes 0,2,4,6), odd
+    // elements in the high nibbles (byte lanes 1,3,5,7)
+    (w & 0x000F_000F_000F_000F) | (((w >> 4) & 0x000F_000F_000F_000F) << 8)
+}
+
 // Keep in lock-step with matvec.rs: the dots below must replicate
 // `dot_f32`'s reduction shape exactly (8-lane accumulator array over
 // full chunks, then a scalar tail) for the bit-exactness contract.
@@ -309,6 +329,23 @@ mod tests {
         let mut dec1 = vec![1f32; 64];
         dequant_row_q4_1(&packed1, &scale1, &min1, &mut dec1);
         assert!(dec1.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn spread_nibbles8_matches_q4_nib() {
+        let mut r = XorShift::new(0x54);
+        let packed: Vec<u8> = (0..16).map(|_| (r.next_u64() & 0xFF) as u8).collect();
+        for c in [0usize, 2, 8, 16, 24] {
+            let v = u32::from_le_bytes(packed[c / 2..c / 2 + 4].try_into().unwrap());
+            let spread = spread_nibbles8(v);
+            for k in 0..8 {
+                assert_eq!(
+                    ((spread >> (8 * k)) & 0xF) as u8,
+                    q4_nib(&packed, c + k),
+                    "c={c} k={k}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,1375 @@
+//! Runtime-dispatched explicit-SIMD kernels: one [`Kernels`] table of
+//! plain `fn` pointers per instruction set, selected once at engine load
+//! (`--simd auto|scalar|neon|avx2`) and resolved ONCE per matrix pass by
+//! the matvec/matmat kernels and the engine's streaming `RowView` — the
+//! unified kernel surface that replaced the per-call dtype matching and
+//! the scalar/`_par` twin functions.
+//!
+//! # Dispatch rules
+//!
+//! * `auto` (the default) picks the best backend the host supports:
+//!   NEON on aarch64 (a baseline feature of every `aarch64-linux`
+//!   target, so no runtime probe is needed), AVX2 on x86_64 when
+//!   `is_x86_feature_detected!` confirms it, scalar otherwise.
+//! * Forcing a backend the host lacks is a LOAD-TIME error ([`select`]
+//!   refuses), never a crash: an unsupported kernel table is never
+//!   installed, which is exactly the safety contract that keeps the
+//!   `unsafe` AVX2 entry points sound.
+//! * The scalar backend is always available and is THE reference
+//!   implementation: the fixed `LANES = 8` accumulator tree of
+//!   [`crate::tensor::matvec::dot_f32`] and friends.
+//!
+//! # Bit-identity contract
+//!
+//! Every SIMD kernel replicates the scalar reference's floating-point
+//! operation sequence EXACTLY:
+//!
+//! * the same per-lane products — multiplies and adds stay separate
+//!   instructions (no FMA contraction, which would skip the scalar
+//!   code's intermediate rounding);
+//! * the same 8 partial sums, reduced in the same ascending lane order
+//!   (`acc.iter().sum()` is a sequential left fold);
+//! * the same scalar tail loop over the last `n % 8` elements;
+//! * the same decode arithmetic — [`crate::util::f16::f16_to_f32_fast`]'s
+//!   magic-multiply bit recipe and [`crate::tensor::q4::dq4`] /
+//!   [`crate::tensor::q4::dq4_1`]'s `s * (q - 8)` / `s * q + m` with the
+//!   scalar association preserved.
+//!
+//! So every backend is bit-identical to scalar for every input —
+//! `tests/simd_equivalence.rs` pins this per kernel and dtype, ragged
+//! shapes included.  That is what lets the engine treat `--simd` as a
+//! pure performance knob: all standing equivalence invariants (batched
+//! == per-slot, any thread count, prefetch on == off, warm == cold)
+//! hold across backends too.
+//!
+//! The selected backend lives in a process-global `AtomicU8` — a
+//! documented `crate::sync` exception (see `sync/mod.rs`): loom atomics
+//! cannot const-initialize a `static`, and this is a write-once
+//! configuration byte with no cross-thread protocol.  Tests and benches
+//! that need a specific backend use [`kernels_for`], which never touches
+//! the global selection.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{matvec, q4};
+
+/// Instruction-set backend for one [`Kernels`] table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// The reference implementation (matvec.rs / q4.rs) — always available.
+    Scalar,
+    /// aarch64 NEON (baseline on aarch64-linux targets).
+    Neon,
+    /// x86_64 AVX2 (gated on `is_x86_feature_detected!("avx2")`).
+    Avx2,
+}
+
+impl SimdBackend {
+    /// The CLI / telemetry name (`--simd` accepts these plus `auto`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Neon => "neon",
+            SimdBackend::Avx2 => "avx2",
+        }
+    }
+
+    /// Stable small id for the telemetry gauge and the `ACTIVE` byte.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            SimdBackend::Scalar => 0,
+            SimdBackend::Neon => 1,
+            SimdBackend::Avx2 => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(SimdBackend::Scalar),
+            1 => Some(SimdBackend::Neon),
+            2 => Some(SimdBackend::Avx2),
+            _ => None,
+        }
+    }
+}
+
+/// One resolved kernel set: every hot inner loop as a plain `fn`
+/// pointer, so callers pay the backend dispatch once per matrix pass
+/// instead of once per element or row.
+///
+/// Semantics (each bit-identical to its scalar reference):
+///
+/// * `dot_*`: `sum_k row[k] * x[k]` with the LANES=8 accumulator tree
+///   (i8 is UNSCALED — callers fold the per-row scale, as with
+///   [`crate::tensor::matvec::dot_i8`]); the q4 forms fuse group-scale
+///   dequant into the dot.
+/// * `widen_*`: decode a row (window) into f32 scratch; the q4 forms
+///   take the window's starting GLOBAL column `c0` so group scales
+///   resolve identically to the full-row decode.
+/// * `axpy_*`: `out[k] += a * row[k]` with dequant fused (i8 again
+///   unscaled — callers fold per-column scales exactly as before).
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    /// Which instruction set this table runs on.
+    pub backend: SimdBackend,
+    pub dot_f32: fn(&[f32], &[f32]) -> f32,
+    pub dot_f16: fn(&[u16], &[f32]) -> f32,
+    pub dot_i8: fn(&[i8], &[f32]) -> f32,
+    pub dot_q4: fn(&[u8], &[u16], &[f32]) -> f32,
+    pub dot_q4_1: fn(&[u8], &[u16], &[u16], &[f32]) -> f32,
+    pub widen_f16: fn(&[u16], &mut [f32]),
+    pub widen_q4: fn(&[u8], &[u16], usize, &mut [f32]),
+    pub widen_q4_1: fn(&[u8], &[u16], &[u16], usize, &mut [f32]),
+    pub axpy_f32: fn(f32, &[f32], &mut [f32]),
+    pub axpy_f16: fn(f32, &[u16], &mut [f32]),
+    pub axpy_i8: fn(f32, &[i8], &mut [f32]),
+    pub axpy_q4: fn(f32, &[u8], &[u16], usize, &mut [f32]),
+    pub axpy_q4_1: fn(f32, &[u8], &[u16], &[u16], usize, &mut [f32]),
+}
+
+/// `ACTIVE` value before the first [`select`] call.
+const UNSET: u8 = u8::MAX;
+
+/// The selected backend as `SimdBackend::as_u8` (or [`UNSET`]).
+/// Deliberately `std::sync::atomic`, NOT `crate::sync::atomic` — the
+/// documented shim exception: loom's atomics cannot const-initialize a
+/// `static`, and this is a write-once configuration byte with no
+/// cross-thread protocol (all installable backends are bit-identical).
+static ACTIVE: AtomicU8 = AtomicU8::new(UNSET);
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// Best backend this host supports — what `--simd auto` picks.
+pub fn detect() -> SimdBackend {
+    if cfg!(target_arch = "aarch64") {
+        SimdBackend::Neon
+    } else if avx2_available() {
+        SimdBackend::Avx2
+    } else {
+        SimdBackend::Scalar
+    }
+}
+
+/// Whether `b`'s kernel table can run on this host.
+pub fn available(b: SimdBackend) -> bool {
+    match b {
+        SimdBackend::Scalar => true,
+        SimdBackend::Neon => cfg!(target_arch = "aarch64"),
+        SimdBackend::Avx2 => avx2_available(),
+    }
+}
+
+/// Install the process-wide backend: `None` = auto-detect, `Some(b)` =
+/// force `b` — refused with an error if this host cannot run it, so an
+/// unsupported table is never installed.  Called once from
+/// `RwkvEngine::load_with_pool`; before any call, [`kernels`] dispatches
+/// to [`detect`]'s choice.
+pub fn select(requested: Option<SimdBackend>) -> Result<SimdBackend> {
+    let b = match requested {
+        None => detect(),
+        Some(b) if available(b) => b,
+        Some(b) => bail!(
+            "simd backend '{}' is not available on this host (auto would pick '{}')",
+            b.name(),
+            detect().name()
+        ),
+    };
+    ACTIVE.store(b.as_u8(), Ordering::Relaxed);
+    Ok(b)
+}
+
+/// The backend [`kernels`] currently dispatches to.
+pub fn active() -> SimdBackend {
+    SimdBackend::from_u8(ACTIVE.load(Ordering::Relaxed)).unwrap_or_else(detect)
+}
+
+/// The active kernel table.  Resolve once per matrix pass, then call
+/// through the `fn` pointers.
+pub fn kernels() -> &'static Kernels {
+    table(active())
+}
+
+/// The kernel table for `b`, or `None` if this host cannot run it — the
+/// side-effect-free accessor the dispatch-equivalence tests and the
+/// matvec bench use (never touches the global selection).
+pub fn kernels_for(b: SimdBackend) -> Option<&'static Kernels> {
+    if available(b) {
+        Some(table(b))
+    } else {
+        None
+    }
+}
+
+fn table(b: SimdBackend) -> &'static Kernels {
+    match b {
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => &NEON,
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 => &AVX2,
+        _ => &SCALAR,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar backend — the always-available reference
+// ---------------------------------------------------------------------------
+
+static SCALAR: Kernels = Kernels {
+    backend: SimdBackend::Scalar,
+    dot_f32: matvec::dot_f32,
+    dot_f16: matvec::dot_f16,
+    dot_i8: matvec::dot_i8,
+    dot_q4: q4::dot_q4,
+    dot_q4_1: q4::dot_q4_1,
+    widen_f16: scalar::widen_f16,
+    widen_q4: scalar::widen_q4,
+    widen_q4_1: scalar::widen_q4_1,
+    axpy_f32: scalar::axpy_f32,
+    axpy_f16: scalar::axpy_f16,
+    axpy_i8: scalar::axpy_i8,
+    axpy_q4: scalar::axpy_q4,
+    axpy_q4_1: scalar::axpy_q4_1,
+};
+
+/// Scalar widen/axpy — the exact loops the matvec/matmat dtype arms used
+/// inline before the kernel table existed (the dots live in matvec.rs /
+/// q4.rs and are referenced directly by [`SCALAR`]).
+mod scalar {
+    use crate::tensor::q4::{dq4, dq4_1};
+    use crate::util::f16::f16_to_f32_fast as f16_to_f32;
+
+    pub fn widen_f16(src: &[u16], out: &mut [f32]) {
+        for (o, &h) in out.iter_mut().zip(src) {
+            *o = f16_to_f32(h);
+        }
+    }
+
+    pub fn widen_q4(prow: &[u8], srow: &[u16], c0: usize, out: &mut [f32]) {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = dq4(prow, srow, c0 + k);
+        }
+    }
+
+    pub fn widen_q4_1(prow: &[u8], srow: &[u16], mrow: &[u16], c0: usize, out: &mut [f32]) {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = dq4_1(prow, srow, mrow, c0 + k);
+        }
+    }
+
+    pub fn axpy_f32(a: f32, row: &[f32], out: &mut [f32]) {
+        for (o, &w) in out.iter_mut().zip(row) {
+            *o += a * w;
+        }
+    }
+
+    pub fn axpy_f16(a: f32, row: &[u16], out: &mut [f32]) {
+        for (o, &h) in out.iter_mut().zip(row) {
+            *o += a * f16_to_f32(h);
+        }
+    }
+
+    pub fn axpy_i8(a: f32, row: &[i8], out: &mut [f32]) {
+        for (o, &q) in out.iter_mut().zip(row) {
+            *o += a * q as f32;
+        }
+    }
+
+    pub fn axpy_q4(a: f32, prow: &[u8], srow: &[u16], c0: usize, out: &mut [f32]) {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o += a * dq4(prow, srow, c0 + k);
+        }
+    }
+
+    pub fn axpy_q4_1(
+        a: f32,
+        prow: &[u8],
+        srow: &[u16],
+        mrow: &[u16],
+        c0: usize,
+        out: &mut [f32],
+    ) {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o += a * dq4_1(prow, srow, mrow, c0 + k);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend (x86_64, runtime-detected)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    backend: SimdBackend::Avx2,
+    dot_f32: avx2::dot_f32,
+    dot_f16: avx2::dot_f16,
+    dot_i8: avx2::dot_i8,
+    dot_q4: avx2::dot_q4,
+    dot_q4_1: avx2::dot_q4_1,
+    widen_f16: avx2::widen_f16,
+    widen_q4: avx2::widen_q4,
+    widen_q4_1: avx2::widen_q4_1,
+    axpy_f32: avx2::axpy_f32,
+    axpy_f16: avx2::axpy_f16,
+    axpy_i8: avx2::axpy_i8,
+    axpy_q4: avx2::axpy_q4,
+    axpy_q4_1: avx2::axpy_q4_1,
+};
+
+/// AVX2 kernels.  Every `#[target_feature]` impl is `unsafe fn` whose
+/// contract is "this CPU has AVX2"; the safe `pub fn` wrappers discharge
+/// it because the [`AVX2`] table is only reachable through
+/// [`kernels_for`] / [`select`], both gated on runtime detection.
+///
+/// 256-bit lanes map 1:1 onto the scalar reference's `[f32; 8]`
+/// accumulator: one vector add per chunk keeps the identical 8 partial
+/// sums, and the horizontal reduce stores the register and sums lanes
+/// 0..8 sequentially — the same left fold as `acc.iter().sum()`.
+/// Multiplies and adds are separate intrinsics throughout (no FMA).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use crate::tensor::q4::{dq4, dq4_1, spread_nibbles8, Q4_GROUP};
+    use crate::util::f16::f16_to_f32_fast as f16_to_f32;
+
+    const LANES: usize = 8;
+
+    /// `f16_to_f32_fast`'s magic multiplier (2^112) as f32 bits.
+    const F16_MAGIC: i32 = 0x7780_0000;
+
+    /// Reduce 8 lanes in ascending lane order — the exact sequential
+    /// left fold of the scalar reference's `acc.iter().sum()`.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut lanes = [0f32; LANES];
+        // SAFETY: `lanes` holds 8 writable f32s; storeu is unaligned-ok.
+        unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), v) };
+        lanes.iter().sum()
+    }
+
+    /// Decode 8 f16 values at `p` with the `f16_to_f32_fast` bit recipe.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2 and that 8 readable
+    /// `u16`s exist at `p`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_f16x8(p: *const u16) -> __m256 {
+        // SAFETY: 8 u16s at `p` per the fn contract (loadu is
+        // unaligned-ok); the integer ops replicate f16_to_f32_fast —
+        // (mag << 13) * 2^112, sign bit OR'd back in.
+        unsafe {
+            let h = _mm256_cvtepu16_epi32(_mm_loadu_si128(p as *const __m128i));
+            let mag = _mm256_and_si256(h, _mm256_set1_epi32(0x7fff));
+            let sign = _mm256_slli_epi32::<16>(_mm256_and_si256(h, _mm256_set1_epi32(0x8000)));
+            let val = _mm256_mul_ps(
+                _mm256_castsi256_ps(_mm256_slli_epi32::<13>(mag)),
+                _mm256_castsi256_ps(_mm256_set1_epi32(F16_MAGIC)),
+            );
+            _mm256_castsi256_ps(_mm256_or_si256(_mm256_castps_si256(val), sign))
+        }
+    }
+
+    /// 8 unsigned 4-bit codes covering global columns `[g, g+8)` as i32
+    /// lanes (`g` must be 8-aligned: the chunk then sits on packed-byte
+    /// boundaries and inside one 32-wide scale group).
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2 and that 4 readable
+    /// bytes exist at `p + g/2`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn q4_codes_x8(p: *const u8, g: usize) -> __m256i {
+        // SAFETY: 4 bytes at p + g/2 per the fn contract; the nibble
+        // spread is the shared q4.rs recipe, then pure register widening.
+        unsafe {
+            let v = u32::from_le((p.add(g / 2) as *const u32).read_unaligned());
+            _mm256_cvtepu8_epi32(_mm_set_epi64x(0, spread_nibbles8(v) as i64))
+        }
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let full = n - n % LANES;
+        // SAFETY: loads read lanes [c, c+8) with c+8 <= full <= both
+        // slice lengths — in bounds, unaligned-ok (loadu).
+        let mut s = unsafe {
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc = _mm256_setzero_ps();
+            let mut c = 0;
+            while c < full {
+                let va = _mm256_loadu_ps(pa.add(c));
+                let vb = _mm256_loadu_ps(pb.add(c));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+                c += LANES;
+            }
+            hsum(acc)
+        };
+        for i in full..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_f16_impl(a: &[u16], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let full = n - n % LANES;
+        // SAFETY: loads read lanes [c, c+8) with c+8 <= full <= both
+        // slice lengths — in bounds, unaligned-ok.
+        let mut s = unsafe {
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc = _mm256_setzero_ps();
+            let mut c = 0;
+            while c < full {
+                let w = load_f16x8(pa.add(c));
+                let vb = _mm256_loadu_ps(pb.add(c));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(w, vb));
+                c += LANES;
+            }
+            hsum(acc)
+        };
+        for i in full..n {
+            s += f16_to_f32(a[i]) * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_i8_impl(a: &[i8], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let full = n - n % LANES;
+        // SAFETY: loads read lanes [c, c+8) with c+8 <= full <= both
+        // slice lengths — in bounds, unaligned-ok.
+        let mut s = unsafe {
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc = _mm256_setzero_ps();
+            let mut c = 0;
+            while c < full {
+                let q = _mm256_cvtepi8_epi32(_mm_loadl_epi64(pa.add(c) as *const __m128i));
+                let w = _mm256_cvtepi32_ps(q);
+                let vb = _mm256_loadu_ps(pb.add(c));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(w, vb));
+                c += LANES;
+            }
+            hsum(acc)
+        };
+        for i in full..n {
+            s += a[i] as f32 * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_q4_impl(packed_row: &[u8], scale_row: &[u16], x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n - n % LANES;
+        // SAFETY: each chunk [c, c+8) has 8-aligned c, so it reads 4
+        // packed bytes at c/2 (c/2 + 4 <= n/2 <= the row's ceil(n/2)
+        // packed bytes) and x lanes [c, c+8) <= full <= n — in bounds.
+        let mut s = unsafe {
+            let (pp, px) = (packed_row.as_ptr(), x.as_ptr());
+            let mut acc = _mm256_setzero_ps();
+            let eight = _mm256_set1_epi32(8);
+            let mut c = 0;
+            while c < full {
+                // one group scale per chunk: 8 divides Q4_GROUP, so an
+                // 8-aligned chunk never straddles a group boundary
+                let sv = _mm256_set1_ps(f16_to_f32(scale_row[c / Q4_GROUP]));
+                let q = _mm256_cvtepi32_ps(_mm256_sub_epi32(q4_codes_x8(pp, c), eight));
+                // dq4 = s * (q - 8), then * x — scalar association kept
+                let w = _mm256_mul_ps(sv, q);
+                let vx = _mm256_loadu_ps(px.add(c));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(w, vx));
+                c += LANES;
+            }
+            hsum(acc)
+        };
+        for i in full..n {
+            s += dq4(packed_row, scale_row, i) * x[i];
+        }
+        s
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_q4_1_impl(
+        packed_row: &[u8],
+        scale_row: &[u16],
+        min_row: &[u16],
+        x: &[f32],
+    ) -> f32 {
+        let n = x.len();
+        let full = n - n % LANES;
+        // SAFETY: same bounds argument as the q4 dot above.
+        let mut s = unsafe {
+            let (pp, px) = (packed_row.as_ptr(), x.as_ptr());
+            let mut acc = _mm256_setzero_ps();
+            let mut c = 0;
+            while c < full {
+                let g = c / Q4_GROUP;
+                let sv = _mm256_set1_ps(f16_to_f32(scale_row[g]));
+                let mv = _mm256_set1_ps(f16_to_f32(min_row[g]));
+                let q = _mm256_cvtepi32_ps(q4_codes_x8(pp, c));
+                // dq4_1 = s * q + m (mul then add, two roundings), * x
+                let w = _mm256_add_ps(_mm256_mul_ps(sv, q), mv);
+                let vx = _mm256_loadu_ps(px.add(c));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(w, vx));
+                c += LANES;
+            }
+            hsum(acc)
+        };
+        for i in full..n {
+            s += dq4_1(packed_row, scale_row, min_row, i) * x[i];
+        }
+        s
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_f16_impl(src: &[u16], out: &mut [f32]) {
+        let n = out.len().min(src.len());
+        let full = n - n % LANES;
+        // SAFETY: reads src[c..c+8) and writes out[c..c+8) with c+8 <=
+        // full <= both lengths — in bounds, unaligned-ok.
+        unsafe {
+            let (ps, po) = (src.as_ptr(), out.as_mut_ptr());
+            let mut c = 0;
+            while c < full {
+                _mm256_storeu_ps(po.add(c), load_f16x8(ps.add(c)));
+                c += LANES;
+            }
+        }
+        for i in full..n {
+            out[i] = f16_to_f32(src[i]);
+        }
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_q4_impl(prow: &[u8], srow: &[u16], c0: usize, out: &mut [f32]) {
+        let n = out.len();
+        // scalar head until the GLOBAL column index is 8-aligned (column
+        // windows may start mid-byte / mid-group — matmat shards do)
+        let head = ((LANES - c0 % LANES) % LANES).min(n);
+        for (k, o) in out[..head].iter_mut().enumerate() {
+            *o = dq4(prow, srow, c0 + k);
+        }
+        let body = (n - head) / LANES * LANES;
+        // SAFETY: every chunk covers global columns [g, g+8) with g
+        // 8-aligned — 4 packed bytes at g/2 (within the row: g+8 <=
+        // c0+n <= cols), one scale group; out writes stay < head+body.
+        unsafe {
+            let (pp, po) = (prow.as_ptr(), out.as_mut_ptr());
+            let eight = _mm256_set1_epi32(8);
+            let mut k = head;
+            while k < head + body {
+                let g = c0 + k;
+                let sv = _mm256_set1_ps(f16_to_f32(srow[g / Q4_GROUP]));
+                let q = _mm256_cvtepi32_ps(_mm256_sub_epi32(q4_codes_x8(pp, g), eight));
+                _mm256_storeu_ps(po.add(k), _mm256_mul_ps(sv, q));
+                k += LANES;
+            }
+        }
+        for k in head + body..n {
+            out[k] = dq4(prow, srow, c0 + k);
+        }
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_q4_1_impl(
+        prow: &[u8],
+        srow: &[u16],
+        mrow: &[u16],
+        c0: usize,
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        let head = ((LANES - c0 % LANES) % LANES).min(n);
+        for (k, o) in out[..head].iter_mut().enumerate() {
+            *o = dq4_1(prow, srow, mrow, c0 + k);
+        }
+        let body = (n - head) / LANES * LANES;
+        // SAFETY: same bounds argument as widen_q4_impl.
+        unsafe {
+            let (pp, po) = (prow.as_ptr(), out.as_mut_ptr());
+            let mut k = head;
+            while k < head + body {
+                let g = c0 + k;
+                let grp = g / Q4_GROUP;
+                let sv = _mm256_set1_ps(f16_to_f32(srow[grp]));
+                let mv = _mm256_set1_ps(f16_to_f32(mrow[grp]));
+                let q = _mm256_cvtepi32_ps(q4_codes_x8(pp, g));
+                _mm256_storeu_ps(po.add(k), _mm256_add_ps(_mm256_mul_ps(sv, q), mv));
+                k += LANES;
+            }
+        }
+        for k in head + body..n {
+            out[k] = dq4_1(prow, srow, mrow, c0 + k);
+        }
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_f32_impl(a: f32, row: &[f32], out: &mut [f32]) {
+        let n = out.len().min(row.len());
+        let full = n - n % LANES;
+        // SAFETY: reads row[c..c+8) and read-modify-writes out[c..c+8)
+        // with c+8 <= full <= both lengths — in bounds, unaligned-ok.
+        unsafe {
+            let (pw, po) = (row.as_ptr(), out.as_mut_ptr());
+            let av = _mm256_set1_ps(a);
+            let mut c = 0;
+            while c < full {
+                let o = _mm256_loadu_ps(po.add(c));
+                let w = _mm256_loadu_ps(pw.add(c));
+                _mm256_storeu_ps(po.add(c), _mm256_add_ps(o, _mm256_mul_ps(av, w)));
+                c += LANES;
+            }
+        }
+        for i in full..n {
+            out[i] += a * row[i];
+        }
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_f16_impl(a: f32, row: &[u16], out: &mut [f32]) {
+        let n = out.len().min(row.len());
+        let full = n - n % LANES;
+        // SAFETY: same bounds argument as axpy_f32_impl.
+        unsafe {
+            let (pw, po) = (row.as_ptr(), out.as_mut_ptr());
+            let av = _mm256_set1_ps(a);
+            let mut c = 0;
+            while c < full {
+                let o = _mm256_loadu_ps(po.add(c));
+                let w = load_f16x8(pw.add(c));
+                _mm256_storeu_ps(po.add(c), _mm256_add_ps(o, _mm256_mul_ps(av, w)));
+                c += LANES;
+            }
+        }
+        for i in full..n {
+            out[i] += a * f16_to_f32(row[i]);
+        }
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_i8_impl(a: f32, row: &[i8], out: &mut [f32]) {
+        let n = out.len().min(row.len());
+        let full = n - n % LANES;
+        // SAFETY: same bounds argument as axpy_f32_impl.
+        unsafe {
+            let (pw, po) = (row.as_ptr(), out.as_mut_ptr());
+            let av = _mm256_set1_ps(a);
+            let mut c = 0;
+            while c < full {
+                let o = _mm256_loadu_ps(po.add(c));
+                let q = _mm256_cvtepi8_epi32(_mm_loadl_epi64(pw.add(c) as *const __m128i));
+                let w = _mm256_cvtepi32_ps(q);
+                _mm256_storeu_ps(po.add(c), _mm256_add_ps(o, _mm256_mul_ps(av, w)));
+                c += LANES;
+            }
+        }
+        for i in full..n {
+            out[i] += a * row[i] as f32;
+        }
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_q4_impl(a: f32, prow: &[u8], srow: &[u16], c0: usize, out: &mut [f32]) {
+        let n = out.len();
+        let head = ((LANES - c0 % LANES) % LANES).min(n);
+        for (k, o) in out[..head].iter_mut().enumerate() {
+            *o += a * dq4(prow, srow, c0 + k);
+        }
+        let body = (n - head) / LANES * LANES;
+        // SAFETY: same bounds argument as widen_q4_impl, plus the
+        // read-modify-write of out[k..k+8) stays below head+body <= n.
+        unsafe {
+            let (pp, po) = (prow.as_ptr(), out.as_mut_ptr());
+            let av = _mm256_set1_ps(a);
+            let eight = _mm256_set1_epi32(8);
+            let mut k = head;
+            while k < head + body {
+                let g = c0 + k;
+                let sv = _mm256_set1_ps(f16_to_f32(srow[g / Q4_GROUP]));
+                let q = _mm256_cvtepi32_ps(_mm256_sub_epi32(q4_codes_x8(pp, g), eight));
+                // a * dq4 = a * (s * (q-8)) — scalar association kept
+                let w = _mm256_mul_ps(av, _mm256_mul_ps(sv, q));
+                let o = _mm256_loadu_ps(po.add(k));
+                _mm256_storeu_ps(po.add(k), _mm256_add_ps(o, w));
+                k += LANES;
+            }
+        }
+        for k in head + body..n {
+            out[k] += a * dq4(prow, srow, c0 + k);
+        }
+    }
+
+    /// # Safety
+    ///
+    /// Caller must ensure this CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_q4_1_impl(
+        a: f32,
+        prow: &[u8],
+        srow: &[u16],
+        mrow: &[u16],
+        c0: usize,
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        let head = ((LANES - c0 % LANES) % LANES).min(n);
+        for (k, o) in out[..head].iter_mut().enumerate() {
+            *o += a * dq4_1(prow, srow, mrow, c0 + k);
+        }
+        let body = (n - head) / LANES * LANES;
+        // SAFETY: same bounds argument as axpy_q4_impl.
+        unsafe {
+            let (pp, po) = (prow.as_ptr(), out.as_mut_ptr());
+            let av = _mm256_set1_ps(a);
+            let mut k = head;
+            while k < head + body {
+                let g = c0 + k;
+                let grp = g / Q4_GROUP;
+                let sv = _mm256_set1_ps(f16_to_f32(srow[grp]));
+                let mv = _mm256_set1_ps(f16_to_f32(mrow[grp]));
+                let q = _mm256_cvtepi32_ps(q4_codes_x8(pp, g));
+                let w = _mm256_mul_ps(av, _mm256_add_ps(_mm256_mul_ps(sv, q), mv));
+                let o = _mm256_loadu_ps(po.add(k));
+                _mm256_storeu_ps(po.add(k), _mm256_add_ps(o, w));
+                k += LANES;
+            }
+        }
+        for k in head + body..n {
+            out[k] += a * dq4_1(prow, srow, mrow, c0 + k);
+        }
+    }
+
+    // Safe table entry points: the AVX2 table is only handed out by
+    // `kernels_for` / installed by `select` after a positive
+    // `is_x86_feature_detected!("avx2")`, which discharges every
+    // `unsafe fn` contract above.
+
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { dot_f32_impl(a, b) }
+    }
+
+    pub fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { dot_f16_impl(a, b) }
+    }
+
+    pub fn dot_i8(a: &[i8], b: &[f32]) -> f32 {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { dot_i8_impl(a, b) }
+    }
+
+    pub fn dot_q4(packed_row: &[u8], scale_row: &[u16], x: &[f32]) -> f32 {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { dot_q4_impl(packed_row, scale_row, x) }
+    }
+
+    pub fn dot_q4_1(packed_row: &[u8], scale_row: &[u16], min_row: &[u16], x: &[f32]) -> f32 {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { dot_q4_1_impl(packed_row, scale_row, min_row, x) }
+    }
+
+    pub fn widen_f16(src: &[u16], out: &mut [f32]) {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { widen_f16_impl(src, out) }
+    }
+
+    pub fn widen_q4(prow: &[u8], srow: &[u16], c0: usize, out: &mut [f32]) {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { widen_q4_impl(prow, srow, c0, out) }
+    }
+
+    pub fn widen_q4_1(prow: &[u8], srow: &[u16], mrow: &[u16], c0: usize, out: &mut [f32]) {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { widen_q4_1_impl(prow, srow, mrow, c0, out) }
+    }
+
+    pub fn axpy_f32(a: f32, row: &[f32], out: &mut [f32]) {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { axpy_f32_impl(a, row, out) }
+    }
+
+    pub fn axpy_f16(a: f32, row: &[u16], out: &mut [f32]) {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { axpy_f16_impl(a, row, out) }
+    }
+
+    pub fn axpy_i8(a: f32, row: &[i8], out: &mut [f32]) {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { axpy_i8_impl(a, row, out) }
+    }
+
+    pub fn axpy_q4(a: f32, prow: &[u8], srow: &[u16], c0: usize, out: &mut [f32]) {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { axpy_q4_impl(a, prow, srow, c0, out) }
+    }
+
+    pub fn axpy_q4_1(a: f32, prow: &[u8], srow: &[u16], mrow: &[u16], c0: usize, out: &mut [f32]) {
+        // SAFETY: AVX2 verified at table selection (module docs).
+        unsafe { axpy_q4_1_impl(a, prow, srow, mrow, c0, out) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON backend (aarch64 baseline)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    backend: SimdBackend::Neon,
+    dot_f32: neon::dot_f32,
+    dot_f16: neon::dot_f16,
+    dot_i8: neon::dot_i8,
+    dot_q4: neon::dot_q4,
+    dot_q4_1: neon::dot_q4_1,
+    widen_f16: neon::widen_f16,
+    widen_q4: neon::widen_q4,
+    widen_q4_1: neon::widen_q4_1,
+    axpy_f32: neon::axpy_f32,
+    axpy_f16: neon::axpy_f16,
+    axpy_i8: neon::axpy_i8,
+    axpy_q4: neon::axpy_q4,
+    axpy_q4_1: neon::axpy_q4_1,
+};
+
+/// NEON kernels (the paper's §4 target ISA).  NEON is a baseline feature
+/// of the aarch64 targets this crate builds for, so the entry points are
+/// plain safe functions; the remaining `unsafe` is pointer loads/stores,
+/// discharged by slice bounds as documented per block.
+///
+/// The scalar reference's `[f32; 8]` accumulator maps onto TWO
+/// `float32x4_t` registers (lanes 0–3 / 4–7); the horizontal reduce
+/// stores both and sums lanes 0..8 sequentially — the same left fold as
+/// `acc.iter().sum()`.  Multiplies and adds are separate intrinsics
+/// throughout (no `vfmaq`, which would skip the scalar code's
+/// intermediate rounding).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use crate::tensor::q4::{dq4, dq4_1, spread_nibbles8, Q4_GROUP};
+    use crate::util::f16::f16_to_f32_fast as f16_to_f32;
+
+    const LANES: usize = 8;
+
+    /// `f16_to_f32_fast`'s magic multiplier (2^112) as f32 bits.
+    const F16_MAGIC: u32 = 0x7780_0000;
+
+    /// Reduce the 8 lanes (lo = 0–3, hi = 4–7) in ascending lane order —
+    /// the exact sequential left fold of `acc.iter().sum()`.
+    fn hsum8(lo: float32x4_t, hi: float32x4_t) -> f32 {
+        let mut lanes = [0f32; LANES];
+        // SAFETY: `lanes` holds 8 writable f32s (4 at offset 0, 4 at 4).
+        unsafe {
+            vst1q_f32(lanes.as_mut_ptr(), lo);
+            vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+        }
+        lanes.iter().sum()
+    }
+
+    /// Decode 8 f16 values at `p` with the `f16_to_f32_fast` bit recipe,
+    /// returning (lanes 0–3, lanes 4–7).
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure 8 readable `u16`s exist at `p`.
+    #[inline]
+    unsafe fn load_f16x8(p: *const u16) -> (float32x4_t, float32x4_t) {
+        // SAFETY: 8 u16s at `p` per the fn contract; the integer ops
+        // replicate f16_to_f32_fast — (mag << 13) * 2^112, sign OR'd in.
+        unsafe {
+            let h = vld1q_u16(p);
+            let mag = vandq_u16(h, vdupq_n_u16(0x7fff));
+            let sgn = vandq_u16(h, vdupq_n_u16(0x8000));
+            let magic = vdupq_n_f32(f32::from_bits(F16_MAGIC));
+            let lo = {
+                let m = vshlq_n_u32::<13>(vmovl_u16(vget_low_u16(mag)));
+                let s = vshlq_n_u32::<16>(vmovl_u16(vget_low_u16(sgn)));
+                let val = vmulq_f32(vreinterpretq_f32_u32(m), magic);
+                vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(val), s))
+            };
+            let hi = {
+                let m = vshlq_n_u32::<13>(vmovl_u16(vget_high_u16(mag)));
+                let s = vshlq_n_u32::<16>(vmovl_u16(vget_high_u16(sgn)));
+                let val = vmulq_f32(vreinterpretq_f32_u32(m), magic);
+                vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(val), s))
+            };
+            (lo, hi)
+        }
+    }
+
+    /// 8 unsigned 4-bit codes covering global columns `[g, g+8)` as i32
+    /// lanes (lo = 0–3, hi = 4–7); `g` must be 8-aligned so the chunk
+    /// sits on packed-byte boundaries and inside one scale group.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure 4 readable bytes exist at `p + g/2`.
+    #[inline]
+    unsafe fn q4_codes_x8(p: *const u8, g: usize) -> (int32x4_t, int32x4_t) {
+        // SAFETY: 4 bytes at p + g/2 per the fn contract; the nibble
+        // spread is the shared q4.rs recipe, then pure register widening.
+        unsafe {
+            let v = u32::from_le((p.add(g / 2) as *const u32).read_unaligned());
+            let n16 = vmovl_u8(vcreate_u8(spread_nibbles8(v)));
+            let lo = vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(n16)));
+            let hi = vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(n16)));
+            (lo, hi)
+        }
+    }
+
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let full = n - n % LANES;
+        // SAFETY: loads read lanes [c, c+8) with c+8 <= full <= both
+        // slice lengths — in bounds (vld1q has no alignment requirement).
+        let mut s = unsafe {
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut c = 0;
+            while c < full {
+                acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa.add(c)), vld1q_f32(pb.add(c))));
+                acc1 = vaddq_f32(
+                    acc1,
+                    vmulq_f32(vld1q_f32(pa.add(c + 4)), vld1q_f32(pb.add(c + 4))),
+                );
+                c += LANES;
+            }
+            hsum8(acc0, acc1)
+        };
+        for i in full..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    pub fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let full = n - n % LANES;
+        // SAFETY: loads read lanes [c, c+8) with c+8 <= full <= both
+        // slice lengths — in bounds.
+        let mut s = unsafe {
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut c = 0;
+            while c < full {
+                let (w0, w1) = load_f16x8(pa.add(c));
+                acc0 = vaddq_f32(acc0, vmulq_f32(w0, vld1q_f32(pb.add(c))));
+                acc1 = vaddq_f32(acc1, vmulq_f32(w1, vld1q_f32(pb.add(c + 4))));
+                c += LANES;
+            }
+            hsum8(acc0, acc1)
+        };
+        for i in full..n {
+            s += f16_to_f32(a[i]) * b[i];
+        }
+        s
+    }
+
+    pub fn dot_i8(a: &[i8], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let full = n - n % LANES;
+        // SAFETY: loads read lanes [c, c+8) with c+8 <= full <= both
+        // slice lengths — in bounds.
+        let mut s = unsafe {
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut c = 0;
+            while c < full {
+                let q = vmovl_s8(vld1_s8(pa.add(c)));
+                let w0 = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q)));
+                let w1 = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q)));
+                acc0 = vaddq_f32(acc0, vmulq_f32(w0, vld1q_f32(pb.add(c))));
+                acc1 = vaddq_f32(acc1, vmulq_f32(w1, vld1q_f32(pb.add(c + 4))));
+                c += LANES;
+            }
+            hsum8(acc0, acc1)
+        };
+        for i in full..n {
+            s += a[i] as f32 * b[i];
+        }
+        s
+    }
+
+    pub fn dot_q4(packed_row: &[u8], scale_row: &[u16], x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n - n % LANES;
+        // SAFETY: each chunk [c, c+8) has 8-aligned c, so it reads 4
+        // packed bytes at c/2 (c/2 + 4 <= n/2 <= the row's ceil(n/2)
+        // packed bytes) and x lanes [c, c+8) <= full <= n — in bounds.
+        let mut s = unsafe {
+            let (pp, px) = (packed_row.as_ptr(), x.as_ptr());
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let eight = vdupq_n_s32(8);
+            let mut c = 0;
+            while c < full {
+                // one group scale per chunk: 8 divides Q4_GROUP
+                let sv = vdupq_n_f32(f16_to_f32(scale_row[c / Q4_GROUP]));
+                let (q0, q1) = q4_codes_x8(pp, c);
+                // dq4 = s * (q - 8), then * x — scalar association kept
+                let w0 = vmulq_f32(sv, vcvtq_f32_s32(vsubq_s32(q0, eight)));
+                let w1 = vmulq_f32(sv, vcvtq_f32_s32(vsubq_s32(q1, eight)));
+                acc0 = vaddq_f32(acc0, vmulq_f32(w0, vld1q_f32(px.add(c))));
+                acc1 = vaddq_f32(acc1, vmulq_f32(w1, vld1q_f32(px.add(c + 4))));
+                c += LANES;
+            }
+            hsum8(acc0, acc1)
+        };
+        for i in full..n {
+            s += dq4(packed_row, scale_row, i) * x[i];
+        }
+        s
+    }
+
+    pub fn dot_q4_1(packed_row: &[u8], scale_row: &[u16], min_row: &[u16], x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n - n % LANES;
+        // SAFETY: same bounds argument as the q4 dot above.
+        let mut s = unsafe {
+            let (pp, px) = (packed_row.as_ptr(), x.as_ptr());
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut c = 0;
+            while c < full {
+                let g = c / Q4_GROUP;
+                let sv = vdupq_n_f32(f16_to_f32(scale_row[g]));
+                let mv = vdupq_n_f32(f16_to_f32(min_row[g]));
+                let (q0, q1) = q4_codes_x8(pp, c);
+                // dq4_1 = s * q + m (mul then add), * x
+                let w0 = vaddq_f32(vmulq_f32(sv, vcvtq_f32_s32(q0)), mv);
+                let w1 = vaddq_f32(vmulq_f32(sv, vcvtq_f32_s32(q1)), mv);
+                acc0 = vaddq_f32(acc0, vmulq_f32(w0, vld1q_f32(px.add(c))));
+                acc1 = vaddq_f32(acc1, vmulq_f32(w1, vld1q_f32(px.add(c + 4))));
+                c += LANES;
+            }
+            hsum8(acc0, acc1)
+        };
+        for i in full..n {
+            s += dq4_1(packed_row, scale_row, min_row, i) * x[i];
+        }
+        s
+    }
+
+    pub fn widen_f16(src: &[u16], out: &mut [f32]) {
+        let n = out.len().min(src.len());
+        let full = n - n % LANES;
+        // SAFETY: reads src[c..c+8) and writes out[c..c+8) with c+8 <=
+        // full <= both lengths — in bounds.
+        unsafe {
+            let (ps, po) = (src.as_ptr(), out.as_mut_ptr());
+            let mut c = 0;
+            while c < full {
+                let (w0, w1) = load_f16x8(ps.add(c));
+                vst1q_f32(po.add(c), w0);
+                vst1q_f32(po.add(c + 4), w1);
+                c += LANES;
+            }
+        }
+        for i in full..n {
+            out[i] = f16_to_f32(src[i]);
+        }
+    }
+
+    pub fn widen_q4(prow: &[u8], srow: &[u16], c0: usize, out: &mut [f32]) {
+        let n = out.len();
+        // scalar head until the GLOBAL column index is 8-aligned (column
+        // windows may start mid-byte / mid-group — matmat shards do)
+        let head = ((LANES - c0 % LANES) % LANES).min(n);
+        for (k, o) in out[..head].iter_mut().enumerate() {
+            *o = dq4(prow, srow, c0 + k);
+        }
+        let body = (n - head) / LANES * LANES;
+        // SAFETY: every chunk covers global columns [g, g+8) with g
+        // 8-aligned — 4 packed bytes at g/2 (within the row: g+8 <=
+        // c0+n <= cols), one scale group; out writes stay < head+body.
+        unsafe {
+            let (pp, po) = (prow.as_ptr(), out.as_mut_ptr());
+            let eight = vdupq_n_s32(8);
+            let mut k = head;
+            while k < head + body {
+                let g = c0 + k;
+                let sv = vdupq_n_f32(f16_to_f32(srow[g / Q4_GROUP]));
+                let (q0, q1) = q4_codes_x8(pp, g);
+                vst1q_f32(po.add(k), vmulq_f32(sv, vcvtq_f32_s32(vsubq_s32(q0, eight))));
+                vst1q_f32(po.add(k + 4), vmulq_f32(sv, vcvtq_f32_s32(vsubq_s32(q1, eight))));
+                k += LANES;
+            }
+        }
+        for k in head + body..n {
+            out[k] = dq4(prow, srow, c0 + k);
+        }
+    }
+
+    pub fn widen_q4_1(prow: &[u8], srow: &[u16], mrow: &[u16], c0: usize, out: &mut [f32]) {
+        let n = out.len();
+        let head = ((LANES - c0 % LANES) % LANES).min(n);
+        for (k, o) in out[..head].iter_mut().enumerate() {
+            *o = dq4_1(prow, srow, mrow, c0 + k);
+        }
+        let body = (n - head) / LANES * LANES;
+        // SAFETY: same bounds argument as widen_q4.
+        unsafe {
+            let (pp, po) = (prow.as_ptr(), out.as_mut_ptr());
+            let mut k = head;
+            while k < head + body {
+                let g = c0 + k;
+                let grp = g / Q4_GROUP;
+                let sv = vdupq_n_f32(f16_to_f32(srow[grp]));
+                let mv = vdupq_n_f32(f16_to_f32(mrow[grp]));
+                let (q0, q1) = q4_codes_x8(pp, g);
+                vst1q_f32(po.add(k), vaddq_f32(vmulq_f32(sv, vcvtq_f32_s32(q0)), mv));
+                vst1q_f32(po.add(k + 4), vaddq_f32(vmulq_f32(sv, vcvtq_f32_s32(q1)), mv));
+                k += LANES;
+            }
+        }
+        for k in head + body..n {
+            out[k] = dq4_1(prow, srow, mrow, c0 + k);
+        }
+    }
+
+    pub fn axpy_f32(a: f32, row: &[f32], out: &mut [f32]) {
+        let n = out.len().min(row.len());
+        let full = n - n % LANES;
+        // SAFETY: reads row[c..c+8) and read-modify-writes out[c..c+8)
+        // with c+8 <= full <= both lengths — in bounds.
+        unsafe {
+            let (pw, po) = (row.as_ptr(), out.as_mut_ptr());
+            let av = vdupq_n_f32(a);
+            let mut c = 0;
+            while c < full {
+                let o0 = vld1q_f32(po.add(c));
+                let o1 = vld1q_f32(po.add(c + 4));
+                let w0 = vmulq_f32(av, vld1q_f32(pw.add(c)));
+                let w1 = vmulq_f32(av, vld1q_f32(pw.add(c + 4)));
+                vst1q_f32(po.add(c), vaddq_f32(o0, w0));
+                vst1q_f32(po.add(c + 4), vaddq_f32(o1, w1));
+                c += LANES;
+            }
+        }
+        for i in full..n {
+            out[i] += a * row[i];
+        }
+    }
+
+    pub fn axpy_f16(a: f32, row: &[u16], out: &mut [f32]) {
+        let n = out.len().min(row.len());
+        let full = n - n % LANES;
+        // SAFETY: same bounds argument as axpy_f32.
+        unsafe {
+            let (pw, po) = (row.as_ptr(), out.as_mut_ptr());
+            let av = vdupq_n_f32(a);
+            let mut c = 0;
+            while c < full {
+                let (w0, w1) = load_f16x8(pw.add(c));
+                let o0 = vld1q_f32(po.add(c));
+                let o1 = vld1q_f32(po.add(c + 4));
+                vst1q_f32(po.add(c), vaddq_f32(o0, vmulq_f32(av, w0)));
+                vst1q_f32(po.add(c + 4), vaddq_f32(o1, vmulq_f32(av, w1)));
+                c += LANES;
+            }
+        }
+        for i in full..n {
+            out[i] += a * f16_to_f32(row[i]);
+        }
+    }
+
+    pub fn axpy_i8(a: f32, row: &[i8], out: &mut [f32]) {
+        let n = out.len().min(row.len());
+        let full = n - n % LANES;
+        // SAFETY: same bounds argument as axpy_f32.
+        unsafe {
+            let (pw, po) = (row.as_ptr(), out.as_mut_ptr());
+            let av = vdupq_n_f32(a);
+            let mut c = 0;
+            while c < full {
+                let q = vmovl_s8(vld1_s8(pw.add(c)));
+                let w0 = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q)));
+                let w1 = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q)));
+                let o0 = vld1q_f32(po.add(c));
+                let o1 = vld1q_f32(po.add(c + 4));
+                vst1q_f32(po.add(c), vaddq_f32(o0, vmulq_f32(av, w0)));
+                vst1q_f32(po.add(c + 4), vaddq_f32(o1, vmulq_f32(av, w1)));
+                c += LANES;
+            }
+        }
+        for i in full..n {
+            out[i] += a * row[i] as f32;
+        }
+    }
+
+    pub fn axpy_q4(a: f32, prow: &[u8], srow: &[u16], c0: usize, out: &mut [f32]) {
+        let n = out.len();
+        let head = ((LANES - c0 % LANES) % LANES).min(n);
+        for (k, o) in out[..head].iter_mut().enumerate() {
+            *o += a * dq4(prow, srow, c0 + k);
+        }
+        let body = (n - head) / LANES * LANES;
+        // SAFETY: same bounds argument as widen_q4, plus the
+        // read-modify-write of out[k..k+8) stays below head+body <= n.
+        unsafe {
+            let (pp, po) = (prow.as_ptr(), out.as_mut_ptr());
+            let av = vdupq_n_f32(a);
+            let eight = vdupq_n_s32(8);
+            let mut k = head;
+            while k < head + body {
+                let g = c0 + k;
+                let sv = vdupq_n_f32(f16_to_f32(srow[g / Q4_GROUP]));
+                let (q0, q1) = q4_codes_x8(pp, g);
+                // a * dq4 = a * (s * (q-8)) — scalar association kept
+                let w0 = vmulq_f32(av, vmulq_f32(sv, vcvtq_f32_s32(vsubq_s32(q0, eight))));
+                let w1 = vmulq_f32(av, vmulq_f32(sv, vcvtq_f32_s32(vsubq_s32(q1, eight))));
+                let o0 = vld1q_f32(po.add(k));
+                let o1 = vld1q_f32(po.add(k + 4));
+                vst1q_f32(po.add(k), vaddq_f32(o0, w0));
+                vst1q_f32(po.add(k + 4), vaddq_f32(o1, w1));
+                k += LANES;
+            }
+        }
+        for k in head + body..n {
+            out[k] += a * dq4(prow, srow, c0 + k);
+        }
+    }
+
+    pub fn axpy_q4_1(a: f32, prow: &[u8], srow: &[u16], mrow: &[u16], c0: usize, out: &mut [f32]) {
+        let n = out.len();
+        let head = ((LANES - c0 % LANES) % LANES).min(n);
+        for (k, o) in out[..head].iter_mut().enumerate() {
+            *o += a * dq4_1(prow, srow, mrow, c0 + k);
+        }
+        let body = (n - head) / LANES * LANES;
+        // SAFETY: same bounds argument as axpy_q4.
+        unsafe {
+            let (pp, po) = (prow.as_ptr(), out.as_mut_ptr());
+            let av = vdupq_n_f32(a);
+            let mut k = head;
+            while k < head + body {
+                let g = c0 + k;
+                let grp = g / Q4_GROUP;
+                let sv = vdupq_n_f32(f16_to_f32(srow[grp]));
+                let mv = vdupq_n_f32(f16_to_f32(mrow[grp]));
+                let (q0, q1) = q4_codes_x8(pp, g);
+                let w0 = vmulq_f32(av, vaddq_f32(vmulq_f32(sv, vcvtq_f32_s32(q0)), mv));
+                let w1 = vmulq_f32(av, vaddq_f32(vmulq_f32(sv, vcvtq_f32_s32(q1)), mv));
+                let o0 = vld1q_f32(po.add(k));
+                let o1 = vld1q_f32(po.add(k + 4));
+                vst1q_f32(po.add(k), vaddq_f32(o0, w0));
+                vst1q_f32(po.add(k + 4), vaddq_f32(o1, w1));
+                k += LANES;
+            }
+        }
+        for k in head + body..n {
+            out[k] += a * dq4_1(prow, srow, mrow, c0 + k);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_table_always_available() {
+        let k = kernels_for(SimdBackend::Scalar).expect("scalar is always available");
+        assert_eq!(k.backend, SimdBackend::Scalar);
+        assert!(available(SimdBackend::Scalar));
+    }
+
+    #[test]
+    fn detect_is_available_and_selectable() {
+        let best = detect();
+        assert!(available(best), "auto-detected backend must be runnable");
+        assert_eq!(select(None).unwrap(), best);
+        assert_eq!(active(), best);
+        assert_eq!(kernels().backend, best);
+    }
+
+    #[test]
+    fn forcing_unavailable_backend_errors() {
+        for b in [SimdBackend::Neon, SimdBackend::Avx2] {
+            if !available(b) {
+                assert!(select(Some(b)).is_err(), "{} must be refused", b.name());
+                assert!(kernels_for(b).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn forcing_scalar_always_works() {
+        // NOTE: mutates the global selection, but every backend is
+        // bit-identical, so concurrent kernel users can't observe it.
+        assert_eq!(select(Some(SimdBackend::Scalar)).unwrap(), SimdBackend::Scalar);
+        assert_eq!(kernels().backend, SimdBackend::Scalar);
+        // restore auto for any test running after us
+        select(None).unwrap();
+    }
+
+    #[test]
+    fn backend_ids_round_trip() {
+        for b in [SimdBackend::Scalar, SimdBackend::Neon, SimdBackend::Avx2] {
+            assert_eq!(SimdBackend::from_u8(b.as_u8()), Some(b));
+        }
+        assert_eq!(SimdBackend::from_u8(UNSET), None);
+    }
+}

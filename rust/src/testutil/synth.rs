@@ -325,7 +325,7 @@ mod tests {
         let x: Vec<f32> = (0..spec.dim()).map(|i| 0.1 * i as f32 - 0.7).collect();
         let mut want = vec![0.0f32; spec.dim()];
         store.mat("b0.ffn.wk_t").unwrap().decode_row(3, &mut want);
-        assert_eq!(rv.dot_row(3, &x), crate::tensor::dot_f32(&want, &x));
+        assert_eq!(rv.dot(3, &x), crate::tensor::dot_f32(&want, &x));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

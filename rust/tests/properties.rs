@@ -1,9 +1,10 @@
 //! Property-based tests (testutil harness) on kernel/coordinator
 //! invariants — the no-proptest substrate exercised for real.
 
+use rwkv_lite::pool::Par;
 use rwkv_lite::tensor::{
-    self, accum_rows_indexed, accum_rows_indexed_batch, bit_matvec, layer_norm, matmat_in_out,
-    matmat_rows, matmat_rows_indexed, matvec_in_out, matvec_rows, matvec_rows_indexed, Mat,
+    self, accum_rows_indexed, accum_rows_indexed_batch, layer_norm, matmat_in_out, matmat_rows,
+    matmat_rows_indexed, matvec_in_out, matvec_rows, matvec_rows_indexed, Mat, ShadowView,
 };
 use rwkv_lite::testutil::{check, ensure, ensure_close, Gen};
 use rwkv_lite::util::{f16_to_f32, f32_to_f16, logsumexp, softmax_inplace};
@@ -154,8 +155,9 @@ fn prop_bit_matvec_sign_flip_antisymmetric() {
         let neg: Vec<f32> = x.iter().map(|v| -v).collect();
         let mut a = vec![0.0; out_dim];
         let mut b = vec![0.0; out_dim];
-        bit_matvec(&packed, &scale, in_dim, &x, &mut a);
-        bit_matvec(&packed, &scale, in_dim, &neg, &mut b);
+        let shadow = ShadowView::bits(&packed, &scale, in_dim);
+        shadow.matvec(&x, &mut a);
+        shadow.matvec(&neg, &mut b);
         for (p, q) in a.iter().zip(&b) {
             ensure_close(*p, -*q, 1e-3, "antisymmetry")?;
         }
@@ -250,7 +252,7 @@ fn prop_matmat_in_out_is_per_slot_matvec() {
         let xs = g.vec_normal(b * rows);
         let residual = g.vec_normal(b * cols);
         let mut outs = residual.clone();
-        matmat_in_out(&xs, &w, &mut outs, &mut Vec::new());
+        matmat_in_out(&xs, &w, &mut outs, &mut Vec::new(), Par::serial());
         for s in 0..b {
             let mut want = residual[s * cols..(s + 1) * cols].to_vec();
             matvec_in_out(&xs[s * rows..(s + 1) * rows], &w, &mut want, &mut Vec::new());
@@ -269,7 +271,7 @@ fn prop_matmat_rows_is_per_slot_matvec() {
         let w = gen_mat(g, rows, cols, true);
         let xs = g.vec_normal(b * cols);
         let mut outs = vec![0.0f32; b * rows];
-        matmat_rows(&w, &xs, &mut outs);
+        matmat_rows(&w, &xs, &mut outs, Par::serial());
         for s in 0..b {
             let mut want = vec![0.0f32; rows];
             matvec_rows(&w, &xs[s * cols..(s + 1) * cols], &mut want);
@@ -290,7 +292,7 @@ fn prop_matmat_rows_indexed_is_per_slot_matvec() {
         let xs = g.vec_normal(b * cols);
         let k = idx.len();
         let mut outs = vec![0.0f32; b * k];
-        matmat_rows_indexed(&w, &idx, &xs, &mut outs);
+        matmat_rows_indexed(&w, &idx, &xs, &mut outs, Par::serial());
         for s in 0..b {
             let mut want = vec![0.0f32; k];
             matvec_rows_indexed(&w, &idx, &xs[s * cols..(s + 1) * cols], &mut want);
@@ -317,7 +319,7 @@ fn prop_accum_rows_batch_is_per_slot_accum() {
             }
         }
         let mut outs = vec![0.0f32; b * cols];
-        accum_rows_indexed_batch(&w, &idx, &hs, b, &mut outs);
+        accum_rows_indexed_batch(&w, &idx, &hs, b, &mut outs, Par::serial());
         for s in 0..b {
             let mut want = vec![0.0f32; cols];
             accum_rows_indexed(&w, &idx, &hs[s * k..(s + 1) * k], &mut want);

@@ -1,0 +1,214 @@
+//! SIMD dispatch equivalence: every kernel table the host can run must be
+//! BITWISE identical to the scalar reference table, across every kernel
+//! arm, every dtype, ragged shapes (tails shorter than the 8-lane chunk,
+//! windows straddling the 32-wide Q4 group), and misaligned window starts
+//! (`c0` offsets).  This is the invariant that makes `--simd` a pure
+//! throughput knob: forcing any backend can never change model output.
+//!
+//! On x86_64 CI this exercises scalar-vs-AVX2; under `qemu-aarch64` (the
+//! cross-build CI job) it exercises scalar-vs-NEON.  On a host with
+//! neither, every case degenerates to scalar-vs-nothing and the forced
+//! `select` error paths still run.
+
+use rwkv_lite::tensor::{simd, Mat, SimdBackend};
+use rwkv_lite::testutil::{check, ensure, Gen};
+use rwkv_lite::util::f32_to_f16;
+
+/// Every non-scalar table this host can run, alongside the reference.
+fn host_tables() -> (&'static simd::Kernels, Vec<&'static simd::Kernels>) {
+    let scalar = simd::kernels_for(SimdBackend::Scalar).expect("scalar is always available");
+    let simds = [SimdBackend::Neon, SimdBackend::Avx2]
+        .into_iter()
+        .filter_map(simd::kernels_for)
+        .collect();
+    (scalar, simds)
+}
+
+/// Pull the packed bytes + f16 group scales out of a 1-row quantized Mat.
+fn q4_row(cols: usize, data: &[f32]) -> (Vec<u8>, Vec<u16>) {
+    match Mat::quantize_q4_mat(1, cols, data) {
+        Mat::Q4 { data, scale, .. } => (data, scale),
+        _ => unreachable!(),
+    }
+}
+
+fn q4_1_row(cols: usize, data: &[f32]) -> (Vec<u8>, Vec<u16>, Vec<u16>) {
+    match Mat::quantize_q4_1_mat(1, cols, data) {
+        Mat::Q41 { data, scale, min, .. } => (data, scale, min),
+        _ => unreachable!(),
+    }
+}
+
+/// Shape sweep: everything the 8-lane chunking can get wrong — empty,
+/// below one chunk, exactly one chunk, chunk+tail, straddling the Q4
+/// group width (32), multiple groups with a ragged final group.
+const SIZES: &[usize] = &[0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 40, 63, 64, 65, 96, 100];
+
+#[test]
+fn dots_bitwise_match_scalar_across_backends() {
+    let (scalar, simds) = host_tables();
+    check("simd dots == scalar", 40, |g: &mut Gen| {
+        for &n in SIZES {
+            let w = g.vec_normal(n.max(1))[..n].to_vec();
+            let x = g.vec_normal(n.max(1))[..n].to_vec();
+            let w16: Vec<u16> = w.iter().map(|&v| f32_to_f16(v)).collect();
+            let w8: Vec<i8> = w.iter().map(|&v| (v * 30.0).clamp(-127.0, 127.0) as i8).collect();
+            for k in &simds {
+                let b = k.backend.name();
+                ensure(
+                    (k.dot_f32)(&w, &x).to_bits() == (scalar.dot_f32)(&w, &x).to_bits(),
+                    &format!("dot_f32 {b} n={n}"),
+                )?;
+                ensure(
+                    (k.dot_f16)(&w16, &x).to_bits() == (scalar.dot_f16)(&w16, &x).to_bits(),
+                    &format!("dot_f16 {b} n={n}"),
+                )?;
+                ensure(
+                    (k.dot_i8)(&w8, &x).to_bits() == (scalar.dot_i8)(&w8, &x).to_bits(),
+                    &format!("dot_i8 {b} n={n}"),
+                )?;
+            }
+            if n == 0 {
+                continue; // quantizer requires at least one column
+            }
+            let (p4, s4) = q4_row(n, &w);
+            let (p41, s41, m41) = q4_1_row(n, &w);
+            for k in &simds {
+                let b = k.backend.name();
+                ensure(
+                    (k.dot_q4)(&p4, &s4, &x).to_bits() == (scalar.dot_q4)(&p4, &s4, &x).to_bits(),
+                    &format!("dot_q4 {b} n={n}"),
+                )?;
+                ensure(
+                    (k.dot_q4_1)(&p41, &s41, &m41, &x).to_bits()
+                        == (scalar.dot_q4_1)(&p41, &s41, &m41, &x).to_bits(),
+                    &format!("dot_q4_1 {b} n={n}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn widens_bitwise_match_scalar_across_backends() {
+    let (scalar, simds) = host_tables();
+    check("simd widens == scalar", 40, |g: &mut Gen| {
+        for &n in SIZES {
+            if n == 0 {
+                continue;
+            }
+            let w = g.vec_normal(n);
+            let w16: Vec<u16> = w.iter().map(|&v| f32_to_f16(v)).collect();
+            let (p4, s4) = q4_row(n, &w);
+            let (p41, s41, m41) = q4_1_row(n, &w);
+            for k in &simds {
+                let b = k.backend.name();
+                let mut got = vec![0.0f32; n];
+                let mut want = vec![0.0f32; n];
+                (k.widen_f16)(&w16, &mut got);
+                (scalar.widen_f16)(&w16, &mut want);
+                ensure(got == want, &format!("widen_f16 {b} n={n}"))?;
+                // window starts that are 8-misaligned and group-straddling
+                for c0 in [0usize, 1, 5, 8, 31, 33] {
+                    if c0 >= n {
+                        continue;
+                    }
+                    let len = g.usize_in(1, n - c0 + 1);
+                    let mut got = vec![0.0f32; len];
+                    let mut want = vec![0.0f32; len];
+                    (k.widen_q4)(&p4, &s4, c0, &mut got);
+                    (scalar.widen_q4)(&p4, &s4, c0, &mut want);
+                    ensure(got == want, &format!("widen_q4 {b} n={n} c0={c0}"))?;
+                    let mut got = vec![0.0f32; len];
+                    let mut want = vec![0.0f32; len];
+                    (k.widen_q4_1)(&p41, &s41, &m41, c0, &mut got);
+                    (scalar.widen_q4_1)(&p41, &s41, &m41, c0, &mut want);
+                    ensure(got == want, &format!("widen_q4_1 {b} n={n} c0={c0}"))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn axpys_bitwise_match_scalar_across_backends() {
+    let (scalar, simds) = host_tables();
+    check("simd axpys == scalar", 40, |g: &mut Gen| {
+        for &n in SIZES {
+            if n == 0 {
+                continue;
+            }
+            let w = g.vec_normal(n);
+            let residual = g.vec_normal(n);
+            let a = g.f32_in(-2.0, 2.0);
+            let w16: Vec<u16> = w.iter().map(|&v| f32_to_f16(v)).collect();
+            let w8: Vec<i8> = w.iter().map(|&v| (v * 30.0).clamp(-127.0, 127.0) as i8).collect();
+            let (p4, s4) = q4_row(n, &w);
+            let (p41, s41, m41) = q4_1_row(n, &w);
+            for k in &simds {
+                let b = k.backend.name();
+                let mut got = residual.clone();
+                let mut want = residual.clone();
+                (k.axpy_f32)(a, &w, &mut got);
+                (scalar.axpy_f32)(a, &w, &mut want);
+                ensure(got == want, &format!("axpy_f32 {b} n={n}"))?;
+                let mut got = residual.clone();
+                let mut want = residual.clone();
+                (k.axpy_f16)(a, &w16, &mut got);
+                (scalar.axpy_f16)(a, &w16, &mut want);
+                ensure(got == want, &format!("axpy_f16 {b} n={n}"))?;
+                let mut got = residual.clone();
+                let mut want = residual.clone();
+                (k.axpy_i8)(a, &w8, &mut got);
+                (scalar.axpy_i8)(a, &w8, &mut want);
+                ensure(got == want, &format!("axpy_i8 {b} n={n}"))?;
+                for c0 in [0usize, 1, 5, 8, 31, 33] {
+                    if c0 >= n {
+                        continue;
+                    }
+                    let len = n - c0;
+                    let mut got = residual[..len].to_vec();
+                    let mut want = residual[..len].to_vec();
+                    (k.axpy_q4)(a, &p4, &s4, c0, &mut got);
+                    (scalar.axpy_q4)(a, &p4, &s4, c0, &mut want);
+                    ensure(got == want, &format!("axpy_q4 {b} n={n} c0={c0}"))?;
+                    let mut got = residual[..len].to_vec();
+                    let mut want = residual[..len].to_vec();
+                    (k.axpy_q4_1)(a, &p41, &s41, &m41, c0, &mut got);
+                    (scalar.axpy_q4_1)(a, &p41, &s41, &m41, c0, &mut want);
+                    ensure(got == want, &format!("axpy_q4_1 {b} n={n} c0={c0}"))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn forced_backend_select_contract() {
+    // scalar can always be forced; the auto pick is always installable
+    assert_eq!(
+        simd::select(Some(SimdBackend::Scalar)).unwrap(),
+        SimdBackend::Scalar
+    );
+    assert_eq!(simd::active(), SimdBackend::Scalar);
+    // NEON and AVX2 are mutually exclusive per arch: at least one of the
+    // two must refuse to install on any host, without disturbing the
+    // active selection
+    let unavailable: Vec<SimdBackend> = [SimdBackend::Neon, SimdBackend::Avx2]
+        .into_iter()
+        .filter(|&b| !simd::available(b))
+        .collect();
+    assert!(!unavailable.is_empty(), "no host runs both NEON and AVX2");
+    for b in unavailable {
+        let err = simd::select(Some(b)).unwrap_err().to_string();
+        assert!(err.contains("not available"), "got: {err}");
+        assert_eq!(simd::active(), SimdBackend::Scalar, "failed select must not install");
+    }
+    // restore auto so test execution order never leaks a forced backend
+    let auto = simd::select(None).unwrap();
+    assert_eq!(auto, simd::detect());
+    assert!(simd::kernels_for(auto).is_some());
+}
