@@ -33,6 +33,18 @@
 //! release smoke: `-- --smoke --state-cache-mb 64`.  Gated on the flag
 //! so the other CI smoke invocations stay distinct.
 //!
+//! Part 8 — open-loop serving (runs only with `--arrival-rate λ`):
+//! requests arrive on a DETERMINISTIC seeded Poisson process (exponential
+//! inter-arrivals, `--seed` pins the stream) instead of the closed-loop
+//! sweeps' submit-all-then-drain shape, so queueing delay is real: late
+//! arrivals wait behind a loaded system exactly as they would in
+//! production.  Reports aggregate tok/s AND tail latency — p50/p99 TTFT,
+//! ITL, queue wait and total — read from the coordinator's lock-free
+//! histograms (server-side, so slow client draining cannot skew them).
+//! Also exercises the round-trace ring: the run writes `--trace-out`
+//! (default: a temp file) as JSONL and asserts every line parses back.
+//! This is the standing workload ROADMAP items 3–5 are measured on.
+//!
 //! Run: `cargo bench --bench serving_throughput` (artifacts required;
 //! falls back to a synthetic checkpoint when they are missing so the
 //! bench is always runnable).  `-- --smoke` runs a seconds-long variant
@@ -44,7 +56,9 @@
 //! both prefetch settings); `-- --state-cache-mb N` enables part 5 with
 //! an N-MiB cache budget (omitted, part 5 is skipped); `-- --overload`
 //! enables part 6 (bounded-admission shedding); `-- --quantized` enables
-//! part 7 (f16 vs Q4 bytes-per-round, asserting the <= 0.55x contract).
+//! part 7 (f16 vs Q4 bytes-per-round, asserting the <= 0.55x contract);
+//! `-- --arrival-rate λ` enables part 8 (open-loop, λ requests/sec;
+//! `--seed` pins the arrival stream, `--trace-out` names the JSONL).
 
 use std::path::{Path, PathBuf};
 
@@ -70,6 +84,25 @@ fn flag_value(args: &[String], flag: &str) -> Option<String> {
             .map(str::to_string)
             .or_else(|| (a == flag).then(|| args.get(i + 1).cloned().unwrap_or_default()))
     })
+}
+
+/// Histogram `(count, sum_secs)` point — the sweeps bracket their timed
+/// windows with two points and report the delta's mean, so warm-up
+/// rounds never pollute the phase means.
+fn hist_point(m: &rwkv_lite::metrics::Registry, name: &str) -> (u64, f64) {
+    m.hist_snapshot(name).map(|s| (s.count, s.sum_secs)).unwrap_or((0, 0.0))
+}
+
+/// Mean milliseconds of the samples added to `name` since `base` (a
+/// [`hist_point`] captured before the timed window).
+fn hist_window_mean_ms(m: &rwkv_lite::metrics::Registry, name: &str, base: (u64, f64)) -> f64 {
+    let (c0, s0) = base;
+    let (c, s) = hist_point(m, name);
+    if c > c0 {
+        (s - s0) / (c - c0) as f64 * 1e3
+    } else {
+        0.0
+    }
 }
 
 /// `--simd auto|scalar|neon|avx2` parsed once in `main`; every sweep's
@@ -158,6 +191,20 @@ fn main() {
     // its own f16 + q4 checkpoints, so it ignores the shared model
     if args.iter().any(|a| a == "--quantized") {
         quantized_smoke(smoke, threads, strategy);
+    }
+    // `--arrival-rate λ`: part 8, open-loop serving under a seeded
+    // Poisson arrival process — tok/s plus p50/p99 TTFT/ITL tails
+    if let Some(rate) = flag_value(&args, "--arrival-rate") {
+        let rate: f64 = rate
+            .parse()
+            .ok()
+            .filter(|r: &f64| r.is_finite() && *r > 0.0)
+            .unwrap_or_else(|| panic!("--arrival-rate needs a positive req/s number, got '{rate}'"));
+        let seed: u64 = flag_value(&args, "--seed")
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--seed needs a number, got '{v}'")))
+            .unwrap_or(42);
+        let trace_out = flag_value(&args, "--trace-out").map(PathBuf::from);
+        open_loop_sweep(&model, &artifacts, smoke, threads, strategy, rate, seed, trace_out);
     }
 
     if let Some(dir) = synth_guard {
@@ -338,31 +385,27 @@ fn thread_sweep(
                 engine.step_round(&mut sessions).expect("prefill round");
             }
             // phase means must cover ONLY the timed decode rounds below,
-            // not the prefill warm-up rounds already observed above
-            let skip = engine.metrics.timings("round_secs").len();
+            // not the prefill warm-up rounds already observed above —
+            // histogram (count, sum) deltas around the window give exact
+            // window means without unbounded sample vectors
+            let names = ["round_wkv_secs", "round_matmul_secs", "round_head_secs", "round_secs"];
+            let base: Vec<(u64, f64)> =
+                names.iter().map(|n| hist_point(&engine.metrics, n)).collect();
             let wall = Stopwatch::start();
             for _ in 0..steps {
                 engine.step_round(&mut sessions).expect("decode round");
             }
             let secs = wall.elapsed_secs();
-            let ms = |name: &str| {
-                let t = engine.metrics.timings(name);
-                let t = &t[skip.min(t.len())..];
-                if t.is_empty() {
-                    0.0
-                } else {
-                    t.iter().sum::<f64>() / t.len() as f64 * 1e3
-                }
-            };
+            let ms = |i: usize| hist_window_mean_ms(&engine.metrics, names[i], base[i]);
             println!(
                 "{:>8} {:>6} {:>12.1} {:>12.3} {:>12.3} {:>12.3} {:>12.3}",
                 threads,
                 batch,
                 (steps * batch) as f64 / secs,
-                ms("round_wkv_secs"),
-                ms("round_matmul_secs"),
-                ms("round_head_secs"),
-                ms("round_secs"),
+                ms(0),
+                ms(1),
+                ms(2),
+                ms(3),
             );
         }
     }
@@ -411,30 +454,26 @@ fn layerwise_sweep(model: &str, artifacts: &Path, smoke: bool, pinned: Option<us
             {
                 engine.step_round(&mut sessions).expect("prefill round");
             }
-            let skip = engine.metrics.timings("round_secs").len();
+            // window means via histogram (count, sum) deltas — the timed
+            // decode rounds only, excluding the prefill warm-up above
+            let names = ["round_secs", "round_block_load_secs", "round_prefetch_wait_secs"];
+            let base: Vec<(u64, f64)> =
+                names.iter().map(|n| hist_point(&engine.metrics, n)).collect();
             let blocks0 = engine.metrics.counter("blocks_prefetched");
             let wall = Stopwatch::start();
             for _ in 0..steps {
                 engine.step_round(&mut sessions).expect("decode round");
             }
             let secs = wall.elapsed_secs();
-            let ms = |name: &str| {
-                let t = engine.metrics.timings(name);
-                let t = &t[skip.min(t.len())..];
-                if t.is_empty() {
-                    0.0
-                } else {
-                    t.iter().sum::<f64>() / t.len() as f64 * 1e3
-                }
-            };
+            let ms = |i: usize| hist_window_mean_ms(&engine.metrics, names[i], base[i]);
             println!(
                 "{:>8} {:>9} {:>12.1} {:>12.3} {:>12.3} {:>12.3} {:>8}",
                 threads,
                 if prefetch { "on" } else { "off" },
                 (steps * batch) as f64 / secs,
-                ms("round_secs"),
-                ms("round_block_load_secs"),
-                ms("round_prefetch_wait_secs"),
+                ms(0),
+                ms(1),
+                ms(2),
                 engine.metrics.counter("blocks_prefetched") - blocks0,
             );
         }
@@ -705,4 +744,138 @@ fn overload_smoke(
         "\nsheds are immediate (no queue wait) and the admitted set completes: \
          admitted={admitted} rejected={rejected}"
     );
+}
+
+/// Part 8 — open-loop serving (CI runs `--smoke --arrival-rate 20`):
+/// requests arrive on a seeded Poisson process, so queueing is real and
+/// the tails mean something.  Latency quantiles are read from the
+/// coordinator's histograms — recorded server-side at round boundaries —
+/// and the round-trace ring is exported + parse-checked.
+#[allow(clippy::too_many_arguments)]
+fn open_loop_sweep(
+    model: &str,
+    artifacts: &Path,
+    smoke: bool,
+    threads: usize,
+    strategy: LoadStrategy,
+    rate: f64,
+    seed: u64,
+    trace_out: Option<PathBuf>,
+) {
+    let (n_req, max_tokens): (usize, usize) = if smoke { (12, 4) } else { (64, 16) };
+    let trace_path = trace_out.unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("rwkv-openloop-trace-{}.jsonl", std::process::id()))
+    });
+    println!(
+        "\nopen-loop serving: {n_req} requests at {rate} req/s (seed {seed}, \
+         {max_tokens} tok/request, {threads} threads, {} loading)\n",
+        strategy.name()
+    );
+    let mut cfg = EngineConfig::all_techniques(model, artifacts.to_path_buf());
+    cfg.simd = simd_mode();
+    cfg.threads = threads;
+    cfg.strategy = strategy;
+    let mut coordinator = Coordinator::spawn_cfg(
+        move || RwkvEngine::load(cfg),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 8, window_ms: 2 },
+            trace_out: Some(trace_path.clone()),
+            ..CoordinatorConfig::default()
+        },
+    );
+    // warm up: arrivals must land on a loaded engine or the first
+    // inter-arrival gaps all hide behind checkpoint I/O
+    coordinator
+        .generate_blocking(Request {
+            id: 10_000,
+            prompt: vec![2, 9],
+            max_tokens: 1,
+            ..Request::default()
+        })
+        .expect("warm-up request");
+    // the warm-up's own TTFT sample must not count against the run
+    let ttft_base = hist_point(&coordinator.metrics, "ttft_secs").0;
+    // deterministic exponential inter-arrivals: same seed, same schedule
+    let mut rng = rwkv_lite::util::XorShift::new(seed);
+    let wall = Stopwatch::start();
+    let mut rxs = Vec::with_capacity(n_req);
+    let mut next_at = 0.0f64;
+    for i in 0..n_req as u64 {
+        let u = rng.next_f64();
+        next_at += -(1.0 - u).ln() / rate;
+        let pause = next_at - wall.elapsed_secs();
+        if pause > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(pause));
+        }
+        rxs.push(coordinator.submit(Request {
+            id: i,
+            prompt: vec![2, 50 + i as u32 % 32],
+            max_tokens,
+            temperature: 0.8,
+            top_p: 0.95,
+            ..Request::default()
+        }));
+    }
+    let (mut completed, mut total_tokens) = (0usize, 0usize);
+    for rx in rxs {
+        for ev in rx {
+            match ev {
+                Event::Done { tokens, .. } => {
+                    completed += 1;
+                    total_tokens += tokens;
+                    break;
+                }
+                Event::Rejected { .. } => break,
+                Event::Error { message } => panic!("{message}"),
+                Event::Token { .. } => {}
+            }
+        }
+    }
+    let secs = wall.elapsed_secs();
+    println!(
+        "completed {completed}/{n_req}, {total_tokens} tokens in {secs:.2}s -> {:.1} agg tok/s\n",
+        total_tokens as f64 / secs
+    );
+    println!(
+        "{:>16} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "latency", "count", "p50 ms", "p90 ms", "p99 ms", "max ms"
+    );
+    for (label, name) in [
+        ("ttft", "ttft_secs"),
+        ("itl", "itl_secs"),
+        ("queue wait", "queue_wait_secs"),
+        ("total", "request_total_secs"),
+    ] {
+        let s = coordinator.metrics.hist_snapshot(name).expect("histogram exists");
+        println!(
+            "{:>16} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+            label,
+            s.count,
+            s.quantile(50.0) * 1e3,
+            s.quantile(90.0) * 1e3,
+            s.quantile(99.0) * 1e3,
+            s.max_secs * 1e3,
+        );
+    }
+    assert!(completed > 0, "an open-loop run must complete requests");
+    let ttft = coordinator.metrics.hist_snapshot("ttft_secs").expect("ttft histogram");
+    assert_eq!(
+        (ttft.count - ttft_base) as usize,
+        completed,
+        "every completed request records one TTFT"
+    );
+    // shutdown flushes the round-trace ring to JSONL; every line must
+    // parse back (the CI trace contract)
+    coordinator.shutdown();
+    let text = std::fs::read_to_string(&trace_path).expect("trace JSONL written at shutdown");
+    let mut rounds = 0usize;
+    for line in text.lines() {
+        let v = rwkv_lite::json::parse(line)
+            .unwrap_or_else(|e| panic!("trace line does not parse: {e}\n{line}"));
+        assert!(v.f64_at(&["round"]).is_some(), "trace line missing round field");
+        rounds += 1;
+    }
+    assert!(rounds > 0, "the trace ring must have recorded rounds");
+    println!("\ntrace: {rounds} rounds exported to {} (all lines parse)", trace_path.display());
+    std::fs::remove_file(&trace_path).ok();
 }

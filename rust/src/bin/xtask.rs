@@ -11,6 +11,11 @@
 //!
 //! Both walk the committed source text, so they hold for cfg'd-out code
 //! (miri/loom paths) that a compiler-based lint would never see.
+//!
+//! `metrics-smoke` is the CI end-to-end scrape check: it boots a TCP
+//! server over a synthetic checkpoint with the scrape endpoints enabled,
+//! runs one completion, and validates `GET /metrics` + `GET /stats`
+//! really serve parseable telemetry on the live port.
 
 #![deny(unsafe_op_in_unsafe_fn)]
 #![deny(clippy::undocumented_unsafe_blocks)]
@@ -29,8 +34,103 @@ fn main() -> Result<()> {
     match task.as_str() {
         "lint-unchecked" => lint_unchecked(&src.join("tensor")),
         "lint-safety" => lint_safety(&src),
-        _ => bail!("usage: xtask <lint-unchecked|lint-safety>"),
+        "metrics-smoke" => metrics_smoke(),
+        _ => bail!("usage: xtask <lint-unchecked|lint-safety|metrics-smoke>"),
     }
+}
+
+/// Boot a synthetic-model server with the scrape endpoints on, run one
+/// completion, and check `/metrics` and `/stats` serve real telemetry.
+fn metrics_smoke() -> Result<()> {
+    use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator, CoordinatorConfig};
+    use rwkv_lite::server::{http_get, Client, ServeOptions, Server};
+    use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
+
+    let dir = std::env::temp_dir().join(format!("rwkv-metrics-smoke-{}", std::process::id()));
+    let spec = SynthSpec::tiny();
+    write_synth_rwkv(&dir, "m", &spec).context("write synth model")?;
+    let mut cfg = rwkv_lite::config::EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = spec.predictors;
+    cfg.hier_head = spec.hier_head;
+    let coordinator = Coordinator::spawn_cfg(
+        move || rwkv_lite::engine::RwkvEngine::load(cfg),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 4, window_ms: 1 },
+            ..CoordinatorConfig::default()
+        },
+    );
+    let mut words: Vec<String> =
+        ["<pad>", "<unk>", "<bos>", "<eos>"].iter().map(|s| s.to_string()).collect();
+    for i in 4..96 {
+        words.push(format!("w{i}"));
+    }
+    let server =
+        std::sync::Arc::new(Server::new(coordinator, rwkv_lite::text::Vocab::from_words(words)));
+    let addr = "127.0.0.1:17391";
+    let s2 = std::sync::Arc::clone(&server);
+    let serve_thread = std::thread::spawn(move || {
+        s2.serve(
+            addr,
+            ServeOptions {
+                max_total_conns: Some(3),
+                metrics_endpoint: true,
+                ..ServeOptions::default()
+            },
+        )
+    });
+    std::thread::sleep(std::time::Duration::from_millis(150));
+
+    let mut client = Client::connect(addr).context("connect")?;
+    let done = client.complete("w5 w6", 4, 0.0).context("completion")?;
+    if done.tokens == 0 {
+        bail!("smoke completion produced no tokens");
+    }
+    drop(client);
+
+    let (status, body) = http_get(addr, "/metrics").context("scrape /metrics")?;
+    if status != 200 {
+        bail!("/metrics returned {status}");
+    }
+    for needle in [
+        "# TYPE rwkv_ttft_seconds histogram",
+        "rwkv_requests_completed 1",
+        "rwkv_request_total_seconds_count 1",
+    ] {
+        if !body.contains(needle) {
+            bail!("/metrics is missing '{needle}':\n{body}");
+        }
+    }
+    let rounds = body
+        .lines()
+        .find_map(|l| l.strip_prefix("rwkv_rounds "))
+        .and_then(|v| v.parse::<u64>().ok())
+        .context("/metrics carries the rounds counter")?;
+    if rounds == 0 {
+        bail!("rounds counter stayed zero after a completion");
+    }
+
+    let (status, body) = http_get(addr, "/stats").context("scrape /stats")?;
+    if status != 200 {
+        bail!("/stats returned {status}");
+    }
+    let v = rwkv_lite::json::parse(body.trim()).context("/stats body parses as JSON")?;
+    if v.f64_at(&["counters", "requests_completed"]) != Some(1.0) {
+        bail!("/stats counters disagree with the completion:\n{body}");
+    }
+    if v.f64_at(&["histograms", "ttft_secs", "p99_secs"]).unwrap_or(0.0) <= 0.0 {
+        bail!("/stats TTFT summary is empty:\n{body}");
+    }
+
+    // the third allowed connection: an unknown path must 404, not hang
+    let (status, _) = http_get(addr, "/nope").context("scrape unknown path")?;
+    if status != 404 {
+        bail!("unknown path returned {status}, want 404");
+    }
+
+    serve_thread.join().expect("serve thread").context("serve")?;
+    std::fs::remove_dir_all(&dir).ok();
+    println!("metrics-smoke: /metrics + /stats live, rounds={rounds}");
+    Ok(())
 }
 
 fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {

@@ -164,6 +164,14 @@ pub struct EngineConfig {
     /// in-flight sessions for up to this long before cancelling the rest
     /// and saving the statefile.
     pub drain_ms: u64,
+    /// Serve `GET /metrics` (Prometheus text exposition) and `GET /stats`
+    /// (JSON summary) on the serving port (`--metrics`).  On by default
+    /// for the serve path; scrapes read shared atomics/short locks, never
+    /// the engine, so the round loop is unaffected.
+    pub metrics_endpoint: bool,
+    /// Export the coordinator's per-round trace ring as JSONL to this
+    /// path at shutdown (`--trace-out`; `None` = no tracing).
+    pub trace_out: Option<PathBuf>,
     pub seed: u64,
 }
 
@@ -190,6 +198,8 @@ impl Default for EngineConfig {
             max_prompt_tokens: 0,
             deadline_ms: 0,
             drain_ms: 5000,
+            metrics_endpoint: true,
+            trace_out: None,
             seed: 0,
         }
     }
@@ -254,6 +264,17 @@ impl EngineConfig {
             ("max_prompt_tokens", json::num(self.max_prompt_tokens as f64)),
             ("deadline_ms", json::num(self.deadline_ms as f64)),
             ("drain_ms", json::num(self.drain_ms as f64)),
+            ("metrics_endpoint", Value::Bool(self.metrics_endpoint)),
+            (
+                "trace_out",
+                json::s(
+                    &self
+                        .trace_out
+                        .as_ref()
+                        .map(|p| p.display().to_string())
+                        .unwrap_or_default(),
+                ),
+            ),
             ("seed", json::num(self.seed as f64)),
         ])
     }
@@ -294,6 +315,11 @@ impl EngineConfig {
         c.max_prompt_tokens = v.f64_at(&["max_prompt_tokens"]).unwrap_or(0.0) as usize;
         c.deadline_ms = v.f64_at(&["deadline_ms"]).unwrap_or(0.0) as u64;
         c.drain_ms = v.f64_at(&["drain_ms"]).unwrap_or(5000.0) as u64;
+        c.metrics_endpoint = b("metrics_endpoint", true);
+        c.trace_out = v
+            .str_at(&["trace_out"])
+            .filter(|s| !s.is_empty())
+            .map(PathBuf::from);
         c.seed = v.f64_at(&["seed"]).unwrap_or(0.0) as u64;
         Ok(c)
     }
@@ -317,6 +343,8 @@ mod tests {
         c.deadline_ms = 1500;
         c.drain_ms = 250;
         c.simd = SimdMode::Scalar;
+        c.metrics_endpoint = false;
+        c.trace_out = Some(PathBuf::from("trace.jsonl"));
         let v = c.to_json();
         let c2 = EngineConfig::from_json(&v).unwrap();
         assert_eq!(c2.model, c.model);
@@ -332,6 +360,20 @@ mod tests {
         assert_eq!(c2.deadline_ms, 1500);
         assert_eq!(c2.drain_ms, 250);
         assert_eq!(c2.simd, SimdMode::Scalar);
+        assert!(!c2.metrics_endpoint, "metrics_endpoint=false must survive the round trip");
+        assert_eq!(c2.trace_out, Some(PathBuf::from("trace.jsonl")));
+    }
+
+    #[test]
+    fn observability_defaults() {
+        let c = EngineConfig::default();
+        assert!(c.metrics_endpoint, "/metrics is on by default for the serve path");
+        assert!(c.trace_out.is_none());
+        // absent keys (older config JSON) keep the defaults; an empty
+        // trace_out string means "none"
+        let c = EngineConfig::from_json(&json::obj(vec![])).unwrap();
+        assert!(c.metrics_endpoint);
+        assert!(c.trace_out.is_none());
     }
 
     #[test]

@@ -40,19 +40,34 @@
 //! that drops its handle mid-stream is detected via `Event` send failure
 //! and retired the same way ([`FinishReason::Cancelled`]).
 //!
-//! Per-round telemetry in the coordinator registry: `rounds`,
-//! `round_seconds`, `round_weight_bytes`, `prefill_tokens`,
-//! `decode_tokens`, `requests_admitted` / `requests_completed` /
-//! `requests_cancelled` / `requests_rejected` /
-//! `requests_deadline_exceeded`, `tokens_out`, the `queue_depth` gauge
-//! and `queue_wait_secs` timings.  Accounting invariant (asserted by
-//! `tests/overload.rs` and `tests/faults.rs`): every submission is
-//! rejected or admitted, and every admitted request terminates exactly
-//! once — `requests_admitted == requests_completed + requests_cancelled
-//! + requests_deadline_exceeded`.  With a prefix-state cache
+//! Telemetry: the coordinator registry is THE registry — the loop hands
+//! it to the engine ([`RwkvEngine::adopt_metrics`]) so one scrape covers
+//! both sides.  Counters/gauges: `rounds`, `round_weight_bytes`,
+//! `prefill_tokens`, `decode_tokens`, `requests_admitted` /
+//! `requests_completed` / `requests_cancelled` / `requests_rejected` /
+//! `requests_deadline_exceeded`, `finish_reason_*`, `tokens_out`, the
+//! `queue_depth` gauge, plus the engine's own series (`simd_backend_id`,
+//! `session_rounds`, `blocks_prefetched`, ...).  Latency histograms
+//! ([`crate::metrics::hist`], bounded, lock-free): `queue_wait_secs`,
+//! `ttft_secs` (split `ttft_warm_secs`/`ttft_cold_secs` by prefix-cache
+//! hit), `itl_secs` (inter-token latency), `request_total_secs`,
+//! `coord_round_secs` and the engine's `round_*_secs` phase splits.  Spans
+//! are recorded at round boundaries only — the hot path never allocates
+//! for telemetry.  Accounting invariant (asserted by `tests/overload.rs`
+//! and `tests/faults.rs`): every submission is rejected or admitted, and
+//! every admitted request terminates exactly once — `requests_admitted
+//! == requests_completed + requests_cancelled +
+//! requests_deadline_exceeded`.  With a prefix-state cache
 //! ([`Coordinator::spawn_with_cache`]): `cache_hits` / `cache_misses` /
 //! `cache_hit_tokens` / `cache_insertions` / `cache_evictions` plus the
 //! `cache_bytes` residency gauge.
+//!
+//! Round traces: with [`CoordinatorConfig::trace_capacity`] or
+//! `trace_out` set, every scheduling round appends one structured
+//! [`RoundTrace`] to a bounded ring ([`crate::metrics::trace`]) — batch
+//! composition, the prefill-chunk the degradation policy chose, phase
+//! timings, shed/deadline events, prefetch waits — exported as JSONL at
+//! shutdown when `trace_out` names a path.
 //!
 //! Topology: N client threads -> mpsc -> coordinator thread (owns the
 //! engine) -> per-request streaming channels.  Intra-round compute
@@ -76,6 +91,7 @@ use crate::engine::sampler::Sampler;
 use crate::engine::session::Session;
 use crate::engine::state_cache::StateCache;
 use crate::engine::RwkvEngine;
+use crate::metrics::trace::{RoundTrace, TraceRing};
 use crate::metrics::Registry;
 use crate::sync::atomic::{AtomicBool, Ordering};
 use crate::sync::mpsc::{channel, Receiver, Sender};
@@ -162,7 +178,18 @@ impl RejectReason {
 #[derive(Clone, Debug)]
 pub enum Event {
     Token { token: u32 },
-    Done { tokens: usize, seconds: f64, reason: FinishReason, cached_tokens: usize },
+    /// Terminal per-request summary: token count, service seconds
+    /// (admission -> retirement), finish reason, prompt tokens served
+    /// from the prefix-state cache, queue wait seconds, and time to
+    /// first token (`None` when the request retired before emitting).
+    Done {
+        tokens: usize,
+        seconds: f64,
+        reason: FinishReason,
+        cached_tokens: usize,
+        queue_secs: f64,
+        ttft_secs: Option<f64>,
+    },
     Error { message: String },
     /// Shed at admission (load, prompt limit, or shutdown) — terminal;
     /// no session existed, so no `Done` follows.  `retry_after_ms` is a
@@ -284,6 +311,11 @@ pub struct CoordinatorConfig {
     /// deterministic engine-round errors and artificially slow rounds.
     /// Production callers leave this `None`.
     pub faults: Option<FaultPlan>,
+    /// Round-trace ring capacity (`0` = no ring, unless `trace_out`
+    /// forces one at [`crate::metrics::trace::DEFAULT_CAPACITY`]).
+    pub trace_capacity: usize,
+    /// Write the trace ring as JSONL to this path at shutdown.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -294,6 +326,8 @@ impl Default for CoordinatorConfig {
             cache: None,
             state_file: None,
             faults: None,
+            trace_capacity: 0,
+            trace_out: None,
         }
     }
 }
@@ -302,6 +336,9 @@ pub struct Coordinator {
     tx: Sender<Submission>,
     handle: Option<JoinHandle<()>>,
     pub metrics: Arc<Registry>,
+    /// Bounded per-round flight recorder (`None` unless tracing was
+    /// requested via [`CoordinatorConfig`]).
+    pub trace: Option<Arc<TraceRing>>,
     admission: AdmissionPolicy,
     gate: Arc<Gate>,
 }
@@ -351,10 +388,19 @@ impl Coordinator {
         let gate = Arc::new(Gate::new());
         let g2 = Arc::clone(&gate);
         let admission = cfg.admission;
+        let trace = (cfg.trace_capacity > 0 || cfg.trace_out.is_some()).then(|| {
+            let cap = if cfg.trace_capacity > 0 {
+                cfg.trace_capacity
+            } else {
+                crate::metrics::trace::DEFAULT_CAPACITY
+            };
+            Arc::new(TraceRing::new(cap))
+        });
+        let t2 = trace.clone();
         let handle = std::thread::Builder::new()
             .name("rwkv-coordinator".into())
             .spawn(move || match factory() {
-                Ok(mut engine) => run_loop(&mut engine, rx, cfg, &m2, &g2),
+                Ok(mut engine) => run_loop(&mut engine, rx, cfg, &m2, &g2, t2),
                 Err(e) => {
                     // refuse all submissions with the load error
                     let msg = format!("engine load failed: {e:#}");
@@ -364,7 +410,7 @@ impl Coordinator {
                 }
             })
             .expect("spawn coordinator");
-        Self { tx, handle: Some(handle), metrics, admission, gate }
+        Self { tx, handle: Some(handle), metrics, trace, admission, gate }
     }
 
     /// Submit a request; returns a cancellable handle over the stream.
@@ -486,6 +532,14 @@ struct Conn {
     cached_tokens: usize,
     /// Absolute request deadline (checked at round boundaries).
     deadline: Option<Instant>,
+    /// Queue wait measured at admission (span telemetry + `Done`).
+    queue_secs: f64,
+    /// Time to first token, set once at the first emission (`None` =
+    /// nothing emitted yet).
+    ttft_secs: Option<f64>,
+    /// Service-clock time of the most recent emission — the per-token
+    /// ITL is the delta between consecutive emissions.
+    last_token_secs: f64,
 }
 
 /// Fingerprint for the prefix-state cache's statefile: model name plus
@@ -539,10 +593,15 @@ fn run_loop(
     engine: &mut RwkvEngine,
     rx: Receiver<Submission>,
     cfg: CoordinatorConfig,
-    metrics: &Registry,
+    metrics: &Arc<Registry>,
     gate: &Gate,
+    trace: Option<Arc<TraceRing>>,
 ) {
-    let CoordinatorConfig { policy, admission, mut cache, state_file, faults } = cfg;
+    let CoordinatorConfig { policy, admission, mut cache, state_file, faults, trace_out, .. } = cfg;
+    // one registry for both sides: engine-side series (simd_backend_id,
+    // round_*_secs phase splits, prefetch counters) land where the
+    // server's /metrics scrape can see them
+    engine.adopt_metrics(Arc::clone(metrics));
     // warm the cache from a previous run's snapshots — fingerprint- and
     // shape-filtered, so a state file written by a different model (even a
     // same-shape fine-tune) cannot plant stale snapshots on live prefixes
@@ -569,11 +628,15 @@ fn run_loop(
     let mut conns: Vec<Conn> = Vec::new();
     let mut round_index: u64 = 0;
     let mut drain_deadline: Option<Instant> = None;
+    // loop-relative clock for trace timestamps
+    let loop_clock = crate::util::Stopwatch::start();
     loop {
         let draining = gate.is_draining();
         if draining && drain_deadline.is_none() {
             drain_deadline = Some(Instant::now() + Duration::from_millis(admission.drain_ms));
         }
+        // submissions shed at THIS round boundary (drain races) — trace
+        let mut shed_now = 0usize;
         // admit new work (bounded idle wait so drain flags stay observable)
         match batcher.admit(&rx, sessions.len(), max_live, IDLE_TICK) {
             batcher::Admit::Closed if sessions.is_empty() => break,
@@ -581,11 +644,13 @@ fn run_loop(
                 for s in subs {
                     gate.release();
                     metrics.set("queue_depth", gate.depth() as u64);
-                    metrics.observe("queue_wait_secs", s.queued.elapsed_secs());
+                    let queue_secs = s.queued.elapsed_secs();
+                    metrics.observe("queue_wait_secs", queue_secs);
                     if draining {
                         // raced the shutdown flag into the queue: shed,
                         // never started
                         metrics.inc("requests_rejected", 1);
+                        shed_now += 1;
                         let _ = s.tx.send(Event::Rejected {
                             reason: RejectReason::ShuttingDown,
                             retry_after_ms: 0,
@@ -598,11 +663,15 @@ fn run_loop(
                         // any engine work (still a terminal Done, so the
                         // accounting invariant holds)
                         metrics.inc("requests_deadline_exceeded", 1);
+                        metrics.inc("finish_reason_deadline", 1);
+                        metrics.observe("request_total_secs", queue_secs);
                         let _ = s.tx.send(Event::Done {
                             tokens: 0,
-                            seconds: s.queued.elapsed_secs(),
+                            seconds: queue_secs,
                             reason: FinishReason::DeadlineExceeded,
                             cached_tokens: 0,
+                            queue_secs,
+                            ttft_secs: None,
                         });
                         continue;
                     }
@@ -634,6 +703,9 @@ fn run_loop(
                         started: crate::util::Stopwatch::start(),
                         cached_tokens,
                         deadline: s.deadline,
+                        queue_secs,
+                        ttft_secs: None,
+                        last_token_secs: 0.0,
                     });
                 }
                 if let Some(c) = cache.as_ref() {
@@ -701,16 +773,36 @@ fn run_loop(
                 // then terminates with a Cancelled Done so per-request
                 // accounting (admitted = completed + cancelled +
                 // deadline_exceeded) stays consistent
+                let cancelled_now = sessions.len();
                 for (sess, conn) in sessions.iter().zip(&conns) {
                     let _ = conn.tx.send(Event::Error { message: e.to_string() });
+                    let service_secs = conn.started.elapsed_secs();
+                    metrics.inc("requests_cancelled", 1);
+                    metrics.inc("finish_reason_cancelled", 1);
+                    metrics.inc("tokens_out", sess.tokens_produced() as u64);
+                    metrics.observe("request_total_secs", conn.queue_secs + service_secs);
                     let _ = conn.tx.send(Event::Done {
                         tokens: sess.tokens_produced(),
-                        seconds: conn.started.elapsed_secs(),
+                        seconds: service_secs,
                         reason: FinishReason::Cancelled,
                         cached_tokens: conn.cached_tokens,
+                        queue_secs: conn.queue_secs,
+                        ttft_secs: conn.ttft_secs,
                     });
-                    metrics.inc("requests_cancelled", 1);
-                    metrics.inc("tokens_out", sess.tokens_produced() as u64);
+                }
+                if let Some(ring) = trace.as_ref() {
+                    ring.push(RoundTrace {
+                        round: round_index,
+                        at_secs: loop_clock.elapsed_secs(),
+                        sessions: cancelled_now,
+                        chunk: engine.cfg.prefill_chunk,
+                        queue_depth: queued_now,
+                        round_secs: round.elapsed_secs(),
+                        cancelled: cancelled_now,
+                        shed: shed_now,
+                        round_error: true,
+                        ..RoundTrace::default()
+                    });
                 }
                 sessions.clear();
                 conns.clear();
@@ -721,21 +813,44 @@ fn run_loop(
         // EWMA round time feeds the submit-side retry_after_ms hint
         gate.note_round_nanos((round_secs * 1e9) as u64);
         metrics.inc("rounds", 1);
-        metrics.observe("round_seconds", round_secs);
+        // distinct from the engine's own `round_secs` (pure engine time):
+        // this one includes scheduling overhead and injected fault delay
+        metrics.observe("coord_round_secs", round_secs);
         metrics.inc("round_weight_bytes", report.round_weight_bytes);
         metrics.inc("prefill_tokens", report.prefill_tokens as u64);
         metrics.inc("decode_tokens", report.decode_tokens as u64);
         if let Some(c) = cache.as_ref() {
             sync_cache_metrics(c, metrics);
         }
+        let in_flight = sessions.len();
         for em in &report.emitted {
-            if conns[em.session].tx.send(Event::Token { token: em.token }).is_err() {
+            let conn = &mut conns[em.session];
+            // per-request span points, measured at the round boundary:
+            // first emission fixes TTFT (split by prefix-cache warmth so
+            // the state cache's win shows up as a latency delta), later
+            // emissions record the inter-token gap
+            let at = conn.started.elapsed_secs();
+            match conn.ttft_secs {
+                None => {
+                    conn.ttft_secs = Some(at);
+                    metrics.observe("ttft_secs", at);
+                    if conn.cached_tokens > 0 {
+                        metrics.observe("ttft_warm_secs", at);
+                    } else {
+                        metrics.observe("ttft_cold_secs", at);
+                    }
+                }
+                Some(_) => metrics.observe("itl_secs", at - conn.last_token_secs),
+            }
+            conn.last_token_secs = at;
+            if conn.tx.send(Event::Token { token: em.token }).is_err() {
                 // the client went away: stop paying weight passes for it
                 sessions[em.session].cancel();
             }
         }
         // retire finished sessions (round stops + cancellations +
         // deadline expiries)
+        let (mut completed_now, mut cancelled_now, mut deadline_now) = (0usize, 0usize, 0usize);
         for i in (0..sessions.len()).rev() {
             let reason = match sessions[i].finish_reason() {
                 Some(r) => r,
@@ -744,21 +859,72 @@ fn run_loop(
             let sess = sessions.remove(i);
             let conn = conns.remove(i);
             match reason {
-                FinishReason::Cancelled => metrics.inc("requests_cancelled", 1),
-                FinishReason::DeadlineExceeded => metrics.inc("requests_deadline_exceeded", 1),
-                _ => metrics.inc("requests_completed", 1),
+                FinishReason::Cancelled => {
+                    metrics.inc("requests_cancelled", 1);
+                    cancelled_now += 1;
+                }
+                FinishReason::DeadlineExceeded => {
+                    metrics.inc("requests_deadline_exceeded", 1);
+                    deadline_now += 1;
+                }
+                _ => {
+                    metrics.inc("requests_completed", 1);
+                    completed_now += 1;
+                }
             }
+            metrics.inc(&format!("finish_reason_{}", reason.name()), 1);
             metrics.inc("tokens_out", sess.tokens_produced() as u64);
+            let service_secs = conn.started.elapsed_secs();
+            metrics.observe("request_total_secs", conn.queue_secs + service_secs);
             let _ = conn.tx.send(Event::Done {
                 tokens: sess.tokens_produced(),
-                seconds: conn.started.elapsed_secs(),
+                seconds: service_secs,
                 reason,
                 cached_tokens: conn.cached_tokens,
+                queue_secs: conn.queue_secs,
+                ttft_secs: conn.ttft_secs,
+            });
+        }
+        if let Some(ring) = trace.as_ref() {
+            ring.push(RoundTrace {
+                round: round_index,
+                at_secs: loop_clock.elapsed_secs(),
+                sessions: in_flight,
+                prefill_tokens: report.prefill_tokens,
+                decode_tokens: report.decode_tokens,
+                chunk: engine.cfg.prefill_chunk,
+                queue_depth: queued_now,
+                round_secs,
+                weight_bytes: report.round_weight_bytes,
+                emitted: report.emitted.len(),
+                completed: completed_now,
+                cancelled: cancelled_now,
+                deadline_expired: deadline_now,
+                shed: shed_now,
+                wkv_secs: engine.last_stats.wkv_secs,
+                matmul_secs: engine.last_stats.matmul_secs,
+                head_secs: engine.last_stats.head_secs,
+                block_load_secs: engine.last_stats.block_load_secs,
+                prefetch_wait_secs: engine.last_stats.prefetch_wait_secs,
+                round_error: false,
             });
         }
     }
     // restore the configured chunk (the loop may exit mid-degradation)
     engine.cfg.prefill_chunk = base_chunk;
+    // export the flight recorder for offline timeline analysis
+    // (best-effort, like the statefile save below)
+    if let (Some(ring), Some(path)) = (trace.as_ref(), trace_out.as_ref()) {
+        match ring.write_jsonl(path) {
+            Ok(()) => eprintln!(
+                "[coordinator] wrote {} round traces to {} ({} dropped past capacity)",
+                ring.len(),
+                path.display(),
+                ring.dropped()
+            ),
+            Err(e) => eprintln!("[coordinator] trace export failed: {e:#}"),
+        }
+    }
     // persist the warm cache for the next process (best-effort: a failed
     // save only loses warmth, never correctness)
     if let (Some(c), Some(path)) = (cache.as_ref(), state_file.as_ref()) {

@@ -137,7 +137,7 @@ pub struct RwkvEngine {
     pub info: ModelInfo,
     pub cfg: EngineConfig,
     pub store: Arc<WeightStore>,
-    pub metrics: Registry,
+    pub metrics: Arc<Registry>,
     /// Intra-round compute pool (`None` == single-threaded).  Rounds are
     /// bit-identical for every pool size; the pool only changes which
     /// core computes which output range.
@@ -507,7 +507,7 @@ impl RwkvEngine {
         };
 
         let buf = Scratch::new(info.dim, info.ffn);
-        let metrics = Registry::new();
+        let metrics = Arc::new(Registry::new());
         metrics.set("simd_backend_id", simd_backend.as_u8() as u64);
         Ok(Self {
             info,
@@ -534,6 +534,16 @@ impl RwkvEngine {
             ffn_active_by_layer: vec![0; info.layers],
             ffn_count_by_layer: vec![0; info.layers],
         })
+    }
+
+    /// Re-home the engine's telemetry onto a shared registry (the serving
+    /// coordinator passes its own so one scrape covers engine-side series
+    /// — `simd_backend_id`, `round_*_secs`, prefetch counters — alongside
+    /// the request-lifecycle histograms).  Engine-set gauges are replayed
+    /// onto the adopted registry.
+    pub fn adopt_metrics(&mut self, shared: Arc<Registry>) {
+        shared.set("simd_backend_id", self.simd.as_u8() as u64);
+        self.metrics = shared;
     }
 
     /// Switch the sparsity-predictor mode for every layer (Figure 9).

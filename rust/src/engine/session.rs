@@ -394,7 +394,8 @@ impl RwkvEngine {
         }
 
         self.metrics.inc("session_rounds", 1);
-        self.metrics.inc("round_weight_bytes", report.round_weight_bytes);
+        // (round_weight_bytes is counted by the serving coordinator, which
+        // shares this registry — counting it here too would double it)
         self.metrics.inc("round_prefill_tokens", report.prefill_tokens as u64);
         self.metrics.inc("round_decode_tokens", report.decode_tokens as u64);
         self.metrics.observe("round_secs", round.elapsed_secs());

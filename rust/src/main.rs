@@ -64,6 +64,8 @@ const SPECS: &[cli::OptSpec] = &[
     opt_def("max-connections", "concurrent TCP connection cap (serve; 0 = unlimited)", "0"),
     opt_def("state-cache-mb", "prefix-state cache budget in MiB (serve; 0 = off)", "0"),
     opt("state-file", "persist the prefix-state cache across restarts (serve)"),
+    opt_def("metrics", "serve GET /metrics + /stats on the serving port: on|off", "on"),
+    opt("trace-out", "write the per-round trace ring as JSONL here at shutdown (serve)"),
     opt("task", "single task name (eval)"),
     opt("seed", "sampler seed"),
 ];
@@ -113,6 +115,12 @@ fn engine_config(a: &Args) -> Result<EngineConfig> {
     cfg.drain_ms = a.u64_or("drain-ms", 5000)?;
     cfg.state_cache_mb = a.usize_or("state-cache-mb", 0)?;
     cfg.state_file = a.get("state-file").map(PathBuf::from);
+    cfg.metrics_endpoint = match a.get_or("metrics", "on") {
+        "on" => true,
+        "off" => false,
+        other => bail!("--metrics takes on|off, got '{other}'"),
+    };
+    cfg.trace_out = a.get("trace-out").map(PathBuf::from);
     cfg.seed = a.u64_or("seed", 0)?;
     Ok(cfg)
 }
@@ -212,9 +220,18 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let cache = (cfg.state_cache_mb > 0)
         .then(|| StateCache::new(CacheConfig::with_mb(cfg.state_cache_mb)));
     let state_file = cfg.state_file.clone();
+    let trace_out = cfg.trace_out.clone();
+    let metrics_endpoint = cfg.metrics_endpoint;
     let coordinator = Coordinator::spawn_cfg(
         move || RwkvEngine::load_with_pool(cfg, pool),
-        CoordinatorConfig { policy, admission, cache, state_file, ..CoordinatorConfig::default() },
+        CoordinatorConfig {
+            policy,
+            admission,
+            cache,
+            state_file,
+            trace_out,
+            ..CoordinatorConfig::default()
+        },
     );
     let server = Arc::new(Server::new(coordinator, v));
     // graceful shutdown: signal -> static latch -> watcher thread flips
@@ -240,6 +257,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         max_total_conns: None,
         max_connections,
         shutdown: Some(Arc::clone(&stop_accepting)),
+        metrics_endpoint,
     };
     Arc::clone(&server).serve(a.get_or("addr", "127.0.0.1:7070"), opts)?;
     // serve returned with every connection thread joined; ensure the

@@ -1,0 +1,348 @@
+//! Lock-free log-bucketed latency histograms (HDR-style).
+//!
+//! [`Registry::observe`](super::Registry::observe) used to push every
+//! sample into an unbounded `Vec<f64>` — a memory leak on a long-running
+//! server and no quantiles without sorting.  A [`Histogram`] replaces
+//! that with a FIXED array of atomic bucket counters over a logarithmic
+//! value grid: recording is a handful of relaxed atomic increments (no
+//! lock, no allocation — safe on the round hot path), and p50/p90/p99/max
+//! read back from the bucket counts at scrape time.
+//!
+//! Bucket layout (values are integer nanoseconds): the first
+//! `2^SUB_BITS` buckets are exact (one value each); past that, each
+//! power-of-two octave is split into `2^SUB_BITS` equal sub-buckets, so
+//! every bucket's width is at most `2^-SUB_BITS` (~3.1%) of its value.
+//! Quantile estimates therefore sit within ONE bucket width of the exact
+//! sorted-sample answer (`tests/observability.rs` checks this against
+//! [`crate::util::percentile`]).  Values past the top octave saturate
+//! into the last bucket instead of indexing out of bounds.
+//!
+//! Merging two histograms is per-bucket addition, which makes it
+//! associative and commutative — shard-local histograms can be combined
+//! in any order.
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per power-of-two octave (as a bit count): 32 sub-buckets,
+/// so bucket width <= 1/32 (~3.1%) of the bucket's lower bound.
+const SUB_BITS: u32 = 5;
+const SUB: u64 = 1 << SUB_BITS;
+/// Octaves above the exact linear range: nanosecond values up to
+/// 2^63.. (~292 years) land in a real bucket; beyond saturates.
+const OCTAVES: usize = (64 - SUB_BITS) as usize;
+/// Total bucket count: the exact linear range plus every octave.
+pub const NUM_BUCKETS: usize = SUB as usize + OCTAVES * SUB as usize;
+
+/// Bucket index for a nanosecond value (total order, saturating at the
+/// top bucket).
+#[inline]
+fn bucket_index(nanos: u64) -> usize {
+    if nanos < SUB {
+        return nanos as usize;
+    }
+    let msb = 63 - nanos.leading_zeros();
+    let k = (msb - SUB_BITS) as u64;
+    let sub = (nanos >> k) - SUB;
+    ((SUB + k * SUB + sub) as usize).min(NUM_BUCKETS - 1)
+}
+
+/// Exclusive upper bound of bucket `i`, in nanoseconds (as f64: the top
+/// octaves exceed u64).
+fn bucket_upper_nanos(i: usize) -> f64 {
+    if i < SUB as usize {
+        return (i + 1) as f64;
+    }
+    let k = (i - SUB as usize) / SUB as usize;
+    let sub = ((i - SUB as usize) % SUB as usize) as u64;
+    // k <= OCTAVES - 1 = 58, so the shift is exact in u64 and f64
+    (SUB + sub + 1) as f64 * (1u64 << k) as f64
+}
+
+/// Width of bucket `i` in nanoseconds.
+fn bucket_width_nanos(i: usize) -> f64 {
+    if i < SUB as usize {
+        1.0
+    } else {
+        let k = (i - SUB as usize) / SUB as usize;
+        (1u64 << k) as f64
+    }
+}
+
+fn secs_to_nanos(seconds: f64) -> u64 {
+    if !seconds.is_finite() || seconds <= 0.0 {
+        return 0;
+    }
+    let n = seconds * 1e9;
+    if n >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        n as u64
+    }
+}
+
+/// `fetch_max` spelled as a CAS loop so the loom shim can model it.
+fn atomic_max(cell: &AtomicU64, value: u64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while value > cur {
+        match cell.compare_exchange_weak(cur, value, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Lock-free log-bucketed histogram of second-valued observations.
+/// Recording costs three relaxed atomic RMW ops and never allocates;
+/// the memory footprint is fixed (`NUM_BUCKETS` + 2 counters) however
+/// many samples arrive — the long-running-server fix for the old
+/// unbounded sample vectors.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    sum_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+}
+
+// manual (not derived) so the loom shim's `AtomicU64`, which has no
+// `Default`, still compiles
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_nanos: AtomicU64::new(0),
+            max_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in seconds (negative/NaN clamp to 0).
+    pub fn record(&self, seconds: f64) {
+        self.record_nanos(secs_to_nanos(seconds));
+    }
+
+    pub fn record_nanos(&self, nanos: u64) {
+        self.buckets[bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        atomic_max(&self.max_nanos, nanos);
+    }
+
+    /// Fold `other`'s counts into `self` (per-bucket addition, so merging
+    /// is associative and commutative across any shard order).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = src.load(Ordering::Relaxed);
+            if n > 0 {
+                dst.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.sum_nanos.fetch_add(other.sum_nanos.load(Ordering::Relaxed), Ordering::Relaxed);
+        atomic_max(&self.max_nanos, other.max_nanos.load(Ordering::Relaxed));
+    }
+
+    /// Consistent-enough point-in-time copy for quantiles and export
+    /// (bucket loads are relaxed; concurrent writers may land between
+    /// loads, which only skews a live scrape by in-flight samples).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = counts.iter().sum();
+        HistSnapshot {
+            counts,
+            count,
+            sum_secs: self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            max_secs: self.max_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    /// `[lower, upper)` bounds in seconds of the bucket `seconds` lands
+    /// in — the quantile error bound the tests assert against.
+    pub fn bucket_bounds_secs(seconds: f64) -> (f64, f64) {
+        let i = bucket_index(secs_to_nanos(seconds));
+        let hi = bucket_upper_nanos(i);
+        ((hi - bucket_width_nanos(i)) / 1e9, hi / 1e9)
+    }
+}
+
+/// Point-in-time bucket counts plus derived statistics.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Exact sum of all observations in seconds (summed as integer
+    /// nanoseconds, so the mean is not bucket-quantized).
+    pub sum_secs: f64,
+    /// Largest single observation in seconds (exact, not bucketized).
+    pub max_secs: f64,
+}
+
+impl HistSnapshot {
+    /// Mean in seconds (0 when empty).
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_secs / self.count as f64
+        }
+    }
+
+    /// Percentile estimate in seconds, `p` in [0, 100].  Uses the same
+    /// nearest-rank convention as [`crate::util::percentile`] and returns
+    /// the containing bucket's upper bound, so the estimate is within one
+    /// bucket width above the exact sorted-sample value.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * (self.count as f64 - 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return bucket_upper_nanos(i) / 1e9;
+            }
+        }
+        self.max_secs
+    }
+
+    /// Non-empty buckets as `(upper_bound_secs, cumulative_count)` in
+    /// increasing bound order — the Prometheus `_bucket{le=...}` series.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((bucket_upper_nanos(i) / 1e9, cum));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_is_monotonic_and_in_bounds() {
+        let mut prev = 0usize;
+        let mut v = 0u64;
+        while v < u64::MAX / 2 {
+            let i = bucket_index(v);
+            assert!(i < NUM_BUCKETS, "index {i} out of bounds for {v}");
+            assert!(i >= prev, "index must be monotonic in the value");
+            prev = i;
+            v = v.saturating_mul(2).saturating_add(1);
+        }
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1, "top value saturates");
+    }
+
+    #[test]
+    fn bounds_bracket_the_value() {
+        for &v in &[0u64, 1, 31, 32, 33, 100, 1_000, 999_999, 1 << 40, u64::MAX / 3] {
+            let i = bucket_index(v);
+            let hi = bucket_upper_nanos(i);
+            let lo = hi - bucket_width_nanos(i);
+            assert!((v as f64) < hi, "{v} must sit below its bucket's upper bound {hi}");
+            assert!((v as f64) >= lo - 0.5, "{v} must sit at/above its bucket's lower bound {lo}");
+        }
+    }
+
+    #[test]
+    fn relative_bucket_width_is_bounded() {
+        // past the exact range, width / lower-bound <= 2^-SUB_BITS
+        for &v in &[50u64, 1_000, 123_456, 10_000_000, 5_000_000_000] {
+            let i = bucket_index(v);
+            let w = bucket_width_nanos(i);
+            let lo = bucket_upper_nanos(i) - w;
+            assert!(
+                w / lo <= 1.0 / SUB as f64 + 1e-12,
+                "bucket at {v}: width {w} vs lower bound {lo}"
+            );
+        }
+    }
+
+    #[test]
+    fn record_and_quantiles() {
+        let h = Histogram::new();
+        for i in 1..=100u64 {
+            h.record(i as f64 * 1e-3); // 1ms..100ms
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert!((s.mean_secs() - 0.0505).abs() < 1e-9, "nanosecond sums stay exact");
+        let p50 = s.quantile(50.0);
+        assert!((0.049..0.053).contains(&p50), "p50 ~ 50ms, got {p50}");
+        let p99 = s.quantile(99.0);
+        assert!((0.098..0.104).contains(&p99), "p99 ~ 100ms, got {p99}");
+        assert!((s.max_secs - 0.1).abs() < 1e-9, "max is exact");
+    }
+
+    #[test]
+    fn top_bucket_saturates() {
+        let h = Histogram::new();
+        h.record(f64::MAX); // absurd value: clamps into the top bucket
+        h.record_nanos(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2, "saturating values still count");
+        assert!(s.quantile(100.0) > 1e9, "saturated samples report the top bucket");
+    }
+
+    #[test]
+    fn negative_and_nan_clamp_to_zero() {
+        let h = Histogram::new();
+        h.record(-1.0);
+        h.record(f64::NAN);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.quantile(100.0), bucket_upper_nanos(0) / 1e9);
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let mk = |seed: u64| {
+            let h = Histogram::new();
+            let mut rng = crate::util::XorShift::new(seed);
+            for _ in 0..500 {
+                h.record(rng.next_f64() * 0.25);
+            }
+            h
+        };
+        let (a, b, c) = (mk(1), mk(2), mk(3));
+        // left fold: (a + b) + c
+        let left = Histogram::new();
+        left.merge_from(&a);
+        left.merge_from(&b);
+        left.merge_from(&c);
+        // right fold: a + (b + c)
+        let bc = Histogram::new();
+        bc.merge_from(&b);
+        bc.merge_from(&c);
+        let right = Histogram::new();
+        right.merge_from(&a);
+        right.merge_from(&bc);
+        let (l, r) = (left.snapshot(), right.snapshot());
+        assert_eq!(l.counts, r.counts, "merge must be associative per bucket");
+        assert_eq!(l.count, r.count);
+        assert!((l.sum_secs - r.sum_secs).abs() < 1e-12);
+        assert_eq!(l.max_secs, r.max_secs);
+    }
+
+    #[test]
+    fn cumulative_buckets_end_at_count() {
+        let h = Histogram::new();
+        for i in 0..50u64 {
+            h.record(1e-4 * (1 + i % 7) as f64);
+        }
+        let s = h.snapshot();
+        let cum = s.cumulative_buckets();
+        assert!(!cum.is_empty());
+        assert!(cum.windows(2).all(|w| w[0].0 < w[1].0), "bounds strictly increase");
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1), "counts are cumulative");
+        assert_eq!(cum.last().unwrap().1, s.count);
+    }
+}

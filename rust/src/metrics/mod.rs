@@ -7,9 +7,15 @@
 //! hh / other), transient sparse loads included, and the peak of the
 //! running total is what `exp fig5/fig6/table7` report.
 
-use std::collections::BTreeMap;
+pub mod hist;
+pub mod trace;
 
-use crate::sync::Mutex;
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::json::{self, Value};
+use crate::sync::{Arc, Mutex};
+
+use hist::{HistSnapshot, Histogram};
 
 /// Component groups used by the Figure 6 breakdown.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -116,10 +122,19 @@ impl MemTracker {
     }
 }
 
-/// Simple named counters/timers for the serving stack.
+/// Named counters, gauges, and latency histograms for the serving stack.
+///
+/// Timings (`observe`) land in fixed-size [`Histogram`]s — a bounded
+/// footprint however long the server runs, with p50/p90/p99/max readable
+/// at any time — instead of the old per-name unbounded `Vec<f64>`.
+/// [`Registry::render_prometheus`] / [`Registry::stats_json`] are the
+/// scrape surfaces the server's `GET /metrics` / `GET /stats` endpoints
+/// expose.
 pub struct Registry {
     counters: Mutex<BTreeMap<String, u64>>,
-    timings: Mutex<BTreeMap<String, Vec<f64>>>,
+    /// Names written through `set()` — exported with gauge semantics.
+    gauges: Mutex<BTreeSet<String>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
 // manual for the same loom-compatibility reason as `MemTracker`
@@ -133,7 +148,8 @@ impl Registry {
     pub fn new() -> Self {
         Self {
             counters: Mutex::new(BTreeMap::new()),
-            timings: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeSet::new()),
+            hists: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -146,37 +162,47 @@ impl Registry {
     /// prefix-state cache's resident `cache_bytes`).
     pub fn set(&self, name: &str, value: u64) {
         self.counters.lock().unwrap().insert(name.to_string(), value);
+        self.gauges.lock().unwrap().insert(name.to_string());
     }
 
+    /// Record one timing sample into the named histogram.  The map lock
+    /// only guards the name lookup; the record itself is lock-free
+    /// atomic increments into a fixed bucket array (no allocation after
+    /// the first observation of a name).
     pub fn observe(&self, name: &str, seconds: f64) {
-        self.timings
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_default()
-            .push(seconds);
+        let h = Arc::clone(
+            self.hists
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        );
+        h.record(seconds);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
-    pub fn timing_mean(&self, name: &str) -> Option<f64> {
-        let t = self.timings.lock().unwrap();
-        let v = t.get(name)?;
-        if v.is_empty() {
-            return None;
-        }
-        Some(v.iter().sum::<f64>() / v.len() as f64)
+    /// The named histogram, if any sample was ever observed under it.
+    /// Hot loops can hold the `Arc` and `record()` directly, skipping the
+    /// name lookup entirely.
+    pub fn hist(&self, name: &str) -> Option<Arc<Histogram>> {
+        self.hists.lock().unwrap().get(name).cloned()
     }
 
-    pub fn timings(&self, name: &str) -> Vec<f64> {
-        self.timings
-            .lock()
-            .unwrap()
-            .get(name)
-            .cloned()
-            .unwrap_or_default()
+    /// Point-in-time statistics for the named histogram.
+    pub fn hist_snapshot(&self, name: &str) -> Option<HistSnapshot> {
+        self.hist(name).map(|h| h.snapshot())
+    }
+
+    pub fn hist_names(&self) -> Vec<String> {
+        self.hists.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn timing_mean(&self, name: &str) -> Option<f64> {
+        let s = self.hist_snapshot(name)?;
+        (s.count > 0).then(|| s.mean_secs())
     }
 
     pub fn report(&self) -> String {
@@ -184,13 +210,143 @@ impl Registry {
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{k}: {v}\n"));
         }
-        for (k, v) in self.timings.lock().unwrap().iter() {
-            if !v.is_empty() {
-                let mean = v.iter().sum::<f64>() / v.len() as f64;
-                out.push_str(&format!("{k}: n={} mean={:.3}ms\n", v.len(), mean * 1e3));
+        let hists: Vec<(String, Arc<Histogram>)> = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), Arc::clone(h)))
+            .collect();
+        for (k, h) in hists {
+            let s = h.snapshot();
+            if s.count > 0 {
+                out.push_str(&format!(
+                    "{k}: n={} mean={:.3}ms\n",
+                    s.count,
+                    s.mean_secs() * 1e3
+                ));
             }
         }
         out
+    }
+
+    /// Prometheus text exposition (version 0.0.4) of every counter,
+    /// gauge, and histogram.  Counters/gauges render under one map lock,
+    /// so relations between them (the admission accounting invariant)
+    /// hold WITHIN a single scrape, not just eventually.  Histogram
+    /// families emit only their non-empty `_bucket` lines (cumulative, in
+    /// increasing `le` order) plus `+Inf`, `_sum`, `_count`.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        {
+            let counters = self.counters.lock().unwrap();
+            let gauges = self.gauges.lock().unwrap();
+            let mut finished_header = false;
+            for (k, v) in counters.iter() {
+                // `finish_reason_<r>` counters fold into ONE labeled
+                // family so dashboards can group by reason (BTreeMap
+                // order keeps the family contiguous; the TYPE header
+                // must appear exactly once)
+                if let Some(reason) = k.strip_prefix("finish_reason_") {
+                    if !finished_header {
+                        out.push_str("# TYPE rwkv_requests_finished_total counter\n");
+                        finished_header = true;
+                    }
+                    out.push_str(&format!(
+                        "rwkv_requests_finished_total{{reason=\"{reason}\"}} {v}\n"
+                    ));
+                    continue;
+                }
+                let name = prom_name(k);
+                let kind = if gauges.contains(k) { "gauge" } else { "counter" };
+                out.push_str(&format!("# TYPE {name} {kind}\n{name} {v}\n"));
+            }
+        }
+        let hists: Vec<(String, Arc<Histogram>)> = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), Arc::clone(h)))
+            .collect();
+        for (k, h) in hists {
+            let s = h.snapshot();
+            let name = prom_hist_name(&k);
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            for (le, cum) in s.cumulative_buckets() {
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", s.count));
+            out.push_str(&format!("{name}_sum {}\n", s.sum_secs));
+            out.push_str(&format!("{name}_count {}\n", s.count));
+        }
+        out
+    }
+
+    /// JSON snapshot (the `GET /stats` body): counters + gauges verbatim,
+    /// histograms as count/mean/p50/p90/p99/max summaries.
+    pub fn stats_json(&self) -> Value {
+        let mut counters = BTreeMap::new();
+        let mut gauge_obj = BTreeMap::new();
+        {
+            let cs = self.counters.lock().unwrap();
+            let gs = self.gauges.lock().unwrap();
+            for (k, v) in cs.iter() {
+                if gs.contains(k) {
+                    gauge_obj.insert(k.clone(), json::num(*v as f64));
+                } else {
+                    counters.insert(k.clone(), json::num(*v as f64));
+                }
+            }
+        }
+        let hists: Vec<(String, Arc<Histogram>)> = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), Arc::clone(h)))
+            .collect();
+        let mut hist_obj = BTreeMap::new();
+        for (k, h) in hists {
+            let s = h.snapshot();
+            hist_obj.insert(
+                k,
+                json::obj(vec![
+                    ("count", json::num(s.count as f64)),
+                    ("sum_secs", json::num(s.sum_secs)),
+                    ("mean_secs", json::num(s.mean_secs())),
+                    ("p50_secs", json::num(s.quantile(50.0))),
+                    ("p90_secs", json::num(s.quantile(90.0))),
+                    ("p99_secs", json::num(s.quantile(99.0))),
+                    ("max_secs", json::num(s.max_secs)),
+                ]),
+            );
+        }
+        Value::Obj(BTreeMap::from([
+            ("counters".to_string(), Value::Obj(counters)),
+            ("gauges".to_string(), Value::Obj(gauge_obj)),
+            ("histograms".to_string(), Value::Obj(hist_obj)),
+        ]))
+    }
+}
+
+/// Prometheus metric name for an internal counter/gauge key: `rwkv_`
+/// prefix, invalid characters mapped to `_`.
+fn prom_name(key: &str) -> String {
+    let mut s = String::with_capacity(key.len() + 5);
+    s.push_str("rwkv_");
+    for c in key.chars() {
+        s.push(if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' });
+    }
+    s
+}
+
+/// Histogram family name: internal `_secs` suffixes become the
+/// conventional Prometheus `_seconds` unit suffix.
+fn prom_hist_name(key: &str) -> String {
+    match key.strip_suffix("_secs") {
+        Some(base) => prom_name(&format!("{base}_seconds")),
+        None => prom_name(key),
     }
 }
 
@@ -237,5 +393,87 @@ mod tests {
         r.set("cache_bytes", 100);
         r.set("cache_bytes", 40); // gauges can fall
         assert_eq!(r.counter("cache_bytes"), 40);
+    }
+
+    #[test]
+    fn observe_is_bounded_and_quantiled() {
+        // the long-running-server fix: 100k samples stay a fixed-size
+        // histogram, and the registry answers quantiles directly
+        let r = Registry::new();
+        for i in 0..100_000u64 {
+            r.observe("round_seconds", 1e-4 + (i % 100) as f64 * 1e-5);
+        }
+        let s = r.hist_snapshot("round_seconds").expect("hist exists");
+        assert_eq!(s.count, 100_000);
+        let p50 = s.quantile(50.0);
+        assert!((5e-4..7e-4).contains(&p50), "p50 ~ 0.6ms, got {p50}");
+        assert!(r.hist_snapshot("nope").is_none());
+    }
+
+    #[test]
+    fn report_format_is_stable() {
+        let r = Registry::new();
+        r.inc("rounds", 2);
+        r.observe("step", 0.5);
+        let report = r.report();
+        assert!(report.contains("rounds: 2\n"));
+        assert!(report.contains("step: n=1 mean=500.000ms\n"));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new();
+        r.inc("rounds", 3);
+        r.set("queue_depth", 2);
+        r.inc("finish_reason_length", 5);
+        r.observe("queue_wait_secs", 0.001);
+        r.observe("queue_wait_secs", 0.004);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE rwkv_rounds counter\nrwkv_rounds 3\n"));
+        assert!(text.contains("# TYPE rwkv_queue_depth gauge\nrwkv_queue_depth 2\n"));
+        assert!(text.contains("rwkv_requests_finished_total{reason=\"length\"} 5\n"));
+        // the `_secs` key exports under the conventional `_seconds` unit
+        assert!(text.contains("# TYPE rwkv_queue_wait_seconds histogram\n"));
+        assert!(text.contains("rwkv_queue_wait_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("rwkv_queue_wait_seconds_count 2\n"));
+        let sum: f64 = text
+            .lines()
+            .find_map(|l| l.strip_prefix("rwkv_queue_wait_seconds_sum "))
+            .expect("sum line")
+            .parse()
+            .unwrap();
+        assert!((sum - 0.005).abs() < 1e-9, "sum is exact, got {sum}");
+        // every line is a comment or `name[{labels}] value` with a
+        // parseable numeric value — the exposition grammar the scrape
+        // smoke also enforces
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (_, val) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(
+                val == "+Inf" || val.parse::<f64>().is_ok(),
+                "unparseable value in line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn stats_json_summarizes_histograms() {
+        let r = Registry::new();
+        r.inc("rounds", 7);
+        r.set("cache_bytes", 11);
+        for i in 1..=10 {
+            r.observe("ttft_secs", i as f64 * 0.01);
+        }
+        let v = r.stats_json();
+        assert_eq!(v.f64_at(&["counters", "rounds"]), Some(7.0));
+        assert_eq!(v.f64_at(&["gauges", "cache_bytes"]), Some(11.0));
+        assert_eq!(v.f64_at(&["histograms", "ttft_secs", "count"]), Some(10.0));
+        let p99 = v.f64_at(&["histograms", "ttft_secs", "p99_secs"]).unwrap();
+        assert!((0.09..0.12).contains(&p99), "p99 ~ 100ms, got {p99}");
+        // the JSON text round-trips through the crate parser
+        let text = v.to_string();
+        assert!(crate::json::parse(&text).is_ok());
     }
 }

@@ -1,0 +1,221 @@
+//! Bounded per-round trace ring buffer with JSONL export.
+//!
+//! Latency histograms answer "how bad is the tail"; the trace answers
+//! "what did round N actually do".  The coordinator (the ONLY writer —
+//! it owns the engine, so pushes are single-threaded and the mutex is
+//! uncontended on the hot path) records one [`RoundTrace`] per
+//! scheduling round: batch composition, the prefill-chunk choice the
+//! degradation policy made, phase timings, queue depth, shed/deadline
+//! events, and prefetch waits.  The ring is BOUNDED — past `capacity`
+//! the oldest round is dropped and `dropped()` counts it — so a
+//! long-running server holds a fixed-size flight recorder, never an
+//! unbounded log.
+//!
+//! `--trace-out <path>` exports the ring as JSON Lines (one round per
+//! line) when the coordinator shuts down, for offline timeline analysis;
+//! the open-loop bench (`benches/serving_throughput -- --arrival-rate`)
+//! writes the same format.
+
+use std::collections::VecDeque;
+use std::path::Path;
+
+use crate::json::{self, Value};
+use crate::sync::Mutex;
+
+/// Ring capacity used when a trace sink is requested without an explicit
+/// capacity (about a megabyte of rounds).
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// One scheduling round, as the coordinator saw it.
+#[derive(Clone, Debug, Default)]
+pub struct RoundTrace {
+    /// Round ordinal (1-based, matches the coordinator's fault hooks).
+    pub round: u64,
+    /// Seconds since the coordinator loop started.
+    pub at_secs: f64,
+    /// Sessions in flight when the engine round ran.
+    pub sessions: usize,
+    /// Prompt tokens advanced this round (0 = pure decode round).
+    pub prefill_tokens: usize,
+    /// Decode rows advanced this round.
+    pub decode_tokens: usize,
+    /// The prefill chunk the round ran with — under queue pressure the
+    /// degradation policy shrinks it below the configured base.
+    pub chunk: usize,
+    /// Admission queue depth at the round boundary.
+    pub queue_depth: usize,
+    /// Wall time of the engine round.
+    pub round_secs: f64,
+    /// Weight bytes streamed by the fused pass.
+    pub weight_bytes: u64,
+    /// Tokens emitted to streams this round.
+    pub emitted: usize,
+    /// Sessions retired normally this round (length/stop).
+    pub completed: usize,
+    /// Sessions retired by cancellation this round.
+    pub cancelled: usize,
+    /// Sessions retired by deadline expiry this round.
+    pub deadline_expired: usize,
+    /// Submissions shed at this round boundary (drain races).
+    pub shed: usize,
+    /// Engine phase split (seconds): WKV recurrence, weight-streaming
+    /// matmuls, head.
+    pub wkv_secs: f64,
+    pub matmul_secs: f64,
+    pub head_secs: f64,
+    /// Layerwise streaming: exposed block acquisition stall and the part
+    /// spent waiting on an in-flight prefetch (0 under full loading).
+    pub block_load_secs: f64,
+    pub prefetch_wait_secs: f64,
+    /// The engine round returned an error (every in-flight stream was
+    /// cancelled; the composition fields describe the attempt).
+    pub round_error: bool,
+}
+
+impl RoundTrace {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("round", json::num(self.round as f64)),
+            ("at_secs", json::num(self.at_secs)),
+            ("sessions", json::num(self.sessions as f64)),
+            ("prefill_tokens", json::num(self.prefill_tokens as f64)),
+            ("decode_tokens", json::num(self.decode_tokens as f64)),
+            ("chunk", json::num(self.chunk as f64)),
+            ("queue_depth", json::num(self.queue_depth as f64)),
+            ("round_secs", json::num(self.round_secs)),
+            ("weight_bytes", json::num(self.weight_bytes as f64)),
+            ("emitted", json::num(self.emitted as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("cancelled", json::num(self.cancelled as f64)),
+            ("deadline_expired", json::num(self.deadline_expired as f64)),
+            ("shed", json::num(self.shed as f64)),
+            ("wkv_secs", json::num(self.wkv_secs)),
+            ("matmul_secs", json::num(self.matmul_secs)),
+            ("head_secs", json::num(self.head_secs)),
+            ("block_load_secs", json::num(self.block_load_secs)),
+            ("prefetch_wait_secs", json::num(self.prefetch_wait_secs)),
+            ("round_error", Value::Bool(self.round_error)),
+        ])
+    }
+}
+
+struct RingInner {
+    rounds: VecDeque<RoundTrace>,
+    dropped: u64,
+}
+
+/// Bounded flight recorder of recent rounds.
+pub struct TraceRing {
+    capacity: usize,
+    inner: Mutex<RingInner>,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            capacity,
+            inner: Mutex::new(RingInner { rounds: VecDeque::new(), dropped: 0 }),
+        }
+    }
+
+    /// Append one round; past capacity the OLDEST round is evicted (and
+    /// counted) so the ring always holds the most recent window.
+    pub fn push(&self, t: RoundTrace) {
+        let mut g = self.inner.lock().unwrap();
+        if g.rounds.len() == self.capacity {
+            g.rounds.pop_front();
+            g.dropped += 1;
+        }
+        g.rounds.push_back(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().rounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rounds evicted past the capacity bound (a non-zero value tells an
+    /// offline consumer the JSONL is a suffix, not the full history).
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Copy of the retained rounds, oldest first.
+    pub fn snapshot(&self) -> Vec<RoundTrace> {
+        self.inner.lock().unwrap().rounds.iter().cloned().collect()
+    }
+
+    /// JSON Lines rendering (one round object per line, oldest first).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for t in self.snapshot() {
+            out.push_str(&t.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the JSONL export (the `--trace-out` sink).
+    pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    fn mk(round: u64) -> RoundTrace {
+        RoundTrace { round, round_secs: 0.001 * round as f64, ..RoundTrace::default() }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_the_newest() {
+        let ring = TraceRing::new(3);
+        for r in 1..=5 {
+            ring.push(mk(r));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let rounds: Vec<u64> = ring.snapshot().iter().map(|t| t.round).collect();
+        assert_eq!(rounds, vec![3, 4, 5], "oldest rounds are evicted first");
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let ring = TraceRing::new(8);
+        let mut t = mk(7);
+        t.sessions = 3;
+        t.chunk = 4;
+        t.queue_depth = 2;
+        t.round_error = true;
+        ring.push(t);
+        ring.push(mk(8));
+        let text = ring.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = crate::json::parse(lines[0]).expect("trace line is valid JSON");
+        assert_eq!(v.f64_at(&["round"]), Some(7.0));
+        assert_eq!(v.f64_at(&["sessions"]), Some(3.0));
+        assert_eq!(v.f64_at(&["chunk"]), Some(4.0));
+        assert_eq!(v.get("round_error").and_then(|b| b.as_bool()), Some(true));
+        let v = crate::json::parse(lines[1]).expect("trace line is valid JSON");
+        assert_eq!(v.f64_at(&["round"]), Some(8.0));
+    }
+
+    #[test]
+    fn write_jsonl_round_trips_through_a_file() {
+        let ring = TraceRing::new(4);
+        ring.push(mk(1));
+        let path = std::env::temp_dir().join(format!("rwkv-trace-test-{}.jsonl", std::process::id()));
+        ring.write_jsonl(&path).expect("write trace");
+        let text = std::fs::read_to_string(&path).expect("read trace back");
+        assert_eq!(text.lines().count(), 1);
+        assert!(crate::json::parse(text.lines().next().unwrap()).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -20,9 +20,12 @@
 //!           line —
 //!           {"done": true, "tokens": n, "seconds": s, "tps": r,
 //!            "reason": "length"|"stop"|"cancelled"|"deadline",
-//!            "cached_tokens": c}
+//!            "cached_tokens": c, "queue_secs": q, "ttft_secs": t}
 //!           on success (`cached_tokens` = prompt feed tokens whose
-//!           prefill was skipped by forking a cached prefix state), or
+//!           prefill was skipped by forking a cached prefix state;
+//!           `queue_secs` = admission queue wait; `ttft_secs` = time to
+//!           first token, omitted when the request retired before
+//!           emitting), or
 //!           {"error": "overloaded", "retry_after_ms": m}
 //!           when bounded admission sheds the request (429 semantics;
 //!           also "prompt_too_long" / "shutting_down"), or
@@ -45,6 +48,15 @@
 //! and retires the slot instead of decoding into the void.  A shutdown
 //! flag ([`ServeOptions::shutdown`], flipped by the CLI's SIGINT/SIGTERM
 //! handler) stops the accept loop so the coordinator can drain.
+//!
+//! Observability scrape ([`ServeOptions::metrics_endpoint`], the
+//! `--metrics` CLI knob): a connection whose FIRST line is an HTTP GET is
+//! answered over the same port with a minimal HTTP/1.0 response and
+//! closed — `GET /metrics` returns the coordinator registry in Prometheus
+//! text exposition format (counters, gauges, latency histograms), `GET
+//! /stats` returns the same registry as a JSON summary (p50/p90/p99/max
+//! per histogram).  With the knob off (the default for embedded uses),
+//! GETs get a 404 and the line protocol is unchanged.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -77,6 +89,9 @@ pub struct ServeOptions {
     /// stops taking connections and `serve` returns after joining the
     /// in-flight connection threads.
     pub shutdown: Option<Arc<AtomicBool>>,
+    /// Serve `GET /metrics` (Prometheus text) + `GET /stats` (JSON) on
+    /// this port (the `--metrics` knob; `false` = GETs get a 404).
+    pub metrics_endpoint: bool,
 }
 
 pub struct Server {
@@ -133,9 +148,10 @@ impl Server {
                     }
                     let me = Arc::clone(&self);
                     let counter = Arc::clone(&active);
+                    let metrics_endpoint = opts.metrics_endpoint;
                     counter.fetch_add(1, Ordering::AcqRel);
                     handles.push(std::thread::spawn(move || {
-                        if let Err(e) = me.handle_conn(stream) {
+                        if let Err(e) = me.handle_conn(stream, metrics_endpoint) {
                             eprintln!("[server] connection error: {e:#}");
                         }
                         counter.fetch_sub(1, Ordering::AcqRel);
@@ -159,7 +175,7 @@ impl Server {
         Ok(())
     }
 
-    fn handle_conn(&self, stream: TcpStream) -> Result<()> {
+    fn handle_conn(&self, stream: TcpStream, metrics_endpoint: bool) -> Result<()> {
         let _peer = stream.peer_addr()?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut writer = stream;
@@ -178,6 +194,13 @@ impl Server {
             let trimmed = line.trim();
             if trimmed.is_empty() {
                 continue;
+            }
+            if let Some(path) = trimmed.strip_prefix("GET ") {
+                // HTTP scrape sharing the line-protocol port: answer one
+                // request, close (HTTP/1.0 semantics — curl and
+                // Prometheus both handle close-delimited bodies)
+                let path = path.split_whitespace().next().unwrap_or("/");
+                return self.handle_scrape(&mut reader, &mut writer, path, metrics_endpoint);
             }
             let v = match json::parse(trimmed) {
                 Ok(v) => v,
@@ -208,7 +231,7 @@ impl Server {
                         let msg = json::obj(vec![("token", json::s(self.vocab.word(token)))]);
                         writeln!(writer, "{}", msg.to_string())?;
                     }
-                    Event::Done { tokens, seconds, reason, cached_tokens } => {
+                    Event::Done { tokens, seconds, reason, cached_tokens, queue_secs, ttft_secs } => {
                         let msg = match pending_err.take() {
                             Some(err) => json::obj(vec![
                                 ("error", json::s(&err)),
@@ -216,14 +239,23 @@ impl Server {
                                 ("seconds", json::num(seconds)),
                                 ("reason", json::s(reason.name())),
                             ]),
-                            None => json::obj(vec![
-                                ("done", Value::Bool(true)),
-                                ("tokens", json::num(tokens as f64)),
-                                ("seconds", json::num(seconds)),
-                                ("tps", json::num(tokens as f64 / seconds.max(1e-9))),
-                                ("reason", json::s(reason.name())),
-                                ("cached_tokens", json::num(cached_tokens as f64)),
-                            ]),
+                            None => {
+                                let mut fields = vec![
+                                    ("done", Value::Bool(true)),
+                                    ("tokens", json::num(tokens as f64)),
+                                    ("seconds", json::num(seconds)),
+                                    ("tps", json::num(tokens as f64 / seconds.max(1e-9))),
+                                    ("reason", json::s(reason.name())),
+                                    ("cached_tokens", json::num(cached_tokens as f64)),
+                                    ("queue_secs", json::num(queue_secs)),
+                                ];
+                                // omitted (not null) when nothing was
+                                // emitted — absence == "no first token"
+                                if let Some(t) = ttft_secs {
+                                    fields.push(("ttft_secs", json::num(t)));
+                                }
+                                json::obj(fields)
+                            }
                         };
                         writeln!(writer, "{}", msg.to_string())?;
                         terminal = true;
@@ -260,6 +292,55 @@ impl Server {
                 writeln!(writer, "{}", msg.to_string())?;
             }
         }
+    }
+
+    /// Answer one HTTP GET on the line-protocol port and close.  The
+    /// remaining request headers are drained (bounded) so the client's
+    /// write never sees a reset before the response lands.
+    fn handle_scrape(
+        &self,
+        reader: &mut BufReader<TcpStream>,
+        writer: &mut TcpStream,
+        path: &str,
+        enabled: bool,
+    ) -> Result<()> {
+        let mut hdr = String::new();
+        loop {
+            hdr.clear();
+            let n = (&mut *reader).take(MAX_LINE_BYTES).read_line(&mut hdr)?;
+            if n == 0 || hdr.trim().is_empty() {
+                break; // end of headers (or client half-closed)
+            }
+        }
+        let (status, content_type, body) = if !enabled {
+            ("404 Not Found", "text/plain; charset=utf-8", "metrics endpoint disabled\n".to_string())
+        } else {
+            match path {
+                "/metrics" => (
+                    "200 OK",
+                    // the Prometheus text exposition content type
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    self.coordinator.metrics.render_prometheus(),
+                ),
+                "/stats" => (
+                    "200 OK",
+                    "application/json",
+                    {
+                        let mut b = self.coordinator.metrics.stats_json().to_string();
+                        b.push('\n');
+                        b
+                    },
+                ),
+                _ => ("404 Not Found", "text/plain; charset=utf-8", "unknown path\n".to_string()),
+            }
+        };
+        write!(
+            writer,
+            "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )?;
+        writer.flush()?;
+        Ok(())
     }
 
     /// Parse + validate one request line.  `Err(message)` becomes a
@@ -333,6 +414,27 @@ impl Server {
     }
 }
 
+/// Minimal blocking HTTP GET against the server's scrape endpoints —
+/// returns `(status_code, body)`.  Tests, the CI smoke, and ad-hoc
+/// debugging use this instead of needing curl on the box.
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    write!(stream, "GET {path} HTTP/1.0\r\n\r\n")?;
+    stream.flush()?;
+    let mut raw = String::new();
+    BufReader::new(stream).read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed HTTP response (no header terminator)"))?;
+    let status = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed HTTP status line"))?;
+    Ok((status, body.to_string()))
+}
+
 /// Minimal blocking client for tests/examples.
 pub struct Client {
     stream: TcpStream,
@@ -350,6 +452,11 @@ pub struct Completion {
     /// Prompt feed tokens served from the prefix-state cache (0 when the
     /// server runs without one or the prefix was cold).
     pub cached_tokens: usize,
+    /// Admission queue wait in seconds.
+    pub queue_secs: f64,
+    /// Time to first token (`None` when the request retired before
+    /// emitting anything).
+    pub ttft_secs: Option<f64>,
 }
 
 impl Client {
@@ -378,6 +485,8 @@ impl Client {
                 out.tps = v.f64_at(&["tps"]).unwrap_or(0.0);
                 out.reason = v.str_at(&["reason"]).unwrap_or("").to_string();
                 out.cached_tokens = v.f64_at(&["cached_tokens"]).unwrap_or(0.0) as usize;
+                out.queue_secs = v.f64_at(&["queue_secs"]).unwrap_or(0.0);
+                out.ttft_secs = v.f64_at(&["ttft_secs"]);
             } else if let Some(e) = v.str_at(&["error"]) {
                 anyhow::bail!("server error: {e}");
             }

@@ -1,0 +1,395 @@
+//! Observability layer: histogram bucket math against the exact
+//! sorted-sample reference, Prometheus text-exposition validity, and the
+//! `GET /metrics` / `GET /stats` scrape path over TCP.  Everything runs
+//! on synthetic checkpoints (no `make artifacts` needed) so it is all
+//! tier-1 coverage.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rwkv_lite::config::EngineConfig;
+use rwkv_lite::coordinator::{batcher::BatchPolicy, Coordinator, CoordinatorConfig};
+use rwkv_lite::engine::RwkvEngine;
+use rwkv_lite::json;
+use rwkv_lite::metrics::hist::Histogram;
+use rwkv_lite::metrics::Registry;
+use rwkv_lite::server::{http_get, Client, ServeOptions, Server};
+use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
+use rwkv_lite::text::Vocab;
+use rwkv_lite::util::{percentile, XorShift};
+
+// ---------------------------------------------------------------------
+// bucket math vs the exact reference
+// ---------------------------------------------------------------------
+
+/// Seeded sample sets with different shapes: uniform, exponential-ish,
+/// and bimodal (1ms vs 100ms modes) — quantile error bounds must hold
+/// regardless of how samples spread across octaves.
+fn distributions() -> Vec<(&'static str, Vec<f64>)> {
+    let mut out = Vec::new();
+    let mut rng = XorShift::new(11);
+    out.push((
+        "uniform",
+        (0..5000).map(|_| 1e-6 + rng.next_f64() * 0.25).collect(),
+    ));
+    let mut rng = XorShift::new(22);
+    out.push((
+        "exponential",
+        (0..5000).map(|_| -(1.0 - rng.next_f64()).ln() * 0.01).collect(),
+    ));
+    let mut rng = XorShift::new(33);
+    out.push((
+        "bimodal",
+        (0..5000)
+            .map(|_| {
+                let u = rng.next_f64();
+                if u < 0.8 {
+                    1e-3 * (0.5 + u)
+                } else {
+                    0.1 * (0.5 + u)
+                }
+            })
+            .collect(),
+    ));
+    out
+}
+
+/// The tentpole accuracy claim: every histogram quantile sits within ONE
+/// bucket width of the exact sorted-sample percentile (same nearest-rank
+/// convention as [`rwkv_lite::util::percentile`]).
+#[test]
+fn quantiles_match_exact_reference_within_one_bucket() {
+    for (name, samples) in distributions() {
+        let h = Histogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, samples.len() as u64);
+        for p in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            let exact = percentile(&samples, p);
+            let est = snap.quantile(p);
+            let (lo, hi) = Histogram::bucket_bounds_secs(exact);
+            let width = hi - lo;
+            // the estimate is the containing bucket's upper bound: never
+            // below the exact value (modulo 1ns quantization), never more
+            // than one bucket width above it
+            assert!(
+                est >= exact - 2e-9,
+                "{name} p{p}: estimate {est} fell below exact {exact}"
+            );
+            assert!(
+                est - exact <= width + 2e-9,
+                "{name} p{p}: estimate {est} vs exact {exact} exceeds bucket width {width}"
+            );
+        }
+    }
+}
+
+/// Merging shard histograms is equivalent to one histogram that saw all
+/// the samples — counts, sums, and quantiles all agree.
+#[test]
+fn merged_shards_equal_whole() {
+    let (_, samples) = distributions().remove(1);
+    let whole = Histogram::new();
+    let shards: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+    for (i, &s) in samples.iter().enumerate() {
+        whole.record(s);
+        shards[i % 4].record(s);
+    }
+    let merged = Histogram::new();
+    for sh in &shards {
+        merged.merge_from(sh);
+    }
+    let (w, m) = (whole.snapshot(), merged.snapshot());
+    assert_eq!(w.count, m.count);
+    assert!((w.sum_secs - m.sum_secs).abs() < 1e-12);
+    assert_eq!(w.max_secs, m.max_secs);
+    for p in [50.0, 90.0, 99.0] {
+        assert_eq!(w.quantile(p), m.quantile(p), "p{p} must match after merge");
+    }
+}
+
+/// Absurd observations saturate into the top bucket instead of indexing
+/// out of bounds, and the saturated family still renders parseable
+/// exposition lines.
+#[test]
+fn top_bucket_saturation_is_visible_and_renders() {
+    let m = Registry::new();
+    m.observe("weird_secs", 1e12); // ~31,700 years
+    m.observe("weird_secs", f64::MAX);
+    m.observe("weird_secs", 0.001);
+    let s = m.hist_snapshot("weird_secs").unwrap();
+    assert_eq!(s.count, 3);
+    let p100 = s.quantile(100.0);
+    assert!(p100.is_finite() && p100 > 1e9, "saturated quantile reports the top bucket");
+    for (family, lines) in parse_prom(&m.render_prometheus()) {
+        for (labels, v) in lines {
+            assert!(v.is_finite(), "{family}{labels} rendered a non-finite value {v}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Prometheus exposition format
+// ---------------------------------------------------------------------
+
+/// Parse a text exposition into `family -> [(labels, value)]`, panicking
+/// on any line that does not match the
+/// `name[{labels}] value` / `# TYPE name kind` grammar.
+fn parse_prom(text: &str) -> BTreeMap<String, Vec<(String, f64)>> {
+    let mut out: BTreeMap<String, Vec<(String, f64)>> = BTreeMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE line has a name");
+            let kind = it.next().expect("TYPE line has a kind");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown metric kind in '{line}'"
+            );
+            assert!(it.next().is_none(), "trailing junk in '{line}'");
+            assert!(name.starts_with("rwkv_"), "metric '{name}' missing the rwkv_ prefix");
+            continue;
+        }
+        // sample line: `name value` or `name{labels} value` (no label
+        // value in this exposition ever contains a space)
+        let (name_labels, value) = line.rsplit_once(' ').expect("sample line has a value");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("unparseable value in '{line}'"));
+        let (name, labels) = match name_labels.split_once('{') {
+            Some((n, l)) => (n.to_string(), format!("{{{l}")),
+            None => (name_labels.to_string(), String::new()),
+        };
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "invalid metric name in '{line}'"
+        );
+        out.entry(name).or_default().push((labels, v));
+    }
+    out
+}
+
+/// Every `_bucket` series is cumulative with increasing `le`, ends at
+/// `+Inf` == `_count`, and `_sum`/`_count` agree with the registry's own
+/// snapshot — on a registry populated with seeded data plus the labeled
+/// finish-reason family.
+#[test]
+fn exposition_bucket_sum_count_consistency() {
+    let m = Registry::new();
+    m.inc("requests_admitted", 9);
+    m.inc("finish_reason_length", 5);
+    m.inc("finish_reason_stop", 3);
+    m.inc("finish_reason_deadline", 1);
+    m.set("queue_depth", 4);
+    let mut rng = XorShift::new(7);
+    for _ in 0..2000 {
+        m.observe("ttft_secs", 0.002 + rng.next_f64() * 0.05);
+        m.observe("itl_secs", 0.0005 + rng.next_f64() * 0.004);
+    }
+    let families = parse_prom(&m.render_prometheus());
+
+    // the labeled family carries every reason exactly once
+    let finished = &families["rwkv_requests_finished_total"];
+    assert_eq!(finished.len(), 3);
+    let total: f64 = finished.iter().map(|(_, v)| v).sum();
+    assert_eq!(total, 9.0);
+    assert!(finished.iter().any(|(l, v)| l == "{reason=\"length\"}" && *v == 5.0));
+
+    for key in ["ttft_secs", "itl_secs"] {
+        let snap = m.hist_snapshot(key).unwrap();
+        let prom = format!("rwkv_{}", key.replace("_secs", "_seconds"));
+        let buckets = &families[&format!("{prom}_bucket")];
+        assert!(buckets.len() >= 2, "{prom} should spread across buckets");
+        let mut prev_le = f64::NEG_INFINITY;
+        let mut prev_cum = 0.0;
+        for (labels, cum) in buckets {
+            let le_str = labels
+                .strip_prefix("{le=\"")
+                .and_then(|l| l.strip_suffix("\"}"))
+                .unwrap_or_else(|| panic!("bucket labels malformed: {labels}"));
+            let le = if le_str == "+Inf" { f64::INFINITY } else { le_str.parse().unwrap() };
+            assert!(le > prev_le, "{prom} le bounds must strictly increase");
+            assert!(*cum >= prev_cum, "{prom} bucket counts must be cumulative");
+            prev_le = le;
+            prev_cum = *cum;
+        }
+        assert_eq!(prev_le, f64::INFINITY, "{prom} ends with the +Inf bucket");
+        assert_eq!(prev_cum, snap.count as f64, "+Inf bucket equals _count");
+        let count = families[&format!("{prom}_count")][0].1;
+        let sum = families[&format!("{prom}_sum")][0].1;
+        assert_eq!(count, snap.count as f64);
+        assert!((sum - snap.sum_secs).abs() < 1e-9);
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP scrape path
+// ---------------------------------------------------------------------
+
+fn synth_vocab() -> Vocab {
+    let mut words: Vec<String> =
+        ["<pad>", "<unk>", "<bos>", "<eos>"].iter().map(|s| s.to_string()).collect();
+    for i in 4..96 {
+        words.push(format!("w{i}"));
+    }
+    Vocab::from_words(words)
+}
+
+/// Synthetic-model TCP server with a caller-chosen scrape setting;
+/// serves `conns` connections then exits.
+fn scrape_server(
+    tag: &str,
+    addr: &'static str,
+    conns: usize,
+    metrics_endpoint: bool,
+) -> (std::thread::JoinHandle<anyhow::Result<()>>, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("rwkv-scrape-{}-{}", tag, std::process::id()));
+    let spec = SynthSpec::tiny();
+    write_synth_rwkv(&dir, "m", &spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = spec.predictors;
+    cfg.hier_head = spec.hier_head;
+    let c = Coordinator::spawn_cfg(
+        move || RwkvEngine::load(cfg),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 4, window_ms: 1 },
+            ..CoordinatorConfig::default()
+        },
+    );
+    let server = Arc::new(Server::new(c, synth_vocab()));
+    let handle = std::thread::spawn(move || {
+        server.serve(
+            addr,
+            ServeOptions {
+                max_total_conns: Some(conns),
+                metrics_endpoint,
+                ..ServeOptions::default()
+            },
+        )
+    });
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    (handle, dir)
+}
+
+/// End-to-end scrape: one completion over the line protocol, then
+/// `GET /metrics` exposes the latency histograms and request counters
+/// and `GET /stats` summarizes them as JSON — on the SAME port.
+#[test]
+fn tcp_metrics_and_stats_scrape() {
+    let (server, dir) = scrape_server("on", "127.0.0.1:17381", 4, true);
+
+    // one real completion so the histograms have data, checking the
+    // extended Done wire line as we go
+    let mut client = Client::connect("127.0.0.1:17381").unwrap();
+    let lines = client.request_raw(r#"{"prompt":"w5 w6","max_tokens":4}"#).unwrap();
+    let last = json::parse(lines.last().expect("terminal line")).unwrap();
+    assert!(last.get("done").is_some());
+    assert!(last.f64_at(&["queue_secs"]).is_some(), "Done line reports queue wait");
+    let token_lines =
+        lines.iter().filter(|l| json::parse(l).unwrap().get("token").is_some()).count();
+    assert!(token_lines > 0, "greedy 'w5 w6' always emits on the synth model");
+    let ttft = last.f64_at(&["ttft_secs"]).expect("Done line reports TTFT");
+    assert!(ttft >= 0.0);
+    drop(client);
+
+    let (status, body) = http_get("127.0.0.1:17381", "/metrics").unwrap();
+    assert_eq!(status, 200, "metrics scrape should succeed: {body}");
+    let families = parse_prom(&body);
+    assert_eq!(families["rwkv_requests_completed"][0].1, 1.0);
+    for f in [
+        "rwkv_ttft_seconds_count",
+        "rwkv_queue_wait_seconds_count",
+        "rwkv_request_total_seconds_count",
+        "rwkv_coord_round_seconds_count",
+        "rwkv_round_seconds_count",
+    ] {
+        assert!(families.contains_key(f), "scrape is missing {f}\n{body}");
+    }
+    assert_eq!(families["rwkv_request_total_seconds_count"][0].1, 1.0);
+    assert!(
+        families.contains_key("rwkv_requests_finished_total"),
+        "completion must show up in the labeled finish-reason family"
+    );
+
+    let (status, body) = http_get("127.0.0.1:17381", "/stats").unwrap();
+    assert_eq!(status, 200);
+    let v = json::parse(body.trim()).expect("stats body is valid JSON");
+    assert_eq!(v.f64_at(&["counters", "requests_completed"]), Some(1.0));
+    assert_eq!(v.f64_at(&["histograms", "request_total_secs", "count"]), Some(1.0));
+    assert!(v.f64_at(&["histograms", "request_total_secs", "p99_secs"]).unwrap() > 0.0);
+
+    let (status, _) = http_get("127.0.0.1:17381", "/nope").unwrap();
+    assert_eq!(status, 404, "unknown paths 404");
+
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// With the `--metrics off` knob the GET paths 404 and the line protocol
+/// still serves.
+#[test]
+fn tcp_scrape_disabled_returns_404() {
+    let (server, dir) = scrape_server("off", "127.0.0.1:17382", 2, false);
+    let (status, _) = http_get("127.0.0.1:17382", "/metrics").unwrap();
+    assert_eq!(status, 404, "scrape must be off by default");
+    let mut client = Client::connect("127.0.0.1:17382").unwrap();
+    let done = client.complete("w5 w6", 2, 0.0).unwrap();
+    assert!(done.tokens > 0);
+    drop(client);
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// per-request spans through the coordinator
+// ---------------------------------------------------------------------
+
+/// The coordinator's span plumbing populates every request-level
+/// histogram and the identity `request_total = queue + service` holds in
+/// the sum.
+#[test]
+fn coordinator_populates_request_histograms() {
+    let dir = std::env::temp_dir().join(format!("rwkv-spans-{}", std::process::id()));
+    write_synth_rwkv(&dir, "m", &SynthSpec::tiny()).expect("write synth model");
+    let cfg = EngineConfig::vanilla("m", dir.clone());
+    let c = Coordinator::spawn(
+        move || RwkvEngine::load(cfg),
+        BatchPolicy { max_batch: 4, window_ms: 1 },
+    );
+    let mut total_tokens = 0usize;
+    let mut emitting_requests = 0usize; // requests that produced >= 1 token
+    for id in 0..3u64 {
+        let out = c
+            .generate_blocking(rwkv_lite::coordinator::Request {
+                id,
+                prompt: vec![2, (5 + id) as u32, 9],
+                max_tokens: 6,
+                ..rwkv_lite::coordinator::Request::default()
+            })
+            .unwrap();
+        total_tokens += out.len();
+        emitting_requests += usize::from(!out.is_empty());
+    }
+    let queue = c.metrics.hist_snapshot("queue_wait_secs").expect("queue wait recorded");
+    let total = c.metrics.hist_snapshot("request_total_secs").expect("total recorded");
+    assert_eq!(queue.count, 3);
+    assert_eq!(total.count, 3);
+    // TTFT is recorded once per request at its FIRST emitted token; every
+    // later token contributes one inter-token-latency sample instead
+    let ttft = c.metrics.hist_snapshot("ttft_secs").map(|s| s.count).unwrap_or(0);
+    assert_eq!(ttft as usize, emitting_requests, "one TTFT per emitting request");
+    let itl = c.metrics.hist_snapshot("itl_secs").map(|s| s.count).unwrap_or(0);
+    assert_eq!(
+        itl as usize,
+        total_tokens - emitting_requests,
+        "ITL counts token gaps, not tokens"
+    );
+    // cold-start requests land in the cold TTFT split, none in warm
+    let cold = c.metrics.hist_snapshot("ttft_cold_secs").map(|s| s.count).unwrap_or(0);
+    let warm = c.metrics.hist_snapshot("ttft_warm_secs").map(|s| s.count).unwrap_or(0);
+    assert_eq!(cold + warm, ttft, "every TTFT lands in exactly one cache split");
+    assert_eq!(warm, 0, "no cache configured, so no warm hits");
+    drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -10,6 +10,7 @@
 //! + requests_deadline_exceeded`.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use rwkv_lite::config::EngineConfig;
 use rwkv_lite::coordinator::{
@@ -17,8 +18,10 @@ use rwkv_lite::coordinator::{
     RejectReason, Request,
 };
 use rwkv_lite::engine::RwkvEngine;
+use rwkv_lite::server::{http_get, ServeOptions, Server};
 use rwkv_lite::testutil::faults::FaultPlan;
 use rwkv_lite::testutil::synth::{write_synth_rwkv, SynthSpec};
+use rwkv_lite::text::Vocab;
 
 /// Coordinator over a synthetic checkpoint with explicit admission bounds
 /// and an optional fault plan (slow rounds = deterministic pressure).
@@ -327,5 +330,128 @@ fn drain_budget_hard_stops_stragglers() {
     assert_eq!(c.metrics.counter("requests_cancelled"), 1);
     assert_accounting(&c);
     drop(c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// First value of a bare `name value` sample line in a text exposition
+/// (0 when the family is absent — counters appear on first increment).
+fn prom_counter(text: &str, name: &str) -> u64 {
+    let prefix = format!("{name} ");
+    text.lines()
+        .find_map(|l| l.strip_prefix(&prefix))
+        .map(|v| v.parse().expect("counter value parses"))
+        .unwrap_or(0)
+}
+
+/// The accounting invariant is readable through `GET /metrics` WHILE an
+/// overload burst is in flight: counters and gauges render under one
+/// registry lock, so a single scrape is internally consistent —
+/// `admitted - terminated` is exactly the live population, bounded by
+/// `max_concurrency + max_queue`, and settles to zero after the drain.
+#[test]
+fn metrics_scrape_is_consistent_during_overload_burst() {
+    let dir = std::env::temp_dir().join(format!("rwkv-overload-scrape-{}", std::process::id()));
+    let spec = SynthSpec::tiny();
+    write_synth_rwkv(&dir, "m", &spec).expect("write synth model");
+    let mut cfg = EngineConfig::vanilla("m", dir.clone());
+    cfg.sparse_ffn = spec.predictors;
+    cfg.hier_head = spec.hier_head;
+    let admission = AdmissionPolicy {
+        max_queue: 2,
+        max_concurrency: 2,
+        ..AdmissionPolicy::default()
+    };
+    // 15ms rounds keep the burst in flight long enough to scrape mid-air
+    let faults = FaultPlan::new().slow_rounds_from(0, 10_000, 15);
+    let c = Coordinator::spawn_cfg(
+        move || RwkvEngine::load(cfg),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 2, window_ms: 1 },
+            admission,
+            faults: Some(faults),
+            ..CoordinatorConfig::default()
+        },
+    );
+    let mut words: Vec<String> =
+        ["<pad>", "<unk>", "<bos>", "<eos>"].iter().map(|s| s.to_string()).collect();
+    for i in 4..96 {
+        words.push(format!("w{i}"));
+    }
+    let server = Arc::new(Server::new(c, Vocab::from_words(words)));
+    let addr = "127.0.0.1:17383";
+    let s2 = Arc::clone(&server);
+    let serve_thread = std::thread::spawn(move || {
+        // exactly the 4 scrape connections below, then exit
+        s2.serve(
+            addr,
+            ServeOptions {
+                max_total_conns: Some(4),
+                metrics_endpoint: true,
+                ..ServeOptions::default()
+            },
+        )
+    });
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    // warm up so the burst does not land while the engine is loading
+    let coord = Arc::clone(&server.coordinator);
+    coord
+        .generate_blocking(Request {
+            id: 100,
+            prompt: vec![2, 5],
+            max_tokens: 1,
+            ..Request::default()
+        })
+        .unwrap();
+    // the burst drains on its own thread while this one scrapes
+    let producer = std::thread::spawn(move || {
+        let handles: Vec<_> = (0..12u64)
+            .map(|i| {
+                coord.submit(Request {
+                    id: i,
+                    prompt: vec![2, 5 + (i as u32 % 8)],
+                    max_tokens: 2,
+                    ..Request::default()
+                })
+            })
+            .collect();
+        for h in handles {
+            outcome(h);
+        }
+    });
+    let scrape = || {
+        let (status, body) = http_get(addr, "/metrics").expect("scrape mid-burst");
+        assert_eq!(status, 200);
+        body
+    };
+    for _ in 0..3 {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let body = scrape();
+        let admitted = prom_counter(&body, "rwkv_requests_admitted");
+        let terminated = prom_counter(&body, "rwkv_requests_completed")
+            + prom_counter(&body, "rwkv_requests_cancelled")
+            + prom_counter(&body, "rwkv_requests_deadline_exceeded");
+        assert!(
+            admitted >= terminated,
+            "a single scrape must never show a request terminating before admission \
+             (admitted={admitted} terminated={terminated})"
+        );
+        assert!(
+            admitted - terminated <= 4,
+            "live population exceeds max_concurrency + max_queue: \
+             admitted={admitted} terminated={terminated}"
+        );
+    }
+    producer.join().unwrap();
+    // after the drain the very same surface shows exact equality
+    let body = scrape();
+    let admitted = prom_counter(&body, "rwkv_requests_admitted");
+    let terminated = prom_counter(&body, "rwkv_requests_completed")
+        + prom_counter(&body, "rwkv_requests_cancelled")
+        + prom_counter(&body, "rwkv_requests_deadline_exceeded");
+    assert_eq!(admitted, terminated, "every admitted request terminated exactly once");
+    assert!(admitted >= 1, "the warm-up plus admitted burst slice must show up");
+    assert_eq!(prom_counter(&body, "rwkv_queue_depth"), 0, "queue gauge settles to empty");
+    assert_accounting(&server.coordinator);
+    serve_thread.join().unwrap().unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }
